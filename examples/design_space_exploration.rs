@@ -1,0 +1,59 @@
+//! Design-space exploration: sweep the mesh parameters under the
+//! VC709 budget and show where Table II's operating points sit —
+//! including the resource cost of each frontier point.
+
+use udcnn::accel::{dse, AccelConfig};
+use udcnn::dcnn::zoo;
+use udcnn::report::Table;
+use udcnn::resource;
+
+fn main() {
+    let budget = dse::DseBudget::default();
+    println!(
+        "sweeping {} legal configurations (≤{} PEs, power-of-two Tn)…\n",
+        dse::candidates(&budget).len(),
+        budget.max_pes
+    );
+
+    for (label, nets) in [
+        ("2D benchmarks (DCGAN + GP-GAN)", vec![zoo::dcgan(), zoo::gp_gan()]),
+        ("3D benchmarks (3D-GAN + V-Net)", vec![zoo::gan3d(), zoo::vnet()]),
+    ] {
+        let points = dse::sweep(&nets, &budget);
+        let mut t = Table::new(
+            &format!("frontier for {label}"),
+            &["rank", "Tm", "Tn", "Tz", "Tr", "Tc", "PEs", "Mcycles", "util %", "DSP", "fits"],
+        );
+        for (i, p) in points.iter().take(8).enumerate() {
+            let est = resource::estimate(&p.cfg);
+            t.row(&[
+                (i + 1).to_string(),
+                p.cfg.tm.to_string(),
+                p.cfg.tn.to_string(),
+                p.cfg.tz.to_string(),
+                p.cfg.tr.to_string(),
+                p.cfg.tc.to_string(),
+                p.cfg.total_pes().to_string(),
+                format!("{:.1}", p.total_cycles as f64 / 1e6),
+                format!("{:.1}", 100.0 * p.avg_utilization),
+                est.dsp.to_string(),
+                est.fits_vc709().to_string(),
+            ]);
+        }
+        t.print();
+
+        let paper = if label.starts_with("2D") {
+            AccelConfig::paper_2d()
+        } else {
+            AccelConfig::paper_3d()
+        };
+        let pp = dse::evaluate(&paper, &nets, &budget);
+        let beaten_by = points.iter().filter(|p| p.total_cycles < pp.total_cycles).count();
+        println!(
+            "paper's point: {:.1} Mcycles, util {:.1}% — beaten by {beaten_by}/{} candidates\n",
+            pp.total_cycles as f64 / 1e6,
+            100.0 * pp.avg_utilization,
+            points.len()
+        );
+    }
+}

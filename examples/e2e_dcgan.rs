@@ -1,0 +1,140 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve batched DCGAN
+//! generator inferences through the full stack and report
+//! latency/throughput — the serving-system driver required for a
+//! complete reproduction.
+//!
+//! All layers compose here:
+//!   * L1/L2: the AOT Pallas/JAX artifact executes via PJRT and is
+//!     checked numerically against the coordinator's golden pipeline;
+//!   * L3: the batched inference service routes and batches real
+//!     requests, and the cycle-level timing tier reports what the
+//!     VC709 would deliver for the same batches.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_dcgan
+//! ```
+
+use std::time::{Duration, Instant};
+
+use udcnn::accel::{simulate_network, AccelConfig};
+use udcnn::coordinator::{service::forward, BatchPolicy, InferenceService};
+use udcnn::dcnn::{zoo, LayerData};
+use udcnn::runtime::{ArtifactSet, Runtime};
+use udcnn::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let net = zoo::dcgan();
+    let in_elems = net.layers[0].input_elems();
+    let out_elems = net.layers.last().unwrap().output_elems();
+    println!("== end-to-end DCGAN serving driver ==");
+    for l in &net.layers {
+        println!("  {l}");
+    }
+
+    // --- artifact numeric check (L1/L2 vs L3 golden) ---------------
+    let weights: Vec<LayerData> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)))
+        .collect();
+    match ArtifactSet::discover_default() {
+        Ok(set) if set.get("dcgan").is_some() => {
+            let rt = Runtime::cpu()?;
+            let exe = rt.load_hlo_text(set.get("dcgan").unwrap())?;
+            let input: Vec<f32> = (0..in_elems).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+            let mut args: Vec<(&[f32], &[i64])> = Vec::new();
+            let in_dims = [1024i64, 4, 4];
+            args.push((&input, &in_dims));
+            let wdims: Vec<Vec<i64>> = weights
+                .iter()
+                .map(|d| match d {
+                    LayerData::D2 { weights, .. } => vec![
+                        weights.o as i64,
+                        weights.i as i64,
+                        weights.kh as i64,
+                        weights.kw as i64,
+                    ],
+                    _ => unreachable!(),
+                })
+                .collect();
+            let wdata: Vec<&[f32]> = weights
+                .iter()
+                .map(|d| match d {
+                    LayerData::D2 { weights, .. } => weights.data(),
+                    _ => unreachable!(),
+                })
+                .collect();
+            for (d, dims) in wdata.iter().zip(&wdims) {
+                args.push((d, dims));
+            }
+            let t0 = Instant::now();
+            let out = exe.run_f32(&args)?;
+            let pjrt_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let want = forward(&net, &weights, &input);
+            let max_err = out[0]
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            println!(
+                "\n[artifact] PJRT DCGAN forward: {} elems in {pjrt_ms:.1} ms, max err vs golden {max_err:.2e}",
+                out[0].len()
+            );
+            assert!(max_err < 3e-2, "artifact diverged from golden");
+        }
+        _ => println!("\n[artifact] artifacts missing — run `make artifacts` for the PJRT check"),
+    }
+
+    // --- batched serving (L3) --------------------------------------
+    let n_requests = 64;
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(10),
+    };
+    let mut svc = InferenceService::start(vec![net.clone()], policy);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        rxs.push(svc.submit("dcgan", vec![0.01 * (i % 7) as f32; in_elems])?);
+    }
+    let mut wall = Vec::new();
+    let mut accel = Vec::new();
+    let mut batch_sizes = Vec::new();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(600))?;
+        assert_eq!(r.output.len(), out_elems);
+        wall.push(r.wall_latency_s * 1e3);
+        accel.push(r.accel_latency_s * 1e3);
+        batch_sizes.push(r.batch_size as f64);
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    let st = svc.stats();
+    println!("\n[serving] {} requests in {:.2} s ({:.1} req/s host-side)", n_requests, total_s, n_requests as f64 / total_s);
+    println!(
+        "[serving] batches: {} (avg size {:.2}) | host latency p50 {:.1} ms p95 {:.1} ms",
+        st.batches,
+        st.avg_batch(),
+        stats::percentile(&wall, 50.0),
+        stats::percentile(&wall, 95.0),
+    );
+    println!(
+        "[serving] simulated VC709 latency per batch: p50 {:.2} ms (≈{:.2} ms/image)",
+        stats::percentile(&accel, 50.0),
+        stats::percentile(&accel, 50.0) / stats::mean(&batch_sizes),
+    );
+    svc.shutdown();
+
+    // --- what the accelerator delivers on this workload -------------
+    let mut cfg = AccelConfig::paper_2d();
+    cfg.batch = 8;
+    let m = simulate_network(&cfg, &net);
+    println!(
+        "\n[accelerator] batch-8 generator pass: {:.2} ms, {:.2} effective TOPS, {:.1}% avg PE utilization",
+        m.total_time_s() * 1e3,
+        m.effective_tops(),
+        100.0 * m.avg_pe_utilization(),
+    );
+    println!("\ne2e_dcgan OK — record these numbers in EXPERIMENTS.md §E2E");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! The coordinator as a standalone service: all four benchmark models
+//! behind one router, mixed-model client load, batching + latency
+//! statistics — the "vLLM-router face" of the repo.
+
+use std::time::{Duration, Instant};
+
+use udcnn::coordinator::{BatchPolicy, InferenceService};
+use udcnn::dcnn::zoo;
+use udcnn::util::{stats, Prng};
+
+fn main() -> anyhow::Result<()> {
+    // tiny nets keep the demo snappy; swap in zoo::all_benchmarks()
+    // for the full-size models.
+    let models = vec![zoo::tiny_2d(), zoo::tiny_3d(), zoo::dcgan()];
+    let names: Vec<&str> = models.iter().map(|n| n.name).collect();
+    let input_sizes: Vec<usize> = models.iter().map(|n| n.layers[0].input_elems()).collect();
+
+    let mut svc = InferenceService::start(
+        models,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(4),
+        },
+    );
+
+    let n_requests = 96;
+    let mut rng = Prng::new(2024);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n_requests {
+        let which = rng.below(names.len());
+        let input = vec![rng.f32_range(-1.0, 1.0); input_sizes[which]];
+        pending.push((names[which], svc.submit(names[which], input)?));
+    }
+
+    let mut wall_by_model: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    for (model, rx) in pending {
+        let r = rx.recv_timeout(Duration::from_secs(600))?;
+        wall_by_model.entry(model).or_default().push(r.wall_latency_s * 1e3);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let st = svc.stats();
+    println!("served {} requests across {} models in {:.2} s ({:.1} req/s)", st.requests, names.len(), elapsed, st.requests as f64 / elapsed);
+    println!("batches: {} (avg size {:.2}), rejected: {}", st.batches, st.avg_batch(), st.rejected);
+    for (model, lats) in &wall_by_model {
+        println!(
+            "  {model:<10} n={:<3} host-latency p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
+            lats.len(),
+            stats::percentile(lats, 50.0),
+            stats::percentile(lats, 95.0),
+            lats.iter().cloned().fold(0.0, f64::max),
+        );
+    }
+
+    // unknown model handling
+    assert!(svc.infer("not-a-model", vec![0.0], Duration::from_secs(1)).is_err());
+    println!("\nunknown-model requests rejected cleanly; service still live");
+    svc.shutdown();
+    println!("inference_service OK");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Quickstart: simulate one deconvolution layer, check the numerics
+//! against the golden model, and (if `make artifacts` has run) execute
+//! the AOT-compiled Pallas kernel through PJRT.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use udcnn::accel::functional::run_layer_2d;
+use udcnn::accel::{simulate_layer, AccelConfig};
+use udcnn::dcnn::{LayerData, LayerDataQ, LayerSpec};
+use udcnn::func::deconv_q::{crop_2d_q, deconv2d_iom_q};
+use udcnn::runtime::{ArtifactSet, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // a 16-channel 8×8 → 8-channel 16×16 deconvolution, K=3, S=2
+    let layer = LayerSpec::new_2d("quickstart.deconv", 16, 8, 8, 8, 3, 2);
+    println!("layer: {layer}");
+    println!(
+        "zero-inserted sparsity: {:.1}% (the waste IOM skips)",
+        100.0 * layer.inserted_sparsity()
+    );
+
+    // 1. timing tier: what would the VC709 do?
+    let cfg = AccelConfig::paper_2d();
+    let m = simulate_layer(&cfg, &layer);
+    println!(
+        "\n[timing] {} cycles -> {:.3} ms/batch-{}  | util {:.1}%  | {:.2} effective TOPS ({})-bound",
+        m.total_cycles,
+        m.time_s() * 1e3,
+        cfg.batch,
+        100.0 * m.pe_utilization(),
+        m.effective_tops(&cfg),
+        m.bound_by,
+    );
+
+    // 2. functional tier: run the actual PE mesh on Q8.8 data and
+    //    compare bit-for-bit with the golden datapath model.
+    let data = LayerData::synth(&layer, 42);
+    let q = data.quantize();
+    let (qi, qw) = match &q {
+        LayerDataQ::D2 { input, weights } => (input, weights),
+        _ => unreachable!(),
+    };
+    let tiny = AccelConfig::tiny(2, 4, 1, 4, 4);
+    let run = run_layer_2d(&tiny, &layer, qi, qw);
+    let golden = crop_2d_q(&deconv2d_iom_q(qi, qw, layer.s), layer.out_h(), layer.out_w());
+    assert_eq!(run.output.data(), golden.data());
+    println!(
+        "[functional] mesh == golden datapath (bit-exact); {} MACs, {} overlap transfers, {} spills",
+        run.stats.macs,
+        run.stats.fifo_v_pushes + run.stats.fifo_h_pushes,
+        run.stats.spills,
+    );
+
+    // 3. runtime tier: the AOT-compiled Pallas kernel, if built.
+    match ArtifactSet::discover_default() {
+        Ok(set) if set.get("quickstart_deconv2d").is_some() => {
+            let rt = Runtime::cpu()?;
+            let exe = rt.load_hlo_text(set.get("quickstart_deconv2d").unwrap())?;
+            let (input, weights) = match &data {
+                LayerData::D2 { input, weights } => (input, weights),
+                _ => unreachable!(),
+            };
+            let out = exe.run_f32(&[
+                (input.data(), &[16, 8, 8]),
+                (weights.data(), &[8, 16, 3, 3]),
+            ])?;
+            // compare against the f32 golden pipeline
+            let full = udcnn::func::deconv2d_iom(input, weights, layer.s);
+            let want = udcnn::func::crop_2d(&full, layer.out_h(), layer.out_w());
+            let max_err = out[0]
+                .iter()
+                .zip(want.data())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            println!("[runtime] PJRT-executed Pallas kernel max err vs golden: {max_err:.2e}");
+            assert!(max_err < 1e-4);
+        }
+        _ => println!("[runtime] artifacts not built — run `make artifacts` to exercise PJRT"),
+    }
+
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,121 @@
+"""AOT pipeline: lower the Layer-2 models to **HLO text** artifacts the
+Rust PJRT runtime loads (`rust/src/runtime/`).
+
+HLO *text*, NOT ``lowered.compile()`` / serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--models tiny-2d,dcgan,...]
+
+Python runs only here (``make artifacts``); it is never on the Rust
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, zoo
+
+#: Artifacts emitted by default: the tiny nets (used by the Rust
+#: integration tests), all four paper benchmarks, and a single-layer
+#: quickstart kernel.
+DEFAULT_MODELS = (
+    "tiny-2d",
+    "tiny-3d",
+    "dcgan",
+    "gp-gan",
+    "3d-gan",
+    "v-net",
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_network(name: str, *, use_pallas: bool = True) -> str:
+    """Lower one benchmark network to HLO text."""
+    net = zoo.by_name(name)
+    fn = model.make_forward_fn(net, use_pallas=use_pallas)
+    arg_specs = [jax.ShapeDtypeStruct(net.layers[0].input_shape, jnp.float32)]
+    arg_specs += [
+        jax.ShapeDtypeStruct(spec.weight_shape, jnp.float32)
+        for spec in net.layers
+    ]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_single_layer(spec: zoo.LayerSpec, *, use_pallas: bool = True) -> str:
+    """Lower one deconvolution layer (the quickstart artifact)."""
+
+    def fn(x, w):
+        return (model.layer_forward(spec, x, w, use_pallas=use_pallas),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct(spec.input_shape, jnp.float32),
+        jax.ShapeDtypeStruct(spec.weight_shape, jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def emit(out_dir: str, models: list[str], *, use_pallas: bool = True) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name in models:
+        text = lower_network(name, use_pallas=use_pallas)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+    # quickstart single-layer artifact: 16ch 8x8 -> 8ch, K=3, S=2
+    quick = zoo.LayerSpec("quickstart.deconv", 16, 8, 8, 8)
+    text = lower_single_layer(quick, use_pallas=use_pallas)
+    path = os.path.join(out_dir, "quickstart_deconv2d.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    written.append(path)
+    print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+    return written
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--models",
+        default=",".join(DEFAULT_MODELS),
+        help="comma-separated model names",
+    )
+    p.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp reference path instead of the Pallas kernels",
+    )
+    args = p.parse_args()
+    emit(
+        args.out_dir,
+        [m for m in args.models.split(",") if m],
+        use_pallas=not args.no_pallas,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles."""
+
+from .deconv2d_iom import deconv2d_iom
+from .deconv3d_iom import deconv3d_iom
+from . import ref
+
+__all__ = ["deconv2d_iom", "deconv3d_iom", "ref"]

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: 2D IOM deconvolution.
+
+The paper's mapping, on a TPU-shaped memory hierarchy: the grid walks
+*input* positions (input-oriented — each grid step is "one PE batch" of
+work), multiplies the full ``C_in`` activation vector by the
+``C_out × C_in × K × K`` kernel as one contraction (the MXU-friendly
+re-association of the per-PE scalar MACs — DESIGN.md
+§Hardware-Adaptation), and scatter-accumulates the ``C_out × K × K``
+result block into the output at offset ``(i·S, j·S)``. The inserted
+zeros of Fig. 3 are never materialized and never multiplied.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO that both the
+pytest suite and the Rust runtime execute. Structure (grid, block
+shapes, VMEM residency) is unchanged by the flag.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, s: int, k: int):
+    ih = pl.program_id(0)
+    iw = pl.program_id(1)
+
+    # First grid step owns output initialization (the hardware zeroes
+    # the output buffer at layer start).
+    @pl.when((ih == 0) & (iw == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = x_ref[...][:, 0, 0]  # (C_in,) activation column
+    w = w_ref[...]  # (C_out, C_in, K, K), VMEM-resident across the grid
+    # One input activation × all kernels: the IOM outer product,
+    # contracted over C_in so the MXU sees a matmul.
+    contrib = jnp.einsum("i,oikl->okl", a, w)
+
+    oy = ih * s
+    ox = iw * s
+    idx = (slice(None), pl.ds(oy, k), pl.ds(ox, k))
+    # Overlap accumulation: the K−S halo shared with neighbouring
+    # input positions lives in the same output buffer (the FIFO-V/H
+    # role), so '+=' performs the paper's point-wise overlap addition.
+    o_ref[idx] = o_ref[idx] + contrib.astype(o_ref.dtype)
+
+
+def deconv2d_iom(x: jnp.ndarray, w: jnp.ndarray, s: int = 2) -> jnp.ndarray:
+    """IOM deconvolution over the full ``(I−1)·S + K`` extent.
+
+    Args:
+      x: ``(C_in, H, W)`` activations.
+      w: ``(C_out, C_in, K, K)`` weights.
+      s: stride.
+    Returns:
+      ``(C_out, (H−1)s+K, (W−1)s+K)``.
+    """
+    c_in, h, wd = x.shape
+    c_out, c_in2, k, k2 = w.shape
+    assert c_in == c_in2 and k == k2, (x.shape, w.shape)
+    oh = (h - 1) * s + k
+    ow = (wd - 1) * s + k
+    return pl.pallas_call(
+        functools.partial(_kernel, s=s, k=k),
+        grid=(h, wd),
+        in_specs=[
+            # one input column per grid step
+            pl.BlockSpec((c_in, 1, 1), lambda i, j: (0, i, j)),
+            # weights pinned in VMEM for the whole grid (the weight
+            # shift chain of Fig. 4: loaded once, reused by every PE)
+            pl.BlockSpec((c_out, c_in, k, k), lambda i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((c_out, oh, ow), lambda i, j: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_out, oh, ow), x.dtype),
+        interpret=True,
+    )(x, w)

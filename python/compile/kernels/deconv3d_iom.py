@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: 3D IOM deconvolution (the paper's Fig. 5).
+
+Identical structure to the 2D kernel with a depth axis: the grid walks
+``(D, H, W)`` input positions; each step scatters a
+``C_out × K × K × K`` block at offset ``(d·S, i·S, j·S)``. The
+depth-direction overlaps (FIFO-D in the paper's PE) are plain
+accumulations into the shared output buffer here — the uniform-
+architecture claim (§IV-C: "the dataflow in the PE arrays are
+identical") shows up as this kernel being the 2D kernel plus one axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, s: int, k: int):
+    idd = pl.program_id(0)
+    ih = pl.program_id(1)
+    iw = pl.program_id(2)
+
+    @pl.when((idd == 0) & (ih == 0) & (iw == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = x_ref[...][:, 0, 0, 0]  # (C_in,)
+    w = w_ref[...]  # (C_out, C_in, K, K, K)
+    contrib = jnp.einsum("i,oizkl->ozkl", a, w)
+
+    oz = idd * s
+    oy = ih * s
+    ox = iw * s
+    idx = (slice(None), pl.ds(oz, k), pl.ds(oy, k), pl.ds(ox, k))
+    o_ref[idx] = o_ref[idx] + contrib.astype(o_ref.dtype)
+
+
+def deconv3d_iom(x: jnp.ndarray, w: jnp.ndarray, s: int = 2) -> jnp.ndarray:
+    """3D IOM deconvolution over the full Eq. (1) extent.
+
+    Args:
+      x: ``(C_in, D, H, W)`` activations.
+      w: ``(C_out, C_in, K, K, K)`` weights.
+      s: stride.
+    Returns:
+      ``(C_out, (D−1)s+K, (H−1)s+K, (W−1)s+K)``.
+    """
+    c_in, d, h, wd = x.shape
+    c_out, c_in2, k, k2, k3 = w.shape
+    assert c_in == c_in2 and k == k2 == k3, (x.shape, w.shape)
+    od = (d - 1) * s + k
+    oh = (h - 1) * s + k
+    ow = (wd - 1) * s + k
+    return pl.pallas_call(
+        functools.partial(_kernel, s=s, k=k),
+        grid=(d, h, wd),
+        in_specs=[
+            pl.BlockSpec((c_in, 1, 1, 1), lambda z, i, j: (0, z, i, j)),
+            pl.BlockSpec(
+                (c_out, c_in, k, k, k), lambda z, i, j: (0, 0, 0, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((c_out, od, oh, ow), lambda z, i, j: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_out, od, oh, ow), x.dtype),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,108 @@
+"""Pure-jnp correctness oracles for the IOM deconvolution kernels.
+
+Two mathematically identical formulations of the OOM (conventional)
+deconvolution, mirroring ``rust/src/func/deconv.rs``:
+
+* :func:`deconv2d_ref` / :func:`deconv3d_ref` — materialize the
+  zero-inserted map (the sparse map of paper Fig. 3), pad the border by
+  ``K - 1`` and correlate with the spatially flipped kernel.
+* :func:`deconv2d_ref_fused` / :func:`deconv3d_ref_fused` — the same
+  computation expressed through ``lax.conv_general_dilated`` with
+  ``lhs_dilation`` (what a framework backend actually runs).
+
+Conventions (same as the Rust side):
+
+* activations  ``(C_in, [D,] H, W)``; weights ``(C_out, C_in, [K,] K, K)``.
+* output covers the **full** Eq. (1) extent ``(I - 1)·S + K``;
+  :func:`crop2d`/:func:`crop3d` remove the ``K - S`` high-side padding.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def zero_insert2d(x: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Insert ``s - 1`` zeros between activations along H and W."""
+    c, h, w = x.shape
+    out = jnp.zeros((c, (h - 1) * s + 1, (w - 1) * s + 1), x.dtype)
+    return out.at[:, ::s, ::s].set(x)
+
+
+def zero_insert3d(x: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Insert zeros along D, H and W (including the all-zero M1 planes)."""
+    c, d, h, w = x.shape
+    out = jnp.zeros(
+        (c, (d - 1) * s + 1, (h - 1) * s + 1, (w - 1) * s + 1), x.dtype
+    )
+    return out.at[:, ::s, ::s, ::s].set(x)
+
+
+def deconv2d_ref(x: jnp.ndarray, w: jnp.ndarray, s: int = 2) -> jnp.ndarray:
+    """OOM deconvolution: zero-insert + pad(K-1) + correlate(flip(w))."""
+    k = w.shape[-1]
+    ins = zero_insert2d(x, s)
+    wf = w[:, :, ::-1, ::-1]
+    out = lax.conv_general_dilated(
+        ins[None],
+        wf,
+        window_strides=(1, 1),
+        padding=[(k - 1, k - 1), (k - 1, k - 1)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def deconv2d_ref_fused(x: jnp.ndarray, w: jnp.ndarray, s: int = 2) -> jnp.ndarray:
+    """Same result via lhs_dilation (no materialized zero map)."""
+    k = w.shape[-1]
+    wf = w[:, :, ::-1, ::-1]
+    out = lax.conv_general_dilated(
+        x[None],
+        wf,
+        window_strides=(1, 1),
+        padding=[(k - 1, k - 1), (k - 1, k - 1)],
+        lhs_dilation=(s, s),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def deconv3d_ref(x: jnp.ndarray, w: jnp.ndarray, s: int = 2) -> jnp.ndarray:
+    """3D OOM deconvolution over the full Eq. (1) extent."""
+    k = w.shape[-1]
+    ins = zero_insert3d(x, s)
+    wf = w[:, :, ::-1, ::-1, ::-1]
+    out = lax.conv_general_dilated(
+        ins[None],
+        wf,
+        window_strides=(1, 1, 1),
+        padding=[(k - 1, k - 1)] * 3,
+        dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+    )
+    return out[0]
+
+
+def deconv3d_ref_fused(x: jnp.ndarray, w: jnp.ndarray, s: int = 2) -> jnp.ndarray:
+    """3D variant via lhs_dilation."""
+    k = w.shape[-1]
+    wf = w[:, :, ::-1, ::-1, ::-1]
+    out = lax.conv_general_dilated(
+        x[None],
+        wf,
+        window_strides=(1, 1, 1),
+        padding=[(k - 1, k - 1)] * 3,
+        lhs_dilation=(s, s, s),
+        dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+    )
+    return out[0]
+
+
+def crop2d(y: jnp.ndarray, h: int, w: int) -> jnp.ndarray:
+    """Keep ``y[:, :h, :w]`` (remove the K−S high-side padding)."""
+    return y[:, :h, :w]
+
+
+def crop3d(y: jnp.ndarray, d: int, h: int, w: int) -> jnp.ndarray:
+    return y[:, :d, :h, :w]

@@ -1,0 +1,105 @@
+"""Layer-2 JAX models: the benchmark generators/decoders composed from
+the Layer-1 IOM kernels.
+
+A model forward is a pure function ``f(x, w_1, ..., w_L) -> y`` so the
+AOT artifact takes weights as runtime parameters — the Rust runtime
+feeds the *same* synthetic weights to the artifact and to its own
+golden pipeline and asserts the outputs match
+(``rust/tests/integration_runtime.rs``).
+
+Deconvolution stacks are emitted without interleaved nonlinearities by
+default: the accelerator (and the paper) concerns the deconvolution
+layers only; elementwise activations are orthogonal and are covered by
+the ``activation="relu"`` variant used in the python-side tests.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import zoo
+from .kernels import deconv2d_iom, deconv3d_iom
+from .kernels import ref
+
+
+def layer_forward(
+    spec: zoo.LayerSpec,
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """One deconvolution layer: full-extent deconv, then the K−S crop."""
+    if spec.is_3d:
+        full = (
+            deconv3d_iom(x, w, spec.s)
+            if use_pallas
+            else ref.deconv3d_ref_fused(x, w, spec.s)
+        )
+        return ref.crop3d(full, spec.out_d, spec.out_h, spec.out_w)
+    full = (
+        deconv2d_iom(x, w, spec.s)
+        if use_pallas
+        else ref.deconv2d_ref_fused(x, w, spec.s)
+    )
+    return ref.crop2d(full, spec.out_h, spec.out_w)
+
+
+def _act(name: str | None) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if name is None:
+        return lambda x: x
+    if name == "relu":
+        return jax.nn.relu
+    if name == "tanh":
+        return jnp.tanh
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def network_forward(
+    net: zoo.Network,
+    x: jnp.ndarray,
+    weights: Sequence[jnp.ndarray],
+    *,
+    use_pallas: bool = True,
+    activation: str | None = None,
+    final_activation: str | None = None,
+) -> jnp.ndarray:
+    """Forward through every deconvolution layer of ``net``."""
+    assert len(weights) == len(net.layers)
+    inner = _act(activation)
+    final = _act(final_activation)
+    for i, (spec, w) in enumerate(zip(net.layers, weights)):
+        assert x.shape == spec.input_shape, (x.shape, spec.input_shape)
+        assert w.shape == spec.weight_shape, (w.shape, spec.weight_shape)
+        x = layer_forward(spec, x, w, use_pallas=use_pallas)
+        x = final(x) if i == len(net.layers) - 1 else inner(x)
+    return x
+
+
+def make_forward_fn(
+    net: zoo.Network, *, use_pallas: bool = True
+) -> Callable[..., tuple]:
+    """A jit-able ``f(x, *weights) -> (y,)`` for AOT lowering."""
+
+    def fn(x, *weights):
+        return (network_forward(net, x, weights, use_pallas=use_pallas),)
+
+    return fn
+
+
+def synth_inputs(net: zoo.Network, seed: int = 0) -> tuple:
+    """Deterministic synthetic (x, weights) for shape-checking and
+    python-side tests (the Rust side generates its own operands and
+    passes them into the artifact at run time)."""
+    key = jax.random.PRNGKey(seed)
+    kx, *kws = jax.random.split(key, 1 + len(net.layers))
+    l0 = net.layers[0]
+    x = jax.random.uniform(kx, l0.input_shape, jnp.float32, -1.0, 1.0)
+    weights = tuple(
+        jax.random.uniform(k, spec.weight_shape, jnp.float32, -0.5, 0.5)
+        for k, spec in zip(kws, net.layers)
+    )
+    return x, weights

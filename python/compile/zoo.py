@@ -1,0 +1,161 @@
+"""Benchmark network geometry — mirrors ``rust/src/dcnn/zoo.rs`` 1:1.
+
+``python/tests/test_zoo.py`` checks the chaining invariants; the Rust
+CLI's ``udcnn zoo`` dumps the same shapes so the two sides can be
+diffed (done in CI via ``make check-zoo-sync``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One deconvolution layer (2D when ``in_d is None``)."""
+
+    name: str
+    in_c: int
+    in_h: int
+    in_w: int
+    out_c: int
+    k: int = 3
+    s: int = 2
+    in_d: int | None = None  # None => 2D
+
+    @property
+    def is_3d(self) -> bool:
+        return self.in_d is not None
+
+    def full_extent(self, i: int) -> int:
+        """Eq. (1): ``O = (I − 1)·S + K``."""
+        return (i - 1) * self.s + self.k
+
+    def cropped_extent(self, i: int) -> int:
+        return i * self.s
+
+    @property
+    def out_h(self) -> int:
+        return self.cropped_extent(self.in_h)
+
+    @property
+    def out_w(self) -> int:
+        return self.cropped_extent(self.in_w)
+
+    @property
+    def out_d(self) -> int | None:
+        return None if self.in_d is None else self.cropped_extent(self.in_d)
+
+    @property
+    def input_shape(self) -> tuple:
+        if self.is_3d:
+            return (self.in_c, self.in_d, self.in_h, self.in_w)
+        return (self.in_c, self.in_h, self.in_w)
+
+    @property
+    def weight_shape(self) -> tuple:
+        if self.is_3d:
+            return (self.out_c, self.in_c, self.k, self.k, self.k)
+        return (self.out_c, self.in_c, self.k, self.k)
+
+    @property
+    def output_shape(self) -> tuple:
+        if self.is_3d:
+            return (self.out_c, self.out_d, self.out_h, self.out_w)
+        return (self.out_c, self.out_h, self.out_w)
+
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    name: str
+    layers: tuple
+
+
+def dcgan() -> Network:
+    return Network(
+        "dcgan",
+        (
+            LayerSpec("dcgan.deconv1", 1024, 4, 4, 512),
+            LayerSpec("dcgan.deconv2", 512, 8, 8, 256),
+            LayerSpec("dcgan.deconv3", 256, 16, 16, 128),
+            LayerSpec("dcgan.deconv4", 128, 32, 32, 3),
+        ),
+    )
+
+
+def gp_gan() -> Network:
+    return Network(
+        "gp-gan",
+        (
+            LayerSpec("gp-gan.deconv1", 1024, 4, 4, 512),
+            LayerSpec("gp-gan.deconv2", 512, 8, 8, 256),
+            LayerSpec("gp-gan.deconv3", 256, 16, 16, 128),
+            LayerSpec("gp-gan.deconv4", 128, 32, 32, 3),
+        ),
+    )
+
+
+def gan3d() -> Network:
+    return Network(
+        "3d-gan",
+        (
+            LayerSpec("3d-gan.deconv1", 512, 4, 4, 256, in_d=4),
+            LayerSpec("3d-gan.deconv2", 256, 8, 8, 128, in_d=8),
+            LayerSpec("3d-gan.deconv3", 128, 16, 16, 64, in_d=16),
+            LayerSpec("3d-gan.deconv4", 64, 32, 32, 1, in_d=32),
+        ),
+    )
+
+
+def vnet() -> Network:
+    return Network(
+        "v-net",
+        (
+            LayerSpec("v-net.upconv1", 256, 8, 8, 128, in_d=8),
+            LayerSpec("v-net.upconv2", 128, 16, 16, 64, in_d=16),
+            LayerSpec("v-net.upconv3", 64, 32, 32, 32, in_d=32),
+            LayerSpec("v-net.upconv4", 32, 64, 64, 16, in_d=64),
+        ),
+    )
+
+
+def tiny_2d() -> Network:
+    return Network(
+        "tiny-2d",
+        (
+            LayerSpec("tiny-2d.deconv1", 4, 4, 4, 4),
+            LayerSpec("tiny-2d.deconv2", 4, 8, 8, 2),
+        ),
+    )
+
+
+def tiny_3d() -> Network:
+    return Network(
+        "tiny-3d",
+        (
+            LayerSpec("tiny-3d.deconv1", 4, 2, 2, 4, in_d=2),
+            LayerSpec("tiny-3d.deconv2", 4, 4, 4, 2, in_d=4),
+        ),
+    )
+
+
+def all_benchmarks() -> List[Network]:
+    return [dcgan(), gp_gan(), gan3d(), vnet()]
+
+
+def by_name(name: str) -> Network:
+    table = {
+        "dcgan": dcgan,
+        "gp-gan": gp_gan,
+        "gpgan": gp_gan,
+        "3d-gan": gan3d,
+        "gan3d": gan3d,
+        "v-net": vnet,
+        "vnet": vnet,
+        "tiny-2d": tiny_2d,
+        "tiny-3d": tiny_3d,
+    }
+    if name not in table:
+        raise KeyError(f"unknown network {name!r}")
+    return table[name]()

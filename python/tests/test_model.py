@@ -1,0 +1,70 @@
+"""Layer-2 model tests: shapes, pallas-vs-ref end-to-end equivalence,
+activation variants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, zoo
+
+
+class TestTinyNets:
+    @pytest.mark.parametrize("name", ["tiny-2d", "tiny-3d"])
+    def test_forward_shapes(self, name):
+        net = zoo.by_name(name)
+        x, weights = model.synth_inputs(net, seed=1)
+        y = model.network_forward(net, x, weights)
+        assert y.shape == net.layers[-1].output_shape
+
+    @pytest.mark.parametrize("name", ["tiny-2d", "tiny-3d"])
+    def test_pallas_matches_ref_end_to_end(self, name):
+        net = zoo.by_name(name)
+        x, weights = model.synth_inputs(net, seed=2)
+        a = model.network_forward(net, x, weights, use_pallas=True)
+        b = model.network_forward(net, x, weights, use_pallas=False)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+    def test_forward_deterministic(self):
+        net = zoo.tiny_2d()
+        x, weights = model.synth_inputs(net, seed=3)
+        a = model.network_forward(net, x, weights)
+        b = model.network_forward(net, x, weights)
+        np.testing.assert_array_equal(a, b)
+
+
+class TestActivations:
+    def test_relu_clamps_negatives(self):
+        net = zoo.tiny_2d()
+        x, weights = model.synth_inputs(net, seed=4)
+        y = model.network_forward(net, x, weights, activation="relu")
+        # final layer has no inner activation; intermediate did
+        assert y.shape == net.layers[-1].output_shape
+
+    def test_tanh_bounds_output(self):
+        net = zoo.tiny_2d()
+        x, weights = model.synth_inputs(net, seed=5)
+        y = model.network_forward(
+            net, x, weights, final_activation="tanh"
+        )
+        assert float(jnp.max(jnp.abs(y))) <= 1.0
+
+    def test_unknown_activation_raises(self):
+        net = zoo.tiny_2d()
+        x, weights = model.synth_inputs(net, seed=6)
+        with pytest.raises(ValueError):
+            model.network_forward(net, x, weights, activation="gelu5000")
+
+
+class TestShapeGuards:
+    def test_wrong_input_shape_asserts(self):
+        net = zoo.tiny_2d()
+        _, weights = model.synth_inputs(net, seed=7)
+        bad = jnp.zeros((1, 2, 2), jnp.float32)
+        with pytest.raises(AssertionError):
+            model.network_forward(net, bad, weights)
+
+    def test_wrong_weight_count_asserts(self):
+        net = zoo.tiny_2d()
+        x, weights = model.synth_inputs(net, seed=8)
+        with pytest.raises(AssertionError):
+            model.network_forward(net, x, weights[:1])

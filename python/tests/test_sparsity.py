@@ -1,0 +1,53 @@
+"""Fig.-1 mirror on the python side: the zero-inserted maps produced
+by the ref oracle have exactly the sparsity the Rust analyzer
+predicts (one cross-language pin per benchmark family)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import zoo
+from compile.kernels import ref
+
+
+def analytic_2d(l: zoo.LayerSpec) -> float:
+    ins = ((l.in_h - 1) * l.s + 1) * ((l.in_w - 1) * l.s + 1)
+    return 1.0 - (l.in_h * l.in_w) / ins
+
+
+def analytic_3d(l: zoo.LayerSpec) -> float:
+    ins = (
+        ((l.in_d - 1) * l.s + 1)
+        * ((l.in_h - 1) * l.s + 1)
+        * ((l.in_w - 1) * l.s + 1)
+    )
+    return 1.0 - (l.in_d * l.in_h * l.in_w) / ins
+
+
+@pytest.mark.parametrize("layer", zoo.dcgan().layers, ids=lambda l: l.name)
+def test_dcgan_layer_sparsity(layer):
+    x = jnp.ones((1, layer.in_h, layer.in_w), jnp.float32)
+    ins = ref.zero_insert2d(x, layer.s)
+    counted = float(np.asarray(ins == 0).astype(np.float64).mean())
+    assert abs(counted - analytic_2d(layer)) < 1e-9
+
+
+@pytest.mark.parametrize("layer", zoo.gan3d().layers, ids=lambda l: l.name)
+def test_gan3d_layer_sparsity(layer):
+    x = jnp.ones((1, layer.in_d, layer.in_h, layer.in_w), jnp.float32)
+    ins = ref.zero_insert3d(x, layer.s)
+    counted = float(np.asarray(ins == 0).astype(np.float64).mean())
+    assert abs(counted - analytic_3d(layer)) < 1e-9
+
+
+def test_fig1_separation():
+    max_2d = max(analytic_2d(l) for l in zoo.dcgan().layers)
+    min_3d = min(analytic_3d(l) for l in zoo.gan3d().layers)
+    assert min_3d > max_2d, "3D layers strictly sparser (Fig. 1)"
+
+
+def test_asymptotes():
+    big2 = zoo.LayerSpec("b2", 1, 512, 512, 1)
+    big3 = zoo.LayerSpec("b3", 1, 128, 128, 1, in_d=128)
+    assert abs(analytic_2d(big2) - 0.75) < 0.01
+    assert abs(analytic_3d(big3) - 0.875) < 0.01

@@ -1,0 +1,48 @@
+"""Geometry invariants of the python model zoo (mirror of the Rust
+tests in ``rust/src/dcnn/zoo.rs``)."""
+
+import pytest
+
+from compile import zoo
+
+
+@pytest.mark.parametrize("net", zoo.all_benchmarks(), ids=lambda n: n.name)
+def test_layers_chain(net):
+    for a, b in zip(net.layers, net.layers[1:]):
+        assert a.out_c == b.in_c
+        assert a.out_h == b.in_h
+        assert a.out_w == b.in_w
+        if a.is_3d:
+            assert a.out_d == b.in_d
+
+
+@pytest.mark.parametrize("net", zoo.all_benchmarks(), ids=lambda n: n.name)
+def test_uniform_filters(net):
+    for l in net.layers:
+        assert l.k == 3 and l.s == 2
+
+
+def test_eq1_extents():
+    l = zoo.dcgan().layers[0]
+    assert l.full_extent(l.in_h) == 9
+    assert l.out_h == 8
+
+
+def test_final_shapes():
+    assert zoo.dcgan().layers[-1].output_shape == (3, 64, 64)
+    assert zoo.gan3d().layers[-1].output_shape == (1, 64, 64, 64)
+    assert zoo.vnet().layers[-1].output_shape == (16, 128, 128, 128)
+
+
+def test_by_name_aliases():
+    assert zoo.by_name("vnet").name == "v-net"
+    assert zoo.by_name("gan3d").name == "3d-gan"
+    with pytest.raises(KeyError):
+        zoo.by_name("nope")
+
+
+def test_weight_shapes():
+    l = zoo.gan3d().layers[0]
+    assert l.weight_shape == (256, 512, 3, 3, 3)
+    l = zoo.dcgan().layers[0]
+    assert l.weight_shape == (512, 1024, 3, 3)

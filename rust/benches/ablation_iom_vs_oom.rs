@@ -1,0 +1,69 @@
+//! Ablation A1 — IOM vs OOM on the same mesh.
+//!
+//! The paper's core mechanism isolated: identical hardware, identical
+//! operands, only the mapping discipline changes. Expected: ~S²=4×
+//! (2D) and approaching S³=8× (3D) cycle reduction on compute-bound
+//! layers; OOM PE utilization collapses to 1−sparsity (Fig. 1's
+//! complement). Also sweeps the FIFO-D serialization knob
+//! (`depth_overlap_stall`).
+
+use udcnn::accel::{oom, simulate_layer, AccelConfig};
+use udcnn::benchkit::header;
+use udcnn::dcnn::zoo;
+use udcnn::report::Table;
+
+fn main() {
+    header("ablation_iom_vs_oom", "§II/§IV-B — mapping discipline ablation");
+
+    let mut t = Table::new(
+        "IOM vs OOM (cycles per batch-8 layer)",
+        &["layer", "IOM Mcyc", "OOM Mcyc", "speedup", "IOM util %", "OOM util %"],
+    );
+    let mut speedups_2d = Vec::new();
+    let mut speedups_3d = Vec::new();
+    for net in zoo::all_benchmarks() {
+        let cfg = AccelConfig::paper_for(net.dims);
+        for layer in &net.layers {
+            let i = simulate_layer(&cfg, layer);
+            let o = oom::simulate_oom(&cfg, layer);
+            let s = o.total_cycles as f64 / i.total_cycles as f64;
+            t.row(&[
+                layer.name.clone(),
+                format!("{:.2}", i.total_cycles as f64 / 1e6),
+                format!("{:.2}", o.total_cycles as f64 / 1e6),
+                format!("{s:.2}x"),
+                format!("{:.1}", 100.0 * i.pe_utilization()),
+                format!("{:.1}", 100.0 * o.pe_utilization()),
+            ]);
+            match net.dims {
+                udcnn::dcnn::Dims::D2 => speedups_2d.push(s),
+                udcnn::dcnn::Dims::D3 => speedups_3d.push(s),
+            }
+        }
+    }
+    t.print();
+
+    let g2 = udcnn::util::stats::geomean(&speedups_2d);
+    let g3 = udcnn::util::stats::geomean(&speedups_3d);
+    println!("geomean IOM speedup: 2D {g2:.2}x (→ S²=4), 3D {g3:.2}x (→ S³=8)");
+
+    // FIFO-D serialization knob
+    let mut knob = Table::new(
+        "FIFO-D port ablation (3D layers)",
+        &["layer", "concurrent Mcyc", "serialized Mcyc", "slowdown"],
+    );
+    for layer in &zoo::gan3d().layers {
+        let cfg = AccelConfig::paper_3d();
+        let mut cfg_stall = cfg.clone();
+        cfg_stall.depth_overlap_stall = true;
+        let a = simulate_layer(&cfg, layer);
+        let b = simulate_layer(&cfg_stall, layer);
+        knob.row(&[
+            layer.name.clone(),
+            format!("{:.2}", a.total_cycles as f64 / 1e6),
+            format!("{:.2}", b.total_cycles as f64 / 1e6),
+            format!("{:.2}x", b.total_cycles as f64 / a.total_cycles as f64),
+        ]);
+    }
+    knob.print();
+}

@@ -1,0 +1,60 @@
+//! Ablation A2 — the cost of uniformity (§IV-C).
+//!
+//! Runs the 2D benchmarks on (a) the native 2D operating point, (b)
+//! the 3D operating point with T_z folded into channel parallelism
+//! (the uniform-architecture path), and (c) a hypothetical
+//! non-foldable architecture where the T_z arrays simply idle on 2D
+//! work — quantifying what the paper's §IV-C fold buys.
+
+use udcnn::accel::{simulate_network, AccelConfig};
+use udcnn::benchkit::header;
+use udcnn::dcnn::zoo;
+use udcnn::report::Table;
+
+fn main() {
+    header("ablation_uniform_mapping", "§IV-C — uniform 2D/3D mapping ablation");
+
+    let mut t = Table::new(
+        "2D networks on the three mappings (total Mcycles, batch 8)",
+        &["network", "native-2D", "uniform (Tz folded)", "no-fold (Tz idle)", "fold gain"],
+    );
+    for net in [zoo::dcgan(), zoo::gp_gan()] {
+        let native = simulate_network(&AccelConfig::paper_2d(), &net).total_cycles();
+        let folded = simulate_network(&AccelConfig::paper_3d(), &net).total_cycles();
+        // no-fold: T_z arrays idle -> effectively a 512-PE machine
+        let mut idle = AccelConfig::paper_3d();
+        idle.tz = 1; // 2*16*1*4*4 = 512 PEs
+        let no_fold = simulate_network(&idle, &net).total_cycles();
+        t.row(&[
+            net.name.to_string(),
+            format!("{:.2}", native as f64 / 1e6),
+            format!("{:.2}", folded as f64 / 1e6),
+            format!("{:.2}", no_fold as f64 / 1e6),
+            format!("{:.2}x", no_fold as f64 / folded as f64),
+        ]);
+    }
+    t.print();
+
+    // 3D nets are unaffected by the fold (sanity row)
+    let mut t3 = Table::new(
+        "3D networks (fold is a no-op)",
+        &["network", "3D point Mcycles", "avg util %"],
+    );
+    for net in [zoo::gan3d(), zoo::vnet()] {
+        let m = simulate_network(&AccelConfig::paper_3d(), &net);
+        t3.row(&[
+            net.name.to_string(),
+            format!("{:.2}", m.total_cycles() as f64 / 1e6),
+            format!("{:.1}", 100.0 * m.avg_pe_utilization()),
+        ]);
+    }
+    t3.print();
+
+    let native = simulate_network(&AccelConfig::paper_2d(), &zoo::dcgan()).total_cycles();
+    let folded = simulate_network(&AccelConfig::paper_3d(), &zoo::dcgan()).total_cycles();
+    println!(
+        "paper check: uniform-mapping overhead on DCGAN {:.1}% (should be small)  [{}]",
+        100.0 * (folded as f64 / native as f64 - 1.0),
+        if (folded as f64 / native as f64) < 1.15 { "OK" } else { "MISMATCH" }
+    );
+}

@@ -1,0 +1,49 @@
+//! Fig. 1 — sparsity of the deconvolutional layers (DCGAN vs 3D-GAN).
+//!
+//! Paper shape: every 3D-GAN layer is sparser than every DCGAN layer;
+//! 2D saturates toward 75 % (S=2), 3D toward 87.5 %.
+
+use udcnn::benchkit::{header, Bench};
+use udcnn::dcnn::{sparsity, zoo};
+use udcnn::report::{bar_chart, Table};
+
+fn main() {
+    header("fig1_sparsity", "Fig. 1 — sparsity of the deconvolutional layers");
+    let nets = [zoo::dcgan(), zoo::gan3d()];
+    let rows = sparsity::fig1_dataset(&nets, 7);
+
+    let mut t = Table::new(
+        "Fig. 1 dataset (analytic == counted)",
+        &["network", "layer", "analytic", "empirical"],
+    );
+    let mut chart = Vec::new();
+    for r in &rows {
+        t.row(&[
+            r.network.to_string(),
+            r.layer.clone(),
+            format!("{:.4}", r.analytic),
+            format!("{:.4}", r.empirical),
+        ]);
+        chart.push((r.layer.clone(), 100.0 * r.analytic));
+    }
+    t.print();
+    print!("{}", bar_chart("sparsity (%)", &chart, "%", 40));
+
+    // timing: the empirical counter itself (exercises zero_insert)
+    let b = Bench::from_env();
+    let layer = &zoo::gan3d().layers[3];
+    let r = b.run("empirical_sparsity(3d-gan.deconv4)", || {
+        std::hint::black_box(sparsity::empirical_sparsity(layer, 3));
+    });
+    println!("\n{}", r.summary());
+
+    // paper check
+    let max2 = rows.iter().filter(|r| r.network == "dcgan").map(|r| r.analytic).fold(0.0, f64::max);
+    let min3 = rows.iter().filter(|r| r.network == "3d-gan").map(|r| r.analytic).fold(1.0, f64::min);
+    println!(
+        "\npaper check: max(2D)={:.3} < min(3D)={:.3}  [{}]",
+        max2,
+        min3,
+        if min3 > max2 { "OK" } else { "MISMATCH" }
+    );
+}

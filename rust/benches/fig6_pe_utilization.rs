@@ -1,0 +1,50 @@
+//! Fig. 6(a) — PE utilization across all benchmark layers.
+//!
+//! Paper shape: ≥90 % everywhere except the memory-bound fourth
+//! layers of DCGAN / GP-GAN (and 3D-GAN's single-channel tail, which
+//! cannot fill both T_m groups).
+
+use udcnn::accel::{simulate_layer, AccelConfig};
+use udcnn::benchkit::{header, Bench};
+use udcnn::dcnn::zoo;
+use udcnn::report::{bar_chart, Table};
+
+fn main() {
+    header("fig6_pe_utilization", "Fig. 6(a) — PE utilization per layer");
+
+    let mut t = Table::new(
+        "PE utilization (batch 8, 200 MHz)",
+        &["layer", "bound-by", "util %", "compute-only util %"],
+    );
+    let mut chart = Vec::new();
+    for net in zoo::all_benchmarks() {
+        let cfg = AccelConfig::paper_for(net.dims);
+        for layer in &net.layers {
+            let m = simulate_layer(&cfg, layer);
+            t.row(&[
+                layer.name.clone(),
+                m.bound_by.to_string(),
+                format!("{:.1}", 100.0 * m.pe_utilization()),
+                format!("{:.1}", 100.0 * m.compute_utilization()),
+            ]);
+            chart.push((layer.name.clone(), 100.0 * m.pe_utilization()));
+        }
+    }
+    t.print();
+    print!("{}", bar_chart("PE utilization (%)", &chart, "%", 40));
+
+    // simulator throughput (the thing cargo-bench actually times)
+    let b = Bench::from_env();
+    let cfg = AccelConfig::paper_3d();
+    let nets = zoo::all_benchmarks();
+    let r = b.run("simulate_all_16_layers", || {
+        for net in &nets {
+            let c = AccelConfig::paper_for(net.dims);
+            for l in &net.layers {
+                std::hint::black_box(simulate_layer(&c, l).total_cycles);
+            }
+        }
+        std::hint::black_box(&cfg);
+    });
+    println!("\n{}", r.summary());
+}

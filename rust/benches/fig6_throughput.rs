@@ -1,0 +1,58 @@
+//! Fig. 6(b) — per-layer throughput.
+//!
+//! Paper shape: 1.5–3.0 TOPS (dense-equivalent) for the 2D nets with
+//! the L4 dip; 3D effective throughput ≥ 2D. We print both the
+//! dense-equivalent convention (the paper's headline; see DESIGN.md
+//! §3 on why 3D exceeds the paper's 3.0 band under an explicit S³
+//! accounting) and useful TOPS (bounded by the 0.82 peak).
+
+use udcnn::accel::{simulate_layer, AccelConfig};
+use udcnn::benchkit::header;
+use udcnn::dcnn::zoo;
+use udcnn::report::{bar_chart, Table};
+
+fn main() {
+    header("fig6_throughput", "Fig. 6(b) — throughput per layer");
+
+    let mut t = Table::new(
+        "throughput (batch 8, 200 MHz)",
+        &["layer", "eff TOPS", "useful TOPS", "GB/s", "ms/batch"],
+    );
+    let mut chart = Vec::new();
+    for net in zoo::all_benchmarks() {
+        let cfg = AccelConfig::paper_for(net.dims);
+        for layer in &net.layers {
+            let m = simulate_layer(&cfg, layer);
+            t.row(&[
+                layer.name.clone(),
+                format!("{:.2}", m.effective_tops(&cfg)),
+                format!("{:.2}", m.useful_tops()),
+                format!("{:.1}", m.dram_gbps()),
+                format!("{:.3}", m.time_s() * 1e3),
+            ]);
+            chart.push((layer.name.clone(), m.effective_tops(&cfg)));
+        }
+    }
+    t.print();
+    print!("{}", bar_chart("effective TOPS", &chart, "TOPS", 40));
+
+    // paper checks
+    let cfg2 = AccelConfig::paper_2d();
+    let tops: Vec<f64> = zoo::dcgan()
+        .layers
+        .iter()
+        .map(|l| simulate_layer(&cfg2, l).effective_tops(&cfg2))
+        .collect();
+    let max2 = tops.iter().cloned().fold(0.0, f64::max);
+    let min2 = tops.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "\npaper check: 2D band [{min2:.2}, {max2:.2}] TOPS vs paper 1.5–3.0  [{}]",
+        if min2 > 1.2 && max2 < 3.6 { "OK" } else { "MISMATCH" }
+    );
+    let cfg3 = AccelConfig::paper_3d();
+    let t3 = simulate_layer(&cfg3, &zoo::gan3d().layers[1]).effective_tops(&cfg3);
+    println!(
+        "paper check: 3D ({t3:.2}) >= 2D ({max2:.2})  [{}]",
+        if t3 >= max2 * 0.9 { "OK" } else { "MISMATCH" }
+    );
+}

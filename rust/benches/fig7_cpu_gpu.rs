@@ -1,0 +1,148 @@
+//! Fig. 7 — relative performance (a) and energy efficiency (b) of the
+//! CPU, GPU and FPGA solutions across the four benchmarks.
+//!
+//! CPU times are **measured** on this host (multithreaded OOM
+//! deconvolution; large layers extrapolated from the calibrated
+//! effective GFLOPS — flagged in the table). GPU times come from the
+//! explicit GTX 1080 model. FPGA times come from the timing tier.
+//! Paper shape: FPGA 22.7–63.3× over CPU in throughput; 104.7–291.4×
+//! over CPU and 3.3–8.3× over GPU in energy efficiency.
+
+use udcnn::accel::{simulate_network, AccelConfig};
+use udcnn::baseline::{CpuBaseline, GpuModel};
+use udcnn::benchkit::header;
+use udcnn::dcnn::zoo;
+use udcnn::energy;
+use udcnn::report::{ratio, Table};
+
+fn main() {
+    header("fig7_cpu_gpu", "Fig. 7 — CPU vs GPU vs FPGA (throughput + energy)");
+
+    let cpu = CpuBaseline::default();
+    let gpu = GpuModel::default();
+    let batch = 8usize;
+    println!(
+        "host CPU: {} threads, calibrated {:.1} dense GFLOPS\n",
+        cpu.threads,
+        cpu.calibrated_gflops()
+    );
+
+    let mut perf = Table::new(
+        "Fig. 7(a) — relative performance (batch 8)",
+        &["network", "FPGA ms", "GPU ms", "CPU ms", "cpu src", "FPGA/CPU", "FPGA/GPU"],
+    );
+    let mut eff = Table::new(
+        "Fig. 7(b) — energy efficiency (GOPS/J, dense-equivalent)",
+        &["network", "FPGA", "GPU", "CPU", "vs CPU", "vs GPU"],
+    );
+
+    let mut cpu_ratios = Vec::new();
+    let mut gpu_energy_ratios = Vec::new();
+    for net in zoo::all_benchmarks() {
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        cfg.batch = batch;
+        let fm = simulate_network(&cfg, &net);
+        let t_fpga = fm.total_time_s();
+
+        let mut measured = true;
+        let t_cpu: f64 = net
+            .layers
+            .iter()
+            .map(|l| {
+                let r = cpu.run_layer(l);
+                measured &= r.measured;
+                r.seconds_per_item * batch as f64
+            })
+            .sum();
+        let t_gpu = gpu.network_seconds(&net, batch);
+
+        let dense: u64 = net
+            .layers
+            .iter()
+            .map(udcnn::accel::metrics::dense_equivalent_macs)
+            .sum();
+        let ops = 2.0 * dense as f64 * batch as f64;
+
+        let p_fpga: f64 = fm
+            .layers
+            .iter()
+            .map(|m| energy::fpga_watts(&cfg, m) * m.time_s())
+            .sum::<f64>()
+            / t_fpga;
+        let e_fpga = energy::gops_per_joule(ops, t_fpga, p_fpga);
+        let e_cpu = energy::gops_per_joule(ops, t_cpu, energy::CPU_WATTS);
+        let e_gpu = energy::gops_per_joule(ops, t_gpu, energy::GPU_WATTS);
+
+        perf.row(&[
+            net.name.to_string(),
+            format!("{:.2}", t_fpga * 1e3),
+            format!("{:.2}", t_gpu * 1e3),
+            format!("{:.1}", t_cpu * 1e3),
+            if measured { "measured".into() } else { "extrapolated".into() },
+            ratio(t_cpu / t_fpga),
+            ratio(t_gpu / t_fpga),
+        ]);
+        eff.row(&[
+            net.name.to_string(),
+            format!("{:.1}", e_fpga),
+            format!("{:.1}", e_gpu),
+            format!("{:.2}", e_cpu),
+            ratio(e_fpga / e_cpu),
+            ratio(e_fpga / e_gpu),
+        ]);
+        cpu_ratios.push(t_cpu / t_fpga);
+        gpu_energy_ratios.push(e_fpga / e_gpu);
+    }
+    perf.print();
+    eff.print();
+
+    // The paper's CPU was a ten-core E5 v2; this host differs (often
+    // wildly — CI boxes can be single-core). Present the ratios on the
+    // paper's hardware scale too, crediting the E5 with
+    // E5_EFFECTIVE_GFLOPS of sustained dense-conv throughput.
+    let mut norm = Table::new(
+        "Fig. 7(a) normalized to the paper's CPU (E5 v2 @ 150 effective GFLOPS)",
+        &["network", "FPGA ms", "E5 ms (modelled)", "FPGA/CPU", "paper"],
+    );
+    let paper_ratio = ["22.7x-63.3x"; 4];
+    let mut e5_ratios = Vec::new();
+    for (i, net) in zoo::all_benchmarks().iter().enumerate() {
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        cfg.batch = batch;
+        let t_fpga = simulate_network(&cfg, net).total_time_s();
+        let dense: u64 = net
+            .layers
+            .iter()
+            .map(udcnn::accel::metrics::dense_equivalent_macs)
+            .sum();
+        let ops = 2.0 * dense as f64 * batch as f64;
+        let t_e5 = udcnn::baseline::cpu::e5_seconds(ops);
+        e5_ratios.push(t_e5 / t_fpga);
+        norm.row(&[
+            net.name.to_string(),
+            format!("{:.2}", t_fpga * 1e3),
+            format!("{:.1}", t_e5 * 1e3),
+            ratio(t_e5 / t_fpga),
+            paper_ratio[i].into(),
+        ]);
+    }
+    norm.print();
+
+    let lo = cpu_ratios.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = cpu_ratios.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "paper check: FPGA/CPU measured-on-host {lo:.1}x–{hi:.1}x (host-dependent)"
+    );
+    let nlo = e5_ratios.iter().cloned().fold(f64::MAX, f64::min);
+    let nhi = e5_ratios.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "paper check: FPGA/CPU normalized-to-E5 {nlo:.1}x–{nhi:.1}x (paper: 22.7x–63.3x)  [{}]",
+        if nlo > 10.0 && nhi < 100.0 { "SHAPE-OK" } else { "CHECK" }
+    );
+    let glo = gpu_energy_ratios.iter().cloned().fold(f64::MAX, f64::min);
+    let ghi = gpu_energy_ratios.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "paper check: FPGA/GPU energy {glo:.1}x–{ghi:.1}x (paper: 3.3x–8.3x)  [{}]",
+        if glo > 3.0 { "SHAPE-OK" } else { "CHECK" }
+    );
+}

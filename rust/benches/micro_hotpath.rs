@@ -1,0 +1,76 @@
+//! Hot-path micro benchmarks — the §Perf instrumentation.
+//!
+//! Times the three L3 hot paths (timing-tier simulation, functional
+//! mesh, golden Q8.8 deconv) plus the CPU-baseline inner loop, so
+//! optimization deltas are measurable in isolation. Results feed
+//! EXPERIMENTS.md §Perf.
+
+use udcnn::accel::functional::run_layer_2d;
+use udcnn::accel::{simulate_layer, AccelConfig};
+use udcnn::baseline::CpuBaseline;
+use udcnn::benchkit::{header, Bench};
+use udcnn::dcnn::{zoo, LayerData, LayerDataQ};
+use udcnn::func::deconv_q::deconv2d_iom_q;
+use udcnn::func::{deconv2d_iom, deconv2d_oom};
+
+fn main() {
+    header("micro_hotpath", "§Perf — hot-path micro benchmarks");
+    let b = Bench::from_env();
+
+    // 1. timing-tier simulation of all 16 benchmark layers
+    let nets = zoo::all_benchmarks();
+    let r = b.run("timing_tier_16_layers", || {
+        for net in &nets {
+            let cfg = AccelConfig::paper_for(net.dims);
+            for l in &net.layers {
+                std::hint::black_box(simulate_layer(&cfg, l).total_cycles);
+            }
+        }
+    });
+    println!("{}", r.summary());
+
+    // 2. functional mesh on a small layer
+    let spec = &zoo::tiny_2d().layers[1];
+    let q = LayerData::synth(spec, 1).quantize();
+    let (input, weights) = match &q {
+        LayerDataQ::D2 { input, weights } => (input.clone(), weights.clone()),
+        _ => unreachable!(),
+    };
+    let cfg = AccelConfig::tiny(2, 2, 1, 4, 4);
+    let r = b.run("functional_mesh_tiny2d_l2", || {
+        std::hint::black_box(run_layer_2d(&cfg, spec, &input, &weights).stats.macs);
+    });
+    println!("{}", r.summary());
+
+    // 3. golden Q8.8 IOM on the same layer
+    let r = b.run("golden_q88_iom_tiny2d_l2", || {
+        std::hint::black_box(deconv2d_iom_q(&input, &weights, spec.s).len());
+    });
+    println!("{}", r.summary());
+
+    // 4. f32 IOM vs OOM on a mid-size layer (CPU-baseline inner loop)
+    let mid = udcnn::dcnn::LayerSpec::new_2d("mid", 32, 16, 16, 32, 3, 2);
+    let data = LayerData::synth(&mid, 2);
+    let (fin, fw) = match &data {
+        LayerData::D2 { input, weights } => (input.clone(), weights.clone()),
+        _ => unreachable!(),
+    };
+    let r = b.run("f32_iom_32x16x16", || {
+        std::hint::black_box(deconv2d_iom(&fin, &fw, 2).len());
+    });
+    println!("{}", r.summary());
+    let r = b.run("f32_oom_32x16x16", || {
+        std::hint::black_box(deconv2d_oom(&fin, &fw, 2).len());
+    });
+    println!("{}", r.summary());
+
+    // 5. multithreaded CPU baseline on a DCGAN layer
+    let cpu = CpuBaseline::default();
+    let l = &zoo::dcgan().layers[2];
+    let r = b.run("cpu_baseline_dcgan_l3", || {
+        std::hint::black_box(cpu.measure_layer(l));
+    });
+    println!("{}", r.summary());
+
+    println!("\n(record before/after in EXPERIMENTS.md §Perf)");
+}

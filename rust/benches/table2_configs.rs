@@ -1,0 +1,70 @@
+//! Table II — configurations of the computation engine.
+//!
+//! Prints the paper's two operating points and the DSE justification:
+//! where they rank in the legal design space under the 2048-PE budget.
+
+use udcnn::accel::{dse, AccelConfig};
+use udcnn::benchkit::{header, Bench};
+use udcnn::dcnn::zoo;
+use udcnn::report::Table;
+
+fn main() {
+    header("table2_configs", "Table II — configurations of the computation engine");
+
+    let mut t = Table::new(
+        "Table II (operating points of the fixed 2048-PE engine)",
+        &["benchmarks", "Tm", "Tn", "Tz", "Tr", "Tc", "data width"],
+    );
+    let c2 = AccelConfig::paper_2d();
+    let c3 = AccelConfig::paper_3d();
+    t.row(&["2D DCNNs".into(), c2.tm.to_string(), c2.tn.to_string(), c2.tz.to_string(), c2.tr.to_string(), c2.tc.to_string(), c2.data_width_bits.to_string()]);
+    t.row(&["3D DCNNs".into(), c3.tm.to_string(), c3.tn.to_string(), c3.tz.to_string(), c3.tr.to_string(), c3.tc.to_string(), c3.data_width_bits.to_string()]);
+    t.print();
+
+    let budget = dse::DseBudget::default();
+    let bench = Bench::from_env();
+    let fast = std::env::var_os("UDCNN_BENCH_FAST").is_some();
+
+    // 2D point vs 2D benchmarks
+    let nets2 = if fast { vec![zoo::dcgan()] } else { vec![zoo::dcgan(), zoo::gp_gan()] };
+    let r = bench.run("dse_sweep_2d", || {
+        std::hint::black_box(dse::sweep(&nets2, &budget).len());
+    });
+    println!("{}", r.summary());
+    let points = dse::sweep(&nets2, &budget);
+    let paper2 = dse::evaluate(&AccelConfig::paper_2d(), &nets2, &budget);
+    let rank2 = points.iter().filter(|p| p.total_cycles < paper2.total_cycles).count();
+    println!(
+        "2D point rank: {rank2}/{} candidates beat it (util {:.1}%)",
+        points.len(),
+        100.0 * paper2.avg_utilization
+    );
+
+    let nets3 = if fast { vec![zoo::gan3d()] } else { vec![zoo::gan3d(), zoo::vnet()] };
+    let points3 = dse::sweep(&nets3, &budget);
+    let paper3 = dse::evaluate(&AccelConfig::paper_3d(), &nets3, &budget);
+    let rank3 = points3.iter().filter(|p| p.total_cycles < paper3.total_cycles).count();
+    println!(
+        "3D point rank: {rank3}/{} candidates beat it (util {:.1}%)",
+        points3.len(),
+        100.0 * paper3.avg_utilization
+    );
+
+    let mut top = Table::new(
+        "best-5 design points for the 3D benchmark set",
+        &["Tm", "Tn", "Tz", "Tr", "Tc", "PEs", "Mcycles", "util %"],
+    );
+    for p in points3.iter().take(5) {
+        top.row(&[
+            p.cfg.tm.to_string(),
+            p.cfg.tn.to_string(),
+            p.cfg.tz.to_string(),
+            p.cfg.tr.to_string(),
+            p.cfg.tc.to_string(),
+            p.cfg.total_pes().to_string(),
+            format!("{:.1}", p.total_cycles as f64 / 1e6),
+            format!("{:.1}", 100.0 * p.avg_utilization),
+        ]);
+    }
+    top.print();
+}

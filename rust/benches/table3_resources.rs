@@ -1,0 +1,51 @@
+//! Table III — resource utilization of the Xilinx VC709.
+//!
+//! The resource model is calibrated so the Table-II engine reproduces
+//! the paper's numbers exactly; this bench prints the table and shows
+//! how utilization scales with the PE budget (the extrapolation the
+//! DSE uses).
+
+use udcnn::accel::AccelConfig;
+use udcnn::benchkit::header;
+use udcnn::report::Table;
+use udcnn::resource;
+
+fn main() {
+    header("table3_resources", "Table III — resource utilization of Xilinx VC709");
+
+    let est = resource::estimate(&AccelConfig::paper_3d());
+    let p = est.percentages();
+    let mut t = Table::new(
+        "Table III (paper values: 2304 / 712 / 566182 / 292292)",
+        &["resource", "utilization", "percentage (%)"],
+    );
+    t.row(&["DSP48Es".into(), est.dsp.to_string(), format!("{:.2}", p[0])]);
+    t.row(&["BRAMs".into(), est.bram36.to_string(), format!("{:.2}", p[1])]);
+    t.row(&["Flip-Flops".into(), est.ff.to_string(), format!("{:.2}", p[2])]);
+    t.row(&["LUTs".into(), est.lut.to_string(), format!("{:.2}", p[3])]);
+    t.print();
+    let exact = est.dsp == 2304 && est.bram36 == 712 && est.ff == 566_182 && est.lut == 292_292;
+    println!("paper check: exact match [{}]", if exact { "OK" } else { "MISMATCH" });
+
+    // scaling study: PE budget vs resources
+    let mut scale = Table::new(
+        "resource scaling with the PE budget",
+        &["Tn", "PEs", "DSP", "DSP %", "FF %", "LUT %", "fits"],
+    );
+    for tn_log in 3..=7 {
+        let mut cfg = AccelConfig::paper_2d();
+        cfg.tn = 1 << tn_log;
+        let e = resource::estimate(&cfg);
+        let pp = e.percentages();
+        scale.row(&[
+            cfg.tn.to_string(),
+            cfg.total_pes().to_string(),
+            e.dsp.to_string(),
+            format!("{:.1}", pp[0]),
+            format!("{:.1}", pp[2]),
+            format!("{:.1}", pp[3]),
+            e.fits_vc709().to_string(),
+        ]);
+    }
+    scale.print();
+}

@@ -1,0 +1,80 @@
+//! The adder trees (§IV-A): reduce the `T_n` per-channel partial
+//! results into one accumulated output block per group.
+//!
+//! `T_m · T_c · T_z · log₂(T_n)` physical adders give a pipelined
+//! binary tree of depth `log₂(T_n)`; the timing tier charges its drain
+//! latency once per accumulation group, the functional tier performs
+//! the actual reduction here (in 48-bit, matching the hardware's
+//! wide accumulation — no intermediate rounding).
+
+use crate::fixed::Acc48;
+use crate::util::ceil_log2;
+
+/// Reduce a slice of partial accumulators with a binary tree,
+/// returning the sum and the tree depth (pipeline stages).
+pub fn reduce(parts: &[Acc48]) -> (Acc48, u32) {
+    let depth = ceil_log2(parts.len().max(1));
+    let mut level: Vec<Acc48> = parts.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            let mut a = pair[0];
+            if pair.len() == 2 {
+                a.add(pair[1]);
+            }
+            next.push(a);
+        }
+        level = next;
+    }
+    (level.first().copied().unwrap_or(Acc48::ZERO), depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q88;
+
+    fn acc(v: f32) -> Acc48 {
+        let mut a = Acc48::ZERO;
+        a.mac(Q88::from_f32(v), Q88::ONE);
+        a
+    }
+
+    #[test]
+    fn reduce_sums_exactly() {
+        let parts: Vec<Acc48> = (1..=8).map(|i| acc(i as f32)).collect();
+        let (sum, depth) = reduce(&parts);
+        assert_eq!(sum.to_q88().to_f32(), 36.0);
+        assert_eq!(depth, 3);
+    }
+
+    #[test]
+    fn reduce_non_power_of_two() {
+        let parts: Vec<Acc48> = (1..=5).map(|i| acc(i as f32)).collect();
+        let (sum, depth) = reduce(&parts);
+        assert_eq!(sum.to_q88().to_f32(), 15.0);
+        assert_eq!(depth, 3); // ceil(log2 5)
+    }
+
+    #[test]
+    fn reduce_single_and_empty() {
+        let (s, d) = reduce(&[acc(4.0)]);
+        assert_eq!(s.to_q88().to_f32(), 4.0);
+        assert_eq!(d, 0);
+        let (s, d) = reduce(&[]);
+        assert_eq!(s, Acc48::ZERO);
+        assert_eq!(d, 0);
+    }
+
+    #[test]
+    fn tree_order_matches_sequential_sum() {
+        // integer adds are associative: tree == sequential, bit for bit
+        let parts: Vec<Acc48> = (0..16).map(|i| acc(i as f32 * 0.37 - 2.0)).collect();
+        let (tree, _) = reduce(&parts);
+        let mut seq = Acc48::ZERO;
+        for p in &parts {
+            seq.add(*p);
+        }
+        assert_eq!(tree, seq);
+    }
+}

@@ -1,0 +1,208 @@
+//! The three on-chip buffers (§IV-A) and residency decisions.
+//!
+//! "We adopt three separate on-chip buffers to store input, output and
+//! weight blocks." Buffer capacities determine how often each operand
+//! class must be re-fetched from DDR; [`Residency::plan`] makes those
+//! decisions for the timing tier and reports them in the metrics.
+
+use crate::dcnn::LayerSpec;
+
+use super::config::AccelConfig;
+use super::schedule::Schedule;
+
+/// Where an operand class lives for the duration of a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OperandPlace {
+    /// Fits entirely on-chip: fetched once per batch item (inputs) or
+    /// once per layer (weights).
+    Resident,
+    /// Streamed block-by-block; may be re-fetched.
+    Streamed,
+}
+
+/// The residency plan for one layer: drives DDR traffic accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Residency {
+    pub weights: OperandPlace,
+    pub inputs: OperandPlace,
+    pub outputs: OperandPlace,
+    /// Total DDR traffic in bytes for the whole layer (batch included).
+    pub dram_bytes: u64,
+    /// Breakdown for the report.
+    pub weight_bytes: u64,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+}
+
+impl Residency {
+    /// Plan operand residency and compute total DDR traffic.
+    ///
+    /// The scheduler picks between two loop orders per layer:
+    ///
+    /// * **Weight-resident** (all `N_o·N_c·K^d` weights fit the weight
+    ///   buffer — typical for the activation-heavy late layers): the
+    ///   spatial walk is outermost, every operand streams exactly once.
+    /// * **Weight-streamed** (early GAN layers, where weights dominate):
+    ///   the weight barrier is outermost; weights still transfer exactly
+    ///   once (each `(oc, ic)` block serves the whole batch while
+    ///   resident), and then:
+    ///   - **Inputs**: fetched once per batch item if the whole input
+    ///     fits the input buffer, else re-streamed per `oc` block;
+    ///   - **Outputs**: accumulate on-chip per `oc` block; if the slice
+    ///     fits, each output element is written once, else the
+    ///     accumulation spills to DDR with a read-modify-write per
+    ///     extra input-channel block.
+    pub fn plan(cfg: &AccelConfig, layer: &LayerSpec, sched: &Schedule) -> Residency {
+        let eb = cfg.elem_bytes() as u64;
+        let w_total = layer.weight_elems() as u64 * eb;
+        let in_total = layer.input_elems() as u64 * eb;
+        // Output slice written per oc block (full Eq.1 extent is held
+        // during accumulation; the crop happens on write-back).
+        let out_slice = (sched.mapping.out_par * layer.out_full_spatial()) as u64 * eb;
+        let out_total = layer.output_elems() as u64 * eb;
+
+        let w_resident = w_total <= cfg.weight_buf_kib as u64 * 1024;
+        if w_resident {
+            // spatial-outer order: everything moves exactly once
+            return Residency {
+                weights: OperandPlace::Resident,
+                inputs: OperandPlace::Streamed,
+                outputs: OperandPlace::Streamed,
+                dram_bytes: w_total + cfg.batch as u64 * (in_total + out_total),
+                weight_bytes: w_total,
+                input_bytes: cfg.batch as u64 * in_total,
+                output_bytes: cfg.batch as u64 * out_total,
+            };
+        }
+
+        let in_fits = in_total <= cfg.input_buf_kib as u64 * 1024;
+        let out_fits = out_slice <= cfg.output_buf_kib as u64 * 1024;
+
+        let input_traffic = if in_fits {
+            cfg.batch as u64 * in_total
+        } else {
+            cfg.batch as u64 * in_total * sched.oc_blocks as u64
+        };
+        let output_traffic = if out_fits {
+            cfg.batch as u64 * out_total
+        } else {
+            // spill: every extra ic block re-reads and re-writes the slice
+            let rmw = (2 * (sched.ic_blocks as u64 - 1)).max(0) + 1;
+            cfg.batch as u64 * out_total * rmw
+        };
+
+        Residency {
+            weights: OperandPlace::Streamed,
+            inputs: if in_fits {
+                OperandPlace::Resident
+            } else {
+                OperandPlace::Streamed
+            },
+            outputs: if out_fits {
+                OperandPlace::Resident
+            } else {
+                OperandPlace::Streamed
+            },
+            dram_bytes: w_total + input_traffic + output_traffic,
+            weight_bytes: w_total,
+            input_bytes: input_traffic,
+            output_bytes: output_traffic,
+        }
+    }
+}
+
+/// Check that the *working set* of one schedule step fits in the
+/// buffers at all (hard constraint for the DSE).
+pub fn working_set_fits(cfg: &AccelConfig, layer: &LayerSpec, sched: &Schedule) -> bool {
+    let eb = cfg.elem_bytes();
+    // weight double-buffer: 2 blocks
+    let w_block = 2 * sched.mapping.out_par * sched.mapping.chan_par * layer.kernel_volume() * eb;
+    // input tile double-buffer: chan_par × depth_par × (T_r·T_c) activations
+    let in_tile =
+        2 * sched.mapping.chan_par * sched.mapping.depth_par * cfg.tr * cfg.tc * eb;
+    // output: one PE-array tile's result block per group
+    let k = layer.k;
+    let out_tile = sched.mapping.out_par
+        * sched.mapping.depth_par
+        * (cfg.tr * layer.s + k - layer.s)
+        * (cfg.tc * layer.s + k - layer.s)
+        * 4; // Acc48 stored as 4-byte banks per element pair, conservative
+    w_block <= cfg.weight_buf_kib * 1024
+        && in_tile <= cfg.input_buf_kib * 1024
+        && out_tile <= cfg.output_buf_kib * 1024
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn dcgan_l1_weight_heavy() {
+        let cfg = AccelConfig::paper_2d();
+        let layer = &zoo::dcgan().layers[0];
+        let sched = Schedule::new(&cfg, layer);
+        let r = Residency::plan(&cfg, layer, &sched);
+        // 1024·512·9·2B ≈ 9.4 MB of weights dominate
+        assert_eq!(r.weight_bytes, 1024 * 512 * 9 * 2);
+        assert!(r.weight_bytes > r.input_bytes);
+        assert_eq!(r.inputs, OperandPlace::Resident, "4x4x1024 inputs fit");
+    }
+
+    #[test]
+    fn dcgan_l4_activation_heavy() {
+        let cfg = AccelConfig::paper_2d();
+        let layer = &zoo::dcgan().layers[3];
+        let sched = Schedule::new(&cfg, layer);
+        let r = Residency::plan(&cfg, layer, &sched);
+        assert!(
+            r.input_bytes > r.weight_bytes,
+            "layer 4 moves maps, not weights"
+        );
+    }
+
+    #[test]
+    fn weights_always_once() {
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            for layer in &net.layers {
+                let sched = Schedule::new(&cfg, layer);
+                let r = Residency::plan(&cfg, layer, &sched);
+                assert_eq!(
+                    r.weight_bytes,
+                    layer.weight_elems() as u64 * 2,
+                    "{}",
+                    layer.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn working_sets_fit_paper_configs() {
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            for layer in &net.layers {
+                let sched = Schedule::new(&cfg, layer);
+                assert!(
+                    working_set_fits(&cfg, layer, &sched),
+                    "{} working set must fit Table-II buffers",
+                    layer.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_scales_with_batch() {
+        let mut cfg = AccelConfig::paper_2d();
+        let layer = &zoo::dcgan().layers[3];
+        let sched = Schedule::new(&cfg, layer);
+        let r1 = Residency::plan(&cfg, layer, &sched);
+        cfg.batch = 16;
+        let sched = Schedule::new(&cfg, layer);
+        let r2 = Residency::plan(&cfg, layer, &sched);
+        assert_eq!(r2.input_bytes, 2 * r1.input_bytes);
+        assert_eq!(r2.weight_bytes, r1.weight_bytes, "weights amortize");
+    }
+}

@@ -1,0 +1,202 @@
+//! Accelerator configuration (Table II) and platform constants.
+
+use crate::dcnn::Dims;
+
+/// Full configuration of the computation engine plus platform numbers.
+///
+/// `T_m × T_n × T_z × T_r × T_c` PEs in total (Table II uses 2048 for
+/// both the 2D and 3D operating points of the same bitstream).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccelConfig {
+    /// PE groups — output channels computed in parallel (`T_m`).
+    pub tm: usize,
+    /// PE arrays per group along input channels (`T_n`).
+    pub tn: usize,
+    /// PE arrays per group along input depth (`T_z`; 1 for the 2D
+    /// operating point, where the Z dimension folds into channels —
+    /// §IV-C).
+    pub tz: usize,
+    /// PE array rows (`T_r`).
+    pub tr: usize,
+    /// PE array columns (`T_c`).
+    pub tc: usize,
+    /// Clock (paper: 200 MHz on the VC709).
+    pub freq_mhz: f64,
+    /// Datapath width in bits (paper: 16-bit fixed).
+    pub data_width_bits: usize,
+    /// Effective DDR bandwidth in GB/s. VC709 has two DDR3 SODIMMs;
+    /// we default to 2 × 12.8 GB/s peak × 75 % efficiency = 19.2 GB/s.
+    pub ddr_gbps: f64,
+    /// On-chip buffer capacities in KiB (input / weight / output).
+    pub input_buf_kib: usize,
+    pub weight_buf_kib: usize,
+    pub output_buf_kib: usize,
+    /// Batch size the accelerator pipelines (weights are re-used across
+    /// the batch; the paper's >90 % PE utilization on weight-heavy
+    /// early GAN layers is only reachable with batching — see
+    /// DESIGN.md §5).
+    pub batch: usize,
+    /// When `true`, a PE stalls `K²·(K−S)` cycles per activation in 3D
+    /// mode to serialize FIFO-D depth-overlap traffic through a single
+    /// shared port. Default `false`: the FIFO-D port runs concurrently
+    /// with the multiplier (dual-ported register files), which is what
+    /// the paper's ">90 % PE utilization" for 3D nets requires. The
+    /// `ablation_iom_vs_oom` bench quantifies the serialized variant.
+    pub depth_overlap_stall: bool,
+}
+
+impl AccelConfig {
+    /// Table II, row "2D DCNNs": T_m=2, T_n=64, T_z=1, T_r=4, T_c=4.
+    pub fn paper_2d() -> AccelConfig {
+        AccelConfig {
+            tm: 2,
+            tn: 64,
+            tz: 1,
+            tr: 4,
+            tc: 4,
+            ..AccelConfig::platform_defaults()
+        }
+    }
+
+    /// Table II, row "3D DCNNs": T_m=2, T_n=16, T_z=4, T_r=4, T_c=4.
+    pub fn paper_3d() -> AccelConfig {
+        AccelConfig {
+            tm: 2,
+            tn: 16,
+            tz: 4,
+            tr: 4,
+            tc: 4,
+            ..AccelConfig::platform_defaults()
+        }
+    }
+
+    /// Pick the paper operating point matching a layer's dimensionality.
+    pub fn paper_for(dims: Dims) -> AccelConfig {
+        match dims {
+            Dims::D2 => AccelConfig::paper_2d(),
+            Dims::D3 => AccelConfig::paper_3d(),
+        }
+    }
+
+    /// Platform constants shared by both operating points.
+    pub fn platform_defaults() -> AccelConfig {
+        AccelConfig {
+            tm: 2,
+            tn: 64,
+            tz: 1,
+            tr: 4,
+            tc: 4,
+            freq_mhz: 200.0,
+            data_width_bits: 16,
+            ddr_gbps: 19.2,
+            input_buf_kib: 512,
+            weight_buf_kib: 1536,
+            output_buf_kib: 1024,
+            batch: 8,
+            depth_overlap_stall: false,
+        }
+    }
+
+    /// A tiny configuration for exact functional simulation in tests.
+    pub fn tiny(tm: usize, tn: usize, tz: usize, tr: usize, tc: usize) -> AccelConfig {
+        AccelConfig {
+            tm,
+            tn,
+            tz,
+            tr,
+            tc,
+            batch: 1,
+            ..AccelConfig::platform_defaults()
+        }
+    }
+
+    /// Total PE count `T_m·T_n·T_z·T_r·T_c`.
+    pub fn total_pes(&self) -> usize {
+        self.tm * self.tn * self.tz * self.tr * self.tc
+    }
+
+    /// Peak MACs per cycle (one multiplier per PE).
+    pub fn peak_macs_per_cycle(&self) -> usize {
+        self.total_pes()
+    }
+
+    /// Peak *useful* arithmetic throughput in TOPS (2 ops per MAC).
+    pub fn peak_tops(&self) -> f64 {
+        2.0 * self.total_pes() as f64 * self.freq_mhz * 1e6 / 1e12
+    }
+
+    /// Bytes per element of the datapath.
+    pub fn elem_bytes(&self) -> usize {
+        self.data_width_bits / 8
+    }
+
+    /// Number of adders in the adder trees:
+    /// `T_m · T_c · T_z · log₂(T_n)` (§IV-A).
+    pub fn adder_tree_adders(&self) -> usize {
+        self.tm * self.tc * self.tz * crate::util::ceil_log2(self.tn) as usize
+    }
+
+    /// Cycle time in seconds.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / (self.freq_mhz * 1e6)
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tm == 0 || self.tn == 0 || self.tz == 0 || self.tr == 0 || self.tc == 0 {
+            return Err("all T_* must be positive".into());
+        }
+        if !self.tn.is_power_of_two() {
+            return Err(format!("T_n={} must be a power of two (adder tree)", self.tn));
+        }
+        if self.data_width_bits % 8 != 0 {
+            return Err("data width must be byte-aligned".into());
+        }
+        if self.batch == 0 {
+            return Err("batch must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_have_2048_pes() {
+        assert_eq!(AccelConfig::paper_2d().total_pes(), 2048);
+        assert_eq!(AccelConfig::paper_3d().total_pes(), 2048);
+    }
+
+    #[test]
+    fn peak_tops_is_0_82() {
+        let t = AccelConfig::paper_2d().peak_tops();
+        assert!((t - 0.8192).abs() < 1e-9, "peak useful TOPS {t}");
+    }
+
+    #[test]
+    fn adder_tree_counts() {
+        // 2D point: 2*4*1*log2(64)=48; 3D point: 2*4*4*log2(16)=128
+        assert_eq!(AccelConfig::paper_2d().adder_tree_adders(), 48);
+        assert_eq!(AccelConfig::paper_3d().adder_tree_adders(), 128);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(AccelConfig::paper_2d().validate().is_ok());
+        assert!(AccelConfig::paper_3d().validate().is_ok());
+        let mut bad = AccelConfig::paper_2d();
+        bad.tn = 48; // not a power of two
+        assert!(bad.validate().is_err());
+        let mut bad = AccelConfig::paper_2d();
+        bad.tr = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn paper_for_selects_by_dims() {
+        assert_eq!(AccelConfig::paper_for(Dims::D2).tn, 64);
+        assert_eq!(AccelConfig::paper_for(Dims::D3).tz, 4);
+    }
+}

@@ -1,0 +1,137 @@
+//! Bounded FIFOs — the Overlap FIFOs (FIFO-V / FIFO-H / FIFO-D) and
+//! Result FIFOs of the PE microarchitecture (Fig. 2, right).
+//!
+//! The functional simulator uses these to carry overlap products
+//! between adjacent PEs; occupancy high-water marks size the hardware
+//! FIFOs in the resource model.
+
+use std::collections::VecDeque;
+
+/// Which overlap direction a FIFO serves (Fig. 2: vertical, horizontal,
+/// depth). `Depth` is disabled in 2D mode (§IV-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OverlapDir {
+    Vertical,
+    Horizontal,
+    Depth,
+}
+
+/// A bounded FIFO with occupancy statistics.
+#[derive(Clone, Debug)]
+pub struct Fifo<T> {
+    q: VecDeque<T>,
+    capacity: usize,
+    /// High-water mark of occupancy over the FIFO's lifetime.
+    pub max_occupancy: usize,
+    /// Total number of pushes (traffic counter).
+    pub total_pushes: u64,
+}
+
+/// Error returned when pushing into a full FIFO — the functional
+/// simulator treats this as a hardware design error (FIFOs must be
+/// sized so overlap traffic never backs up; see `sizing` tests).
+#[derive(Debug, PartialEq, Eq)]
+pub struct FifoFull;
+
+impl<T> Fifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "zero-capacity FIFO");
+        Fifo {
+            q: VecDeque::with_capacity(capacity),
+            capacity,
+            max_occupancy: 0,
+            total_pushes: 0,
+        }
+    }
+
+    pub fn push(&mut self, v: T) -> Result<(), FifoFull> {
+        if self.q.len() >= self.capacity {
+            return Err(FifoFull);
+        }
+        self.q.push_back(v);
+        self.total_pushes += 1;
+        if self.q.len() > self.max_occupancy {
+            self.max_occupancy = self.q.len();
+        }
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Drain everything (end-of-pass flush).
+    pub fn drain_all(&mut self) -> Vec<T> {
+        self.q.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_occupancy() {
+        let mut f: Fifo<u32> = Fifo::new(4);
+        f.push(1).unwrap();
+        f.push(2).unwrap();
+        f.push(3).unwrap();
+        assert_eq!(f.max_occupancy, 3);
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        f.push(4).unwrap();
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), Some(4));
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.total_pushes, 4);
+        assert_eq!(f.max_occupancy, 3, "high-water mark persists");
+    }
+
+    #[test]
+    fn fifo_full_rejects() {
+        let mut f: Fifo<u8> = Fifo::new(2);
+        f.push(1).unwrap();
+        f.push(2).unwrap();
+        assert!(f.is_full());
+        assert_eq!(f.push(3), Err(FifoFull));
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.total_pushes, 2, "rejected push not counted");
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut f: Fifo<u8> = Fifo::new(8);
+        for i in 0..5 {
+            f.push(i).unwrap();
+        }
+        let all = f.drain_all();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-capacity")]
+    fn zero_capacity_panics() {
+        let _: Fifo<u8> = Fifo::new(0);
+    }
+}

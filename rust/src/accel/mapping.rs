@@ -1,0 +1,119 @@
+//! The uniform 2D/3D mapping (§IV-C).
+//!
+//! The same physical mesh (`T_m` groups × `T_n × T_z` arrays of
+//! `T_r × T_c` PEs) serves both dimensionalities:
+//!
+//! * **3D**: `T_z` arrays cover `T_z` consecutive input depth planes of
+//!   one input channel; `T_n` channels in parallel; FIFO-D carries the
+//!   depth-direction overlaps between adjacent arrays.
+//! * **2D**: there is no depth, so the `T_z` arrays are re-purposed as
+//!   additional *channel* parallelism — `T_n · T_z` input feature maps
+//!   in flight, FIFO-D disabled. "The dataflow in the PE arrays are
+//!   identical when mapping 2D and 3D DCNNs" — only this fold changes.
+
+use crate::dcnn::{Dims, LayerSpec};
+
+use super::config::AccelConfig;
+
+/// How a layer's loop nest is folded onto the physical mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mapping {
+    /// Parallel input channels (`T_n` physical, × `T_z` folded for 2D).
+    pub chan_par: usize,
+    /// Parallel depth planes (`T_z` for 3D, 1 for 2D).
+    pub depth_par: usize,
+    /// Parallel output channels (`T_m`).
+    pub out_par: usize,
+    /// FIFO-D active? (3D only.)
+    pub fifo_d_enabled: bool,
+    /// MAC cycles one PE spends per activation (`K^d`).
+    pub macs_per_activation: usize,
+    /// Extra stall cycles per activation for depth-overlap exchange
+    /// (3D only, `K²·(K−S)` products crossing FIFO-D per activation,
+    /// one per cycle through the single FIFO-D port — see
+    /// `AccelConfig::depth_overlap_stall`).
+    pub stall_per_activation: usize,
+}
+
+impl Mapping {
+    /// Fold `layer` onto `cfg`'s mesh.
+    pub fn for_layer(cfg: &AccelConfig, layer: &LayerSpec) -> Mapping {
+        let k = layer.k;
+        match layer.dims {
+            Dims::D2 => Mapping {
+                chan_par: cfg.tn * cfg.tz,
+                depth_par: 1,
+                out_par: cfg.tm,
+                fifo_d_enabled: false,
+                macs_per_activation: k * k,
+                stall_per_activation: 0,
+            },
+            Dims::D3 => {
+                let stall = if cfg.depth_overlap_stall && layer.k > layer.s {
+                    k * k * (k - layer.s)
+                } else {
+                    0
+                };
+                Mapping {
+                    chan_par: cfg.tn,
+                    depth_par: cfg.tz,
+                    out_par: cfg.tm,
+                    fifo_d_enabled: true,
+                    macs_per_activation: k * k * k,
+                    stall_per_activation: stall,
+                }
+            }
+        }
+    }
+
+    /// Cycles one PE needs to fully process one resident activation.
+    pub fn cycles_per_activation(&self) -> usize {
+        self.macs_per_activation + self.stall_per_activation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn mapping_2d_folds_tz_into_channels() {
+        let cfg = AccelConfig::paper_2d();
+        let layer = &zoo::dcgan().layers[0];
+        let m = Mapping::for_layer(&cfg, layer);
+        assert_eq!(m.chan_par, 64); // tn=64 · tz=1
+        assert_eq!(m.depth_par, 1);
+        assert!(!m.fifo_d_enabled);
+        assert_eq!(m.macs_per_activation, 9);
+        assert_eq!(m.stall_per_activation, 0);
+
+        // Running a 2D net on the 3D operating point still folds T_z.
+        let cfg3 = AccelConfig::paper_3d();
+        let m = Mapping::for_layer(&cfg3, layer);
+        assert_eq!(m.chan_par, 64); // 16 · 4 — same parallelism, §IV-C
+    }
+
+    #[test]
+    fn mapping_3d_uses_depth() {
+        let cfg = AccelConfig::paper_3d();
+        let layer = &zoo::gan3d().layers[0];
+        let m = Mapping::for_layer(&cfg, layer);
+        assert_eq!(m.chan_par, 16);
+        assert_eq!(m.depth_par, 4);
+        assert!(m.fifo_d_enabled);
+        assert_eq!(m.macs_per_activation, 27);
+        assert_eq!(m.stall_per_activation, 0, "concurrent FIFO-D port by default");
+        assert_eq!(m.cycles_per_activation(), 27);
+    }
+
+    #[test]
+    fn stall_ablation_serializes_fifo_d() {
+        let mut cfg = AccelConfig::paper_3d();
+        cfg.depth_overlap_stall = true;
+        let layer = &zoo::gan3d().layers[0];
+        let m = Mapping::for_layer(&cfg, layer);
+        assert_eq!(m.stall_per_activation, 9); // K²(K−S) = 9·1
+        assert_eq!(m.cycles_per_activation(), 36);
+    }
+}

@@ -1,0 +1,121 @@
+//! DDR + memory controller model (§IV-A).
+//!
+//! The VC709 carries two 4 GB DDR3 SODIMMs. We model the controller as
+//! a bandwidth server with a fixed efficiency factor and per-burst
+//! latency; the timing tier overlaps memory time with compute time
+//! (double buffering), taking the max plus the un-overlappable
+//! first-load / last-store edges.
+
+use super::config::AccelConfig;
+
+/// A DDR transfer request (direction only matters for stats).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Read,
+    Write,
+}
+
+/// Simple bandwidth-server DDR model.
+#[derive(Clone, Debug)]
+pub struct DdrModel {
+    /// Effective bandwidth, bytes per second.
+    pub bytes_per_s: f64,
+    /// Fixed latency per burst (row activation + controller), seconds.
+    pub burst_latency_s: f64,
+    /// Burst size in bytes (one BL8 × 64-bit channel).
+    pub burst_bytes: usize,
+}
+
+impl DdrModel {
+    pub fn from_config(cfg: &AccelConfig) -> DdrModel {
+        DdrModel {
+            bytes_per_s: cfg.ddr_gbps * 1e9,
+            burst_latency_s: 50e-9,
+            burst_bytes: 64,
+        }
+    }
+
+    /// Seconds to move `bytes` (streaming, latency amortized across
+    /// bursts in flight — only the first burst's latency is exposed).
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.burst_latency_s + bytes as f64 / self.bytes_per_s
+    }
+
+    /// Cycles (at `freq_mhz`) to move `bytes`.
+    pub fn transfer_cycles(&self, bytes: u64, freq_mhz: f64) -> u64 {
+        (self.transfer_s(bytes) * freq_mhz * 1e6).ceil() as u64
+    }
+}
+
+/// Aggregate DDR traffic statistics collected by a simulation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DdrStats {
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    pub transactions: u64,
+}
+
+impl DdrStats {
+    pub fn record(&mut self, dir: Dir, bytes: u64) {
+        match dir {
+            Dir::Read => self.read_bytes += bytes,
+            Dir::Write => self.write_bytes += bytes,
+        }
+        self.transactions += 1;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.read_bytes + self.write_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_linear_in_bytes() {
+        let m = DdrModel {
+            bytes_per_s: 1e9,
+            burst_latency_s: 0.0,
+            burst_bytes: 64,
+        };
+        assert!((m.transfer_s(1_000_000) - 1e-3).abs() < 1e-12);
+        assert_eq!(m.transfer_s(0), 0.0);
+    }
+
+    #[test]
+    fn latency_exposed_once() {
+        let m = DdrModel {
+            bytes_per_s: 1e9,
+            burst_latency_s: 100e-9,
+            burst_bytes: 64,
+        };
+        let t = m.transfer_s(64);
+        assert!(t > 100e-9 && t < 200e-9);
+    }
+
+    #[test]
+    fn cycles_round_up() {
+        let m = DdrModel {
+            bytes_per_s: 19.2e9,
+            burst_latency_s: 0.0,
+            burst_bytes: 64,
+        };
+        // 19.2 GB/s at 200 MHz = 96 B/cycle
+        assert_eq!(m.transfer_cycles(96, 200.0), 1);
+        assert_eq!(m.transfer_cycles(97, 200.0), 2);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = DdrStats::default();
+        s.record(Dir::Read, 100);
+        s.record(Dir::Write, 50);
+        assert_eq!(s.total_bytes(), 150);
+        assert_eq!(s.transactions, 2);
+    }
+}

@@ -1,0 +1,431 @@
+//! The full computation engine: `T_m` groups × `T_n × T_z` PE arrays,
+//! walked by the [`Schedule`], reduced by the adder trees, accumulated
+//! into the output buffer — the functional tier's core.
+//!
+//! Unifies 2D and 3D exactly as §IV-C describes: a 2D layer is run
+//! with `kd = 1`, depth folded out, and the `T_z` arrays re-purposed
+//! as extra channel parallelism (FIFO-D never fires — asserted in
+//! tests).
+
+use crate::dcnn::{Dims, LayerSpec};
+use crate::fixed::{Acc48, Q88};
+use crate::tensor::{Volume, WeightsOIDHW};
+use crate::util::ceil_log2;
+
+use super::config::AccelConfig;
+use super::fifo::OverlapDir;
+use super::pe_array::{owner_index, PassCtx, PeArray, Routed};
+use super::schedule::Schedule;
+
+/// Event-level statistics from a functional run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FunctionalStats {
+    /// Compute cycles, incremented with the same granularity the
+    /// timing tier charges (asserted equal in the cross-check test).
+    pub compute_cycles: u64,
+    pub macs: u64,
+    pub fifo_v_pushes: u64,
+    pub fifo_h_pushes: u64,
+    pub fifo_d_pushes: u64,
+    /// Products accumulated directly in the output buffer because the
+    /// owner activation was not resident in the pass.
+    pub spills: u64,
+    pub max_fifo_occupancy: usize,
+    pub passes: u64,
+}
+
+/// The functional mesh.
+pub struct Mesh {
+    cfg: AccelConfig,
+    sched: Schedule,
+    /// Arrays indexed `[m][n][z]` (flattened).
+    arrays: Vec<PeArray>,
+    pub stats: FunctionalStats,
+}
+
+impl Mesh {
+    pub fn new(cfg: &AccelConfig, layer: &LayerSpec) -> Mesh {
+        assert_eq!(
+            cfg.batch, 1,
+            "functional tier simulates one inference at a time"
+        );
+        let sched = Schedule::new(cfg, layer);
+        let k_vol = layer.kernel_volume();
+        // FIFO sized for the worst case: all K^d products of one
+        // activation overlap (S=1).
+        let fifo_cap = k_vol * 4 + 8;
+        let n_arrays = cfg.tm * cfg.tn * cfg.tz;
+        Mesh {
+            cfg: cfg.clone(),
+            sched,
+            arrays: (0..n_arrays)
+                .map(|_| PeArray::new(cfg.tr, cfg.tc, k_vol, fifo_cap))
+                .collect(),
+            stats: FunctionalStats::default(),
+        }
+    }
+
+    #[inline]
+    fn array_index(&self, m: usize, n: usize, z: usize) -> usize {
+        (m * self.cfg.tn + n) * self.cfg.tz + z
+    }
+
+    /// Run a full layer. `input` is `C×D×H×W` (D = 1 for 2D layers);
+    /// `weights` are `O×I×Kd×Kh×Kw` (`Kd = 1` for 2D). Returns the
+    /// output over the **full** Eq. (1) extent (crop is the caller's
+    /// write-back step, as in the hardware).
+    pub fn run(
+        &mut self,
+        layer: &LayerSpec,
+        input: &Volume<Q88>,
+        weights: &WeightsOIDHW<Q88>,
+    ) -> Volume<Q88> {
+        assert_eq!(input.c, layer.in_c);
+        assert_eq!(input.d, layer.in_d);
+        let kd = if layer.dims == Dims::D3 { layer.k } else { 1 };
+        assert_eq!(weights.kd, kd, "2D layers carry kd=1 weights");
+
+        let out_d = layer.out_full_d();
+        let out_h = layer.out_full_h();
+        let out_w = layer.out_full_w();
+        let mut grid: Vec<Acc48> = vec![Acc48::ZERO; layer.out_c * out_d * out_h * out_w];
+
+        let sched = self.sched.clone();
+        let mapping = sched.mapping;
+        let cpa = mapping.cycles_per_activation() as u64;
+        let (tr, tc, tn) = (self.cfg.tr, self.cfg.tc, self.cfg.tn);
+
+        for oc_blk in 0..sched.oc_blocks {
+            // weight-barrier pipeline refill
+            self.stats.compute_cycles += tc as u64;
+            for ic_blk in 0..sched.ic_blocks {
+                for d_blk in 0..sched.d_blocks {
+                    let d_lo = d_blk * mapping.depth_par;
+                    let d_hi = (d_lo + mapping.depth_par).min(layer.in_d);
+                    for ht in 0..sched.h_tiles {
+                        for wt in 0..sched.w_tiles {
+                            self.run_one_pass(
+                                layer,
+                                input,
+                                weights,
+                                &mut grid,
+                                (out_d, out_h, out_w),
+                                oc_blk,
+                                ic_blk,
+                                d_lo,
+                                d_hi,
+                                ht * tr,
+                                wt * tc,
+                                kd,
+                            );
+                            self.stats.compute_cycles += cpa;
+                            self.stats.passes += 1;
+                        }
+                    }
+                }
+            }
+            // adder-tree drain per accumulation group
+            self.stats.compute_cycles += sched.d_blocks as u64 * ceil_log2(tn) as u64;
+        }
+
+        // Collect statistics from the hardware structures.
+        let mut macs = 0;
+        let mut v = 0;
+        let mut h = 0;
+        let mut occ = 0;
+        for arr in &self.arrays {
+            v += arr.v_pushes;
+            h += arr.h_pushes;
+            macs += arr.total_macs();
+            occ = occ.max(arr.max_fifo_occupancy());
+        }
+        self.stats.macs = macs;
+        self.stats.fifo_v_pushes = v;
+        self.stats.fifo_h_pushes = h;
+        self.stats.max_fifo_occupancy = occ;
+
+        Volume::from_vec(
+            layer.out_c,
+            out_d,
+            out_h,
+            out_w,
+            grid.into_iter().map(|a| a.to_q88()).collect(),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_one_pass(
+        &mut self,
+        layer: &LayerSpec,
+        input: &Volume<Q88>,
+        weights: &WeightsOIDHW<Q88>,
+        grid: &mut [Acc48],
+        out_ext: (usize, usize, usize),
+        oc_blk: usize,
+        ic_blk: usize,
+        d_lo: usize,
+        d_hi: usize,
+        h0: usize,
+        w0: usize,
+        kd: usize,
+    ) {
+        let (out_d, out_h, out_w) = out_ext;
+        let grid_at =
+            |o: usize, z: usize, y: usize, x: usize| ((o * out_d + z) * out_h + y) * out_w + x;
+        let mapping = self.sched.mapping;
+        let (tm, tn, tz, tr, tc) = (
+            self.cfg.tm,
+            self.cfg.tn,
+            self.cfg.tz,
+            self.cfg.tr,
+            self.cfg.tc,
+        );
+        let fold_2d = layer.dims == Dims::D2;
+        let mk_ctx = |d: usize| PassCtx {
+            d,
+            h0,
+            w0,
+            in_d: layer.in_d,
+            in_h: layer.in_h,
+            in_w: layer.in_w,
+            k: layer.k,
+            kd,
+            s: layer.s,
+            d_lo,
+            d_hi,
+        };
+
+        for m in 0..tm {
+            let oc = oc_blk * tm + m;
+            if oc >= layer.out_c {
+                continue; // edge oc block: whole group idle
+            }
+            let mut depth_msgs: Vec<(usize, Routed)> = Vec::new(); // (n, routed)
+            for n in 0..tn {
+                for z in 0..tz {
+                    // channel and depth plane this array serves
+                    let chan = if fold_2d {
+                        ic_blk * mapping.chan_par + z * tn + n
+                    } else {
+                        ic_blk * mapping.chan_par + n
+                    };
+                    let d = if fold_2d { 0 } else { d_lo + z };
+                    let idx = self.array_index(m, n, z);
+                    let active = chan < layer.in_c && (fold_2d || d < d_hi);
+                    if !active {
+                        let ctx = mk_ctx(d.min(layer.in_d - 1));
+                        self.arrays[idx].load_pass(&ctx, weights.kernel(0, 0), |_, _| None);
+                        continue;
+                    }
+                    let ctx = mk_ctx(d);
+                    let kernel = weights.kernel(oc, chan);
+                    self.arrays[idx]
+                        .load_pass(&ctx, kernel, |hh, ww| Some(input.at(chan, d, hh, ww)));
+                    let external = self.arrays[idx].compute_pass(&ctx);
+                    for r in external {
+                        depth_msgs.push((n, r));
+                    }
+                }
+            }
+
+            // Deliver depth overlaps to the adjacent plane's array
+            // (same group, same channel slot) or spill to the grid.
+            for (n, routed) in depth_msgs {
+                match routed {
+                    Routed::Internal => {}
+                    Routed::Depth { target_d, msg } => {
+                        debug_assert!(!fold_2d);
+                        let tz_slot = target_d - d_lo;
+                        debug_assert!(tz_slot < tz);
+                        let idx = self.array_index(m, n, tz_slot);
+                        let oh_own = owner_index(msg.oy, layer.k, layer.s, layer.in_h);
+                        let ow_own = owner_index(msg.ox, layer.k, layer.s, layer.in_w);
+                        let (r, c) = (oh_own - h0, ow_own - w0);
+                        self.arrays[idx]
+                            .pe_mut(r, c)
+                            .receive(OverlapDir::Depth, msg)
+                            .expect("FIFO-D overflow");
+                        self.stats.fifo_d_pushes += 1;
+                    }
+                    Routed::Spill(msg) => {
+                        grid[grid_at(oc, msg.oz, msg.oy, msg.ox)].add_wide(msg.wide);
+                        self.stats.spills += 1;
+                    }
+                }
+            }
+
+            // Drain FIFOs, then adder-tree-reduce across T_n and
+            // accumulate into the output grid.
+            for z in 0..tz {
+                let d = if fold_2d { 0 } else { d_lo + z };
+                if !fold_2d && d >= d_hi {
+                    continue;
+                }
+                for n in 0..tn {
+                    let ctx = mk_ctx(d);
+                    let idx = self.array_index(m, n, z);
+                    self.arrays[idx].drain_pass(&ctx);
+                }
+                let k = layer.k;
+                for r in 0..tr {
+                    for c in 0..tc {
+                        let h = h0 + r;
+                        let w = w0 + c;
+                        if h >= layer.in_h || w >= layer.in_w {
+                            continue;
+                        }
+                        for kz in 0..kd {
+                            for ky in 0..k {
+                                for kx in 0..k {
+                                    let k_idx = (kz * k + ky) * k + kx;
+                                    // adder tree: binary reduction over
+                                    // T_n partials. Integer adds are
+                                    // associative, so a running sum is
+                                    // bit-identical to the tree
+                                    // (asserted in adder_tree tests);
+                                    // no per-element Vec (§Perf).
+                                    let mut sum = Acc48::ZERO;
+                                    for n in 0..tn {
+                                        sum.add(
+                                            self.arrays[self.array_index(m, n, z)].pe(r, c).local
+                                                [k_idx],
+                                        );
+                                    }
+                                    if sum != Acc48::ZERO {
+                                        let oz = if kd > 1 { d * layer.s + kz } else { 0 };
+                                        let oy = h * layer.s + ky;
+                                        let ox = w * layer.s + kx;
+                                        grid[grid_at(oc, oz, oy, ox)].add(sum);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+    use crate::dcnn::{LayerData, LayerDataQ};
+    use crate::func::deconv_q::{deconv2d_iom_q, deconv3d_iom_q};
+    use crate::tensor::FeatureMap;
+
+    /// Promote 2D data to the unified D=1 / kd=1 representation.
+    pub(crate) fn promote_2d(
+        input: &FeatureMap<Q88>,
+        w: &crate::tensor::WeightsOIHW<Q88>,
+    ) -> (Volume<Q88>, WeightsOIDHW<Q88>) {
+        let vol = Volume::from_vec(input.c, 1, input.h, input.w, input.data().to_vec());
+        let w3 = WeightsOIDHW::from_vec(w.o, w.i, 1, w.kh, w.kw, w.data().to_vec());
+        (vol, w3)
+    }
+
+    #[test]
+    fn mesh_matches_golden_2d() {
+        let spec = &zoo::tiny_2d().layers[0]; // 4ch 4x4 -> 4ch
+        let q = LayerData::synth(spec, 11).quantize();
+        let (input, weights) = match &q {
+            LayerDataQ::D2 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let golden = deconv2d_iom_q(input, weights, spec.s);
+        let (vol, w3) = promote_2d(input, weights);
+        let cfg = AccelConfig::tiny(2, 2, 1, 2, 2);
+        let mut mesh = Mesh::new(&cfg, spec);
+        let out = mesh.run(spec, &vol, &w3);
+        assert_eq!(out.c, golden.c);
+        for o in 0..out.c {
+            for y in 0..out.h {
+                for x in 0..out.w {
+                    assert_eq!(
+                        out.at(o, 0, y, x),
+                        golden.at(o, y, x),
+                        "mismatch at ({o},{y},{x})"
+                    );
+                }
+            }
+        }
+        assert!(mesh.stats.macs > 0);
+        assert_eq!(mesh.stats.fifo_d_pushes, 0, "FIFO-D disabled in 2D mode");
+    }
+
+    #[test]
+    fn mesh_matches_golden_3d() {
+        let spec = &zoo::tiny_3d().layers[0]; // 4ch 2^3 -> 4ch
+        let q = LayerData::synth(spec, 13).quantize();
+        let (input, weights) = match &q {
+            LayerDataQ::D3 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let golden = deconv3d_iom_q(input, weights, spec.s);
+        let cfg = AccelConfig::tiny(2, 2, 2, 2, 2);
+        let mut mesh = Mesh::new(&cfg, spec);
+        let out = mesh.run(spec, input, weights);
+        for o in 0..out.c {
+            for z in 0..out.d {
+                for y in 0..out.h {
+                    for x in 0..out.w {
+                        assert_eq!(
+                            out.at(o, z, y, x),
+                            golden.at(o, z, y, x),
+                            "mismatch at ({o},{z},{y},{x})"
+                        );
+                    }
+                }
+            }
+        }
+        assert!(
+            mesh.stats.fifo_d_pushes > 0,
+            "3D runs move depth overlaps through FIFO-D"
+        );
+    }
+
+    #[test]
+    fn mac_count_equals_useful_macs() {
+        let spec = &zoo::tiny_2d().layers[0];
+        let q = LayerData::synth(spec, 3).quantize();
+        let (input, weights) = match &q {
+            LayerDataQ::D2 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let (vol, w3) = promote_2d(input, weights);
+        let cfg = AccelConfig::tiny(2, 4, 1, 4, 4);
+        let mut mesh = Mesh::new(&cfg, spec);
+        mesh.run(spec, &vol, &w3);
+        assert_eq!(mesh.stats.macs, spec.op_counts().useful_macs);
+    }
+
+    #[test]
+    fn cycles_match_timing_tier() {
+        // the cross-check that licenses the timing tier for the paper
+        // figures
+        for (spec, cfg) in [
+            (&zoo::tiny_2d().layers[0], AccelConfig::tiny(2, 2, 1, 2, 2)),
+            (&zoo::tiny_3d().layers[0], AccelConfig::tiny(2, 2, 2, 2, 2)),
+        ] {
+            let sched = Schedule::new(&cfg, spec);
+            let q = LayerData::synth(spec, 3).quantize();
+            let mut mesh = Mesh::new(&cfg, spec);
+            match &q {
+                LayerDataQ::D2 { input, weights } => {
+                    let (vol, w3) = promote_2d(input, weights);
+                    mesh.run(spec, &vol, &w3);
+                }
+                LayerDataQ::D3 { input, weights } => {
+                    mesh.run(spec, input, weights);
+                }
+            }
+            assert_eq!(
+                mesh.stats.compute_cycles,
+                sched.compute_cycles(&cfg),
+                "{}: functional cycles == analytic cycles",
+                spec.name
+            );
+        }
+    }
+}

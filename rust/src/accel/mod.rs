@@ -1,0 +1,55 @@
+//! The paper's system contribution: a uniform 2D/3D deconvolution
+//! accelerator (Fig. 2), modelled at two fidelity tiers.
+//!
+//! * [`functional`] — an event-level simulation of the PE mesh on real
+//!   Q8.8 data: every product, every overlap-FIFO transfer, every
+//!   adder-tree reduction. Bit-exact against
+//!   [`crate::func::deconv_q`]; used on small layers and in tests.
+//! * [`timing`] — an analytic cycle model driven by the *same*
+//!   schedule enumeration ([`schedule`]). Used for the full benchmark
+//!   layers of Fig. 6/7 (simulating 3D-GAN product-by-product would be
+//!   pointless: the functional tier proves the timing tier's cycle
+//!   arithmetic on small shapes, and cycles are additive over the
+//!   schedule).
+//!
+//! Components map 1:1 onto Fig. 2: [`pe::Pe`] (Ra/Rw register files,
+//! multiplier, overlap FIFOs), [`pe_array::PeArray`] (T_r × T_c PEs),
+//! [`mesh::Mesh`] (T_m groups of T_n × T_z arrays), [`adder_tree`]
+//! (T_m·T_c·T_z·log₂T_n adders), [`buffers`] (input/weight/output
+//! on-chip buffers), [`memory`] (DDR + memory controller).
+
+pub mod adder_tree;
+pub mod buffers;
+pub mod config;
+pub mod dse;
+pub mod fifo;
+pub mod functional;
+pub mod mapping;
+pub mod memory;
+pub mod mesh;
+pub mod metrics;
+pub mod oom;
+pub mod pe;
+pub mod plan;
+pub mod pe_array;
+pub mod schedule;
+pub mod timing;
+
+pub use config::AccelConfig;
+pub use mapping::Mapping;
+pub use metrics::{BoundBy, LayerMetrics, NetworkMetrics};
+pub use schedule::Schedule;
+
+use crate::dcnn::LayerSpec;
+
+/// Simulate one layer on the accelerator (timing tier, batch from
+/// `cfg.batch`). The one-call entry point used by benches and the CLI.
+pub fn simulate_layer(cfg: &AccelConfig, layer: &LayerSpec) -> LayerMetrics {
+    timing::simulate(cfg, layer)
+}
+
+/// Simulate a whole network layer-by-layer.
+pub fn simulate_network(cfg: &AccelConfig, net: &crate::dcnn::Network) -> NetworkMetrics {
+    let layers = net.layers.iter().map(|l| timing::simulate(cfg, l)).collect();
+    NetworkMetrics::new(net.name, layers)
+}

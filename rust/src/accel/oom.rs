@@ -1,0 +1,113 @@
+//! OOM (output-oriented mapping) timing model — the baseline the
+//! paper's related work (refs. \[11\], \[12\]) uses and that IOM beats.
+//!
+//! Under OOM each PE computes one *output* pixel: it convolves a
+//! `K^d` window of the zero-inserted input, multiplying every tap —
+//! including the inserted zeros. Same mesh, same buffers, same DDR;
+//! only the mapping discipline changes, which isolates the paper's
+//! contribution in the `ablation_iom_vs_oom` bench.
+
+use crate::dcnn::{Dims, LayerSpec};
+use crate::util::ceil_div;
+
+use super::buffers::Residency;
+use super::config::AccelConfig;
+use super::memory::DdrModel;
+use super::metrics::{dense_equivalent_macs, BoundBy, LayerMetrics};
+use super::schedule::Schedule;
+
+/// Simulate a layer under OOM.
+pub fn simulate_oom(cfg: &AccelConfig, layer: &LayerSpec) -> LayerMetrics {
+    // Output-pixel tiling over the cropped output extent.
+    let (chan_par, depth_par) = match layer.dims {
+        Dims::D2 => (cfg.tn * cfg.tz, 1),
+        Dims::D3 => (cfg.tn, cfg.tz),
+    };
+    let oc_blocks = ceil_div(layer.out_c, cfg.tm) as u64;
+    let ic_blocks = ceil_div(layer.in_c, chan_par) as u64;
+    let d_blocks = ceil_div(layer.out_d(), depth_par) as u64;
+    let h_tiles = ceil_div(layer.out_h(), cfg.tr) as u64;
+    let w_tiles = ceil_div(layer.out_w(), cfg.tc) as u64;
+    let passes = cfg.batch as u64 * oc_blocks * ic_blocks * d_blocks * h_tiles * w_tiles;
+    // every pass: K^d taps per output pixel, zeros included
+    let cpa = layer.kernel_volume() as u64;
+    let fill = oc_blocks * cfg.tc as u64;
+    let drain =
+        cfg.batch as u64 * oc_blocks * d_blocks * crate::util::ceil_log2(cfg.tn) as u64;
+    let compute_cycles = passes * cpa + fill + drain;
+
+    // identical traffic plan (same operands move)
+    let sched = Schedule::new(cfg, layer);
+    let res = Residency::plan(cfg, layer, &sched);
+    let ddr = DdrModel::from_config(cfg);
+    let memory_cycles = ddr.transfer_cycles(res.dram_bytes, cfg.freq_mhz);
+    let total_cycles = compute_cycles.max(memory_cycles);
+
+    LayerMetrics {
+        layer_name: format!("{} (OOM)", layer.name),
+        compute_cycles,
+        memory_cycles,
+        total_cycles,
+        ideal_mac_cycles: cfg.batch as u64 * layer.op_counts().useful_macs,
+        total_pes: cfg.total_pes(),
+        batch: cfg.batch,
+        dense_macs: dense_equivalent_macs(layer),
+        useful_macs: layer.op_counts().useful_macs,
+        dram_bytes: res.dram_bytes,
+        bound_by: if memory_cycles > compute_cycles {
+            BoundBy::Memory
+        } else {
+            BoundBy::Compute
+        },
+        freq_mhz: cfg.freq_mhz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::timing;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn iom_beats_oom_by_about_s_pow_d() {
+        // The paper's core claim: IOM eliminates the invalid
+        // multiplications, a ~S^d speedup on compute-bound layers.
+        let cfg = AccelConfig::paper_2d();
+        let layer = &zoo::dcgan().layers[2];
+        let iom = timing::simulate(&cfg, layer);
+        let oom = simulate_oom(&cfg, layer);
+        let speedup = oom.total_cycles as f64 / iom.total_cycles as f64;
+        assert!(
+            (3.0..5.5).contains(&speedup),
+            "2D IOM speedup ≈ S² = 4, got {speedup:.2}"
+        );
+    }
+
+    #[test]
+    fn iom_beats_oom_more_in_3d() {
+        let cfg = AccelConfig::paper_3d();
+        let layer = &zoo::gan3d().layers[2];
+        let iom = timing::simulate(&cfg, layer);
+        let oom = simulate_oom(&cfg, layer);
+        let speedup = oom.total_cycles as f64 / iom.total_cycles as f64;
+        assert!(
+            speedup > 5.0,
+            "3D IOM speedup approaches S³ = 8, got {speedup:.2}"
+        );
+    }
+
+    #[test]
+    fn oom_utilization_is_the_sparsity_complement() {
+        // OOM PE utilization ≈ 1 − sparsity (Fig. 1 ↔ §II motivation).
+        let cfg = AccelConfig::paper_2d();
+        let layer = &zoo::dcgan().layers[2];
+        let oom = simulate_oom(&cfg, layer);
+        let util = oom.pe_utilization();
+        let expected = 1.0 - layer.inserted_sparsity();
+        assert!(
+            (util - expected).abs() < 0.1,
+            "OOM util {util:.3} vs 1−sparsity {expected:.3}"
+        );
+    }
+}

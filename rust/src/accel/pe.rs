@@ -1,0 +1,169 @@
+//! One processing element (Fig. 2, right).
+//!
+//! A PE holds one input activation in its `Ra` register file, the
+//! current `K^d` kernel in `Rw`, multiplies them (one product per
+//! cycle), and accumulates into a local result block. Products that
+//! belong to a *neighbouring* PE's output block (the overlap of
+//! Fig. 5) are emitted as [`OverlapMsg`]s; incoming overlaps arrive
+//! through the FIFO-V / FIFO-H / FIFO-D queues and are added into the
+//! local block ("conditionally added with the data from the Overlap
+//! FIFOs").
+
+use crate::fixed::{Acc48, Q88};
+
+use super::fifo::{Fifo, OverlapDir};
+
+/// An overlap product in flight between PEs: the *global* output
+/// coordinate it lands on plus the wide (Q16.16) product value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OverlapMsg {
+    /// Global output coordinates (z, y, x) over the full Eq. (1) extent.
+    pub oz: usize,
+    pub oy: usize,
+    pub ox: usize,
+    /// The Q16.16 product.
+    pub wide: i32,
+}
+
+/// Processing element state.
+#[derive(Clone, Debug)]
+pub struct Pe {
+    /// Ra register: the resident activation (None when the PE is idle
+    /// in an edge pass — mesh occupancy accounting).
+    pub ra: Option<Q88>,
+    /// Rw register file: the resident `K^d` kernel.
+    pub rw: Vec<Q88>,
+    /// Local result block, one 48-bit accumulator per kernel offset.
+    pub local: Vec<Acc48>,
+    /// Incoming overlap FIFOs.
+    pub fifo_v: Fifo<OverlapMsg>,
+    pub fifo_h: Fifo<OverlapMsg>,
+    pub fifo_d: Fifo<OverlapMsg>,
+    /// Lifetime MAC counter.
+    pub macs: u64,
+}
+
+impl Pe {
+    /// `k_vol` = kernel volume; `fifo_cap` sizes each overlap FIFO.
+    pub fn new(k_vol: usize, fifo_cap: usize) -> Pe {
+        Pe {
+            ra: None,
+            rw: vec![Q88::ZERO; k_vol],
+            local: vec![Acc48::ZERO; k_vol],
+            fifo_v: Fifo::new(fifo_cap),
+            fifo_h: Fifo::new(fifo_cap),
+            fifo_d: Fifo::new(fifo_cap),
+            macs: 0,
+        }
+    }
+
+    /// Load a new activation + kernel; clears the local block.
+    pub fn load(&mut self, activation: Option<Q88>, kernel: &[Q88]) {
+        debug_assert_eq!(kernel.len(), self.rw.len());
+        self.ra = activation;
+        self.rw.copy_from_slice(kernel);
+        for a in &mut self.local {
+            *a = Acc48::ZERO;
+        }
+    }
+
+    /// Multiply the resident activation by kernel element `k_idx`,
+    /// returning the wide product (caller routes it). `None` if idle.
+    #[inline]
+    pub fn multiply(&mut self, k_idx: usize) -> Option<i32> {
+        let a = self.ra?;
+        self.macs += 1;
+        Some(a.wide_mul(self.rw[k_idx]))
+    }
+
+    /// Accumulate a wide product into the local block at `k_idx`.
+    #[inline]
+    pub fn accumulate_local(&mut self, k_idx: usize, wide: i32) {
+        self.local[k_idx].add_wide(wide);
+    }
+
+    /// Push an incoming overlap message (hardware: a neighbour writes
+    /// into this PE's FIFO).
+    pub fn receive(&mut self, dir: OverlapDir, msg: OverlapMsg) -> Result<(), super::fifo::FifoFull> {
+        match dir {
+            OverlapDir::Vertical => self.fifo_v.push(msg),
+            OverlapDir::Horizontal => self.fifo_h.push(msg),
+            OverlapDir::Depth => self.fifo_d.push(msg),
+        }
+    }
+
+    /// Drain all FIFOs, handing each message to `sink` (the mesh
+    /// resolves global coordinates to a local offset or forwards to
+    /// the output buffer).
+    pub fn drain_fifos(&mut self, mut sink: impl FnMut(OverlapMsg)) {
+        for m in self.fifo_v.drain_all() {
+            sink(m);
+        }
+        for m in self.fifo_h.drain_all() {
+            sink(m);
+        }
+        for m in self.fifo_d.drain_all() {
+            sink(m);
+        }
+    }
+
+    /// Total overlap pushes this PE has received.
+    pub fn overlap_pushes(&self) -> u64 {
+        self.fifo_v.total_pushes + self.fifo_h.total_pushes + self.fifo_d.total_pushes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiply_accumulate_round_trip() {
+        let mut pe = Pe::new(9, 16);
+        let kernel: Vec<Q88> = (0..9).map(|i| Q88::from_f32(i as f32 * 0.1)).collect();
+        pe.load(Some(Q88::from_f32(2.0)), &kernel);
+        let w = pe.multiply(3).unwrap();
+        pe.accumulate_local(3, w);
+        let got = pe.local[3].to_q88().to_f32();
+        let want = (Q88::from_f32(2.0).to_f32()) * kernel[3].to_f32();
+        assert!((got - want).abs() < 1.0 / 256.0);
+        assert_eq!(pe.macs, 1);
+    }
+
+    #[test]
+    fn idle_pe_multiplies_nothing() {
+        let mut pe = Pe::new(9, 16);
+        pe.load(None, &vec![Q88::ONE; 9]);
+        assert_eq!(pe.multiply(0), None);
+        assert_eq!(pe.macs, 0);
+    }
+
+    #[test]
+    fn load_clears_local_block() {
+        let mut pe = Pe::new(4, 8);
+        pe.load(Some(Q88::ONE), &vec![Q88::ONE; 4]);
+        let w = pe.multiply(0).unwrap();
+        pe.accumulate_local(0, w);
+        assert_ne!(pe.local[0], Acc48::ZERO);
+        pe.load(Some(Q88::ONE), &vec![Q88::ONE; 4]);
+        assert_eq!(pe.local[0], Acc48::ZERO);
+    }
+
+    #[test]
+    fn receive_and_drain() {
+        let mut pe = Pe::new(4, 8);
+        let m = OverlapMsg {
+            oz: 0,
+            oy: 1,
+            ox: 2,
+            wide: 77,
+        };
+        pe.receive(OverlapDir::Vertical, m).unwrap();
+        pe.receive(OverlapDir::Depth, m).unwrap();
+        let mut got = Vec::new();
+        pe.drain_fifos(|m| got.push(m));
+        assert_eq!(got.len(), 2);
+        assert_eq!(pe.overlap_pushes(), 2);
+        assert!(pe.fifo_v.is_empty() && pe.fifo_d.is_empty());
+    }
+}

@@ -1,0 +1,348 @@
+//! A `T_r × T_c` PE array (one "PE plane" of the 3D mesh) and the
+//! per-pass dataflow: multiply, route overlaps (FIFO-V within a
+//! column's rows, FIFO-H along a row, FIFO-D across planes), drain.
+
+use crate::fixed::Q88;
+
+use super::fifo::OverlapDir;
+use super::pe::{OverlapMsg, Pe};
+
+/// Static geometry of one pass (shared by every array in the mesh).
+#[derive(Clone, Copy, Debug)]
+pub struct PassCtx {
+    /// Tile origin in input coordinates.
+    pub d: usize, // this array's input depth plane
+    pub h0: usize,
+    pub w0: usize,
+    /// Input extents.
+    pub in_d: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    /// Kernel extents: `kd` is 1 for 2D layers, `k` otherwise.
+    pub k: usize,
+    pub kd: usize,
+    pub s: usize,
+    /// Depth-plane range resident in this pass (for FIFO-D routing):
+    /// planes `[d_lo, d_hi)` are on adjacent arrays.
+    pub d_lo: usize,
+    pub d_hi: usize,
+}
+
+/// Owner input index for output coordinate `o` along one axis: the
+/// *smallest* `i` with `i·s ≤ o < i·s + k_ext` (the paper sends
+/// overlaps from I2/I3 back to I1 — Fig. 5).
+#[inline]
+pub fn owner_index(o: usize, k_ext: usize, s: usize, in_ext: usize) -> usize {
+    let i_min = if o + 1 > k_ext {
+        (o + 1 - k_ext).div_ceil(s)
+    } else {
+        0
+    };
+    debug_assert!(i_min * s <= o && o < i_min * s + k_ext && i_min < in_ext);
+    i_min
+}
+
+/// Result of routing one product.
+#[derive(Debug)]
+pub enum Routed {
+    /// Accumulated locally or delivered to an in-array FIFO.
+    Internal,
+    /// Crosses to an adjacent depth plane: deliver to array `target_d`.
+    Depth { target_d: usize, msg: OverlapMsg },
+    /// Owner is outside the resident pass: accumulate in the output
+    /// buffer (the mesh's global grid).
+    Spill(OverlapMsg),
+}
+
+/// One PE array.
+#[derive(Clone, Debug)]
+pub struct PeArray {
+    pub tr: usize,
+    pub tc: usize,
+    pub pes: Vec<Pe>,
+    /// Statistic: products routed through V/H FIFOs.
+    pub v_pushes: u64,
+    pub h_pushes: u64,
+}
+
+impl PeArray {
+    pub fn new(tr: usize, tc: usize, k_vol: usize, fifo_cap: usize) -> PeArray {
+        PeArray {
+            tr,
+            tc,
+            pes: (0..tr * tc).map(|_| Pe::new(k_vol, fifo_cap)).collect(),
+            v_pushes: 0,
+            h_pushes: 0,
+        }
+    }
+
+    #[inline]
+    pub fn pe(&self, r: usize, c: usize) -> &Pe {
+        &self.pes[r * self.tc + c]
+    }
+
+    #[inline]
+    pub fn pe_mut(&mut self, r: usize, c: usize) -> &mut Pe {
+        &mut self.pes[r * self.tc + c]
+    }
+
+    /// Load activations (None where the tile overhangs the input edge)
+    /// and the kernel into every PE.
+    pub fn load_pass(
+        &mut self,
+        ctx: &PassCtx,
+        kernel: &[Q88],
+        mut activation: impl FnMut(usize, usize) -> Option<Q88>,
+    ) {
+        for r in 0..self.tr {
+            for c in 0..self.tc {
+                let h = ctx.h0 + r;
+                let w = ctx.w0 + c;
+                let a = if h < ctx.in_h && w < ctx.in_w {
+                    activation(h, w)
+                } else {
+                    None
+                };
+                self.pe_mut(r, c).load(a, kernel);
+            }
+        }
+    }
+
+    /// Multiply every resident activation by every kernel element and
+    /// route the products. In-array overlaps are pushed into the
+    /// target PE's FIFO-V/FIFO-H; depth overlaps and out-of-pass
+    /// products are returned for the mesh to deliver.
+    pub fn compute_pass(&mut self, ctx: &PassCtx) -> Vec<Routed> {
+        let mut external = Vec::new();
+        let k = ctx.k;
+        let kd = ctx.kd;
+        for r in 0..self.tr {
+            for c in 0..self.tc {
+                if self.pe(r, c).ra.is_none() {
+                    continue;
+                }
+                let h = ctx.h0 + r;
+                let w = ctx.w0 + c;
+                for kz in 0..kd {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let k_idx = (kz * k + ky) * k + kx;
+                            let wide = match self.pe_mut(r, c).multiply(k_idx) {
+                                Some(p) => p,
+                                None => continue,
+                            };
+                            let oz = ctx.d * ctx.s * (kd > 1) as usize
+                                + if kd > 1 { kz } else { 0 };
+                            let oy = h * ctx.s + ky;
+                            let ox = w * ctx.s + kx;
+                            let od_own = if kd > 1 {
+                                owner_index(oz, kd, ctx.s, ctx.in_d)
+                            } else {
+                                ctx.d
+                            };
+                            let oh_own = owner_index(oy, k, ctx.s, ctx.in_h);
+                            let ow_own = owner_index(ox, k, ctx.s, ctx.in_w);
+                            let msg = OverlapMsg { oz, oy, ox, wide };
+
+                            let in_tile_hw = oh_own >= ctx.h0
+                                && oh_own < ctx.h0 + self.tr
+                                && ow_own >= ctx.w0
+                                && ow_own < ctx.w0 + self.tc;
+                            if od_own == ctx.d && oh_own == h && ow_own == w {
+                                // local product
+                                self.pe_mut(r, c).accumulate_local(k_idx, wide);
+                            } else if od_own != ctx.d {
+                                // depth overlap: leaves this plane
+                                if od_own >= ctx.d_lo && od_own < ctx.d_hi && in_tile_hw {
+                                    external.push(Routed::Depth {
+                                        target_d: od_own,
+                                        msg,
+                                    });
+                                } else {
+                                    external.push(Routed::Spill(msg));
+                                }
+                            } else if oh_own >= ctx.h0
+                                && oh_own < ctx.h0 + self.tr
+                                && ow_own >= ctx.w0
+                                && ow_own < ctx.w0 + self.tc
+                            {
+                                // in-array overlap: vertical first, then
+                                // horizontal (dimension-ordered)
+                                let tr_ = oh_own - ctx.h0;
+                                let tc_ = ow_own - ctx.w0;
+                                let dir = if oh_own != h {
+                                    self.v_pushes += 1;
+                                    OverlapDir::Vertical
+                                } else {
+                                    self.h_pushes += 1;
+                                    OverlapDir::Horizontal
+                                };
+                                self.pe_mut(tr_, tc_)
+                                    .receive(dir, msg)
+                                    .expect("overlap FIFO overflow: undersized FIFO");
+                            } else {
+                                external.push(Routed::Spill(msg));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        external
+    }
+
+    /// Drain every PE's FIFOs into its local block (the owner PE adds
+    /// received overlaps at the right kernel offset).
+    pub fn drain_pass(&mut self, ctx: &PassCtx) {
+        let k = ctx.k;
+        for r in 0..self.tr {
+            for c in 0..self.tc {
+                let h = ctx.h0 + r;
+                let w = ctx.w0 + c;
+                let pe = self.pe_mut(r, c);
+                let mut msgs = Vec::new();
+                pe.drain_fifos(|m| msgs.push(m));
+                for m in msgs {
+                    // local offset inside the owner's K^d block
+                    let kz = if ctx.kd > 1 { m.oz - ctx.d * ctx.s } else { 0 };
+                    let ky = m.oy - h * ctx.s;
+                    let kx = m.ox - w * ctx.s;
+                    let k_idx = (kz * k + ky) * k + kx;
+                    pe.accumulate_local(k_idx, m.wide);
+                }
+            }
+        }
+    }
+
+    /// Total MACs across the array.
+    pub fn total_macs(&self) -> u64 {
+        self.pes.iter().map(|p| p.macs).sum()
+    }
+
+    /// Max FIFO occupancy seen across all PEs.
+    pub fn max_fifo_occupancy(&self) -> usize {
+        self.pes
+            .iter()
+            .map(|p| {
+                p.fifo_v
+                    .max_occupancy
+                    .max(p.fifo_h.max_occupancy)
+                    .max(p.fifo_d.max_occupancy)
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_index_basics() {
+        // K=3, S=2: output 0,1 owned by input 0; 2 overlaps (owner 0);
+        // 3 owned by 1; 4 overlap (owner 1)...
+        assert_eq!(owner_index(0, 3, 2, 4), 0);
+        assert_eq!(owner_index(1, 3, 2, 4), 0);
+        assert_eq!(owner_index(2, 3, 2, 4), 0, "overlap goes to the earlier PE");
+        assert_eq!(owner_index(3, 3, 2, 4), 1);
+        assert_eq!(owner_index(4, 3, 2, 4), 1);
+        assert_eq!(owner_index(5, 3, 2, 4), 2);
+    }
+
+    #[test]
+    fn owner_index_stride_1() {
+        // S=1, K=2: every output except the first overlaps
+        assert_eq!(owner_index(0, 2, 1, 4), 0);
+        assert_eq!(owner_index(1, 2, 1, 4), 0);
+        assert_eq!(owner_index(2, 2, 1, 4), 1);
+        assert_eq!(owner_index(3, 2, 1, 4), 2);
+    }
+
+    fn simple_ctx() -> PassCtx {
+        PassCtx {
+            d: 0,
+            h0: 0,
+            w0: 0,
+            in_d: 1,
+            in_h: 2,
+            in_w: 2,
+            k: 3,
+            kd: 1,
+            s: 2,
+            d_lo: 0,
+            d_hi: 1,
+        }
+    }
+
+    #[test]
+    fn pass_routes_overlaps_to_earlier_pes() {
+        let mut arr = PeArray::new(2, 2, 9, 32);
+        let ctx = simple_ctx();
+        let kernel = vec![Q88::ONE; 9];
+        arr.load_pass(&ctx, &kernel, |_, _| Some(Q88::ONE));
+        let ext = arr.compute_pass(&ctx);
+        // 2x2 inputs, all in one tile: no spills, no depth traffic
+        assert!(ext.is_empty(), "{ext:?}");
+        // overlap column (ox=2) from PEs at w=1 -> pushed to w=0 PEs;
+        // overlap row (oy=2) from PEs at h=1 -> pushed to h=0 PEs.
+        assert!(arr.v_pushes > 0);
+        assert!(arr.h_pushes > 0);
+        arr.drain_pass(&ctx);
+        // each PE performed 9 MACs
+        assert_eq!(arr.total_macs(), 4 * 9);
+    }
+
+    #[test]
+    fn edge_tile_leaves_pes_idle() {
+        let mut arr = PeArray::new(4, 4, 9, 32);
+        let ctx = PassCtx {
+            in_h: 2,
+            in_w: 3,
+            ..simple_ctx()
+        };
+        let kernel = vec![Q88::ONE; 9];
+        arr.load_pass(&ctx, &kernel, |_, _| Some(Q88::ONE));
+        arr.compute_pass(&ctx);
+        assert_eq!(arr.total_macs(), (2 * 3) * 9, "only 6 of 16 PEs active");
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap FIFO overflow")]
+    fn undersized_fifo_is_a_design_error() {
+        // Failure injection: a FIFO too small for the overlap traffic
+        // must fail loudly (hardware would deadlock/drop silently —
+        // the simulator turns that into a panic the sizing tests and
+        // DSE can rely on).
+        let mut arr = PeArray::new(2, 2, 9, 1); // capacity 1
+        let ctx = PassCtx {
+            s: 1, // S=1: every activation overlaps heavily
+            ..simple_ctx()
+        };
+        let kernel = vec![Q88::ONE; 9];
+        arr.load_pass(&ctx, &kernel, |_, _| Some(Q88::ONE));
+        let _ = arr.compute_pass(&ctx);
+    }
+
+    #[test]
+    fn out_of_tile_products_spill() {
+        // tile at origin (2,2) of a 4x4 input: products owned by
+        // activations in the previous tile must spill.
+        let mut arr = PeArray::new(2, 2, 9, 32);
+        let ctx = PassCtx {
+            h0: 2,
+            w0: 2,
+            in_h: 4,
+            in_w: 4,
+            ..simple_ctx()
+        };
+        let kernel = vec![Q88::ONE; 9];
+        arr.load_pass(&ctx, &kernel, |_, _| Some(Q88::ONE));
+        let ext = arr.compute_pass(&ctx);
+        let spills = ext
+            .iter()
+            .filter(|r| matches!(r, Routed::Spill(_)))
+            .count();
+        assert!(spills > 0, "boundary overlaps leave the tile");
+    }
+}

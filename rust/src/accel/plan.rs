@@ -1,0 +1,133 @@
+//! Schedule explainer: renders the full execution plan the simulator
+//! derives for a layer — blocking factors, residency decisions,
+//! traffic breakdown, cycle budget — as human-readable text. The
+//! `udcnn plan` subcommand exposes it; it is the first thing to look
+//! at when a layer's utilization surprises you.
+
+use crate::dcnn::LayerSpec;
+
+use super::buffers::{OperandPlace, Residency};
+use super::config::AccelConfig;
+use super::memory::DdrModel;
+use super::schedule::Schedule;
+use super::timing;
+
+fn place(p: OperandPlace) -> &'static str {
+    match p {
+        OperandPlace::Resident => "resident",
+        OperandPlace::Streamed => "streamed",
+    }
+}
+
+/// Render the execution plan for one layer.
+pub fn explain(cfg: &AccelConfig, layer: &LayerSpec) -> String {
+    let sched = Schedule::new(cfg, layer);
+    let res = Residency::plan(cfg, layer, &sched);
+    let ddr = DdrModel::from_config(cfg);
+    let m = timing::simulate_with_schedule(cfg, layer, &sched);
+    let mut s = String::new();
+    let p = |s: &mut String, line: String| {
+        s.push_str(&line);
+        s.push('\n');
+    };
+
+    p(&mut s, format!("plan for {layer}"));
+    p(&mut s, format!(
+        "  mesh: Tm={} Tn={} Tz={} Tr={} Tc={} ({} PEs @ {} MHz), batch {}",
+        cfg.tm, cfg.tn, cfg.tz, cfg.tr, cfg.tc, cfg.total_pes(), cfg.freq_mhz, cfg.batch
+    ));
+    p(&mut s, format!(
+        "  mapping: {} | chan_par={} depth_par={} | {} MACs/activation{}",
+        layer.dims,
+        sched.mapping.chan_par,
+        sched.mapping.depth_par,
+        sched.mapping.macs_per_activation,
+        if sched.mapping.fifo_d_enabled { " | FIFO-D on" } else { " | FIFO-D off" },
+    ));
+    p(&mut s, format!(
+        "  blocking: oc {} x ic {} x depth {} x tiles {}x{}  => {} passes",
+        sched.oc_blocks, sched.ic_blocks, sched.d_blocks, sched.h_tiles, sched.w_tiles,
+        sched.total_passes(),
+    ));
+    p(&mut s, format!(
+        "  residency: weights {} ({:.1} KiB) | inputs {} | outputs {}",
+        place(res.weights),
+        layer.weight_elems() as f64 * cfg.elem_bytes() as f64 / 1024.0,
+        place(res.inputs),
+        place(res.outputs),
+    ));
+    p(&mut s, format!(
+        "  DDR traffic: weights {:.1} KiB + inputs {:.1} KiB + outputs {:.1} KiB = {:.2} MiB ({} cycles)",
+        res.weight_bytes as f64 / 1024.0,
+        res.input_bytes as f64 / 1024.0,
+        res.output_bytes as f64 / 1024.0,
+        res.dram_bytes as f64 / (1024.0 * 1024.0),
+        ddr.transfer_cycles(res.dram_bytes, cfg.freq_mhz),
+    ));
+    p(&mut s, format!(
+        "  cycles: compute {} (pass {} + fill {} + drain {}) vs memory {} -> total {} ({}-bound)",
+        sched.compute_cycles(cfg),
+        sched.pass_cycles(),
+        sched.fill_cycles(cfg),
+        sched.drain_cycles(cfg),
+        m.memory_cycles,
+        m.total_cycles,
+        m.bound_by,
+    ));
+    p(&mut s, format!(
+        "  result: {:.3} ms/batch | util {:.1}% | {:.2} effective TOPS | {:.2} useful TOPS | {:.1} GB/s",
+        m.time_s() * 1e3,
+        100.0 * m.pe_utilization(),
+        m.effective_tops(cfg),
+        m.useful_tops(),
+        m.dram_gbps(),
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn explains_compute_bound_layer() {
+        let cfg = AccelConfig::paper_2d();
+        let text = explain(&cfg, &zoo::dcgan().layers[0]);
+        assert!(text.contains("compute-bound"), "{text}");
+        assert!(text.contains("oc 256 x ic 16"));
+        assert!(text.contains("weights streamed"));
+        assert!(text.contains("FIFO-D off"));
+    }
+
+    #[test]
+    fn explains_memory_bound_layer() {
+        let cfg = AccelConfig::paper_2d();
+        let text = explain(&cfg, &zoo::dcgan().layers[3]);
+        assert!(text.contains("memory-bound"), "{text}");
+        assert!(text.contains("weights resident"));
+    }
+
+    #[test]
+    fn explains_3d_layer() {
+        let cfg = AccelConfig::paper_3d();
+        let text = explain(&cfg, &zoo::gan3d().layers[0]);
+        assert!(text.contains("FIFO-D on"));
+        assert!(text.contains("27 MACs/activation"));
+    }
+
+    #[test]
+    fn totals_match_timing_tier() {
+        // the explainer must never drift from the simulator
+        let cfg = AccelConfig::paper_3d();
+        for layer in &zoo::vnet().layers {
+            let text = explain(&cfg, layer);
+            let m = timing::simulate(&cfg, layer);
+            assert!(
+                text.contains(&format!("total {}", m.total_cycles)),
+                "{}: explainer drifted",
+                layer.name
+            );
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Blocking schedule enumeration (§IV-A "we use blocking to resolve
+//! this issue"; §IV-B dataflow steps).
+//!
+//! One **pass** = one batch of `T_r × T_c` input activations resident
+//! in every active PE array, each PE performing `K^d` MACs. The
+//! schedule walks:
+//!
+//! ```text
+//! for oc_blk in ceil(N_o / out_par):          # weight barrier
+//!   for ic_blk in ceil(N_c / chan_par):
+//!     load W[oc_blk, ic_blk]                   # double-buffered
+//!     for b in batch:
+//!       for d_blk in ceil(I_D / depth_par):
+//!         for (h_tile, w_tile) in spatial tiles:
+//!           pass                               # K^d (+stall) cycles
+//! ```
+//!
+//! Both simulator tiers consume this enumeration, which is what makes
+//! the cross-check between them meaningful.
+
+use crate::dcnn::LayerSpec;
+use crate::util::{ceil_div, ceil_log2};
+
+use super::config::AccelConfig;
+use super::mapping::Mapping;
+
+/// The static schedule for one layer on one configuration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    pub mapping: Mapping,
+    /// `ceil(N_o / T_m)` output-channel blocks.
+    pub oc_blocks: usize,
+    /// `ceil(N_c / chan_par)` input-channel blocks.
+    pub ic_blocks: usize,
+    /// `ceil(I_D / depth_par)` depth blocks (1 for 2D).
+    pub d_blocks: usize,
+    /// `ceil(I_H / T_r)` × `ceil(I_W / T_c)` spatial tiles.
+    pub h_tiles: usize,
+    pub w_tiles: usize,
+    /// Batch size folded into the walk.
+    pub batch: usize,
+}
+
+impl Schedule {
+    pub fn new(cfg: &AccelConfig, layer: &LayerSpec) -> Schedule {
+        let mapping = Mapping::for_layer(cfg, layer);
+        Schedule {
+            mapping,
+            oc_blocks: ceil_div(layer.out_c, mapping.out_par),
+            ic_blocks: ceil_div(layer.in_c, mapping.chan_par),
+            d_blocks: ceil_div(layer.in_d, mapping.depth_par),
+            h_tiles: ceil_div(layer.in_h, cfg.tr),
+            w_tiles: ceil_div(layer.in_w, cfg.tc),
+            batch: cfg.batch,
+        }
+    }
+
+    /// Spatial tiles per (oc, ic, d) walk.
+    pub fn spatial_tiles(&self) -> u64 {
+        self.h_tiles as u64 * self.w_tiles as u64
+    }
+
+    /// Total passes over the whole layer (batch included).
+    pub fn total_passes(&self) -> u64 {
+        self.batch as u64
+            * self.oc_blocks as u64
+            * self.ic_blocks as u64
+            * self.d_blocks as u64
+            * self.spatial_tiles()
+    }
+
+    /// Compute cycles of the pass pipeline itself.
+    pub fn pass_cycles(&self) -> u64 {
+        self.total_passes() * self.mapping.cycles_per_activation() as u64
+    }
+
+    /// Pipeline-fill cycles: the `T_c`-column loading wavefront
+    /// (Fig. 4) must refill whenever the weight set changes (an
+    /// `oc_blk` boundary); within a block, double-buffered Ra/Rw hide
+    /// activation loading behind compute.
+    pub fn fill_cycles(&self, cfg: &AccelConfig) -> u64 {
+        self.oc_blocks as u64 * cfg.tc as u64
+    }
+
+    /// Adder-tree drain: `log₂(T_n)` pipeline stages flush once per
+    /// accumulation group (per oc_blk, per depth block, per batch item).
+    pub fn drain_cycles(&self, cfg: &AccelConfig) -> u64 {
+        let stages = ceil_log2(cfg.tn) as u64;
+        self.batch as u64 * self.oc_blocks as u64 * self.d_blocks as u64 * stages
+    }
+
+    /// Total compute cycles (excluding memory waits).
+    pub fn compute_cycles(&self, cfg: &AccelConfig) -> u64 {
+        self.pass_cycles() + self.fill_cycles(cfg) + self.drain_cycles(cfg)
+    }
+
+    /// MAC slots actually used per pass-cycle accounting: the share of
+    /// the mesh doing useful work. (Edge blocks leave PEs idle; the
+    /// metric falls out of `useful_macs / (total_pes · cycles)`.)
+    pub fn ideal_mac_cycles(&self, layer: &LayerSpec) -> u64 {
+        self.batch as u64 * layer.op_counts().useful_macs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn dcgan_l1_schedule() {
+        let cfg = AccelConfig::paper_2d();
+        let layer = &zoo::dcgan().layers[0]; // 1024ch 4x4 -> 512
+        let s = Schedule::new(&cfg, layer);
+        assert_eq!(s.oc_blocks, 256);
+        assert_eq!(s.ic_blocks, 16);
+        assert_eq!(s.d_blocks, 1);
+        assert_eq!((s.h_tiles, s.w_tiles), (1, 1));
+        assert_eq!(s.total_passes(), 8 * 256 * 16);
+        assert_eq!(s.pass_cycles(), 8 * 256 * 16 * 9);
+    }
+
+    #[test]
+    fn gan3d_l1_schedule() {
+        let cfg = AccelConfig::paper_3d();
+        let layer = &zoo::gan3d().layers[0]; // 512ch 4^3 -> 256
+        let s = Schedule::new(&cfg, layer);
+        assert_eq!(s.oc_blocks, 128);
+        assert_eq!(s.ic_blocks, 32);
+        assert_eq!(s.d_blocks, 1);
+        assert_eq!(s.spatial_tiles(), 1);
+        assert_eq!(s.mapping.macs_per_activation, 27);
+    }
+
+    #[test]
+    fn edge_blocks_round_up() {
+        let cfg = AccelConfig::paper_2d();
+        let layer = &zoo::dcgan().layers[3]; // out_c = 3, T_m = 2
+        let s = Schedule::new(&cfg, layer);
+        assert_eq!(s.oc_blocks, 2, "ceil(3/2)");
+        assert_eq!(s.h_tiles, 8);
+        assert_eq!(s.w_tiles, 8);
+    }
+
+    #[test]
+    fn utilization_upper_bound_holds() {
+        // ideal mac-cycles can never exceed pes * pass cycles
+        let cfg = AccelConfig::paper_2d();
+        for layer in &zoo::dcgan().layers {
+            let s = Schedule::new(&cfg, layer);
+            let ideal = s.ideal_mac_cycles(layer);
+            let capacity = cfg.total_pes() as u64 * s.pass_cycles();
+            assert!(ideal <= capacity, "{}", layer.name);
+        }
+    }
+
+    #[test]
+    fn perfectly_divisible_layer_saturates() {
+        // DCGAN layer 1: all dims divide the blocking exactly, so
+        // ideal == capacity over the pass cycles.
+        let cfg = AccelConfig::paper_2d();
+        let layer = &zoo::dcgan().layers[0];
+        let s = Schedule::new(&cfg, layer);
+        assert_eq!(
+            s.ideal_mac_cycles(layer),
+            cfg.total_pes() as u64 * s.pass_cycles()
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! The analytic timing tier.
+//!
+//! Consumes the [`Schedule`] enumeration, the [`Residency`] plan and
+//! the [`DdrModel`], produces [`LayerMetrics`]. Compute and memory
+//! streams are double-buffered (§IV-B "Writing back ... overlapped"),
+//! so end-to-end time is `max(compute, memory)` plus the
+//! un-overlappable first-tile load and last-tile store.
+//!
+//! The functional tier ([`super::functional`]) reproduces these cycle
+//! counts event-by-event on small layers;
+//! `rust/tests/integration_func_vs_sim.rs` pins the two tiers to each
+//! other and `benches/fig6_*` consume this tier for the paper figures.
+
+use crate::dcnn::LayerSpec;
+
+use super::buffers::Residency;
+use super::config::AccelConfig;
+use super::memory::DdrModel;
+use super::metrics::{dense_equivalent_macs, BoundBy, LayerMetrics};
+use super::schedule::Schedule;
+
+/// Simulate one layer (batch folded in from `cfg.batch`).
+pub fn simulate(cfg: &AccelConfig, layer: &LayerSpec) -> LayerMetrics {
+    cfg.validate().expect("invalid accelerator config");
+    let sched = Schedule::new(cfg, layer);
+    simulate_with_schedule(cfg, layer, &sched)
+}
+
+/// Simulate with an explicit schedule (the DSE calls this directly).
+pub fn simulate_with_schedule(
+    cfg: &AccelConfig,
+    layer: &LayerSpec,
+    sched: &Schedule,
+) -> LayerMetrics {
+    let res = Residency::plan(cfg, layer, sched);
+    let ddr = DdrModel::from_config(cfg);
+
+    let compute_cycles = sched.compute_cycles(cfg);
+    let memory_cycles = ddr.transfer_cycles(res.dram_bytes, cfg.freq_mhz);
+
+    // Un-overlappable edges: the first input tile + first weight block
+    // must land before compute starts; the last output slice drains
+    // after compute ends.
+    let eb = cfg.elem_bytes() as u64;
+    let first_w = (sched.mapping.out_par * sched.mapping.chan_par * layer.kernel_volume())
+        as u64
+        * eb;
+    let first_in =
+        (sched.mapping.chan_par * sched.mapping.depth_par * cfg.tr * cfg.tc) as u64 * eb;
+    let last_out = (sched.mapping.out_par * layer.out_spatial()) as u64 * eb;
+    let edge_cycles = ddr.transfer_cycles(first_w + first_in, cfg.freq_mhz)
+        + ddr.transfer_cycles(last_out, cfg.freq_mhz);
+
+    let steady = compute_cycles.max(memory_cycles);
+    let total_cycles = steady + edge_cycles;
+
+    let bound_by = if memory_cycles > compute_cycles {
+        BoundBy::Memory
+    } else {
+        BoundBy::Compute
+    };
+
+    LayerMetrics {
+        layer_name: layer.name.clone(),
+        compute_cycles,
+        memory_cycles,
+        total_cycles,
+        ideal_mac_cycles: sched.ideal_mac_cycles(layer),
+        total_pes: cfg.total_pes(),
+        batch: cfg.batch,
+        dense_macs: dense_equivalent_macs(layer),
+        useful_macs: layer.op_counts().useful_macs,
+        dram_bytes: res.dram_bytes,
+        bound_by,
+        freq_mhz: cfg.freq_mhz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn dcgan_l1_is_compute_bound_and_saturated() {
+        let cfg = AccelConfig::paper_2d();
+        let m = simulate(&cfg, &zoo::dcgan().layers[0]);
+        assert_eq!(m.bound_by, BoundBy::Compute);
+        assert!(
+            m.pe_utilization() > 0.9,
+            "paper Fig. 6(a): util {:.3}",
+            m.pe_utilization()
+        );
+    }
+
+    #[test]
+    fn dcgan_l4_is_memory_bound() {
+        // "the fourth layers of DCGAN and GP-GAN are bottlenecked by
+        // the memory access"
+        let cfg = AccelConfig::paper_2d();
+        let m = simulate(&cfg, &zoo::dcgan().layers[3]);
+        assert_eq!(m.bound_by, BoundBy::Memory, "{m:?}");
+        assert!(m.pe_utilization() < 0.9);
+    }
+
+    #[test]
+    fn all_2d_layers_land_in_paper_band() {
+        let cfg = AccelConfig::paper_2d();
+        for net in [zoo::dcgan(), zoo::gp_gan()] {
+            for layer in &net.layers {
+                let m = simulate(&cfg, layer);
+                let tops = m.effective_tops(&cfg);
+                assert!(
+                    (1.2..=3.6).contains(&tops),
+                    "{}: {tops:.2} TOPS outside the (relaxed) paper band",
+                    layer.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_above_90_except_memory_bound() {
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            for layer in &net.layers {
+                let m = simulate(&cfg, layer);
+                if m.bound_by == BoundBy::Compute && layer.out_c >= cfg.tm {
+                    assert!(
+                        m.pe_utilization() > 0.9,
+                        "{}: util {:.3}",
+                        layer.name,
+                        m.pe_utilization()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn useful_tops_never_exceeds_peak() {
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            for layer in &net.layers {
+                let m = simulate(&cfg, layer);
+                assert!(
+                    m.useful_tops() <= cfg.peak_tops() + 1e-9,
+                    "{}: useful {:.3} > peak {:.3}",
+                    layer.name,
+                    m.useful_tops(),
+                    cfg.peak_tops()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn effective_exceeds_useful_by_sparsity_factor() {
+        let cfg = AccelConfig::paper_2d();
+        let m = simulate(&cfg, &zoo::dcgan().layers[2]);
+        let ratio = m.effective_tops(&cfg) / m.useful_tops();
+        assert!((ratio - 4.0).abs() < 1e-6, "2D dense/useful = S² = 4, got {ratio}");
+    }
+
+    #[test]
+    fn gan3d_outperforms_2d_in_effective_tops() {
+        // The paper: "the performance of 3D deconvolution on FPGA
+        // outperforms that of 2D deconvolution."
+        let cfg2 = AccelConfig::paper_2d();
+        let cfg3 = AccelConfig::paper_3d();
+        let t2 = simulate(&cfg2, &zoo::dcgan().layers[1]).effective_tops(&cfg2);
+        let t3 = simulate(&cfg3, &zoo::gan3d().layers[1]).effective_tops(&cfg3);
+        assert!(t3 > t2, "3D {t3:.2} vs 2D {t2:.2}");
+    }
+
+    #[test]
+    fn batch_1_drops_utilization_on_weight_heavy_layers() {
+        // Sanity for the DESIGN.md §5 claim: without batching, early
+        // GAN layers are weight-bound and the paper's >90 % cannot hold.
+        let mut cfg = AccelConfig::paper_2d();
+        cfg.batch = 1;
+        let m = simulate(&cfg, &zoo::dcgan().layers[0]);
+        assert_eq!(m.bound_by, BoundBy::Memory);
+        assert!(m.pe_utilization() < 0.5);
+    }
+
+    #[test]
+    fn total_cycles_ge_parts() {
+        let cfg = AccelConfig::paper_3d();
+        for layer in &zoo::vnet().layers {
+            let m = simulate(&cfg, layer);
+            assert!(m.total_cycles >= m.compute_cycles);
+            assert!(m.total_cycles >= m.memory_cycles);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Analytic GTX 1080 model.
+//!
+//! We have no CUDA device, so the GPU column of Fig. 7 comes from an
+//! explicit roofline model with published constants. cuDNN executes
+//! `conv_transpose` as the dense backward-data convolution over the
+//! zero-inserted map (it has no zero-skipping path — exactly the
+//! inefficiency the paper's related work attacks), so its *useful*
+//! throughput on deconvolution is the dense rate divided by the
+//! insertion ratio.
+
+use crate::dcnn::{Dims, LayerSpec};
+
+/// GPU platform + efficiency model.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuModel {
+    /// Peak fp32 throughput, TFLOPS (GTX 1080: 8.873).
+    pub peak_tflops: f64,
+    /// Memory bandwidth, GB/s (GTX 1080: 320).
+    pub mem_gbps: f64,
+    /// Board power, watts.
+    pub watts: f64,
+    /// Fraction of peak cuDNN sustains on dense 2D convolution
+    /// (implicit-GEMM, K=3: ~0.45 measured in the DeepBench era).
+    pub eff_2d: f64,
+    /// Fraction of peak for dense 3D convolution (worse tiling: ~0.35).
+    pub eff_3d: f64,
+    /// Kernel-launch and framework overhead per layer, seconds.
+    pub launch_overhead_s: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        GpuModel {
+            peak_tflops: 8.873,
+            mem_gbps: 320.0,
+            watts: 180.0,
+            eff_2d: 0.45,
+            eff_3d: 0.35,
+            launch_overhead_s: 20e-6,
+        }
+    }
+}
+
+impl GpuModel {
+    /// Seconds for one inference (batch 1) of `layer`.
+    ///
+    /// Dense FLOPs over the full Eq. (1) extent at the sustained dense
+    /// rate, floored by the memory roofline (inputs + weights +
+    /// outputs at fp32), plus launch overhead.
+    pub fn layer_seconds(&self, layer: &LayerSpec) -> f64 {
+        let dense_flops = 2.0 * layer.op_counts().dense_macs as f64;
+        let eff = match layer.dims {
+            Dims::D2 => self.eff_2d,
+            Dims::D3 => self.eff_3d,
+        };
+        let t_compute = dense_flops / (self.peak_tflops * 1e12 * eff);
+        let bytes =
+            (layer.input_elems() + layer.weight_elems() + layer.output_elems()) as f64 * 4.0;
+        let t_mem = bytes / (self.mem_gbps * 1e9);
+        t_compute.max(t_mem) + self.launch_overhead_s
+    }
+
+    /// Seconds for a whole network, batch `b` (weights amortized is
+    /// already implicit: compute scales with b, launch overhead does
+    /// not re-occur per item for batched cuDNN calls).
+    pub fn network_seconds(&self, net: &crate::dcnn::Network, b: usize) -> f64 {
+        net.layers
+            .iter()
+            .map(|l| {
+                let per_item = self.layer_seconds(l) - self.launch_overhead_s;
+                per_item * b as f64 + self.launch_overhead_s
+            })
+            .sum()
+    }
+
+    /// Dense-equivalent GOPS achieved on a network at batch `b`
+    /// (same accounting as the FPGA's effective TOPS).
+    pub fn network_dense_gops(&self, net: &crate::dcnn::Network, b: usize) -> f64 {
+        let dense: u64 = net
+            .layers
+            .iter()
+            .map(crate::accel::metrics::dense_equivalent_macs)
+            .sum();
+        2.0 * dense as f64 * b as f64 / self.network_seconds(net, b) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn gpu_sustained_rate_below_peak() {
+        let gpu = GpuModel::default();
+        let net = zoo::dcgan();
+        let gops = gpu.network_dense_gops(&net, 8);
+        assert!(gops > 0.0);
+        assert!(
+            gops < gpu.peak_tflops * 1e3,
+            "sustained {gops:.0} GOPS must stay below peak"
+        );
+    }
+
+    #[test]
+    fn compute_bound_layer_time_matches_roofline() {
+        let gpu = GpuModel::default();
+        let layer = &zoo::dcgan().layers[1];
+        let t = gpu.layer_seconds(layer);
+        let dense_flops = 2.0 * layer.op_counts().dense_macs as f64;
+        let expect = dense_flops / (8.873e12 * 0.45) + 20e-6;
+        assert!((t - expect).abs() / expect < 0.05);
+    }
+
+    #[test]
+    fn memory_roofline_engages_on_thin_layers() {
+        let gpu = GpuModel::default();
+        // 1-channel huge map: almost no FLOPs, lots of bytes
+        let thin = LayerSpec::new_2d("thin", 1, 512, 512, 1, 3, 2);
+        let t = gpu.layer_seconds(&thin);
+        let bytes = (thin.input_elems() + thin.weight_elems() + thin.output_elems()) as f64 * 4.0;
+        assert!(t >= bytes / (320e9) , "memory floor applies");
+    }
+
+    #[test]
+    fn batch_scales_compute_not_overhead() {
+        let gpu = GpuModel::default();
+        let net = zoo::dcgan();
+        let t1 = gpu.network_seconds(&net, 1);
+        let t8 = gpu.network_seconds(&net, 8);
+        assert!(t8 < 8.0 * t1, "overhead amortizes");
+        assert!(t8 > 6.0 * (t1 - 4.0 * gpu.launch_overhead_s));
+    }
+
+    #[test]
+    fn gpu_3d_slower_than_2d_per_flop() {
+        let gpu = GpuModel::default();
+        let l2 = &zoo::dcgan().layers[1];
+        let l3 = &zoo::gan3d().layers[1];
+        let r2 = 2.0 * l2.op_counts().dense_macs as f64 / gpu.layer_seconds(l2);
+        let r3 = 2.0 * l3.op_counts().dense_macs as f64 / gpu.layer_seconds(l3);
+        assert!(r3 < r2, "3D efficiency factor is lower");
+    }
+}

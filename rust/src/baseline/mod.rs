@@ -1,0 +1,16 @@
+//! Comparison platforms for Fig. 7.
+//!
+//! * [`cpu`] — a real, multithreaded CPU implementation of the
+//!   benchmark layers, *measured* on the host. The paper used a
+//!   ten-core E5 at 2.8 GHz; ratios depend on the CPU generation, so
+//!   EXPERIMENTS.md reports both raw-measured and peak-normalized
+//!   ratios (see `cpu::CpuBaseline::normalize_to_e5`).
+//! * [`gpu`] — an analytic GTX 1080 model (we have no CUDA device):
+//!   published peak numbers × cuDNN efficiency factors. All model
+//!   parameters are in one struct so the claim is auditable.
+
+pub mod cpu;
+pub mod gpu;
+
+pub use cpu::CpuBaseline;
+pub use gpu::GpuModel;

@@ -1,0 +1,178 @@
+//! A minimal statistics-aware benchmark harness.
+//!
+//! The build environment is fully offline and ships no criterion
+//! crate, so `cargo bench` targets (declared `harness = false`) use
+//! this instead: warmup, repeated timed runs, median/σ reporting, and
+//! paper-style table printing via [`crate::report`].
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_s: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples_s)
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples_s)
+    }
+
+    pub fn std_s(&self) -> f64 {
+        stats::std_dev(&self.samples_s)
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.samples_s
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// "name  median ± σ (n samples)"
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12} ± {:>10} ({} samples)",
+            self.name,
+            fmt_duration(self.median_s()),
+            fmt_duration(self.std_s()),
+            self.samples_s.len()
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    /// Hard cap on total sampling time; sampling stops early past it.
+    pub max_total_s: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 2,
+            sample_iters: 10,
+            max_total_s: 10.0,
+        }
+    }
+}
+
+impl Bench {
+    /// Fast settings for CI-style runs (honours `UDCNN_BENCH_FAST`).
+    pub fn from_env() -> Bench {
+        if std::env::var_os("UDCNN_BENCH_FAST").is_some() {
+            Bench {
+                warmup_iters: 1,
+                sample_iters: 3,
+                max_total_s: 2.0,
+            }
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Time `f`, which must consume its own inputs (use
+    /// `std::hint::black_box` inside).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        let start = Instant::now();
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if start.elapsed().as_secs_f64() > self.max_total_s {
+                break;
+            }
+        }
+        BenchResult {
+            name: name.to_string(),
+            samples_s: samples,
+        }
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Print a bench header (benches call this first so `cargo bench`
+/// output is self-describing).
+pub fn header(title: &str, paper_ref: &str) {
+    println!();
+    println!("==== {title} ====");
+    println!("     reproduces: {paper_ref}");
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_samples() {
+        let b = Bench {
+            warmup_iters: 1,
+            sample_iters: 5,
+            max_total_s: 5.0,
+        };
+        let mut count = 0u32;
+        let r = b.run("noop", || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert_eq!(r.samples_s.len(), 5);
+        assert_eq!(count, 6); // warmup + samples
+        assert!(r.median_s() >= 0.0);
+        assert!(r.min_s() <= r.mean_s() + 1e-12);
+    }
+
+    #[test]
+    fn time_cap_stops_sampling() {
+        let b = Bench {
+            warmup_iters: 0,
+            sample_iters: 1000,
+            max_total_s: 0.05,
+        };
+        let r = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(20)));
+        assert!(r.samples_s.len() < 1000);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2.5).ends_with(" s"));
+        assert!(fmt_duration(2.5e-3).ends_with(" ms"));
+        assert!(fmt_duration(2.5e-6).ends_with(" µs"));
+        assert!(fmt_duration(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn summary_contains_name() {
+        let r = BenchResult {
+            name: "abc".into(),
+            samples_s: vec![0.001, 0.002, 0.003],
+        };
+        assert!(r.summary().contains("abc"));
+    }
+}

@@ -1,0 +1,113 @@
+//! CLI argument handling (hand-rolled; the offline build has no clap).
+//!
+//! Kept in the library so the parser and name-resolution logic are
+//! unit-testable; `rust/src/main.rs` is a thin shell over this.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::dcnn::{zoo, Network};
+
+/// Parsed options: `--key value` pairs and bare `--flag`s (stored as
+/// `"true"`).
+pub type Opts = BTreeMap<String, String>;
+
+/// Parse `--key value` / `--flag` style options after the subcommand.
+pub fn parse_opts(args: &[String]) -> Opts {
+    let mut opts = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                opts.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                opts.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    opts
+}
+
+/// Fetch a typed option with a default.
+pub fn opt_parse<T: std::str::FromStr>(opts: &Opts, key: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match opts.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|e| anyhow::anyhow!("invalid --{key} '{v}': {e}")),
+    }
+}
+
+/// Resolve a benchmark network by (aliased) name.
+pub fn network_by_name(name: &str) -> Result<Network> {
+    match name {
+        "dcgan" => Ok(zoo::dcgan()),
+        "gp-gan" | "gpgan" => Ok(zoo::gp_gan()),
+        "3d-gan" | "gan3d" => Ok(zoo::gan3d()),
+        "v-net" | "vnet" => Ok(zoo::vnet()),
+        "tiny-2d" => Ok(zoo::tiny_2d()),
+        "tiny-3d" => Ok(zoo::tiny_3d()),
+        _ => bail!(
+            "unknown network '{name}' (dcgan, gp-gan, 3d-gan, v-net, tiny-2d, tiny-3d)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let o = parse_opts(&args(&["--net", "dcgan", "--all", "--batch", "4"]));
+        assert_eq!(o["net"], "dcgan");
+        assert_eq!(o["all"], "true");
+        assert_eq!(o["batch"], "4");
+    }
+
+    #[test]
+    fn flag_before_key_value() {
+        let o = parse_opts(&args(&["--fast", "--net", "vnet"]));
+        assert_eq!(o["fast"], "true");
+        assert_eq!(o["net"], "vnet");
+    }
+
+    #[test]
+    fn ignores_positional_noise() {
+        let o = parse_opts(&args(&["positional", "--x", "1", "junk"]));
+        assert_eq!(o.len(), 1);
+        assert_eq!(o["x"], "1");
+    }
+
+    #[test]
+    fn opt_parse_typed() {
+        let o = parse_opts(&args(&["--batch", "16"]));
+        let b: usize = opt_parse(&o, "batch", 8).unwrap();
+        assert_eq!(b, 16);
+        let d: usize = opt_parse(&o, "missing", 8).unwrap();
+        assert_eq!(d, 8);
+        let bad = parse_opts(&args(&["--batch", "xyz"]));
+        assert!(opt_parse::<usize>(&bad, "batch", 8).is_err());
+    }
+
+    #[test]
+    fn network_aliases() {
+        assert_eq!(network_by_name("vnet").unwrap().name, "v-net");
+        assert_eq!(network_by_name("gan3d").unwrap().name, "3d-gan");
+        assert_eq!(network_by_name("gpgan").unwrap().name, "gp-gan");
+        assert!(network_by_name("bogus").is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! Dynamic batching: gather requests until the batch is full or the
+//! oldest request has waited long enough.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Close a batch at this many items.
+    pub max_batch: usize,
+    /// ... or when the oldest item has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Pulls from a channel and yields batches according to the policy.
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Batcher<T> {
+        assert!(policy.max_batch >= 1);
+        Batcher { rx, policy }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is
+    /// closed and drained.
+    pub fn next_batch(&mut self) -> Option<Vec<T>> {
+        // Block for the first item.
+        let first = match self.rx.recv() {
+            Ok(v) => v,
+            Err(_) => return None,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(v) => batch.push(v),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn full_batch_closes_immediately() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let mut b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_secs(10),
+            },
+        );
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn timeout_closes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let mut b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 100,
+                max_wait: Duration::from_millis(20),
+            },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1, 2]);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn closed_channel_yields_none_after_drain() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let mut b = Batcher::new(rx, BatchPolicy::default());
+        assert_eq!(b.next_batch().unwrap(), vec![7]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_until_deadline() {
+        let (tx, rx) = channel();
+        tx.send(0).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            let _ = tx.send(1);
+        });
+        let mut b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(200),
+            },
+        );
+        let batch = b.next_batch().unwrap();
+        handle.join().unwrap();
+        assert_eq!(batch.len(), 2, "late item joined the batch");
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: the service face of the accelerator.
+//!
+//! A thread-based (the offline build has no tokio; see DESIGN.md §1)
+//! batched-inference service: requests are routed by model name to a
+//! per-model accelerator instance, gathered into batches (the
+//! accelerator amortizes weight traffic across a batch — the same
+//! `cfg.batch` the timing tier models), executed, and answered with
+//! both the numeric output and the simulated on-accelerator latency.
+
+pub mod batcher;
+pub mod router;
+pub mod service;
+
+pub use batcher::{Batcher, BatchPolicy};
+pub use router::Router;
+pub use service::{InferenceService, Request, Response, ServiceStats};

@@ -1,0 +1,93 @@
+//! Request routing: model name → accelerator instance queue.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Sender;
+
+use anyhow::{bail, Result};
+
+/// Routes items to per-model senders.
+pub struct Router<T> {
+    routes: BTreeMap<String, Sender<T>>,
+    /// Per-route dispatch counters.
+    pub dispatched: BTreeMap<String, u64>,
+}
+
+impl<T> Router<T> {
+    pub fn new() -> Router<T> {
+        Router {
+            routes: BTreeMap::new(),
+            dispatched: BTreeMap::new(),
+        }
+    }
+
+    pub fn add_route(&mut self, model: &str, tx: Sender<T>) {
+        self.routes.insert(model.to_string(), tx);
+        self.dispatched.insert(model.to_string(), 0);
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.routes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Dispatch one item; errors on unknown model or closed worker.
+    pub fn dispatch(&mut self, model: &str, item: T) -> Result<()> {
+        match self.routes.get(model) {
+            None => bail!(
+                "unknown model '{model}' (available: {:?})",
+                self.models()
+            ),
+            Some(tx) => {
+                if tx.send(item).is_err() {
+                    bail!("worker for '{model}' has shut down");
+                }
+                *self.dispatched.get_mut(model).unwrap() += 1;
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<T> Default for Router<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn routes_by_model() {
+        let (tx_a, rx_a) = channel();
+        let (tx_b, rx_b) = channel();
+        let mut r = Router::new();
+        r.add_route("dcgan", tx_a);
+        r.add_route("v-net", tx_b);
+        r.dispatch("dcgan", 1).unwrap();
+        r.dispatch("v-net", 2).unwrap();
+        r.dispatch("dcgan", 3).unwrap();
+        assert_eq!(rx_a.try_recv().unwrap(), 1);
+        assert_eq!(rx_a.try_recv().unwrap(), 3);
+        assert_eq!(rx_b.try_recv().unwrap(), 2);
+        assert_eq!(r.dispatched["dcgan"], 2);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let mut r: Router<u32> = Router::new();
+        let err = r.dispatch("nope", 1).unwrap_err();
+        assert!(err.to_string().contains("unknown model"));
+    }
+
+    #[test]
+    fn closed_worker_detected() {
+        let (tx, rx) = channel();
+        drop(rx);
+        let mut r = Router::new();
+        r.add_route("m", tx);
+        let err = r.dispatch("m", 5).unwrap_err();
+        assert!(err.to_string().contains("shut down"));
+    }
+}

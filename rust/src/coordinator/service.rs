@@ -1,0 +1,304 @@
+//! The batched inference service: router → batcher → accelerator
+//! worker per model.
+//!
+//! Numerics run through the f32 golden IOM pipeline (bit-compatible
+//! with the artifacts — see `integration_runtime.rs`); latency is the
+//! *simulated accelerator time* from the timing tier at the actual
+//! batch size, which is what a hardware deployment would report.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::accel::{timing, AccelConfig, Schedule};
+use crate::dcnn::{Dims, LayerData, Network};
+use crate::func::{crop_2d, crop_3d, deconv2d_iom, deconv3d_iom};
+use crate::tensor::{FeatureMap, Volume};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::router::Router;
+
+/// One inference request: the layer-0 input for `model`.
+pub struct Request {
+    pub model: String,
+    /// Flat input for the network's first layer (C·D·H·W order).
+    pub input: Vec<f32>,
+    pub resp: Sender<Response>,
+    pub submitted: Instant,
+}
+
+/// The reply.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub model: String,
+    /// Flat final-layer output.
+    pub output: Vec<f32>,
+    /// Simulated on-accelerator latency for the batch this request
+    /// rode in (seconds).
+    pub accel_latency_s: f64,
+    /// Host wall-clock from submit to reply.
+    pub wall_latency_s: f64,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+/// Aggregate service statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub per_model: BTreeMap<String, u64>,
+}
+
+impl ServiceStats {
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The running service.
+pub struct InferenceService {
+    router: Router<Request>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<Mutex<ServiceStats>>,
+}
+
+impl InferenceService {
+    /// Spawn one worker per network. Each worker owns synthetic
+    /// weights (seeded per model) and an accelerator config chosen by
+    /// dimensionality.
+    pub fn start(networks: Vec<Network>, policy: BatchPolicy) -> InferenceService {
+        let stats = Arc::new(Mutex::new(ServiceStats::default()));
+        let mut router = Router::new();
+        let mut workers = Vec::new();
+        for net in networks {
+            let (tx, rx) = channel::<Request>();
+            router.add_route(net.name, tx);
+            let stats = Arc::clone(&stats);
+            workers.push(std::thread::spawn(move || {
+                let mut batcher = Batcher::new(rx, policy);
+                let weights: Vec<LayerData> = net
+                    .layers
+                    .iter()
+                    .enumerate()
+                    .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)))
+                    .collect();
+                while let Some(batch) = batcher.next_batch() {
+                    serve_batch(&net, &weights, batch, &stats);
+                }
+            }));
+        }
+        InferenceService {
+            router,
+            workers,
+            stats,
+        }
+    }
+
+    /// Submit a request; the response arrives on `resp_rx`.
+    pub fn submit(&mut self, model: &str, input: Vec<f32>) -> Result<std::sync::mpsc::Receiver<Response>> {
+        let (tx, rx) = channel();
+        let req = Request {
+            model: model.to_string(),
+            input,
+            resp: tx,
+            submitted: Instant::now(),
+        };
+        if let Err(e) = self.router.dispatch(model, req) {
+            self.stats.lock().unwrap().rejected += 1;
+            return Err(e);
+        }
+        Ok(rx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer(&mut self, model: &str, input: Vec<f32>, timeout: Duration) -> Result<Response> {
+        let rx = self.submit(model, input)?;
+        Ok(rx.recv_timeout(timeout)?)
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Drop the routes (closing worker channels) and join workers.
+    pub fn shutdown(self) {
+        drop(self.router);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run one batch through the network: golden numerics + simulated
+/// accelerator latency at the real batch size.
+fn serve_batch(
+    net: &Network,
+    weights: &[LayerData],
+    batch: Vec<Request>,
+    stats: &Arc<Mutex<ServiceStats>>,
+) {
+    let bsize = batch.len();
+    // simulated accelerator time for this batch
+    let mut cfg = AccelConfig::paper_for(net.dims);
+    cfg.batch = bsize;
+    let accel_s: f64 = net
+        .layers
+        .iter()
+        .map(|l| timing::simulate(&cfg, l).time_s())
+        .sum();
+
+    // Account the batch before replying so callers observing their
+    // response always see it reflected in the stats.
+    {
+        let mut s = stats.lock().unwrap();
+        s.requests += bsize as u64;
+        s.batches += 1;
+        *s.per_model.entry(net.name.to_string()).or_insert(0) += bsize as u64;
+    }
+
+    for req in batch {
+        let output = forward(net, weights, &req.input);
+        let resp = Response {
+            model: req.model.clone(),
+            output,
+            accel_latency_s: accel_s,
+            wall_latency_s: req.submitted.elapsed().as_secs_f64(),
+            batch_size: bsize,
+        };
+        let _ = req.resp.send(resp);
+    }
+}
+
+/// Golden f32 forward pass through every deconv layer of the network.
+pub fn forward(net: &Network, weights: &[LayerData], input: &[f32]) -> Vec<f32> {
+    match net.dims {
+        Dims::D2 => {
+            let l0 = &net.layers[0];
+            assert_eq!(input.len(), l0.input_elems(), "bad input size");
+            let mut cur = FeatureMap::from_vec(l0.in_c, l0.in_h, l0.in_w, input.to_vec());
+            for (layer, data) in net.layers.iter().zip(weights) {
+                let w = match data {
+                    LayerData::D2 { weights, .. } => weights,
+                    _ => unreachable!(),
+                };
+                let full = deconv2d_iom(&cur, w, layer.s);
+                cur = crop_2d(&full, layer.out_h(), layer.out_w());
+            }
+            cur.data().to_vec()
+        }
+        Dims::D3 => {
+            let l0 = &net.layers[0];
+            assert_eq!(input.len(), l0.input_elems(), "bad input size");
+            let mut cur =
+                Volume::from_vec(l0.in_c, l0.in_d, l0.in_h, l0.in_w, input.to_vec());
+            for (layer, data) in net.layers.iter().zip(weights) {
+                let w = match data {
+                    LayerData::D3 { weights, .. } => weights,
+                    _ => unreachable!(),
+                };
+                let full = deconv3d_iom(&cur, w, layer.s);
+                cur = crop_3d(&full, layer.out_d(), layer.out_h(), layer.out_w());
+            }
+            cur.data().to_vec()
+        }
+    }
+}
+
+/// Schedule sanity used by property tests: the batch the service uses
+/// must keep the working set on-chip.
+pub fn batch_fits(net: &Network, bsize: usize) -> bool {
+    let mut cfg = AccelConfig::paper_for(net.dims);
+    cfg.batch = bsize.max(1);
+    net.layers.iter().all(|l| {
+        let s = Schedule::new(&cfg, l);
+        crate::accel::buffers::working_set_fits(&cfg, l, &s)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn end_to_end_tiny_2d() {
+        let net = zoo::tiny_2d();
+        let l0 = net.layers[0].clone();
+        let last = net.layers.last().unwrap().clone();
+        let mut svc = InferenceService::start(vec![net], BatchPolicy::default());
+        let input = vec![0.5f32; l0.input_elems()];
+        let resp = svc
+            .infer("tiny-2d", input, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(resp.output.len(), last.output_elems());
+        assert!(resp.accel_latency_s > 0.0);
+        assert_eq!(resp.model, "tiny-2d");
+        let stats = svc.stats();
+        assert_eq!(stats.requests, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_is_rejected() {
+        let mut svc = InferenceService::start(vec![zoo::tiny_2d()], BatchPolicy::default());
+        let err = svc.infer("nope", vec![0.0], Duration::from_secs(1));
+        assert!(err.is_err());
+        assert_eq!(svc.stats().rejected, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batching_amortizes() {
+        let net = zoo::tiny_2d();
+        let l0 = net.layers[0].clone();
+        let mut svc = InferenceService::start(
+            vec![net],
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+            },
+        );
+        let mut rxs = Vec::new();
+        for _ in 0..4 {
+            rxs.push(
+                svc.submit("tiny-2d", vec![0.25f32; l0.input_elems()])
+                    .unwrap(),
+            );
+        }
+        let responses: Vec<Response> = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(10)).unwrap())
+            .collect();
+        assert!(responses.iter().any(|r| r.batch_size > 1), "requests batched");
+        let stats = svc.stats();
+        assert_eq!(stats.requests, 4);
+        assert!(stats.batches < 4, "fewer batches than requests");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let net = zoo::tiny_3d();
+        let weights: Vec<LayerData> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)))
+            .collect();
+        let input = vec![0.1f32; net.layers[0].input_elems()];
+        let a = forward(&net, &weights, &input);
+        let b = forward(&net, &weights, &input);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), net.layers.last().unwrap().output_elems());
+    }
+}

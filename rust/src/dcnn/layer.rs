@@ -1,0 +1,401 @@
+//! Deconvolution layer geometry and operation accounting.
+//!
+//! Parameter naming follows Table I of the paper:
+//!
+//! | Parameter | Description |
+//! |---|---|
+//! | `I(i_h, i_w, i_d, i_c)` | input activation from the `i_c`-th input channel |
+//! | `W(k_h, k_w, k_d, i_c, o_c)` | weight from the `i_c`-th channel of the `o_c`-th filter |
+//! | `O_H, O_W, O_D` | output map extents, Eq. (1): `O = (I − 1)·S + K` |
+//!
+//! The paper's Eq. (1) gives the *accumulation* extent; the `K − S`
+//! edge padding is cropped from the final map (§IV-B: "the padded data
+//! is removed from the final output feature map"), which for the
+//! benchmarks' `K=3, S=2` yields the familiar `2×` upsampling
+//! (`out = I · S`).
+
+use std::fmt;
+
+/// Dimensionality of a deconvolution layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dims {
+    D2,
+    D3,
+}
+
+impl Dims {
+    /// Number of spatial dimensions (2 or 3).
+    #[inline]
+    pub fn rank(self) -> usize {
+        match self {
+            Dims::D2 => 2,
+            Dims::D3 => 3,
+        }
+    }
+}
+
+impl fmt::Display for Dims {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dims::D2 => write!(f, "2D"),
+            Dims::D3 => write!(f, "3D"),
+        }
+    }
+}
+
+/// Geometry of a single deconvolution layer.
+///
+/// 2D layers use `in_d = 1` and ignore the depth outputs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerSpec {
+    /// Human-readable name, e.g. `"dcgan.deconv2"`.
+    pub name: String,
+    pub dims: Dims,
+    /// Input channels (`N_c` in the paper).
+    pub in_c: usize,
+    /// Input depth (1 for 2D layers).
+    pub in_d: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    /// Output channels (`N_o`).
+    pub out_c: usize,
+    /// Kernel extent `K` (uniform per the paper: 3 for all benchmarks).
+    pub k: usize,
+    /// Stride `S` (2 for all benchmarks).
+    pub s: usize,
+}
+
+/// MAC counts for one layer under the two mapping disciplines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpCounts {
+    /// MACs the IOM schedule performs: every input activation × every
+    /// kernel element × every output channel. No zeros ever touched.
+    pub useful_macs: u64,
+    /// MACs the OOM / zero-inserted dense convolution performs over the
+    /// full Eq.-(1) output extent — the paper's "equivalent dense"
+    /// accounting used for TOPS.
+    pub dense_macs: u64,
+}
+
+impl LayerSpec {
+    /// Construct a 2D layer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_2d(
+        name: impl Into<String>,
+        in_c: usize,
+        in_h: usize,
+        in_w: usize,
+        out_c: usize,
+        k: usize,
+        s: usize,
+    ) -> LayerSpec {
+        LayerSpec {
+            name: name.into(),
+            dims: Dims::D2,
+            in_c,
+            in_d: 1,
+            in_h,
+            in_w,
+            out_c,
+            k,
+            s,
+        }
+    }
+
+    /// Construct a 3D layer (cubic input `in_e^3` is common but not
+    /// required).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_3d(
+        name: impl Into<String>,
+        in_c: usize,
+        in_d: usize,
+        in_h: usize,
+        in_w: usize,
+        out_c: usize,
+        k: usize,
+        s: usize,
+    ) -> LayerSpec {
+        LayerSpec {
+            name: name.into(),
+            dims: Dims::D3,
+            in_c,
+            in_d,
+            in_h,
+            in_w,
+            out_c,
+            k,
+            s,
+        }
+    }
+
+    /// Eq. (1) accumulation extent along one axis: `O = (I − 1)·S + K`.
+    #[inline]
+    pub fn full_extent(&self, i: usize) -> usize {
+        (i - 1) * self.s + self.k
+    }
+
+    /// Cropped (final) extent along one axis: `I · S`
+    /// (Eq. (1) minus the `K − S` edge padding; requires `K >= S`).
+    #[inline]
+    pub fn cropped_extent(&self, i: usize) -> usize {
+        debug_assert!(self.k >= self.s);
+        i * self.s
+    }
+
+    /// Full (Eq. 1) output height/width/depth.
+    pub fn out_full_h(&self) -> usize {
+        self.full_extent(self.in_h)
+    }
+    pub fn out_full_w(&self) -> usize {
+        self.full_extent(self.in_w)
+    }
+    pub fn out_full_d(&self) -> usize {
+        if self.dims == Dims::D2 {
+            1
+        } else {
+            self.full_extent(self.in_d)
+        }
+    }
+
+    /// Cropped output height/width/depth (what the next layer consumes).
+    pub fn out_h(&self) -> usize {
+        self.cropped_extent(self.in_h)
+    }
+    pub fn out_w(&self) -> usize {
+        self.cropped_extent(self.in_w)
+    }
+    pub fn out_d(&self) -> usize {
+        if self.dims == Dims::D2 {
+            1
+        } else {
+            self.cropped_extent(self.in_d)
+        }
+    }
+
+    /// Kernel volume `K^d` (K² for 2D, K³ for 3D).
+    #[inline]
+    pub fn kernel_volume(&self) -> usize {
+        self.k.pow(self.dims.rank() as u32)
+    }
+
+    /// Number of input activations per channel.
+    #[inline]
+    pub fn in_spatial(&self) -> usize {
+        self.in_d * self.in_h * self.in_w
+    }
+
+    /// Number of output elements per channel over the *full* extent.
+    #[inline]
+    pub fn out_full_spatial(&self) -> usize {
+        self.out_full_d() * self.out_full_h() * self.out_full_w()
+    }
+
+    /// Number of output elements per channel after cropping.
+    #[inline]
+    pub fn out_spatial(&self) -> usize {
+        self.out_d() * self.out_h() * self.out_w()
+    }
+
+    /// Total input elements (`N_c · I_D · I_H · I_W`).
+    pub fn input_elems(&self) -> usize {
+        self.in_c * self.in_spatial()
+    }
+
+    /// Total weight elements (`N_o · N_c · K^d`).
+    pub fn weight_elems(&self) -> usize {
+        self.out_c * self.in_c * self.kernel_volume()
+    }
+
+    /// Total output elements after cropping (`N_o · O_D · O_H · O_W`).
+    pub fn output_elems(&self) -> usize {
+        self.out_c * self.out_spatial()
+    }
+
+    /// MAC counts under the two mappings.
+    pub fn op_counts(&self) -> OpCounts {
+        let useful = self.in_c as u64
+            * self.in_spatial() as u64
+            * self.kernel_volume() as u64
+            * self.out_c as u64;
+        let dense = self.in_c as u64
+            * self.out_full_spatial() as u64
+            * self.kernel_volume() as u64
+            * self.out_c as u64;
+        OpCounts {
+            useful_macs: useful,
+            dense_macs: dense,
+        }
+    }
+
+    /// Sparsity of the zero-inserted input map: fraction of zeros after
+    /// inserting `S − 1` zeros between activations along every spatial
+    /// axis (the quantity plotted in Fig. 1).
+    pub fn inserted_sparsity(&self) -> f64 {
+        let nonzero = self.in_spatial() as f64;
+        let inserted: f64 = match self.dims {
+            Dims::D2 => {
+                (self.ins_extent(self.in_h) * self.ins_extent(self.in_w)) as f64
+            }
+            Dims::D3 => (self.ins_extent(self.in_d)
+                * self.ins_extent(self.in_h)
+                * self.ins_extent(self.in_w)) as f64,
+        };
+        1.0 - nonzero / inserted
+    }
+
+    /// Sparsity including the `K − 1` 'full'-convolution border padding
+    /// (the map the OOM convolution actually scans).
+    pub fn padded_sparsity(&self) -> f64 {
+        let nonzero = self.in_spatial() as f64;
+        let pad = 2 * (self.k - 1);
+        let ext = |i: usize| (self.ins_extent(i) + pad) as f64;
+        let total = match self.dims {
+            Dims::D2 => ext(self.in_h) * ext(self.in_w),
+            Dims::D3 => ext(self.in_d) * ext(self.in_h) * ext(self.in_w),
+        };
+        1.0 - nonzero / total
+    }
+
+    /// Zero-inserted extent along one axis: `(I − 1)·S + 1`.
+    #[inline]
+    pub fn ins_extent(&self, i: usize) -> usize {
+        (i - 1) * self.s + 1
+    }
+
+    /// Bytes moved for one inference of this layer at `bytes_per_elem`
+    /// precision: inputs + weights read, cropped outputs written.
+    pub fn dram_traffic_bytes(&self, bytes_per_elem: usize) -> u64 {
+        ((self.input_elems() + self.weight_elems() + self.output_elems()) * bytes_per_elem)
+            as u64
+    }
+
+    /// Arithmetic intensity (useful MACs per DRAM byte) — classifies
+    /// compute- vs memory-bound layers (the Fig. 6(a) dip).
+    pub fn arithmetic_intensity(&self, bytes_per_elem: usize) -> f64 {
+        self.op_counts().useful_macs as f64 / self.dram_traffic_bytes(bytes_per_elem) as f64
+    }
+}
+
+impl fmt::Display for LayerSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.dims {
+            Dims::D2 => write!(
+                f,
+                "{}: {}x{}x{} -> {}x{}x{} (K={}, S={})",
+                self.name,
+                self.in_c,
+                self.in_h,
+                self.in_w,
+                self.out_c,
+                self.out_h(),
+                self.out_w(),
+                self.k,
+                self.s
+            ),
+            Dims::D3 => write!(
+                f,
+                "{}: {}x{}x{}x{} -> {}x{}x{}x{} (K={}, S={})",
+                self.name,
+                self.in_c,
+                self.in_d,
+                self.in_h,
+                self.in_w,
+                self.out_c,
+                self.out_d(),
+                self.out_h(),
+                self.out_w(),
+                self.k,
+                self.s
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l2d() -> LayerSpec {
+        LayerSpec::new_2d("t2", 4, 4, 4, 8, 3, 2)
+    }
+
+    fn l3d() -> LayerSpec {
+        LayerSpec::new_3d("t3", 4, 4, 4, 4, 8, 3, 2)
+    }
+
+    #[test]
+    fn eq1_extents() {
+        let l = l2d();
+        // O = (4-1)*2 + 3 = 9 full, 8 cropped
+        assert_eq!(l.out_full_h(), 9);
+        assert_eq!(l.out_h(), 8);
+        assert_eq!(l.out_full_d(), 1);
+        assert_eq!(l.out_d(), 1);
+        let l = l3d();
+        assert_eq!(l.out_full_d(), 9);
+        assert_eq!(l.out_d(), 8);
+    }
+
+    #[test]
+    fn kernel_volume() {
+        assert_eq!(l2d().kernel_volume(), 9);
+        assert_eq!(l3d().kernel_volume(), 27);
+    }
+
+    #[test]
+    fn op_counts_2d() {
+        let l = l2d();
+        let oc = l.op_counts();
+        // useful: 4 ch * 16 px * 9 k * 8 oc = 4608
+        assert_eq!(oc.useful_macs, 4 * 16 * 9 * 8);
+        // dense: 4 * 81 * 9 * 8
+        assert_eq!(oc.dense_macs, 4 * 81 * 9 * 8);
+        assert!(oc.dense_macs > oc.useful_macs);
+    }
+
+    #[test]
+    fn dense_to_useful_ratio_approaches_s_pow_d() {
+        // For large maps the dense/useful ratio -> S^d.
+        let l = LayerSpec::new_2d("big", 1, 256, 256, 1, 3, 2);
+        let oc = l.op_counts();
+        let ratio = oc.dense_macs as f64 / oc.useful_macs as f64;
+        assert!((ratio - 4.0).abs() < 0.1, "ratio={ratio}");
+        let l = LayerSpec::new_3d("big3", 1, 64, 64, 64, 1, 3, 2);
+        let oc = l.op_counts();
+        let ratio = oc.dense_macs as f64 / oc.useful_macs as f64;
+        assert!((ratio - 8.0).abs() < 0.4, "ratio={ratio}");
+    }
+
+    #[test]
+    fn sparsity_2d_vs_3d() {
+        let s2 = l2d().inserted_sparsity();
+        let s3 = l3d().inserted_sparsity();
+        // 2D: 1 - 16/49 ≈ 0.673;  3D: 1 - 64/343 ≈ 0.813
+        assert!((s2 - (1.0 - 16.0 / 49.0)).abs() < 1e-12);
+        assert!((s3 - (1.0 - 64.0 / 343.0)).abs() < 1e-12);
+        assert!(s3 > s2, "3D sparsity exceeds 2D (Fig. 1)");
+    }
+
+    #[test]
+    fn sparsity_asymptotes() {
+        let l = LayerSpec::new_2d("big", 1, 512, 512, 1, 3, 2);
+        assert!((l.inserted_sparsity() - 0.75).abs() < 0.01);
+        let l = LayerSpec::new_3d("big3", 1, 128, 128, 128, 1, 3, 2);
+        assert!((l.inserted_sparsity() - 0.875).abs() < 0.01);
+    }
+
+    #[test]
+    fn traffic_and_intensity() {
+        let l = l2d();
+        let bytes = l.dram_traffic_bytes(2);
+        let expect = (4 * 16 + 8 * 4 * 9 + 8 * 64) * 2;
+        assert_eq!(bytes, expect as u64);
+        assert!(l.arithmetic_intensity(2) > 0.0);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert!(format!("{}", l2d()).contains("4x4x4 -> 8x8x8"));
+        assert!(format!("{}", l3d()).contains("3D") || format!("{}", l3d()).contains("4x4x4x4"));
+    }
+}

@@ -1,0 +1,16 @@
+//! DCNN layer geometry, the four benchmark networks, and the sparsity
+//! analyzer.
+//!
+//! Everything downstream (golden models, simulator, baselines, benches)
+//! consumes [`LayerSpec`]s produced here; the Python model zoo in
+//! `python/compile/zoo.py` mirrors these shapes one-for-one (checked by
+//! `python/tests/test_zoo_sync.py` against `udcnn zoo --dump`).
+
+pub mod layer;
+pub mod sparsity;
+pub mod workload;
+pub mod zoo;
+
+pub use layer::{Dims, LayerSpec, OpCounts};
+pub use workload::{LayerData, LayerDataQ};
+pub use zoo::Network;

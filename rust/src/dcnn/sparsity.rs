@@ -1,0 +1,122 @@
+//! Sparsity analyzer — reproduces Fig. 1.
+//!
+//! Fig. 1 plots, per deconvolution layer, the fraction of zeros in the
+//! zero-inserted input feature map that a conventional (OOM)
+//! convolution engine would scan. We provide both the closed form
+//! ([`LayerSpec::inserted_sparsity`]) and an empirical counter that
+//! actually materializes the inserted map from synthetic activations
+//! ([`empirical_sparsity`]) — the two must agree, which
+//! `tests` below and the property suite assert.
+
+use crate::dcnn::layer::{Dims, LayerSpec};
+use crate::func::zero_insert;
+use crate::tensor::{FeatureMap, Volume};
+use crate::util::Prng;
+
+/// One row of the Fig.-1 dataset.
+#[derive(Clone, Debug)]
+pub struct SparsityRow {
+    pub network: &'static str,
+    pub layer: String,
+    /// Closed-form sparsity of the zero-inserted map.
+    pub analytic: f64,
+    /// Counted sparsity after materializing the inserted map.
+    pub empirical: f64,
+}
+
+/// Empirically measure the zero-fraction of the inserted map for one
+/// layer, using dense (all-nonzero) synthetic activations.
+pub fn empirical_sparsity(spec: &LayerSpec, seed: u64) -> f64 {
+    let mut rng = Prng::new(seed);
+    match spec.dims {
+        Dims::D2 => {
+            let mut fm: FeatureMap<f32> = FeatureMap::zeros(1, spec.in_h, spec.in_w);
+            for v in fm.data_mut() {
+                // strictly non-zero activations so inserted zeros are the
+                // only zeros
+                *v = rng.f32_range(0.1, 1.0);
+            }
+            let ins = zero_insert::insert_2d(&fm, spec.s);
+            let zeros = ins.data().iter().filter(|&&x| x == 0.0).count();
+            zeros as f64 / ins.len() as f64
+        }
+        Dims::D3 => {
+            let mut vol: Volume<f32> = Volume::zeros(1, spec.in_d, spec.in_h, spec.in_w);
+            for v in vol.data_mut() {
+                *v = rng.f32_range(0.1, 1.0);
+            }
+            let ins = zero_insert::insert_3d(&vol, spec.s);
+            let zeros = ins.data().iter().filter(|&&x| x == 0.0).count();
+            zeros as f64 / ins.len() as f64
+        }
+    }
+}
+
+/// Produce the full Fig.-1 dataset for a set of networks.
+pub fn fig1_dataset(nets: &[crate::dcnn::Network], seed: u64) -> Vec<SparsityRow> {
+    let mut rows = Vec::new();
+    for net in nets {
+        for layer in &net.layers {
+            rows.push(SparsityRow {
+                network: net.name,
+                layer: layer.name.clone(),
+                analytic: layer.inserted_sparsity(),
+                empirical: empirical_sparsity(layer, seed),
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn analytic_matches_empirical() {
+        for net in [zoo::tiny_2d(), zoo::tiny_3d()] {
+            for layer in &net.layers {
+                let a = layer.inserted_sparsity();
+                let e = empirical_sparsity(layer, 7);
+                assert!(
+                    (a - e).abs() < 1e-12,
+                    "{}: analytic {a} vs empirical {e}",
+                    layer.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_3d_above_2d() {
+        // The headline of Fig. 1: every 3D-GAN layer is sparser than
+        // every DCGAN layer.
+        let rows = fig1_dataset(&[zoo::dcgan(), zoo::gan3d()], 3);
+        let max_2d = rows
+            .iter()
+            .filter(|r| r.network == "dcgan")
+            .map(|r| r.analytic)
+            .fold(0.0, f64::max);
+        let min_3d = rows
+            .iter()
+            .filter(|r| r.network == "3d-gan")
+            .map(|r| r.analytic)
+            .fold(1.0, f64::min);
+        assert!(
+            min_3d > max_2d,
+            "3D sparsity ({min_3d:.3}) should exceed 2D ({max_2d:.3})"
+        );
+    }
+
+    #[test]
+    fn fig1_ranges_match_paper() {
+        // DCGAN layers sit in the ~0.67–0.75 band; 3D-GAN in ~0.81–0.875.
+        for row in fig1_dataset(&[zoo::dcgan()], 3) {
+            assert!(row.analytic > 0.60 && row.analytic < 0.76, "{row:?}");
+        }
+        for row in fig1_dataset(&[zoo::gan3d()], 3) {
+            assert!(row.analytic > 0.80 && row.analytic < 0.88, "{row:?}");
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Synthetic workload generation: seeded activations + weights for a
+//! layer, in f32 and Q8.8.
+//!
+//! Weight values never affect timing (the architecture is dense over
+//! *useful* work); they only need to be deterministic and well-scaled
+//! so Q8.8 quantization error stays small in tests.
+
+use crate::dcnn::layer::{Dims, LayerSpec};
+use crate::fixed::Q88;
+use crate::tensor::{FeatureMap, Volume, WeightsOIHW, WeightsOIDHW};
+use crate::util::Prng;
+
+/// Generated tensors for one layer invocation.
+#[derive(Clone, Debug)]
+pub enum LayerData {
+    D2 {
+        input: FeatureMap<f32>,
+        weights: WeightsOIHW<f32>,
+    },
+    D3 {
+        input: Volume<f32>,
+        weights: WeightsOIDHW<f32>,
+    },
+}
+
+impl LayerData {
+    /// Deterministic synthetic data for `spec`. Activations in
+    /// [-1, 1) (post-tanh/BN scale), weights in [-0.5, 0.5).
+    pub fn synth(spec: &LayerSpec, seed: u64) -> LayerData {
+        let mut rng = Prng::new(seed ^ 0xDEC0_0001);
+        match spec.dims {
+            Dims::D2 => {
+                let mut input = FeatureMap::zeros(spec.in_c, spec.in_h, spec.in_w);
+                rng.fill_f32(input.data_mut(), -1.0, 1.0);
+                let mut weights = WeightsOIHW::zeros(spec.out_c, spec.in_c, spec.k, spec.k);
+                rng.fill_f32(weights.data_mut(), -0.5, 0.5);
+                LayerData::D2 { input, weights }
+            }
+            Dims::D3 => {
+                let mut input = Volume::zeros(spec.in_c, spec.in_d, spec.in_h, spec.in_w);
+                rng.fill_f32(input.data_mut(), -1.0, 1.0);
+                let mut weights =
+                    WeightsOIDHW::zeros(spec.out_c, spec.in_c, spec.k, spec.k, spec.k);
+                rng.fill_f32(weights.data_mut(), -0.5, 0.5);
+                LayerData::D3 { input, weights }
+            }
+        }
+    }
+
+    /// Quantize activations+weights to Q8.8 (the accelerator's format).
+    pub fn quantize(&self) -> LayerDataQ {
+        match self {
+            LayerData::D2 { input, weights } => LayerDataQ::D2 {
+                input: FeatureMap::from_vec(
+                    input.c,
+                    input.h,
+                    input.w,
+                    input.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+                ),
+                weights: WeightsOIHW::from_vec(
+                    weights.o,
+                    weights.i,
+                    weights.kh,
+                    weights.kw,
+                    weights.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+                ),
+            },
+            LayerData::D3 { input, weights } => LayerDataQ::D3 {
+                input: Volume::from_vec(
+                    input.c,
+                    input.d,
+                    input.h,
+                    input.w,
+                    input.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+                ),
+                weights: WeightsOIDHW::from_vec(
+                    weights.o,
+                    weights.i,
+                    weights.kd,
+                    weights.kh,
+                    weights.kw,
+                    weights.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+                ),
+            },
+        }
+    }
+}
+
+/// Q8.8 variant of [`LayerData`].
+#[derive(Clone, Debug)]
+pub enum LayerDataQ {
+    D2 {
+        input: FeatureMap<Q88>,
+        weights: WeightsOIHW<Q88>,
+    },
+    D3 {
+        input: Volume<Q88>,
+        weights: WeightsOIDHW<Q88>,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn synth_is_deterministic() {
+        let spec = &zoo::tiny_2d().layers[0];
+        let a = LayerData::synth(spec, 42);
+        let b = LayerData::synth(spec, 42);
+        match (&a, &b) {
+            (LayerData::D2 { input: ia, .. }, LayerData::D2 { input: ib, .. }) => {
+                assert_eq!(ia.data(), ib.data());
+            }
+            _ => panic!("expected 2D"),
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = &zoo::tiny_2d().layers[0];
+        let a = LayerData::synth(spec, 1);
+        let b = LayerData::synth(spec, 2);
+        match (&a, &b) {
+            (LayerData::D2 { input: ia, .. }, LayerData::D2 { input: ib, .. }) => {
+                assert_ne!(ia.data(), ib.data());
+            }
+            _ => panic!("expected 2D"),
+        }
+    }
+
+    #[test]
+    fn shapes_match_spec() {
+        let spec = &zoo::tiny_3d().layers[0];
+        match LayerData::synth(spec, 5) {
+            LayerData::D3 { input, weights } => {
+                assert_eq!(
+                    (input.c, input.d, input.h, input.w),
+                    (spec.in_c, spec.in_d, spec.in_h, spec.in_w)
+                );
+                assert_eq!(
+                    (weights.o, weights.i, weights.kd),
+                    (spec.out_c, spec.in_c, spec.k)
+                );
+            }
+            _ => panic!("expected 3D"),
+        }
+    }
+
+    #[test]
+    fn quantization_round_trip_error_small() {
+        let spec = &zoo::tiny_2d().layers[0];
+        let data = LayerData::synth(spec, 9);
+        match (&data, &data.quantize()) {
+            (LayerData::D2 { input, .. }, LayerDataQ::D2 { input: qi, .. }) => {
+                for (x, q) in input.data().iter().zip(qi.data()) {
+                    assert!((x - q.to_f32()).abs() <= 0.5 / 256.0 + 1e-6);
+                }
+            }
+            _ => panic!("expected 2D"),
+        }
+    }
+}

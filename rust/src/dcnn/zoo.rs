@@ -1,0 +1,204 @@
+//! The four benchmark networks of §V.
+//!
+//! All deconvolutional layers use the uniform `K = 3` / `3×3×3`,
+//! `S = 2` filters the paper states ("All the deconvolutional layers of
+//! the selected DCNNs have uniform 3×3 and 3×3×3 filters"). Channel
+//! progressions follow the source papers (DCGAN \[2\], GP-GAN \[10\],
+//! 3D-GAN \[5\], V-Net \[4\] in the paper's reference list); only the
+//! deconvolution layers are modelled, since those are what the
+//! accelerator runs.
+
+use super::layer::{Dims, LayerSpec};
+
+/// A benchmark network: an ordered list of deconvolution layers.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: &'static str,
+    pub dims: Dims,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Network {
+    /// Total useful MACs across all layers.
+    pub fn total_useful_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.op_counts().useful_macs).sum()
+    }
+
+    /// Total dense-equivalent MACs across all layers.
+    pub fn total_dense_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.op_counts().dense_macs).sum()
+    }
+
+    /// Look a layer up by name.
+    pub fn layer(&self, name: &str) -> Option<&LayerSpec> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+/// DCGAN generator (Radford et al., 2016): z → 4×4×1024, then four
+/// stride-2 deconvolutions to a 64×64×3 image.
+pub fn dcgan() -> Network {
+    Network {
+        name: "dcgan",
+        dims: Dims::D2,
+        layers: vec![
+            LayerSpec::new_2d("dcgan.deconv1", 1024, 4, 4, 512, 3, 2),
+            LayerSpec::new_2d("dcgan.deconv2", 512, 8, 8, 256, 3, 2),
+            LayerSpec::new_2d("dcgan.deconv3", 256, 16, 16, 128, 3, 2),
+            LayerSpec::new_2d("dcgan.deconv4", 128, 32, 32, 3, 3, 2),
+        ],
+    }
+}
+
+/// GP-GAN blending generator (Wu et al., 2017): encoder–decoder whose
+/// decoder mirrors DCGAN's deconvolution stack.
+pub fn gp_gan() -> Network {
+    Network {
+        name: "gp-gan",
+        dims: Dims::D2,
+        layers: vec![
+            LayerSpec::new_2d("gp-gan.deconv1", 1024, 4, 4, 512, 3, 2),
+            LayerSpec::new_2d("gp-gan.deconv2", 512, 8, 8, 256, 3, 2),
+            LayerSpec::new_2d("gp-gan.deconv3", 256, 16, 16, 128, 3, 2),
+            LayerSpec::new_2d("gp-gan.deconv4", 128, 32, 32, 3, 3, 2),
+        ],
+    }
+}
+
+/// 3D-GAN generator (Wu et al., 2016): z → 4³×512, four stride-2 3D
+/// deconvolutions to a 64³ occupancy volume.
+pub fn gan3d() -> Network {
+    Network {
+        name: "3d-gan",
+        dims: Dims::D3,
+        layers: vec![
+            LayerSpec::new_3d("3d-gan.deconv1", 512, 4, 4, 4, 256, 3, 2),
+            LayerSpec::new_3d("3d-gan.deconv2", 256, 8, 8, 8, 128, 3, 2),
+            LayerSpec::new_3d("3d-gan.deconv3", 128, 16, 16, 16, 64, 3, 2),
+            LayerSpec::new_3d("3d-gan.deconv4", 64, 32, 32, 32, 1, 3, 2),
+        ],
+    }
+}
+
+/// V-Net decoder (Milletari et al., 2016): the four up-convolution
+/// (3D deconvolution) stages of the right side of the V.
+pub fn vnet() -> Network {
+    Network {
+        name: "v-net",
+        dims: Dims::D3,
+        layers: vec![
+            LayerSpec::new_3d("v-net.upconv1", 256, 8, 8, 8, 128, 3, 2),
+            LayerSpec::new_3d("v-net.upconv2", 128, 16, 16, 16, 64, 3, 2),
+            LayerSpec::new_3d("v-net.upconv3", 64, 32, 32, 32, 32, 3, 2),
+            LayerSpec::new_3d("v-net.upconv4", 32, 64, 64, 64, 16, 3, 2),
+        ],
+    }
+}
+
+/// All four benchmarks in the paper's presentation order.
+pub fn all_benchmarks() -> Vec<Network> {
+    vec![dcgan(), gp_gan(), gan3d(), vnet()]
+}
+
+/// Small synthetic networks used by tests (fast to simulate exactly).
+pub fn tiny_2d() -> Network {
+    Network {
+        name: "tiny-2d",
+        dims: Dims::D2,
+        layers: vec![
+            LayerSpec::new_2d("tiny-2d.deconv1", 4, 4, 4, 4, 3, 2),
+            LayerSpec::new_2d("tiny-2d.deconv2", 4, 8, 8, 2, 3, 2),
+        ],
+    }
+}
+
+/// Small synthetic 3D network used by tests.
+pub fn tiny_3d() -> Network {
+    Network {
+        name: "tiny-3d",
+        dims: Dims::D3,
+        layers: vec![
+            LayerSpec::new_3d("tiny-3d.deconv1", 4, 2, 2, 2, 4, 3, 2),
+            LayerSpec::new_3d("tiny-3d.deconv2", 4, 4, 4, 4, 2, 3, 2),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chained_shapes_compose() {
+        for net in all_benchmarks() {
+            for pair in net.layers.windows(2) {
+                assert_eq!(pair[0].out_c, pair[1].in_c, "{}", pair[1].name);
+                assert_eq!(pair[0].out_h(), pair[1].in_h, "{}", pair[1].name);
+                assert_eq!(pair[0].out_w(), pair[1].in_w, "{}", pair[1].name);
+                if net.dims == Dims::D3 {
+                    assert_eq!(pair[0].out_d(), pair[1].in_d, "{}", pair[1].name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dcgan_final_image() {
+        let net = dcgan();
+        let last = net.layers.last().unwrap();
+        assert_eq!(last.out_c, 3);
+        assert_eq!(last.out_h(), 64);
+        assert_eq!(last.out_w(), 64);
+    }
+
+    #[test]
+    fn gan3d_final_volume() {
+        let net = gan3d();
+        let last = net.layers.last().unwrap();
+        assert_eq!(last.out_c, 1);
+        assert_eq!(last.out_d(), 64);
+        assert_eq!(last.out_h(), 64);
+    }
+
+    #[test]
+    fn vnet_final_volume() {
+        let net = vnet();
+        let last = net.layers.last().unwrap();
+        assert_eq!(last.out_c, 16);
+        assert_eq!(last.out_d(), 128);
+    }
+
+    #[test]
+    fn uniform_filters() {
+        for net in all_benchmarks() {
+            for l in &net.layers {
+                assert_eq!(l.k, 3, "{}", l.name);
+                assert_eq!(l.s, 2, "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mac_totals_are_sane() {
+        // DCGAN deconv1 useful: 1024*16*9*512 = 75.5 M MACs
+        let net = dcgan();
+        assert_eq!(
+            net.layers[0].op_counts().useful_macs,
+            1024 * 16 * 9 * 512
+        );
+        // 3D nets dominated by 27x kernels
+        let net3 = gan3d();
+        assert_eq!(
+            net3.layers[0].op_counts().useful_macs,
+            512 * 64 * 27 * 256
+        );
+        assert!(net3.total_dense_macs() > net3.total_useful_macs());
+    }
+
+    #[test]
+    fn layer_lookup() {
+        let net = dcgan();
+        assert!(net.layer("dcgan.deconv3").is_some());
+        assert!(net.layer("nope").is_none());
+    }
+}

@@ -1,0 +1,113 @@
+//! The 48-bit MAC accumulator modelled on the DSP48E1 P register.
+
+use super::q88::{saturate_i16, Q88};
+use super::FRAC_BITS;
+
+/// 48-bit accumulator in Q?.16 (products are Q16.16). Wide enough that
+/// a full K×K×K × N_c accumulation chain never overflows: the largest
+/// chain in our benchmarks is 27 · 1024 products of magnitude
+/// < 2^30, comfortably below 2^47.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Acc48(pub i64);
+
+impl Acc48 {
+    pub const ZERO: Acc48 = Acc48(0);
+
+    /// Accumulate one Q8.8×Q8.8 product (DSP48 `P += A*B`).
+    #[inline]
+    pub fn mac(&mut self, a: Q88, b: Q88) {
+        self.0 += a.wide_mul(b) as i64;
+        self.clamp48();
+    }
+
+    /// Add another accumulator (adder-tree node).
+    #[inline]
+    pub fn add(&mut self, other: Acc48) {
+        self.0 += other.0;
+        self.clamp48();
+    }
+
+    /// Add a raw Q16.16 wide product.
+    #[inline]
+    pub fn add_wide(&mut self, wide: i32) {
+        self.0 += wide as i64;
+        self.clamp48();
+    }
+
+    #[inline]
+    fn clamp48(&mut self) {
+        const MAX48: i64 = (1 << 47) - 1;
+        const MIN48: i64 = -(1 << 47);
+        self.0 = self.0.clamp(MIN48, MAX48);
+    }
+
+    /// Write-back: convergent-round the Q16.16 accumulator to Q8.8 and
+    /// saturate — the datapath's output stage.
+    #[inline]
+    pub fn to_q88(self) -> Q88 {
+        let half = 1i64 << (FRAC_BITS - 1);
+        let mut r = (self.0 + half) >> FRAC_BITS;
+        if (self.0 & ((1 << FRAC_BITS) - 1)) == half && (r & 1) == 1 {
+            r -= 1;
+        }
+        Q88::from_bits(saturate_i16(r))
+    }
+
+    /// Exact value as f64 (for cross-checking against f32 references).
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 / (1u64 << (2 * FRAC_BITS)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_chain_matches_float() {
+        let mut acc = Acc48::ZERO;
+        let mut expect = 0.0f64;
+        let mut r = crate::util::Prng::new(4);
+        for _ in 0..1000 {
+            let a = Q88::from_f32(r.f32_range(-4.0, 4.0));
+            let b = Q88::from_f32(r.f32_range(-4.0, 4.0));
+            acc.mac(a, b);
+            expect += a.to_f32() as f64 * b.to_f32() as f64;
+        }
+        assert!((acc.to_f64() - expect).abs() < 1e-9, "accumulator is exact");
+    }
+
+    #[test]
+    fn writeback_rounds_and_saturates() {
+        let mut acc = Acc48::ZERO;
+        acc.mac(Q88::from_f32(100.0), Q88::from_f32(100.0));
+        assert_eq!(acc.to_q88(), Q88::MAX);
+        let mut acc = Acc48::ZERO;
+        acc.mac(Q88::from_f32(-100.0), Q88::from_f32(100.0));
+        assert_eq!(acc.to_q88(), Q88::MIN);
+        let mut acc = Acc48::ZERO;
+        acc.mac(Q88::from_f32(1.5), Q88::from_f32(2.0));
+        assert_eq!(acc.to_q88().to_f32(), 3.0);
+    }
+
+    #[test]
+    fn adder_tree_add_matches() {
+        let mut a = Acc48::ZERO;
+        a.mac(Q88::ONE, Q88::from_f32(2.0));
+        let mut b = Acc48::ZERO;
+        b.mac(Q88::ONE, Q88::from_f32(3.5));
+        a.add(b);
+        assert_eq!(a.to_q88().to_f32(), 5.5);
+    }
+
+    #[test]
+    fn clamp48_engages() {
+        let mut acc = Acc48(i64::MAX / 2);
+        acc.add(Acc48(i64::MAX / 2));
+        assert_eq!(acc.0, (1 << 47) - 1);
+        let mut acc = Acc48(i64::MIN / 2);
+        acc.add(Acc48(i64::MIN / 2));
+        assert_eq!(acc.0, -(1 << 47));
+    }
+}

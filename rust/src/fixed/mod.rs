@@ -1,0 +1,48 @@
+//! 16-bit fixed-point arithmetic — the accelerator's datapath format.
+//!
+//! The paper (§V) uses "16-bit fixed activations and weights" on the
+//! VC709's DSP48E slices. We model this as **Q8.8**: a signed 16-bit
+//! value with 8 integer bits and 8 fractional bits, the common choice
+//! for GAN-generator feature maps whose dynamic range after batch-norm
+//! is small. Products are held in 32-bit (Q16.16) and accumulated in a
+//! 48-bit accumulator exactly as a DSP48E does (`P = A*B + PCIN`), then
+//! rounded-to-nearest-even and saturated back to Q8.8 on write-back.
+
+mod q88;
+mod acc;
+
+pub use acc::Acc48;
+pub use q88::Q88;
+
+/// Number of fractional bits in [`Q88`].
+pub const FRAC_BITS: u32 = 8;
+/// Scale factor 2^FRAC_BITS.
+pub const SCALE: i32 = 1 << FRAC_BITS;
+
+/// Quantize an `f32` slice to Q8.8.
+pub fn quantize_slice(xs: &[f32]) -> Vec<Q88> {
+    xs.iter().map(|&x| Q88::from_f32(x)).collect()
+}
+
+/// Dequantize a Q8.8 slice back to `f32`.
+pub fn dequantize_slice(xs: &[Q88]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+/// Worst-case absolute quantization error of a single Q8.8 value.
+pub const Q88_EPS: f32 = 1.0 / SCALE as f32;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_error_bounded() {
+        let xs: Vec<f32> = (-1000..1000).map(|i| i as f32 * 0.0137).collect();
+        let q = quantize_slice(&xs);
+        let back = dequantize_slice(&q);
+        for (x, b) in xs.iter().zip(&back) {
+            assert!((x - b).abs() <= 0.5 * Q88_EPS + 1e-6, "x={x} back={b}");
+        }
+    }
+}

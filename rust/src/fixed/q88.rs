@@ -1,0 +1,259 @@
+//! The Q8.8 scalar type.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+
+use super::{FRAC_BITS, SCALE};
+
+/// Signed 16-bit fixed point, 8 integer + 8 fractional bits.
+///
+/// Range: [-128.0, +127.996]. All arithmetic saturates (the paper's
+/// datapath has no overflow trap — DSP48 saturation is the standard
+/// Vivado configuration for CNN accelerators).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Q88(pub i16);
+
+impl Q88 {
+    pub const ZERO: Q88 = Q88(0);
+    pub const ONE: Q88 = Q88(SCALE as i16);
+    pub const MAX: Q88 = Q88(i16::MAX);
+    pub const MIN: Q88 = Q88(i16::MIN);
+
+    /// Quantize from f32 with round-to-nearest-even and saturation.
+    #[inline]
+    pub fn from_f32(x: f32) -> Q88 {
+        let scaled = (x as f64) * SCALE as f64;
+        // round half to even, matching DSP48 CONVERGENT rounding
+        let r = round_half_even(scaled);
+        Q88(saturate_i16(r))
+    }
+
+    /// Raw constructor from the underlying bits.
+    #[inline]
+    pub const fn from_bits(bits: i16) -> Q88 {
+        Q88(bits)
+    }
+
+    /// Integer constructor (`n` must fit in [-128, 127]).
+    #[inline]
+    pub fn from_int(n: i32) -> Q88 {
+        Q88(saturate_i16((n as i64) << FRAC_BITS))
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / SCALE as f32
+    }
+
+    #[inline]
+    pub const fn bits(self) -> i16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Full-precision product (Q16.16 in an i32) — what the DSP
+    /// multiplier emits before accumulation.
+    #[inline]
+    pub fn wide_mul(self, rhs: Q88) -> i32 {
+        (self.0 as i32) * (rhs.0 as i32)
+    }
+
+    /// Saturating absolute value.
+    #[inline]
+    pub fn abs(self) -> Q88 {
+        Q88(self.0.saturating_abs())
+    }
+}
+
+#[inline]
+pub(crate) fn saturate_i16(v: i64) -> i16 {
+    v.clamp(i16::MIN as i64, i16::MAX as i64) as i16
+}
+
+/// Round-half-to-even on an f64, returning i64 (saturating on
+/// non-finite / out-of-range inputs).
+#[inline]
+pub(crate) fn round_half_even(x: f64) -> i64 {
+    if x.is_nan() {
+        return 0;
+    }
+    if x >= i64::MAX as f64 {
+        return i64::MAX;
+    }
+    if x <= i64::MIN as f64 {
+        return i64::MIN;
+    }
+    let floor = x.floor();
+    let diff = x - floor;
+    let f = floor as i64;
+    if diff > 0.5 {
+        f + 1
+    } else if diff < 0.5 {
+        f
+    } else if f % 2 == 0 {
+        f
+    } else {
+        f + 1
+    }
+}
+
+impl Add for Q88 {
+    type Output = Q88;
+    #[inline]
+    fn add(self, rhs: Q88) -> Q88 {
+        Q88(self.0.saturating_add(rhs.0))
+    }
+}
+
+impl AddAssign for Q88 {
+    #[inline]
+    fn add_assign(&mut self, rhs: Q88) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for Q88 {
+    type Output = Q88;
+    #[inline]
+    fn sub(self, rhs: Q88) -> Q88 {
+        Q88(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Neg for Q88 {
+    type Output = Q88;
+    #[inline]
+    fn neg(self) -> Q88 {
+        Q88(self.0.saturating_neg())
+    }
+}
+
+impl Mul for Q88 {
+    type Output = Q88;
+    /// Single-step Q8.8 × Q8.8 → Q8.8 with convergent rounding.
+    /// (The accelerator instead keeps the wide product — see
+    /// [`Q88::wide_mul`] and [`super::Acc48`].)
+    #[inline]
+    fn mul(self, rhs: Q88) -> Q88 {
+        let wide = self.wide_mul(rhs) as i64; // Q16.16
+        let half = 1i64 << (FRAC_BITS - 1);
+        let mut r = (wide + half) >> FRAC_BITS;
+        // adjust to round-half-even: if we were exactly at .5 and the
+        // result is now odd, step back
+        if (wide & ((1 << FRAC_BITS) - 1)) == half && (r & 1) == 1 {
+            r -= 1;
+        }
+        Q88(saturate_i16(r))
+    }
+}
+
+impl fmt::Debug for Q88 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Q88({})", self.to_f32())
+    }
+}
+
+impl fmt::Display for Q88 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants() {
+        assert_eq!(Q88::ZERO.to_f32(), 0.0);
+        assert_eq!(Q88::ONE.to_f32(), 1.0);
+        assert!((Q88::MAX.to_f32() - 127.99609).abs() < 1e-4);
+        assert_eq!(Q88::MIN.to_f32(), -128.0);
+    }
+
+    #[test]
+    fn from_f32_exact_values() {
+        assert_eq!(Q88::from_f32(0.5).bits(), 128);
+        assert_eq!(Q88::from_f32(-0.5).bits(), -128);
+        assert_eq!(Q88::from_f32(1.0).bits(), 256);
+        assert_eq!(Q88::from_f32(2.25).bits(), 576);
+    }
+
+    #[test]
+    fn from_f32_saturates() {
+        assert_eq!(Q88::from_f32(1000.0), Q88::MAX);
+        assert_eq!(Q88::from_f32(-1000.0), Q88::MIN);
+        assert_eq!(Q88::from_f32(f32::INFINITY), Q88::MAX);
+        assert_eq!(Q88::from_f32(f32::NEG_INFINITY), Q88::MIN);
+    }
+
+    #[test]
+    fn round_half_even_ties() {
+        // 0.001953125 * 256 = 0.5 exactly -> rounds to 0 (even)
+        assert_eq!(Q88::from_f32(0.001953125).bits(), 0);
+        // 3*0.001953125 -> 1.5 -> rounds to 2 (even)
+        assert_eq!(Q88::from_f32(0.005859375).bits(), 2);
+    }
+
+    #[test]
+    fn add_sub_saturate() {
+        assert_eq!(Q88::MAX + Q88::ONE, Q88::MAX);
+        assert_eq!(Q88::MIN - Q88::ONE, Q88::MIN);
+        let a = Q88::from_f32(1.5);
+        let b = Q88::from_f32(2.25);
+        assert_eq!((a + b).to_f32(), 3.75);
+        assert_eq!((b - a).to_f32(), 0.75);
+    }
+
+    #[test]
+    fn neg_saturates_min() {
+        assert_eq!(-Q88::MIN, Q88::MAX);
+        assert_eq!((-Q88::ONE).to_f32(), -1.0);
+    }
+
+    #[test]
+    fn mul_simple() {
+        let a = Q88::from_f32(1.5);
+        let b = Q88::from_f32(2.0);
+        assert_eq!((a * b).to_f32(), 3.0);
+        let c = Q88::from_f32(-0.5);
+        assert_eq!((a * c).to_f32(), -0.75);
+    }
+
+    #[test]
+    fn mul_saturates() {
+        let a = Q88::from_f32(100.0);
+        let b = Q88::from_f32(100.0);
+        assert_eq!(a * b, Q88::MAX);
+        assert_eq!(a * (-b), Q88::MIN);
+    }
+
+    #[test]
+    fn wide_mul_exact() {
+        let a = Q88::from_f32(1.5);
+        let b = Q88::from_f32(-2.25);
+        // 1.5 * -2.25 = -3.375 = -3.375 * 65536 in Q16.16
+        assert_eq!(a.wide_mul(b), (-3.375f64 * 65536.0) as i32);
+    }
+
+    #[test]
+    fn mul_error_bounded_random() {
+        let mut r = crate::util::Prng::new(99);
+        for _ in 0..10_000 {
+            let x = r.f32_range(-8.0, 8.0);
+            let y = r.f32_range(-8.0, 8.0);
+            let qa = Q88::from_f32(x);
+            let qb = Q88::from_f32(y);
+            let got = (qa * qb).to_f32();
+            let want = qa.to_f32() * qb.to_f32();
+            assert!(
+                (got - want).abs() <= 0.5 / 256.0 + 1e-6,
+                "x={x} y={y} got={got} want={want}"
+            );
+        }
+    }
+}

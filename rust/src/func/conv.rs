@@ -1,0 +1,150 @@
+//! Dense convolution (cross-correlation, CNN convention), stride 1.
+//!
+//! Used by the OOM deconvolution formulation (over the zero-inserted,
+//! border-padded map) and by the CPU baseline.
+
+use crate::tensor::{FeatureMap, Volume, WeightsOIHW, WeightsOIDHW};
+
+/// `out[o][y][x] = Σ_i Σ_kh Σ_kw in[i][y+kh][x+kw] · w[o][i][kh][kw]`
+/// ("VALID" correlation, stride 1).
+pub fn corr2d(input: &FeatureMap<f32>, w: &WeightsOIHW<f32>) -> FeatureMap<f32> {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    assert!(input.h >= w.kh && input.w >= w.kw, "kernel larger than input");
+    let oh = input.h - w.kh + 1;
+    let ow = input.w - w.kw + 1;
+    let mut out = FeatureMap::zeros(w.o, oh, ow);
+    for o in 0..w.o {
+        for i in 0..input.c {
+            for y in 0..oh {
+                for x in 0..ow {
+                    let mut acc = 0.0f32;
+                    for kh in 0..w.kh {
+                        for kw in 0..w.kw {
+                            acc += input.at(i, y + kh, x + kw) * w.at(o, i, kh, kw);
+                        }
+                    }
+                    *out.at_mut(o, y, x) += acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 3D VALID correlation, stride 1.
+pub fn corr3d(input: &Volume<f32>, w: &WeightsOIDHW<f32>) -> Volume<f32> {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    assert!(
+        input.d >= w.kd && input.h >= w.kh && input.w >= w.kw,
+        "kernel larger than input"
+    );
+    let od = input.d - w.kd + 1;
+    let oh = input.h - w.kh + 1;
+    let ow = input.w - w.kw + 1;
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    for o in 0..w.o {
+        for i in 0..input.c {
+            for z in 0..od {
+                for y in 0..oh {
+                    for x in 0..ow {
+                        let mut acc = 0.0f32;
+                        for kd in 0..w.kd {
+                            for kh in 0..w.kh {
+                                for kw in 0..w.kw {
+                                    acc += input.at(i, z + kd, y + kh, x + kw)
+                                        * w.at(o, i, kd, kh, kw);
+                                }
+                            }
+                        }
+                        *out.at_mut(o, z, y, x) += acc;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Spatially flip a 2D kernel (for true convolution vs correlation).
+pub fn flip_2d(w: &WeightsOIHW<f32>) -> WeightsOIHW<f32> {
+    let mut out = WeightsOIHW::zeros(w.o, w.i, w.kh, w.kw);
+    for o in 0..w.o {
+        for i in 0..w.i {
+            for kh in 0..w.kh {
+                for kw in 0..w.kw {
+                    *out.at_mut(o, i, w.kh - 1 - kh, w.kw - 1 - kw) = w.at(o, i, kh, kw);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Spatially flip a 3D kernel.
+pub fn flip_3d(w: &WeightsOIDHW<f32>) -> WeightsOIDHW<f32> {
+    let mut out = WeightsOIDHW::zeros(w.o, w.i, w.kd, w.kh, w.kw);
+    for o in 0..w.o {
+        for i in 0..w.i {
+            for kd in 0..w.kd {
+                for kh in 0..w.kh {
+                    for kw in 0..w.kw {
+                        *out.at_mut(o, i, w.kd - 1 - kd, w.kh - 1 - kh, w.kw - 1 - kw) =
+                            w.at(o, i, kd, kh, kw);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corr2d_identity_kernel() {
+        // 1x1 kernel of value 2 doubles the map
+        let input = FeatureMap::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let w = WeightsOIHW::from_vec(1, 1, 1, 1, vec![2.0]);
+        let out = corr2d(&input, &w);
+        assert_eq!(out.data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn corr2d_known_values() {
+        // 3x3 input, 2x2 ones kernel -> 2x2 output of window sums
+        let input = FeatureMap::from_vec(1, 3, 3, (1..=9).map(|x| x as f32).collect());
+        let w = WeightsOIHW::from_vec(1, 1, 2, 2, vec![1.0; 4]);
+        let out = corr2d(&input, &w);
+        assert_eq!((out.h, out.w), (2, 2));
+        assert_eq!(out.data(), &[12.0, 16.0, 24.0, 28.0]);
+    }
+
+    #[test]
+    fn corr2d_sums_channels() {
+        let input = FeatureMap::from_vec(2, 1, 1, vec![3.0, 4.0]);
+        let w = WeightsOIHW::from_vec(1, 2, 1, 1, vec![1.0, 10.0]);
+        let out = corr2d(&input, &w);
+        assert_eq!(out.data(), &[43.0]);
+    }
+
+    #[test]
+    fn corr3d_window_sum() {
+        let input = Volume::from_vec(1, 2, 2, 2, (1..=8).map(|x| x as f32).collect());
+        let w = WeightsOIDHW::from_vec(1, 1, 2, 2, 2, vec![1.0; 8]);
+        let out = corr3d(&input, &w);
+        assert_eq!((out.d, out.h, out.w), (1, 1, 1));
+        assert_eq!(out.data(), &[36.0]);
+    }
+
+    #[test]
+    fn flip_round_trips() {
+        let w = WeightsOIHW::from_vec(1, 1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let f = flip_2d(&w);
+        assert_eq!(f.data(), &[4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(flip_2d(&f).data(), w.data());
+        let w3 = WeightsOIDHW::from_vec(1, 1, 2, 1, 1, vec![1.0, 2.0]);
+        assert_eq!(flip_3d(&w3).data(), &[2.0, 1.0]);
+    }
+}

@@ -1,0 +1,295 @@
+//! The two deconvolution formulations in f32.
+
+use crate::tensor::{FeatureMap, Volume, WeightsOIHW, WeightsOIDHW};
+
+use super::conv::{corr2d, corr3d, flip_2d, flip_3d};
+use super::zero_insert::{insert_2d, insert_3d, pad_2d, pad_3d};
+
+// ---------------------------------------------------------------------
+// IOM: scatter-accumulate. out[o][ih·S+kh][iw·S+kw] += in[i][ih][iw]·w
+// ---------------------------------------------------------------------
+
+/// 2D IOM deconvolution over the full Eq. (1) extent.
+///
+/// Hot path of the coordinator's golden forward (§Perf): the inner
+/// loops work on contiguous row slices so the compiler can vectorize
+/// the `K`-wide scatter-accumulate.
+pub fn deconv2d_iom(
+    input: &FeatureMap<f32>,
+    w: &WeightsOIHW<f32>,
+    s: usize,
+) -> FeatureMap<f32> {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    assert_eq!(w.kh, w.kw, "square kernels only");
+    let k = w.kh;
+    let (in_h, in_w) = (input.h, input.w);
+    let oh = (in_h - 1) * s + k;
+    let ow = (in_w - 1) * s + k;
+    let mut out = FeatureMap::zeros(w.o, oh, ow);
+    let out_data = out.data_mut();
+    for o in 0..w.o {
+        let o_base = o * oh * ow;
+        for i in 0..input.c {
+            let kern = w.kernel(o, i);
+            let in_plane = input.plane(i);
+            for ih in 0..in_h {
+                let in_row = &in_plane[ih * in_w..(ih + 1) * in_w];
+                for kh in 0..k {
+                    let krow = &kern[kh * k..(kh + 1) * k];
+                    let orow_base = o_base + (ih * s + kh) * ow;
+                    if k == 3 {
+                        // benchmark-uniform K=3: unrolled scatter
+                        let (k0, k1, k2) = (krow[0], krow[1], krow[2]);
+                        for (iw, &a) in in_row.iter().enumerate() {
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let base = orow_base + iw * s;
+                            out_data[base] += a * k0;
+                            out_data[base + 1] += a * k1;
+                            out_data[base + 2] += a * k2;
+                        }
+                    } else {
+                        for (iw, &a) in in_row.iter().enumerate() {
+                            if a == 0.0 {
+                                continue; // IOM never multiplies a zero
+                            }
+                            let dst =
+                                &mut out_data[orow_base + iw * s..orow_base + iw * s + k];
+                            for (d, &kv) in dst.iter_mut().zip(krow) {
+                                *d += a * kv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 3D IOM deconvolution over the full Eq. (1) extent (Fig. 5).
+pub fn deconv3d_iom(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+) -> Volume<f32> {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    assert!(w.kd == w.kh && w.kh == w.kw, "cubic kernels only");
+    let k = w.kh;
+    let od = (input.d - 1) * s + k;
+    let oh = (input.h - 1) * s + k;
+    let ow = (input.w - 1) * s + k;
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    let out_data = out.data_mut();
+    let (in_d, in_h, in_w) = (input.d, input.h, input.w);
+    for o in 0..w.o {
+        let o_base = o * od * oh * ow;
+        for i in 0..input.c {
+            let kern = w.kernel(o, i);
+            for id in 0..in_d {
+                for ih in 0..in_h {
+                    for iw in 0..in_w {
+                        let a = input.at(i, id, ih, iw);
+                        if a == 0.0 {
+                            continue;
+                        }
+                        for kd in 0..k {
+                            let z_base = o_base + (id * s + kd) * oh * ow;
+                            for kh in 0..k {
+                                let krow = &kern[(kd * k + kh) * k..(kd * k + kh + 1) * k];
+                                let row = z_base + (ih * s + kh) * ow + iw * s;
+                                if k == 3 {
+                                    // benchmark-uniform K=3: unrolled
+                                    out_data[row] += a * krow[0];
+                                    out_data[row + 1] += a * krow[1];
+                                    out_data[row + 2] += a * krow[2];
+                                } else {
+                                    let dst = &mut out_data[row..row + k];
+                                    for (d, &kv) in dst.iter_mut().zip(krow) {
+                                        *d += a * kv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// OOM: zero-insert, pad K−1, correlate with the flipped kernel.
+// ---------------------------------------------------------------------
+
+/// 2D OOM deconvolution (conventional formulation) over the full extent.
+pub fn deconv2d_oom(
+    input: &FeatureMap<f32>,
+    w: &WeightsOIHW<f32>,
+    s: usize,
+) -> FeatureMap<f32> {
+    let k = w.kh;
+    let ins = insert_2d(input, s);
+    let padded = pad_2d(&ins, k - 1);
+    corr2d(&padded, &flip_2d(w))
+}
+
+/// 3D OOM deconvolution over the full extent.
+pub fn deconv3d_oom(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+) -> Volume<f32> {
+    let k = w.kh;
+    let ins = insert_3d(input, s);
+    let padded = pad_3d(&ins, k - 1);
+    corr3d(&padded, &flip_3d(w))
+}
+
+// ---------------------------------------------------------------------
+// Cropping: remove the K−S high-side edge padding (§IV-B).
+// ---------------------------------------------------------------------
+
+/// Keep `out[:, :h, :w]`.
+pub fn crop_2d(fm: &FeatureMap<f32>, h: usize, w: usize) -> FeatureMap<f32> {
+    assert!(h <= fm.h && w <= fm.w);
+    let mut out = FeatureMap::zeros(fm.c, h, w);
+    for c in 0..fm.c {
+        for y in 0..h {
+            for x in 0..w {
+                *out.at_mut(c, y, x) = fm.at(c, y, x);
+            }
+        }
+    }
+    out
+}
+
+/// Keep `out[:, :d, :h, :w]`.
+pub fn crop_3d(vol: &Volume<f32>, d: usize, h: usize, w: usize) -> Volume<f32> {
+    assert!(d <= vol.d && h <= vol.h && w <= vol.w);
+    let mut out = Volume::zeros(vol.c, d, h, w);
+    for c in 0..vol.c {
+        for z in 0..d {
+            for y in 0..h {
+                for x in 0..w {
+                    *out.at_mut(c, z, y, x) = vol.at(c, z, y, x);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::{zoo, LayerData};
+    use crate::util::Prng;
+
+    #[test]
+    fn iom_2d_single_pixel_is_kernel_copy() {
+        // One activation of value a at (0,0): output = a * kernel.
+        let input = FeatureMap::from_vec(1, 1, 1, vec![2.0]);
+        let w = WeightsOIHW::from_vec(1, 1, 3, 3, (1..=9).map(|x| x as f32).collect());
+        let out = deconv2d_iom(&input, &w, 2);
+        assert_eq!((out.h, out.w), (3, 3));
+        for idx in 0..9 {
+            assert_eq!(out.data()[idx], 2.0 * (idx + 1) as f32);
+        }
+    }
+
+    #[test]
+    fn iom_2d_overlap_adds() {
+        // Two adjacent activations with S=2, K=3 overlap in one column
+        // of width K−S=1.
+        let input = FeatureMap::from_vec(1, 1, 2, vec![1.0, 1.0]);
+        let w = WeightsOIHW::from_vec(1, 1, 3, 3, vec![1.0; 9]);
+        let out = deconv2d_iom(&input, &w, 2);
+        assert_eq!((out.h, out.w), (3, 5));
+        // column 2 is covered by both kernels -> value 2
+        for y in 0..3 {
+            assert_eq!(out.at(0, y, 2), 2.0, "overlap column");
+            assert_eq!(out.at(0, y, 0), 1.0);
+            assert_eq!(out.at(0, y, 4), 1.0);
+        }
+    }
+
+    #[test]
+    fn iom_equals_oom_2d_exact() {
+        let mut rng = Prng::new(17);
+        for (c_in, c_out, h, w) in [(1, 1, 2, 2), (3, 2, 4, 5), (2, 4, 3, 3)] {
+            let mut input = FeatureMap::zeros(c_in, h, w);
+            rng.fill_f32(input.data_mut(), -1.0, 1.0);
+            let mut wt = WeightsOIHW::zeros(c_out, c_in, 3, 3);
+            rng.fill_f32(wt.data_mut(), -1.0, 1.0);
+            for s in [1, 2, 3] {
+                let a = deconv2d_iom(&input, &wt, s);
+                let b = deconv2d_oom(&input, &wt, s);
+                assert_eq!((a.c, a.h, a.w), (b.c, b.h, b.w));
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert!((x - y).abs() < 1e-4, "IOM {x} vs OOM {y} (s={s})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn iom_equals_oom_3d_exact() {
+        let mut rng = Prng::new(23);
+        let mut input = Volume::zeros(2, 3, 3, 2);
+        rng.fill_f32(input.data_mut(), -1.0, 1.0);
+        let mut wt = WeightsOIDHW::zeros(2, 2, 3, 3, 3);
+        rng.fill_f32(wt.data_mut(), -1.0, 1.0);
+        for s in [1, 2] {
+            let a = deconv3d_iom(&input, &wt, s);
+            let b = deconv3d_oom(&input, &wt, s);
+            assert_eq!((a.c, a.d, a.h, a.w), (b.c, b.d, b.h, b.w));
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!((x - y).abs() < 1e-4, "IOM {x} vs OOM {y} (s={s})");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_zoo_layers_agree() {
+        for net in [zoo::tiny_2d()] {
+            for spec in &net.layers {
+                if let LayerData::D2 { input, weights } = LayerData::synth(spec, 5) {
+                    let a = deconv2d_iom(&input, &weights, spec.s);
+                    let b = deconv2d_oom(&input, &weights, spec.s);
+                    assert!(a.into_tensor().max_abs_diff(&b.into_tensor()) < 1e-3);
+                }
+            }
+        }
+        for net in [zoo::tiny_3d()] {
+            for spec in &net.layers {
+                if let LayerData::D3 { input, weights } = LayerData::synth(spec, 5) {
+                    let a = deconv3d_iom(&input, &weights, spec.s);
+                    let b = deconv3d_oom(&input, &weights, spec.s);
+                    assert!(a.into_tensor().max_abs_diff(&b.into_tensor()) < 1e-3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn crop_matches_expected_extent() {
+        let input = FeatureMap::from_vec(1, 2, 2, vec![1.0; 4]);
+        let w = WeightsOIHW::from_vec(1, 1, 3, 3, vec![1.0; 9]);
+        let full = deconv2d_iom(&input, &w, 2);
+        assert_eq!((full.h, full.w), (5, 5)); // (2-1)*2+3
+        let cropped = crop_2d(&full, 4, 4); // I*S = 4
+        assert_eq!((cropped.h, cropped.w), (4, 4));
+        assert_eq!(cropped.at(0, 0, 0), full.at(0, 0, 0));
+    }
+
+    #[test]
+    fn output_extents_match_eq1() {
+        let input = Volume::from_vec(1, 2, 3, 4, vec![1.0; 24]);
+        let w = WeightsOIDHW::from_vec(1, 1, 3, 3, 3, vec![1.0; 27]);
+        let out = deconv3d_iom(&input, &w, 2);
+        assert_eq!((out.d, out.h, out.w), (5, 7, 9));
+    }
+}

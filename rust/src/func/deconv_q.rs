@@ -1,0 +1,208 @@
+//! Q8.8 IOM deconvolution — the bit-exact model of the accelerator
+//! datapath. Every product is a DSP48-style wide multiply, every
+//! overlap addition happens in the 48-bit accumulator, and write-back
+//! rounds once — matching the PE's "multiply, accumulate overlaps from
+//! FIFOs, write local result" pipeline, so the functional simulator
+//! tier can be compared against this reference bit-for-bit.
+
+use crate::fixed::{Acc48, Q88};
+use crate::tensor::{FeatureMap, Volume, WeightsOIHW, WeightsOIDHW};
+
+/// 2D IOM deconvolution in Q8.8 over the full Eq. (1) extent.
+///
+/// Accumulation is performed in Q16.16/48-bit per output element across
+/// *all* input channels before a single rounding at write-back (the
+/// adder tree + output buffer behaviour).
+pub fn deconv2d_iom_q(
+    input: &FeatureMap<Q88>,
+    w: &WeightsOIHW<Q88>,
+    s: usize,
+) -> FeatureMap<Q88> {
+    assert_eq!(input.c, w.i);
+    let k = w.kh;
+    let oh = (input.h - 1) * s + k;
+    let ow = (input.w - 1) * s + k;
+    let mut acc: Vec<Acc48> = vec![Acc48::ZERO; w.o * oh * ow];
+    for o in 0..w.o {
+        for i in 0..input.c {
+            let kern = w.kernel(o, i);
+            for ih in 0..input.h {
+                for iw in 0..input.w {
+                    let a = input.at(i, ih, iw);
+                    if a.is_zero() {
+                        continue;
+                    }
+                    for kh in 0..k {
+                        for kw in 0..k {
+                            let oy = ih * s + kh;
+                            let ox = iw * s + kw;
+                            acc[(o * oh + oy) * ow + ox].mac(a, kern[kh * k + kw]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    FeatureMap::from_vec(w.o, oh, ow, acc.into_iter().map(|a| a.to_q88()).collect())
+}
+
+/// 3D IOM deconvolution in Q8.8 over the full Eq. (1) extent.
+pub fn deconv3d_iom_q(
+    input: &Volume<Q88>,
+    w: &WeightsOIDHW<Q88>,
+    s: usize,
+) -> Volume<Q88> {
+    assert_eq!(input.c, w.i);
+    let k = w.kh;
+    let od = (input.d - 1) * s + k;
+    let oh = (input.h - 1) * s + k;
+    let ow = (input.w - 1) * s + k;
+    let mut acc: Vec<Acc48> = vec![Acc48::ZERO; w.o * od * oh * ow];
+    for o in 0..w.o {
+        for i in 0..input.c {
+            let kern = w.kernel(o, i);
+            for id in 0..input.d {
+                for ih in 0..input.h {
+                    for iw in 0..input.w {
+                        let a = input.at(i, id, ih, iw);
+                        if a.is_zero() {
+                            continue;
+                        }
+                        for kd in 0..k {
+                            for kh in 0..k {
+                                for kw in 0..k {
+                                    let oz = id * s + kd;
+                                    let oy = ih * s + kh;
+                                    let ox = iw * s + kw;
+                                    acc[((o * od + oz) * oh + oy) * ow + ox]
+                                        .mac(a, kern[(kd * k + kh) * k + kw]);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Volume::from_vec(
+        w.o,
+        od,
+        oh,
+        ow,
+        acc.into_iter().map(|a| a.to_q88()).collect(),
+    )
+}
+
+/// Crop a Q8.8 feature map (high-side, like [`super::crop_2d`]).
+pub fn crop_2d_q(fm: &FeatureMap<Q88>, h: usize, w: usize) -> FeatureMap<Q88> {
+    assert!(h <= fm.h && w <= fm.w);
+    let mut out = FeatureMap::zeros(fm.c, h, w);
+    for c in 0..fm.c {
+        for y in 0..h {
+            for x in 0..w {
+                *out.at_mut(c, y, x) = fm.at(c, y, x);
+            }
+        }
+    }
+    out
+}
+
+/// Crop a Q8.8 volume.
+pub fn crop_3d_q(vol: &Volume<Q88>, d: usize, h: usize, w: usize) -> Volume<Q88> {
+    assert!(d <= vol.d && h <= vol.h && w <= vol.w);
+    let mut out = Volume::zeros(vol.c, d, h, w);
+    for c in 0..vol.c {
+        for z in 0..d {
+            for y in 0..h {
+                for x in 0..w {
+                    *out.at_mut(c, z, y, x) = vol.at(c, z, y, x);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::{zoo, LayerData, LayerDataQ};
+    use crate::func::{deconv2d_iom, deconv3d_iom};
+
+    /// Q8.8 IOM tracks the f32 IOM within accumulated quantization
+    /// error: each of the `in_c · K^d` products contributes at most
+    /// ~eps of input error times weight magnitude.
+    #[test]
+    fn q88_tracks_f32_2d() {
+        let spec = &zoo::tiny_2d().layers[0];
+        let data = LayerData::synth(spec, 31);
+        let (input, weights) = match &data {
+            LayerData::D2 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let fout = deconv2d_iom(input, weights, spec.s);
+        let q = data.quantize();
+        let (qi, qw) = match &q {
+            LayerDataQ::D2 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let qout = deconv2d_iom_q(qi, qw, spec.s);
+        // error bound: each product has quant error <= (|a_err·w| + |a·w_err|)
+        // ~ 2 * (0.5/256) per product; chains are in_c*k^2 = 36 long here.
+        let bound = 2.0 * (0.5 / 256.0) * (spec.in_c * 9) as f32 * 1.0 + 0.01;
+        for (f, qv) in fout.data().iter().zip(qout.data()) {
+            assert!(
+                (f - qv.to_f32()).abs() < bound,
+                "f32 {f} vs q {q}",
+                q = qv.to_f32()
+            );
+        }
+    }
+
+    #[test]
+    fn q88_tracks_f32_3d() {
+        let spec = &zoo::tiny_3d().layers[0];
+        let data = LayerData::synth(spec, 77);
+        let (input, weights) = match &data {
+            LayerData::D3 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let fout = deconv3d_iom(input, weights, spec.s);
+        let q = data.quantize();
+        let (qi, qw) = match &q {
+            LayerDataQ::D3 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let qout = deconv3d_iom_q(qi, qw, spec.s);
+        let bound = 2.0 * (0.5 / 256.0) * (spec.in_c * 27) as f32 + 0.01;
+        for (f, qv) in fout.data().iter().zip(qout.data()) {
+            assert!((f - qv.to_f32()).abs() < bound);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = &zoo::tiny_2d().layers[0];
+        let q = LayerData::synth(spec, 1).quantize();
+        let (qi, qw) = match &q {
+            LayerDataQ::D2 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let a = deconv2d_iom_q(qi, qw, spec.s);
+        let b = deconv2d_iom_q(qi, qw, spec.s);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn crop_q_preserves_prefix() {
+        let fm = FeatureMap::from_vec(
+            1,
+            3,
+            3,
+            (0..9).map(|i| Q88::from_int(i)).collect(),
+        );
+        let c = crop_2d_q(&fm, 2, 2);
+        assert_eq!(c.at(0, 0, 0), Q88::from_int(0));
+        assert_eq!(c.at(0, 1, 1), Q88::from_int(4));
+    }
+}

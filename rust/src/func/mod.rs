@@ -1,0 +1,34 @@
+//! Functional golden models of 2D/3D deconvolution.
+//!
+//! Two mathematically equal formulations (§III, Fig. 3):
+//!
+//! * **OOM** (output-oriented, the conventional baseline): insert
+//!   `S − 1` zeros between activations, pad the border by `K − 1`, and
+//!   run a dense convolution. Scans every inserted zero — the
+//!   inefficiency the paper attacks.
+//! * **IOM** (input-oriented, the paper's mapping): for every *input*
+//!   activation, scatter `activation × kernel` into the output at
+//!   offset `(i·S + k)` and accumulate the overlaps. Touches only
+//!   useful products — exactly what each PE of the accelerator
+//!   computes (Fig. 5).
+//!
+//! `iom == oom` on every shape is the correctness spine of the repo:
+//! it is asserted here in unit tests, by the property suite, by the
+//! Python kernel tests (Pallas IOM kernel vs `ref.py` OOM oracle), and
+//! by the simulator's functional tier (bit-exact in Q8.8).
+//!
+//! Output conventions: `*_full` returns the Eq. (1) extent
+//! `(I − 1)·S + K`; [`crop_2d`]/[`crop_3d`] remove the `K − S` edge
+//! padding from the high side of each axis (matching
+//! `jax.lax.conv_transpose(..., 'VALID')[..., :I·S, :I·S]` — see
+//! `python/compile/kernels/ref.py`).
+
+pub mod conv;
+pub mod deconv;
+pub mod deconv_q;
+pub mod zero_insert;
+
+pub use deconv::{
+    crop_2d, crop_3d, deconv2d_iom, deconv2d_oom, deconv3d_iom, deconv3d_oom,
+};
+pub use deconv_q::{deconv2d_iom_q, deconv3d_iom_q};

@@ -1,0 +1,130 @@
+//! Zero insertion (§III, Fig. 3): the transformation that turns a
+//! deconvolution into a dense convolution, and the source of the
+//! sparsity plotted in Fig. 1.
+
+use crate::tensor::{FeatureMap, Volume};
+
+/// Insert `s − 1` zeros between activations along H and W.
+/// Output extent per axis: `(I − 1)·s + 1`.
+pub fn insert_2d(fm: &FeatureMap<f32>, s: usize) -> FeatureMap<f32> {
+    assert!(s >= 1);
+    let oh = (fm.h - 1) * s + 1;
+    let ow = (fm.w - 1) * s + 1;
+    let mut out = FeatureMap::zeros(fm.c, oh, ow);
+    for c in 0..fm.c {
+        for h in 0..fm.h {
+            for w in 0..fm.w {
+                *out.at_mut(c, h * s, w * s) = fm.at(c, h, w);
+            }
+        }
+    }
+    out
+}
+
+/// Insert `s − 1` zeros between activations along D, H and W — including
+/// the all-zero "M1 planes" between consecutive 2D data planes that
+/// Fig. 3(b) highlights.
+pub fn insert_3d(vol: &Volume<f32>, s: usize) -> Volume<f32> {
+    assert!(s >= 1);
+    let od = (vol.d - 1) * s + 1;
+    let oh = (vol.h - 1) * s + 1;
+    let ow = (vol.w - 1) * s + 1;
+    let mut out = Volume::zeros(vol.c, od, oh, ow);
+    for c in 0..vol.c {
+        for d in 0..vol.d {
+            for h in 0..vol.h {
+                for w in 0..vol.w {
+                    *out.at_mut(c, d * s, h * s, w * s) = vol.at(c, d, h, w);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pad a 2D map with a zero border of `p` on every side.
+pub fn pad_2d(fm: &FeatureMap<f32>, p: usize) -> FeatureMap<f32> {
+    let mut out = FeatureMap::zeros(fm.c, fm.h + 2 * p, fm.w + 2 * p);
+    for c in 0..fm.c {
+        for h in 0..fm.h {
+            for w in 0..fm.w {
+                *out.at_mut(c, h + p, w + p) = fm.at(c, h, w);
+            }
+        }
+    }
+    out
+}
+
+/// Pad a 3D volume with a zero border of `p` on every side.
+pub fn pad_3d(vol: &Volume<f32>, p: usize) -> Volume<f32> {
+    let mut out = Volume::zeros(vol.c, vol.d + 2 * p, vol.h + 2 * p, vol.w + 2 * p);
+    for c in 0..vol.c {
+        for d in 0..vol.d {
+            for h in 0..vol.h {
+                for w in 0..vol.w {
+                    *out.at_mut(c, d + p, h + p, w + p) = vol.at(c, d, h, w);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_2d_positions_and_zeros() {
+        let fm = FeatureMap::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let ins = insert_2d(&fm, 2);
+        assert_eq!((ins.h, ins.w), (3, 3));
+        assert_eq!(ins.at(0, 0, 0), 1.0);
+        assert_eq!(ins.at(0, 0, 2), 2.0);
+        assert_eq!(ins.at(0, 2, 0), 3.0);
+        assert_eq!(ins.at(0, 2, 2), 4.0);
+        // all other 5 positions are inserted zeros
+        let zeros = ins.data().iter().filter(|&&x| x == 0.0).count();
+        assert_eq!(zeros, 5);
+    }
+
+    #[test]
+    fn insert_stride_1_is_identity() {
+        let fm = FeatureMap::from_vec(2, 2, 2, (0..8).map(|x| x as f32 + 1.0).collect());
+        let ins = insert_2d(&fm, 1);
+        assert_eq!(ins, fm);
+    }
+
+    #[test]
+    fn insert_3d_m1_planes_are_zero() {
+        let vol = Volume::from_vec(1, 2, 2, 2, vec![1.0; 8]);
+        let ins = insert_3d(&vol, 2);
+        assert_eq!((ins.d, ins.h, ins.w), (3, 3, 3));
+        // the middle depth plane (an "M1 plane") must be entirely zero
+        for h in 0..3 {
+            for w in 0..3 {
+                assert_eq!(ins.at(0, 1, h, w), 0.0);
+            }
+        }
+        // 8 nonzeros out of 27
+        let nz = ins.data().iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nz, 8);
+    }
+
+    #[test]
+    fn pad_2d_border() {
+        let fm = FeatureMap::from_vec(1, 1, 1, vec![5.0]);
+        let p = pad_2d(&fm, 2);
+        assert_eq!((p.h, p.w), (5, 5));
+        assert_eq!(p.at(0, 2, 2), 5.0);
+        assert_eq!(p.data().iter().filter(|&&x| x != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn pad_3d_border() {
+        let vol = Volume::from_vec(1, 1, 1, 1, vec![5.0]);
+        let p = pad_3d(&vol, 1);
+        assert_eq!((p.d, p.h, p.w), (3, 3, 3));
+        assert_eq!(p.at(0, 1, 1, 1), 5.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! # udcnn — a uniform 2D/3D deconvolutional-network accelerator stack
+//!
+//! Reproduction of *"Towards a Uniform Architecture for the Efficient
+//! Implementation of 2D and 3D Deconvolutional Neural Networks on FPGAs"*
+//! (Wang, Shen, Wen, Zhang — NUDT, 2019).
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`fixed`] — Q8.8 16-bit fixed-point arithmetic (the accelerator's
+//!   datapath numeric format).
+//! * [`tensor`] — a small dense tensor library (1–5 dimensional) used by
+//!   the golden models, the simulator and the baselines.
+//! * [`dcnn`] — layer geometry, the four benchmark networks (DCGAN,
+//!   GP-GAN, 3D-GAN, V-Net decoder) and the sparsity analyzer (Fig. 1).
+//! * [`func`] — functional golden models of deconvolution: the OOM
+//!   formulation (zero-insertion + dense convolution, the paper's
+//!   baseline) and the IOM formulation (scatter-accumulate, the paper's
+//!   contribution), in both `f32` and Q8.8.
+//! * [`accel`] — the paper's system contribution: a cycle-level simulator
+//!   of the uniform PE-mesh architecture of Fig. 2 (PEs with overlap
+//!   FIFOs, weight shift chain, adder trees, triple on-chip buffers,
+//!   DDR memory controller), the 3D-IOM dataflow of Fig. 4/5, the
+//!   blocking scheduler, and the design-space explorer behind Table II.
+//! * [`resource`] — the VC709 resource model behind Table III.
+//! * [`energy`] — the energy model behind Fig. 7(b).
+//! * [`baseline`] — CPU (measured, multithreaded) and GPU (analytic
+//!   GTX 1080 model) comparison points for Fig. 7.
+//! * [`runtime`] — PJRT client wrapper: loads the AOT-compiled HLO text
+//!   artifacts produced by `python/compile/aot.py` and executes them.
+//! * [`coordinator`] — the L3 service face: a batched inference service
+//!   that routes deconvolution requests onto accelerator instances.
+//! * [`report`] — paper-style table/figure text rendering.
+//! * [`benchkit`] — a minimal statistics-aware benchmark harness (the
+//!   build environment is fully offline and has no criterion crate; see
+//!   DESIGN.md §1 for the substitution table).
+//! * [`propcheck`] — a minimal property-based testing framework with
+//!   seeded generators and shrinking (offline substitute for proptest).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use udcnn::dcnn::zoo;
+//! use udcnn::accel::{AccelConfig, simulate_layer};
+//!
+//! let net = zoo::dcgan();
+//! let cfg = AccelConfig::paper_2d();
+//! for layer in &net.layers {
+//!     let m = simulate_layer(&cfg, layer);
+//!     println!("{}: util={:.1}% tops={:.2}", layer.name, 100.0 * m.pe_utilization(), m.effective_tops(&cfg));
+//! }
+//! ```
+
+pub mod cli;
+pub mod util;
+pub mod fixed;
+pub mod tensor;
+pub mod dcnn;
+pub mod func;
+pub mod accel;
+pub mod resource;
+pub mod energy;
+pub mod baseline;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod benchkit;
+pub mod propcheck;
+
+pub use accel::{AccelConfig, simulate_layer};
+pub use dcnn::{LayerSpec, Network};

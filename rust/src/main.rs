@@ -1,0 +1,323 @@
+//! `udcnn` CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; the offline build has no clap):
+//!
+//! ```text
+//! udcnn simulate   [--net NAME] [--batch N] [--all]     Fig. 6 numbers
+//! udcnn sparsity                                        Fig. 1 numbers
+//! udcnn resources                                       Table III
+//! udcnn dse        [--max-pes N]                        Table II rationale
+//! udcnn compare    [--net NAME]                         Fig. 7 numbers
+//! udcnn zoo        --dump                               layer shapes (JSON-ish)
+//! udcnn verify     [--artifacts DIR]                    PJRT artifacts vs golden
+//! udcnn serve      [--requests N]                       batched service demo
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use udcnn::accel::{simulate_layer, simulate_network, AccelConfig};
+use udcnn::baseline::{CpuBaseline, GpuModel};
+use udcnn::cli::{network_by_name, parse_opts};
+use udcnn::coordinator::{BatchPolicy, InferenceService};
+use udcnn::dcnn::{sparsity, zoo, Network};
+use udcnn::energy;
+use udcnn::report::{bar_chart, ratio, Table};
+use udcnn::resource;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let opts = parse_opts(&args[1..]);
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(&opts),
+        "plan" => cmd_plan(&opts),
+        "sparsity" => cmd_sparsity(),
+        "resources" => cmd_resources(),
+        "dse" => cmd_dse(&opts),
+        "compare" => cmd_compare(&opts),
+        "zoo" => cmd_zoo(),
+        "verify" => cmd_verify(&opts),
+        "serve" => cmd_serve(&opts),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `udcnn help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "udcnn — uniform 2D/3D DCNN accelerator (Wang et al. 2019 reproduction)\n\
+         \n\
+         usage: udcnn <simulate|sparsity|resources|dse|compare|zoo|verify|serve> [options]\n\
+         \n\
+         simulate   --net NAME | --all   [--batch N]   per-layer util + TOPS (Fig. 6)\n\
+         plan       --net NAME [--layer NAME]          explain the execution schedule\n\
+         sparsity                                      inserted-map sparsity (Fig. 1)\n\
+         resources                                     VC709 utilization (Table III)\n\
+         dse        [--max-pes N]                      design-space sweep (Table II)\n\
+         compare    [--net NAME]                       CPU/GPU/FPGA (Fig. 7)\n\
+         zoo                                           dump benchmark layer shapes\n\
+         verify     [--artifacts DIR]                  run PJRT artifacts vs golden\n\
+         serve      [--requests N]                     batched inference service demo"
+    );
+}
+
+fn cmd_simulate(opts: &BTreeMap<String, String>) -> Result<()> {
+    let nets: Vec<Network> = if opts.contains_key("all") || !opts.contains_key("net") {
+        zoo::all_benchmarks()
+    } else {
+        vec![network_by_name(opts.get("net").unwrap())?]
+    };
+    let batch: usize = opts
+        .get("batch")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(8);
+    let mut t = Table::new(
+        "Fig. 6 — PE utilization and throughput",
+        &["layer", "bound", "util %", "eff TOPS", "useful TOPS", "ms/batch"],
+    );
+    for net in &nets {
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        cfg.batch = batch;
+        for layer in &net.layers {
+            let m = simulate_layer(&cfg, layer);
+            t.row(&[
+                layer.name.clone(),
+                m.bound_by.to_string(),
+                format!("{:.1}", 100.0 * m.pe_utilization()),
+                format!("{:.2}", m.effective_tops(&cfg)),
+                format!("{:.2}", m.useful_tops()),
+                format!("{:.3}", m.time_s() * 1e3),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_plan(opts: &BTreeMap<String, String>) -> Result<()> {
+    let net = network_by_name(opts.get("net").map(|s| s.as_str()).unwrap_or("dcgan"))?;
+    let cfg = AccelConfig::paper_for(net.dims);
+    match opts.get("layer") {
+        Some(name) => {
+            let layer = net
+                .layer(name)
+                .ok_or_else(|| anyhow::anyhow!("no layer '{name}' in {}", net.name))?;
+            print!("{}", udcnn::accel::plan::explain(&cfg, layer));
+        }
+        None => {
+            for layer in &net.layers {
+                print!("{}", udcnn::accel::plan::explain(&cfg, layer));
+                println!();
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sparsity() -> Result<()> {
+    let rows = sparsity::fig1_dataset(&[zoo::dcgan(), zoo::gan3d()], 7);
+    let mut t = Table::new(
+        "Fig. 1 — sparsity of the deconvolutional layers",
+        &["layer", "analytic", "empirical"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.layer.clone(),
+            format!("{:.3}", r.analytic),
+            format!("{:.3}", r.empirical),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_resources() -> Result<()> {
+    let est = resource::estimate(&AccelConfig::paper_3d());
+    let p = est.percentages();
+    let mut t = Table::new(
+        "Table III — resource utilization of Xilinx VC709",
+        &["resource", "used", "device", "percent"],
+    );
+    t.row(&["DSP48E".into(), est.dsp.to_string(), resource::VC709_DSP.to_string(), format!("{:.2}", p[0])]);
+    t.row(&["BRAM36".into(), est.bram36.to_string(), resource::VC709_BRAM36.to_string(), format!("{:.2}", p[1])]);
+    t.row(&["Flip-Flops".into(), est.ff.to_string(), resource::VC709_FF.to_string(), format!("{:.2}", p[2])]);
+    t.row(&["LUTs".into(), est.lut.to_string(), resource::VC709_LUT.to_string(), format!("{:.2}", p[3])]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_dse(opts: &BTreeMap<String, String>) -> Result<()> {
+    use udcnn::accel::dse;
+    let max_pes: usize = opts
+        .get("max-pes")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2048);
+    let budget = dse::DseBudget {
+        max_pes,
+        pow2_tn: true,
+    };
+    let nets = zoo::all_benchmarks();
+    let points = dse::sweep(&nets, &budget);
+    let mut t = Table::new(
+        "Table II rationale — design-space sweep (best 10 of the space)",
+        &["Tm", "Tn", "Tz", "Tr", "Tc", "PEs", "Mcycles", "util %"],
+    );
+    for p in points.iter().take(10) {
+        t.row(&[
+            p.cfg.tm.to_string(),
+            p.cfg.tn.to_string(),
+            p.cfg.tz.to_string(),
+            p.cfg.tr.to_string(),
+            p.cfg.tc.to_string(),
+            p.cfg.total_pes().to_string(),
+            format!("{:.1}", p.total_cycles as f64 / 1e6),
+            format!("{:.1}", 100.0 * p.avg_utilization),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_compare(opts: &BTreeMap<String, String>) -> Result<()> {
+    let nets: Vec<Network> = match opts.get("net") {
+        Some(n) => vec![network_by_name(n)?],
+        None => zoo::all_benchmarks(),
+    };
+    let cpu = CpuBaseline::default();
+    let gpu = GpuModel::default();
+    let batch = 8usize;
+    let mut perf_items = Vec::new();
+    let mut energy_items = Vec::new();
+    for net in &nets {
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        cfg.batch = batch;
+        let fm = simulate_network(&cfg, net);
+        let t_fpga = fm.total_time_s();
+        let t_cpu: f64 = net
+            .layers
+            .iter()
+            .map(|l| cpu.run_layer(l).seconds_per_item * batch as f64)
+            .sum();
+        let t_gpu = gpu.network_seconds(net, batch);
+        let dense: u64 = net
+            .layers
+            .iter()
+            .map(udcnn::accel::metrics::dense_equivalent_macs)
+            .sum();
+        let ops = 2.0 * dense as f64 * batch as f64;
+        let p_fpga: f64 = fm
+            .layers
+            .iter()
+            .map(|m| energy::fpga_watts(&cfg, m) * m.time_s())
+            .sum::<f64>()
+            / t_fpga;
+        println!(
+            "{}: FPGA {:.2} ms  CPU {:.1} ms ({})  GPU {:.2} ms   speedup vs CPU {}  vs GPU {}",
+            net.name,
+            t_fpga * 1e3,
+            t_cpu * 1e3,
+            if net.layers.iter().all(|l| l.op_counts().dense_macs <= cpu.direct_limit_macs) { "measured" } else { "partly extrapolated" },
+            t_gpu * 1e3,
+            ratio(t_cpu / t_fpga),
+            ratio(t_gpu / t_fpga),
+        );
+        perf_items.push((format!("{} fpga", net.name), ops / t_fpga / 1e12));
+        perf_items.push((format!("{} gpu", net.name), ops / t_gpu / 1e12));
+        perf_items.push((format!("{} cpu", net.name), ops / t_cpu / 1e12));
+        let e_fpga = energy::gops_per_joule(ops, t_fpga, p_fpga);
+        let e_cpu = energy::gops_per_joule(ops, t_cpu, energy::CPU_WATTS);
+        let e_gpu = energy::gops_per_joule(ops, t_gpu, energy::GPU_WATTS);
+        energy_items.push((format!("{} fpga", net.name), e_fpga));
+        energy_items.push((format!("{} gpu", net.name), e_gpu));
+        energy_items.push((format!("{} cpu", net.name), e_cpu));
+    }
+    println!();
+    print!("{}", bar_chart("Fig. 7(a) — throughput (dense-equiv TOPS)", &perf_items, "TOPS", 40));
+    println!();
+    print!("{}", bar_chart("Fig. 7(b) — energy efficiency (GOPS/J)", &energy_items, "GOPS/J", 40));
+    Ok(())
+}
+
+fn cmd_zoo() -> Result<()> {
+    for net in zoo::all_benchmarks() {
+        println!("network {} ({})", net.name, net.dims);
+        for l in &net.layers {
+            println!("  {l}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_verify(opts: &BTreeMap<String, String>) -> Result<()> {
+    use udcnn::runtime::{ArtifactSet, Runtime};
+    let dir = opts
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(ArtifactSet::default_dir);
+    let set = ArtifactSet::discover(&dir)?;
+    if set.is_empty() {
+        bail!("no .hlo.txt artifacts in {} — run `make artifacts`", dir.display());
+    }
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {} ({} devices)", rt.platform(), rt.device_count());
+    for name in set.names() {
+        let exe = rt.load_hlo_text(set.get(name).unwrap())?;
+        println!("  compiled artifact '{}' OK", exe.name);
+    }
+    println!("all {} artifacts compile", set.names().len());
+    Ok(())
+}
+
+fn cmd_serve(opts: &BTreeMap<String, String>) -> Result<()> {
+    let n: usize = opts
+        .get("requests")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(16);
+    let net = zoo::tiny_2d();
+    let in_elems = net.layers[0].input_elems();
+    let mut svc = InferenceService::start(vec![net], BatchPolicy::default());
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push(svc.submit("tiny-2d", vec![0.01 * i as f32; in_elems])?);
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(30))?;
+        println!(
+            "req {i}: batch={} accel={:.3} ms wall={:.3} ms",
+            r.batch_size,
+            r.accel_latency_s * 1e3,
+            r.wall_latency_s * 1e3
+        );
+    }
+    let stats = svc.stats();
+    println!(
+        "served {} requests in {} batches (avg batch {:.2})",
+        stats.requests,
+        stats.batches,
+        stats.avg_batch()
+    );
+    svc.shutdown();
+    Ok(())
+}

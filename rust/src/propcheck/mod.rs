@@ -1,0 +1,180 @@
+//! Minimal property-based testing framework (offline substitute for
+//! proptest): seeded generators, configurable case counts, and
+//! input reporting on failure. Shrinking is size-directed: generators
+//! draw from a size budget that the runner sweeps from small to large,
+//! so the first failing case is already near-minimal.
+
+use crate::util::Prng;
+
+/// A generation context: PRNG + size budget.
+pub struct Gen {
+    pub rng: Prng,
+    /// Current size budget (grows across cases).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen {
+            rng: Prng::new(seed),
+            size,
+        }
+    }
+
+    /// Integer in `[lo, hi]`, biased toward the low end at small sizes.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo).min(self.size.max(1));
+        self.rng.range(lo, lo + span)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    /// Pick one of the provided choices.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// A vector of length `n` built by `f`.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Size budget starts here and ramps to `max_size`.
+    pub min_size: usize,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            seed: 0x5EED,
+            min_size: 1,
+            max_size: 16,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs. `prop` returns
+/// `Err(description)` (or panics) on failure; the runner reports the
+/// case number, seed and size so the case is replayable.
+pub fn check<F>(cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // ramp the size budget from min to max across the run
+        let size = cfg.min_size
+            + (cfg.max_size - cfg.min_size) * case / cfg.cases.max(1).max(1);
+        let seed = cfg.seed.wrapping_add(case as u64 * 0x9E37_79B9);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case}/{} (seed={seed:#x}, size={size}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Convenience: `check` with default config.
+pub fn quickcheck<F>(prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check(Config::default(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        quickcheck(|g| {
+            let a = g.int(0, 100);
+            let b = g.int(0, 100);
+            if a + b >= a {
+                Ok(())
+            } else {
+                Err("addition broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failing_case() {
+        check(
+            Config {
+                cases: 200,
+                min_size: 16,
+                max_size: 16,
+                ..Default::default()
+            },
+            |g| {
+                let v = g.int(0, 20);
+                if v < 8 {
+                    Ok(())
+                } else {
+                    Err(format!("v={v}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn size_ramp_reaches_max() {
+        let mut max_seen = 0;
+        check(
+            Config {
+                cases: 32,
+                min_size: 1,
+                max_size: 10,
+                seed: 1,
+            },
+            |g| {
+                max_seen = max_seen.max(g.size);
+                Ok(())
+            },
+        );
+        assert!(max_seen >= 9);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check(
+            Config {
+                cases: 8,
+                ..Default::default()
+            },
+            |g| {
+                first.push(g.int(0, 1000));
+                Ok(())
+            },
+        );
+        let mut second = Vec::new();
+        check(
+            Config {
+                cases: 8,
+                ..Default::default()
+            },
+            |g| {
+                second.push(g.int(0, 1000));
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,126 @@
+//! Paper-style table/figure rendering: plain-text tables and ASCII
+//! bar charts that `cargo bench` prints and `make reproduce` captures
+//! into `reports/` for EXPERIMENTS.md.
+
+/// A simple column-aligned text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("--- {} ---\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+        println!();
+    }
+}
+
+/// ASCII horizontal bar chart (for the "figure" reproductions).
+pub fn bar_chart(title: &str, items: &[(String, f64)], unit: &str, width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN_POSITIVE, f64::max);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("--- {title} ---\n");
+    for (label, v) in items {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<label_w$}  {:>9.3} {unit}  |{}\n",
+            label,
+            v,
+            "#".repeat(n),
+        ));
+    }
+    out
+}
+
+/// Format a ratio like the paper's "63.3x".
+pub fn ratio(v: f64) -> String {
+    format!("{v:.1}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer-name".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("--- T ---"));
+        assert!(r.contains("longer-name"));
+        let lines: Vec<&str> = r.lines().collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let c = bar_chart(
+            "chart",
+            &[("x".into(), 1.0), ("y".into(), 2.0)],
+            "TOPS",
+            10,
+        );
+        let lines: Vec<&str> = c.lines().collect();
+        assert!(lines[1].matches('#').count() == 5);
+        assert!(lines[2].matches('#').count() == 10);
+    }
+
+    #[test]
+    fn ratio_format() {
+        assert_eq!(ratio(63.31), "63.3x");
+    }
+}

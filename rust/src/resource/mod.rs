@@ -1,0 +1,151 @@
+//! VC709 (Virtex-7 XC7VX690T) resource model — Table III.
+//!
+//! The paper reports a single fixed bitstream whose utilization we
+//! model as an explicit function of the architecture parameters. The
+//! per-unit constants are calibrated so the Table-II configuration
+//! reproduces Table III *exactly*; the same functions then extrapolate
+//! to any DSE candidate (used as the fit constraint in
+//! [`crate::accel::dse`]).
+//!
+//! | Resource | model | Table III |
+//! |---|---|---|
+//! | DSP48E | one per PE multiplier + two per output-channel lane (`T_m·T_n·T_z`) accumulate/scale stage | 2304 (64.00 %) |
+//! | BRAM36 | input/weight/output buffers at 4.5 KiB each + 28 for the memory controller FIFOs | 712 (48.44 %) |
+//! | FF | 270 per PE (Ra/Rw/acc/FIFO pointers) + 64 per adder-tree adder + 5030 control | 566182 (65.34 %) |
+//! | LUT | 135 per PE (mux/route/FIFO RAM) + 96 per adder + 3524 control | 292292 (67.48 %) |
+
+use crate::accel::AccelConfig;
+use crate::util::{ceil_div, ceil_log2};
+
+/// XC7VX690T device capacities.
+pub const VC709_DSP: usize = 3600;
+pub const VC709_BRAM36: usize = 1470;
+pub const VC709_FF: usize = 866_400;
+pub const VC709_LUT: usize = 433_200;
+
+/// Calibrated per-unit costs (see module docs).
+pub const FF_PER_PE: usize = 270;
+pub const FF_PER_ADDER: usize = 64;
+pub const FF_CONTROL: usize = 5030;
+pub const LUT_PER_PE: usize = 135;
+pub const LUT_PER_ADDER: usize = 96;
+pub const LUT_CONTROL: usize = 3524;
+pub const BRAM_MISC: usize = 28;
+/// Bytes per BRAM36 (36 Kbit).
+pub const BRAM36_BYTES: usize = 4608;
+
+/// A resource estimate for one configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResourceEstimate {
+    pub dsp: usize,
+    pub bram36: usize,
+    pub ff: usize,
+    pub lut: usize,
+}
+
+impl ResourceEstimate {
+    /// Utilization percentages against the VC709.
+    pub fn percentages(&self) -> [f64; 4] {
+        [
+            100.0 * self.dsp as f64 / VC709_DSP as f64,
+            100.0 * self.bram36 as f64 / VC709_BRAM36 as f64,
+            100.0 * self.ff as f64 / VC709_FF as f64,
+            100.0 * self.lut as f64 / VC709_LUT as f64,
+        ]
+    }
+
+    /// Does the design fit the device?
+    pub fn fits_vc709(&self) -> bool {
+        self.dsp <= VC709_DSP
+            && self.bram36 <= VC709_BRAM36
+            && self.ff <= VC709_FF
+            && self.lut <= VC709_LUT
+    }
+}
+
+/// Physical adder count for a bitstream that must serve both operating
+/// points of the uniform architecture: `T_m·T_c·max(T_z·log₂T_n)` over
+/// the supported modes. For the paper's fixed engine (T_z·T_n = 64
+/// lanes reconfigured between 64×1 and 16×4) this is
+/// `2·4·max(6, 16) = 128`.
+pub fn physical_adders(cfg: &AccelConfig) -> usize {
+    let lanes_3d = cfg.tz * ceil_log2(cfg.tn) as usize;
+    // 2D fold: tz merges into tn -> 1 · log2(tn · tz)
+    let lanes_2d = ceil_log2(cfg.tn * cfg.tz) as usize;
+    cfg.tm * cfg.tc * lanes_3d.max(lanes_2d)
+}
+
+/// Estimate resources for a configuration.
+pub fn estimate(cfg: &AccelConfig) -> ResourceEstimate {
+    let pes = cfg.total_pes();
+    let adders = physical_adders(cfg);
+    let dsp = pes + 2 * cfg.tm * cfg.tn * cfg.tz;
+    let buffer_bytes =
+        (cfg.input_buf_kib + cfg.weight_buf_kib + cfg.output_buf_kib) * 1024;
+    let bram36 = ceil_div(cfg.input_buf_kib * 1024, BRAM36_BYTES)
+        + ceil_div(cfg.weight_buf_kib * 1024, BRAM36_BYTES)
+        + ceil_div(cfg.output_buf_kib * 1024, BRAM36_BYTES)
+        + BRAM_MISC;
+    let _ = buffer_bytes;
+    let ff = pes * FF_PER_PE + adders * FF_PER_ADDER + FF_CONTROL;
+    let lut = pes * LUT_PER_PE + adders * LUT_PER_ADDER + LUT_CONTROL;
+    ResourceEstimate {
+        dsp,
+        bram36,
+        ff,
+        lut,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_dsp_exact() {
+        let est = estimate(&AccelConfig::paper_3d());
+        assert_eq!(est.dsp, 2304, "Table III: 2304 DSP48Es");
+        // the 2D operating point shares the bitstream: same count
+        let est2 = estimate(&AccelConfig::paper_2d());
+        assert_eq!(est2.dsp, 2304);
+    }
+
+    #[test]
+    fn table3_bram_exact() {
+        let est = estimate(&AccelConfig::paper_3d());
+        assert_eq!(est.bram36, 712, "Table III: 712 BRAMs");
+    }
+
+    #[test]
+    fn table3_ff_lut_exact() {
+        let est = estimate(&AccelConfig::paper_3d());
+        assert_eq!(est.ff, 566_182, "Table III: 566182 FFs");
+        assert_eq!(est.lut, 292_292, "Table III: 292292 LUTs");
+    }
+
+    #[test]
+    fn table3_percentages() {
+        let est = estimate(&AccelConfig::paper_3d());
+        let p = est.percentages();
+        assert!((p[0] - 64.00).abs() < 0.01, "DSP {:.2}%", p[0]);
+        assert!((p[1] - 48.44).abs() < 0.01, "BRAM {:.2}%", p[1]);
+        assert!((p[2] - 65.34).abs() < 0.01, "FF {:.2}%", p[2]);
+        assert!((p[3] - 67.48).abs() < 0.01, "LUT {:.2}%", p[3]);
+        assert!(est.fits_vc709());
+    }
+
+    #[test]
+    fn oversized_design_does_not_fit() {
+        let mut cfg = AccelConfig::paper_2d();
+        cfg.tn = 128; // 4096 PEs
+        let est = estimate(&cfg);
+        assert!(!est.fits_vc709(), "4096-PE design exceeds the DSP budget");
+    }
+
+    #[test]
+    fn physical_adder_count_serves_both_modes() {
+        assert_eq!(physical_adders(&AccelConfig::paper_3d()), 128);
+        // 2D point: max(1·6, 6) = 6 -> 2·4·6 = 48
+        assert_eq!(physical_adders(&AccelConfig::paper_2d()), 48);
+    }
+}

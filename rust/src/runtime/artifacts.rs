@@ -1,0 +1,102 @@
+//! Artifact registry: discovers `artifacts/*.hlo.txt` produced by
+//! `make artifacts` and maps benchmark names to executables.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+/// Environment variable overriding the artifacts directory.
+pub const ARTIFACTS_DIR_ENV: &str = "UDCNN_ARTIFACTS";
+
+/// The set of compiled-model artifacts on disk.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    /// artifact name (file stem, e.g. `dcgan`) → path
+    pub entries: BTreeMap<String, PathBuf>,
+}
+
+impl ArtifactSet {
+    /// Default directory: `$UDCNN_ARTIFACTS`, else `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os(ARTIFACTS_DIR_ENV)
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Scan a directory for `*.hlo.txt`.
+    pub fn discover(dir: impl AsRef<Path>) -> Result<ArtifactSet> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut entries = BTreeMap::new();
+        if !dir.exists() {
+            bail!(
+                "artifact directory {} does not exist — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        for e in std::fs::read_dir(&dir)? {
+            let p = e?.path();
+            let name = p.file_name().map(|s| s.to_string_lossy().into_owned());
+            if let Some(name) = name {
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    entries.insert(stem.to_string(), p.clone());
+                }
+            }
+        }
+        Ok(ArtifactSet { dir, entries })
+    }
+
+    /// Discover from the default directory.
+    pub fn discover_default() -> Result<ArtifactSet> {
+        Self::discover(Self::default_dir())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&PathBuf> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn mk_dir_with(names: &[&str]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "udcnn_artifacts_test_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for n in names {
+            let mut f = std::fs::File::create(dir.join(n)).unwrap();
+            f.write_all(b"HloModule x").unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn discovers_hlo_text_only() {
+        let dir = mk_dir_with(&["dcgan.hlo.txt", "notes.md", "vnet.hlo.txt"]);
+        let set = ArtifactSet::discover(&dir).unwrap();
+        assert_eq!(set.names(), vec!["dcgan", "vnet"]);
+        assert!(set.get("dcgan").is_some());
+        assert!(set.get("notes").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_errors_with_hint() {
+        let err = ArtifactSet::discover("/definitely/not/here").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

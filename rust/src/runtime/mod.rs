@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and execute them from the request path.
+//!
+//! Python never runs at inference time — `make artifacts` is the only
+//! step that invokes it. Interchange is **HLO text** (not serialized
+//! `HloModuleProto`): jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactSet, ARTIFACTS_DIR_ENV};
+pub use pjrt::{Executable, Runtime};

@@ -1,0 +1,127 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client (CPU plugin).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable plus its input arity.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs (`(data, dims)` pairs); returns all f32
+    /// outputs. The AOT pipeline lowers with `return_tuple=True`, so a
+    /// single logical output still arrives as a 1-tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(dims)
+                    .with_context(|| format!("reshaping input to {dims:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let parts = out.to_tuple().context("untupling result")?;
+        parts
+            .iter()
+            .map(|p| p.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Minimal HLO text module: f32[2,2] add.
+    const ADD_HLO: &str = r#"HloModule add_test
+
+ENTRY main {
+  x = f32[2,2]{1,0} parameter(0)
+  y = f32[2,2]{1,0} parameter(1)
+  s = f32[2,2]{1,0} add(x, y)
+  ROOT t = (f32[2,2]{1,0}) tuple(s)
+}
+"#;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.device_count() >= 1);
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn load_and_run_hlo_text() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("udcnn_add_test.hlo.txt");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(ADD_HLO.as_bytes()).unwrap();
+        drop(f);
+
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&path).unwrap();
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [10.0f32, 20.0, 30.0, 40.0];
+        let out = exe.run_f32(&[(&x, &[2, 2]), (&y, &[2, 2])]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.load_hlo_text("/nonexistent/foo.hlo.txt");
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,324 @@
+//! Typed feature-map / volume / weight wrappers.
+//!
+//! These give the golden models and baselines fast, self-documenting
+//! indexing: `fm.at(c, h, w)` instead of `t.get(&[c, h, w])` (the
+//! generic path allocates index slices on the caller side and
+//! re-derives strides per access; these wrappers precompute strides).
+
+use super::Tensor;
+
+/// 2D feature map, layout `C × H × W`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureMap<T> {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> FeatureMap<T> {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        FeatureMap {
+            c,
+            h,
+            w,
+            data: vec![T::default(); c * h * w],
+        }
+    }
+
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), c * h * w);
+        FeatureMap { c, h, w, data }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, c: usize, h: usize, w: usize) -> T {
+        debug_assert!(c < self.c && h < self.h && w < self.w);
+        self.data[(c * self.h + h) * self.w + w]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, c: usize, h: usize, w: usize) -> &mut T {
+        debug_assert!(c < self.c && h < self.h && w < self.w);
+        &mut self.data[(c * self.h + h) * self.w + w]
+    }
+
+    /// Contiguous channel plane.
+    #[inline]
+    pub fn plane(&self, c: usize) -> &[T] {
+        let sz = self.h * self.w;
+        &self.data[c * sz..(c + 1) * sz]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_tensor(self) -> Tensor<T> {
+        Tensor::from_vec(&[self.c, self.h, self.w], self.data)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// 3D feature volume, layout `C × D × H × W`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Volume<T> {
+    pub c: usize,
+    pub d: usize,
+    pub h: usize,
+    pub w: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Volume<T> {
+    pub fn zeros(c: usize, d: usize, h: usize, w: usize) -> Self {
+        Volume {
+            c,
+            d,
+            h,
+            w,
+            data: vec![T::default(); c * d * h * w],
+        }
+    }
+
+    pub fn from_vec(c: usize, d: usize, h: usize, w: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), c * d * h * w);
+        Volume { c, d, h, w, data }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, c: usize, d: usize, h: usize, w: usize) -> T {
+        debug_assert!(c < self.c && d < self.d && h < self.h && w < self.w);
+        self.data[((c * self.d + d) * self.h + h) * self.w + w]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, c: usize, d: usize, h: usize, w: usize) -> &mut T {
+        debug_assert!(c < self.c && d < self.d && h < self.h && w < self.w);
+        &mut self.data[((c * self.d + d) * self.h + h) * self.w + w]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_tensor(self) -> Tensor<T> {
+        Tensor::from_vec(&[self.c, self.d, self.h, self.w], self.data)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// 2D weights, layout `O × I × Kh × Kw`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeightsOIHW<T> {
+    pub o: usize,
+    pub i: usize,
+    pub kh: usize,
+    pub kw: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> WeightsOIHW<T> {
+    pub fn zeros(o: usize, i: usize, kh: usize, kw: usize) -> Self {
+        WeightsOIHW {
+            o,
+            i,
+            kh,
+            kw,
+            data: vec![T::default(); o * i * kh * kw],
+        }
+    }
+
+    pub fn from_vec(o: usize, i: usize, kh: usize, kw: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), o * i * kh * kw);
+        WeightsOIHW { o, i, kh, kw, data }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, o: usize, i: usize, kh: usize, kw: usize) -> T {
+        debug_assert!(o < self.o && i < self.i && kh < self.kh && kw < self.kw);
+        self.data[((o * self.i + i) * self.kh + kh) * self.kw + kw]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, o: usize, i: usize, kh: usize, kw: usize) -> &mut T {
+        &mut self.data[((o * self.i + i) * self.kh + kh) * self.kw + kw]
+    }
+
+    /// Contiguous `Kh × Kw` kernel for one (o, i) pair — what a PE's Rw
+    /// register file holds.
+    #[inline]
+    pub fn kernel(&self, o: usize, i: usize) -> &[T] {
+        let sz = self.kh * self.kw;
+        let base = (o * self.i + i) * sz;
+        &self.data[base..base + sz]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// 3D weights, layout `O × I × Kd × Kh × Kw`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeightsOIDHW<T> {
+    pub o: usize,
+    pub i: usize,
+    pub kd: usize,
+    pub kh: usize,
+    pub kw: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> WeightsOIDHW<T> {
+    pub fn zeros(o: usize, i: usize, kd: usize, kh: usize, kw: usize) -> Self {
+        WeightsOIDHW {
+            o,
+            i,
+            kd,
+            kh,
+            kw,
+            data: vec![T::default(); o * i * kd * kh * kw],
+        }
+    }
+
+    pub fn from_vec(o: usize, i: usize, kd: usize, kh: usize, kw: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), o * i * kd * kh * kw);
+        WeightsOIDHW {
+            o,
+            i,
+            kd,
+            kh,
+            kw,
+            data,
+        }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, o: usize, i: usize, kd: usize, kh: usize, kw: usize) -> T {
+        debug_assert!(
+            o < self.o && i < self.i && kd < self.kd && kh < self.kh && kw < self.kw
+        );
+        self.data[(((o * self.i + i) * self.kd + kd) * self.kh + kh) * self.kw + kw]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, o: usize, i: usize, kd: usize, kh: usize, kw: usize) -> &mut T {
+        &mut self.data[(((o * self.i + i) * self.kd + kd) * self.kh + kh) * self.kw + kw]
+    }
+
+    /// Contiguous `Kd × Kh × Kw` kernel for one (o, i) pair.
+    #[inline]
+    pub fn kernel(&self, o: usize, i: usize) -> &[T] {
+        let sz = self.kd * self.kh * self.kw;
+        let base = (o * self.i + i) * sz;
+        &self.data[base..base + sz]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_map_strides() {
+        let mut fm: FeatureMap<f32> = FeatureMap::zeros(2, 3, 4);
+        *fm.at_mut(1, 2, 3) = 9.0;
+        assert_eq!(fm.at(1, 2, 3), 9.0);
+        assert_eq!(fm.data()[1 * 12 + 2 * 4 + 3], 9.0);
+        assert_eq!(fm.plane(1).len(), 12);
+        assert_eq!(fm.plane(1)[11], 9.0);
+    }
+
+    #[test]
+    fn volume_strides() {
+        let mut v: Volume<f32> = Volume::zeros(2, 3, 4, 5);
+        *v.at_mut(1, 2, 3, 4) = 7.0;
+        assert_eq!(v.at(1, 2, 3, 4), 7.0);
+        assert_eq!(v.data()[((1 * 3 + 2) * 4 + 3) * 5 + 4], 7.0);
+    }
+
+    #[test]
+    fn weights_kernel_slice() {
+        let mut w: WeightsOIHW<f32> = WeightsOIHW::zeros(2, 3, 3, 3);
+        *w.at_mut(1, 2, 0, 0) = 1.5;
+        let k = w.kernel(1, 2);
+        assert_eq!(k.len(), 9);
+        assert_eq!(k[0], 1.5);
+    }
+
+    #[test]
+    fn weights3d_kernel_slice() {
+        let mut w: WeightsOIDHW<f32> = WeightsOIDHW::zeros(2, 2, 3, 3, 3);
+        *w.at_mut(1, 1, 2, 2, 2) = 4.0;
+        let k = w.kernel(1, 1);
+        assert_eq!(k.len(), 27);
+        assert_eq!(k[26], 4.0);
+    }
+
+    #[test]
+    fn tensor_round_trip() {
+        let fm = FeatureMap::from_vec(1, 2, 2, vec![1.0f32, 2.0, 3.0, 4.0]);
+        let t = fm.into_tensor();
+        assert_eq!(t.shape(), &[1, 2, 2]);
+        assert_eq!(t.get(&[0, 1, 1]), 4.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! A small dense tensor library.
+//!
+//! Shapes are modelled explicitly for the two layouts the paper uses:
+//! `CHW` feature maps (2D nets) and `CDHW` volumes (3D nets), plus the
+//! weight layouts `OIHW` / `OIDHW`. Everything is row-major contiguous.
+//! The generic [`Tensor`] carries a dynamic shape; typed views give
+//! bounds-checked (debug) / unchecked (release) indexing on the hot
+//! paths of the golden models and baselines.
+
+mod dense;
+mod feature_map;
+
+pub use dense::Tensor;
+pub use feature_map::{FeatureMap, Volume, WeightsOIHW, WeightsOIDHW};

@@ -1,0 +1,145 @@
+//! Coordinator integration: multi-model routing, concurrent clients,
+//! batching behaviour, clean shutdown, failure handling.
+
+use std::time::Duration;
+
+use udcnn::coordinator::{BatchPolicy, InferenceService};
+use udcnn::dcnn::zoo;
+
+#[test]
+fn multi_model_routing() {
+    let nets = vec![zoo::tiny_2d(), zoo::tiny_3d()];
+    let in2 = nets[0].layers[0].input_elems();
+    let in3 = nets[1].layers[0].input_elems();
+    let out2 = nets[0].layers.last().unwrap().output_elems();
+    let out3 = nets[1].layers.last().unwrap().output_elems();
+    let mut svc = InferenceService::start(nets, BatchPolicy::default());
+
+    let r2 = svc
+        .infer("tiny-2d", vec![0.5; in2], Duration::from_secs(30))
+        .unwrap();
+    let r3 = svc
+        .infer("tiny-3d", vec![0.5; in3], Duration::from_secs(30))
+        .unwrap();
+    assert_eq!(r2.output.len(), out2);
+    assert_eq!(r3.output.len(), out3);
+
+    let stats = svc.stats();
+    assert_eq!(stats.per_model["tiny-2d"], 1);
+    assert_eq!(stats.per_model["tiny-3d"], 1);
+    svc.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let net = zoo::tiny_2d();
+    let in_elems = net.layers[0].input_elems();
+    let mut svc = InferenceService::start(
+        vec![net],
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+        },
+    );
+    let n = 32;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push(svc.submit("tiny-2d", vec![i as f32 * 0.01; in_elems]).unwrap());
+    }
+    let mut served = 0;
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(r.accel_latency_s > 0.0);
+        assert!(r.batch_size >= 1 && r.batch_size <= 4);
+        served += 1;
+    }
+    assert_eq!(served, n);
+    let stats = svc.stats();
+    assert_eq!(stats.requests, n as u64);
+    assert!(stats.batches <= n as u64);
+    assert!(stats.avg_batch() >= 1.0);
+    svc.shutdown();
+}
+
+#[test]
+fn larger_batches_amortize_accelerator_time() {
+    // accel latency per ITEM should shrink as the batch grows (weight
+    // traffic amortization — the same effect the timing tier models)
+    let net = zoo::dcgan();
+    let in_elems = net.layers[0].input_elems();
+    let mut svc = InferenceService::start(
+        vec![net],
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(200),
+        },
+    );
+    // batch of 1 (send one, wait)
+    let solo = svc
+        .infer("dcgan", vec![0.1; in_elems], Duration::from_secs(120))
+        .unwrap();
+    // batch of 8
+    let mut rxs = Vec::new();
+    for _ in 0..8 {
+        rxs.push(svc.submit("dcgan", vec![0.1; in_elems]).unwrap());
+    }
+    let batched: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(300)).unwrap())
+        .collect();
+    let eight = batched.iter().find(|r| r.batch_size == 8);
+    if let Some(r8) = eight {
+        let per_item_1 = solo.accel_latency_s / solo.batch_size as f64;
+        let per_item_8 = r8.accel_latency_s / 8.0;
+        assert!(
+            per_item_8 < per_item_1,
+            "batch-8 per-item {per_item_8} !< batch-1 {per_item_1}"
+        );
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn rejected_requests_counted_and_service_survives() {
+    let net = zoo::tiny_2d();
+    let in_elems = net.layers[0].input_elems();
+    let mut svc = InferenceService::start(vec![net], BatchPolicy::default());
+    for _ in 0..3 {
+        assert!(svc.infer("missing-model", vec![0.0], Duration::from_secs(1)).is_err());
+    }
+    // service still works after rejections
+    let ok = svc.infer("tiny-2d", vec![0.5; in_elems], Duration::from_secs(30));
+    assert!(ok.is_ok());
+    assert_eq!(svc.stats().rejected, 3);
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_joins_workers() {
+    let svc = InferenceService::start(vec![zoo::tiny_2d()], BatchPolicy::default());
+    svc.shutdown(); // must not hang or panic
+}
+
+#[test]
+fn empty_service_rejects_everything() {
+    let mut svc = InferenceService::start(vec![], BatchPolicy::default());
+    assert!(svc.infer("dcgan", vec![0.0], Duration::from_secs(1)).is_err());
+    assert_eq!(svc.stats().rejected, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn wrong_input_size_fails_worker_not_service() {
+    // a malformed request panics its worker's forward; remaining
+    // models keep serving (fault isolation between model workers)
+    let nets = vec![zoo::tiny_2d(), zoo::tiny_3d()];
+    let in3 = nets[1].layers[0].input_elems();
+    let mut svc = InferenceService::start(nets, BatchPolicy::default());
+    // poison tiny-2d's worker with a wrong-size input
+    let _ = svc.submit("tiny-2d", vec![0.0; 3]).unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    // tiny-3d still serves
+    let ok = svc.infer("tiny-3d", vec![0.5; in3], Duration::from_secs(30));
+    assert!(ok.is_ok(), "other workers unaffected");
+    svc.shutdown();
+}

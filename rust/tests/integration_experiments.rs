@@ -1,0 +1,217 @@
+//! Experiment-level assertions: the qualitative claims of every table
+//! and figure, checked cheaply on every `cargo test` run (the benches
+//! print the full datasets; these tests pin the *shape* so a
+//! regression cannot slip in silently).
+
+use udcnn::accel::{oom, simulate_layer, simulate_network, AccelConfig, BoundBy};
+use udcnn::baseline::GpuModel;
+use udcnn::dcnn::{sparsity, zoo};
+use udcnn::energy;
+use udcnn::resource;
+
+/// Fig. 1: every 3D-GAN layer sparser than every DCGAN layer; bands.
+#[test]
+fn fig1_sparsity_shape() {
+    let rows = sparsity::fig1_dataset(&[zoo::dcgan(), zoo::gan3d()], 1);
+    let dcgan_max = rows
+        .iter()
+        .filter(|r| r.network == "dcgan")
+        .map(|r| r.analytic)
+        .fold(0.0, f64::max);
+    let gan3d_min = rows
+        .iter()
+        .filter(|r| r.network == "3d-gan")
+        .map(|r| r.analytic)
+        .fold(1.0, f64::min);
+    assert!(gan3d_min > dcgan_max);
+    assert!(dcgan_max < 0.76 && gan3d_min > 0.80);
+    for r in &rows {
+        assert!((r.analytic - r.empirical).abs() < 1e-9, "{r:?}");
+    }
+}
+
+/// Table II: both operating points instantiate 2048 PEs on one
+/// bitstream; 16-bit datapath.
+#[test]
+fn table2_configuration() {
+    for cfg in [AccelConfig::paper_2d(), AccelConfig::paper_3d()] {
+        assert_eq!(cfg.total_pes(), 2048);
+        assert_eq!(cfg.data_width_bits, 16);
+        assert!(cfg.validate().is_ok());
+    }
+    assert_eq!(
+        (AccelConfig::paper_2d().tm, AccelConfig::paper_2d().tn),
+        (2, 64)
+    );
+    assert_eq!(
+        (AccelConfig::paper_3d().tn, AccelConfig::paper_3d().tz),
+        (16, 4)
+    );
+}
+
+/// Table III: the resource model reproduces the published numbers
+/// exactly and fits the device.
+#[test]
+fn table3_resources_exact() {
+    let est = resource::estimate(&AccelConfig::paper_3d());
+    assert_eq!(
+        (est.dsp, est.bram36, est.ff, est.lut),
+        (2304, 712, 566_182, 292_292)
+    );
+    assert!(est.fits_vc709());
+}
+
+/// Fig. 6(a): >90 % PE utilization except the memory-bound fourth
+/// layers of DCGAN / GP-GAN (and the single-output-channel tail of
+/// 3D-GAN, whose final layer cannot fill T_m = 2 groups).
+#[test]
+fn fig6a_utilization_shape() {
+    for net in zoo::all_benchmarks() {
+        let cfg = AccelConfig::paper_for(net.dims);
+        for (i, layer) in net.layers.iter().enumerate() {
+            let m = simulate_layer(&cfg, layer);
+            let util = m.pe_utilization();
+            let is_l4_2d = (net.name == "dcgan" || net.name == "gp-gan") && i == 3;
+            let is_l4_3d = net.name == "3d-gan" && i == 3;
+            if is_l4_2d {
+                assert_eq!(m.bound_by, BoundBy::Memory, "{}", layer.name);
+                assert!(util < 0.9, "{}: util {util:.3} should dip", layer.name);
+            } else if is_l4_3d {
+                assert!(util < 0.6, "{}: half the mesh idles", layer.name);
+            } else {
+                assert!(util > 0.9, "{}: util {util:.3}", layer.name);
+            }
+        }
+    }
+}
+
+/// Fig. 6(b): 2D throughput in the paper's 1.5–3.0+ TOPS band; 3D
+/// effective throughput ≥ 2D (the paper's "3D outperforms 2D").
+#[test]
+fn fig6b_throughput_shape() {
+    let cfg2 = AccelConfig::paper_2d();
+    let mut tops_2d = Vec::new();
+    for net in [zoo::dcgan(), zoo::gp_gan()] {
+        for layer in &net.layers {
+            tops_2d.push(simulate_layer(&cfg2, layer).effective_tops(&cfg2));
+        }
+    }
+    for &t in &tops_2d {
+        assert!((1.2..=3.6).contains(&t), "2D TOPS {t:.2}");
+    }
+    let max2 = tops_2d.iter().cloned().fold(0.0, f64::max);
+    assert!(max2 > 2.9, "2D peak ~3.0 TOPS, got {max2:.2}");
+
+    let cfg3 = AccelConfig::paper_3d();
+    let t3 = simulate_layer(&cfg3, &zoo::gan3d().layers[1]).effective_tops(&cfg3);
+    assert!(t3 > max2 * 0.9, "3D ({t3:.2}) >= 2D ({max2:.2}) region");
+}
+
+/// Fig. 7(a)/(b) shape using the *modelled* platforms (the measured
+/// CPU path is exercised by the bench): FPGA ≈ GPU throughput, FPGA
+/// wins energy efficiency by 3–20×.
+#[test]
+fn fig7_gpu_relations() {
+    let gpu = GpuModel::default();
+    for net in [zoo::dcgan(), zoo::gp_gan()] {
+        let cfg = AccelConfig::paper_for(net.dims);
+        let fm = simulate_network(&cfg, &net);
+        let t_fpga = fm.total_time_s();
+        let t_gpu = gpu.network_seconds(&net, cfg.batch);
+        let perf_ratio = t_gpu / t_fpga;
+        assert!(
+            (0.3..3.0).contains(&perf_ratio),
+            "{}: FPGA and GPU should be within 3x (ratio {perf_ratio:.2})",
+            net.name
+        );
+        // energy: FPGA wins clearly
+        let p_fpga: f64 = fm
+            .layers
+            .iter()
+            .map(|m| energy::fpga_watts(&cfg, m) * m.time_s())
+            .sum::<f64>()
+            / t_fpga;
+        let e_ratio = (1.0 / (t_fpga * p_fpga)) / (1.0 / (t_gpu * energy::GPU_WATTS));
+        assert!(
+            e_ratio > 3.0,
+            "{}: FPGA energy advantage {e_ratio:.1}x should exceed 3x",
+            net.name
+        );
+    }
+}
+
+/// Ablation A1: IOM vs OOM — the paper's core mechanism.
+#[test]
+fn ablation_iom_vs_oom_shape() {
+    let cfg2 = AccelConfig::paper_2d();
+    let l2 = &zoo::dcgan().layers[1];
+    let s2 = oom::simulate_oom(&cfg2, l2).total_cycles as f64
+        / simulate_layer(&cfg2, l2).total_cycles as f64;
+    let cfg3 = AccelConfig::paper_3d();
+    let l3 = &zoo::gan3d().layers[1];
+    let s3 = oom::simulate_oom(&cfg3, l3).total_cycles as f64
+        / simulate_layer(&cfg3, l3).total_cycles as f64;
+    assert!(s2 > 3.0 && s2 < 6.0, "2D IOM speedup {s2:.2} ~ S²");
+    assert!(s3 > s2, "3D speedup {s3:.2} exceeds 2D {s2:.2}");
+}
+
+/// Generality beyond the paper's uniform K=3/S=2: the stack handles
+/// other kernel/stride geometries end-to-end (timing + functional +
+/// golden agreement is covered by prop tests; here: sane metrics).
+#[test]
+fn generic_kernel_geometries() {
+    use udcnn::dcnn::LayerSpec;
+    for (k, s) in [(5usize, 2usize), (4, 2), (5, 3), (2, 2), (3, 1)] {
+        let l2 = LayerSpec::new_2d("gen2", 16, 8, 8, 16, k, s);
+        let cfg = AccelConfig::paper_2d();
+        let m = simulate_layer(&cfg, &l2);
+        assert!(m.total_cycles > 0);
+        assert!(m.pe_utilization() <= 1.0 + 1e-9, "k={k} s={s}");
+        let l3 = LayerSpec::new_3d("gen3", 4, 4, 4, 4, 4, k, s);
+        let cfg3 = AccelConfig::paper_3d();
+        let m3 = simulate_layer(&cfg3, &l3);
+        assert!(m3.pe_utilization() <= 1.0 + 1e-9, "3d k={k} s={s}");
+        // dense-equivalent ratio approaches S^d as maps grow
+        let big = LayerSpec::new_2d("big", 1, 128, 128, 1, k, s);
+        let ratio = udcnn::accel::metrics::dense_equivalent_macs(&big) as f64
+            / big.op_counts().useful_macs as f64;
+        assert!(
+            (ratio - (s * s) as f64).abs() < 0.01,
+            "k={k} s={s}: ratio {ratio}"
+        );
+    }
+}
+
+/// Batch sensitivity: utilization on the weight-heavy first GAN layer
+/// grows monotonically with batch and crosses 90 % by batch 8 — the
+/// quantitative backing for DESIGN.md §5's batching claim.
+#[test]
+fn batch_sweep_weight_heavy_layer() {
+    let layer = &zoo::dcgan().layers[0];
+    let mut last = 0.0;
+    for batch in [1usize, 2, 4, 8, 16] {
+        let mut cfg = AccelConfig::paper_2d();
+        cfg.batch = batch;
+        let u = simulate_layer(&cfg, layer).pe_utilization();
+        assert!(u >= last - 1e-9, "batch {batch}: util {u} dropped");
+        last = u;
+        if batch >= 8 {
+            assert!(u > 0.9, "batch {batch}: util {u}");
+        }
+    }
+}
+
+/// Ablation A2: the uniform architecture does not sacrifice 2D
+/// performance — running a 2D net on the 3D operating point (T_z
+/// folded into channels) costs < 15 % versus the native 2D point.
+#[test]
+fn ablation_uniform_mapping_shape() {
+    let net = zoo::dcgan();
+    let native = simulate_network(&AccelConfig::paper_2d(), &net).total_cycles();
+    let folded = simulate_network(&AccelConfig::paper_3d(), &net).total_cycles();
+    let overhead = folded as f64 / native as f64;
+    assert!(
+        overhead < 1.15,
+        "uniform mapping overhead {overhead:.3} should be small"
+    );
+}

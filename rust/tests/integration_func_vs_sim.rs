@@ -1,0 +1,198 @@
+//! Cross-tier integration: the event-level functional mesh must match
+//! the golden Q8.8 models bit-for-bit, and its cycle accounting must
+//! match the analytic timing tier, across a matrix of configurations
+//! and layer shapes — the licence for using the timing tier on the
+//! full benchmark layers.
+
+use udcnn::accel::functional::{run_layer_2d, run_layer_3d};
+use udcnn::accel::{AccelConfig, Schedule};
+use udcnn::dcnn::{LayerData, LayerDataQ, LayerSpec};
+use udcnn::func::deconv_q::{crop_2d_q, crop_3d_q, deconv2d_iom_q, deconv3d_iom_q};
+
+fn configs_2d() -> Vec<AccelConfig> {
+    vec![
+        AccelConfig::tiny(1, 1, 1, 1, 1), // degenerate: single PE
+        AccelConfig::tiny(1, 2, 1, 2, 2),
+        AccelConfig::tiny(2, 2, 1, 2, 3), // non-square array
+        AccelConfig::tiny(2, 4, 1, 4, 4),
+        AccelConfig::tiny(2, 2, 2, 2, 2), // tz folding for 2D nets
+        AccelConfig::tiny(1, 4, 2, 3, 2),
+    ]
+}
+
+fn configs_3d() -> Vec<AccelConfig> {
+    vec![
+        AccelConfig::tiny(1, 1, 1, 1, 1),
+        AccelConfig::tiny(1, 2, 2, 2, 2),
+        AccelConfig::tiny(2, 2, 2, 2, 2),
+        AccelConfig::tiny(2, 1, 4, 2, 2), // depth-parallel heavy
+        AccelConfig::tiny(1, 4, 1, 2, 3), // no depth parallelism
+    ]
+}
+
+fn layers_2d() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec::new_2d("i.a", 1, 1, 1, 1, 3, 2),
+        LayerSpec::new_2d("i.b", 3, 4, 4, 2, 3, 2),
+        LayerSpec::new_2d("i.c", 2, 5, 3, 5, 3, 2), // ragged vs tiles
+        LayerSpec::new_2d("i.d", 4, 6, 6, 3, 3, 2), // odd out_c vs tm
+        LayerSpec::new_2d("i.e", 2, 4, 4, 2, 2, 2), // K == S: no overlap
+        LayerSpec::new_2d("i.f", 2, 3, 3, 2, 3, 1), // S = 1: max overlap
+    ]
+}
+
+fn layers_3d() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec::new_3d("i3.a", 1, 1, 1, 1, 1, 3, 2),
+        LayerSpec::new_3d("i3.b", 2, 2, 2, 2, 2, 3, 2),
+        LayerSpec::new_3d("i3.c", 2, 3, 2, 3, 3, 3, 2), // ragged depth
+        LayerSpec::new_3d("i3.d", 4, 4, 4, 4, 1, 3, 2), // single out ch
+        LayerSpec::new_3d("i3.e", 2, 2, 3, 3, 2, 3, 1), // S = 1
+    ]
+}
+
+#[test]
+fn functional_matches_golden_2d_matrix() {
+    for layer in layers_2d() {
+        let q = LayerData::synth(&layer, 0xAB).quantize();
+        let (input, weights) = match &q {
+            LayerDataQ::D2 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let golden = crop_2d_q(
+            &deconv2d_iom_q(input, weights, layer.s),
+            layer.out_h(),
+            layer.out_w(),
+        );
+        for cfg in configs_2d() {
+            let run = run_layer_2d(&cfg, &layer, input, weights);
+            assert_eq!(
+                run.output.data(),
+                golden.data(),
+                "layer {} on cfg {:?}",
+                layer.name,
+                (cfg.tm, cfg.tn, cfg.tz, cfg.tr, cfg.tc)
+            );
+        }
+    }
+}
+
+#[test]
+fn functional_matches_golden_3d_matrix() {
+    for layer in layers_3d() {
+        let q = LayerData::synth(&layer, 0xCD).quantize();
+        let (input, weights) = match &q {
+            LayerDataQ::D3 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let golden = crop_3d_q(
+            &deconv3d_iom_q(input, weights, layer.s),
+            layer.out_d(),
+            layer.out_h(),
+            layer.out_w(),
+        );
+        for cfg in configs_3d() {
+            let run = run_layer_3d(&cfg, &layer, input, weights);
+            assert_eq!(
+                run.output.data(),
+                golden.data(),
+                "layer {} on cfg {:?}",
+                layer.name,
+                (cfg.tm, cfg.tn, cfg.tz, cfg.tr, cfg.tc)
+            );
+        }
+    }
+}
+
+#[test]
+fn functional_cycles_equal_timing_cycles() {
+    for layer in layers_2d() {
+        let q = LayerData::synth(&layer, 1).quantize();
+        let (input, weights) = match &q {
+            LayerDataQ::D2 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        for cfg in configs_2d() {
+            let run = run_layer_2d(&cfg, &layer, input, weights);
+            let sched = Schedule::new(&cfg, &layer);
+            assert_eq!(
+                run.stats.compute_cycles,
+                sched.compute_cycles(&cfg),
+                "layer {} cfg {:?}",
+                layer.name,
+                (cfg.tm, cfg.tn, cfg.tz, cfg.tr, cfg.tc)
+            );
+        }
+    }
+    for layer in layers_3d() {
+        let q = LayerData::synth(&layer, 2).quantize();
+        let (input, weights) = match &q {
+            LayerDataQ::D3 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        for cfg in configs_3d() {
+            let run = run_layer_3d(&cfg, &layer, input, weights);
+            let sched = Schedule::new(&cfg, &layer);
+            assert_eq!(
+                run.stats.compute_cycles,
+                sched.compute_cycles(&cfg),
+                "layer {} cfg {:?}",
+                layer.name,
+                (cfg.tm, cfg.tn, cfg.tz, cfg.tr, cfg.tc)
+            );
+        }
+    }
+}
+
+#[test]
+fn mac_conservation_across_tiers() {
+    // every tier agrees on the number of useful multiplications
+    for layer in layers_2d() {
+        let q = LayerData::synth(&layer, 3).quantize();
+        let (input, weights) = match &q {
+            LayerDataQ::D2 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let cfg = AccelConfig::tiny(2, 2, 1, 2, 2);
+        let run = run_layer_2d(&cfg, &layer, input, weights);
+        assert_eq!(run.stats.macs, layer.op_counts().useful_macs, "{}", layer.name);
+    }
+}
+
+#[test]
+fn overlap_traffic_zero_when_k_equals_s() {
+    // K == S means kernel blocks tile the output exactly: no overlap,
+    // no FIFO traffic, no spills.
+    let layer = LayerSpec::new_2d("tile.exact", 2, 4, 4, 2, 2, 2);
+    let q = LayerData::synth(&layer, 4).quantize();
+    let (input, weights) = match &q {
+        LayerDataQ::D2 { input, weights } => (input, weights),
+        _ => unreachable!(),
+    };
+    let cfg = AccelConfig::tiny(1, 2, 1, 2, 2);
+    let run = run_layer_2d(&cfg, &layer, input, weights);
+    assert_eq!(run.stats.fifo_v_pushes, 0);
+    assert_eq!(run.stats.fifo_h_pushes, 0);
+    assert_eq!(run.stats.spills, 0);
+}
+
+#[test]
+fn stride_1_maximizes_overlap_traffic() {
+    let l_s1 = LayerSpec::new_2d("s1", 1, 4, 4, 1, 3, 1);
+    let l_s2 = LayerSpec::new_2d("s2", 1, 4, 4, 1, 3, 2);
+    let cfg = AccelConfig::tiny(1, 1, 1, 4, 4);
+    let mk = |l: &LayerSpec| {
+        let q = LayerData::synth(l, 5).quantize();
+        match q {
+            LayerDataQ::D2 { input, weights } => {
+                let run = run_layer_2d(&cfg, l, &input, &weights);
+                run.stats.fifo_v_pushes + run.stats.fifo_h_pushes + run.stats.spills
+            }
+            _ => unreachable!(),
+        }
+    };
+    assert!(
+        mk(&l_s1) > mk(&l_s2),
+        "S=1 produces strictly more overlap traffic"
+    );
+}

@@ -1,0 +1,192 @@
+//! End-to-end integration over the runtime: the AOT HLO artifacts
+//! (python/jax/pallas, built by `make artifacts`) must compute the
+//! same function as the Rust golden pipeline — the proof that all
+//! three layers compose.
+//!
+//! Tests skip (with a loud message) if `artifacts/` has not been
+//! built; `make test` always builds it first.
+
+use udcnn::coordinator::service::forward;
+use udcnn::dcnn::{zoo, LayerData, Network};
+use udcnn::runtime::{ArtifactSet, Runtime};
+
+/// Locate artifacts; None (skip) when not built.
+fn artifacts() -> Option<ArtifactSet> {
+    // tests run from the crate root
+    match ArtifactSet::discover_default() {
+        Ok(s) if !s.is_empty() => Some(s),
+        _ => {
+            eprintln!("SKIP: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// The same synthetic weights the coordinator's worker uses.
+fn service_weights(net: &Network) -> Vec<LayerData> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)))
+        .collect()
+}
+
+/// Flatten a network's weights into (data, dims) pairs for the PJRT
+/// executable (one parameter per layer, after the input).
+fn weight_args(weights: &[LayerData]) -> Vec<(Vec<f32>, Vec<i64>)> {
+    weights
+        .iter()
+        .map(|d| match d {
+            LayerData::D2 { weights, .. } => (
+                weights.data().to_vec(),
+                vec![
+                    weights.o as i64,
+                    weights.i as i64,
+                    weights.kh as i64,
+                    weights.kw as i64,
+                ],
+            ),
+            LayerData::D3 { weights, .. } => (
+                weights.data().to_vec(),
+                vec![
+                    weights.o as i64,
+                    weights.i as i64,
+                    weights.kd as i64,
+                    weights.kh as i64,
+                    weights.kw as i64,
+                ],
+            ),
+        })
+        .collect()
+}
+
+fn run_artifact_vs_golden(name: &str, net: Network, tol: f32) {
+    let Some(set) = artifacts() else { return };
+    let Some(path) = set.get(name) else {
+        eprintln!("SKIP: artifact {name} not present");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt.load_hlo_text(path).expect("compile artifact");
+
+    // input
+    let l0 = &net.layers[0];
+    let input: Vec<f32> = (0..l0.input_elems())
+        .map(|i| ((i % 17) as f32 - 8.0) * 0.05)
+        .collect();
+    let in_dims: Vec<i64> = match net.dims {
+        udcnn::dcnn::Dims::D2 => vec![l0.in_c as i64, l0.in_h as i64, l0.in_w as i64],
+        udcnn::dcnn::Dims::D3 => vec![
+            l0.in_c as i64,
+            l0.in_d as i64,
+            l0.in_h as i64,
+            l0.in_w as i64,
+        ],
+    };
+
+    let weights = service_weights(&net);
+    let wargs = weight_args(&weights);
+    let mut args: Vec<(&[f32], &[i64])> = vec![(&input, &in_dims)];
+    for (data, dims) in &wargs {
+        args.push((data, dims));
+    }
+
+    let outputs = exe.run_f32(&args).expect("execute artifact");
+    assert_eq!(outputs.len(), 1, "model returns a 1-tuple");
+    let got = &outputs[0];
+
+    let want = forward(&net, &weights, &input);
+    assert_eq!(got.len(), want.len(), "output element count");
+    let mut max_err = 0.0f32;
+    for (g, w) in got.iter().zip(&want) {
+        max_err = max_err.max((g - w).abs());
+    }
+    assert!(
+        max_err < tol,
+        "{name}: artifact vs golden max err {max_err} (tol {tol})"
+    );
+    println!("{name}: artifact == golden (max err {max_err:.2e}, {} elems)", got.len());
+}
+
+#[test]
+fn tiny_2d_artifact_matches_golden() {
+    run_artifact_vs_golden("tiny-2d", zoo::tiny_2d(), 1e-3);
+}
+
+#[test]
+fn tiny_3d_artifact_matches_golden() {
+    run_artifact_vs_golden("tiny-3d", zoo::tiny_3d(), 1e-3);
+}
+
+#[test]
+fn dcgan_artifact_matches_golden() {
+    // full DCGAN generator: 4 deconv layers, 1024→3 channels, 64×64 out
+    run_artifact_vs_golden("dcgan", zoo::dcgan(), 3e-2);
+}
+
+#[test]
+fn all_artifacts_compile() {
+    let Some(set) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    for name in set.names() {
+        let exe = rt
+            .load_hlo_text(set.get(name).unwrap())
+            .unwrap_or_else(|e| panic!("artifact {name} failed to compile: {e:#}"));
+        println!("compiled {}", exe.name);
+    }
+}
+
+#[test]
+fn corrupt_artifact_is_a_clean_error() {
+    // Failure injection: garbage HLO text must produce an error, not
+    // a crash, and must not poison the client for later loads.
+    let dir = std::env::temp_dir();
+    let path = dir.join("udcnn_corrupt.hlo.txt");
+    std::fs::write(&path, "HloModule garbage\n\nENTRY { this is not hlo }").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    assert!(rt.load_hlo_text(&path).is_err());
+    // client still usable
+    let ok = dir.join("udcnn_ok.hlo.txt");
+    std::fs::write(
+        &ok,
+        "HloModule m\n\nENTRY main {\n  x = f32[2]{0} parameter(0)\n  ROOT t = (f32[2]{0}) tuple(x)\n}\n",
+    )
+    .unwrap();
+    let exe = rt.load_hlo_text(&ok).expect("client survives a bad load");
+    let out = exe.run_f32(&[(&[1.0, 2.0], &[2])]).unwrap();
+    assert_eq!(out[0], vec![1.0, 2.0]);
+}
+
+#[test]
+fn wrong_arity_is_a_clean_error() {
+    let Some(set) = artifacts() else { return };
+    let Some(path) = set.get("quickstart_deconv2d") else {
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(path).unwrap();
+    // quickstart artifact wants 2 args; give 1
+    let x = vec![0.0f32; 16 * 8 * 8];
+    assert!(exe.run_f32(&[(&x, &[16, 8, 8])]).is_err());
+}
+
+#[test]
+fn quickstart_artifact_runs() {
+    let Some(set) = artifacts() else { return };
+    let Some(path) = set.get("quickstart_deconv2d") else {
+        eprintln!("SKIP: quickstart artifact missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(path).unwrap();
+    // 16ch 8x8 input, 8x16x3x3 weights -> 8ch 16x16
+    let x = vec![0.1f32; 16 * 8 * 8];
+    let w = vec![0.01f32; 8 * 16 * 3 * 3];
+    let out = exe
+        .run_f32(&[(&x, &[16, 8, 8]), (&w, &[8, 16, 3, 3])])
+        .unwrap();
+    assert_eq!(out[0].len(), 8 * 16 * 16);
+    // uniform input/weights: interior outputs equal analytic value
+    // interior pixel accumulates all K²·C_in products at density S²⁻...
+    assert!(out[0].iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,257 @@
+//! Property-based invariants over the whole stack (via the in-tree
+//! `propcheck` framework — see DESIGN.md §1 for why proptest itself is
+//! not available offline).
+
+use udcnn::accel::buffers::Residency;
+use udcnn::accel::functional::run_layer_2d;
+use udcnn::accel::{oom, timing, AccelConfig, Schedule};
+use udcnn::dcnn::{LayerData, LayerDataQ, LayerSpec};
+use udcnn::fixed::{Acc48, Q88};
+use udcnn::func::deconv_q::{crop_2d_q, deconv2d_iom_q};
+use udcnn::func::{deconv2d_iom, deconv2d_oom, deconv3d_iom, deconv3d_oom};
+use udcnn::propcheck::{check, Config, Gen};
+use udcnn::tensor::{FeatureMap, Volume, WeightsOIHW, WeightsOIDHW};
+
+/// Generate (k, s) with the architecture's K ≥ S constraint (§IV-B:
+/// the K−S crop requires it).
+fn gen_ks(g: &mut Gen) -> (usize, usize) {
+    let s = *g.choose(&[1usize, 2]);
+    let k = s + g.int(0, 2);
+    (k, s)
+}
+
+fn gen_layer_2d(g: &mut Gen) -> LayerSpec {
+    let (k, s) = gen_ks(g);
+    LayerSpec::new_2d(
+        "prop2d",
+        g.int(1, 5),
+        g.int(1, 6),
+        g.int(1, 6),
+        g.int(1, 5),
+        k,
+        s,
+    )
+}
+
+fn gen_layer_3d(g: &mut Gen) -> LayerSpec {
+    let (k, s) = gen_ks(g);
+    LayerSpec::new_3d(
+        "prop3d",
+        g.int(1, 3),
+        g.int(1, 3),
+        g.int(1, 4),
+        g.int(1, 4),
+        g.int(1, 3),
+        k,
+        s,
+    )
+}
+
+/// IOM == OOM on arbitrary shapes (f32): the paper's equivalence.
+#[test]
+fn prop_iom_equals_oom_2d() {
+    check(Config { cases: 60, ..Default::default() }, |g| {
+        let (c_in, c_out) = (g.int(1, 4), g.int(1, 4));
+        let (h, w) = (g.int(1, 6), g.int(1, 6));
+        let k = *g.choose(&[1usize, 2, 3, 4]);
+        let s = *g.choose(&[1usize, 2, 3]);
+        let mut input = FeatureMap::zeros(c_in, h, w);
+        for v in input.data_mut() {
+            *v = g.f32(-2.0, 2.0);
+        }
+        let mut wt = WeightsOIHW::zeros(c_out, c_in, k, k);
+        for v in wt.data_mut() {
+            *v = g.f32(-1.0, 1.0);
+        }
+        let a = deconv2d_iom(&input, &wt, s);
+        let b = deconv2d_oom(&input, &wt, s);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            if (x - y).abs() > 1e-3 {
+                return Err(format!("IOM {x} != OOM {y} (k={k},s={s})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_iom_equals_oom_3d() {
+    check(Config { cases: 30, ..Default::default() }, |g| {
+        let (c_in, c_out) = (g.int(1, 3), g.int(1, 3));
+        let (d, h, w) = (g.int(1, 3), g.int(1, 4), g.int(1, 4));
+        let k = *g.choose(&[1usize, 2, 3]);
+        let s = *g.choose(&[1usize, 2]);
+        let mut input = Volume::zeros(c_in, d, h, w);
+        for v in input.data_mut() {
+            *v = g.f32(-2.0, 2.0);
+        }
+        let mut wt = WeightsOIDHW::zeros(c_out, c_in, k, k, k);
+        for v in wt.data_mut() {
+            *v = g.f32(-1.0, 1.0);
+        }
+        let a = deconv3d_iom(&input, &wt, s);
+        let b = deconv3d_oom(&input, &wt, s);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            if (x - y).abs() > 1e-3 {
+                return Err(format!("IOM {x} != OOM {y} (k={k},s={s})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The functional mesh equals the golden Q8.8 model on random shapes
+/// AND random mesh configurations (the paper's architecture is
+/// correct for any legal parameterization, not just Table II).
+#[test]
+fn prop_mesh_matches_golden_random_configs() {
+    check(Config { cases: 40, ..Default::default() }, |g| {
+        let layer = gen_layer_2d(g);
+        let cfg = AccelConfig::tiny(
+            g.int(1, 2),
+            1 << g.int(0, 2), // tn in {1,2,4}
+            g.int(1, 2),
+            g.int(1, 3),
+            g.int(1, 3),
+        );
+        let q = LayerData::synth(&layer, g.int(0, 1000) as u64).quantize();
+        let (input, weights) = match &q {
+            LayerDataQ::D2 { input, weights } => (input, weights),
+            _ => unreachable!(),
+        };
+        let run = run_layer_2d(&cfg, &layer, input, weights);
+        let golden = crop_2d_q(
+            &deconv2d_iom_q(input, weights, layer.s),
+            layer.out_h(),
+            layer.out_w(),
+        );
+        if run.output.data() != golden.data() {
+            return Err(format!(
+                "mesh != golden for {layer:?} cfg ({},{},{},{},{})",
+                cfg.tm, cfg.tn, cfg.tz, cfg.tr, cfg.tc
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Schedule invariants: utilization bounded by 1; pass count covers
+/// all activations; OOM never beats IOM.
+#[test]
+fn prop_schedule_invariants() {
+    check(Config { cases: 80, ..Default::default() }, |g| {
+        let layer = if g.rng.coin(0.5) {
+            gen_layer_2d(g)
+        } else {
+            gen_layer_3d(g)
+        };
+        let mut cfg = if layer.dims == udcnn::dcnn::Dims::D2 {
+            AccelConfig::paper_2d()
+        } else {
+            AccelConfig::paper_3d()
+        };
+        cfg.batch = g.int(1, 16);
+        let m = timing::simulate(&cfg, &layer);
+        let util = m.pe_utilization();
+        if !(0.0..=1.0 + 1e-9).contains(&util) {
+            return Err(format!("util {util} out of [0,1]"));
+        }
+        if m.useful_tops() > cfg.peak_tops() + 1e-9 {
+            return Err("useful TOPS above peak".into());
+        }
+        if m.total_cycles < m.compute_cycles.max(m.memory_cycles) {
+            return Err("total < max(compute, memory)".into());
+        }
+        let o = oom::simulate_oom(&cfg, &layer);
+        if o.compute_cycles < m.compute_cycles {
+            return Err(format!(
+                "OOM compute ({}) beat IOM ({}) on {layer:?}",
+                o.compute_cycles, m.compute_cycles
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Residency planning: DDR traffic is monotone in batch size and
+/// always at least the compulsory traffic.
+#[test]
+fn prop_residency_monotone() {
+    check(Config { cases: 60, ..Default::default() }, |g| {
+        let layer = gen_layer_2d(g);
+        let mut cfg = AccelConfig::paper_2d();
+        cfg.batch = g.int(1, 8);
+        let sched = Schedule::new(&cfg, &layer);
+        let r1 = Residency::plan(&cfg, &layer, &sched);
+        let compulsory = (layer.weight_elems()
+            + cfg.batch * (layer.input_elems() + layer.output_elems()))
+            as u64
+            * 2;
+        if r1.dram_bytes < compulsory {
+            return Err(format!(
+                "traffic {} below compulsory {compulsory}",
+                r1.dram_bytes
+            ));
+        }
+        cfg.batch += 1;
+        let sched2 = Schedule::new(&cfg, &layer);
+        let r2 = Residency::plan(&cfg, &layer, &sched2);
+        if r2.dram_bytes < r1.dram_bytes {
+            return Err("traffic shrank as batch grew".into());
+        }
+        Ok(())
+    });
+}
+
+/// Q8.8 algebra: quantization bounded; accumulator exact over chains.
+#[test]
+fn prop_q88_properties() {
+    check(Config { cases: 200, ..Default::default() }, |g| {
+        let x = g.f32(-120.0, 120.0);
+        let q = Q88::from_f32(x);
+        if (q.to_f32() - x).abs() > 0.5 / 256.0 + 1e-6 {
+            return Err(format!("quantization error too large at {x}"));
+        }
+        // add commutes & saturates symmetrically
+        let y = g.f32(-120.0, 120.0);
+        let qy = Q88::from_f32(y);
+        if q + qy != qy + q {
+            return Err("addition not commutative".into());
+        }
+        // accumulator linearity over a short chain
+        let mut acc = Acc48::ZERO;
+        let mut sum = 0.0f64;
+        for _ in 0..g.int(1, 32) {
+            let a = Q88::from_f32(g.f32(-4.0, 4.0));
+            let b = Q88::from_f32(g.f32(-4.0, 4.0));
+            acc.mac(a, b);
+            sum += a.to_f32() as f64 * b.to_f32() as f64;
+        }
+        if (acc.to_f64() - sum).abs() > 1e-9 {
+            return Err("accumulator drifted".into());
+        }
+        Ok(())
+    });
+}
+
+/// Eq. (1) geometry: extents compose as the paper states, for any
+/// K ≥ S ≥ 1.
+#[test]
+fn prop_eq1_geometry() {
+    check(Config { cases: 120, ..Default::default() }, |g| {
+        let s = g.int(1, 4);
+        let k = s + g.int(0, 3); // K >= S
+        let i = g.int(1, 64);
+        let layer = LayerSpec::new_2d("geom", 1, i, i, 1, k, s);
+        if layer.out_full_h() != (i - 1) * s + k {
+            return Err("full extent violates Eq. (1)".into());
+        }
+        if layer.out_h() != i * s {
+            return Err("cropped extent != I*S".into());
+        }
+        if layer.out_full_h() - layer.out_h() != k - s {
+            return Err("crop amount != K-S".into());
+        }
+        Ok(())
+    });
+}
