@@ -53,7 +53,24 @@ fn main() -> anyhow::Result<()> {
         run.stats.spills,
     );
 
-    // 3. runtime tier: the AOT-compiled Pallas kernel, if built.
+    // 3. graph compiler: whole networks, not isolated layers. The CLI
+    //    equivalent is `udcnn compile dcgan` (add `--json` for the
+    //    machine-readable plan).
+    let net = udcnn::dcnn::zoo::dcgan();
+    let plan = udcnn::graph::compile_network(&cfg, &net)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let e2e = udcnn::graph::simulate_plan(&plan);
+    println!(
+        "\n[graph] {}: {} steps, {} layer boundary(ies) on-chip, {:.1} KiB DDR saved -> {:.3} ms/batch, {:.2} effective TOPS",
+        plan.network,
+        plan.steps.len(),
+        plan.reused_edges(),
+        plan.bytes_saved() as f64 / 1024.0,
+        e2e.time_s() * 1e3,
+        e2e.effective_tops(),
+    );
+
+    // 4. runtime tier: the AOT-compiled Pallas kernel, if built.
     match ArtifactSet::discover_default() {
         Ok(set) if set.get("quickstart_deconv2d").is_some() => {
             let rt = Runtime::cpu()?;

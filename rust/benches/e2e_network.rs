@@ -1,0 +1,90 @@
+//! End-to-end network bench: compile every zoo network through the
+//! graph compiler and execute the resulting [`NetworkPlan`]s —
+//! whole-network latency, TOPS and DDR traffic, plus the compile-time
+//! cost itself.
+//!
+//! Alongside the text report it emits `reports/BENCH_e2e.json`
+//! (machine-readable per-network latency/TOPS) so the perf trajectory
+//! is tracked across PRs.
+
+use udcnn::accel::{simulate_network, AccelConfig};
+use udcnn::benchkit::{header, write_report_file, Bench};
+use udcnn::dcnn::zoo;
+use udcnn::graph::{self, NetworkGraph};
+use udcnn::report::json::{array, JsonObj};
+use udcnn::report::Table;
+
+const REPORT_PATH: &str = "reports/BENCH_e2e.json";
+
+fn main() {
+    header(
+        "e2e_network",
+        "whole-network execution plans (graph IR + compiler, batch 8)",
+    );
+
+    let bench = Bench::from_env();
+    let mut t = Table::new(
+        "end-to-end network execution (pipelined plans)",
+        &[
+            "network", "steps", "reused", "ms/batch", "ms/item", "eff TOPS", "DDR MiB",
+            "saved KiB", "compile",
+        ],
+    );
+    let mut rows = Vec::new();
+    for net in zoo::all_benchmarks() {
+        let cfg = AccelConfig::paper_for(net.dims);
+        let plan = graph::compile_network(&cfg, &net).expect("zoo networks compile");
+        let m = graph::simulate_plan(&plan);
+        let iso = simulate_network(&cfg, &net);
+
+        // wall-clock cost of the compiler itself (graph build + passes
+        // + plan), the part that runs per served model
+        let compile_cost = bench.run(&format!("compile {}", net.name), || {
+            let g = NetworkGraph::from_network(&net);
+            let lowered = graph::passes::lower(&g).unwrap();
+            let p = graph::compile(&cfg, &lowered).unwrap();
+            std::hint::black_box(p.steps.len());
+        });
+
+        t.row(&[
+            net.name.to_string(),
+            plan.steps.len().to_string(),
+            plan.reused_edges().to_string(),
+            format!("{:.3}", m.time_s() * 1e3),
+            format!("{:.3}", m.time_per_item_s() * 1e3),
+            format!("{:.2}", m.effective_tops()),
+            format!("{:.2}", m.dram_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{:.0}", plan.bytes_saved() as f64 / 1024.0),
+            udcnn::benchkit::fmt_duration(compile_cost.median_s()),
+        ]);
+
+        rows.push(
+            JsonObj::new()
+                .str("network", net.name)
+                .int("batch", cfg.batch as u64)
+                .int("steps", plan.steps.len() as u64)
+                .int("reused_edges", plan.reused_edges() as u64)
+                .int("total_cycles", m.total_cycles)
+                .num("latency_ms_batch", m.time_s() * 1e3)
+                .num("latency_ms_item", m.time_per_item_s() * 1e3)
+                .num("effective_tops", m.effective_tops())
+                .num("useful_tops", m.useful_tops())
+                .num("isolated_effective_tops", iso.effective_tops())
+                .int("dram_bytes", m.dram_bytes)
+                .int("dram_bytes_saved", plan.bytes_saved())
+                .num("compile_median_s", compile_cost.median_s())
+                .render(),
+        );
+    }
+    t.print();
+
+    let doc = JsonObj::new()
+        .str("bench", "e2e_network")
+        .str("unit_latency", "ms")
+        .raw("networks", &array(&rows))
+        .render();
+    match write_report_file(REPORT_PATH, &doc) {
+        Ok(()) => println!("wrote {REPORT_PATH}"),
+        Err(e) => eprintln!("could not write {REPORT_PATH}: {e}"),
+    }
+}

@@ -6,9 +6,10 @@
 //! §3 on why 3D exceeds the paper's 3.0 band under an explicit S³
 //! accounting) and useful TOPS (bounded by the 0.82 peak).
 
-use udcnn::accel::{simulate_layer, AccelConfig};
+use udcnn::accel::{simulate_layer, simulate_network, AccelConfig};
 use udcnn::benchkit::header;
 use udcnn::dcnn::zoo;
+use udcnn::graph;
 use udcnn::report::{bar_chart, Table};
 
 fn main() {
@@ -55,4 +56,27 @@ fn main() {
         "paper check: 3D ({t3:.2}) >= 2D ({max2:.2})  [{}]",
         if t3 >= max2 * 0.9 { "OK" } else { "MISMATCH" }
     );
+
+    // network granularity: the graph compiler's pipelined plans vs the
+    // isolated-layer sum (same workloads, whole-network execution)
+    println!();
+    let mut nt = Table::new(
+        "whole-network plans (graph compiler, batch 8)",
+        &["network", "e2e TOPS", "isolated TOPS", "reused edges", "DDR saved KiB", "ms/batch"],
+    );
+    for net in zoo::all_benchmarks() {
+        let cfg = AccelConfig::paper_for(net.dims);
+        let plan = graph::compile_network(&cfg, &net).expect("zoo networks compile");
+        let m = graph::simulate_plan(&plan);
+        let iso = simulate_network(&cfg, &net);
+        nt.row(&[
+            net.name.to_string(),
+            format!("{:.2}", m.effective_tops()),
+            format!("{:.2}", iso.effective_tops()),
+            plan.reused_edges().to_string(),
+            format!("{:.0}", plan.bytes_saved() as f64 / 1024.0),
+            format!("{:.3}", m.time_s() * 1e3),
+        ]);
+    }
+    nt.print();
 }

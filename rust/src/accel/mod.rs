@@ -48,8 +48,22 @@ pub fn simulate_layer(cfg: &AccelConfig, layer: &LayerSpec) -> LayerMetrics {
     timing::simulate(cfg, layer)
 }
 
-/// Simulate a whole network layer-by-layer.
+/// Simulate a whole network layer-by-layer (isolated layers, no
+/// cross-layer overlap — the Fig. 6/7 baseline).
 pub fn simulate_network(cfg: &AccelConfig, net: &crate::dcnn::Network) -> NetworkMetrics {
     let layers = net.layers.iter().map(|l| timing::simulate(cfg, l)).collect();
     NetworkMetrics::new(net.name, layers)
+}
+
+/// Simulate a whole network through the graph compiler: build the IR,
+/// lower it, compile a [`crate::graph::NetworkPlan`] (inter-layer
+/// buffer reuse + per-node tiling) and execute it with cross-layer
+/// prefetch overlap. End-to-end latency/TOPS/traffic at network
+/// granularity. Errors if the layer chain does not compose.
+pub fn simulate_network_pipelined(
+    cfg: &AccelConfig,
+    net: &crate::dcnn::Network,
+) -> Result<crate::graph::NetworkRunMetrics, String> {
+    let plan = crate::graph::compile_network(cfg, net)?;
+    Ok(crate::graph::simulate_plan(&plan))
 }

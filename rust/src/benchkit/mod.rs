@@ -126,6 +126,19 @@ pub fn header(title: &str, paper_ref: &str) {
     println!();
 }
 
+/// Write a machine-readable report next to the text output (e.g.
+/// `reports/BENCH_e2e.json`), creating parent directories as needed —
+/// the per-PR perf trajectory is tracked from these files.
+pub fn write_report_file(path: &str, contents: &str) -> std::io::Result<()> {
+    let p = std::path::Path::new(path);
+    if let Some(dir) = p.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(p, contents)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +178,16 @@ mod tests {
         assert!(fmt_duration(2.5e-3).ends_with(" ms"));
         assert!(fmt_duration(2.5e-6).ends_with(" µs"));
         assert!(fmt_duration(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn write_report_file_creates_parents() {
+        let dir = std::env::temp_dir().join(format!("udcnn_benchkit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/BENCH_test.json");
+        write_report_file(path.to_str().unwrap(), "{\"ok\": 1}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"ok\": 1}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

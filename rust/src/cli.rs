@@ -47,6 +47,26 @@ where
     }
 }
 
+/// First bare (non-option) argument — subcommands like
+/// `udcnn compile <net>` take the network positionally. `value_keys`
+/// names the options that consume a value, so a boolean flag placed
+/// before the positional (`compile --json dcgan`) does not swallow it.
+pub fn first_positional<'a>(args: &'a [String], value_keys: &[&str]) -> Option<&'a String> {
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].strip_prefix("--") {
+            Some(key) => {
+                i += 1;
+                if value_keys.contains(&key) && i < args.len() && !args[i].starts_with("--") {
+                    i += 1; // skip the option's value
+                }
+            }
+            None => return Some(&args[i]),
+        }
+    }
+    None
+}
+
 /// Resolve a benchmark network by (aliased) name.
 pub fn network_by_name(name: &str) -> Result<Network> {
     match name {
@@ -101,6 +121,26 @@ mod tests {
         assert_eq!(d, 8);
         let bad = parse_opts(&args(&["--batch", "xyz"]));
         assert!(opt_parse::<usize>(&bad, "batch", 8).is_err());
+    }
+
+    #[test]
+    fn first_positional_skips_options() {
+        let keys = &["batch", "net"];
+        assert_eq!(
+            first_positional(&args(&["--batch", "4", "dcgan", "--json"]), keys),
+            Some(&"dcgan".to_string())
+        );
+        assert_eq!(
+            first_positional(&args(&["dcgan", "--batch", "4"]), keys),
+            Some(&"dcgan".to_string())
+        );
+        // boolean flag before the positional must not swallow it
+        assert_eq!(
+            first_positional(&args(&["--json", "dcgan"]), keys),
+            Some(&"dcgan".to_string())
+        );
+        assert_eq!(first_positional(&args(&["--json", "--batch", "4"]), keys), None);
+        assert_eq!(first_positional(&args(&[]), keys), None);
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //!
 //! Numerics run through the f32 golden IOM pipeline (bit-compatible
 //! with the artifacts — see `integration_runtime.rs`); latency is the
-//! *simulated accelerator time* from the timing tier at the actual
-//! batch size, which is what a hardware deployment would report.
+//! *simulated accelerator time* of the compiled
+//! [`crate::graph::NetworkPlan`] at the actual batch size (inter-layer
+//! buffer reuse + cross-layer prefetch overlap), which is what a
+//! hardware deployment would report.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Sender};
@@ -14,7 +16,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::accel::{timing, AccelConfig, Schedule};
+use crate::accel::{AccelConfig, Schedule};
 use crate::dcnn::{Dims, LayerData, Network};
 use crate::func::{crop_2d, crop_3d, deconv2d_iom, deconv3d_iom};
 use crate::tensor::{FeatureMap, Volume};
@@ -148,14 +150,17 @@ fn serve_batch(
     stats: &Arc<Mutex<ServiceStats>>,
 ) {
     let bsize = batch.len();
-    // simulated accelerator time for this batch
+    // simulated accelerator time for this batch: the compiled
+    // whole-network plan, not a sum of isolated layers. Networks the
+    // graph compiler rejects (e.g. a registered chain whose declared
+    // geometries don't compose) fall back to the isolated-layer sum
+    // rather than killing this model's worker.
     let mut cfg = AccelConfig::paper_for(net.dims);
     cfg.batch = bsize;
-    let accel_s: f64 = net
-        .layers
-        .iter()
-        .map(|l| timing::simulate(&cfg, l).time_s())
-        .sum();
+    let accel_s = match crate::graph::compile_network(&cfg, net) {
+        Ok(plan) => crate::graph::simulate_plan(&plan).time_s(),
+        Err(_) => crate::accel::simulate_network(&cfg, net).total_time_s(),
+    };
 
     // Account the batch before replying so callers observing their
     // response always see it reflected in the stats.

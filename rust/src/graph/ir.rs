@@ -1,0 +1,361 @@
+//! The whole-network graph IR.
+//!
+//! A [`NetworkGraph`] is a DAG of [`NodeSpec`]s with explicit tensor
+//! edges (node inputs reference producer node ids; every node produces
+//! exactly one tensor). Ops cover what the uniform architecture runs:
+//!
+//! * [`OpKind::Deconv`] — IOM deconvolution, the accelerator's native
+//!   operation (one [`LayerSpec`] of geometry);
+//! * [`OpKind::ZeroInsert`] + [`OpKind::Conv`] — the OOM decomposition
+//!   of the same layer (zero-insert, pad `K−1`, dense conv). Front
+//!   ends may emit this form; the [`super::passes::lower_oom_to_iom`]
+//!   pass rewrites each pair into one `Deconv` node;
+//! * [`OpKind::Activation`] — pointwise nonlinearity, fused into its
+//!   producer by [`super::passes::fuse_activations`] (the PE writes
+//!   back through the activation unit for free);
+//! * [`OpKind::Input`] — the network input placeholder.
+//!
+//! Builders construct graphs from the [`crate::dcnn::zoo`] networks
+//! (or any [`LayerSpec`] chain, e.g. the ones
+//! [`crate::dcnn::workload`] generates data for); node ids are
+//! assigned in insertion order, which [`NetworkGraph::add_node`]
+//! keeps topological by construction.
+
+use std::fmt;
+
+use crate::dcnn::{Dims, LayerSpec, Network};
+
+/// Index of a node in [`NetworkGraph::nodes`].
+pub type NodeId = usize;
+
+/// Shape of one tensor edge, `C × D × H × W` (`d = 1` for 2D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TensorShape {
+    pub c: usize,
+    pub d: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl TensorShape {
+    pub fn new(c: usize, d: usize, h: usize, w: usize) -> TensorShape {
+        TensorShape { c, d, h, w }
+    }
+
+    /// The input tensor of a deconvolution layer.
+    pub fn of_layer_input(spec: &LayerSpec) -> TensorShape {
+        TensorShape::new(spec.in_c, spec.in_d, spec.in_h, spec.in_w)
+    }
+
+    /// The cropped (`I·S`) output tensor of a deconvolution layer.
+    pub fn of_layer_output(spec: &LayerSpec) -> TensorShape {
+        TensorShape::new(spec.out_c, spec.out_d(), spec.out_h(), spec.out_w())
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.c * self.d * self.h * self.w
+    }
+
+    /// Bytes at a given element width.
+    pub fn bytes(&self, elem_bytes: usize) -> u64 {
+        (self.elems() * elem_bytes) as u64
+    }
+}
+
+impl fmt::Display for TensorShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.d == 1 {
+            write!(f, "{}x{}x{}", self.c, self.h, self.w)
+        } else {
+            write!(f, "{}x{}x{}x{}", self.c, self.d, self.h, self.w)
+        }
+    }
+}
+
+/// Pointwise nonlinearities the PE write-back path applies for free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Tanh,
+    Sigmoid,
+}
+
+impl fmt::Display for Act {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Act::Relu => write!(f, "relu"),
+            Act::Tanh => write!(f, "tanh"),
+            Act::Sigmoid => write!(f, "sigmoid"),
+        }
+    }
+}
+
+/// Operation performed by one graph node.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// Network input placeholder.
+    Input { shape: TensorShape },
+    /// IOM deconvolution — the accelerator's native op.
+    Deconv { spec: LayerSpec },
+    /// OOM artifact: insert `S−1` zeros + pad `K−1` (geometry of the
+    /// eventual layer carried along for shape inference).
+    ZeroInsert { spec: LayerSpec },
+    /// OOM artifact: dense stride-1 convolution over the inserted map
+    /// (output cropped to `I·S` at write-back, like the hardware).
+    Conv { spec: LayerSpec },
+    /// Pointwise activation.
+    Activation { act: Act },
+}
+
+impl OpKind {
+    /// Short mnemonic for dumps.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Input { .. } => "input",
+            OpKind::Deconv { .. } => "deconv",
+            OpKind::ZeroInsert { .. } => "zero_insert",
+            OpKind::Conv { .. } => "conv",
+            OpKind::Activation { .. } => "activation",
+        }
+    }
+}
+
+/// One node: an op, its input edges, and (after shape inference) the
+/// shape of the tensor it produces.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub id: NodeId,
+    pub name: String,
+    pub op: OpKind,
+    /// Producer node ids, in argument order.
+    pub inputs: Vec<NodeId>,
+    /// Activations fused into this node's write-back path
+    /// (populated by [`super::passes::fuse_activations`]).
+    pub fused: Vec<Act>,
+    /// Output tensor shape (populated by
+    /// [`super::passes::infer_shapes`]).
+    pub out_shape: Option<TensorShape>,
+}
+
+/// A whole network as a graph of ops over explicit tensor edges.
+#[derive(Clone, Debug)]
+pub struct NetworkGraph {
+    pub name: String,
+    pub dims: Dims,
+    /// Nodes in topological (insertion) order; `nodes[i].id == i`.
+    pub nodes: Vec<NodeSpec>,
+}
+
+impl NetworkGraph {
+    pub fn new(name: impl Into<String>, dims: Dims) -> NetworkGraph {
+        NetworkGraph {
+            name: name.into(),
+            dims,
+            nodes: Vec::new(),
+        }
+    }
+
+    /// Append a node; inputs must reference already-added nodes, which
+    /// keeps node order topological by construction.
+    pub fn add_node(&mut self, name: impl Into<String>, op: OpKind, inputs: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "node input {i} must precede node {id}");
+        }
+        self.nodes.push(NodeSpec {
+            id,
+            name: name.into(),
+            op,
+            inputs: inputs.to_vec(),
+            fused: Vec::new(),
+            out_shape: None,
+        });
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &NodeSpec {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// All tensor edges as `(producer, consumer)` pairs.
+    pub fn edges(&self) -> Vec<(NodeId, NodeId)> {
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            for &src in &n.inputs {
+                out.push((src, n.id));
+            }
+        }
+        out
+    }
+
+    /// Nodes that consume `id`'s output tensor.
+    pub fn consumers(&self, id: NodeId) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.inputs.contains(&id))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Build the IOM-form graph from a layer chain: one `Input` node,
+    /// then one `Deconv` per layer (optionally followed by an
+    /// activation after each deconv).
+    pub fn from_layers(
+        name: impl Into<String>,
+        dims: Dims,
+        layers: &[LayerSpec],
+        act: Option<Act>,
+    ) -> NetworkGraph {
+        let mut g = NetworkGraph::new(name, dims);
+        let Some(first) = layers.first() else {
+            return g;
+        };
+        let mut prev = g.add_node(
+            format!("{}.input", g.name),
+            OpKind::Input {
+                shape: TensorShape::of_layer_input(first),
+            },
+            &[],
+        );
+        for spec in layers {
+            prev = g.add_node(
+                spec.name.clone(),
+                OpKind::Deconv { spec: spec.clone() },
+                &[prev],
+            );
+            if let Some(a) = act {
+                prev = g.add_node(
+                    format!("{}.{}", spec.name, a),
+                    OpKind::Activation { act: a },
+                    &[prev],
+                );
+            }
+        }
+        g
+    }
+
+    /// IOM-form graph of a zoo network.
+    pub fn from_network(net: &Network) -> NetworkGraph {
+        NetworkGraph::from_layers(net.name, net.dims, &net.layers, None)
+    }
+
+    /// IOM-form graph with an activation after every deconv (what the
+    /// real generators do: ReLU between layers, tanh at the end — the
+    /// uniform `act` is enough to exercise the fusion pass).
+    pub fn from_network_with_activations(net: &Network, act: Act) -> NetworkGraph {
+        NetworkGraph::from_layers(net.name, net.dims, &net.layers, Some(act))
+    }
+
+    /// OOM-form graph of a zoo network: each layer appears as a
+    /// `ZeroInsert` + `Conv` pair (what a conventional front end would
+    /// emit; [`super::passes::lower_oom_to_iom`] rewrites it).
+    pub fn from_network_oom(net: &Network) -> NetworkGraph {
+        let mut g = NetworkGraph::new(net.name, net.dims);
+        let Some(first) = net.layers.first() else {
+            return g;
+        };
+        let mut prev = g.add_node(
+            format!("{}.input", g.name),
+            OpKind::Input {
+                shape: TensorShape::of_layer_input(first),
+            },
+            &[],
+        );
+        for spec in &net.layers {
+            let zi = g.add_node(
+                format!("{}.zero_insert", spec.name),
+                OpKind::ZeroInsert { spec: spec.clone() },
+                &[prev],
+            );
+            prev = g.add_node(
+                format!("{}.conv", spec.name),
+                OpKind::Conv { spec: spec.clone() },
+                &[zi],
+            );
+        }
+        g
+    }
+
+    /// The deconvolution layer chain, in execution order.
+    pub fn deconv_specs(&self) -> Vec<&LayerSpec> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                OpKind::Deconv { spec } => Some(spec),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn from_network_builds_linear_chain() {
+        let net = zoo::dcgan();
+        let g = NetworkGraph::from_network(&net);
+        assert_eq!(g.len(), 5, "input + 4 deconvs");
+        assert_eq!(g.edges().len(), 4);
+        assert_eq!(g.deconv_specs().len(), 4);
+        for (i, n) in g.nodes.iter().enumerate().skip(1) {
+            assert_eq!(n.inputs, vec![i - 1]);
+        }
+        assert_eq!(g.consumers(0), vec![1]);
+        assert!(g.consumers(4).is_empty(), "output node has no consumers");
+    }
+
+    #[test]
+    fn oom_form_has_two_nodes_per_layer() {
+        let net = zoo::gan3d();
+        let g = NetworkGraph::from_network_oom(&net);
+        assert_eq!(g.len(), 1 + 2 * 4);
+        assert!(g.deconv_specs().is_empty(), "no IOM nodes before lowering");
+        let mn: Vec<&str> = g.nodes.iter().map(|n| n.op.mnemonic()).collect();
+        assert_eq!(mn[0], "input");
+        assert_eq!(mn[1], "zero_insert");
+        assert_eq!(mn[2], "conv");
+    }
+
+    #[test]
+    fn activations_appear_between_layers() {
+        let net = zoo::tiny_2d();
+        let g = NetworkGraph::from_network_with_activations(&net, Act::Relu);
+        assert_eq!(g.len(), 1 + 2 * 2);
+        assert_eq!(g.nodes[2].op, OpKind::Activation { act: Act::Relu });
+        assert_eq!(g.nodes[2].inputs, vec![1]);
+    }
+
+    #[test]
+    fn tensor_shape_helpers() {
+        let spec = &zoo::dcgan().layers[0];
+        let i = TensorShape::of_layer_input(spec);
+        let o = TensorShape::of_layer_output(spec);
+        assert_eq!((i.c, i.d, i.h, i.w), (1024, 1, 4, 4));
+        assert_eq!((o.c, o.h, o.w), (512, 8, 8));
+        assert_eq!(i.elems(), 1024 * 16);
+        assert_eq!(i.bytes(2), 1024 * 16 * 2);
+        assert_eq!(format!("{o}"), "512x8x8");
+        let spec3 = &zoo::gan3d().layers[0];
+        let o3 = TensorShape::of_layer_output(spec3);
+        assert_eq!(format!("{o3}"), "256x8x8x8");
+    }
+
+    #[test]
+    #[should_panic(expected = "must precede")]
+    fn forward_references_rejected() {
+        let mut g = NetworkGraph::new("bad", Dims::D2);
+        g.add_node("n", OpKind::Activation { act: Act::Relu }, &[3]);
+    }
+}

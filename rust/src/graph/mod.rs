@@ -1,0 +1,59 @@
+//! Whole-network graph IR and compiler.
+//!
+//! The paper's headline numbers come from running *entire* DCNNs —
+//! DCGAN, GP-GAN, 3D-GAN, the V-Net decoder — through one uniform
+//! architecture. This subsystem models that at network granularity
+//! instead of summing isolated layers:
+//!
+//! * [`ir`] — [`NetworkGraph`]: ops (deconv in IOM or OOM form,
+//!   activations) over explicit tensor edges, built from
+//!   [`crate::dcnn::zoo`] networks or any [`crate::dcnn::LayerSpec`]
+//!   chain;
+//! * [`passes`] — validation, shape inference, OOM→IOM lowering,
+//!   activation fusion ([`passes::lower`] is the default pipeline);
+//! * [`plan`] — [`compile`] binds a lowered graph to an
+//!   [`crate::accel::AccelConfig`]: per-node blocking schedules plus
+//!   the inter-layer buffer-reuse pass (the output buffer of layer *i*
+//!   becomes the input buffer of layer *i+1* when the tensor fits
+//!   on-chip, else it spills to DDR);
+//! * [`simulate`] — [`simulate_plan`] executes a [`NetworkPlan`] with
+//!   cross-layer double-buffered prefetch overlap and reports
+//!   end-to-end latency / TOPS / DDR traffic.
+//!
+//! The CLI front end is `udcnn compile <net>`; the coordinator serves
+//! compiled plans; `benches/e2e_network.rs` tracks the numbers.
+
+pub mod ir;
+pub mod passes;
+pub mod plan;
+pub mod simulate;
+
+pub use ir::{Act, NetworkGraph, NodeId, NodeSpec, OpKind, TensorShape};
+pub use plan::{compile, EdgePlace, NetworkPlan, StepPlan};
+pub use simulate::{simulate_plan, NetworkRunMetrics};
+
+use crate::accel::AccelConfig;
+use crate::dcnn::Network;
+
+/// One-call front end: build the IOM graph of `net`, run the default
+/// pass pipeline, and compile it onto `cfg`.
+pub fn compile_network(cfg: &AccelConfig, net: &Network) -> Result<NetworkPlan, String> {
+    let g = passes::lower(&NetworkGraph::from_network(net))?;
+    compile(cfg, &g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn compile_network_front_end() {
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            let plan = compile_network(&cfg, &net).unwrap();
+            assert_eq!(plan.steps.len(), net.layers.len(), "{}", net.name);
+            assert_eq!(plan.network, net.name);
+        }
+    }
+}

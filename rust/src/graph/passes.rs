@@ -1,0 +1,301 @@
+//! The compiler pass pipeline over [`NetworkGraph`]s.
+//!
+//! Passes, in the order [`lower`] runs them:
+//!
+//! 1. [`validate`] — structural checks (arity, edge references,
+//!    dimensionality consistency);
+//! 2. [`infer_shapes`] — propagate tensor shapes along every edge and
+//!    reject chains whose layer geometries do not compose;
+//! 3. [`lower_oom_to_iom`] — rewrite every `ZeroInsert → Conv` pair
+//!    into the accelerator's native `Deconv` node (§III of the paper:
+//!    the two formulations compute the same function; IOM never
+//!    touches the inserted zeros);
+//! 4. [`fuse_activations`] — fold pointwise activations into their
+//!    producer's write-back path (free in hardware);
+//! 5. [`infer_shapes`] again — shapes for the rewritten graph.
+//!
+//! Passes are pure graph→graph functions so they compose and are
+//! testable in isolation; [`lower`] is the pipeline the CLI and the
+//! coordinator use before [`super::plan::compile`].
+
+use crate::dcnn::Dims;
+
+use super::ir::{NetworkGraph, NodeId, NodeSpec, OpKind, TensorShape};
+
+/// Structural validation: every edge references an earlier node, every
+/// op has the right arity, and every layer matches the graph's
+/// dimensionality.
+pub fn validate(g: &NetworkGraph) -> Result<(), String> {
+    for (i, n) in g.nodes.iter().enumerate() {
+        if n.id != i {
+            return Err(format!("node {} has id {} (must equal its index)", i, n.id));
+        }
+        for &src in &n.inputs {
+            if src >= i {
+                return Err(format!(
+                    "node '{}' ({}) references node {} out of topological order",
+                    n.name, i, src
+                ));
+            }
+        }
+        let arity = match &n.op {
+            OpKind::Input { .. } => 0,
+            _ => 1,
+        };
+        if n.inputs.len() != arity {
+            return Err(format!(
+                "node '{}' ({}) has {} inputs, expected {arity}",
+                n.name,
+                n.op.mnemonic(),
+                n.inputs.len()
+            ));
+        }
+        let spec_dims = match &n.op {
+            OpKind::Deconv { spec }
+            | OpKind::ZeroInsert { spec }
+            | OpKind::Conv { spec } => Some(spec.dims),
+            _ => None,
+        };
+        if let Some(d) = spec_dims {
+            if d != g.dims {
+                return Err(format!(
+                    "node '{}' is {d} but the graph '{}' is {}",
+                    n.name, g.name, g.dims
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Expected output shape of one node given its (already inferred)
+/// input shape.
+fn node_out_shape(n: &NodeSpec, input: Option<TensorShape>) -> Result<TensorShape, String> {
+    let expect_input = |want: TensorShape| -> Result<(), String> {
+        match input {
+            Some(got) if got == want => Ok(()),
+            Some(got) => Err(format!(
+                "node '{}' expects input {want}, got {got} (layer chain does not compose)",
+                n.name
+            )),
+            None => Err(format!("node '{}' input shape not inferred", n.name)),
+        }
+    };
+    match &n.op {
+        OpKind::Input { shape } => Ok(*shape),
+        OpKind::Deconv { spec } => {
+            expect_input(TensorShape::of_layer_input(spec))?;
+            Ok(TensorShape::of_layer_output(spec))
+        }
+        OpKind::ZeroInsert { spec } => {
+            expect_input(TensorShape::of_layer_input(spec))?;
+            // inserted extent (I−1)·S+1, plus the K−1 'full'-conv border
+            let pad = 2 * (spec.k - 1);
+            let d = if spec.dims == Dims::D2 {
+                1
+            } else {
+                spec.ins_extent(spec.in_d) + pad
+            };
+            Ok(TensorShape::new(
+                spec.in_c,
+                d,
+                spec.ins_extent(spec.in_h) + pad,
+                spec.ins_extent(spec.in_w) + pad,
+            ))
+        }
+        OpKind::Conv { spec } => {
+            // input must be the padded inserted map of the same layer
+            let zi = NodeSpec {
+                op: OpKind::ZeroInsert { spec: spec.clone() },
+                ..n.clone()
+            };
+            let want = node_out_shape(&zi, Some(TensorShape::of_layer_input(spec)))?;
+            expect_input(want)?;
+            // VALID conv gives the full Eq.-(1) extent; the K−S edge is
+            // cropped at write-back, so the edge tensor is I·S.
+            Ok(TensorShape::of_layer_output(spec))
+        }
+        OpKind::Activation { .. } => match input {
+            Some(s) => Ok(s),
+            None => Err(format!("node '{}' input shape not inferred", n.name)),
+        },
+    }
+}
+
+/// Shape inference: fills `out_shape` on every node, rejecting graphs
+/// whose layer geometries do not compose.
+pub fn infer_shapes(g: &mut NetworkGraph) -> Result<(), String> {
+    validate(g)?;
+    for i in 0..g.nodes.len() {
+        let input = match g.nodes[i].inputs.first() {
+            Some(&src) => g.nodes[src].out_shape,
+            None => None,
+        };
+        let shape = node_out_shape(&g.nodes[i], input)?;
+        g.nodes[i].out_shape = Some(shape);
+    }
+    Ok(())
+}
+
+/// Rewrite every `ZeroInsert → Conv` pair (the OOM decomposition) into
+/// one native IOM `Deconv` node. A pair fuses when the `ZeroInsert`
+/// feeds exactly that `Conv` and both carry the same layer geometry.
+pub fn lower_oom_to_iom(g: &NetworkGraph) -> NetworkGraph {
+    // Which ZeroInsert nodes fuse into which Conv consumer.
+    let mut fused_zi: Vec<bool> = vec![false; g.nodes.len()];
+    for n in &g.nodes {
+        if let OpKind::Conv { spec } = &n.op {
+            let src = n.inputs[0];
+            if let OpKind::ZeroInsert { spec: zspec } = &g.nodes[src].op {
+                if zspec == spec && g.consumers(src).len() == 1 {
+                    fused_zi[src] = true;
+                }
+            }
+        }
+    }
+
+    let mut out = NetworkGraph::new(g.name.clone(), g.dims);
+    // old id → new id (for fused ZeroInserts: the id of their producer)
+    let mut map: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        if fused_zi[n.id] {
+            // skip; consumers reach through to its producer
+            map.push(map[n.inputs[0]]);
+            continue;
+        }
+        let (op, name) = match &n.op {
+            OpKind::Conv { spec } if fused_zi[n.inputs[0]] => (
+                OpKind::Deconv { spec: spec.clone() },
+                spec.name.clone(),
+            ),
+            other => (other.clone(), n.name.clone()),
+        };
+        let inputs: Vec<NodeId> = n.inputs.iter().map(|&i| map[i]).collect();
+        let id = out.add_node(name, op, &inputs);
+        out.nodes[id].fused = n.fused.clone();
+        map.push(id);
+    }
+    out
+}
+
+/// Fold pointwise activations into their producer's write-back path.
+/// An activation fuses when its producer feeds it exclusively.
+pub fn fuse_activations(g: &NetworkGraph) -> NetworkGraph {
+    let mut out = NetworkGraph::new(g.name.clone(), g.dims);
+    let mut map: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        if let OpKind::Activation { act } = &n.op {
+            let src = n.inputs[0];
+            let fusible = g.consumers(src).len() == 1
+                && !matches!(g.nodes[src].op, OpKind::Input { .. });
+            if fusible {
+                let new_src = map[src];
+                out.nodes[new_src].fused.push(*act);
+                map.push(new_src);
+                continue;
+            }
+        }
+        let inputs: Vec<NodeId> = n.inputs.iter().map(|&i| map[i]).collect();
+        let id = out.add_node(n.name.clone(), n.op.clone(), &inputs);
+        out.nodes[id].fused = n.fused.clone();
+        map.push(id);
+    }
+    out
+}
+
+/// The default pipeline: validate, infer, lower OOM→IOM, fuse
+/// activations, re-infer. Returns the lowered graph ready for
+/// [`super::plan::compile`].
+pub fn lower(g: &NetworkGraph) -> Result<NetworkGraph, String> {
+    let mut g = g.clone();
+    infer_shapes(&mut g)?;
+    let mut g = fuse_activations(&lower_oom_to_iom(&g));
+    infer_shapes(&mut g)?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+    use crate::graph::ir::Act;
+
+    #[test]
+    fn shapes_compose_along_zoo_chains() {
+        for net in zoo::all_benchmarks() {
+            let mut g = NetworkGraph::from_network(&net);
+            infer_shapes(&mut g).unwrap();
+            let last = g.nodes.last().unwrap();
+            let spec = net.layers.last().unwrap();
+            assert_eq!(
+                last.out_shape.unwrap(),
+                TensorShape::of_layer_output(spec),
+                "{}",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn broken_chain_is_rejected() {
+        let mut net = zoo::dcgan();
+        net.layers[1].in_c = 999; // no longer matches layer 0's out_c
+        let mut g = NetworkGraph::from_network(&net);
+        let err = infer_shapes(&mut g).unwrap_err();
+        assert!(err.contains("does not compose"), "{err}");
+    }
+
+    #[test]
+    fn oom_shapes_match_reference_formulation() {
+        // ZeroInsert output = padded inserted map; Conv output = the
+        // same cropped tensor a Deconv produces.
+        let net = zoo::tiny_2d();
+        let mut g = NetworkGraph::from_network_oom(&net);
+        infer_shapes(&mut g).unwrap();
+        let spec = &net.layers[0];
+        let zi = g.nodes[1].out_shape.unwrap();
+        // (4−1)·2+1 = 7 inserted, +2·(3−1) = 11 padded
+        assert_eq!((zi.h, zi.w), (11, 11));
+        assert_eq!(zi.c, spec.in_c);
+        let conv = g.nodes[2].out_shape.unwrap();
+        assert_eq!(conv, TensorShape::of_layer_output(spec));
+    }
+
+    #[test]
+    fn lowering_rewrites_every_pair() {
+        for net in zoo::all_benchmarks() {
+            let g = NetworkGraph::from_network_oom(&net);
+            let lowered = lower(&g).unwrap();
+            assert_eq!(lowered.len(), 1 + net.layers.len(), "{}", net.name);
+            assert_eq!(lowered.deconv_specs().len(), net.layers.len());
+            // lowered OOM graph is isomorphic to the native IOM build
+            let native = lower(&NetworkGraph::from_network(&net)).unwrap();
+            let a: Vec<_> = lowered.deconv_specs();
+            let b: Vec<_> = native.deconv_specs();
+            assert_eq!(a, b, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn activation_fusion_collapses_chain() {
+        let net = zoo::tiny_3d();
+        let g = NetworkGraph::from_network_with_activations(&net, Act::Relu);
+        let lowered = lower(&g).unwrap();
+        assert_eq!(lowered.len(), 1 + net.layers.len());
+        for n in &lowered.nodes {
+            if matches!(n.op, OpKind::Deconv { .. }) {
+                assert_eq!(n.fused, vec![Act::Relu], "{}", n.name);
+            }
+        }
+    }
+
+    #[test]
+    fn lower_is_idempotent_on_iom_graphs() {
+        let net = zoo::vnet();
+        let g = NetworkGraph::from_network(&net);
+        let once = lower(&g).unwrap();
+        let twice = lower(&once).unwrap();
+        assert_eq!(once.len(), twice.len());
+        assert_eq!(once.deconv_specs(), twice.deconv_specs());
+    }
+}

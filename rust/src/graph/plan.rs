@@ -1,0 +1,377 @@
+//! The [`NetworkPlan`] artifact: a lowered graph bound to one
+//! accelerator configuration.
+//!
+//! [`compile`] sequences the deconvolution chain, derives each node's
+//! blocking [`Schedule`] and operand [`Residency`], and then runs the
+//! **inter-layer buffer-reuse pass**: when the tensor between layer
+//! *i* and layer *i+1* fits on-chip (both the producer's output buffer
+//! and the consumer's input buffer), the output of layer *i* is never
+//! written to DDR and layer *i+1* never reads it back — the output
+//! buffer simply becomes the next layer's input buffer. Tensors that
+//! do not fit spill to DDR exactly as in the isolated-layer model.
+//!
+//! The plan records both the adjusted and the isolated traffic so the
+//! savings are auditable, renders as human-readable text (the
+//! `udcnn compile` dump) and exports as JSON via [`crate::report`].
+
+use crate::accel::buffers::Residency;
+use crate::accel::{AccelConfig, Schedule};
+use crate::dcnn::LayerSpec;
+use crate::report::json::JsonObj;
+
+use super::ir::{Act, NetworkGraph, NodeId, OpKind};
+
+/// Where a step's input/output tensor lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgePlace {
+    /// Kept in the on-chip buffers across the layer boundary.
+    OnChip,
+    /// Streamed through DDR.
+    Ddr,
+}
+
+impl std::fmt::Display for EdgePlace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EdgePlace::OnChip => write!(f, "on-chip"),
+            EdgePlace::Ddr => write!(f, "DDR"),
+        }
+    }
+}
+
+/// One executable step of a network plan (one deconvolution layer).
+#[derive(Clone, Debug)]
+pub struct StepPlan {
+    /// Node id in the lowered graph.
+    pub node: NodeId,
+    pub name: String,
+    pub layer: LayerSpec,
+    pub schedule: Schedule,
+    /// Activations fused into this step's write-back.
+    pub fused: Vec<Act>,
+    pub input_src: EdgePlace,
+    pub output_dst: EdgePlace,
+    /// DDR traffic after reuse adjustment (batch totals).
+    pub weight_bytes: u64,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+    /// What the isolated-layer residency plan would have moved.
+    pub isolated_dram_bytes: u64,
+}
+
+impl StepPlan {
+    /// Total adjusted DDR traffic of this step.
+    pub fn dram_bytes(&self) -> u64 {
+        self.weight_bytes + self.input_bytes + self.output_bytes
+    }
+}
+
+/// A compiled whole-network execution plan.
+#[derive(Clone, Debug)]
+pub struct NetworkPlan {
+    pub network: String,
+    pub cfg: AccelConfig,
+    pub steps: Vec<StepPlan>,
+}
+
+/// Compile a lowered graph onto one configuration.
+///
+/// The graph must already be through [`super::passes::lower`]: only
+/// `Input` and `Deconv` nodes may remain, forming a linear chain (the
+/// shape every benchmark decoder has; branching DAGs are rejected with
+/// a clear error rather than silently mis-planned).
+pub fn compile(cfg: &AccelConfig, g: &NetworkGraph) -> Result<NetworkPlan, String> {
+    cfg.validate()?;
+    let mut steps: Vec<StepPlan> = Vec::new();
+    for n in &g.nodes {
+        match &n.op {
+            OpKind::Input { .. } => {}
+            OpKind::Deconv { spec } => {
+                let consumers = g.consumers(n.id);
+                if consumers.len() > 1 {
+                    return Err(format!(
+                        "node '{}' has {} consumers; only linear chains are supported",
+                        n.name,
+                        consumers.len()
+                    ));
+                }
+                // each step must consume the previous step's tensor
+                let chained = match steps.last() {
+                    Some(prev) => n.inputs[0] == prev.node,
+                    None => matches!(g.nodes[n.inputs[0]].op, OpKind::Input { .. }),
+                };
+                if !chained {
+                    return Err(format!(
+                        "node '{}' does not consume the previous step's output; \
+                         only linear chains are supported",
+                        n.name
+                    ));
+                }
+                let schedule = Schedule::new(cfg, spec);
+                let res = Residency::plan(cfg, spec, &schedule);
+                steps.push(StepPlan {
+                    node: n.id,
+                    name: n.name.clone(),
+                    layer: spec.clone(),
+                    schedule,
+                    fused: n.fused.clone(),
+                    input_src: EdgePlace::Ddr,
+                    output_dst: EdgePlace::Ddr,
+                    weight_bytes: res.weight_bytes,
+                    input_bytes: res.input_bytes,
+                    output_bytes: res.output_bytes,
+                    isolated_dram_bytes: res.dram_bytes,
+                });
+            }
+            other => {
+                return Err(format!(
+                    "node '{}' is {}; run graph::passes::lower before compile",
+                    n.name,
+                    other.mnemonic()
+                ));
+            }
+        }
+    }
+    if steps.is_empty() {
+        return Err(format!("graph '{}' has no deconvolution nodes", g.name));
+    }
+
+    // Inter-layer buffer-reuse pass. The edge tensor (whole batch) must
+    // fit both buffers, and both sides' residency must already move the
+    // tensor exactly once (no RMW spill, no per-block re-streaming), so
+    // zeroing their traffic is exact.
+    let eb = cfg.elem_bytes() as u64;
+    let in_cap = cfg.input_buf_kib as u64 * 1024;
+    let out_cap = cfg.output_buf_kib as u64 * 1024;
+    for i in 0..steps.len().saturating_sub(1) {
+        let edge_bytes = cfg.batch as u64 * steps[i].layer.output_elems() as u64 * eb;
+        let producer_once =
+            steps[i].output_bytes == cfg.batch as u64 * steps[i].layer.output_elems() as u64 * eb;
+        let consumer_once = steps[i + 1].input_bytes
+            == cfg.batch as u64 * steps[i + 1].layer.input_elems() as u64 * eb;
+        if edge_bytes <= in_cap && edge_bytes <= out_cap && producer_once && consumer_once {
+            steps[i].output_dst = EdgePlace::OnChip;
+            steps[i].output_bytes = 0;
+            steps[i + 1].input_src = EdgePlace::OnChip;
+            steps[i + 1].input_bytes = 0;
+        }
+    }
+
+    Ok(NetworkPlan {
+        network: g.name.clone(),
+        cfg: cfg.clone(),
+        steps,
+    })
+}
+
+impl NetworkPlan {
+    /// Total DDR traffic after inter-layer reuse.
+    pub fn total_dram_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.dram_bytes()).sum()
+    }
+
+    /// What the isolated-layer model would have moved.
+    pub fn isolated_dram_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.isolated_dram_bytes).sum()
+    }
+
+    /// DDR bytes saved by the reuse pass.
+    pub fn bytes_saved(&self) -> u64 {
+        self.isolated_dram_bytes() - self.total_dram_bytes()
+    }
+
+    /// Number of layer boundaries kept on-chip.
+    pub fn reused_edges(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| s.output_dst == EdgePlace::OnChip)
+            .count()
+    }
+
+    /// Dense-equivalent MACs per batch item, all steps.
+    pub fn dense_macs(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| crate::accel::metrics::dense_equivalent_macs(&s.layer))
+            .sum()
+    }
+
+    /// Human-readable plan dump (the `udcnn compile` output).
+    pub fn render(&self) -> String {
+        let c = &self.cfg;
+        let mut out = format!(
+            "=== network plan: {} (batch {}, mesh Tm={} Tn={} Tz={} Tr={} Tc={}, {} PEs @ {} MHz) ===\n",
+            self.network, c.batch, c.tm, c.tn, c.tz, c.tr, c.tc, c.total_pes(), c.freq_mhz
+        );
+        for (i, s) in self.steps.iter().enumerate() {
+            let fused = if s.fused.is_empty() {
+                String::new()
+            } else {
+                let names: Vec<String> = s.fused.iter().map(|a| a.to_string()).collect();
+                format!(" + fused {}", names.join("+"))
+            };
+            out.push_str(&format!("step {i}: {}{fused}\n", s.layer));
+            out.push_str(&format!(
+                "  schedule: oc {} x ic {} x d {} x tiles {}x{} -> {} passes, {} compute cycles\n",
+                s.schedule.oc_blocks,
+                s.schedule.ic_blocks,
+                s.schedule.d_blocks,
+                s.schedule.h_tiles,
+                s.schedule.w_tiles,
+                s.schedule.total_passes(),
+                s.schedule.compute_cycles(c),
+            ));
+            out.push_str(&format!(
+                "  input: {} ({:.1} KiB) | weights: DDR ({:.1} KiB) | output: {} ({:.1} KiB)\n",
+                s.input_src,
+                s.input_bytes as f64 / 1024.0,
+                s.weight_bytes as f64 / 1024.0,
+                s.output_dst,
+                s.output_bytes as f64 / 1024.0,
+            ));
+        }
+        out.push_str(&format!(
+            "summary: {} steps | {} boundary(ies) kept on-chip | DDR {:.2} MiB (isolated {:.2} MiB, saved {:.2} MiB)\n",
+            self.steps.len(),
+            self.reused_edges(),
+            self.total_dram_bytes() as f64 / (1024.0 * 1024.0),
+            self.isolated_dram_bytes() as f64 / (1024.0 * 1024.0),
+            self.bytes_saved() as f64 / (1024.0 * 1024.0),
+        ));
+        out
+    }
+
+    /// Machine-readable export (per-step schedules + traffic).
+    pub fn to_json(&self) -> String {
+        let steps: Vec<String> = self
+            .steps
+            .iter()
+            .map(|s| {
+                JsonObj::new()
+                    .str("name", &s.name)
+                    .int("oc_blocks", s.schedule.oc_blocks as u64)
+                    .int("ic_blocks", s.schedule.ic_blocks as u64)
+                    .int("d_blocks", s.schedule.d_blocks as u64)
+                    .int("h_tiles", s.schedule.h_tiles as u64)
+                    .int("w_tiles", s.schedule.w_tiles as u64)
+                    .int("compute_cycles", s.schedule.compute_cycles(&self.cfg))
+                    .str("input_src", &s.input_src.to_string())
+                    .str("output_dst", &s.output_dst.to_string())
+                    .int("weight_bytes", s.weight_bytes)
+                    .int("input_bytes", s.input_bytes)
+                    .int("output_bytes", s.output_bytes)
+                    .int("isolated_dram_bytes", s.isolated_dram_bytes)
+                    .render()
+            })
+            .collect();
+        JsonObj::new()
+            .str("network", &self.network)
+            .int("batch", self.cfg.batch as u64)
+            .int("total_pes", self.cfg.total_pes() as u64)
+            .int("reused_edges", self.reused_edges() as u64)
+            .int("dram_bytes", self.total_dram_bytes())
+            .int("isolated_dram_bytes", self.isolated_dram_bytes())
+            .raw("steps", &crate::report::json::array(&steps))
+            .render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+    use crate::graph::passes::lower;
+
+    fn plan_for(net: &crate::dcnn::Network) -> NetworkPlan {
+        let cfg = AccelConfig::paper_for(net.dims);
+        let g = lower(&NetworkGraph::from_network(net)).unwrap();
+        compile(&cfg, &g).unwrap()
+    }
+
+    #[test]
+    fn dcgan_reuses_the_first_boundary() {
+        // batch 8 × 512×8×8 × 2 B = 512 KiB fits the 512 KiB input
+        // buffer exactly; later boundaries are 1 MiB and 2 MiB.
+        let p = plan_for(&zoo::dcgan());
+        assert_eq!(p.steps.len(), 4);
+        assert_eq!(p.steps[0].output_dst, EdgePlace::OnChip);
+        assert_eq!(p.steps[1].input_src, EdgePlace::OnChip);
+        assert_eq!(p.steps[1].output_dst, EdgePlace::Ddr);
+        assert_eq!(p.reused_edges(), 1);
+        assert!(p.total_dram_bytes() < p.isolated_dram_bytes());
+        // saved exactly the write + the read of the 512 KiB tensor
+        assert_eq!(p.bytes_saved(), 2 * 512 * 1024);
+    }
+
+    #[test]
+    fn traffic_never_exceeds_isolated() {
+        for net in zoo::all_benchmarks() {
+            let p = plan_for(&net);
+            assert!(
+                p.total_dram_bytes() <= p.isolated_dram_bytes(),
+                "{}",
+                net.name
+            );
+            if p.reused_edges() > 0 {
+                assert!(
+                    p.total_dram_bytes() < p.isolated_dram_bytes(),
+                    "{}: reuse fired but traffic did not drop",
+                    net.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_batch_reuses_more_boundaries() {
+        let net = zoo::gan3d();
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        let g = lower(&NetworkGraph::from_network(&net)).unwrap();
+        let p8 = compile(&cfg, &g).unwrap();
+        cfg.batch = 1;
+        let p1 = compile(&cfg, &g).unwrap();
+        assert!(
+            p1.reused_edges() > p8.reused_edges(),
+            "batch 1 ({}) should keep more boundaries on-chip than batch 8 ({})",
+            p1.reused_edges(),
+            p8.reused_edges()
+        );
+    }
+
+    #[test]
+    fn unlowered_graph_is_rejected() {
+        let net = zoo::tiny_2d();
+        let g = NetworkGraph::from_network_oom(&net);
+        let err = compile(&AccelConfig::paper_2d(), &g).unwrap_err();
+        assert!(err.contains("lower"), "{err}");
+    }
+
+    #[test]
+    fn render_and_json_mention_every_step() {
+        let p = plan_for(&zoo::gan3d());
+        let text = p.render();
+        assert!(text.contains("network plan: 3d-gan"));
+        for s in &p.steps {
+            assert!(text.contains(&s.layer.name), "{}", s.layer.name);
+        }
+        assert!(text.contains("summary:"));
+        let js = p.to_json();
+        assert!(js.contains("\"network\": \"3d-gan\""));
+        assert!(js.contains("\"steps\""));
+    }
+
+    #[test]
+    fn weights_always_stream_from_ddr() {
+        for net in zoo::all_benchmarks() {
+            let p = plan_for(&net);
+            for s in &p.steps {
+                assert_eq!(
+                    s.weight_bytes,
+                    s.layer.weight_elems() as u64 * 2,
+                    "{}: weights move exactly once",
+                    s.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Execute a [`NetworkPlan`]: end-to-end latency / TOPS / DDR traffic
+//! at network granularity (Fig. 6/7 numbers without the isolated-layer
+//! approximation).
+//!
+//! Per step the cycle model is the timing tier's (`max(compute,
+//! memory)` under double buffering), but the layer-boundary edges
+//! change:
+//!
+//! * interior boundaries lose their un-overlappable edge transfers —
+//!   the next layer's first weight/input blocks prefetch during the
+//!   current layer's steady state (cross-layer double buffering), and
+//!   the previous layer's last output slice drains into the next
+//!   layer's ramp-up;
+//! * boundaries the reuse pass kept on-chip move no DDR traffic at
+//!   all, shrinking the step's memory cycles;
+//! * only the network's first load and final store remain exposed.
+//!
+//! The per-step [`LayerMetrics`] sum exactly to the network total, so
+//! existing per-layer reporting keeps working on plan output.
+
+use crate::accel::memory::DdrModel;
+use crate::accel::metrics::{dense_equivalent_macs, BoundBy, LayerMetrics};
+
+use super::plan::{EdgePlace, NetworkPlan, StepPlan};
+
+/// End-to-end metrics for one compiled network plan.
+#[derive(Clone, Debug)]
+pub struct NetworkRunMetrics {
+    pub network: String,
+    /// Per-step metrics (traffic-adjusted); totals sum to the network.
+    pub steps: Vec<LayerMetrics>,
+    /// End-to-end cycles for the whole batch.
+    pub total_cycles: u64,
+    pub batch: usize,
+    pub freq_mhz: f64,
+    /// Total DDR traffic (batch totals, after reuse).
+    pub dram_bytes: u64,
+    /// Dense-equivalent MACs per batch item, all layers.
+    pub dense_macs: u64,
+    /// Useful MACs per batch item, all layers.
+    pub useful_macs: u64,
+    pub total_pes: usize,
+}
+
+impl NetworkRunMetrics {
+    /// Wall-clock seconds for the whole batch.
+    pub fn time_s(&self) -> f64 {
+        self.total_cycles as f64 / (self.freq_mhz * 1e6)
+    }
+
+    /// Seconds per single inference.
+    pub fn time_per_item_s(&self) -> f64 {
+        self.time_s() / self.batch as f64
+    }
+
+    /// Network-level dense-equivalent TOPS (the paper's convention).
+    pub fn effective_tops(&self) -> f64 {
+        2.0 * self.dense_macs as f64 * self.batch as f64 / self.time_s() / 1e12
+    }
+
+    /// Network-level useful TOPS (bounded by the configuration peak).
+    pub fn useful_tops(&self) -> f64 {
+        2.0 * self.useful_macs as f64 * self.batch as f64 / self.time_s() / 1e12
+    }
+
+    /// Time-weighted average PE utilization.
+    pub fn avg_pe_utilization(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        self.steps
+            .iter()
+            .map(|m| m.pe_utilization() * m.total_cycles as f64)
+            .sum::<f64>()
+            / self.total_cycles as f64
+    }
+
+    /// Sustained DDR bandwidth over the whole run.
+    pub fn dram_gbps(&self) -> f64 {
+        self.dram_bytes as f64 / self.time_s() / 1e9
+    }
+}
+
+/// First-load bytes of a step (one weight block + one input tile).
+fn lead_in_bytes(plan: &NetworkPlan, s: &StepPlan) -> u64 {
+    let eb = plan.cfg.elem_bytes() as u64;
+    let m = &s.schedule.mapping;
+    let w = (m.out_par * m.chan_par * s.layer.kernel_volume()) as u64 * eb;
+    let i = if s.input_src == EdgePlace::Ddr {
+        (m.chan_par * m.depth_par * plan.cfg.tr * plan.cfg.tc) as u64 * eb
+    } else {
+        0
+    };
+    w + i
+}
+
+/// Final-store bytes of a step (the last output slice).
+fn tail_bytes(plan: &NetworkPlan, s: &StepPlan) -> u64 {
+    if s.output_dst == EdgePlace::Ddr {
+        let eb = plan.cfg.elem_bytes() as u64;
+        (s.schedule.mapping.out_par * s.layer.out_spatial()) as u64 * eb
+    } else {
+        0
+    }
+}
+
+/// Simulate a compiled plan end to end.
+pub fn simulate_plan(plan: &NetworkPlan) -> NetworkRunMetrics {
+    let cfg = &plan.cfg;
+    let ddr = DdrModel::from_config(cfg);
+    let last = plan.steps.len() - 1;
+
+    let mut steps = Vec::with_capacity(plan.steps.len());
+    let mut total_cycles = 0u64;
+    for (i, s) in plan.steps.iter().enumerate() {
+        let compute_cycles = s.schedule.compute_cycles(cfg);
+        let memory_cycles = ddr.transfer_cycles(s.dram_bytes(), cfg.freq_mhz);
+        let mut cycles = compute_cycles.max(memory_cycles);
+        // Only the network edges stay exposed; interior boundaries
+        // overlap with the neighbouring layers (see module docs).
+        if i == 0 {
+            cycles += ddr.transfer_cycles(lead_in_bytes(plan, s), cfg.freq_mhz);
+        }
+        if i == last {
+            cycles += ddr.transfer_cycles(tail_bytes(plan, s), cfg.freq_mhz);
+        }
+        total_cycles += cycles;
+        steps.push(LayerMetrics {
+            layer_name: s.name.clone(),
+            compute_cycles,
+            memory_cycles,
+            total_cycles: cycles,
+            ideal_mac_cycles: s.schedule.ideal_mac_cycles(&s.layer),
+            total_pes: cfg.total_pes(),
+            batch: cfg.batch,
+            dense_macs: dense_equivalent_macs(&s.layer),
+            useful_macs: s.layer.op_counts().useful_macs,
+            dram_bytes: s.dram_bytes(),
+            bound_by: if memory_cycles > compute_cycles {
+                BoundBy::Memory
+            } else {
+                BoundBy::Compute
+            },
+            freq_mhz: cfg.freq_mhz,
+        });
+    }
+
+    NetworkRunMetrics {
+        network: plan.network.clone(),
+        total_cycles,
+        batch: cfg.batch,
+        freq_mhz: cfg.freq_mhz,
+        dram_bytes: plan.total_dram_bytes(),
+        dense_macs: plan.dense_macs(),
+        useful_macs: steps.iter().map(|m| m.useful_macs).sum(),
+        total_pes: cfg.total_pes(),
+        steps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{simulate_network, AccelConfig};
+    use crate::dcnn::zoo;
+    use crate::graph::ir::NetworkGraph;
+    use crate::graph::passes::lower;
+    use crate::graph::plan::compile;
+
+    fn run(net: &crate::dcnn::Network) -> NetworkRunMetrics {
+        let cfg = AccelConfig::paper_for(net.dims);
+        let g = lower(&NetworkGraph::from_network(net)).unwrap();
+        simulate_plan(&compile(&cfg, &g).unwrap())
+    }
+
+    #[test]
+    fn pipelined_never_slower_than_isolated_sum() {
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            let isolated = simulate_network(&cfg, &net);
+            let plan = run(&net);
+            assert!(
+                plan.total_cycles <= isolated.total_cycles(),
+                "{}: plan {} > isolated {}",
+                net.name,
+                plan.total_cycles,
+                isolated.total_cycles()
+            );
+        }
+    }
+
+    #[test]
+    fn e2e_tops_within_ten_percent_of_isolated() {
+        // The acceptance band: pipelining and reuse refine, not
+        // rewrite, the Fig. 6/7 numbers.
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            let isolated = simulate_network(&cfg, &net).effective_tops();
+            let plan = run(&net).effective_tops();
+            let rel = (plan - isolated).abs() / isolated;
+            assert!(
+                rel <= 0.10,
+                "{}: plan {plan:.3} vs isolated {isolated:.3} TOPS ({:.1}% apart)",
+                net.name,
+                100.0 * rel
+            );
+        }
+    }
+
+    #[test]
+    fn step_totals_sum_to_network_total() {
+        for net in zoo::all_benchmarks() {
+            let m = run(&net);
+            let sum: u64 = m.steps.iter().map(|s| s.total_cycles).sum();
+            assert_eq!(sum, m.total_cycles, "{}", net.name);
+            let traffic: u64 = m.steps.iter().map(|s| s.dram_bytes).sum();
+            assert_eq!(traffic, m.dram_bytes, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn useful_tops_bounded_by_peak() {
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            let m = run(&net);
+            assert!(
+                m.useful_tops() <= cfg.peak_tops() + 1e-9,
+                "{}: {:.3} > peak {:.3}",
+                net.name,
+                m.useful_tops(),
+                cfg.peak_tops()
+            );
+            let u = m.avg_pe_utilization();
+            assert!((0.0..=1.0 + 1e-9).contains(&u), "{}: util {u}", net.name);
+        }
+    }
+
+    #[test]
+    fn reuse_shrinks_traffic_and_never_time() {
+        let net = zoo::dcgan();
+        let cfg = AccelConfig::paper_for(net.dims);
+        let m = run(&net);
+        let isolated = simulate_network(&cfg, &net);
+        let isolated_traffic: u64 = isolated.layers.iter().map(|l| l.dram_bytes).sum();
+        assert!(m.dram_bytes < isolated_traffic, "reuse fired for dcgan");
+        assert!(m.time_s() <= isolated.total_time_s() + 1e-12);
+    }
+}

@@ -21,6 +21,11 @@
 //!   FIFOs, weight shift chain, adder trees, triple on-chip buffers,
 //!   DDR memory controller), the 3D-IOM dataflow of Fig. 4/5, the
 //!   blocking scheduler, and the design-space explorer behind Table II.
+//! * [`graph`] — the whole-network graph IR and compiler: ops over
+//!   explicit tensor edges, a pass pipeline (shape inference, OOM→IOM
+//!   lowering, activation fusion), and [`graph::NetworkPlan`]s with
+//!   inter-layer on-chip buffer reuse, executed end-to-end by
+//!   [`graph::simulate_plan`] / [`accel::simulate_network_pipelined`].
 //! * [`resource`] — the VC709 resource model behind Table III.
 //! * [`energy`] — the energy model behind Fig. 7(b).
 //! * [`baseline`] — CPU (measured, multithreaded) and GPU (analytic
@@ -57,6 +62,7 @@ pub mod tensor;
 pub mod dcnn;
 pub mod func;
 pub mod accel;
+pub mod graph;
 pub mod resource;
 pub mod energy;
 pub mod baseline;

@@ -19,7 +19,7 @@ use anyhow::{bail, Result};
 
 use udcnn::accel::{simulate_layer, simulate_network, AccelConfig};
 use udcnn::baseline::{CpuBaseline, GpuModel};
-use udcnn::cli::{network_by_name, parse_opts};
+use udcnn::cli::{first_positional, network_by_name, opt_parse, parse_opts};
 use udcnn::coordinator::{BatchPolicy, InferenceService};
 use udcnn::dcnn::{sparsity, zoo, Network};
 use udcnn::energy;
@@ -46,6 +46,7 @@ fn run(args: &[String]) -> Result<()> {
     let opts = parse_opts(&args[1..]);
     match cmd.as_str() {
         "simulate" => cmd_simulate(&opts),
+        "compile" => cmd_compile(&args[1..]),
         "plan" => cmd_plan(&opts),
         "sparsity" => cmd_sparsity(),
         "resources" => cmd_resources(),
@@ -66,9 +67,10 @@ fn print_usage() {
     println!(
         "udcnn — uniform 2D/3D DCNN accelerator (Wang et al. 2019 reproduction)\n\
          \n\
-         usage: udcnn <simulate|sparsity|resources|dse|compare|zoo|verify|serve> [options]\n\
+         usage: udcnn <simulate|compile|plan|sparsity|resources|dse|compare|zoo|verify|serve> [options]\n\
          \n\
          simulate   --net NAME | --all   [--batch N]   per-layer util + TOPS (Fig. 6)\n\
+         compile    NAME [--batch N] [--json] [--oom]  whole-network plan (graph compiler)\n\
          plan       --net NAME [--layer NAME]          explain the execution schedule\n\
          sparsity                                      inserted-map sparsity (Fig. 1)\n\
          resources                                     VC709 utilization (Table III)\n\
@@ -111,6 +113,54 @@ fn cmd_simulate(opts: &BTreeMap<String, String>) -> Result<()> {
         }
     }
     t.print();
+    Ok(())
+}
+
+fn cmd_compile(rest: &[String]) -> Result<()> {
+    use udcnn::graph::{self, NetworkGraph};
+    let opts = parse_opts(rest);
+    let name = first_positional(rest, &["batch", "net"])
+        .cloned()
+        .or_else(|| opts.get("net").cloned())
+        .ok_or_else(|| {
+            anyhow::anyhow!("usage: udcnn compile <network> [--batch N] [--json] [--oom]")
+        })?;
+    let net = network_by_name(&name)?;
+    let mut cfg = AccelConfig::paper_for(net.dims);
+    cfg.batch = opt_parse(&opts, "batch", cfg.batch)?;
+
+    // Front-end form: native IOM graph, or the OOM decomposition
+    // (`--oom`) that the lowering pass rewrites to the same plan.
+    let g = if opts.contains_key("oom") {
+        NetworkGraph::from_network_oom(&net)
+    } else {
+        NetworkGraph::from_network(&net)
+    };
+    let lowered = graph::passes::lower(&g).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let plan = graph::compile(&cfg, &lowered).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    if opts.contains_key("json") {
+        println!("{}", plan.to_json());
+        return Ok(());
+    }
+    print!("{}", plan.render());
+    let m = graph::simulate_plan(&plan);
+    let iso = simulate_network(&cfg, &net);
+    println!(
+        "e2e: {:.3} ms/batch-{} | {:.2} effective TOPS | {:.2} useful TOPS | util {:.1}% | {:.1} GB/s DDR",
+        m.time_s() * 1e3,
+        m.batch,
+        m.effective_tops(),
+        m.useful_tops(),
+        100.0 * m.avg_pe_utilization(),
+        m.dram_gbps(),
+    );
+    println!(
+        "vs isolated layers: {:.3} ms | {:.2} effective TOPS | DDR saved {:.2} MiB",
+        iso.total_time_s() * 1e3,
+        iso.effective_tops(),
+        plan.bytes_saved() as f64 / (1024.0 * 1024.0),
+    );
     Ok(())
 }
 

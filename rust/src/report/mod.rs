@@ -82,6 +82,77 @@ pub fn ratio(v: f64) -> String {
     format!("{v:.1}x")
 }
 
+/// Minimal JSON rendering for machine-readable exports (`udcnn
+/// compile --json`, `BENCH_e2e.json`). String-building only — the
+/// offline environment has no serde; values are escaped, objects and
+/// arrays compose through [`json::JsonObj::raw`] / [`json::array`].
+pub mod json {
+    /// Escape a string for a JSON string literal.
+    pub fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    /// Render a JSON array from already-rendered element strings.
+    pub fn array(items: &[String]) -> String {
+        format!("[{}]", items.join(", "))
+    }
+
+    /// A JSON object under construction (builder style).
+    #[derive(Clone, Debug, Default)]
+    pub struct JsonObj {
+        fields: Vec<String>,
+    }
+
+    impl JsonObj {
+        pub fn new() -> JsonObj {
+            JsonObj { fields: Vec::new() }
+        }
+
+        pub fn str(mut self, key: &str, value: &str) -> JsonObj {
+            self.fields
+                .push(format!("\"{}\": \"{}\"", escape(key), escape(value)));
+            self
+        }
+
+        pub fn int(mut self, key: &str, value: u64) -> JsonObj {
+            self.fields.push(format!("\"{}\": {value}", escape(key)));
+            self
+        }
+
+        pub fn num(mut self, key: &str, value: f64) -> JsonObj {
+            let v = if value.is_finite() {
+                format!("{value}")
+            } else {
+                "null".to_string()
+            };
+            self.fields.push(format!("\"{}\": {v}", escape(key)));
+            self
+        }
+
+        /// Insert an already-rendered JSON value (object/array).
+        pub fn raw(mut self, key: &str, value: &str) -> JsonObj {
+            self.fields.push(format!("\"{}\": {value}", escape(key)));
+            self
+        }
+
+        pub fn render(&self) -> String {
+            format!("{{{}}}", self.fields.join(", "))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +193,33 @@ mod tests {
     #[test]
     fn ratio_format() {
         assert_eq!(ratio(63.31), "63.3x");
+    }
+
+    #[test]
+    fn json_objects_render() {
+        let inner = json::JsonObj::new().int("cycles", 42).render();
+        let obj = json::JsonObj::new()
+            .str("name", "dcgan")
+            .num("tops", 2.5)
+            .raw("detail", &inner)
+            .raw("list", &json::array(&["1".into(), "2".into()]))
+            .render();
+        assert_eq!(
+            obj,
+            "{\"name\": \"dcgan\", \"tops\": 2.5, \"detail\": {\"cycles\": 42}, \"list\": [1, 2]}"
+        );
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json::escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        let obj = json::JsonObj::new().str("k", "v\"w").render();
+        assert_eq!(obj, "{\"k\": \"v\\\"w\"}");
+    }
+
+    #[test]
+    fn json_non_finite_is_null() {
+        let obj = json::JsonObj::new().num("x", f64::NAN).render();
+        assert_eq!(obj, "{\"x\": null}");
     }
 }

@@ -7,6 +7,13 @@
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids.
 
 pub mod artifacts;
+
+/// Real PJRT wrapper (needs the external `xla` crate, `pjrt` feature).
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+/// Offline stub with the same API (default build).
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use artifacts::{ArtifactSet, ARTIFACTS_DIR_ENV};

@@ -1,0 +1,59 @@
+//! Stub PJRT runtime, compiled when the `pjrt` cargo feature is off.
+//!
+//! The real [`super::pjrt`] implementation wraps the external `xla`
+//! crate, which the offline build environment does not ship. This stub
+//! keeps the exact same API surface so every caller compiles; any
+//! attempt to actually create a client reports a clear error instead.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+const UNAVAILABLE: &str =
+    "PJRT support not built: rebuild with `--features pjrt` (requires the external `xla` crate)";
+
+/// Stub stand-in for the PJRT CPU client.
+pub struct Runtime {
+    _private: (),
+}
+
+/// Stub stand-in for a compiled executable.
+pub struct Executable {
+    pub name: String,
+}
+
+impl Runtime {
+    /// Always fails: the `xla` crate is not available in this build.
+    pub fn cpu() -> Result<Runtime> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn load_hlo_text(&self, _path: impl AsRef<Path>) -> Result<Executable> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+impl Executable {
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_clean_error() {
+        let err = Runtime::cpu().err().expect("stub cannot construct");
+        assert!(err.to_string().contains("pjrt"), "{err:#}");
+    }
+}

@@ -4,7 +4,10 @@
 //! three layers compose.
 //!
 //! Tests skip (with a loud message) if `artifacts/` has not been
-//! built; `make test` always builds it first.
+//! built; `make test` always builds it first. The whole suite is
+//! compiled out unless the `pjrt` feature is enabled (the offline
+//! default build substitutes a stub runtime that cannot execute).
+#![cfg(feature = "pjrt")]
 
 use udcnn::coordinator::service::forward;
 use udcnn::dcnn::{zoo, LayerData, Network};

@@ -1,0 +1,225 @@
+//! Property tests for the graph subsystem and the IOM/OOM golden
+//! models (via the in-tree `propcheck` framework).
+//!
+//! The golden-model properties compose the OOM formulation *explicitly*
+//! from its primitives — `func::zero_insert` (insert + pad) and
+//! `func::conv` (flip + VALID correlate) — rather than calling
+//! `deconv2d_oom`, so a regression in any primitive is caught here
+//! even if the packaged OOM path compensates for it. The graph
+//! properties pin the compiler: lowering preserves semantics-relevant
+//! structure, plans never move more DDR traffic than isolated layers,
+//! and pipelined end-to-end TOPS stays within the ±10% acceptance band
+//! of the summed per-layer simulation.
+
+use udcnn::accel::{simulate_network, simulate_network_pipelined, AccelConfig};
+use udcnn::dcnn::{zoo, Dims, LayerSpec};
+use udcnn::func::conv::{corr2d, corr3d, flip_2d, flip_3d};
+use udcnn::func::zero_insert::{insert_2d, insert_3d, pad_2d, pad_3d};
+use udcnn::func::{deconv2d_iom, deconv3d_iom};
+use udcnn::graph::{compile, passes, NetworkGraph, NetworkPlan};
+use udcnn::propcheck::{check, Config, Gen};
+use udcnn::tensor::{FeatureMap, Volume, WeightsOIDHW, WeightsOIHW};
+
+/// IOM == zero-insert ∘ pad(K−1) ∘ correlate(flipped) on randomized 2D
+/// shapes, strides and kernels (K down to 1, so the border padding
+/// ranges over 0..=3).
+#[test]
+fn prop_iom_equals_explicit_oom_2d() {
+    check(Config { cases: 60, ..Default::default() }, |g| {
+        let (c_in, c_out) = (g.int(1, 4), g.int(1, 4));
+        let (h, w) = (g.int(1, 6), g.int(1, 6));
+        let k = *g.choose(&[1usize, 2, 3, 4]);
+        let s = *g.choose(&[1usize, 2, 3]);
+        let mut input = FeatureMap::zeros(c_in, h, w);
+        for v in input.data_mut() {
+            *v = g.f32(-2.0, 2.0);
+        }
+        let mut wt = WeightsOIHW::zeros(c_out, c_in, k, k);
+        for v in wt.data_mut() {
+            *v = g.f32(-1.0, 1.0);
+        }
+        let iom = deconv2d_iom(&input, &wt, s);
+        let oom = corr2d(&pad_2d(&insert_2d(&input, s), k - 1), &flip_2d(&wt));
+        if (iom.c, iom.h, iom.w) != (oom.c, oom.h, oom.w) {
+            return Err(format!(
+                "extent mismatch: IOM {}x{}x{} vs OOM {}x{}x{} (k={k},s={s})",
+                iom.c, iom.h, iom.w, oom.c, oom.h, oom.w
+            ));
+        }
+        for (x, y) in iom.data().iter().zip(oom.data()) {
+            if (x - y).abs() > 1e-3 {
+                return Err(format!("IOM {x} != OOM {y} (k={k},s={s},h={h},w={w})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The same equivalence in 3D (where the inserted "M1 planes" of
+/// Fig. 3(b) make the OOM waste largest).
+#[test]
+fn prop_iom_equals_explicit_oom_3d() {
+    check(Config { cases: 30, ..Default::default() }, |g| {
+        let (c_in, c_out) = (g.int(1, 3), g.int(1, 3));
+        let (d, h, w) = (g.int(1, 3), g.int(1, 4), g.int(1, 4));
+        let k = *g.choose(&[1usize, 2, 3]);
+        let s = *g.choose(&[1usize, 2]);
+        let mut input = Volume::zeros(c_in, d, h, w);
+        for v in input.data_mut() {
+            *v = g.f32(-2.0, 2.0);
+        }
+        let mut wt = WeightsOIDHW::zeros(c_out, c_in, k, k, k);
+        for v in wt.data_mut() {
+            *v = g.f32(-1.0, 1.0);
+        }
+        let iom = deconv3d_iom(&input, &wt, s);
+        let oom = corr3d(&pad_3d(&insert_3d(&input, s), k - 1), &flip_3d(&wt));
+        if (iom.c, iom.d, iom.h, iom.w) != (oom.c, oom.d, oom.h, oom.w) {
+            return Err(format!("extent mismatch (k={k},s={s})"));
+        }
+        for (x, y) in iom.data().iter().zip(oom.data()) {
+            if (x - y).abs() > 1e-3 {
+                return Err(format!("IOM {x} != OOM {y} (k={k},s={s},d={d})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Generate a random composable layer chain (each layer consumes the
+/// previous layer's output).
+fn gen_chain(g: &mut Gen, dims: Dims) -> Vec<LayerSpec> {
+    let n_layers = g.int(1, 4);
+    let mut layers = Vec::new();
+    let mut c = g.int(1, 8);
+    let (mut d, mut h, mut w) = match dims {
+        Dims::D2 => (1, g.int(1, 5), g.int(1, 5)),
+        Dims::D3 => (g.int(1, 3), g.int(1, 3), g.int(1, 3)),
+    };
+    for i in 0..n_layers {
+        let s = *g.choose(&[1usize, 2]);
+        let k = s + g.int(0, 2); // K >= S (crop constraint)
+        let out_c = g.int(1, 8);
+        let spec = match dims {
+            Dims::D2 => LayerSpec::new_2d(format!("chain.l{i}"), c, h, w, out_c, k, s),
+            Dims::D3 => LayerSpec::new_3d(format!("chain.l{i}"), c, d, h, w, out_c, k, s),
+        };
+        c = out_c;
+        d = spec.out_d();
+        h = spec.out_h();
+        w = spec.out_w();
+        layers.push(spec);
+    }
+    layers
+}
+
+fn compile_chain(g: &mut Gen, dims: Dims) -> Result<(NetworkPlan, Vec<LayerSpec>), String> {
+    let layers = gen_chain(g, dims);
+    let mut cfg = match dims {
+        Dims::D2 => AccelConfig::paper_2d(),
+        Dims::D3 => AccelConfig::paper_3d(),
+    };
+    cfg.batch = g.int(1, 8);
+    let graph = NetworkGraph::from_layers("chain", dims, &layers, None);
+    let lowered = passes::lower(&graph)?;
+    let plan = compile(&cfg, &lowered)?;
+    Ok((plan, layers))
+}
+
+/// Compiled plans on random chains: one step per layer, traffic never
+/// above the isolated-layer residency total, and strictly below it
+/// whenever the reuse pass kept a boundary on-chip.
+#[test]
+fn prop_plan_traffic_bounded_by_isolated() {
+    check(Config { cases: 60, ..Default::default() }, |g| {
+        let dims = if g.rng.coin(0.5) { Dims::D2 } else { Dims::D3 };
+        let (plan, layers) = compile_chain(g, dims)?;
+        if plan.steps.len() != layers.len() {
+            return Err(format!(
+                "{} steps for {} layers",
+                plan.steps.len(),
+                layers.len()
+            ));
+        }
+        if plan.total_dram_bytes() > plan.isolated_dram_bytes() {
+            return Err("plan traffic above isolated".into());
+        }
+        if plan.reused_edges() > 0 && plan.total_dram_bytes() >= plan.isolated_dram_bytes() {
+            return Err("reuse fired but traffic did not shrink".into());
+        }
+        Ok(())
+    });
+}
+
+/// The OOM front-end form lowers to the identical plan the IOM form
+/// compiles to (same schedules, same traffic) on random chains.
+#[test]
+fn prop_oom_and_iom_forms_compile_identically() {
+    check(Config { cases: 40, ..Default::default() }, |g| {
+        let dims = if g.rng.coin(0.5) { Dims::D2 } else { Dims::D3 };
+        let layers = gen_chain(g, dims);
+        let cfg = match dims {
+            Dims::D2 => AccelConfig::paper_2d(),
+            Dims::D3 => AccelConfig::paper_3d(),
+        };
+        let net = udcnn::dcnn::Network {
+            name: "chain",
+            dims,
+            layers: layers.clone(),
+        };
+        let iom = compile(&cfg, &passes::lower(&NetworkGraph::from_network(&net))?)?;
+        let oom = compile(&cfg, &passes::lower(&NetworkGraph::from_network_oom(&net))?)?;
+        if iom.steps.len() != oom.steps.len() {
+            return Err("step count differs".into());
+        }
+        for (a, b) in iom.steps.iter().zip(&oom.steps) {
+            if a.schedule != b.schedule {
+                return Err(format!("schedule differs at {}", a.name));
+            }
+            if a.dram_bytes() != b.dram_bytes() {
+                return Err(format!("traffic differs at {}", a.name));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Acceptance: pipelined end-to-end TOPS for the four zoo networks is
+/// within ±10% of the summed per-layer simulation, and DDR traffic is
+/// strictly lower whenever inter-layer reuse fires.
+#[test]
+fn zoo_networks_acceptance_band() {
+    let mut any_reuse = false;
+    for net in zoo::all_benchmarks() {
+        let cfg = AccelConfig::paper_for(net.dims);
+        let plan = udcnn::graph::compile_network(&cfg, &net).unwrap();
+        let m = simulate_network_pipelined(&cfg, &net).unwrap();
+        let iso = simulate_network(&cfg, &net);
+        let rel = (m.effective_tops() - iso.effective_tops()).abs() / iso.effective_tops();
+        assert!(
+            rel <= 0.10,
+            "{}: e2e {:.3} vs isolated {:.3} TOPS ({:.1}% apart)",
+            net.name,
+            m.effective_tops(),
+            iso.effective_tops(),
+            100.0 * rel
+        );
+        let iso_traffic: u64 = iso.layers.iter().map(|l| l.dram_bytes).sum();
+        if plan.reused_edges() > 0 {
+            any_reuse = true;
+            assert!(
+                m.dram_bytes < iso_traffic,
+                "{}: reuse fired but e2e traffic {} !< isolated {}",
+                net.name,
+                m.dram_bytes,
+                iso_traffic
+            );
+        } else {
+            assert_eq!(m.dram_bytes, iso_traffic, "{}", net.name);
+        }
+    }
+    assert!(
+        any_reuse,
+        "at least one zoo network reuses a layer boundary at batch 8"
+    );
+}

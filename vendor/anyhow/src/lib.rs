@@ -1,0 +1,168 @@
+//! Minimal, offline, API-compatible shim for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so the subset of
+//! `anyhow` this repo actually uses is vendored here: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] macros, the [`Context`]
+//! extension trait, and a blanket `From<E: std::error::Error>` so `?`
+//! works on std error types. Like the real crate, [`Error`]
+//! deliberately does **not** implement `std::error::Error` (that is
+//! what makes the blanket `From` impl coherent).
+//!
+//! Display follows anyhow's convention: `{}` prints the outermost
+//! message, `{:#}` prints the whole cause chain joined with `": "`.
+
+use std::fmt;
+
+/// A dynamic error: an outermost message plus its cause chain,
+/// captured as strings at construction time.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let mut chain = vec![context.to_string()];
+        chain.extend(self.chain);
+        Error { chain }
+    }
+
+    /// The cause-chain messages, outermost first.
+    pub fn chain_messages(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+/// `Debug` renders the full chain (what `unwrap()` panics print).
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to a `Result`'s error, like `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with `context`.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let e: Result<()> = Err(io_err()).context("opening config");
+        let e = e.unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("opening config: "), "{full}");
+        assert!(full.contains("missing"));
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed (got {x})");
+            }
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        let e = f(0).unwrap_err();
+        assert!(e.to_string().contains("zero not allowed"));
+        let e2 = anyhow!("custom {}", 42);
+        assert_eq!(e2.to_string(), "custom 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+    }
+}
