@@ -1,0 +1,120 @@
+//! Fleet-serving bench: replay one deterministic open-loop workload
+//! (2D + 3D traffic) against fleets of 1/2/4/8 simulated accelerator
+//! instances and track throughput scaling, tail latency, shed rate and
+//! plan-cache effectiveness.
+//!
+//! Alongside the text report it emits `reports/BENCH_serving.json`
+//! (machine-readable per-fleet-size rows) so the serving-perf
+//! trajectory is tracked across PRs, like `BENCH_e2e.json` does for
+//! single-network latency.
+
+use udcnn::benchkit::{header, write_report_file, Bench};
+use udcnn::coordinator::BatchPolicy;
+use udcnn::dcnn::zoo;
+use udcnn::report::json::{array, JsonObj};
+use udcnn::report::Table;
+use udcnn::serve::{poisson_arrivals, Fleet, FleetOptions};
+
+const REPORT_PATH: &str = "reports/BENCH_serving.json";
+const SEED: u64 = 0xF1EE7;
+const REQUESTS: usize = 2048;
+
+fn main() {
+    header(
+        "serving",
+        "fleet serving: shard scheduling + plan cache over simulated VC709 instances",
+    );
+
+    let bench = Bench::from_env();
+    let nets = vec![zoo::dcgan(), zoo::gan3d()];
+    let models: Vec<&str> = nets.iter().map(|n| n.name).collect();
+    let policy = BatchPolicy::default();
+
+    // saturate the largest fleet: offered load = 2.5x the aggregate
+    // full-batch capacity of 8 instances
+    let mut probe = Fleet::new(
+        nets.clone(),
+        FleetOptions {
+            instances: 1,
+            policy,
+            ..FleetOptions::default()
+        },
+    )
+    .expect("zoo networks compile");
+    let mut per_req_s = 0.0;
+    for m in &models {
+        per_req_s += probe.batch_latency_s(m, policy.max_batch).unwrap() / policy.max_batch as f64;
+    }
+    let single_capacity = models.len() as f64 / per_req_s;
+    let rps = 2.5 * 8.0 * single_capacity;
+    let workload = poisson_arrivals(SEED, rps, REQUESTS, &models);
+
+    let mut t = Table::new(
+        "fleet scaling under one saturating workload (dcgan + 3d-gan)",
+        &[
+            "instances", "served", "shed", "req/s", "speedup", "p50 ms", "p95 ms", "p99 ms",
+            "cache h/m", "harness",
+        ],
+    );
+    let mut rows = Vec::new();
+    let mut base_rps = 0.0f64;
+    for &n in &[1usize, 2, 4, 8] {
+        let opts = FleetOptions {
+            instances: n,
+            policy,
+            latency_budget_s: 0.25,
+            ..FleetOptions::default()
+        };
+        let report = Fleet::new(nets.clone(), opts.clone())
+            .expect("fleet comes up")
+            .run(&workload)
+            .expect("workload replays");
+        if n == 1 {
+            base_rps = report.throughput_rps;
+        }
+        let speedup = report.throughput_rps / base_rps;
+
+        // wall-clock cost of the harness itself (fleet bring-up +
+        // event loop), the part that runs per capacity-planning query
+        let harness_cost = bench.run(&format!("fleet x{n}"), || {
+            let r = Fleet::new(nets.clone(), opts.clone())
+                .unwrap()
+                .run(&workload)
+                .unwrap();
+            std::hint::black_box(r.served);
+        });
+
+        t.row(&[
+            n.to_string(),
+            report.served.to_string(),
+            report.shed.to_string(),
+            format!("{:.1}", report.throughput_rps),
+            format!("{:.2}x", speedup),
+            format!("{:.3}", report.latency.p50_ms),
+            format!("{:.3}", report.latency.p95_ms),
+            format!("{:.3}", report.latency.p99_ms),
+            format!("{}/{}", report.cache.hits, report.cache.misses),
+            udcnn::benchkit::fmt_duration(harness_cost.median_s()),
+        ]);
+        rows.push(
+            JsonObj::new()
+                .int("instances", n as u64)
+                .num("speedup_vs_single", speedup)
+                .num("harness_median_s", harness_cost.median_s())
+                .raw("report", &report.to_json())
+                .render(),
+        );
+    }
+    t.print();
+
+    let doc = JsonObj::new()
+        .str("bench", "serving")
+        .str("workload", &format!("poisson seed={SEED} rps={rps:.1} n={REQUESTS}"))
+        .num("offered_rps", rps)
+        .raw("fleets", &array(&rows))
+        .render();
+    match write_report_file(REPORT_PATH, &doc) {
+        Ok(()) => println!("wrote {REPORT_PATH}"),
+        Err(e) => eprintln!("could not write {REPORT_PATH}: {e}"),
+    }
+}

@@ -23,14 +23,19 @@ pub enum OperandPlace {
 /// The residency plan for one layer: drives DDR traffic accounting.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Residency {
+    /// Where the weight blocks live.
     pub weights: OperandPlace,
+    /// Where the input blocks live.
     pub inputs: OperandPlace,
+    /// Where the output blocks live.
     pub outputs: OperandPlace,
     /// Total DDR traffic in bytes for the whole layer (batch included).
     pub dram_bytes: u64,
     /// Breakdown for the report.
     pub weight_bytes: u64,
+    /// Input bytes moved over DDR.
     pub input_bytes: u64,
+    /// Output bytes moved over DDR.
     pub output_bytes: u64,
 }
 

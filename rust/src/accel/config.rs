@@ -29,7 +29,9 @@ pub struct AccelConfig {
     pub ddr_gbps: f64,
     /// On-chip buffer capacities in KiB (input / weight / output).
     pub input_buf_kib: usize,
+    /// Weight-buffer capacity in KiB.
     pub weight_buf_kib: usize,
+    /// Output-buffer capacity in KiB.
     pub output_buf_kib: usize,
     /// Batch size the accelerator pipelines (weights are re-used across
     /// the batch; the paper's >90 % PE utilization on weight-heavy
@@ -139,6 +141,31 @@ impl AccelConfig {
     /// Cycle time in seconds.
     pub fn cycle_s(&self) -> f64 {
         1.0 / (self.freq_mhz * 1e6)
+    }
+
+    /// Stable identity string of this configuration.
+    ///
+    /// Every field that can change a compiled [`crate::graph::NetworkPlan`]
+    /// participates, so `(network, fingerprint)` is a sound plan-cache
+    /// key (see [`crate::serve::PlanCache`]): two configs with equal
+    /// fingerprints compile byte-identical plans.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "tm{}.tn{}.tz{}.tr{}.tc{}.f{}.dw{}.bw{}.ib{}.wb{}.ob{}.b{}.st{}",
+            self.tm,
+            self.tn,
+            self.tz,
+            self.tr,
+            self.tc,
+            self.freq_mhz,
+            self.data_width_bits,
+            self.ddr_gbps,
+            self.input_buf_kib,
+            self.weight_buf_kib,
+            self.output_buf_kib,
+            self.batch,
+            u8::from(self.depth_overlap_stall),
+        )
     }
 
     /// Validate structural invariants.

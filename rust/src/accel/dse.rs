@@ -14,6 +14,7 @@ use super::timing;
 /// One evaluated design point.
 #[derive(Clone, Debug)]
 pub struct DsePoint {
+    /// The configuration evaluated.
     pub cfg: AccelConfig,
     /// Total cycles across all layers of all supplied networks.
     pub total_cycles: u64,

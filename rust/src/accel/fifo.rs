@@ -11,8 +11,11 @@ use std::collections::VecDeque;
 /// depth). `Depth` is disabled in 2D mode (§IV-C).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OverlapDir {
+    /// Along a column's rows (FIFO-V).
     Vertical,
+    /// Along a row (FIFO-H).
     Horizontal,
+    /// Across depth planes (FIFO-D).
     Depth,
 }
 
@@ -34,6 +37,7 @@ pub struct Fifo<T> {
 pub struct FifoFull;
 
 impl<T> Fifo<T> {
+    /// An empty FIFO with the given capacity (must be positive).
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "zero-capacity FIFO");
         Fifo {
@@ -44,6 +48,7 @@ impl<T> Fifo<T> {
         }
     }
 
+    /// Enqueue, failing with [`FifoFull`] at capacity.
     pub fn push(&mut self, v: T) -> Result<(), FifoFull> {
         if self.q.len() >= self.capacity {
             return Err(FifoFull);
@@ -56,26 +61,32 @@ impl<T> Fifo<T> {
         Ok(())
     }
 
+    /// Dequeue the oldest element, if any.
     pub fn pop(&mut self) -> Option<T> {
         self.q.pop_front()
     }
 
+    /// The oldest element without dequeuing.
     pub fn peek(&self) -> Option<&T> {
         self.q.front()
     }
 
+    /// Current occupancy.
     pub fn len(&self) -> usize {
         self.q.len()
     }
 
+    /// Whether the FIFO is empty.
     pub fn is_empty(&self) -> bool {
         self.q.is_empty()
     }
 
+    /// Whether the FIFO is at capacity.
     pub fn is_full(&self) -> bool {
         self.q.len() >= self.capacity
     }
 
+    /// Configured capacity.
     pub fn capacity(&self) -> usize {
         self.capacity
     }

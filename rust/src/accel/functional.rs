@@ -9,13 +9,17 @@ use super::mesh::{FunctionalStats, Mesh};
 
 /// Result of a functional layer run: cropped output + event stats.
 pub struct FunctionalRun2d {
+    /// Cropped (`I·S`) output map.
     pub output: FeatureMap<Q88>,
+    /// Event statistics of the run.
     pub stats: FunctionalStats,
 }
 
 /// Result of a functional 3D layer run.
 pub struct FunctionalRun3d {
+    /// Cropped (`I·S`) output volume.
     pub output: Volume<Q88>,
+    /// Event statistics of the run.
     pub stats: FunctionalStats,
 }
 

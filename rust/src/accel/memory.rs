@@ -11,7 +11,9 @@ use super::config::AccelConfig;
 /// A DDR transfer request (direction only matters for stats).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dir {
+    /// DDR → chip.
     Read,
+    /// Chip → DDR.
     Write,
 }
 
@@ -27,6 +29,7 @@ pub struct DdrModel {
 }
 
 impl DdrModel {
+    /// Model the VC709 DDR3 system of a configuration.
     pub fn from_config(cfg: &AccelConfig) -> DdrModel {
         DdrModel {
             bytes_per_s: cfg.ddr_gbps * 1e9,
@@ -53,12 +56,16 @@ impl DdrModel {
 /// Aggregate DDR traffic statistics collected by a simulation.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct DdrStats {
+    /// Bytes read from DDR.
     pub read_bytes: u64,
+    /// Bytes written to DDR.
     pub write_bytes: u64,
+    /// Number of recorded transfers.
     pub transactions: u64,
 }
 
 impl DdrStats {
+    /// Record one transfer.
     pub fn record(&mut self, dir: Dir, bytes: u64) {
         match dir {
             Dir::Read => self.read_bytes += bytes,
@@ -67,6 +74,7 @@ impl DdrStats {
         self.transactions += 1;
     }
 
+    /// Total traffic in both directions.
     pub fn total_bytes(&self) -> u64 {
         self.read_bytes + self.write_bytes
     }

@@ -23,14 +23,20 @@ pub struct FunctionalStats {
     /// Compute cycles, incremented with the same granularity the
     /// timing tier charges (asserted equal in the cross-check test).
     pub compute_cycles: u64,
+    /// Useful MACs performed.
     pub macs: u64,
+    /// Products routed through FIFO-V.
     pub fifo_v_pushes: u64,
+    /// Products routed through FIFO-H.
     pub fifo_h_pushes: u64,
+    /// Products routed through FIFO-D.
     pub fifo_d_pushes: u64,
     /// Products accumulated directly in the output buffer because the
     /// owner activation was not resident in the pass.
     pub spills: u64,
+    /// High-water mark of occupancy across all FIFOs.
     pub max_fifo_occupancy: usize,
+    /// Passes executed.
     pub passes: u64,
 }
 
@@ -40,10 +46,12 @@ pub struct Mesh {
     sched: Schedule,
     /// Arrays indexed `[m][n][z]` (flattened).
     arrays: Vec<PeArray>,
+    /// Event statistics of the run.
     pub stats: FunctionalStats,
 }
 
 impl Mesh {
+    /// Build the mesh for one layer (requires `cfg.batch == 1`).
     pub fn new(cfg: &AccelConfig, layer: &LayerSpec) -> Mesh {
         assert_eq!(
             cfg.batch, 1,

@@ -7,7 +7,9 @@ use super::config::AccelConfig;
 /// What limits a layer's runtime.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BoundBy {
+    /// The compute pipeline is the bottleneck.
     Compute,
+    /// DDR traffic is the bottleneck.
     Memory,
 }
 
@@ -23,6 +25,7 @@ impl std::fmt::Display for BoundBy {
 /// Per-layer simulation result.
 #[derive(Clone, Debug)]
 pub struct LayerMetrics {
+    /// Layer the metrics describe.
     pub layer_name: String,
     /// Cycles the compute pipeline needs.
     pub compute_cycles: u64,
@@ -43,6 +46,7 @@ pub struct LayerMetrics {
     pub useful_macs: u64,
     /// DDR traffic (batch total).
     pub dram_bytes: u64,
+    /// Which resource bounds the layer.
     pub bound_by: BoundBy,
     /// Clock for time conversion.
     pub freq_mhz: f64,
@@ -92,11 +96,14 @@ impl LayerMetrics {
 /// Whole-network rollup.
 #[derive(Clone, Debug)]
 pub struct NetworkMetrics {
+    /// Network name.
     pub network: String,
+    /// Per-layer metrics in execution order.
     pub layers: Vec<LayerMetrics>,
 }
 
 impl NetworkMetrics {
+    /// Wrap per-layer metrics into a network rollup.
     pub fn new(network: &str, layers: Vec<LayerMetrics>) -> NetworkMetrics {
         NetworkMetrics {
             network: network.to_string(),
@@ -109,6 +116,7 @@ impl NetworkMetrics {
         self.layers.iter().map(|l| l.time_s()).sum()
     }
 
+    /// Total cycles across all layers.
     pub fn total_cycles(&self) -> u64 {
         self.layers.iter().map(|l| l.total_cycles).sum()
     }

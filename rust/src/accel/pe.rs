@@ -19,7 +19,9 @@ use super::fifo::{Fifo, OverlapDir};
 pub struct OverlapMsg {
     /// Global output coordinates (z, y, x) over the full Eq. (1) extent.
     pub oz: usize,
+    /// Global output row.
     pub oy: usize,
+    /// Global output column.
     pub ox: usize,
     /// The Q16.16 product.
     pub wide: i32,
@@ -37,7 +39,9 @@ pub struct Pe {
     pub local: Vec<Acc48>,
     /// Incoming overlap FIFOs.
     pub fifo_v: Fifo<OverlapMsg>,
+    /// Incoming horizontal overlap FIFO.
     pub fifo_h: Fifo<OverlapMsg>,
+    /// Incoming depth overlap FIFO.
     pub fifo_d: Fifo<OverlapMsg>,
     /// Lifetime MAC counter.
     pub macs: u64,

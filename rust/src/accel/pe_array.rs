@@ -12,19 +12,26 @@ use super::pe::{OverlapMsg, Pe};
 pub struct PassCtx {
     /// Tile origin in input coordinates.
     pub d: usize, // this array's input depth plane
+    /// Tile origin row.
     pub h0: usize,
+    /// Tile origin column.
     pub w0: usize,
     /// Input extents.
     pub in_d: usize,
+    /// Input height.
     pub in_h: usize,
+    /// Input width.
     pub in_w: usize,
     /// Kernel extents: `kd` is 1 for 2D layers, `k` otherwise.
     pub k: usize,
+    /// Kernel depth extent (1 for 2D).
     pub kd: usize,
+    /// Stride.
     pub s: usize,
     /// Depth-plane range resident in this pass (for FIFO-D routing):
     /// planes `[d_lo, d_hi)` are on adjacent arrays.
     pub d_lo: usize,
+    /// Exclusive end of the resident depth-plane range.
     pub d_hi: usize,
 }
 
@@ -57,15 +64,20 @@ pub enum Routed {
 /// One PE array.
 #[derive(Clone, Debug)]
 pub struct PeArray {
+    /// Rows.
     pub tr: usize,
+    /// Columns.
     pub tc: usize,
+    /// PEs, row-major `tr × tc`.
     pub pes: Vec<Pe>,
     /// Statistic: products routed through V/H FIFOs.
     pub v_pushes: u64,
+    /// Products routed through H FIFOs.
     pub h_pushes: u64,
 }
 
 impl PeArray {
+    /// An array of idle PEs sized for kernel volume `k_vol`.
     pub fn new(tr: usize, tc: usize, k_vol: usize, fifo_cap: usize) -> PeArray {
         PeArray {
             tr,
@@ -77,11 +89,13 @@ impl PeArray {
     }
 
     #[inline]
+    /// The PE at `(r, c)`.
     pub fn pe(&self, r: usize, c: usize) -> &Pe {
         &self.pes[r * self.tc + c]
     }
 
     #[inline]
+    /// Mutable access to the PE at `(r, c)`.
     pub fn pe_mut(&mut self, r: usize, c: usize) -> &mut Pe {
         &mut self.pes[r * self.tc + c]
     }

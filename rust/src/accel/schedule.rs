@@ -27,6 +27,7 @@ use super::mapping::Mapping;
 /// The static schedule for one layer on one configuration.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Schedule {
+    /// The dimension mapping driving the walk.
     pub mapping: Mapping,
     /// `ceil(N_o / T_m)` output-channel blocks.
     pub oc_blocks: usize,
@@ -36,12 +37,14 @@ pub struct Schedule {
     pub d_blocks: usize,
     /// `ceil(I_H / T_r)` × `ceil(I_W / T_c)` spatial tiles.
     pub h_tiles: usize,
+    /// `ceil(I_W / T_c)` spatial tiles along the width.
     pub w_tiles: usize,
     /// Batch size folded into the walk.
     pub batch: usize,
 }
 
 impl Schedule {
+    /// Enumerate the schedule of `layer` on `cfg`.
     pub fn new(cfg: &AccelConfig, layer: &LayerSpec) -> Schedule {
         let mapping = Mapping::for_layer(cfg, layer);
         Schedule {

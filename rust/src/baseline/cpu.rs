@@ -31,6 +31,7 @@ pub struct CpuResult {
 /// The CPU baseline runner.
 #[derive(Clone, Debug)]
 pub struct CpuBaseline {
+    /// Worker threads for the blocked convolution.
     pub threads: usize,
     /// Layers whose dense MAC count exceeds this are extrapolated.
     pub direct_limit_macs: u64,

@@ -12,23 +12,29 @@ use crate::util::stats;
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name.
     pub name: String,
+    /// Raw timed samples in seconds.
     pub samples_s: Vec<f64>,
 }
 
 impl BenchResult {
+    /// Median sample.
     pub fn median_s(&self) -> f64 {
         stats::median(&self.samples_s)
     }
 
+    /// Mean sample.
     pub fn mean_s(&self) -> f64 {
         stats::mean(&self.samples_s)
     }
 
+    /// Sample standard deviation.
     pub fn std_s(&self) -> f64 {
         stats::std_dev(&self.samples_s)
     }
 
+    /// Fastest sample.
     pub fn min_s(&self) -> f64 {
         self.samples_s
             .iter()
@@ -51,7 +57,9 @@ impl BenchResult {
 /// Harness configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct Bench {
+    /// Untimed warm-up iterations.
     pub warmup_iters: usize,
+    /// Timed iterations.
     pub sample_iters: usize,
     /// Hard cap on total sampling time; sampling stops early past it.
     pub max_total_s: f64,

@@ -52,6 +52,15 @@ where
 /// names the options that consume a value, so a boolean flag placed
 /// before the positional (`compile --json dcgan`) does not swallow it.
 pub fn first_positional<'a>(args: &'a [String], value_keys: &[&str]) -> Option<&'a String> {
+    positionals(args, value_keys).into_iter().next()
+}
+
+/// All bare (non-option) arguments in order — subcommands like
+/// `udcnn serve <net> <net>...` take several networks positionally.
+/// `value_keys` names the options that consume a value (same contract
+/// as [`first_positional`]).
+pub fn positionals<'a>(args: &'a [String], value_keys: &[&str]) -> Vec<&'a String> {
+    let mut out = Vec::new();
     let mut i = 0;
     while i < args.len() {
         match args[i].strip_prefix("--") {
@@ -61,10 +70,13 @@ pub fn first_positional<'a>(args: &'a [String], value_keys: &[&str]) -> Option<&
                     i += 1; // skip the option's value
                 }
             }
-            None => return Some(&args[i]),
+            None => {
+                out.push(&args[i]);
+                i += 1;
+            }
         }
     }
-    None
+    out
 }
 
 /// Resolve a benchmark network by (aliased) name.
@@ -141,6 +153,20 @@ mod tests {
         );
         assert_eq!(first_positional(&args(&["--json", "--batch", "4"]), keys), None);
         assert_eq!(first_positional(&args(&[]), keys), None);
+    }
+
+    #[test]
+    fn positionals_collects_all() {
+        let keys = &["batch", "instances", "rps"];
+        assert_eq!(
+            positionals(&args(&["dcgan", "3d-gan", "--instances", "4"]), keys),
+            vec!["dcgan", "3d-gan"]
+        );
+        assert_eq!(
+            positionals(&args(&["--json", "dcgan", "--rps", "100", "vnet"]), keys),
+            vec!["dcgan", "vnet"]
+        );
+        assert!(positionals(&args(&["--instances", "4"]), keys).is_empty());
     }
 
     #[test]

@@ -25,10 +25,12 @@ impl Default for BatchPolicy {
 /// Pulls from a channel and yields batches according to the policy.
 pub struct Batcher<T> {
     rx: Receiver<T>,
+    /// The policy batches are closed under.
     pub policy: BatchPolicy,
 }
 
 impl<T> Batcher<T> {
+    /// Wrap a receiver. Panics if `policy.max_batch` is zero.
     pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Batcher<T> {
         assert!(policy.max_batch >= 1);
         Batcher { rx, policy }
@@ -109,6 +111,84 @@ mod tests {
         let mut b = Batcher::new(rx, BatchPolicy::default());
         assert_eq!(b.next_batch().unwrap(), vec![7]);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn max_batch_one_never_waits() {
+        // batch size 1 must close on the first item immediately, even
+        // with a generous max_wait — the deadline loop must not run.
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let mut b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_secs(60),
+            },
+        );
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![1]);
+        assert_eq!(b.next_batch().unwrap(), vec![2]);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "singleton batches must not wait out max_wait"
+        );
+    }
+
+    #[test]
+    fn channel_closed_mid_batch_yields_partial() {
+        // the sender dies while the batcher is waiting to fill a
+        // batch: what was gathered is delivered, then None.
+        let (tx, rx) = channel();
+        tx.send(10).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send(11).unwrap();
+            drop(tx); // hang up mid-batch
+        });
+        let mut b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 100,
+                max_wait: Duration::from_secs(30),
+            },
+        );
+        let batch = b.next_batch().unwrap();
+        handle.join().unwrap();
+        assert_eq!(batch, vec![10, 11], "partial batch on disconnect");
+        assert!(b.next_batch().is_none(), "closed channel ends the stream");
+    }
+
+    #[test]
+    fn max_wait_expiry_then_empty_follow_up_blocks() {
+        // a timeout-closed batch must not leave the batcher in a state
+        // where the next call spins or returns an empty batch: with
+        // nothing queued it blocks until a genuinely new item arrives.
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let mut b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(10),
+            },
+        );
+        let first = b.next_batch().unwrap();
+        assert_eq!(first, vec![1], "closed by expiry, not by fill");
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            tx.send(2).unwrap();
+            // keep tx alive until after the send
+        });
+        let t0 = Instant::now();
+        let second = b.next_batch().unwrap();
+        handle.join().unwrap();
+        assert_eq!(second, vec![2]);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(25),
+            "second call must block for the late item, not poll-spin"
+        );
     }
 
     #[test]

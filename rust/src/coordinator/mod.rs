@@ -1,16 +1,33 @@
 //! L3 coordinator: the service face of the accelerator.
 //!
 //! A thread-based (the offline build has no tokio; see DESIGN.md §1)
-//! batched-inference service: requests are routed by model name to a
-//! per-model accelerator instance, gathered into batches (the
-//! accelerator amortizes weight traffic across a batch — the same
-//! `cfg.batch` the timing tier models), executed, and answered with
-//! both the numeric output and the simulated on-accelerator latency.
+//! batched-inference service: requests are routed by model name to an
+//! accelerator instance, gathered into batches (the accelerator
+//! amortizes weight traffic across a batch — the same `cfg.batch` the
+//! timing tier models), executed, and answered with both the numeric
+//! output and the simulated on-accelerator latency.
+//!
+//! **IOM vs OOM.** The numerics workers run are the *input-oriented*
+//! (IOM) golden models: each real input activation is scattered
+//! against the kernel and overlaps are accumulated, which is exactly
+//! what the simulated hardware computes. The *output-oriented* (OOM)
+//! formulation — zero-insert then dense convolution — produces the
+//! same outputs but wastes most multiplies on inserted zeros; it
+//! survives here only as the CPU baseline and as a front-end form the
+//! graph compiler lowers away, so a served request never pays for it.
+//!
+//! Multi-instance serving comes in two forms: the live service can
+//! shard each model across several worker instances
+//! ([`service::InferenceService::start_sharded`], built on
+//! [`router::ShardRouter`]'s queue-depth tracking), and capacity
+//! questions are delegated to the deterministic simulated-time fleet
+//! ([`service::serve_fleet`] → [`crate::serve::Fleet`]), which shares
+//! this module's [`BatchPolicy`] contract.
 
 pub mod batcher;
 pub mod router;
 pub mod service;
 
 pub use batcher::{Batcher, BatchPolicy};
-pub use router::Router;
-pub use service::{InferenceService, Request, Response, ServiceStats};
+pub use router::{QueueDepth, Router, ShardRouter};
+pub use service::{serve_fleet, InferenceService, Request, Response, ServiceStats};

@@ -1,7 +1,17 @@
-//! Request routing: model name → accelerator instance queue.
+//! Request routing: model name → accelerator instance queue(s).
+//!
+//! [`Router`] is the original single-queue map (one worker per model).
+//! [`ShardRouter`] extends it for fleets: a model maps to *several*
+//! instance queues with live queue-depth tracking, dispatch picks the
+//! least-loaded instance, and a bounded dispatch sheds load once every
+//! instance's queue is past the admission cap — the live (wall-clock)
+//! counterpart of the simulated-time scheduler in
+//! [`crate::serve::Fleet`].
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -13,6 +23,7 @@ pub struct Router<T> {
 }
 
 impl<T> Router<T> {
+    /// An empty router.
     pub fn new() -> Router<T> {
         Router {
             routes: BTreeMap::new(),
@@ -20,11 +31,17 @@ impl<T> Router<T> {
         }
     }
 
-    pub fn add_route(&mut self, model: &str, tx: Sender<T>) {
-        self.routes.insert(model.to_string(), tx);
-        self.dispatched.insert(model.to_string(), 0);
+    /// Register (or replace) the worker for `model`, returning the
+    /// previous sender when re-registering. The dispatch counter is
+    /// preserved across re-registration, so counters never drift from
+    /// the route table: one counter per model ever routed, counting
+    /// all dispatches regardless of worker generation.
+    pub fn add_route(&mut self, model: &str, tx: Sender<T>) -> Option<Sender<T>> {
+        self.dispatched.entry(model.to_string()).or_insert(0);
+        self.routes.insert(model.to_string(), tx)
     }
 
+    /// Registered model names, sorted.
     pub fn models(&self) -> Vec<&str> {
         self.routes.keys().map(|s| s.as_str()).collect()
     }
@@ -48,6 +65,139 @@ impl<T> Router<T> {
 }
 
 impl<T> Default for Router<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One instance queue of a [`ShardRouter`] route.
+struct Shard<T> {
+    /// Fleet-wide instance id (stable tie-breaker).
+    instance: usize,
+    tx: Sender<T>,
+    /// Items sent but not yet reported served by the worker.
+    depth: Arc<AtomicUsize>,
+}
+
+/// Routes items to the least-loaded of several per-model instance
+/// queues, with queue-depth-based admission control.
+///
+/// Workers acknowledge completed items by decrementing the
+/// [`QueueDepth`] handed out at registration; the router reads the
+/// depths to pick the shard and to decide admission.
+pub struct ShardRouter<T> {
+    shards: BTreeMap<String, Vec<Shard<T>>>,
+    /// Per-model dispatch counters (all shards of the model).
+    pub dispatched: BTreeMap<String, u64>,
+}
+
+/// Shared outstanding-item counter of one instance queue. The worker
+/// side calls [`QueueDepth::done`] once per item it finishes.
+#[derive(Clone, Debug, Default)]
+pub struct QueueDepth(Arc<AtomicUsize>);
+
+impl QueueDepth {
+    /// Current number of outstanding items.
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// Record `n` items as completed.
+    pub fn done(&self, n: usize) {
+        self.0.fetch_sub(n, Ordering::SeqCst);
+    }
+}
+
+impl<T> ShardRouter<T> {
+    /// An empty shard router.
+    pub fn new() -> ShardRouter<T> {
+        ShardRouter {
+            shards: BTreeMap::new(),
+            dispatched: BTreeMap::new(),
+        }
+    }
+
+    /// Register one instance queue for `model` and return the depth
+    /// counter its worker must decrement per served item.
+    pub fn add_shard(&mut self, model: &str, instance: usize, tx: Sender<T>) -> QueueDepth {
+        let depth = Arc::new(AtomicUsize::new(0));
+        self.shards.entry(model.to_string()).or_default().push(Shard {
+            instance,
+            tx,
+            depth: Arc::clone(&depth),
+        });
+        self.dispatched.entry(model.to_string()).or_insert(0);
+        QueueDepth(depth)
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<&str> {
+        self.shards.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Total outstanding items across all shards of `model`.
+    pub fn queue_depth(&self, model: &str) -> usize {
+        self.shards
+            .get(model)
+            .map(|s| s.iter().map(|x| x.depth.load(Ordering::SeqCst)).sum())
+            .unwrap_or(0)
+    }
+
+    /// Outstanding items of the *least-loaded* instance hosting
+    /// `model` (`None` for an unknown model). This is the admission
+    /// signal: if even the emptiest queue is past the cap, the request
+    /// cannot be placed anywhere useful.
+    pub fn min_depth(&self, model: &str) -> Option<usize> {
+        self.shards
+            .get(model)?
+            .iter()
+            .map(|s| s.depth.load(Ordering::SeqCst))
+            .min()
+    }
+
+    /// Dispatch to the least-loaded instance hosting `model`; returns
+    /// the chosen instance id. Unbounded (no admission control).
+    pub fn dispatch(&mut self, model: &str, item: T) -> Result<usize> {
+        self.dispatch_bounded(model, item, usize::MAX)
+    }
+
+    /// Dispatch to the least-loaded instance hosting `model`, shedding
+    /// (with an error) when even that instance already has `max_depth`
+    /// or more outstanding items. Returns the chosen instance id.
+    pub fn dispatch_bounded(&mut self, model: &str, item: T, max_depth: usize) -> Result<usize> {
+        let shards = match self.shards.get(model) {
+            Some(s) if !s.is_empty() => s,
+            _ => bail!(
+                "unknown model '{model}' (available: {:?})",
+                self.models()
+            ),
+        };
+        // least-loaded shard, ties to the lowest instance id
+        let best = shards
+            .iter()
+            .min_by_key(|s| (s.depth.load(Ordering::SeqCst), s.instance))
+            .unwrap();
+        let depth = best.depth.load(Ordering::SeqCst);
+        if depth >= max_depth {
+            bail!(
+                "shedding '{model}': all {} instance queue(s) at depth >= {max_depth}",
+                shards.len()
+            );
+        }
+        // count the item BEFORE sending: once sent, the worker may
+        // finish it (and decrement) at any moment, and a decrement
+        // racing an un-incremented counter would wrap it to ~2^64
+        best.depth.fetch_add(1, Ordering::SeqCst);
+        if best.tx.send(item).is_err() {
+            best.depth.fetch_sub(1, Ordering::SeqCst);
+            bail!("instance {} for '{model}' has shut down", best.instance);
+        }
+        *self.dispatched.get_mut(model).unwrap() += 1;
+        Ok(best.instance)
+    }
+}
+
+impl<T> Default for ShardRouter<T> {
     fn default() -> Self {
         Self::new()
     }
@@ -89,5 +239,72 @@ mod tests {
         r.add_route("m", tx);
         let err = r.dispatch("m", 5).unwrap_err();
         assert!(err.to_string().contains("shut down"));
+    }
+
+    #[test]
+    fn default_is_empty() {
+        let r: Router<u32> = Router::default();
+        assert!(r.models().is_empty());
+        let s: ShardRouter<u32> = ShardRouter::default();
+        assert!(s.models().is_empty());
+    }
+
+    #[test]
+    fn reregistration_replaces_and_preserves_counter() {
+        let (tx1, rx1) = channel();
+        let mut r = Router::new();
+        assert!(r.add_route("m", tx1).is_none());
+        r.dispatch("m", 1).unwrap();
+        assert_eq!(r.dispatched["m"], 1);
+        // re-register: old sender returned, counter NOT reset
+        let (tx2, rx2) = channel();
+        let old = r.add_route("m", tx2);
+        assert!(old.is_some());
+        r.dispatch("m", 2).unwrap();
+        assert_eq!(r.dispatched["m"], 2, "counter survives re-registration");
+        assert_eq!(rx1.try_recv().unwrap(), 1);
+        assert_eq!(rx2.try_recv().unwrap(), 2);
+        assert_eq!(r.models(), vec!["m"], "no duplicate routes");
+    }
+
+    #[test]
+    fn shard_router_balances_by_depth() {
+        let (tx0, rx0) = channel();
+        let (tx1, rx1) = channel();
+        let mut r = ShardRouter::new();
+        let d0 = r.add_shard("m", 0, tx0);
+        let d1 = r.add_shard("m", 1, tx1);
+        // both idle: lowest instance id wins, then depths alternate
+        assert_eq!(r.dispatch("m", 10).unwrap(), 0);
+        assert_eq!(r.dispatch("m", 11).unwrap(), 1);
+        assert_eq!(r.dispatch("m", 12).unwrap(), 0);
+        assert_eq!(r.queue_depth("m"), 3);
+        assert_eq!(rx0.try_recv().unwrap(), 10);
+        assert_eq!(rx1.try_recv().unwrap(), 11);
+        assert_eq!(rx0.try_recv().unwrap(), 12);
+        // worker 0 finishes its two items: it becomes least-loaded
+        d0.done(2);
+        assert_eq!(d0.get(), 0);
+        assert_eq!(d1.get(), 1);
+        assert_eq!(r.dispatch("m", 13).unwrap(), 0);
+    }
+
+    #[test]
+    fn shard_router_sheds_at_cap() {
+        let (tx, _rx) = channel();
+        let mut r = ShardRouter::new();
+        r.add_shard("m", 0, tx);
+        r.dispatch_bounded("m", 1, 2).unwrap();
+        r.dispatch_bounded("m", 2, 2).unwrap();
+        let err = r.dispatch_bounded("m", 3, 2).unwrap_err();
+        assert!(err.to_string().contains("shedding"), "{err}");
+        assert_eq!(r.dispatched["m"], 2, "shed items are not counted");
+    }
+
+    #[test]
+    fn shard_router_unknown_model() {
+        let mut r: ShardRouter<u32> = ShardRouter::new();
+        assert!(r.dispatch("nope", 1).is_err());
+        assert_eq!(r.queue_depth("nope"), 0);
     }
 }

@@ -1,5 +1,5 @@
 //! The batched inference service: router → batcher → accelerator
-//! worker per model.
+//! worker(s) per model.
 //!
 //! Numerics run through the f32 golden IOM pipeline (bit-compatible
 //! with the artifacts — see `integration_runtime.rs`); latency is the
@@ -7,6 +7,19 @@
 //! [`crate::graph::NetworkPlan`] at the actual batch size (inter-layer
 //! buffer reuse + cross-layer prefetch overlap), which is what a
 //! hardware deployment would report.
+//!
+//! Two serving shapes live here:
+//!
+//! * [`InferenceService`] — the live, wall-clock service: real threads
+//!   and channels, one *or several* worker instances per model
+//!   ([`InferenceService::start_sharded`]), dispatched least-loaded
+//!   through [`ShardRouter`] with optional queue-depth admission
+//!   control.
+//! * [`serve_fleet`] — capacity planning: the coordinator delegates
+//!   multi-instance serving questions ("what does a rack of N boards
+//!   do under R req/s?") to the deterministic simulated-time
+//!   [`crate::serve::Fleet`], which shares the [`BatchPolicy`]
+//!   contract and the plan cache with this module.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Sender};
@@ -14,28 +27,33 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::accel::{AccelConfig, Schedule};
 use crate::dcnn::{Dims, LayerData, Network};
 use crate::func::{crop_2d, crop_3d, deconv2d_iom, deconv3d_iom};
+use crate::serve::{Arrival, Fleet, FleetOptions, FleetReport};
 use crate::tensor::{FeatureMap, Volume};
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::router::Router;
+use super::router::ShardRouter;
 
 /// One inference request: the layer-0 input for `model`.
 pub struct Request {
+    /// Target model (network) name.
     pub model: String,
     /// Flat input for the network's first layer (C·D·H·W order).
     pub input: Vec<f32>,
+    /// Where the worker sends the [`Response`].
     pub resp: Sender<Response>,
+    /// Submission timestamp (wall clock).
     pub submitted: Instant,
 }
 
 /// The reply.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Model that served the request.
     pub model: String,
     /// Flat final-layer output.
     pub output: Vec<f32>,
@@ -46,18 +64,27 @@ pub struct Response {
     pub wall_latency_s: f64,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
+    /// Worker instance that served the batch.
+    pub instance: usize,
 }
 
 /// Aggregate service statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
+    /// Requests served (or in flight).
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Requests rejected (unknown model / dead worker).
     pub rejected: u64,
+    /// Requests shed by queue-depth admission control.
+    pub shed: u64,
+    /// Served-request counts per model.
     pub per_model: BTreeMap<String, u64>,
 }
 
 impl ServiceStats {
+    /// Mean batch size so far (0.0 before the first batch).
     pub fn avg_batch(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -69,9 +96,12 @@ impl ServiceStats {
 
 /// The running service.
 pub struct InferenceService {
-    router: Router<Request>,
+    router: ShardRouter<Request>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<ServiceStats>>,
+    /// Admission cap: shed when every instance queue of the model has
+    /// at least this many outstanding requests (`None` = unbounded).
+    admission_cap: Option<usize>,
 }
 
 impl InferenceService {
@@ -79,35 +109,63 @@ impl InferenceService {
     /// weights (seeded per model) and an accelerator config chosen by
     /// dimensionality.
     pub fn start(networks: Vec<Network>, policy: BatchPolicy) -> InferenceService {
+        InferenceService::start_sharded(networks, policy, 1, None)
+    }
+
+    /// Spawn `replicas` worker instances per network, dispatched
+    /// least-loaded via [`ShardRouter`]. With `admission_cap` set, a
+    /// request is shed when every instance queue of its model already
+    /// holds that many outstanding requests. Replica weights are
+    /// seeded per model (not per replica), so every instance of a
+    /// model computes identical outputs.
+    pub fn start_sharded(
+        networks: Vec<Network>,
+        policy: BatchPolicy,
+        replicas: usize,
+        admission_cap: Option<usize>,
+    ) -> InferenceService {
+        assert!(replicas >= 1, "need at least one replica per model");
         let stats = Arc::new(Mutex::new(ServiceStats::default()));
-        let mut router = Router::new();
+        let mut router = ShardRouter::new();
         let mut workers = Vec::new();
         for net in networks {
-            let (tx, rx) = channel::<Request>();
-            router.add_route(net.name, tx);
-            let stats = Arc::clone(&stats);
-            workers.push(std::thread::spawn(move || {
-                let mut batcher = Batcher::new(rx, policy);
-                let weights: Vec<LayerData> = net
-                    .layers
-                    .iter()
-                    .enumerate()
-                    .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)))
-                    .collect();
-                while let Some(batch) = batcher.next_batch() {
-                    serve_batch(&net, &weights, batch, &stats);
-                }
-            }));
+            for instance in 0..replicas {
+                let (tx, rx) = channel::<Request>();
+                let depth = router.add_shard(net.name, instance, tx);
+                let stats = Arc::clone(&stats);
+                let net = net.clone();
+                workers.push(std::thread::spawn(move || {
+                    let mut batcher = Batcher::new(rx, policy);
+                    let weights: Vec<LayerData> = net
+                        .layers
+                        .iter()
+                        .enumerate()
+                        .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)))
+                        .collect();
+                    while let Some(batch) = batcher.next_batch() {
+                        let n = batch.len();
+                        serve_batch(&net, &weights, batch, instance, &stats);
+                        depth.done(n);
+                    }
+                }));
+            }
         }
         InferenceService {
             router,
             workers,
             stats,
+            admission_cap,
         }
     }
 
-    /// Submit a request; the response arrives on `resp_rx`.
+    /// Submit a request; the response arrives on the returned channel.
     pub fn submit(&mut self, model: &str, input: Vec<f32>) -> Result<std::sync::mpsc::Receiver<Response>> {
+        if let Some(cap) = self.admission_cap {
+            if self.router.min_depth(model).map_or(false, |d| d >= cap) {
+                self.stats.lock().unwrap().shed += 1;
+                bail!("shedding '{model}': every instance queue at depth >= {cap}");
+            }
+        }
         let (tx, rx) = channel();
         let req = Request {
             model: model.to_string(),
@@ -128,8 +186,14 @@ impl InferenceService {
         Ok(rx.recv_timeout(timeout)?)
     }
 
+    /// Snapshot of the aggregate counters.
     pub fn stats(&self) -> ServiceStats {
         self.stats.lock().unwrap().clone()
+    }
+
+    /// Total outstanding requests across all instances of `model`.
+    pub fn queue_depth(&self, model: &str) -> usize {
+        self.router.queue_depth(model)
     }
 
     /// Drop the routes (closing worker channels) and join workers.
@@ -141,12 +205,27 @@ impl InferenceService {
     }
 }
 
+/// Capacity planning: replay `workload` against a fleet of simulated
+/// accelerator instances. The coordinator delegates everything —
+/// plan compilation and caching, least-loaded shard scheduling,
+/// admission control, latency accounting — to [`crate::serve::Fleet`];
+/// this wrapper only exists so callers can stay on the coordinator
+/// API. See [`crate::serve`] for the moving parts.
+pub fn serve_fleet(
+    networks: Vec<Network>,
+    opts: FleetOptions,
+    workload: &[Arrival],
+) -> Result<FleetReport, String> {
+    Fleet::new(networks, opts)?.run(workload)
+}
+
 /// Run one batch through the network: golden numerics + simulated
 /// accelerator latency at the real batch size.
 fn serve_batch(
     net: &Network,
     weights: &[LayerData],
     batch: Vec<Request>,
+    instance: usize,
     stats: &Arc<Mutex<ServiceStats>>,
 ) {
     let bsize = batch.len();
@@ -179,6 +258,7 @@ fn serve_batch(
             accel_latency_s: accel_s,
             wall_latency_s: req.submitted.elapsed().as_secs_f64(),
             batch_size: bsize,
+            instance,
         };
         let _ = req.resp.send(resp);
     }
@@ -248,6 +328,7 @@ mod tests {
         assert_eq!(resp.output.len(), last.output_elems());
         assert!(resp.accel_latency_s > 0.0);
         assert_eq!(resp.model, "tiny-2d");
+        assert_eq!(resp.instance, 0);
         let stats = svc.stats();
         assert_eq!(stats.requests, 1);
         svc.shutdown();
@@ -292,6 +373,64 @@ mod tests {
     }
 
     #[test]
+    fn sharded_replicas_all_serve() {
+        let net = zoo::tiny_2d();
+        let l0 = net.layers[0].clone();
+        let mut svc = InferenceService::start_sharded(
+            vec![net],
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            2,
+            None,
+        );
+        let mut rxs = Vec::new();
+        for _ in 0..6 {
+            rxs.push(
+                svc.submit("tiny-2d", vec![0.1f32; l0.input_elems()])
+                    .unwrap(),
+            );
+        }
+        let instances: Vec<usize> = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(10)).unwrap().instance)
+            .collect();
+        assert!(instances.contains(&0), "{instances:?}");
+        assert!(instances.contains(&1), "{instances:?}");
+        // same model + same seed: replicas answer identically, so the
+        // caller cannot tell which instance served it (checked via the
+        // forward determinism test below); here we only assert spread.
+        assert_eq!(svc.stats().requests, 6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admission_cap_sheds_when_saturated() {
+        // one replica, cap 1: the second unserved submit must shed
+        let net = zoo::tiny_3d();
+        let l0 = net.layers[0].clone();
+        let mut svc = InferenceService::start_sharded(
+            vec![net],
+            BatchPolicy {
+                max_batch: 8,
+                // batches wait long enough that queued items are still
+                // outstanding when the next submit checks the depth
+                max_wait: Duration::from_millis(250),
+            },
+            1,
+            Some(1),
+        );
+        let rx1 = svc.submit("tiny-3d", vec![0.1f32; l0.input_elems()]).unwrap();
+        let err = svc.submit("tiny-3d", vec![0.2f32; l0.input_elems()]);
+        assert!(err.is_err(), "second submit should shed at cap 1");
+        assert_eq!(svc.stats().shed, 1);
+        let r = rx1.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r.model, "tiny-3d");
+        svc.shutdown();
+    }
+
+    #[test]
     fn forward_is_deterministic() {
         let net = zoo::tiny_3d();
         let weights: Vec<LayerData> = net
@@ -305,5 +444,21 @@ mod tests {
         let b = forward(&net, &weights, &input);
         assert_eq!(a, b);
         assert_eq!(a.len(), net.layers.last().unwrap().output_elems());
+    }
+
+    #[test]
+    fn serve_fleet_delegates_to_the_fleet() {
+        let work = crate::serve::poisson_arrivals(7, 1e6, 64, &["tiny-2d"]);
+        let r = serve_fleet(
+            vec![zoo::tiny_2d()],
+            FleetOptions {
+                instances: 2,
+                ..FleetOptions::default()
+            },
+            &work,
+        )
+        .unwrap();
+        assert_eq!(r.served + r.shed, 64);
+        assert_eq!(r.instances, 2);
     }
 }

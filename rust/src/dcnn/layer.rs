@@ -19,7 +19,9 @@ use std::fmt;
 /// Dimensionality of a deconvolution layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Dims {
+    /// Two spatial dimensions.
     D2,
+    /// Three spatial dimensions.
     D3,
 }
 
@@ -50,12 +52,15 @@ impl fmt::Display for Dims {
 pub struct LayerSpec {
     /// Human-readable name, e.g. `"dcgan.deconv2"`.
     pub name: String,
+    /// Dimensionality (2D or 3D).
     pub dims: Dims,
     /// Input channels (`N_c` in the paper).
     pub in_c: usize,
     /// Input depth (1 for 2D layers).
     pub in_d: usize,
+    /// Input height.
     pub in_h: usize,
+    /// Input width.
     pub in_w: usize,
     /// Output channels (`N_o`).
     pub out_c: usize,
@@ -146,9 +151,11 @@ impl LayerSpec {
     pub fn out_full_h(&self) -> usize {
         self.full_extent(self.in_h)
     }
+    /// Full (Eq. 1) output width.
     pub fn out_full_w(&self) -> usize {
         self.full_extent(self.in_w)
     }
+    /// Full (Eq. 1) output depth (1 for 2D).
     pub fn out_full_d(&self) -> usize {
         if self.dims == Dims::D2 {
             1
@@ -161,9 +168,11 @@ impl LayerSpec {
     pub fn out_h(&self) -> usize {
         self.cropped_extent(self.in_h)
     }
+    /// Cropped output width.
     pub fn out_w(&self) -> usize {
         self.cropped_extent(self.in_w)
     }
+    /// Cropped output depth (1 for 2D).
     pub fn out_d(&self) -> usize {
         if self.dims == Dims::D2 {
             1

@@ -16,7 +16,9 @@ use crate::util::Prng;
 /// One row of the Fig.-1 dataset.
 #[derive(Clone, Debug)]
 pub struct SparsityRow {
+    /// Network the layer belongs to.
     pub network: &'static str,
+    /// Layer name.
     pub layer: String,
     /// Closed-form sparsity of the zero-inserted map.
     pub analytic: f64,

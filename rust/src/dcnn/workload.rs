@@ -13,12 +13,18 @@ use crate::util::Prng;
 /// Generated tensors for one layer invocation.
 #[derive(Clone, Debug)]
 pub enum LayerData {
+    /// Data for a 2D layer.
     D2 {
+        /// Input feature map.
         input: FeatureMap<f32>,
+        /// Filter weights.
         weights: WeightsOIHW<f32>,
     },
+    /// Data for a 3D layer.
     D3 {
+        /// Input volume.
         input: Volume<f32>,
+        /// Filter weights.
         weights: WeightsOIDHW<f32>,
     },
 }
@@ -89,12 +95,18 @@ impl LayerData {
 /// Q8.8 variant of [`LayerData`].
 #[derive(Clone, Debug)]
 pub enum LayerDataQ {
+    /// Data for a 2D layer.
     D2 {
+        /// Input feature map.
         input: FeatureMap<Q88>,
+        /// Filter weights.
         weights: WeightsOIHW<Q88>,
     },
+    /// Data for a 3D layer.
     D3 {
+        /// Input volume.
         input: Volume<Q88>,
+        /// Filter weights.
         weights: WeightsOIDHW<Q88>,
     },
 }

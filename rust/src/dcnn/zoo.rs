@@ -13,8 +13,11 @@ use super::layer::{Dims, LayerSpec};
 /// A benchmark network: an ordered list of deconvolution layers.
 #[derive(Clone, Debug)]
 pub struct Network {
+    /// Benchmark name (e.g. `"dcgan"`).
     pub name: &'static str,
+    /// Dimensionality of every layer.
     pub dims: Dims,
+    /// Deconvolution layers in execution order.
     pub layers: Vec<LayerSpec>,
 }
 

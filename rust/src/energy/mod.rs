@@ -39,9 +39,13 @@ pub fn gops_per_joule(dense_ops: f64, seconds: f64, watts: f64) -> f64 {
 /// Energy-efficiency comparison row for one network (Fig. 7(b)).
 #[derive(Clone, Debug)]
 pub struct EfficiencyRow {
+    /// Network name.
     pub network: String,
+    /// FPGA energy efficiency, GOPS per joule.
     pub fpga_gops_j: f64,
+    /// CPU energy efficiency, GOPS per joule.
     pub cpu_gops_j: f64,
+    /// GPU energy efficiency, GOPS per joule.
     pub gpu_gops_j: f64,
 }
 

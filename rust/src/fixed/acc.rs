@@ -11,6 +11,7 @@ use super::FRAC_BITS;
 pub struct Acc48(pub i64);
 
 impl Acc48 {
+    /// The zero accumulator.
     pub const ZERO: Acc48 = Acc48(0);
 
     /// Accumulate one Q8.8×Q8.8 product (DSP48 `P += A*B`).

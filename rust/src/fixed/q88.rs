@@ -14,9 +14,13 @@ use super::{FRAC_BITS, SCALE};
 pub struct Q88(pub i16);
 
 impl Q88 {
+    /// The additive identity (0.0).
     pub const ZERO: Q88 = Q88(0);
+    /// The multiplicative identity (1.0).
     pub const ONE: Q88 = Q88(SCALE as i16);
+    /// Largest representable value (+127.996).
     pub const MAX: Q88 = Q88(i16::MAX);
+    /// Smallest representable value (−128.0).
     pub const MIN: Q88 = Q88(i16::MIN);
 
     /// Quantize from f32 with round-to-nearest-even and saturation.
@@ -41,16 +45,19 @@ impl Q88 {
     }
 
     #[inline]
+    /// Convert back to f32 (exact: every Q8.8 value is an f32).
     pub fn to_f32(self) -> f32 {
         self.0 as f32 / SCALE as f32
     }
 
     #[inline]
+    /// The raw underlying bits.
     pub const fn bits(self) -> i16 {
         self.0
     }
 
     #[inline]
+    /// Whether the value is exactly zero.
     pub fn is_zero(self) -> bool {
         self.0 == 0
     }

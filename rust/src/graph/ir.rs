@@ -31,13 +31,18 @@ pub type NodeId = usize;
 /// Shape of one tensor edge, `C × D × H × W` (`d = 1` for 2D).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TensorShape {
+    /// Channels.
     pub c: usize,
+    /// Depth (1 for 2D).
     pub d: usize,
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
 }
 
 impl TensorShape {
+    /// A shape from raw extents.
     pub fn new(c: usize, d: usize, h: usize, w: usize) -> TensorShape {
         TensorShape { c, d, h, w }
     }
@@ -76,8 +81,11 @@ impl fmt::Display for TensorShape {
 /// Pointwise nonlinearities the PE write-back path applies for free.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Act {
+    /// `max(x, 0)`.
     Relu,
+    /// Hyperbolic tangent.
     Tanh,
+    /// Logistic function.
     Sigmoid,
 }
 
@@ -125,8 +133,11 @@ impl OpKind {
 /// shape of the tensor it produces.
 #[derive(Clone, Debug)]
 pub struct NodeSpec {
+    /// This node's id (its index in the graph).
     pub id: NodeId,
+    /// Human-readable name.
     pub name: String,
+    /// The operation.
     pub op: OpKind,
     /// Producer node ids, in argument order.
     pub inputs: Vec<NodeId>,
@@ -141,13 +152,16 @@ pub struct NodeSpec {
 /// A whole network as a graph of ops over explicit tensor edges.
 #[derive(Clone, Debug)]
 pub struct NetworkGraph {
+    /// Network name.
     pub name: String,
+    /// Dimensionality of the whole graph.
     pub dims: Dims,
     /// Nodes in topological (insertion) order; `nodes[i].id == i`.
     pub nodes: Vec<NodeSpec>,
 }
 
 impl NetworkGraph {
+    /// An empty graph.
     pub fn new(name: impl Into<String>, dims: Dims) -> NetworkGraph {
         NetworkGraph {
             name: name.into(),
@@ -174,14 +188,17 @@ impl NetworkGraph {
         id
     }
 
+    /// The node with id `id`.
     pub fn node(&self, id: NodeId) -> &NodeSpec {
         &self.nodes[id]
     }
 
+    /// Number of nodes.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Whether the graph has no nodes.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }

@@ -44,16 +44,23 @@ impl std::fmt::Display for EdgePlace {
 pub struct StepPlan {
     /// Node id in the lowered graph.
     pub node: NodeId,
+    /// Layer name (from the graph node).
     pub name: String,
+    /// Layer geometry.
     pub layer: LayerSpec,
+    /// Blocking schedule on the bound configuration.
     pub schedule: Schedule,
     /// Activations fused into this step's write-back.
     pub fused: Vec<Act>,
+    /// Where the step reads its input tensor.
     pub input_src: EdgePlace,
+    /// Where the step writes its output tensor.
     pub output_dst: EdgePlace,
     /// DDR traffic after reuse adjustment (batch totals).
     pub weight_bytes: u64,
+    /// Input bytes after reuse adjustment.
     pub input_bytes: u64,
+    /// Output bytes after reuse adjustment.
     pub output_bytes: u64,
     /// What the isolated-layer residency plan would have moved.
     pub isolated_dram_bytes: u64,
@@ -69,8 +76,11 @@ impl StepPlan {
 /// A compiled whole-network execution plan.
 #[derive(Clone, Debug)]
 pub struct NetworkPlan {
+    /// Network name.
     pub network: String,
+    /// The configuration the plan is bound to.
     pub cfg: AccelConfig,
+    /// Executable steps in chain order.
     pub steps: Vec<StepPlan>,
 }
 
@@ -164,7 +174,22 @@ pub fn compile(cfg: &AccelConfig, g: &NetworkGraph) -> Result<NetworkPlan, Strin
     })
 }
 
+/// The canonical plan-cache key for a network under a configuration:
+/// `<network>@<config fingerprint>`. Two calls to [`compile`] with the
+/// same key produce identical plans, which is what lets
+/// [`crate::serve::PlanCache`] compile once per (model, config) pair
+/// and share the handle across accelerator instances.
+pub fn cache_key_for(network: &str, cfg: &AccelConfig) -> String {
+    format!("{}@{}", network, cfg.fingerprint())
+}
+
 impl NetworkPlan {
+    /// The plan-cache key this plan compiles under — see
+    /// [`cache_key_for`].
+    pub fn cache_key(&self) -> String {
+        cache_key_for(&self.network, &self.cfg)
+    }
+
     /// Total DDR traffic after inter-layer reuse.
     pub fn total_dram_bytes(&self) -> u64 {
         self.steps.iter().map(|s| s.dram_bytes()).sum()

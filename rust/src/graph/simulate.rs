@@ -26,12 +26,15 @@ use super::plan::{EdgePlace, NetworkPlan, StepPlan};
 /// End-to-end metrics for one compiled network plan.
 #[derive(Clone, Debug)]
 pub struct NetworkRunMetrics {
+    /// Network name.
     pub network: String,
     /// Per-step metrics (traffic-adjusted); totals sum to the network.
     pub steps: Vec<LayerMetrics>,
     /// End-to-end cycles for the whole batch.
     pub total_cycles: u64,
+    /// Batch size the run covers.
     pub batch: usize,
+    /// Clock for time conversion.
     pub freq_mhz: f64,
     /// Total DDR traffic (batch totals, after reuse).
     pub dram_bytes: u64,
@@ -39,6 +42,7 @@ pub struct NetworkRunMetrics {
     pub dense_macs: u64,
     /// Useful MACs per batch item, all layers.
     pub useful_macs: u64,
+    /// PE count of the configuration.
     pub total_pes: usize,
 }
 

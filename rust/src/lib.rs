@@ -34,6 +34,10 @@
 //!   artifacts produced by `python/compile/aot.py` and executes them.
 //! * [`coordinator`] — the L3 service face: a batched inference service
 //!   that routes deconvolution requests onto accelerator instances.
+//! * [`serve`] — the fleet tier: N simulated accelerator instances
+//!   behind one front door, with a shared compiled-plan cache,
+//!   least-loaded shard scheduling, latency-budget admission control,
+//!   and a deterministic open-loop load generator / latency harness.
 //! * [`report`] — paper-style table/figure text rendering.
 //! * [`benchkit`] — a minimal statistics-aware benchmark harness (the
 //!   build environment is fully offline and has no criterion crate; see
@@ -55,6 +59,8 @@
 //! }
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod cli;
 pub mod util;
 pub mod fixed;
@@ -68,6 +74,7 @@ pub mod energy;
 pub mod baseline;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod report;
 pub mod benchkit;
 pub mod propcheck;

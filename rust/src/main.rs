@@ -10,21 +10,24 @@
 //! udcnn compare    [--net NAME]                         Fig. 7 numbers
 //! udcnn zoo        --dump                               layer shapes (JSON-ish)
 //! udcnn verify     [--artifacts DIR]                    PJRT artifacts vs golden
-//! udcnn serve      [--requests N]                       batched service demo
+//! udcnn serve      <net>... --instances N --rps R       fleet serving harness
 //! ```
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use udcnn::accel::{simulate_layer, simulate_network, AccelConfig};
 use udcnn::baseline::{CpuBaseline, GpuModel};
-use udcnn::cli::{first_positional, network_by_name, opt_parse, parse_opts};
-use udcnn::coordinator::{BatchPolicy, InferenceService};
+use udcnn::cli::{first_positional, network_by_name, opt_parse, parse_opts, positionals};
+use udcnn::coordinator::{serve_fleet, BatchPolicy};
 use udcnn::dcnn::{sparsity, zoo, Network};
 use udcnn::energy;
+use udcnn::report::json::JsonObj;
 use udcnn::report::{bar_chart, ratio, Table};
 use udcnn::resource;
+use udcnn::serve::{poisson_arrivals, Fleet, FleetOptions};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -54,7 +57,7 @@ fn run(args: &[String]) -> Result<()> {
         "compare" => cmd_compare(&opts),
         "zoo" => cmd_zoo(),
         "verify" => cmd_verify(&opts),
-        "serve" => cmd_serve(&opts),
+        "serve" => cmd_serve(&args[1..]),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -78,7 +81,10 @@ fn print_usage() {
          compare    [--net NAME]                       CPU/GPU/FPGA (Fig. 7)\n\
          zoo                                           dump benchmark layer shapes\n\
          verify     [--artifacts DIR]                  run PJRT artifacts vs golden\n\
-         serve      [--requests N]                     batched inference service demo"
+         serve      <net>... [--instances N] [--rps R] fleet serving harness\n\
+           serve options: --requests N (default 2048)  --seed S\n\
+                          --budget-ms B (default 250)  --max-batch M  --max-wait-ms W\n\
+                          --shard (shard models across instances)  --json"
     );
 }
 
@@ -339,35 +345,131 @@ fn cmd_verify(opts: &BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(opts: &BTreeMap<String, String>) -> Result<()> {
-    let n: usize = opts
-        .get("requests")
-        .map(|s| s.parse())
-        .transpose()?
-        .unwrap_or(16);
-    let net = zoo::tiny_2d();
-    let in_elems = net.layers[0].input_elems();
-    let mut svc = InferenceService::start(vec![net], BatchPolicy::default());
-    let mut rxs = Vec::new();
-    for i in 0..n {
-        rxs.push(svc.submit("tiny-2d", vec![0.01 * i as f32; in_elems])?);
+/// `udcnn serve <net>... --instances N --rps R`: replay a deterministic
+/// open-loop Poisson workload against a fleet of N simulated
+/// accelerator instances, and against a single instance for the
+/// scaling comparison. Without `--rps` the offered load is set to
+/// 2.5× the fleet's estimated aggregate capacity, which saturates it
+/// and makes the reported speedup a capacity ratio.
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let opts = parse_opts(rest);
+    let value_keys = &[
+        "instances",
+        "rps",
+        "requests",
+        "seed",
+        "budget-ms",
+        "max-batch",
+        "max-wait-ms",
+    ];
+    let names = positionals(rest, value_keys);
+    let nets: Vec<Network> = if names.is_empty() {
+        vec![zoo::dcgan(), zoo::gan3d()] // one 2D + one 3D by default
+    } else {
+        names
+            .iter()
+            .map(|n| network_by_name(n.as_str()))
+            .collect::<Result<_>>()?
+    };
+    let instances: usize = opt_parse(&opts, "instances", 2)?;
+    let requests: usize = opt_parse(&opts, "requests", 2048)?;
+    let seed: u64 = opt_parse(&opts, "seed", 0xF1EE7)?;
+    let budget_ms: f64 = opt_parse(&opts, "budget-ms", 250.0)?;
+    let policy = BatchPolicy {
+        max_batch: opt_parse(&opts, "max-batch", BatchPolicy::default().max_batch)?,
+        max_wait: Duration::from_micros(
+            (opt_parse(&opts, "max-wait-ms", 2.0f64)? * 1e3) as u64,
+        ),
+    };
+    let fleet_opts = FleetOptions {
+        instances,
+        policy,
+        latency_budget_s: budget_ms / 1e3,
+        shard_models: opts.contains_key("shard"),
+    };
+
+    // offered load: explicit --rps, else saturate the fleet (2.5x the
+    // estimated aggregate full-batch capacity)
+    let model_names: Vec<&str> = nets.iter().map(|n| n.name).collect();
+    let rps: f64 = match opts.get("rps") {
+        Some(v) => {
+            let r: f64 = v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("invalid --rps '{v}': {e}"))?;
+            if !(r > 0.0) || !r.is_finite() {
+                bail!("--rps must be a positive finite rate (got {v})");
+            }
+            r
+        }
+        None => {
+            let mut probe = Fleet::new(
+                nets.clone(),
+                FleetOptions {
+                    instances: 1,
+                    policy,
+                    ..FleetOptions::default()
+                },
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mut per_req_s = 0.0;
+            for m in &model_names {
+                per_req_s +=
+                    probe.batch_latency_s(m, policy.max_batch).map_err(|e| anyhow::anyhow!("{e}"))?
+                        / policy.max_batch as f64;
+            }
+            let single_capacity = model_names.len() as f64 / per_req_s;
+            2.5 * instances as f64 * single_capacity
+        }
+    };
+
+    let workload = poisson_arrivals(seed, rps, requests, &model_names);
+    let fleet = serve_fleet(nets.clone(), fleet_opts.clone(), &workload)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let single = if instances == 1 {
+        fleet.clone()
+    } else {
+        // the scaling baseline: one instance hosting every model (no
+        // sharding — a single board cannot shard), same workload
+        serve_fleet(
+            nets,
+            FleetOptions {
+                instances: 1,
+                shard_models: false,
+                ..fleet_opts
+            },
+            &workload,
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+    };
+    let speedup = if single.throughput_rps > 0.0 {
+        fleet.throughput_rps / single.throughput_rps
+    } else {
+        0.0
+    };
+
+    if opts.contains_key("json") {
+        let doc = JsonObj::new()
+            .str("workload", &format!("poisson seed={seed} rps={rps:.1} n={requests}"))
+            .num("offered_rps", rps)
+            .num("speedup_vs_single", speedup)
+            .raw("fleet", &fleet.to_json())
+            .raw("single_instance", &single.to_json())
+            .render();
+        println!("{doc}");
+        return Ok(());
     }
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let r = rx.recv_timeout(std::time::Duration::from_secs(30))?;
-        println!(
-            "req {i}: batch={} accel={:.3} ms wall={:.3} ms",
-            r.batch_size,
-            r.accel_latency_s * 1e3,
-            r.wall_latency_s * 1e3
-        );
-    }
-    let stats = svc.stats();
+
     println!(
-        "served {} requests in {} batches (avg batch {:.2})",
-        stats.requests,
-        stats.batches,
-        stats.avg_batch()
+        "workload: {} requests, poisson @ {:.1} req/s (seed {seed}), models {:?}",
+        requests, rps, model_names
     );
-    svc.shutdown();
+    print!("{}", fleet.render());
+    println!(
+        "single instance: {:.1} req/s | p99 {:.3} ms  =>  aggregate speedup {:.2}x with {} instances",
+        single.throughput_rps,
+        single.latency.p99_ms,
+        speedup,
+        fleet.instances
+    );
     Ok(())
 }

@@ -8,12 +8,14 @@ use crate::util::Prng;
 
 /// A generation context: PRNG + size budget.
 pub struct Gen {
+    /// Seeded random source.
     pub rng: Prng,
     /// Current size budget (grows across cases).
     pub size: usize,
 }
 
 impl Gen {
+    /// A context with the given seed and size budget.
     pub fn new(seed: u64, size: usize) -> Gen {
         Gen {
             rng: Prng::new(seed),
@@ -47,10 +49,13 @@ impl Gen {
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {
+    /// Number of cases to run.
     pub cases: usize,
+    /// Base seed.
     pub seed: u64,
     /// Size budget starts here and ramps to `max_size`.
     pub min_size: usize,
+    /// Size budget ceiling.
     pub max_size: usize,
 }
 

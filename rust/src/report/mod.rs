@@ -5,12 +5,16 @@
 /// A simple column-aligned text table.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows, each with `headers.len()` cells.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with a caption and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -19,6 +23,7 @@ impl Table {
         }
     }
 
+    /// Append one row; arity must match the headers.
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
@@ -54,6 +59,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout with a trailing blank line.
     pub fn print(&self) {
         print!("{}", self.render());
         println!();
@@ -116,21 +122,25 @@ pub mod json {
     }
 
     impl JsonObj {
+        /// An empty object.
         pub fn new() -> JsonObj {
             JsonObj { fields: Vec::new() }
         }
 
+        /// Append a string field (escaped).
         pub fn str(mut self, key: &str, value: &str) -> JsonObj {
             self.fields
                 .push(format!("\"{}\": \"{}\"", escape(key), escape(value)));
             self
         }
 
+        /// Append an unsigned integer field.
         pub fn int(mut self, key: &str, value: u64) -> JsonObj {
             self.fields.push(format!("\"{}\": {value}", escape(key)));
             self
         }
 
+        /// Append a float field (`null` for non-finite values).
         pub fn num(mut self, key: &str, value: f64) -> JsonObj {
             let v = if value.is_finite() {
                 format!("{value}")
@@ -147,6 +157,7 @@ pub mod json {
             self
         }
 
+        /// Render the object literal.
         pub fn render(&self) -> String {
             format!("{{{}}}", self.fields.join(", "))
         }

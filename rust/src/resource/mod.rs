@@ -19,17 +19,26 @@ use crate::util::{ceil_div, ceil_log2};
 
 /// XC7VX690T device capacities.
 pub const VC709_DSP: usize = 3600;
+/// BRAM36 blocks on the XC7VX690T.
 pub const VC709_BRAM36: usize = 1470;
+/// Flip-flops on the XC7VX690T.
 pub const VC709_FF: usize = 866_400;
+/// LUTs on the XC7VX690T.
 pub const VC709_LUT: usize = 433_200;
 
 /// Calibrated per-unit costs (see module docs).
 pub const FF_PER_PE: usize = 270;
+/// FFs per adder-tree adder.
 pub const FF_PER_ADDER: usize = 64;
+/// Fixed FF control overhead.
 pub const FF_CONTROL: usize = 5030;
+/// LUTs per PE.
 pub const LUT_PER_PE: usize = 135;
+/// LUTs per adder-tree adder.
 pub const LUT_PER_ADDER: usize = 96;
+/// Fixed LUT control overhead.
 pub const LUT_CONTROL: usize = 3524;
+/// BRAM36 blocks for the memory-controller FIFOs.
 pub const BRAM_MISC: usize = 28;
 /// Bytes per BRAM36 (36 Kbit).
 pub const BRAM36_BYTES: usize = 4608;
@@ -37,9 +46,13 @@ pub const BRAM36_BYTES: usize = 4608;
 /// A resource estimate for one configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ResourceEstimate {
+    /// DSP48E slices.
     pub dsp: usize,
+    /// BRAM36 blocks.
     pub bram36: usize,
+    /// Flip-flops.
     pub ff: usize,
+    /// LUTs.
     pub lut: usize,
 }
 

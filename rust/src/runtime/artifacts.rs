@@ -12,6 +12,7 @@ pub const ARTIFACTS_DIR_ENV: &str = "UDCNN_ARTIFACTS";
 /// The set of compiled-model artifacts on disk.
 #[derive(Clone, Debug, Default)]
 pub struct ArtifactSet {
+    /// Directory the artifacts were discovered in.
     pub dir: PathBuf,
     /// artifact name (file stem, e.g. `dcgan`) → path
     pub entries: BTreeMap<String, PathBuf>,
@@ -52,14 +53,17 @@ impl ArtifactSet {
         Self::discover(Self::default_dir())
     }
 
+    /// Path of the artifact named `name`, if present.
     pub fn get(&self, name: &str) -> Option<&PathBuf> {
         self.entries.get(name)
     }
 
+    /// Sorted artifact names.
     pub fn names(&self) -> Vec<&str> {
         self.entries.keys().map(|s| s.as_str()).collect()
     }
 
+    /// Whether no artifacts were found.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

@@ -12,6 +12,7 @@ pub struct Runtime {
 /// A compiled executable plus its input arity.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (file stem).
     pub name: String,
 }
 
@@ -22,10 +23,12 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Number of PJRT devices.
     pub fn device_count(&self) -> usize {
         self.client.device_count()
     }

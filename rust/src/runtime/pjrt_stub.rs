@@ -19,6 +19,7 @@ pub struct Runtime {
 
 /// Stub stand-in for a compiled executable.
 pub struct Executable {
+    /// Artifact name (file stem).
     pub name: String,
 }
 
@@ -28,20 +29,24 @@ impl Runtime {
         bail!("{UNAVAILABLE}")
     }
 
+    /// Stub platform name (`"stub"`).
     pub fn platform(&self) -> String {
         "stub".to_string()
     }
 
+    /// Always 0: the stub has no devices.
     pub fn device_count(&self) -> usize {
         0
     }
 
+    /// Always fails: the `xla` crate is not available in this build.
     pub fn load_hlo_text(&self, _path: impl AsRef<Path>) -> Result<Executable> {
         bail!("{UNAVAILABLE}")
     }
 }
 
 impl Executable {
+    /// Always fails: the `xla` crate is not available in this build.
     pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
         bail!("{UNAVAILABLE}")
     }

@@ -1,0 +1,161 @@
+//! The fleet-wide plan cache: compile once per (model, config), serve
+//! everywhere.
+//!
+//! Compiling a [`crate::graph::NetworkPlan`] (graph build, pass
+//! pipeline, per-node schedules, buffer-reuse analysis) is the
+//! expensive per-model step of bringing a network online. A fleet of N
+//! instances serving the same model must not pay it N times — and a
+//! service re-batching at a handful of distinct batch sizes must not
+//! pay it per request. [`PlanCache`] keys compiled plans by
+//! `<network>@<config fingerprint>` (see
+//! [`crate::accel::AccelConfig::fingerprint`]) and hands out shared
+//! [`PlanHandle`]s, so every instance hosting a model executes the
+//! *same* compiled artifact.
+//!
+//! The cache never evicts: the key space is tiny (models × distinct
+//! batch sizes) and eviction-free behaviour keeps repeated runs
+//! byte-for-byte deterministic, which the serving harness relies on.
+
+use std::collections::BTreeMap;
+
+use crate::accel::AccelConfig;
+use crate::dcnn::Network;
+use crate::graph::{compile_network, PlanHandle};
+
+/// Hit/miss counters of a [`PlanCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to run the graph compiler.
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served without compiling (0.0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Compiled-plan cache keyed by `(network, accelerator config)`.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    plans: BTreeMap<String, PlanHandle>,
+    stats: CacheStats,
+}
+
+impl PlanCache {
+    /// An empty cache.
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The cache key for a network under a configuration (delegates
+    /// to the canonical [`crate::graph::plan::cache_key_for`]).
+    pub fn key(network: &str, cfg: &AccelConfig) -> String {
+        crate::graph::plan::cache_key_for(network, cfg)
+    }
+
+    /// Look up the compiled plan for `net` under `cfg`, compiling (and
+    /// retaining) it on first use. Compilation errors are not cached:
+    /// a failing (network, config) pair errors on every call.
+    pub fn get_or_compile(
+        &mut self,
+        cfg: &AccelConfig,
+        net: &Network,
+    ) -> Result<PlanHandle, String> {
+        let key = PlanCache::key(net.name, cfg);
+        if let Some(plan) = self.plans.get(&key) {
+            self.stats.hits += 1;
+            return Ok(PlanHandle::clone(plan));
+        }
+        let plan = PlanHandle::new(compile_network(cfg, net)?);
+        self.stats.misses += 1;
+        self.plans.insert(key, PlanHandle::clone(&plan));
+        Ok(plan)
+    }
+
+    /// Number of distinct compiled plans held.
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Whether the cache holds no plans yet.
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// Hit/miss counters so far.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn first_lookup_misses_second_hits() {
+        let mut c = PlanCache::new();
+        let net = zoo::tiny_2d();
+        let cfg = AccelConfig::paper_for(net.dims);
+        let a = c.get_or_compile(&cfg, &net).unwrap();
+        assert_eq!(c.stats(), CacheStats { hits: 0, misses: 1 });
+        let b = c.get_or_compile(&cfg, &net).unwrap();
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1 });
+        assert!(PlanHandle::ptr_eq(&a, &b), "hit returns the same plan");
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn distinct_batch_sizes_are_distinct_entries() {
+        let mut c = PlanCache::new();
+        let net = zoo::tiny_2d();
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        c.get_or_compile(&cfg, &net).unwrap();
+        cfg.batch = 2;
+        c.get_or_compile(&cfg, &net).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().misses, 2);
+    }
+
+    #[test]
+    fn distinct_models_are_distinct_entries() {
+        let mut c = PlanCache::new();
+        let n2 = zoo::tiny_2d();
+        let n3 = zoo::tiny_3d();
+        c.get_or_compile(&AccelConfig::paper_for(n2.dims), &n2).unwrap();
+        c.get_or_compile(&AccelConfig::paper_for(n3.dims), &n3).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn key_matches_plan_cache_key() {
+        let mut c = PlanCache::new();
+        let net = zoo::tiny_3d();
+        let cfg = AccelConfig::paper_for(net.dims);
+        let plan = c.get_or_compile(&cfg, &net).unwrap();
+        assert_eq!(plan.cache_key(), PlanCache::key(net.name, &cfg));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        // Two independent caches compile byte-identical plans for the
+        // same key (the determinism the serving harness depends on).
+        let net = zoo::tiny_2d();
+        let cfg = AccelConfig::paper_for(net.dims);
+        let a = PlanCache::new().get_or_compile(&cfg, &net).unwrap();
+        let b = PlanCache::new().get_or_compile(&cfg, &net).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+        assert_eq!(a.total_dram_bytes(), b.total_dram_bytes());
+    }
+}

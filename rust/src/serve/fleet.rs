@@ -1,0 +1,579 @@
+//! The fleet: shard-scheduled serving across N simulated instances.
+//!
+//! A [`Fleet`] owns a set of registered models, a pool of
+//! [`Instance`]s, and one fleet-wide [`PlanCache`]. [`Fleet::run`]
+//! replays an open-loop workload (see
+//! [`crate::serve::poisson_arrivals`]) through a deterministic
+//! discrete-event loop in *simulated* time:
+//!
+//! 1. **Batching** — per-model queues close a batch when it reaches
+//!    `max_batch` or when the oldest request has waited `max_wait`,
+//!    the same [`BatchPolicy`] contract as the live
+//!    [`crate::coordinator::Batcher`], transplanted from wall-clock
+//!    into simulated time.
+//! 2. **Shard scheduling** — each closed batch is routed to the
+//!    least-loaded instance hosting the model (smallest simulated
+//!    backlog; ties break on instance id), generalizing the
+//!    [`crate::coordinator::Router`]'s model→queue map to a
+//!    model→*set-of-instances* map with per-instance load.
+//! 3. **Admission control** — a request whose best-case queueing delay
+//!    already exceeds the latency budget is shed at arrival instead of
+//!    poisoning the tail.
+//!
+//! Batch execution time comes from [`crate::graph::simulate_plan`] on
+//! the cached compiled plan at the actual batch size, so the reported
+//! p50/p95/p99 and throughput are the numbers a rack of real VC709s
+//! running the paper's architecture would produce. Everything —
+//! arrivals, routing, batching — is deterministic: the same workload
+//! against the same options yields a byte-identical report.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::accel::AccelConfig;
+use crate::coordinator::BatchPolicy;
+use crate::dcnn::Network;
+use crate::graph::simulate_plan;
+use crate::report::json::{array, JsonObj};
+
+use super::cache::{CacheStats, PlanCache};
+use super::instance::{Instance, InstanceStats};
+use super::loadgen::{Arrival, LatencySummary};
+
+/// Configuration of a [`Fleet`].
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// Number of simulated accelerator instances.
+    pub instances: usize,
+    /// Batch-closing policy, shared with the live coordinator.
+    pub policy: BatchPolicy,
+    /// Admission control: shed a request whose best-case queueing
+    /// delay (smallest backlog among instances hosting its model)
+    /// already exceeds this. `f64::INFINITY` disables shedding.
+    pub latency_budget_s: f64,
+    /// When `true`, models are sharded round-robin across instances
+    /// (instance *i* hosts model *i mod M*) instead of every instance
+    /// replicating every model. Sharding keeps each board's weight
+    /// working set smaller at the cost of routing freedom.
+    pub shard_models: bool,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            instances: 1,
+            policy: BatchPolicy::default(),
+            latency_budget_s: f64::INFINITY,
+            shard_models: false,
+        }
+    }
+}
+
+/// Result of replaying one workload through a [`Fleet`].
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Instance count the workload ran against.
+    pub instances: usize,
+    /// Requests offered by the workload.
+    pub offered: u64,
+    /// Requests served to completion.
+    pub served: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// Batches executed across all instances.
+    pub batches: u64,
+    /// Latency percentiles over served requests (arrival → completion).
+    pub latency: LatencySummary,
+    /// Served requests per second of makespan.
+    pub throughput_rps: f64,
+    /// First arrival to last completion, simulated seconds.
+    pub makespan_s: f64,
+    /// Served-request counts per model.
+    pub per_model: BTreeMap<String, u64>,
+    /// Lifetime counters of each instance, by instance id.
+    pub per_instance: Vec<InstanceStats>,
+    /// Plan-cache hit/miss counters accumulated by the run.
+    pub cache: CacheStats,
+}
+
+impl FleetReport {
+    /// Mean batch size over the run (0.0 when nothing was served).
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+
+    /// Human-readable summary (the `udcnn serve` text output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "=== fleet: {} instance(s) | offered {} | served {} | shed {} ===\n",
+            self.instances, self.offered, self.served, self.shed
+        );
+        out.push_str(&format!(
+            "throughput: {:.1} req/s over {:.3} s makespan | {} batches (avg {:.2})\n",
+            self.throughput_rps,
+            self.makespan_s,
+            self.batches,
+            self.avg_batch()
+        ));
+        out.push_str(&format!(
+            "latency: p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms | max {:.3} ms\n",
+            self.latency.p50_ms,
+            self.latency.p95_ms,
+            self.latency.p99_ms,
+            self.latency.mean_ms,
+            self.latency.max_ms
+        ));
+        out.push_str(&format!(
+            "plan cache: {} hits / {} misses ({:.1}% hit rate)\n",
+            self.cache.hits,
+            self.cache.misses,
+            100.0 * self.cache.hit_rate()
+        ));
+        for (model, n) in &self.per_model {
+            out.push_str(&format!("  model {model}: {n} served\n"));
+        }
+        for (id, s) in self.per_instance.iter().enumerate() {
+            let util = if self.makespan_s > 0.0 {
+                100.0 * s.busy_s / self.makespan_s
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "  instance {id}: {} batches | {} requests | busy {:.3} s ({util:.1}%)\n",
+                s.batches, s.requests, s.busy_s
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable export (the `udcnn serve --json` output and
+    /// the shape `BENCH_serving.json` embeds).
+    pub fn to_json(&self) -> String {
+        let per_model: Vec<String> = self
+            .per_model
+            .iter()
+            .map(|(m, n)| JsonObj::new().str("model", m).int("served", *n).render())
+            .collect();
+        let per_instance: Vec<String> = self
+            .per_instance
+            .iter()
+            .enumerate()
+            .map(|(id, s)| {
+                JsonObj::new()
+                    .int("instance", id as u64)
+                    .int("batches", s.batches)
+                    .int("requests", s.requests)
+                    .num("busy_s", s.busy_s)
+                    .render()
+            })
+            .collect();
+        JsonObj::new()
+            .int("instances", self.instances as u64)
+            .int("offered", self.offered)
+            .int("served", self.served)
+            .int("shed", self.shed)
+            .int("batches", self.batches)
+            .num("avg_batch", self.avg_batch())
+            .num("throughput_rps", self.throughput_rps)
+            .num("makespan_s", self.makespan_s)
+            .num("p50_ms", self.latency.p50_ms)
+            .num("p95_ms", self.latency.p95_ms)
+            .num("p99_ms", self.latency.p99_ms)
+            .num("mean_ms", self.latency.mean_ms)
+            .num("max_ms", self.latency.max_ms)
+            .int("cache_hits", self.cache.hits)
+            .int("cache_misses", self.cache.misses)
+            .raw("per_model", &array(&per_model))
+            .raw("per_instance", &array(&per_instance))
+            .render()
+    }
+}
+
+/// Running tallies of one [`Fleet::run`] replay.
+#[derive(Default)]
+struct RunAccum {
+    latencies: Vec<f64>,
+    shed: u64,
+    batches: u64,
+    per_model: BTreeMap<String, u64>,
+    last_done_s: f64,
+}
+
+/// A fleet of simulated accelerator instances behind one front door.
+#[derive(Debug)]
+pub struct Fleet {
+    networks: BTreeMap<String, Network>,
+    instances: Vec<Instance>,
+    cache: PlanCache,
+    /// Memoized `simulate_plan(..).time_s()` per plan-cache key, so
+    /// the event loop's hot path never re-simulates a plan it has
+    /// already timed (the result is deterministic per key).
+    sim_memo_s: BTreeMap<String, f64>,
+    opts: FleetOptions,
+}
+
+impl Fleet {
+    /// Bring a fleet online: register `networks`, create the
+    /// instances, and warm the plan cache at the policy's full batch
+    /// size so per-model compilation cost is paid once, up front.
+    ///
+    /// Errors on an empty model list, zero instances, a duplicate
+    /// model name, or a network the graph compiler rejects.
+    pub fn new(networks: Vec<Network>, opts: FleetOptions) -> Result<Fleet, String> {
+        if networks.is_empty() {
+            return Err("fleet needs at least one network".into());
+        }
+        if opts.instances == 0 {
+            return Err("fleet needs at least one instance".into());
+        }
+        if opts.policy.max_batch == 0 {
+            return Err("max_batch must be positive".into());
+        }
+        let mut map: BTreeMap<String, Network> = BTreeMap::new();
+        for net in networks {
+            if map.insert(net.name.to_string(), net.clone()).is_some() {
+                return Err(format!("model '{}' registered twice", net.name));
+            }
+        }
+        let names: Vec<String> = map.keys().cloned().collect();
+        if opts.shard_models && opts.instances < names.len() {
+            return Err(format!(
+                "sharding {} models needs at least {} instances (got {})",
+                names.len(),
+                names.len(),
+                opts.instances
+            ));
+        }
+        let instances = (0..opts.instances)
+            .map(|id| {
+                let hosted = if opts.shard_models {
+                    vec![names[id % names.len()].clone()]
+                } else {
+                    Vec::new() // empty = hosts every model
+                };
+                Instance::new(id, hosted)
+            })
+            .collect();
+        let max_batch = opts.policy.max_batch;
+        let mut fleet = Fleet {
+            networks: map,
+            instances,
+            cache: PlanCache::new(),
+            sim_memo_s: BTreeMap::new(),
+            opts,
+        };
+        for name in &names {
+            fleet.batch_latency_s(name, max_batch)?;
+        }
+        Ok(fleet)
+    }
+
+    /// The instances, by id.
+    pub fn instances(&self) -> &[Instance] {
+        &self.instances
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<&str> {
+        self.networks.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// The options the fleet was built with.
+    pub fn options(&self) -> &FleetOptions {
+        &self.opts
+    }
+
+    /// Plan-cache counters so far.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Simulated accelerator seconds for one batch of `bsize` requests
+    /// against `model`: the cached compiled plan at that batch size,
+    /// executed by [`simulate_plan`]. Compiles on first use.
+    pub fn batch_latency_s(&mut self, model: &str, bsize: usize) -> Result<f64, String> {
+        let net = self
+            .networks
+            .get(model)
+            .ok_or_else(|| format!("unknown model '{model}'"))?;
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        cfg.batch = bsize.max(1);
+        let plan = self.cache.get_or_compile(&cfg, net)?;
+        let key = plan.cache_key();
+        if let Some(&lat) = self.sim_memo_s.get(&key) {
+            return Ok(lat);
+        }
+        let lat = simulate_plan(&plan).time_s();
+        self.sim_memo_s.insert(key, lat);
+        Ok(lat)
+    }
+
+    /// Smallest backlog among instances hosting `model` at `now_s`
+    /// (`f64::INFINITY` when no instance hosts it).
+    fn min_backlog_s(&self, model: &str, now_s: f64) -> f64 {
+        self.instances
+            .iter()
+            .filter(|i| i.supports(model))
+            .map(|i| i.backlog_s(now_s))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Index of the least-loaded instance hosting `model` (smallest
+    /// `busy_until_s`, ties to the lowest id).
+    fn least_loaded(&self, model: &str) -> Option<usize> {
+        self.instances
+            .iter()
+            .filter(|i| i.supports(model))
+            .min_by(|a, b| {
+                a.busy_until_s
+                    .partial_cmp(&b.busy_until_s)
+                    .expect("backlog is never NaN")
+                    .then(a.id.cmp(&b.id))
+            })
+            .map(|i| i.id)
+    }
+
+    /// Close a batch for `model` at simulated `now_s`: take up to
+    /// `max_batch` oldest pending requests, route them to the
+    /// least-loaded hosting instance, and record per-request latency.
+    fn dispatch(
+        &mut self,
+        model: &str,
+        now_s: f64,
+        pending: &mut BTreeMap<String, VecDeque<f64>>,
+        acc: &mut RunAccum,
+    ) -> Result<(), String> {
+        let max_batch = self.opts.policy.max_batch;
+        let q = pending.get_mut(model).expect("dispatch without a queue");
+        let bsize = q.len().min(max_batch);
+        debug_assert!(bsize > 0, "dispatch of an empty batch");
+        let submitted: Vec<f64> = q.drain(..bsize).collect();
+        let latency = self.batch_latency_s(model, bsize)?;
+        let idx = self
+            .least_loaded(model)
+            .ok_or_else(|| format!("no instance hosts '{model}'"))?;
+        let done = self.instances[idx].run_batch(now_s, bsize, latency);
+        for t0 in submitted {
+            acc.latencies.push(done - t0);
+        }
+        acc.batches += 1;
+        *acc.per_model.entry(model.to_string()).or_insert(0) += bsize as u64;
+        acc.last_done_s = acc.last_done_s.max(done);
+        Ok(())
+    }
+
+    /// Dispatch every pending batch whose `max_wait` deadline falls at
+    /// or before `until_s`, in deadline order (ties on model name).
+    fn flush_due(
+        &mut self,
+        until_s: f64,
+        pending: &mut BTreeMap<String, VecDeque<f64>>,
+        acc: &mut RunAccum,
+    ) -> Result<(), String> {
+        let max_wait = self.opts.policy.max_wait.as_secs_f64();
+        loop {
+            let next = pending
+                .iter()
+                .filter_map(|(m, q)| q.front().map(|&t0| (t0 + max_wait, m.clone())))
+                .min_by(|a, b| {
+                    a.0.partial_cmp(&b.0)
+                        .expect("deadlines are never NaN")
+                        .then_with(|| a.1.cmp(&b.1))
+                });
+            match next {
+                Some((deadline, model)) if deadline <= until_s => {
+                    self.dispatch(&model, deadline, pending, acc)?;
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    /// Replay an open-loop workload through the fleet and report
+    /// latency percentiles, throughput, shed counts and per-instance
+    /// utilization. `arrivals` must be sorted by arrival time (as
+    /// [`crate::serve::poisson_arrivals`] produces them) and may only
+    /// reference registered models. Deterministic: equal inputs yield
+    /// a byte-identical report.
+    pub fn run(&mut self, arrivals: &[Arrival]) -> Result<FleetReport, String> {
+        let budget = self.opts.latency_budget_s;
+        let max_batch = self.opts.policy.max_batch;
+        let mut pending: BTreeMap<String, VecDeque<f64>> = BTreeMap::new();
+        let mut acc = RunAccum::default();
+
+        for a in arrivals {
+            if !self.networks.contains_key(&a.model) {
+                return Err(format!("unknown model '{}' in workload", a.model));
+            }
+            // close every batch that timed out before this arrival
+            self.flush_due(a.t_s, &mut pending, &mut acc)?;
+            // admission control: shed if even the best instance cannot
+            // start this request inside the latency budget
+            if self.min_backlog_s(&a.model, a.t_s) > budget {
+                acc.shed += 1;
+                continue;
+            }
+            let q = pending.entry(a.model.clone()).or_default();
+            q.push_back(a.t_s);
+            if q.len() >= max_batch {
+                self.dispatch(&a.model, a.t_s, &mut pending, &mut acc)?;
+            }
+        }
+        // drain the stragglers at their deadlines
+        self.flush_due(f64::INFINITY, &mut pending, &mut acc)?;
+
+        let first_arrival = arrivals.first().map(|a| a.t_s).unwrap_or(0.0);
+        let makespan = (acc.last_done_s - first_arrival).max(0.0);
+        let served = acc.latencies.len() as u64;
+        Ok(FleetReport {
+            instances: self.instances.len(),
+            offered: arrivals.len() as u64,
+            served,
+            shed: acc.shed,
+            batches: acc.batches,
+            latency: LatencySummary::from_latencies_s(&acc.latencies),
+            throughput_rps: if makespan > 0.0 {
+                served as f64 / makespan
+            } else {
+                0.0
+            },
+            makespan_s: makespan,
+            per_model: acc.per_model,
+            per_instance: self.instances.iter().map(|i| i.stats()).collect(),
+            cache: self.cache.stats(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+    use crate::serve::loadgen::poisson_arrivals;
+
+    fn burst_workload(n: usize) -> Vec<Arrival> {
+        // effectively-simultaneous arrivals: saturates any fleet size
+        poisson_arrivals(0xF1EE7, 1e9, n, &["tiny-2d", "tiny-3d"])
+    }
+
+    fn fleet(instances: usize) -> Fleet {
+        Fleet::new(
+            vec![zoo::tiny_2d(), zoo::tiny_3d()],
+            FleetOptions {
+                instances,
+                ..FleetOptions::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn four_instances_scale_throughput() {
+        let work = burst_workload(512);
+        let r1 = fleet(1).run(&work).unwrap();
+        let r4 = fleet(4).run(&work).unwrap();
+        assert_eq!(r1.served, 512);
+        assert_eq!(r4.served, 512);
+        let speedup = r4.throughput_rps / r1.throughput_rps;
+        assert!(
+            speedup >= 3.5,
+            "4 instances gave only {speedup:.2}x over one"
+        );
+        assert!(r4.latency.p99_ms > 0.0);
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let work = burst_workload(128);
+        let a = fleet(3).run(&work).unwrap();
+        let b = fleet(3).run(&work).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn admission_control_sheds_past_budget() {
+        let work = burst_workload(256);
+        let mut f = Fleet::new(
+            vec![zoo::tiny_2d(), zoo::tiny_3d()],
+            FleetOptions {
+                instances: 1,
+                latency_budget_s: 0.0,
+                ..FleetOptions::default()
+            },
+        )
+        .unwrap();
+        let r = f.run(&work).unwrap();
+        assert!(r.shed > 0, "zero budget must shed under a burst");
+        assert_eq!(r.served + r.shed, r.offered);
+        // shedding keeps the tail bounded vs. the unlimited queue
+        let unlimited = fleet(1).run(&work).unwrap();
+        assert!(r.latency.p99_ms <= unlimited.latency.p99_ms);
+    }
+
+    #[test]
+    fn least_loaded_routing_uses_every_instance() {
+        let work = burst_workload(256);
+        let r = fleet(4).run(&work).unwrap();
+        for (id, s) in r.per_instance.iter().enumerate() {
+            assert!(s.batches > 0, "instance {id} never used");
+        }
+    }
+
+    #[test]
+    fn sharded_models_stay_on_their_instances() {
+        let work = burst_workload(256);
+        let mut f = Fleet::new(
+            vec![zoo::tiny_2d(), zoo::tiny_3d()],
+            FleetOptions {
+                instances: 2,
+                shard_models: true,
+                ..FleetOptions::default()
+            },
+        )
+        .unwrap();
+        assert!(f.instances()[0].supports("tiny-2d"));
+        assert!(!f.instances()[0].supports("tiny-3d"));
+        assert!(f.instances()[1].supports("tiny-3d"));
+        let r = f.run(&work).unwrap();
+        assert_eq!(r.served, 256);
+    }
+
+    #[test]
+    fn cache_compiles_once_per_model_and_batch_size() {
+        let work = burst_workload(512);
+        let mut f = fleet(2);
+        let r = f.run(&work).unwrap();
+        // a burst at max_batch=8 should mostly see full batches: very
+        // few distinct batch sizes, so misses stay tiny while hits grow
+        assert!(r.cache.misses <= 2 * 8, "misses: {}", r.cache.misses);
+        assert!(r.cache.hits > r.cache.misses, "{:?}", r.cache);
+    }
+
+    #[test]
+    fn rejects_bad_configurations() {
+        assert!(Fleet::new(vec![], FleetOptions::default()).is_err());
+        assert!(Fleet::new(
+            vec![zoo::tiny_2d()],
+            FleetOptions {
+                instances: 0,
+                ..FleetOptions::default()
+            }
+        )
+        .is_err());
+        assert!(Fleet::new(
+            vec![zoo::tiny_2d(), zoo::tiny_2d()],
+            FleetOptions::default()
+        )
+        .is_err());
+        let mut f = fleet(1);
+        assert!(f
+            .run(&[Arrival {
+                t_s: 0.0,
+                model: "nope".into()
+            }])
+            .is_err());
+    }
+}

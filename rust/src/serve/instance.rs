@@ -1,0 +1,149 @@
+//! One simulated accelerator instance of the fleet.
+//!
+//! An [`Instance`] models a single VC709-class board running the
+//! paper's uniform bitstream: it owns the set of models it can serve
+//! (each bound to a compiled-plan handle from the fleet's
+//! [`crate::serve::PlanCache`]) and a one-deep execution pipeline in
+//! *simulated* time — batches execute back-to-back, so the instance's
+//! state is simply the simulated timestamp at which its queue drains
+//! (`busy_until_s`) plus the set of in-flight batches used for
+//! queue-depth tracking. The shard scheduler reads
+//! [`Instance::backlog_s`] / [`Instance::queue_depth`] to route each
+//! batch to the least-loaded board and to shed load past the latency
+//! budget.
+
+use std::collections::VecDeque;
+
+/// Lifetime counters of one instance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InstanceStats {
+    /// Batches executed.
+    pub batches: u64,
+    /// Requests served (sum of batch sizes).
+    pub requests: u64,
+    /// Simulated seconds spent executing batches.
+    pub busy_s: f64,
+}
+
+/// One simulated accelerator instance.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    /// Fleet-wide instance id (also the routing tie-breaker).
+    pub id: usize,
+    /// Models this instance hosts. An empty list means "all models" —
+    /// the fleet's default replication policy.
+    pub models: Vec<String>,
+    /// Simulated time at which every accepted batch has completed.
+    pub busy_until_s: f64,
+    /// In-flight batches as `(completion time, batch size)`, oldest
+    /// first; pruned as simulated time advances.
+    inflight: VecDeque<(f64, usize)>,
+    stats: InstanceStats,
+}
+
+impl Instance {
+    /// A fresh, idle instance. `models` lists the networks it hosts;
+    /// pass an empty vec to host every registered model.
+    pub fn new(id: usize, models: Vec<String>) -> Instance {
+        Instance {
+            id,
+            models,
+            busy_until_s: 0.0,
+            inflight: VecDeque::new(),
+            stats: InstanceStats::default(),
+        }
+    }
+
+    /// Whether this instance hosts `model`.
+    pub fn supports(&self, model: &str) -> bool {
+        self.models.is_empty() || self.models.iter().any(|m| m == model)
+    }
+
+    /// Seconds of work already queued ahead of a batch arriving at
+    /// simulated time `now_s` (0.0 when idle).
+    pub fn backlog_s(&self, now_s: f64) -> f64 {
+        (self.busy_until_s - now_s).max(0.0)
+    }
+
+    /// Requests admitted but not yet completed at simulated `now_s`.
+    pub fn queue_depth(&mut self, now_s: f64) -> usize {
+        self.prune(now_s);
+        self.inflight.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// Execute a batch of `bsize` requests taking `latency_s` of
+    /// accelerator time, submitted at simulated `now_s`. The batch
+    /// starts when the instance frees up; returns its completion time.
+    pub fn run_batch(&mut self, now_s: f64, bsize: usize, latency_s: f64) -> f64 {
+        self.prune(now_s);
+        let start = self.busy_until_s.max(now_s);
+        let done = start + latency_s;
+        self.busy_until_s = done;
+        self.inflight.push_back((done, bsize));
+        self.stats.batches += 1;
+        self.stats.requests += bsize as u64;
+        self.stats.busy_s += latency_s;
+        done
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> InstanceStats {
+        self.stats
+    }
+
+    /// Drop in-flight records whose completion time has passed.
+    fn prune(&mut self, now_s: f64) {
+        while matches!(self.inflight.front(), Some(&(done, _)) if done <= now_s) {
+            self.inflight.pop_front();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_model_list_hosts_everything() {
+        let i = Instance::new(0, vec![]);
+        assert!(i.supports("dcgan"));
+        assert!(i.supports("anything"));
+        let j = Instance::new(1, vec!["dcgan".into()]);
+        assert!(j.supports("dcgan"));
+        assert!(!j.supports("v-net"));
+    }
+
+    #[test]
+    fn batches_serialize_on_one_instance() {
+        let mut i = Instance::new(0, vec![]);
+        let d1 = i.run_batch(0.0, 4, 0.010);
+        assert!((d1 - 0.010).abs() < 1e-12);
+        // submitted while busy: starts when the first batch drains
+        let d2 = i.run_batch(0.001, 4, 0.010);
+        assert!((d2 - 0.020).abs() < 1e-12);
+        assert!((i.backlog_s(0.001) - 0.019).abs() < 1e-12);
+        assert_eq!(i.stats().batches, 2);
+        assert_eq!(i.stats().requests, 8);
+        assert!((i.stats().busy_s - 0.020).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_gap_resets_start_time() {
+        let mut i = Instance::new(0, vec![]);
+        i.run_batch(0.0, 1, 0.010);
+        // long idle gap: the next batch starts at its submit time
+        let done = i.run_batch(5.0, 1, 0.010);
+        assert!((done - 5.010).abs() < 1e-12);
+        assert_eq!(i.backlog_s(10.0), 0.0);
+    }
+
+    #[test]
+    fn queue_depth_tracks_inflight_requests() {
+        let mut i = Instance::new(0, vec![]);
+        i.run_batch(0.0, 4, 0.010);
+        i.run_batch(0.0, 2, 0.010);
+        assert_eq!(i.queue_depth(0.005), 6);
+        assert_eq!(i.queue_depth(0.015), 2, "first batch completed");
+        assert_eq!(i.queue_depth(0.025), 0, "all drained");
+    }
+}

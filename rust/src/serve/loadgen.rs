@@ -1,0 +1,132 @@
+//! Deterministic open-loop load generation and latency summaries.
+//!
+//! The serving harness drives the fleet with an *open-loop* arrival
+//! process: request timestamps are drawn up front from a seeded
+//! exponential inter-arrival distribution (a Poisson process of rate
+//! `rps`), independent of how fast the fleet drains them. Open-loop is
+//! the honest way to measure a service — a closed loop would slow its
+//! own offered load down exactly when the system congests, hiding the
+//! tail latencies the p99 column exists to expose. Everything is
+//! seeded through [`crate::util::prng::Prng`], so a (seed, rps, n,
+//! models) tuple always produces the identical workload.
+
+use crate::util::prng::Prng;
+use crate::util::stats;
+
+/// One generated request: a model invocation at a simulated timestamp.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arrival {
+    /// Simulated arrival time in seconds since the run started.
+    pub t_s: f64,
+    /// Model (network) name the request targets.
+    pub model: String,
+}
+
+/// Draw `n` Poisson arrivals at `rps` requests/second, each targeting
+/// a uniformly chosen model from `models`. Deterministic in `seed`.
+///
+/// Inter-arrival gaps are exponential: `-ln(1 - u) / rps` for uniform
+/// `u` — the textbook inverse-CDF draw, safe because
+/// [`Prng::f64`] is in `[0, 1)` so the argument of `ln` never hits 0.
+///
+/// # Panics
+/// Panics if `models` is empty or `rps` is not positive.
+pub fn poisson_arrivals(seed: u64, rps: f64, n: usize, models: &[&str]) -> Vec<Arrival> {
+    assert!(!models.is_empty(), "need at least one model");
+    assert!(rps > 0.0, "arrival rate must be positive");
+    let mut rng = Prng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += -(1.0 - rng.f64()).ln() / rps;
+        let model = models[rng.below(models.len())].to_string();
+        out.push(Arrival { t_s: t, model });
+    }
+    out
+}
+
+/// Latency percentiles of one serving run (milliseconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    /// Median request latency.
+    pub p50_ms: f64,
+    /// 95th-percentile request latency.
+    pub p95_ms: f64,
+    /// 99th-percentile request latency.
+    pub p99_ms: f64,
+    /// Mean request latency.
+    pub mean_ms: f64,
+    /// Worst request latency.
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    /// Summarize per-request latencies given in seconds. Returns the
+    /// all-zero summary for an empty slice (nothing was served).
+    pub fn from_latencies_s(xs: &[f64]) -> LatencySummary {
+        if xs.is_empty() {
+            return LatencySummary::default();
+        }
+        LatencySummary {
+            p50_ms: stats::percentile(xs, 50.0) * 1e3,
+            p95_ms: stats::percentile(xs, 95.0) * 1e3,
+            p99_ms: stats::percentile(xs, 99.0) * 1e3,
+            mean_ms: stats::mean(xs) * 1e3,
+            max_ms: xs.iter().copied().fold(f64::MIN, f64::max) * 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_deterministic_and_ordered() {
+        let a = poisson_arrivals(42, 100.0, 200, &["a", "b"]);
+        let b = poisson_arrivals(42, 100.0, 200, &["a", "b"]);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+        assert!(a.iter().all(|x| x.t_s > 0.0));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = poisson_arrivals(1, 100.0, 50, &["m"]);
+        let b = poisson_arrivals(2, 100.0, 50, &["m"]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mean_rate_roughly_matches() {
+        let rps = 250.0;
+        let n = 4000;
+        let a = poisson_arrivals(7, rps, n, &["m"]);
+        let span = a.last().unwrap().t_s;
+        let observed = n as f64 / span;
+        assert!(
+            (observed - rps).abs() / rps < 0.1,
+            "observed {observed:.1} rps vs {rps}"
+        );
+    }
+
+    #[test]
+    fn models_all_appear() {
+        let a = poisson_arrivals(3, 100.0, 300, &["x", "y", "z"]);
+        for m in ["x", "y", "z"] {
+            assert!(a.iter().any(|r| r.model == m), "{m} never drawn");
+        }
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
+        let s = LatencySummary::from_latencies_s(&xs);
+        assert!((s.p50_ms - 50.5).abs() < 1.0);
+        assert!(s.p95_ms > s.p50_ms);
+        assert!(s.p99_ms >= s.p95_ms);
+        assert!((s.max_ms - 100.0).abs() < 1e-9);
+        let empty = LatencySummary::from_latencies_s(&[]);
+        assert_eq!(empty.p99_ms, 0.0);
+    }
+}

@@ -1,0 +1,47 @@
+//! Fleet serving: shard compiled plans across simulated FPGA
+//! instances.
+//!
+//! The paper demonstrates the uniform 2D/3D architecture on a single
+//! VC709; the production question is what a *rack* of them does behind
+//! one front door. This subsystem answers it with a deterministic
+//! serving simulator layered on the graph compiler:
+//!
+//! * [`cache`] — [`PlanCache`]: compiled [`crate::graph::NetworkPlan`]s
+//!   keyed by `(network, accelerator-config fingerprint)`, so
+//!   compilation happens once per model/batch-size rather than once
+//!   per request or per instance;
+//! * [`instance`] — [`Instance`]: one simulated board with a
+//!   simulated-time backlog and queue-depth tracking;
+//! * [`fleet`] — [`Fleet`]: the shard scheduler. Batches requests per
+//!   model under the coordinator's [`crate::coordinator::BatchPolicy`]
+//!   contract, routes each batch to the least-loaded instance hosting
+//!   the model, and sheds requests whose best-case queueing delay
+//!   exceeds the latency budget;
+//! * [`loadgen`] — seeded open-loop Poisson arrivals
+//!   ([`poisson_arrivals`]) and the p50/p95/p99 [`LatencySummary`].
+//!
+//! **IOM vs OOM.** Every latency this tier reports is an
+//! *input-oriented-mapping* (IOM) number: the cached plans schedule
+//! only useful multiplies (each input activation × the kernel, with
+//! overlap accumulation). Under the *output-oriented* (OOM)
+//! zero-insertion formulation the same boards would burn 4× (2D) to 8×
+//! (3D) the cycles scanning inserted zeros — which is why fleet
+//! capacity, and therefore every admission and routing decision here,
+//! is defined in IOM terms.
+//!
+//! Batch latencies come from [`crate::graph::simulate_plan`], so a
+//! [`FleetReport`] is the throughput/latency profile a real deployment
+//! of the paper's accelerator would exhibit. The front ends are
+//! [`crate::coordinator::service::serve_fleet`] (the coordinator
+//! delegates multi-instance serving here), the `udcnn serve` CLI
+//! subcommand, and `benches/serving.rs` → `reports/BENCH_serving.json`.
+
+pub mod cache;
+pub mod fleet;
+pub mod instance;
+pub mod loadgen;
+
+pub use cache::{CacheStats, PlanCache};
+pub use fleet::{Fleet, FleetOptions, FleetReport};
+pub use instance::{Instance, InstanceStats};
+pub use loadgen::{poisson_arrivals, Arrival, LatencySummary};

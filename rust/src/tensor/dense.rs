@@ -41,21 +41,25 @@ impl<T: Copy + Default> Tensor<T> {
     }
 
     #[inline]
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
     #[inline]
+    /// The shape extents.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
     #[inline]
+    /// Flat row-major data.
     pub fn data(&self) -> &[T] {
         &self.data
     }
 
     #[inline]
+    /// Mutable flat row-major data.
     pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
@@ -78,11 +82,13 @@ impl<T: Copy + Default> Tensor<T> {
     }
 
     #[inline]
+    /// Read the element at a multi-index.
     pub fn get(&self, idx: &[usize]) -> T {
         self.data[self.offset(idx)]
     }
 
     #[inline]
+    /// Write the element at a multi-index.
     pub fn set(&mut self, idx: &[usize], v: T) {
         let off = self.offset(idx);
         self.data[off] = v;

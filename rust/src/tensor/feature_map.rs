@@ -10,13 +10,17 @@ use super::Tensor;
 /// 2D feature map, layout `C × H × W`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FeatureMap<T> {
+    /// Channels.
     pub c: usize,
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
     data: Vec<T>,
 }
 
 impl<T: Copy + Default> FeatureMap<T> {
+    /// Zero-filled map.
     pub fn zeros(c: usize, h: usize, w: usize) -> Self {
         FeatureMap {
             c,
@@ -26,18 +30,21 @@ impl<T: Copy + Default> FeatureMap<T> {
         }
     }
 
+    /// Build from a flat `C·H·W` buffer.
     pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<T>) -> Self {
         assert_eq!(data.len(), c * h * w);
         FeatureMap { c, h, w, data }
     }
 
     #[inline(always)]
+    /// Read the element at `(c, h, w)`.
     pub fn at(&self, c: usize, h: usize, w: usize) -> T {
         debug_assert!(c < self.c && h < self.h && w < self.w);
         self.data[(c * self.h + h) * self.w + w]
     }
 
     #[inline(always)]
+    /// Mutable access to the element at `(c, h, w)`.
     pub fn at_mut(&mut self, c: usize, h: usize, w: usize) -> &mut T {
         debug_assert!(c < self.c && h < self.h && w < self.w);
         &mut self.data[(c * self.h + h) * self.w + w]
@@ -51,23 +58,28 @@ impl<T: Copy + Default> FeatureMap<T> {
     }
 
     #[inline]
+    /// Flat data, `C × H × W` row-major.
     pub fn data(&self) -> &[T] {
         &self.data
     }
 
     #[inline]
+    /// Mutable flat data.
     pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
+    /// Consume into a dynamic-shape [`Tensor`].
     pub fn into_tensor(self) -> Tensor<T> {
         Tensor::from_vec(&[self.c, self.h, self.w], self.data)
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the map holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -76,14 +88,19 @@ impl<T: Copy + Default> FeatureMap<T> {
 /// 3D feature volume, layout `C × D × H × W`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Volume<T> {
+    /// Channels.
     pub c: usize,
+    /// Depth.
     pub d: usize,
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
     data: Vec<T>,
 }
 
 impl<T: Copy + Default> Volume<T> {
+    /// Zero-filled volume.
     pub fn zeros(c: usize, d: usize, h: usize, w: usize) -> Self {
         Volume {
             c,
@@ -94,41 +111,49 @@ impl<T: Copy + Default> Volume<T> {
         }
     }
 
+    /// Build from a flat `C·D·H·W` buffer.
     pub fn from_vec(c: usize, d: usize, h: usize, w: usize, data: Vec<T>) -> Self {
         assert_eq!(data.len(), c * d * h * w);
         Volume { c, d, h, w, data }
     }
 
     #[inline(always)]
+    /// Read the element at `(c, d, h, w)`.
     pub fn at(&self, c: usize, d: usize, h: usize, w: usize) -> T {
         debug_assert!(c < self.c && d < self.d && h < self.h && w < self.w);
         self.data[((c * self.d + d) * self.h + h) * self.w + w]
     }
 
     #[inline(always)]
+    /// Mutable access to the element at `(c, d, h, w)`.
     pub fn at_mut(&mut self, c: usize, d: usize, h: usize, w: usize) -> &mut T {
         debug_assert!(c < self.c && d < self.d && h < self.h && w < self.w);
         &mut self.data[((c * self.d + d) * self.h + h) * self.w + w]
     }
 
     #[inline]
+    /// Flat data, `C × D × H × W` row-major.
     pub fn data(&self) -> &[T] {
         &self.data
     }
 
     #[inline]
+    /// Mutable flat data.
     pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
+    /// Consume into a dynamic-shape [`Tensor`].
     pub fn into_tensor(self) -> Tensor<T> {
         Tensor::from_vec(&[self.c, self.d, self.h, self.w], self.data)
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the volume holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -137,14 +162,19 @@ impl<T: Copy + Default> Volume<T> {
 /// 2D weights, layout `O × I × Kh × Kw`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WeightsOIHW<T> {
+    /// Output channels.
     pub o: usize,
+    /// Input channels.
     pub i: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
     data: Vec<T>,
 }
 
 impl<T: Copy + Default> WeightsOIHW<T> {
+    /// Zero-filled weights.
     pub fn zeros(o: usize, i: usize, kh: usize, kw: usize) -> Self {
         WeightsOIHW {
             o,
@@ -155,18 +185,21 @@ impl<T: Copy + Default> WeightsOIHW<T> {
         }
     }
 
+    /// Build from a flat `O·I·Kh·Kw` buffer.
     pub fn from_vec(o: usize, i: usize, kh: usize, kw: usize, data: Vec<T>) -> Self {
         assert_eq!(data.len(), o * i * kh * kw);
         WeightsOIHW { o, i, kh, kw, data }
     }
 
     #[inline(always)]
+    /// Read the weight at `(o, i, kh, kw)`.
     pub fn at(&self, o: usize, i: usize, kh: usize, kw: usize) -> T {
         debug_assert!(o < self.o && i < self.i && kh < self.kh && kw < self.kw);
         self.data[((o * self.i + i) * self.kh + kh) * self.kw + kw]
     }
 
     #[inline(always)]
+    /// Mutable access to the weight at `(o, i, kh, kw)`.
     pub fn at_mut(&mut self, o: usize, i: usize, kh: usize, kw: usize) -> &mut T {
         &mut self.data[((o * self.i + i) * self.kh + kh) * self.kw + kw]
     }
@@ -181,19 +214,23 @@ impl<T: Copy + Default> WeightsOIHW<T> {
     }
 
     #[inline]
+    /// Flat data, `O × I × Kh × Kw` row-major.
     pub fn data(&self) -> &[T] {
         &self.data
     }
 
     #[inline]
+    /// Mutable flat data.
     pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether there are no weights.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -202,15 +239,21 @@ impl<T: Copy + Default> WeightsOIHW<T> {
 /// 3D weights, layout `O × I × Kd × Kh × Kw`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WeightsOIDHW<T> {
+    /// Output channels.
     pub o: usize,
+    /// Input channels.
     pub i: usize,
+    /// Kernel depth.
     pub kd: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
     data: Vec<T>,
 }
 
 impl<T: Copy + Default> WeightsOIDHW<T> {
+    /// Zero-filled weights.
     pub fn zeros(o: usize, i: usize, kd: usize, kh: usize, kw: usize) -> Self {
         WeightsOIDHW {
             o,
@@ -222,6 +265,7 @@ impl<T: Copy + Default> WeightsOIDHW<T> {
         }
     }
 
+    /// Build from a flat `O·I·Kd·Kh·Kw` buffer.
     pub fn from_vec(o: usize, i: usize, kd: usize, kh: usize, kw: usize, data: Vec<T>) -> Self {
         assert_eq!(data.len(), o * i * kd * kh * kw);
         WeightsOIDHW {
@@ -235,6 +279,7 @@ impl<T: Copy + Default> WeightsOIDHW<T> {
     }
 
     #[inline(always)]
+    /// Read the weight at `(o, i, kd, kh, kw)`.
     pub fn at(&self, o: usize, i: usize, kd: usize, kh: usize, kw: usize) -> T {
         debug_assert!(
             o < self.o && i < self.i && kd < self.kd && kh < self.kh && kw < self.kw
@@ -243,6 +288,7 @@ impl<T: Copy + Default> WeightsOIDHW<T> {
     }
 
     #[inline(always)]
+    /// Mutable access to the weight at `(o, i, kd, kh, kw)`.
     pub fn at_mut(&mut self, o: usize, i: usize, kd: usize, kh: usize, kw: usize) -> &mut T {
         &mut self.data[(((o * self.i + i) * self.kd + kd) * self.kh + kh) * self.kw + kw]
     }
@@ -256,19 +302,23 @@ impl<T: Copy + Default> WeightsOIDHW<T> {
     }
 
     #[inline]
+    /// Flat data, `O × I × Kd × Kh × Kw` row-major.
     pub fn data(&self) -> &[T] {
         &self.data
     }
 
     #[inline]
+    /// Mutable flat data.
     pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether there are no weights.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

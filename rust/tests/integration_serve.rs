@@ -1,0 +1,122 @@
+//! Integration tests of the fleet-serving subsystem on the real zoo
+//! networks: throughput scaling, determinism, admission control and
+//! plan-cache behaviour — the properties `udcnn serve` and
+//! `benches/serving.rs` report.
+
+use udcnn::coordinator::{serve_fleet, BatchPolicy};
+use udcnn::dcnn::zoo;
+use udcnn::serve::{poisson_arrivals, Arrival, Fleet, FleetOptions};
+
+/// A workload that saturates up to 8 instances: offered load is 2.5x
+/// the aggregate full-batch capacity of `scale_for` instances.
+fn saturating_workload(scale_for: usize, n: usize) -> Vec<Arrival> {
+    let nets = vec![zoo::dcgan(), zoo::gan3d()];
+    let models: Vec<&str> = nets.iter().map(|x| x.name).collect();
+    let policy = BatchPolicy::default();
+    let mut probe = Fleet::new(
+        nets,
+        FleetOptions {
+            instances: 1,
+            policy,
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap();
+    let mut per_req_s = 0.0;
+    for m in &models {
+        per_req_s += probe.batch_latency_s(m, policy.max_batch).unwrap() / policy.max_batch as f64;
+    }
+    let rps = 2.5 * scale_for as f64 * models.len() as f64 / per_req_s;
+    poisson_arrivals(0xF1EE7, rps, n, &models)
+}
+
+fn run(instances: usize, workload: &[Arrival]) -> udcnn::serve::FleetReport {
+    serve_fleet(
+        vec![zoo::dcgan(), zoo::gan3d()],
+        FleetOptions {
+            instances,
+            latency_budget_s: 0.25,
+            ..FleetOptions::default()
+        },
+        workload,
+    )
+    .unwrap()
+}
+
+#[test]
+fn four_instances_beat_one_by_3_5x_on_zoo_networks() {
+    // the acceptance bar of the serving subsystem: a 2D net + a 3D net
+    // behind 4 instances must deliver >= 3.5x single-instance
+    // throughput on the same saturating workload
+    let work = saturating_workload(4, 2048);
+    let r1 = run(1, &work);
+    let r4 = run(4, &work);
+    let speedup = r4.throughput_rps / r1.throughput_rps;
+    assert!(
+        speedup >= 3.5,
+        "4 instances gave {speedup:.2}x (fleet {:.1} rps vs single {:.1} rps)",
+        r4.throughput_rps,
+        r1.throughput_rps
+    );
+    assert!(r4.latency.p99_ms > 0.0, "p99 is reported");
+    assert!(r4.latency.p99_ms >= r4.latency.p50_ms);
+}
+
+#[test]
+fn fleet_reports_are_deterministic_across_runs() {
+    let work = saturating_workload(2, 512);
+    let a = run(2, &work);
+    let b = run(2, &work);
+    assert_eq!(a.to_json(), b.to_json(), "same workload, same report");
+}
+
+#[test]
+fn admission_keeps_p99_under_unbounded_queueing() {
+    let work = saturating_workload(4, 1024);
+    // single instance under 4-instance load: heavy overload
+    let bounded = run(1, &work);
+    let unbounded = serve_fleet(
+        vec![zoo::dcgan(), zoo::gan3d()],
+        FleetOptions {
+            instances: 1,
+            ..FleetOptions::default() // infinite budget
+        },
+        &work,
+    )
+    .unwrap();
+    assert!(bounded.shed > 0, "overload must shed with a finite budget");
+    assert_eq!(unbounded.shed, 0, "infinite budget never sheds");
+    assert!(
+        bounded.latency.p99_ms < unbounded.latency.p99_ms,
+        "shedding must protect the tail: {:.1} ms vs {:.1} ms",
+        bounded.latency.p99_ms,
+        unbounded.latency.p99_ms
+    );
+    assert_eq!(bounded.served + bounded.shed, bounded.offered);
+}
+
+#[test]
+fn cache_compiles_each_model_a_bounded_number_of_times() {
+    let work = saturating_workload(2, 1024);
+    let r = run(2, &work);
+    // compilations are bounded by models x distinct batch sizes (<= 8
+    // each), never by request count
+    assert!(
+        r.cache.misses <= 2 * 8,
+        "cache missed {} times for 1024 requests",
+        r.cache.misses
+    );
+    assert!(r.cache.hits > 0);
+}
+
+#[test]
+fn every_model_is_served_on_its_dims_operating_point() {
+    // 2D and 3D requests coexist in one fleet; both models appear in
+    // the per-model tallies
+    let work = saturating_workload(2, 512);
+    let r = run(2, &work);
+    assert!(r.per_model.contains_key("dcgan"), "{:?}", r.per_model);
+    assert!(r.per_model.contains_key("3d-gan"), "{:?}", r.per_model);
+    let served: u64 = r.per_model.values().sum();
+    assert_eq!(served, r.served);
+}
