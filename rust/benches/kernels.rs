@@ -1,0 +1,128 @@
+//! Kernel-level performance baseline for the uniform compute core.
+//!
+//! Measures GFLOP/s (2 · useful MACs per second — the IOM schedule
+//! never touches a zero, so useful work is the honest numerator) of
+//! the uniform IOM deconvolution kernel on the zoo's largest 2D and
+//! largest 3D layers, in f32 and Q8.8, single- and multi-threaded.
+//! The 2D layer runs through the *same* kernel as the 3D layer — as
+//! the depth-1 fold — so this table is also the perf story of §IV-C.
+//!
+//! Alongside the text report it writes `reports/BENCH_kernels.json`
+//! so the kernel-level perf trajectory is tracked across PRs. The
+//! `threaded_speedup_f32` / `threaded_beats_single` fields *record*
+//! whether the threaded uniform kernel beats the single-threaded path
+//! (what the old `deconv2d_iom` / `deconv3d_iom` golden models
+//! execute) on both layers; the bar is read from the report, not
+//! enforced as an exit code — on 2-core CI runners the ratio can
+//! legitimately hover near 1.0.
+//!
+//! Honours `UDCNN_BENCH_FAST=1` for CI-speed runs.
+
+use udcnn::benchkit::{header, write_report_file, Bench, BenchResult};
+use udcnn::dcnn::{zoo, Dims, LayerData, LayerSpec};
+use udcnn::func::uniform;
+use udcnn::report::json::{array, JsonObj};
+
+const REPORT_PATH: &str = "reports/BENCH_kernels.json";
+
+/// The zoo layer with the most useful MACs of the given dimensionality.
+fn largest_layer(dims: Dims) -> LayerSpec {
+    zoo::all_benchmarks()
+        .into_iter()
+        .filter(|n| n.dims == dims)
+        .flat_map(|n| n.layers)
+        .max_by_key(|l| l.op_counts().useful_macs)
+        .expect("zoo has layers of both dimensionalities")
+}
+
+fn kernel_doc(name: &str, threads: usize, r: &BenchResult, flops: f64) -> String {
+    JsonObj::new()
+        .str("kernel", name)
+        .int("threads", threads as u64)
+        .num("median_s", r.median_s())
+        .num("gflops", flops / r.median_s() / 1e9)
+        .render()
+}
+
+fn main() {
+    header(
+        "kernels",
+        "uniform kernel core GFLOP/s (2D = depth-1 fold of the one 3D kernel)",
+    );
+    let b = Bench::from_env();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+
+    let mut layer_docs = Vec::new();
+    let mut all_threaded_faster = true;
+    for spec in [largest_layer(Dims::D2), largest_layer(Dims::D3)] {
+        let macs = spec.op_counts().useful_macs;
+        let flops = 2.0 * macs as f64;
+        println!("{spec}  ({:.1} M useful MACs)", macs as f64 / 1e6);
+
+        let data = LayerData::synth(&spec, 0xBE7C4);
+        let input = data.uniform_input();
+        let weights = data.uniform_weights();
+        let qdata = data.quantize();
+        let qin = qdata.uniform_input();
+        let qw = qdata.uniform_weights();
+
+        let single = b.run(&format!("{} iom_f32 t=1", spec.name), || {
+            std::hint::black_box(uniform::deconv_iom(&input, &weights, spec.s).len());
+        });
+        println!("{}", single.summary());
+        let multi = b.run(&format!("{} iom_f32 t={threads}", spec.name), || {
+            std::hint::black_box(
+                uniform::deconv_iom_threaded(&input, &weights, spec.s, threads).len(),
+            );
+        });
+        println!("{}", multi.summary());
+        let qsingle = b.run(&format!("{} iom_q88 t=1", spec.name), || {
+            std::hint::black_box(uniform::deconv_iom_q(&qin, &qw, spec.s).len());
+        });
+        println!("{}", qsingle.summary());
+        let qmulti = b.run(&format!("{} iom_q88 t={threads}", spec.name), || {
+            std::hint::black_box(
+                uniform::deconv_iom_q_threaded(&qin, &qw, spec.s, threads).len(),
+            );
+        });
+        println!("{}", qmulti.summary());
+
+        let speedup = single.median_s() / multi.median_s();
+        all_threaded_faster &= speedup > 1.0;
+        println!(
+            "  f32: {:.2} -> {:.2} GFLOP/s  ({speedup:.2}x threaded speedup, {})\n",
+            flops / single.median_s() / 1e9,
+            flops / multi.median_s() / 1e9,
+            if speedup > 1.0 { "OK" } else { "REGRESSION" },
+        );
+
+        let kernels = array(&[
+            kernel_doc("iom_f32", 1, &single, flops),
+            kernel_doc("iom_f32", threads, &multi, flops),
+            kernel_doc("iom_q88", 1, &qsingle, flops),
+            kernel_doc("iom_q88", threads, &qmulti, flops),
+        ]);
+        layer_docs.push(
+            JsonObj::new()
+                .str("layer", &spec.name)
+                .str("dims", &spec.dims.to_string())
+                .int("useful_macs", macs)
+                .num("threaded_speedup_f32", speedup)
+                .raw("kernels", &kernels)
+                .render(),
+        );
+    }
+
+    let doc = JsonObj::new()
+        .str("bench", "kernels")
+        .int("threads", threads as u64)
+        .raw("threaded_beats_single", if all_threaded_faster { "true" } else { "false" })
+        .raw("layers", &array(&layer_docs))
+        .render();
+    match write_report_file(REPORT_PATH, &doc) {
+        Ok(()) => println!("wrote {REPORT_PATH}"),
+        Err(e) => eprintln!("could not write {REPORT_PATH}: {e}"),
+    }
+}

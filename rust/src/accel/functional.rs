@@ -2,6 +2,7 @@
 
 use crate::dcnn::{Dims, LayerSpec};
 use crate::fixed::Q88;
+use crate::func::uniform;
 use crate::tensor::{FeatureMap, Volume, WeightsOIDHW, WeightsOIHW};
 
 use super::config::AccelConfig;
@@ -24,7 +25,9 @@ pub struct FunctionalRun3d {
 }
 
 /// Run a 2D layer through the functional mesh; returns the cropped
-/// (`I·S`) output, like the hardware write-back.
+/// (`I·S`) output, like the hardware write-back. The layer is folded
+/// onto the uniform depth-1 representation (§IV-C) before it enters
+/// the mesh — the same fold the compute kernels use.
 pub fn run_layer_2d(
     cfg: &AccelConfig,
     layer: &LayerSpec,
@@ -32,21 +35,13 @@ pub fn run_layer_2d(
     weights: &WeightsOIHW<Q88>,
 ) -> FunctionalRun2d {
     assert_eq!(layer.dims, Dims::D2);
-    let vol = Volume::from_vec(input.c, 1, input.h, input.w, input.data().to_vec());
-    let w3 = WeightsOIDHW::from_vec(weights.o, weights.i, 1, weights.kh, weights.kw, weights.data().to_vec());
+    let vol = input.to_volume();
+    let w3 = weights.to_oidhw();
     let mut mesh = Mesh::new(cfg, layer);
     let full = mesh.run(layer, &vol, &w3);
-    let (oh, ow) = (layer.out_h(), layer.out_w());
-    let mut out = FeatureMap::zeros(layer.out_c, oh, ow);
-    for o in 0..layer.out_c {
-        for y in 0..oh {
-            for x in 0..ow {
-                *out.at_mut(o, y, x) = full.at(o, 0, y, x);
-            }
-        }
-    }
+    let output = uniform::crop(&full, 1, layer.out_h(), layer.out_w()).into_feature_map();
     FunctionalRun2d {
-        output: out,
+        output,
         stats: mesh.stats,
     }
 }
@@ -62,19 +57,9 @@ pub fn run_layer_3d(
     assert_eq!(layer.dims, Dims::D3);
     let mut mesh = Mesh::new(cfg, layer);
     let full = mesh.run(layer, input, weights);
-    let (od, oh, ow) = (layer.out_d(), layer.out_h(), layer.out_w());
-    let mut out = Volume::zeros(layer.out_c, od, oh, ow);
-    for o in 0..layer.out_c {
-        for z in 0..od {
-            for y in 0..oh {
-                for x in 0..ow {
-                    *out.at_mut(o, z, y, x) = full.at(o, z, y, x);
-                }
-            }
-        }
-    }
+    let output = uniform::crop(&full, layer.out_d(), layer.out_h(), layer.out_w());
     FunctionalRun3d {
-        output: out,
+        output,
         stats: mesh.stats,
     }
 }

@@ -14,8 +14,8 @@ use std::sync::OnceLock;
 use std::time::Instant;
 
 use crate::dcnn::{LayerData, LayerSpec};
-use crate::func::{deconv2d_oom, deconv3d_oom};
-use crate::tensor::{FeatureMap, Volume, WeightsOIHW, WeightsOIDHW};
+use crate::func::uniform;
+use crate::tensor::{FeatureMap, Volume, WeightsOIDHW, WeightsOIHW};
 
 /// Measured CPU execution of one layer.
 #[derive(Clone, Copy, Debug)]
@@ -83,67 +83,29 @@ impl CpuBaseline {
         })
     }
 
-    /// Direct wall-clock measurement of one inference.
+    /// Direct wall-clock measurement of one inference — one
+    /// dimension-uniform code path (2D runs as the depth-1 fold).
     pub fn measure_layer(&self, layer: &LayerSpec) -> f64 {
         let data = LayerData::synth(layer, 0xC0FFEE);
+        let input = data.uniform_input();
+        let weights = data.uniform_weights();
         let t0 = Instant::now();
-        match &data {
-            LayerData::D2 { input, weights } => {
-                let out = self.deconv2d_threaded(input, weights, layer.s);
-                std::hint::black_box(out.data()[0]);
-            }
-            LayerData::D3 { input, weights } => {
-                let out = self.deconv3d_threaded(input, weights, layer.s);
-                std::hint::black_box(out.data()[0]);
-            }
-        }
+        let out = uniform::deconv_oom_threaded(&input, &weights, layer.s, self.threads);
+        std::hint::black_box(out.data()[0]);
         t0.elapsed().as_secs_f64()
     }
 
-    /// Multithreaded 2D OOM deconvolution: output channels sharded
-    /// across threads (each thread runs the single-threaded golden
-    /// model on its slice of filters).
+    /// Multithreaded 2D OOM deconvolution: the depth-1 fold of
+    /// [`uniform::deconv_oom_threaded`] (output channels sharded across
+    /// scoped threads over a single shared zero-inserted map).
     pub fn deconv2d_threaded(
         &self,
         input: &FeatureMap<f32>,
         w: &WeightsOIHW<f32>,
         s: usize,
     ) -> FeatureMap<f32> {
-        let t = self.threads.min(w.o).max(1);
-        if t <= 1 {
-            return deconv2d_oom(input, w, s);
-        }
-        let chunk = w.o.div_ceil(t);
-        let k_sz = w.i * w.kh * w.kw;
-        let oh = (input.h - 1) * s + w.kh;
-        let ow = (input.w - 1) * s + w.kw;
-        let mut out = FeatureMap::zeros(w.o, oh, ow);
-        let results: Vec<(usize, FeatureMap<f32>)> = std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for ti in 0..t {
-                let o_lo = ti * chunk;
-                let o_hi = ((ti + 1) * chunk).min(w.o);
-                if o_lo >= o_hi {
-                    continue;
-                }
-                let w_slice = WeightsOIHW::from_vec(
-                    o_hi - o_lo,
-                    w.i,
-                    w.kh,
-                    w.kw,
-                    w.data()[o_lo * k_sz..o_hi * k_sz].to_vec(),
-                );
-                let input_ref = &*input;
-                handles.push(scope.spawn(move || (o_lo, deconv2d_oom(input_ref, &w_slice, s))));
-            }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        let plane = oh * ow;
-        for (o_lo, part) in results {
-            let dst = &mut out.data_mut()[o_lo * plane..o_lo * plane + part.len()];
-            dst.copy_from_slice(part.data());
-        }
-        out
+        uniform::deconv_oom_threaded(&input.to_volume(), &w.to_oidhw(), s, self.threads)
+            .into_feature_map()
     }
 
     /// Multithreaded 3D OOM deconvolution (filter-sharded).
@@ -153,43 +115,7 @@ impl CpuBaseline {
         w: &WeightsOIDHW<f32>,
         s: usize,
     ) -> Volume<f32> {
-        let t = self.threads.min(w.o).max(1);
-        if t <= 1 {
-            return deconv3d_oom(input, w, s);
-        }
-        let chunk = w.o.div_ceil(t);
-        let k_sz = w.i * w.kd * w.kh * w.kw;
-        let od = (input.d - 1) * s + w.kd;
-        let oh = (input.h - 1) * s + w.kh;
-        let ow = (input.w - 1) * s + w.kw;
-        let mut out = Volume::zeros(w.o, od, oh, ow);
-        let results: Vec<(usize, Volume<f32>)> = std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for ti in 0..t {
-                let o_lo = ti * chunk;
-                let o_hi = ((ti + 1) * chunk).min(w.o);
-                if o_lo >= o_hi {
-                    continue;
-                }
-                let w_slice = WeightsOIDHW::from_vec(
-                    o_hi - o_lo,
-                    w.i,
-                    w.kd,
-                    w.kh,
-                    w.kw,
-                    w.data()[o_lo * k_sz..o_hi * k_sz].to_vec(),
-                );
-                let input_ref = &*input;
-                handles.push(scope.spawn(move || (o_lo, deconv3d_oom(input_ref, &w_slice, s))));
-            }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        let plane = od * oh * ow;
-        for (o_lo, part) in results {
-            let dst = &mut out.data_mut()[o_lo * plane..o_lo * plane + part.len()];
-            dst.copy_from_slice(part.data());
-        }
-        out
+        uniform::deconv_oom_threaded(input, w, s, self.threads)
     }
 
     /// Normalize a measured time to the paper's CPU: scale by the
@@ -219,6 +145,7 @@ pub fn e5_seconds(dense_flops: f64) -> f64 {
 mod tests {
     use super::*;
     use crate::dcnn::zoo;
+    use crate::func::{deconv2d_oom, deconv3d_oom};
     use crate::util::Prng;
 
     #[test]

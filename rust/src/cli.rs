@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{Error, Result};
 
 use crate::dcnn::{zoo, Network};
 
@@ -79,19 +79,12 @@ pub fn positionals<'a>(args: &'a [String], value_keys: &[&str]) -> Vec<&'a Strin
     out
 }
 
-/// Resolve a benchmark network by (aliased) name.
+/// Resolve a benchmark network by (aliased) name. Thin adapter over
+/// the shared [`zoo::by_name`] lookup (whose error lists the valid
+/// names) so the `compile` and `serve` subcommands — and every other
+/// front end — agree on the accepted spellings.
 pub fn network_by_name(name: &str) -> Result<Network> {
-    match name {
-        "dcgan" => Ok(zoo::dcgan()),
-        "gp-gan" | "gpgan" => Ok(zoo::gp_gan()),
-        "3d-gan" | "gan3d" => Ok(zoo::gan3d()),
-        "v-net" | "vnet" => Ok(zoo::vnet()),
-        "tiny-2d" => Ok(zoo::tiny_2d()),
-        "tiny-3d" => Ok(zoo::tiny_3d()),
-        _ => bail!(
-            "unknown network '{name}' (dcgan, gp-gan, 3d-gan, v-net, tiny-2d, tiny-3d)"
-        ),
-    }
+    zoo::by_name(name).map_err(Error::msg)
 }
 
 #[cfg(test)]

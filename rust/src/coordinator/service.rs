@@ -30,10 +30,10 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::accel::{AccelConfig, Schedule};
-use crate::dcnn::{Dims, LayerData, Network};
-use crate::func::{crop_2d, crop_3d, deconv2d_iom, deconv3d_iom};
+use crate::dcnn::{LayerData, Network};
+use crate::func::uniform;
 use crate::serve::{Arrival, Fleet, FleetOptions, FleetReport};
-use crate::tensor::{FeatureMap, Volume};
+use crate::tensor::{Volume, WeightsOIDHW};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::router::ShardRouter;
@@ -136,11 +136,13 @@ impl InferenceService {
                 let net = net.clone();
                 workers.push(std::thread::spawn(move || {
                     let mut batcher = Batcher::new(rx, policy);
-                    let weights: Vec<LayerData> = net
+                    // synth once per worker, folded to the uniform
+                    // layout so the forward pass never re-converts
+                    let weights: Vec<WeightsOIDHW<f32>> = net
                         .layers
                         .iter()
                         .enumerate()
-                        .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)))
+                        .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)).uniform_weights())
                         .collect();
                     while let Some(batch) = batcher.next_batch() {
                         let n = batch.len();
@@ -161,7 +163,7 @@ impl InferenceService {
     /// Submit a request; the response arrives on the returned channel.
     pub fn submit(&mut self, model: &str, input: Vec<f32>) -> Result<std::sync::mpsc::Receiver<Response>> {
         if let Some(cap) = self.admission_cap {
-            if self.router.min_depth(model).map_or(false, |d| d >= cap) {
+            if self.router.min_depth(model).is_some_and(|d| d >= cap) {
                 self.stats.lock().unwrap().shed += 1;
                 bail!("shedding '{model}': every instance queue at depth >= {cap}");
             }
@@ -223,7 +225,7 @@ pub fn serve_fleet(
 /// accelerator latency at the real batch size.
 fn serve_batch(
     net: &Network,
-    weights: &[LayerData],
+    weights: &[WeightsOIDHW<f32>],
     batch: Vec<Request>,
     instance: usize,
     stats: &Arc<Mutex<ServiceStats>>,
@@ -251,7 +253,7 @@ fn serve_batch(
     }
 
     for req in batch {
-        let output = forward(net, weights, &req.input);
+        let output = forward_uniform(net, weights, &req.input);
         let resp = Response {
             model: req.model.clone(),
             output,
@@ -264,39 +266,44 @@ fn serve_batch(
     }
 }
 
-/// Golden f32 forward pass through every deconv layer of the network.
-pub fn forward(net: &Network, weights: &[LayerData], input: &[f32]) -> Vec<f32> {
-    match net.dims {
-        Dims::D2 => {
-            let l0 = &net.layers[0];
-            assert_eq!(input.len(), l0.input_elems(), "bad input size");
-            let mut cur = FeatureMap::from_vec(l0.in_c, l0.in_h, l0.in_w, input.to_vec());
-            for (layer, data) in net.layers.iter().zip(weights) {
-                let w = match data {
-                    LayerData::D2 { weights, .. } => weights,
-                    _ => unreachable!(),
-                };
-                let full = deconv2d_iom(&cur, w, layer.s);
-                cur = crop_2d(&full, layer.out_h(), layer.out_w());
-            }
-            cur.data().to_vec()
-        }
-        Dims::D3 => {
-            let l0 = &net.layers[0];
-            assert_eq!(input.len(), l0.input_elems(), "bad input size");
-            let mut cur =
-                Volume::from_vec(l0.in_c, l0.in_d, l0.in_h, l0.in_w, input.to_vec());
-            for (layer, data) in net.layers.iter().zip(weights) {
-                let w = match data {
-                    LayerData::D3 { weights, .. } => weights,
-                    _ => unreachable!(),
-                };
-                let full = deconv3d_iom(&cur, w, layer.s);
-                cur = crop_3d(&full, layer.out_d(), layer.out_h(), layer.out_w());
-            }
-            cur.data().to_vec()
-        }
+/// Minimum useful MACs per worker thread in the golden forward: below
+/// this, scoped-thread spawn/join overhead rivals the kernel work (the
+/// early 4×4 zoo layers), and service workers already run concurrently
+/// per model instance — so small layers stay single-threaded.
+const FORWARD_MACS_PER_THREAD: u64 = 2_000_000;
+
+/// Golden f32 forward pass through every deconv layer of the network —
+/// the serving hot path. One dimension-uniform code path (a 2D network
+/// runs as the depth-1 fold, §IV-C), with each layer's IOM scatter
+/// sharded over output channels across scoped threads. The thread
+/// count scales with the layer's useful work (capped at the machine
+/// parallelism) so tiny layers pay no spawn overhead and concurrent
+/// workers do not oversubscribe the host. Threading is deterministic:
+/// results are bit-identical for any thread count.
+pub fn forward_uniform(net: &Network, weights: &[WeightsOIDHW<f32>], input: &[f32]) -> Vec<f32> {
+    let l0 = &net.layers[0];
+    assert_eq!(input.len(), l0.input_elems(), "bad input size");
+    assert_eq!(weights.len(), net.layers.len(), "one weight set per layer");
+    let max_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let mut cur = Volume::from_vec(l0.in_c, l0.in_d, l0.in_h, l0.in_w, input.to_vec());
+    for (layer, w) in net.layers.iter().zip(weights) {
+        let work = layer.op_counts().useful_macs;
+        let threads = ((work / FORWARD_MACS_PER_THREAD) as usize).clamp(1, max_threads);
+        let full = uniform::deconv_iom_threaded(&cur, w, layer.s, threads);
+        cur = uniform::crop(&full, layer.out_d(), layer.out_h(), layer.out_w());
     }
+    cur.into_vec()
+}
+
+/// Golden f32 forward pass for callers holding typed [`LayerData`]
+/// weights: folds them to the uniform layout and delegates to
+/// [`forward_uniform`]. (The service workers pre-fold once at startup
+/// instead.)
+pub fn forward(net: &Network, weights: &[LayerData], input: &[f32]) -> Vec<f32> {
+    let uw: Vec<WeightsOIDHW<f32>> = weights.iter().map(LayerData::uniform_weights).collect();
+    forward_uniform(net, &uw, input)
 }
 
 /// Schedule sanity used by property tests: the batch the service uses

@@ -187,6 +187,16 @@ impl LayerSpec {
         self.k.pow(self.dims.rank() as u32)
     }
 
+    /// Kernel extent along depth: `K` for 3D layers, 1 for 2D — the
+    /// depth-1 kernel fold the uniform compute core uses (§IV-C).
+    #[inline]
+    pub fn k_d(&self) -> usize {
+        match self.dims {
+            Dims::D2 => 1,
+            Dims::D3 => self.k,
+        }
+    }
+
     /// Number of input activations per channel.
     #[inline]
     pub fn in_spatial(&self) -> usize {

@@ -8,9 +8,9 @@
 //! ([`empirical_sparsity`]) — the two must agree, which
 //! `tests` below and the property suite assert.
 
-use crate::dcnn::layer::{Dims, LayerSpec};
-use crate::func::zero_insert;
-use crate::tensor::{FeatureMap, Volume};
+use crate::dcnn::layer::LayerSpec;
+use crate::func::uniform;
+use crate::tensor::Volume;
 use crate::util::Prng;
 
 /// One row of the Fig.-1 dataset.
@@ -27,31 +27,20 @@ pub struct SparsityRow {
 }
 
 /// Empirically measure the zero-fraction of the inserted map for one
-/// layer, using dense (all-nonzero) synthetic activations.
+/// layer, using dense (all-nonzero) synthetic activations. One
+/// dimension-uniform code path: a 2D layer is the depth-1 fold
+/// (`in_d = 1`), for which the uniform zero-insert leaves depth alone.
 pub fn empirical_sparsity(spec: &LayerSpec, seed: u64) -> f64 {
     let mut rng = Prng::new(seed);
-    match spec.dims {
-        Dims::D2 => {
-            let mut fm: FeatureMap<f32> = FeatureMap::zeros(1, spec.in_h, spec.in_w);
-            for v in fm.data_mut() {
-                // strictly non-zero activations so inserted zeros are the
-                // only zeros
-                *v = rng.f32_range(0.1, 1.0);
-            }
-            let ins = zero_insert::insert_2d(&fm, spec.s);
-            let zeros = ins.data().iter().filter(|&&x| x == 0.0).count();
-            zeros as f64 / ins.len() as f64
-        }
-        Dims::D3 => {
-            let mut vol: Volume<f32> = Volume::zeros(1, spec.in_d, spec.in_h, spec.in_w);
-            for v in vol.data_mut() {
-                *v = rng.f32_range(0.1, 1.0);
-            }
-            let ins = zero_insert::insert_3d(&vol, spec.s);
-            let zeros = ins.data().iter().filter(|&&x| x == 0.0).count();
-            zeros as f64 / ins.len() as f64
-        }
+    let mut vol: Volume<f32> = Volume::zeros(1, spec.in_d, spec.in_h, spec.in_w);
+    for v in vol.data_mut() {
+        // strictly non-zero activations so inserted zeros are the only
+        // zeros
+        *v = rng.f32_range(0.1, 1.0);
     }
+    let ins = uniform::zero_insert(&vol, spec.s);
+    let zeros = ins.data().iter().filter(|&&x| x == 0.0).count();
+    zeros as f64 / ins.len() as f64
 }
 
 /// Produce the full Fig.-1 dataset for a set of networks.

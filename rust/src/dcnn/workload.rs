@@ -53,6 +53,25 @@ impl LayerData {
         }
     }
 
+    /// The activation tensor in the uniform `(c, d, h, w)` layout
+    /// consumed by [`crate::func::uniform`] (`d = 1` for 2D — the
+    /// §IV-C fold).
+    pub fn uniform_input(&self) -> Volume<f32> {
+        match self {
+            LayerData::D2 { input, .. } => input.to_volume(),
+            LayerData::D3 { input, .. } => input.clone(),
+        }
+    }
+
+    /// The weights in the uniform `O × I × Kd × Kh × Kw` layout
+    /// (`kd = 1` for 2D).
+    pub fn uniform_weights(&self) -> WeightsOIDHW<f32> {
+        match self {
+            LayerData::D2 { weights, .. } => weights.to_oidhw(),
+            LayerData::D3 { weights, .. } => weights.clone(),
+        }
+    }
+
     /// Quantize activations+weights to Q8.8 (the accelerator's format).
     pub fn quantize(&self) -> LayerDataQ {
         match self {
@@ -109,6 +128,26 @@ pub enum LayerDataQ {
         /// Filter weights.
         weights: WeightsOIDHW<Q88>,
     },
+}
+
+impl LayerDataQ {
+    /// The Q8.8 activations in the uniform `(c, d, h, w)` layout
+    /// (`d = 1` for 2D).
+    pub fn uniform_input(&self) -> Volume<Q88> {
+        match self {
+            LayerDataQ::D2 { input, .. } => input.to_volume(),
+            LayerDataQ::D3 { input, .. } => input.clone(),
+        }
+    }
+
+    /// The Q8.8 weights in the uniform `O × I × Kd × Kh × Kw` layout
+    /// (`kd = 1` for 2D).
+    pub fn uniform_weights(&self) -> WeightsOIDHW<Q88> {
+        match self {
+            LayerDataQ::D2 { weights, .. } => weights.to_oidhw(),
+            LayerDataQ::D3 { weights, .. } => weights.clone(),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -103,6 +103,27 @@ pub fn all_benchmarks() -> Vec<Network> {
     vec![dcgan(), gp_gan(), gan3d(), vnet()]
 }
 
+/// Canonical names accepted by [`by_name`] (aliases not listed).
+pub const NAMES: [&str; 6] = ["dcgan", "gp-gan", "3d-gan", "v-net", "tiny-2d", "tiny-3d"];
+
+/// Look a network up by (aliased) name — the single lookup shared by
+/// every CLI subcommand (`compile`, `serve`, `simulate`, ...). The
+/// error message lists the valid names.
+pub fn by_name(name: &str) -> Result<Network, String> {
+    match name {
+        "dcgan" => Ok(dcgan()),
+        "gp-gan" | "gpgan" => Ok(gp_gan()),
+        "3d-gan" | "gan3d" => Ok(gan3d()),
+        "v-net" | "vnet" => Ok(vnet()),
+        "tiny-2d" | "tiny2d" => Ok(tiny_2d()),
+        "tiny-3d" | "tiny3d" => Ok(tiny_3d()),
+        _ => Err(format!(
+            "unknown network '{name}' (valid names: {})",
+            NAMES.join(", ")
+        )),
+    }
+}
+
 /// Small synthetic networks used by tests (fast to simulate exactly).
 pub fn tiny_2d() -> Network {
     Network {
@@ -203,5 +224,24 @@ mod tests {
         let net = dcgan();
         assert!(net.layer("dcgan.deconv3").is_some());
         assert!(net.layer("nope").is_none());
+    }
+
+    #[test]
+    fn by_name_resolves_canonical_names_and_aliases() {
+        for name in NAMES {
+            assert_eq!(by_name(name).unwrap().name, name);
+        }
+        assert_eq!(by_name("vnet").unwrap().name, "v-net");
+        assert_eq!(by_name("gan3d").unwrap().name, "3d-gan");
+        assert_eq!(by_name("gpgan").unwrap().name, "gp-gan");
+    }
+
+    #[test]
+    fn by_name_error_lists_valid_names() {
+        let err = by_name("bogus").unwrap_err();
+        assert!(err.contains("bogus"));
+        for name in NAMES {
+            assert!(err.contains(name), "error should list '{name}': {err}");
+        }
     }
 }

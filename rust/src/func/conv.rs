@@ -1,101 +1,33 @@
 //! Dense convolution (cross-correlation, CNN convention), stride 1.
 //!
 //! Used by the OOM deconvolution formulation (over the zero-inserted,
-//! border-padded map) and by the CPU baseline.
+//! border-padded map) and by the CPU baseline. The loop nests live in
+//! [`super::uniform`]; the 2D entry points are depth-1 folds.
 
-use crate::tensor::{FeatureMap, Volume, WeightsOIHW, WeightsOIDHW};
+use crate::tensor::{FeatureMap, Volume, WeightsOIDHW, WeightsOIHW};
+
+use super::uniform;
 
 /// `out[o][y][x] = Σ_i Σ_kh Σ_kw in[i][y+kh][x+kw] · w[o][i][kh][kw]`
-/// ("VALID" correlation, stride 1).
+/// ("VALID" correlation, stride 1) — the depth-1 fold of
+/// [`uniform::corr`].
 pub fn corr2d(input: &FeatureMap<f32>, w: &WeightsOIHW<f32>) -> FeatureMap<f32> {
-    assert_eq!(input.c, w.i, "channel mismatch");
-    assert!(input.h >= w.kh && input.w >= w.kw, "kernel larger than input");
-    let oh = input.h - w.kh + 1;
-    let ow = input.w - w.kw + 1;
-    let mut out = FeatureMap::zeros(w.o, oh, ow);
-    for o in 0..w.o {
-        for i in 0..input.c {
-            for y in 0..oh {
-                for x in 0..ow {
-                    let mut acc = 0.0f32;
-                    for kh in 0..w.kh {
-                        for kw in 0..w.kw {
-                            acc += input.at(i, y + kh, x + kw) * w.at(o, i, kh, kw);
-                        }
-                    }
-                    *out.at_mut(o, y, x) += acc;
-                }
-            }
-        }
-    }
-    out
+    uniform::corr(&input.to_volume(), &w.to_oidhw()).into_feature_map()
 }
 
 /// 3D VALID correlation, stride 1.
 pub fn corr3d(input: &Volume<f32>, w: &WeightsOIDHW<f32>) -> Volume<f32> {
-    assert_eq!(input.c, w.i, "channel mismatch");
-    assert!(
-        input.d >= w.kd && input.h >= w.kh && input.w >= w.kw,
-        "kernel larger than input"
-    );
-    let od = input.d - w.kd + 1;
-    let oh = input.h - w.kh + 1;
-    let ow = input.w - w.kw + 1;
-    let mut out = Volume::zeros(w.o, od, oh, ow);
-    for o in 0..w.o {
-        for i in 0..input.c {
-            for z in 0..od {
-                for y in 0..oh {
-                    for x in 0..ow {
-                        let mut acc = 0.0f32;
-                        for kd in 0..w.kd {
-                            for kh in 0..w.kh {
-                                for kw in 0..w.kw {
-                                    acc += input.at(i, z + kd, y + kh, x + kw)
-                                        * w.at(o, i, kd, kh, kw);
-                                }
-                            }
-                        }
-                        *out.at_mut(o, z, y, x) += acc;
-                    }
-                }
-            }
-        }
-    }
-    out
+    uniform::corr(input, w)
 }
 
 /// Spatially flip a 2D kernel (for true convolution vs correlation).
 pub fn flip_2d(w: &WeightsOIHW<f32>) -> WeightsOIHW<f32> {
-    let mut out = WeightsOIHW::zeros(w.o, w.i, w.kh, w.kw);
-    for o in 0..w.o {
-        for i in 0..w.i {
-            for kh in 0..w.kh {
-                for kw in 0..w.kw {
-                    *out.at_mut(o, i, w.kh - 1 - kh, w.kw - 1 - kw) = w.at(o, i, kh, kw);
-                }
-            }
-        }
-    }
-    out
+    uniform::flip(&w.to_oidhw()).into_oihw()
 }
 
 /// Spatially flip a 3D kernel.
 pub fn flip_3d(w: &WeightsOIDHW<f32>) -> WeightsOIDHW<f32> {
-    let mut out = WeightsOIDHW::zeros(w.o, w.i, w.kd, w.kh, w.kw);
-    for o in 0..w.o {
-        for i in 0..w.i {
-            for kd in 0..w.kd {
-                for kh in 0..w.kh {
-                    for kw in 0..w.kw {
-                        *out.at_mut(o, i, w.kd - 1 - kd, w.kh - 1 - kh, w.kw - 1 - kw) =
-                            w.at(o, i, kd, kh, kw);
-                    }
-                }
-            }
-        }
-    }
-    out
+    uniform::flip(w)
 }
 
 #[cfg(test)]

@@ -1,151 +1,46 @@
-//! The two deconvolution formulations in f32.
+//! Typed 2D/3D deconvolution entry points.
+//!
+//! Since the dimension-uniform refactor the loop nests live **once**
+//! in [`super::uniform`]: a 2D call is the depth-1 fold (`d = 1`,
+//! `kd = 1`) of the same kernel that runs 3D (§IV-C), so *2D ==
+//! depth-1 3D* holds bit-exactly by construction. These wrappers are
+//! kept only because a body of tests and benches pins the original
+//! typed signatures; new code should call [`super::uniform`] directly
+//! (the threaded variants live only there).
 
-use crate::tensor::{FeatureMap, Volume, WeightsOIHW, WeightsOIDHW};
+use crate::tensor::{FeatureMap, Volume, WeightsOIDHW, WeightsOIHW};
 
-use super::conv::{corr2d, corr3d, flip_2d, flip_3d};
-use super::zero_insert::{insert_2d, insert_3d, pad_2d, pad_3d};
+use super::uniform;
 
 // ---------------------------------------------------------------------
 // IOM: scatter-accumulate. out[o][ih·S+kh][iw·S+kw] += in[i][ih][iw]·w
 // ---------------------------------------------------------------------
 
-/// 2D IOM deconvolution over the full Eq. (1) extent.
-///
-/// Hot path of the coordinator's golden forward (§Perf): the inner
-/// loops work on contiguous row slices so the compiler can vectorize
-/// the `K`-wide scatter-accumulate.
-pub fn deconv2d_iom(
-    input: &FeatureMap<f32>,
-    w: &WeightsOIHW<f32>,
-    s: usize,
-) -> FeatureMap<f32> {
-    assert_eq!(input.c, w.i, "channel mismatch");
-    assert_eq!(w.kh, w.kw, "square kernels only");
-    let k = w.kh;
-    let (in_h, in_w) = (input.h, input.w);
-    let oh = (in_h - 1) * s + k;
-    let ow = (in_w - 1) * s + k;
-    let mut out = FeatureMap::zeros(w.o, oh, ow);
-    let out_data = out.data_mut();
-    for o in 0..w.o {
-        let o_base = o * oh * ow;
-        for i in 0..input.c {
-            let kern = w.kernel(o, i);
-            let in_plane = input.plane(i);
-            for ih in 0..in_h {
-                let in_row = &in_plane[ih * in_w..(ih + 1) * in_w];
-                for kh in 0..k {
-                    let krow = &kern[kh * k..(kh + 1) * k];
-                    let orow_base = o_base + (ih * s + kh) * ow;
-                    if k == 3 {
-                        // benchmark-uniform K=3: unrolled scatter
-                        let (k0, k1, k2) = (krow[0], krow[1], krow[2]);
-                        for (iw, &a) in in_row.iter().enumerate() {
-                            if a == 0.0 {
-                                continue;
-                            }
-                            let base = orow_base + iw * s;
-                            out_data[base] += a * k0;
-                            out_data[base + 1] += a * k1;
-                            out_data[base + 2] += a * k2;
-                        }
-                    } else {
-                        for (iw, &a) in in_row.iter().enumerate() {
-                            if a == 0.0 {
-                                continue; // IOM never multiplies a zero
-                            }
-                            let dst =
-                                &mut out_data[orow_base + iw * s..orow_base + iw * s + k];
-                            for (d, &kv) in dst.iter_mut().zip(krow) {
-                                *d += a * kv;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
-    out
+/// 2D IOM deconvolution over the full Eq. (1) extent — the depth-1
+/// fold of [`uniform::deconv_iom`].
+pub fn deconv2d_iom(input: &FeatureMap<f32>, w: &WeightsOIHW<f32>, s: usize) -> FeatureMap<f32> {
+    uniform::deconv_iom(&input.to_volume(), &w.to_oidhw(), s).into_feature_map()
 }
 
-/// 3D IOM deconvolution over the full Eq. (1) extent (Fig. 5).
-pub fn deconv3d_iom(
-    input: &Volume<f32>,
-    w: &WeightsOIDHW<f32>,
-    s: usize,
-) -> Volume<f32> {
-    assert_eq!(input.c, w.i, "channel mismatch");
-    assert!(w.kd == w.kh && w.kh == w.kw, "cubic kernels only");
-    let k = w.kh;
-    let od = (input.d - 1) * s + k;
-    let oh = (input.h - 1) * s + k;
-    let ow = (input.w - 1) * s + k;
-    let mut out = Volume::zeros(w.o, od, oh, ow);
-    let out_data = out.data_mut();
-    let (in_d, in_h, in_w) = (input.d, input.h, input.w);
-    for o in 0..w.o {
-        let o_base = o * od * oh * ow;
-        for i in 0..input.c {
-            let kern = w.kernel(o, i);
-            for id in 0..in_d {
-                for ih in 0..in_h {
-                    for iw in 0..in_w {
-                        let a = input.at(i, id, ih, iw);
-                        if a == 0.0 {
-                            continue;
-                        }
-                        for kd in 0..k {
-                            let z_base = o_base + (id * s + kd) * oh * ow;
-                            for kh in 0..k {
-                                let krow = &kern[(kd * k + kh) * k..(kd * k + kh + 1) * k];
-                                let row = z_base + (ih * s + kh) * ow + iw * s;
-                                if k == 3 {
-                                    // benchmark-uniform K=3: unrolled
-                                    out_data[row] += a * krow[0];
-                                    out_data[row + 1] += a * krow[1];
-                                    out_data[row + 2] += a * krow[2];
-                                } else {
-                                    let dst = &mut out_data[row..row + k];
-                                    for (d, &kv) in dst.iter_mut().zip(krow) {
-                                        *d += a * kv;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
-    out
+/// 3D IOM deconvolution over the full Eq. (1) extent (Fig. 5) —
+/// [`uniform::deconv_iom`] under its original name.
+pub fn deconv3d_iom(input: &Volume<f32>, w: &WeightsOIDHW<f32>, s: usize) -> Volume<f32> {
+    uniform::deconv_iom(input, w, s)
 }
 
 // ---------------------------------------------------------------------
 // OOM: zero-insert, pad K−1, correlate with the flipped kernel.
 // ---------------------------------------------------------------------
 
-/// 2D OOM deconvolution (conventional formulation) over the full extent.
-pub fn deconv2d_oom(
-    input: &FeatureMap<f32>,
-    w: &WeightsOIHW<f32>,
-    s: usize,
-) -> FeatureMap<f32> {
-    let k = w.kh;
-    let ins = insert_2d(input, s);
-    let padded = pad_2d(&ins, k - 1);
-    corr2d(&padded, &flip_2d(w))
+/// 2D OOM deconvolution (conventional formulation) over the full
+/// extent — the depth-1 fold of [`uniform::deconv_oom`].
+pub fn deconv2d_oom(input: &FeatureMap<f32>, w: &WeightsOIHW<f32>, s: usize) -> FeatureMap<f32> {
+    uniform::deconv_oom(&input.to_volume(), &w.to_oidhw(), s).into_feature_map()
 }
 
 /// 3D OOM deconvolution over the full extent.
-pub fn deconv3d_oom(
-    input: &Volume<f32>,
-    w: &WeightsOIDHW<f32>,
-    s: usize,
-) -> Volume<f32> {
-    let k = w.kh;
-    let ins = insert_3d(input, s);
-    let padded = pad_3d(&ins, k - 1);
-    corr3d(&padded, &flip_3d(w))
+pub fn deconv3d_oom(input: &Volume<f32>, w: &WeightsOIDHW<f32>, s: usize) -> Volume<f32> {
+    uniform::deconv_oom(input, w, s)
 }
 
 // ---------------------------------------------------------------------
@@ -154,32 +49,12 @@ pub fn deconv3d_oom(
 
 /// Keep `out[:, :h, :w]`.
 pub fn crop_2d(fm: &FeatureMap<f32>, h: usize, w: usize) -> FeatureMap<f32> {
-    assert!(h <= fm.h && w <= fm.w);
-    let mut out = FeatureMap::zeros(fm.c, h, w);
-    for c in 0..fm.c {
-        for y in 0..h {
-            for x in 0..w {
-                *out.at_mut(c, y, x) = fm.at(c, y, x);
-            }
-        }
-    }
-    out
+    uniform::crop(&fm.to_volume(), 1, h, w).into_feature_map()
 }
 
 /// Keep `out[:, :d, :h, :w]`.
 pub fn crop_3d(vol: &Volume<f32>, d: usize, h: usize, w: usize) -> Volume<f32> {
-    assert!(d <= vol.d && h <= vol.h && w <= vol.w);
-    let mut out = Volume::zeros(vol.c, d, h, w);
-    for c in 0..vol.c {
-        for z in 0..d {
-            for y in 0..h {
-                for x in 0..w {
-                    *out.at_mut(c, z, y, x) = vol.at(c, z, y, x);
-                }
-            }
-        }
-    }
-    out
+    uniform::crop(vol, d, h, w)
 }
 
 #[cfg(test)]

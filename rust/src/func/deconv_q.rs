@@ -5,122 +5,34 @@
 //! FIFOs, write local result" pipeline, so the functional simulator
 //! tier can be compared against this reference bit-for-bit.
 
-use crate::fixed::{Acc48, Q88};
-use crate::tensor::{FeatureMap, Volume, WeightsOIHW, WeightsOIDHW};
+use crate::fixed::Q88;
+use crate::tensor::{FeatureMap, Volume, WeightsOIDHW, WeightsOIHW};
 
-/// 2D IOM deconvolution in Q8.8 over the full Eq. (1) extent.
+use super::uniform;
+
+/// 2D IOM deconvolution in Q8.8 over the full Eq. (1) extent — the
+/// depth-1 fold of [`uniform::deconv_iom_q`].
 ///
 /// Accumulation is performed in Q16.16/48-bit per output element across
 /// *all* input channels before a single rounding at write-back (the
 /// adder tree + output buffer behaviour).
-pub fn deconv2d_iom_q(
-    input: &FeatureMap<Q88>,
-    w: &WeightsOIHW<Q88>,
-    s: usize,
-) -> FeatureMap<Q88> {
-    assert_eq!(input.c, w.i);
-    let k = w.kh;
-    let oh = (input.h - 1) * s + k;
-    let ow = (input.w - 1) * s + k;
-    let mut acc: Vec<Acc48> = vec![Acc48::ZERO; w.o * oh * ow];
-    for o in 0..w.o {
-        for i in 0..input.c {
-            let kern = w.kernel(o, i);
-            for ih in 0..input.h {
-                for iw in 0..input.w {
-                    let a = input.at(i, ih, iw);
-                    if a.is_zero() {
-                        continue;
-                    }
-                    for kh in 0..k {
-                        for kw in 0..k {
-                            let oy = ih * s + kh;
-                            let ox = iw * s + kw;
-                            acc[(o * oh + oy) * ow + ox].mac(a, kern[kh * k + kw]);
-                        }
-                    }
-                }
-            }
-        }
-    }
-    FeatureMap::from_vec(w.o, oh, ow, acc.into_iter().map(|a| a.to_q88()).collect())
+pub fn deconv2d_iom_q(input: &FeatureMap<Q88>, w: &WeightsOIHW<Q88>, s: usize) -> FeatureMap<Q88> {
+    uniform::deconv_iom_q(&input.to_volume(), &w.to_oidhw(), s).into_feature_map()
 }
 
 /// 3D IOM deconvolution in Q8.8 over the full Eq. (1) extent.
-pub fn deconv3d_iom_q(
-    input: &Volume<Q88>,
-    w: &WeightsOIDHW<Q88>,
-    s: usize,
-) -> Volume<Q88> {
-    assert_eq!(input.c, w.i);
-    let k = w.kh;
-    let od = (input.d - 1) * s + k;
-    let oh = (input.h - 1) * s + k;
-    let ow = (input.w - 1) * s + k;
-    let mut acc: Vec<Acc48> = vec![Acc48::ZERO; w.o * od * oh * ow];
-    for o in 0..w.o {
-        for i in 0..input.c {
-            let kern = w.kernel(o, i);
-            for id in 0..input.d {
-                for ih in 0..input.h {
-                    for iw in 0..input.w {
-                        let a = input.at(i, id, ih, iw);
-                        if a.is_zero() {
-                            continue;
-                        }
-                        for kd in 0..k {
-                            for kh in 0..k {
-                                for kw in 0..k {
-                                    let oz = id * s + kd;
-                                    let oy = ih * s + kh;
-                                    let ox = iw * s + kw;
-                                    acc[((o * od + oz) * oh + oy) * ow + ox]
-                                        .mac(a, kern[(kd * k + kh) * k + kw]);
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
-    Volume::from_vec(
-        w.o,
-        od,
-        oh,
-        ow,
-        acc.into_iter().map(|a| a.to_q88()).collect(),
-    )
+pub fn deconv3d_iom_q(input: &Volume<Q88>, w: &WeightsOIDHW<Q88>, s: usize) -> Volume<Q88> {
+    uniform::deconv_iom_q(input, w, s)
 }
 
 /// Crop a Q8.8 feature map (high-side, like [`super::crop_2d`]).
 pub fn crop_2d_q(fm: &FeatureMap<Q88>, h: usize, w: usize) -> FeatureMap<Q88> {
-    assert!(h <= fm.h && w <= fm.w);
-    let mut out = FeatureMap::zeros(fm.c, h, w);
-    for c in 0..fm.c {
-        for y in 0..h {
-            for x in 0..w {
-                *out.at_mut(c, y, x) = fm.at(c, y, x);
-            }
-        }
-    }
-    out
+    uniform::crop(&fm.to_volume(), 1, h, w).into_feature_map()
 }
 
 /// Crop a Q8.8 volume.
 pub fn crop_3d_q(vol: &Volume<Q88>, d: usize, h: usize, w: usize) -> Volume<Q88> {
-    assert!(d <= vol.d && h <= vol.h && w <= vol.w);
-    let mut out = Volume::zeros(vol.c, d, h, w);
-    for c in 0..vol.c {
-        for z in 0..d {
-            for y in 0..h {
-                for x in 0..w {
-                    *out.at_mut(c, z, y, x) = vol.at(c, z, y, x);
-                }
-            }
-        }
-    }
-    out
+    uniform::crop(vol, d, h, w)
 }
 
 #[cfg(test)]

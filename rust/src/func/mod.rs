@@ -17,6 +17,14 @@
 //! Python kernel tests (Pallas IOM kernel vs `ref.py` OOM oracle), and
 //! by the simulator's functional tier (bit-exact in Q8.8).
 //!
+//! Since the dimension-uniform refactor every loop nest lives exactly
+//! once, in [`uniform`], over `(c, d, h, w)` activations with `d = 1`
+//! for 2D — the software mirror of the paper's one-datapath claim
+//! (§IV-C). The `*2d_*` / `*3d_*` functions in [`conv`], [`deconv`],
+//! [`deconv_q`] and [`zero_insert`] are thin folds kept for the
+//! signatures that tests and benches pin; `tests/prop_uniform.rs`
+//! proves the folds are bit-exact.
+//!
 //! Output conventions: `*_full` returns the Eq. (1) extent
 //! `(I − 1)·S + K`; [`crop_2d`]/[`crop_3d`] remove the `K − S` edge
 //! padding from the high side of each axis (matching
@@ -26,9 +34,14 @@
 pub mod conv;
 pub mod deconv;
 pub mod deconv_q;
+pub mod uniform;
 pub mod zero_insert;
 
 pub use deconv::{
     crop_2d, crop_3d, deconv2d_iom, deconv2d_oom, deconv3d_iom, deconv3d_oom,
 };
 pub use deconv_q::{deconv2d_iom_q, deconv3d_iom_q};
+pub use uniform::{
+    deconv_iom, deconv_iom_q, deconv_iom_q_threaded, deconv_iom_threaded, deconv_oom,
+    deconv_oom_threaded,
+};

@@ -1,0 +1,600 @@
+//! The dimension-uniform kernel core (§IV-C in software).
+//!
+//! The paper's central claim is that one datapath serves both 2D and
+//! 3D DCNNs: a 2D deconvolution is simply the depth-1 fold of the 3D
+//! loop nest, exactly as [`crate::accel::mapping`] folds the `T_z`
+//! depth arrays into channel parallelism when a 2D net runs on the 3D
+//! operating point. This module is the software reflection of that
+//! claim: ONE implementation of every compute kernel over the uniform
+//! activation layout `C × D × H × W` (`d = 1` for 2D) and weight
+//! layout `O × I × Kd × Kh × Kw` (`kd = 1` for 2D).
+//!
+//! The typed 2D/3D entry points ([`super::deconv2d_iom`],
+//! [`super::conv::corr2d`], the `baseline` threaded kernels, ...) are
+//! thin folds onto these kernels, so *2D == depth-1 3D* holds
+//! **bit-exactly** by construction — asserted across the f32, Q8.8,
+//! OOM and threaded paths by `tests/prop_uniform.rs`.
+//!
+//! Performance notes (§Perf):
+//!
+//! * the IOM scatter works on contiguous output rows; the `K`-wide
+//!   inner scatter is monomorphized for the common kernel widths
+//!   (replacing the hand-copied `K = 3` special cases the old 2D and
+//!   3D kernels each carried) and falls back to a slice loop for any
+//!   other width;
+//! * [`deconv_iom_threaded`] / [`deconv_iom_q_threaded`] shard output
+//!   channels across scoped `std::thread` workers. Each output channel
+//!   is written by exactly one thread in the same order as the
+//!   single-threaded kernel, so threaded results are deterministic and
+//!   bit-identical to the single-threaded ones;
+//! * the OOM path materializes the zero-inserted, padded map **once**
+//!   and threads the dense correlation over output channels (the old
+//!   per-dimensionality baselines re-inserted zeros in every thread).
+
+use crate::fixed::{Acc48, Q88};
+use crate::tensor::{Volume, WeightsOIDHW};
+
+/// Eq. (1) accumulation extents `(I − 1)·S + K` per axis.
+#[inline]
+fn full_extents<T: Copy + Default>(
+    input: &Volume<T>,
+    kd: usize,
+    kh: usize,
+    kw: usize,
+    s: usize,
+) -> (usize, usize, usize) {
+    (
+        (input.d - 1) * s + kd,
+        (input.h - 1) * s + kh,
+        (input.w - 1) * s + kw,
+    )
+}
+
+/// Clamp a requested worker count to `[1, out_channels]`.
+#[inline]
+fn clamp_threads(threads: usize, out_channels: usize) -> usize {
+    threads.clamp(1, out_channels.max(1))
+}
+
+// ---------------------------------------------------------------------
+// The K-wide row scatter: out_row[iw·S + j] += a · k[j].
+//
+// One implementation, monomorphized per kernel width — the
+// generalization of the old per-kernel K=3 unrolled branches.
+// ---------------------------------------------------------------------
+
+#[inline(always)]
+fn scatter_row_k<const K: usize>(out_row: &mut [f32], in_row: &[f32], krow: &[f32], s: usize) {
+    let kern: &[f32; K] = krow.try_into().expect("kernel row width");
+    for (iw, &a) in in_row.iter().enumerate() {
+        if a == 0.0 {
+            continue; // IOM never multiplies a zero
+        }
+        let dst: &mut [f32; K] = (&mut out_row[iw * s..iw * s + K])
+            .try_into()
+            .expect("output row width");
+        for j in 0..K {
+            dst[j] += a * kern[j];
+        }
+    }
+}
+
+#[inline]
+fn scatter_row(out_row: &mut [f32], in_row: &[f32], krow: &[f32], s: usize) {
+    match krow.len() {
+        1 => scatter_row_k::<1>(out_row, in_row, krow, s),
+        2 => scatter_row_k::<2>(out_row, in_row, krow, s),
+        3 => scatter_row_k::<3>(out_row, in_row, krow, s),
+        4 => scatter_row_k::<4>(out_row, in_row, krow, s),
+        5 => scatter_row_k::<5>(out_row, in_row, krow, s),
+        k => {
+            for (iw, &a) in in_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let dst = &mut out_row[iw * s..iw * s + k];
+                for (d, &kv) in dst.iter_mut().zip(krow) {
+                    *d += a * kv;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// IOM: scatter-accumulate (f32).
+// out[o][id·S+kd][ih·S+kh][iw·S+kw] += in[i][id][ih][iw] · w[o][i][kd][kh][kw]
+// ---------------------------------------------------------------------
+
+/// Compute output channels `[o_lo, o_hi)` of the IOM deconvolution
+/// into `out`, a buffer holding exactly those channels.
+fn deconv_iom_into(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    o_lo: usize,
+    o_hi: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
+    debug_assert_eq!(out.len(), (o_hi - o_lo) * od * oh * ow);
+    for o in o_lo..o_hi {
+        let o_base = (o - o_lo) * od * oh * ow;
+        for i in 0..input.c {
+            let kern = w.kernel(o, i);
+            for id in 0..input.d {
+                for ih in 0..input.h {
+                    let in_row = input.row(i, id, ih);
+                    for dz in 0..w.kd {
+                        let z_base = o_base + (id * s + dz) * oh * ow;
+                        for dy in 0..w.kh {
+                            let kbase = (dz * w.kh + dy) * w.kw;
+                            let krow = &kern[kbase..kbase + w.kw];
+                            let row = z_base + (ih * s + dy) * ow;
+                            scatter_row(&mut out[row..row + ow], in_row, krow, s);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dimension-uniform IOM deconvolution over the full Eq. (1) extent
+/// (Fig. 5). A depth-1 input with a depth-1 kernel *is* the 2D case.
+pub fn deconv_iom(input: &Volume<f32>, w: &WeightsOIDHW<f32>, s: usize) -> Volume<f32> {
+    let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    deconv_iom_into(input, w, s, 0, w.o, out.data_mut());
+    out
+}
+
+/// [`deconv_iom`] with output channels sharded across `threads` scoped
+/// `std::thread` workers. Bit-identical to the single-threaded kernel
+/// (each output channel is written by exactly one thread, in the same
+/// accumulation order).
+pub fn deconv_iom_threaded(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    threads: usize,
+) -> Volume<f32> {
+    let t = clamp_threads(threads, w.o);
+    if t <= 1 {
+        return deconv_iom(input, w, s);
+    }
+    let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
+    let per_o = od * oh * ow;
+    let chunk_os = w.o.div_ceil(t);
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    std::thread::scope(|scope| {
+        for (ti, buf) in out.data_mut().chunks_mut(chunk_os * per_o).enumerate() {
+            let o_lo = ti * chunk_os;
+            let o_hi = (o_lo + chunk_os).min(w.o);
+            scope.spawn(move || deconv_iom_into(input, w, s, o_lo, o_hi, buf));
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------
+// IOM in Q8.8: the bit-exact model of the accelerator datapath.
+// ---------------------------------------------------------------------
+
+/// Accumulate output channels `[o_lo, o_hi)` of the Q8.8 IOM
+/// deconvolution into `acc` (one [`Acc48`] per output element of those
+/// channels) — the DSP48-style wide accumulation before the single
+/// write-back rounding.
+fn deconv_iom_q_into(
+    input: &Volume<Q88>,
+    w: &WeightsOIDHW<Q88>,
+    s: usize,
+    o_lo: usize,
+    o_hi: usize,
+    acc: &mut [Acc48],
+) {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
+    debug_assert_eq!(acc.len(), (o_hi - o_lo) * od * oh * ow);
+    for o in o_lo..o_hi {
+        let o_base = (o - o_lo) * od * oh * ow;
+        for i in 0..input.c {
+            let kern = w.kernel(o, i);
+            for id in 0..input.d {
+                for ih in 0..input.h {
+                    let in_row = input.row(i, id, ih);
+                    for dz in 0..w.kd {
+                        let z_base = o_base + (id * s + dz) * oh * ow;
+                        for dy in 0..w.kh {
+                            let kbase = (dz * w.kh + dy) * w.kw;
+                            let krow = &kern[kbase..kbase + w.kw];
+                            let row = z_base + (ih * s + dy) * ow;
+                            for (iw, &a) in in_row.iter().enumerate() {
+                                if a.is_zero() {
+                                    continue;
+                                }
+                                let dst = &mut acc[row + iw * s..row + iw * s + w.kw];
+                                for (d, &kv) in dst.iter_mut().zip(krow) {
+                                    d.mac(a, kv);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dimension-uniform Q8.8 IOM deconvolution over the full Eq. (1)
+/// extent. Accumulation happens in the 48-bit accumulator across *all*
+/// input channels before a single rounding at write-back (the adder
+/// tree + output buffer behaviour), so results are bit-exact against
+/// the functional mesh tier.
+pub fn deconv_iom_q(input: &Volume<Q88>, w: &WeightsOIDHW<Q88>, s: usize) -> Volume<Q88> {
+    let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
+    let mut acc = vec![Acc48::ZERO; w.o * od * oh * ow];
+    deconv_iom_q_into(input, w, s, 0, w.o, &mut acc);
+    Volume::from_vec(
+        w.o,
+        od,
+        oh,
+        ow,
+        acc.into_iter().map(|a| a.to_q88()).collect(),
+    )
+}
+
+/// [`deconv_iom_q`] with output channels sharded across `threads`
+/// scoped workers; bit-identical to the single-threaded kernel
+/// (integer accumulation is exact, one thread per output channel).
+pub fn deconv_iom_q_threaded(
+    input: &Volume<Q88>,
+    w: &WeightsOIDHW<Q88>,
+    s: usize,
+    threads: usize,
+) -> Volume<Q88> {
+    let t = clamp_threads(threads, w.o);
+    if t <= 1 {
+        return deconv_iom_q(input, w, s);
+    }
+    let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
+    let per_o = od * oh * ow;
+    let chunk_os = w.o.div_ceil(t);
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    std::thread::scope(|scope| {
+        for (ti, buf) in out.data_mut().chunks_mut(chunk_os * per_o).enumerate() {
+            let o_lo = ti * chunk_os;
+            let o_hi = (o_lo + chunk_os).min(w.o);
+            scope.spawn(move || {
+                let mut acc = vec![Acc48::ZERO; buf.len()];
+                deconv_iom_q_into(input, w, s, o_lo, o_hi, &mut acc);
+                for (dst, a) in buf.iter_mut().zip(acc) {
+                    *dst = a.to_q88();
+                }
+            });
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------
+// OOM building blocks: zero-insert, pad, flip, correlate.
+// ---------------------------------------------------------------------
+
+/// Insert `s − 1` zeros between activations along every spatial axis
+/// (§III, Fig. 3). Output extent per axis: `(I − 1)·s + 1` — a depth-1
+/// input keeps depth 1, so the 2D case needs no special branch.
+pub fn zero_insert<T: Copy + Default>(vol: &Volume<T>, s: usize) -> Volume<T> {
+    assert!(s >= 1);
+    let od = (vol.d - 1) * s + 1;
+    let oh = (vol.h - 1) * s + 1;
+    let ow = (vol.w - 1) * s + 1;
+    let mut out = Volume::zeros(vol.c, od, oh, ow);
+    for c in 0..vol.c {
+        for d in 0..vol.d {
+            for h in 0..vol.h {
+                for w in 0..vol.w {
+                    *out.at_mut(c, d * s, h * s, w * s) = vol.at(c, d, h, w);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pad with a zero border: `pd` planes on both depth sides, `ph` rows
+/// and `pw` columns on both spatial sides. The 2D fold passes
+/// `pd = 0` (its kernel has no depth extent).
+pub fn pad<T: Copy + Default>(vol: &Volume<T>, pd: usize, ph: usize, pw: usize) -> Volume<T> {
+    let mut out = Volume::zeros(vol.c, vol.d + 2 * pd, vol.h + 2 * ph, vol.w + 2 * pw);
+    for c in 0..vol.c {
+        for d in 0..vol.d {
+            for h in 0..vol.h {
+                for w in 0..vol.w {
+                    *out.at_mut(c, d + pd, h + ph, w + pw) = vol.at(c, d, h, w);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Spatially flip a kernel on every axis (for true convolution vs
+/// correlation); `kd = 1` makes the depth flip a no-op.
+pub fn flip(w: &WeightsOIDHW<f32>) -> WeightsOIDHW<f32> {
+    let mut out = WeightsOIDHW::zeros(w.o, w.i, w.kd, w.kh, w.kw);
+    for o in 0..w.o {
+        for i in 0..w.i {
+            for kd in 0..w.kd {
+                for kh in 0..w.kh {
+                    for kw in 0..w.kw {
+                        *out.at_mut(o, i, w.kd - 1 - kd, w.kh - 1 - kh, w.kw - 1 - kw) =
+                            w.at(o, i, kd, kh, kw);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Compute output channels `[o_lo, o_hi)` of the VALID stride-1
+/// correlation into `out`, a buffer holding exactly those channels.
+fn corr_into(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    o_lo: usize,
+    o_hi: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    assert!(
+        input.d >= w.kd && input.h >= w.kh && input.w >= w.kw,
+        "kernel larger than input"
+    );
+    let od = input.d - w.kd + 1;
+    let oh = input.h - w.kh + 1;
+    let ow = input.w - w.kw + 1;
+    debug_assert_eq!(out.len(), (o_hi - o_lo) * od * oh * ow);
+    for o in o_lo..o_hi {
+        let o_base = (o - o_lo) * od * oh * ow;
+        for i in 0..input.c {
+            let kern = w.kernel(o, i);
+            for z in 0..od {
+                for y in 0..oh {
+                    for x in 0..ow {
+                        let mut acc = 0.0f32;
+                        for kd in 0..w.kd {
+                            for kh in 0..w.kh {
+                                let in_row = input.row(i, z + kd, y + kh);
+                                let kbase = (kd * w.kh + kh) * w.kw;
+                                let krow = &kern[kbase..kbase + w.kw];
+                                for (kw, &kv) in krow.iter().enumerate() {
+                                    acc += in_row[x + kw] * kv;
+                                }
+                            }
+                        }
+                        out[o_base + (z * oh + y) * ow + x] += acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dimension-uniform VALID correlation (CNN convention), stride 1.
+/// `kd = 1` on a depth-1 input is exactly the 2D case.
+pub fn corr(input: &Volume<f32>, w: &WeightsOIDHW<f32>) -> Volume<f32> {
+    let od = input.d - w.kd + 1;
+    let oh = input.h - w.kh + 1;
+    let ow = input.w - w.kw + 1;
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    corr_into(input, w, 0, w.o, out.data_mut());
+    out
+}
+
+/// [`corr`] with output channels sharded across `threads` scoped
+/// workers (bit-identical to the single-threaded kernel).
+pub fn corr_threaded(input: &Volume<f32>, w: &WeightsOIDHW<f32>, threads: usize) -> Volume<f32> {
+    let t = clamp_threads(threads, w.o);
+    if t <= 1 {
+        return corr(input, w);
+    }
+    let od = input.d - w.kd + 1;
+    let oh = input.h - w.kh + 1;
+    let ow = input.w - w.kw + 1;
+    let per_o = od * oh * ow;
+    let chunk_os = w.o.div_ceil(t);
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    std::thread::scope(|scope| {
+        for (ti, buf) in out.data_mut().chunks_mut(chunk_os * per_o).enumerate() {
+            let o_lo = ti * chunk_os;
+            let o_hi = (o_lo + chunk_os).min(w.o);
+            scope.spawn(move || corr_into(input, w, o_lo, o_hi, buf));
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------
+// OOM: zero-insert, pad K−1, correlate with the flipped kernel.
+// ---------------------------------------------------------------------
+
+/// Dimension-uniform OOM deconvolution (the conventional formulation)
+/// over the full Eq. (1) extent. Equals [`deconv_iom`] on every shape
+/// — the §III equivalence the property suite asserts.
+pub fn deconv_oom(input: &Volume<f32>, w: &WeightsOIDHW<f32>, s: usize) -> Volume<f32> {
+    let ins = zero_insert(input, s);
+    let padded = pad(&ins, w.kd - 1, w.kh - 1, w.kw - 1);
+    corr(&padded, &flip(w))
+}
+
+/// [`deconv_oom`] with the dense correlation threaded over output
+/// channels — the CPU-baseline hot loop. The zero-inserted, padded map
+/// is materialized once and shared by every worker.
+pub fn deconv_oom_threaded(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    threads: usize,
+) -> Volume<f32> {
+    let ins = zero_insert(input, s);
+    let padded = pad(&ins, w.kd - 1, w.kh - 1, w.kw - 1);
+    corr_threaded(&padded, &flip(w), threads)
+}
+
+// ---------------------------------------------------------------------
+// Cropping: remove the K−S high-side edge padding (§IV-B).
+// ---------------------------------------------------------------------
+
+/// Keep `vol[:, :d, :h, :w]` (works for any element type — f32, Q8.8).
+pub fn crop<T: Copy + Default>(vol: &Volume<T>, d: usize, h: usize, w: usize) -> Volume<T> {
+    assert!(d <= vol.d && h <= vol.h && w <= vol.w);
+    let mut out = Volume::zeros(vol.c, d, h, w);
+    for c in 0..vol.c {
+        for z in 0..d {
+            for y in 0..h {
+                let src = &vol.row(c, z, y)[..w];
+                let base = ((c * d + z) * h + y) * w;
+                out.data_mut()[base..base + w].copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn rand_case(
+        seed: u64,
+        (c_in, c_out): (usize, usize),
+        (d, h, w): (usize, usize, usize),
+        (kd, kh, kw): (usize, usize, usize),
+    ) -> (Volume<f32>, WeightsOIDHW<f32>) {
+        let mut rng = Prng::new(seed);
+        let mut input = Volume::zeros(c_in, d, h, w);
+        rng.fill_f32(input.data_mut(), -1.0, 1.0);
+        let mut wt = WeightsOIDHW::zeros(c_out, c_in, kd, kh, kw);
+        rng.fill_f32(wt.data_mut(), -1.0, 1.0);
+        (input, wt)
+    }
+
+    #[test]
+    fn iom_equals_oom_across_kernel_widths() {
+        // the generalized unroll (K = 1..7, incl. the non-monomorphized
+        // fallback) must stay equal to the OOM reference
+        for k in 1..=7usize {
+            for s in 1..=k.min(3) {
+                let (input, wt) = rand_case(k as u64, (2, 3), (1, 3, 4), (1, k, k));
+                let a = deconv_iom(&input, &wt, s);
+                let b = deconv_oom(&input, &wt, s);
+                assert_eq!((a.d, a.h, a.w), (b.d, b.h, b.w));
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert!((x - y).abs() < 1e-4, "k={k} s={s}: IOM {x} vs OOM {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn iom_equals_oom_3d() {
+        let (input, wt) = rand_case(11, (2, 2), (3, 3, 2), (3, 3, 3));
+        for s in [1, 2] {
+            let a = deconv_iom(&input, &wt, s);
+            let b = deconv_oom(&input, &wt, s);
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!((x - y).abs() < 1e-4, "IOM {x} vs OOM {y} (s={s})");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_is_bit_identical() {
+        let (input, wt) = rand_case(7, (3, 5), (2, 4, 3), (3, 3, 3));
+        let single = deconv_iom(&input, &wt, 2);
+        for t in [1, 2, 3, 8, 64] {
+            let multi = deconv_iom_threaded(&input, &wt, 2, t);
+            assert_eq!(single.data(), multi.data(), "t={t}");
+        }
+        let oom_single = deconv_oom(&input, &wt, 2);
+        for t in [2, 4] {
+            let oom_multi = deconv_oom_threaded(&input, &wt, 2, t);
+            assert_eq!(oom_single.data(), oom_multi.data(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn threaded_q_is_bit_identical() {
+        let (input, wt) = rand_case(13, (2, 5), (2, 3, 3), (3, 3, 3));
+        let qi = Volume::from_vec(
+            input.c,
+            input.d,
+            input.h,
+            input.w,
+            input.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+        );
+        let qw = WeightsOIDHW::from_vec(
+            wt.o,
+            wt.i,
+            wt.kd,
+            wt.kh,
+            wt.kw,
+            wt.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+        );
+        let single = deconv_iom_q(&qi, &qw, 2);
+        for t in [2, 3, 16] {
+            let multi = deconv_iom_q_threaded(&qi, &qw, 2, t);
+            assert_eq!(single.data(), multi.data(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn depth1_matches_hand_2d() {
+        // one activation a = 2 at the origin: output = a * kernel
+        let input = Volume::from_vec(1, 1, 1, 1, vec![2.0]);
+        let w = WeightsOIDHW::from_vec(1, 1, 1, 3, 3, (1..=9).map(|x| x as f32).collect());
+        let out = deconv_iom(&input, &w, 2);
+        assert_eq!((out.d, out.h, out.w), (1, 3, 3));
+        for idx in 0..9 {
+            assert_eq!(out.data()[idx], 2.0 * (idx + 1) as f32);
+        }
+    }
+
+    #[test]
+    fn zero_insert_depth1_keeps_depth1() {
+        let fm = Volume::from_vec(1, 1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let ins = zero_insert(&fm, 2);
+        assert_eq!((ins.d, ins.h, ins.w), (1, 3, 3));
+        assert_eq!(ins.at(0, 0, 2, 2), 4.0);
+    }
+
+    #[test]
+    fn pad_depth_only_when_asked() {
+        let v = Volume::from_vec(1, 1, 1, 1, vec![5.0]);
+        let p2 = pad(&v, 0, 2, 2);
+        assert_eq!((p2.d, p2.h, p2.w), (1, 5, 5));
+        assert_eq!(p2.at(0, 0, 2, 2), 5.0);
+        let p3 = pad(&v, 1, 1, 1);
+        assert_eq!((p3.d, p3.h, p3.w), (3, 3, 3));
+        assert_eq!(p3.at(0, 1, 1, 1), 5.0);
+    }
+
+    #[test]
+    fn crop_keeps_low_corner() {
+        let v = Volume::from_vec(1, 2, 2, 2, (0..8).map(|x| x as f32).collect());
+        let c = crop(&v, 1, 2, 1);
+        assert_eq!((c.d, c.h, c.w), (1, 2, 1));
+        assert_eq!(c.data(), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn eq1_output_extents() {
+        let (input, wt) = rand_case(3, (1, 1), (2, 3, 4), (3, 3, 3));
+        let out = deconv_iom(&input, &wt, 2);
+        assert_eq!((out.d, out.h, out.w), (5, 7, 9));
+    }
+}

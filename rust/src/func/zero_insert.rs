@@ -1,73 +1,33 @@
 //! Zero insertion (§III, Fig. 3): the transformation that turns a
 //! deconvolution into a dense convolution, and the source of the
-//! sparsity plotted in Fig. 1.
+//! sparsity plotted in Fig. 1. The loop nests live in
+//! [`super::uniform`]; the 2D entry points are depth-1 folds.
 
 use crate::tensor::{FeatureMap, Volume};
+
+use super::uniform;
 
 /// Insert `s − 1` zeros between activations along H and W.
 /// Output extent per axis: `(I − 1)·s + 1`.
 pub fn insert_2d(fm: &FeatureMap<f32>, s: usize) -> FeatureMap<f32> {
-    assert!(s >= 1);
-    let oh = (fm.h - 1) * s + 1;
-    let ow = (fm.w - 1) * s + 1;
-    let mut out = FeatureMap::zeros(fm.c, oh, ow);
-    for c in 0..fm.c {
-        for h in 0..fm.h {
-            for w in 0..fm.w {
-                *out.at_mut(c, h * s, w * s) = fm.at(c, h, w);
-            }
-        }
-    }
-    out
+    uniform::zero_insert(&fm.to_volume(), s).into_feature_map()
 }
 
 /// Insert `s − 1` zeros between activations along D, H and W — including
 /// the all-zero "M1 planes" between consecutive 2D data planes that
 /// Fig. 3(b) highlights.
 pub fn insert_3d(vol: &Volume<f32>, s: usize) -> Volume<f32> {
-    assert!(s >= 1);
-    let od = (vol.d - 1) * s + 1;
-    let oh = (vol.h - 1) * s + 1;
-    let ow = (vol.w - 1) * s + 1;
-    let mut out = Volume::zeros(vol.c, od, oh, ow);
-    for c in 0..vol.c {
-        for d in 0..vol.d {
-            for h in 0..vol.h {
-                for w in 0..vol.w {
-                    *out.at_mut(c, d * s, h * s, w * s) = vol.at(c, d, h, w);
-                }
-            }
-        }
-    }
-    out
+    uniform::zero_insert(vol, s)
 }
 
 /// Pad a 2D map with a zero border of `p` on every side.
 pub fn pad_2d(fm: &FeatureMap<f32>, p: usize) -> FeatureMap<f32> {
-    let mut out = FeatureMap::zeros(fm.c, fm.h + 2 * p, fm.w + 2 * p);
-    for c in 0..fm.c {
-        for h in 0..fm.h {
-            for w in 0..fm.w {
-                *out.at_mut(c, h + p, w + p) = fm.at(c, h, w);
-            }
-        }
-    }
-    out
+    uniform::pad(&fm.to_volume(), 0, p, p).into_feature_map()
 }
 
 /// Pad a 3D volume with a zero border of `p` on every side.
 pub fn pad_3d(vol: &Volume<f32>, p: usize) -> Volume<f32> {
-    let mut out = Volume::zeros(vol.c, vol.d + 2 * p, vol.h + 2 * p, vol.w + 2 * p);
-    for c in 0..vol.c {
-        for d in 0..vol.d {
-            for h in 0..vol.h {
-                for w in 0..vol.w {
-                    *out.at_mut(c, d + p, h + p, w + p) = vol.at(c, d, h, w);
-                }
-            }
-        }
-    }
-    out
+    uniform::pad(vol, p, p, p)
 }
 
 #[cfg(test)]

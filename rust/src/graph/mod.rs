@@ -18,7 +18,12 @@
 //!   on-chip, else it spills to DDR);
 //! * [`simulate`] — [`simulate_plan`] executes a [`NetworkPlan`] with
 //!   cross-layer double-buffered prefetch overlap and reports
-//!   end-to-end latency / TOPS / DDR traffic.
+//!   end-to-end latency / TOPS / DDR traffic;
+//! * [`execute`] — [`execute_f32`] runs a lowered graph *numerically*
+//!   through the dimension-uniform kernel core
+//!   ([`crate::func::uniform`]), proving the lowering pipeline
+//!   preserves semantics; its tests cross-check it against the same
+//!   per-layer loop the coordinator's golden forward runs.
 //!
 //! **IOM vs OOM.** A deconvolution can be computed *output-oriented*
 //! (OOM): insert `S−1` zeros between input activations, pad, and run a
@@ -34,11 +39,13 @@
 //! The CLI front end is `udcnn compile <net>`; the coordinator serves
 //! compiled plans; `benches/e2e_network.rs` tracks the numbers.
 
+pub mod execute;
 pub mod ir;
 pub mod passes;
 pub mod plan;
 pub mod simulate;
 
+pub use execute::execute_f32;
 pub use ir::{Act, NetworkGraph, NodeId, NodeSpec, OpKind, TensorShape};
 pub use plan::{compile, EdgePlace, NetworkPlan, StepPlan};
 pub use simulate::{simulate_plan, NetworkRunMetrics};

@@ -18,8 +18,6 @@
 //! testable in isolation; [`lower`] is the pipeline the CLI and the
 //! coordinator use before [`super::plan::compile`].
 
-use crate::dcnn::Dims;
-
 use super::ir::{NetworkGraph, NodeId, NodeSpec, OpKind, TensorShape};
 
 /// Structural validation: every edge references an earlier node, every
@@ -89,16 +87,14 @@ fn node_out_shape(n: &NodeSpec, input: Option<TensorShape>) -> Result<TensorShap
         }
         OpKind::ZeroInsert { spec } => {
             expect_input(TensorShape::of_layer_input(spec))?;
-            // inserted extent (I−1)·S+1, plus the K−1 'full'-conv border
+            // inserted extent (I−1)·S+1, plus the K−1 'full'-conv
+            // border per axis. Dimension-uniform: a 2D layer has
+            // in_d = 1 (inserted extent 1) and k_d() = 1 (no depth
+            // border), so no dimensionality branch is needed.
             let pad = 2 * (spec.k - 1);
-            let d = if spec.dims == Dims::D2 {
-                1
-            } else {
-                spec.ins_extent(spec.in_d) + pad
-            };
             Ok(TensorShape::new(
                 spec.in_c,
-                d,
+                spec.ins_extent(spec.in_d) + 2 * (spec.k_d() - 1),
                 spec.ins_extent(spec.in_h) + pad,
                 spec.ins_extent(spec.in_w) + pad,
             ))

@@ -15,7 +15,10 @@
 //! * [`func`] — functional golden models of deconvolution: the OOM
 //!   formulation (zero-insertion + dense convolution, the paper's
 //!   baseline) and the IOM formulation (scatter-accumulate, the paper's
-//!   contribution), in both `f32` and Q8.8.
+//!   contribution), in both `f32` and Q8.8. All loop nests live once in
+//!   [`func::uniform`] — the dimension-uniform kernel core (§IV-C): 2D
+//!   runs as the depth-1 fold of the 3D kernel, bit-exactly, with
+//!   threaded variants for the serving hot path.
 //! * [`accel`] — the paper's system contribution: a cycle-level simulator
 //!   of the uniform PE-mesh architecture of Fig. 2 (PEs with overlap
 //!   FIFOs, weight shift chain, adder trees, triple on-chip buffers,

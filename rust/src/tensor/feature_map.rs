@@ -74,6 +74,17 @@ impl<T: Copy + Default> FeatureMap<T> {
         Tensor::from_vec(&[self.c, self.h, self.w], self.data)
     }
 
+    /// Copy into the uniform depth-1 volume `(c, 1, h, w)` — the
+    /// §IV-C fold the [`crate::func::uniform`] kernels consume.
+    pub fn to_volume(&self) -> Volume<T> {
+        Volume::from_vec(self.c, 1, self.h, self.w, self.data.clone())
+    }
+
+    /// Consume into the uniform depth-1 volume (zero-copy).
+    pub fn into_volume(self) -> Volume<T> {
+        Volume::from_vec(self.c, 1, self.h, self.w, self.data)
+    }
+
     /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
@@ -129,6 +140,22 @@ impl<T: Copy + Default> Volume<T> {
     pub fn at_mut(&mut self, c: usize, d: usize, h: usize, w: usize) -> &mut T {
         debug_assert!(c < self.c && d < self.d && h < self.h && w < self.w);
         &mut self.data[((c * self.d + d) * self.h + h) * self.w + w]
+    }
+
+    /// Contiguous row `(c, d, h, ·)` — what the uniform IOM scatter
+    /// streams.
+    #[inline]
+    pub fn row(&self, c: usize, d: usize, h: usize) -> &[T] {
+        debug_assert!(c < self.c && d < self.d && h < self.h);
+        let base = ((c * self.d + d) * self.h + h) * self.w;
+        &self.data[base..base + self.w]
+    }
+
+    /// Consume a depth-1 volume into its 2D [`FeatureMap`] view
+    /// (zero-copy). Panics unless `d == 1`.
+    pub fn into_feature_map(self) -> FeatureMap<T> {
+        assert_eq!(self.d, 1, "into_feature_map requires a depth-1 volume");
+        FeatureMap::from_vec(self.c, self.h, self.w, self.data)
     }
 
     #[inline]
@@ -211,6 +238,17 @@ impl<T: Copy + Default> WeightsOIHW<T> {
         let sz = self.kh * self.kw;
         let base = (o * self.i + i) * sz;
         &self.data[base..base + sz]
+    }
+
+    /// Copy into the uniform `O × I × 1 × Kh × Kw` weight layout (the
+    /// depth-1 kernel fold).
+    pub fn to_oidhw(&self) -> WeightsOIDHW<T> {
+        WeightsOIDHW::from_vec(self.o, self.i, 1, self.kh, self.kw, self.data.clone())
+    }
+
+    /// Consume into the uniform depth-1 weight layout (zero-copy).
+    pub fn into_oidhw(self) -> WeightsOIDHW<T> {
+        WeightsOIDHW::from_vec(self.o, self.i, 1, self.kh, self.kw, self.data)
     }
 
     #[inline]
@@ -301,6 +339,13 @@ impl<T: Copy + Default> WeightsOIDHW<T> {
         &self.data[base..base + sz]
     }
 
+    /// Consume depth-1 weights into their 2D `OIHW` view (zero-copy).
+    /// Panics unless `kd == 1`.
+    pub fn into_oihw(self) -> WeightsOIHW<T> {
+        assert_eq!(self.kd, 1, "into_oihw requires a depth-1 kernel");
+        WeightsOIHW::from_vec(self.o, self.i, self.kh, self.kw, self.data)
+    }
+
     #[inline]
     /// Flat data, `O × I × Kd × Kh × Kw` row-major.
     pub fn data(&self) -> &[T] {
@@ -362,6 +407,31 @@ mod tests {
         let k = w.kernel(1, 1);
         assert_eq!(k.len(), 27);
         assert_eq!(k[26], 4.0);
+    }
+
+    #[test]
+    fn uniform_fold_round_trips() {
+        let fm = FeatureMap::from_vec(2, 3, 4, (0..24).map(|x| x as f32).collect());
+        let vol = fm.to_volume();
+        assert_eq!((vol.c, vol.d, vol.h, vol.w), (2, 1, 3, 4));
+        assert_eq!(vol.at(0, 0, 2, 3), fm.at(0, 2, 3));
+        assert_eq!(vol.row(1, 0, 1), &fm.plane(1)[4..8]);
+        assert_eq!(vol.into_feature_map(), fm);
+        assert_eq!(fm.clone().into_volume().into_feature_map(), fm);
+
+        let w = WeightsOIHW::from_vec(2, 2, 3, 3, (0..36).map(|x| x as f32).collect());
+        let w3 = w.to_oidhw();
+        assert_eq!((w3.o, w3.i, w3.kd, w3.kh, w3.kw), (2, 2, 1, 3, 3));
+        assert_eq!(w3.at(1, 0, 0, 2, 2), w.at(1, 0, 2, 2));
+        assert_eq!(w3.kernel(1, 1), w.kernel(1, 1));
+        assert_eq!(w3.into_oihw(), w);
+    }
+
+    #[test]
+    #[should_panic(expected = "depth-1")]
+    fn deep_volume_rejects_2d_view() {
+        let v: Volume<f32> = Volume::zeros(1, 2, 2, 2);
+        let _ = v.into_feature_map();
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! The generic [`Tensor`] carries a dynamic shape; typed views give
 //! bounds-checked (debug) / unchecked (release) indexing on the hot
 //! paths of the golden models and baselines.
+//!
+//! [`Volume`] / [`WeightsOIDHW`] double as the *uniform* activation and
+//! weight representation of `func::uniform` (§IV-C): a 2D tensor is the
+//! depth-1 fold (`d = 1`, `kd = 1`), reached zero-copy via
+//! `FeatureMap::into_volume` / `Volume::into_feature_map` and the
+//! matching weight conversions.
 
 mod dense;
 mod feature_map;

@@ -1,0 +1,267 @@
+//! Property tests for the dimension-uniform kernel core (§IV-C).
+//!
+//! The refactored stack computes every 2D kernel as the depth-1 fold
+//! of the one 3D loop nest in `func::uniform`. These properties pin
+//! that contract **bit-exactly** (`==` on raw buffers, no tolerance)
+//! across every kernel family — IOM, OOM, quantized, threaded — and
+//! assert the accelerator-model side of the same claim: 2D layers fold
+//! `T_z` into channel parallelism with FIFO-D disabled.
+
+use udcnn::accel::{AccelConfig, Mapping};
+use udcnn::baseline::CpuBaseline;
+use udcnn::dcnn::LayerSpec;
+use udcnn::fixed::Q88;
+use udcnn::func::conv::{corr2d, corr3d};
+use udcnn::func::deconv_q::{deconv2d_iom_q, deconv3d_iom_q};
+use udcnn::func::uniform;
+use udcnn::func::zero_insert::{insert_2d, insert_3d};
+use udcnn::func::{deconv2d_iom, deconv2d_oom, deconv3d_iom, deconv3d_oom};
+use udcnn::propcheck::{check, Config, Gen};
+use udcnn::tensor::{FeatureMap, Volume, WeightsOIDHW, WeightsOIHW};
+
+/// A random 2D case plus its hand-built depth-1 3D twin (same flat
+/// buffers, explicit `d = 1` / `kd = 1` shapes).
+struct Folded {
+    fm: FeatureMap<f32>,
+    vol: Volume<f32>,
+    w2: WeightsOIHW<f32>,
+    w3: WeightsOIDHW<f32>,
+    s: usize,
+}
+
+fn gen_folded(g: &mut Gen) -> Folded {
+    let (c_in, c_out) = (g.int(1, 4), g.int(1, 4));
+    let (h, w) = (g.int(1, 6), g.int(1, 6));
+    let s = *g.choose(&[1usize, 2, 3]);
+    let k = s + g.int(0, 3); // K >= S (the §IV-B crop constraint)
+    let mut fm = FeatureMap::zeros(c_in, h, w);
+    for v in fm.data_mut() {
+        *v = g.f32(-2.0, 2.0);
+    }
+    let mut w2 = WeightsOIHW::zeros(c_out, c_in, k, k);
+    for v in w2.data_mut() {
+        *v = g.f32(-1.0, 1.0);
+    }
+    let vol = Volume::from_vec(c_in, 1, h, w, fm.data().to_vec());
+    let w3 = WeightsOIDHW::from_vec(
+        c_out,
+        c_in,
+        1,
+        k,
+        k,
+        w2.data().to_vec(),
+    );
+    Folded { fm, vol, w2, w3, s }
+}
+
+/// IOM (f32): the 2D kernel is bit-exactly the depth-1 3D kernel.
+#[test]
+fn prop_iom_2d_is_depth1_3d_bitexact() {
+    check(Config { cases: 60, ..Default::default() }, |g| {
+        let f = gen_folded(g);
+        let a = deconv2d_iom(&f.fm, &f.w2, f.s);
+        let b = deconv3d_iom(&f.vol, &f.w3, f.s);
+        if (b.c, b.d, b.h, b.w) != (a.c, 1, a.h, a.w) {
+            return Err(format!("shape mismatch: 2D {:?} vs 3D d={}", (a.c, a.h, a.w), b.d));
+        }
+        if a.data() != b.data() {
+            return Err("2D IOM != depth-1 3D IOM (f32 bits)".into());
+        }
+        Ok(())
+    });
+}
+
+/// OOM (f32): same fold, same bits.
+#[test]
+fn prop_oom_2d_is_depth1_3d_bitexact() {
+    check(Config { cases: 40, ..Default::default() }, |g| {
+        let f = gen_folded(g);
+        let a = deconv2d_oom(&f.fm, &f.w2, f.s);
+        let b = deconv3d_oom(&f.vol, &f.w3, f.s);
+        if a.data() != b.data() {
+            return Err("2D OOM != depth-1 3D OOM (f32 bits)".into());
+        }
+        Ok(())
+    });
+}
+
+/// Quantized (Q8.8): same fold, same bits.
+#[test]
+fn prop_q88_2d_is_depth1_3d_bitexact() {
+    check(Config { cases: 40, ..Default::default() }, |g| {
+        let f = gen_folded(g);
+        let q = |xs: &[f32]| xs.iter().map(|&x| Q88::from_f32(x)).collect::<Vec<_>>();
+        let fm = FeatureMap::from_vec(f.fm.c, f.fm.h, f.fm.w, q(f.fm.data()));
+        let vol = Volume::from_vec(f.vol.c, 1, f.vol.h, f.vol.w, q(f.vol.data()));
+        let w2 = WeightsOIHW::from_vec(
+            f.w2.o,
+            f.w2.i,
+            f.w2.kh,
+            f.w2.kw,
+            q(f.w2.data()),
+        );
+        let w3 = WeightsOIDHW::from_vec(
+            f.w3.o,
+            f.w3.i,
+            1,
+            f.w3.kh,
+            f.w3.kw,
+            q(f.w3.data()),
+        );
+        let a = deconv2d_iom_q(&fm, &w2, f.s);
+        let b = deconv3d_iom_q(&vol, &w3, f.s);
+        if a.data() != b.data() {
+            return Err("2D Q8.8 IOM != depth-1 3D Q8.8 IOM".into());
+        }
+        Ok(())
+    });
+}
+
+/// Threaded baseline: the 2D threaded kernel equals the depth-1 3D
+/// threaded kernel, and both equal the single-threaded uniform OOM.
+#[test]
+fn prop_threaded_2d_is_depth1_3d_bitexact() {
+    check(Config { cases: 20, ..Default::default() }, |g| {
+        let f = gen_folded(g);
+        let base = CpuBaseline {
+            threads: g.int(1, 6),
+            ..Default::default()
+        };
+        let a = base.deconv2d_threaded(&f.fm, &f.w2, f.s);
+        let b = base.deconv3d_threaded(&f.vol, &f.w3, f.s);
+        if a.data() != b.data() {
+            return Err(format!("2D threaded != depth-1 3D threaded (t={})", base.threads));
+        }
+        let single = uniform::deconv_oom(&f.vol, &f.w3, f.s);
+        if b.data() != single.data() {
+            return Err(format!("threaded != single-threaded OOM (t={})", base.threads));
+        }
+        Ok(())
+    });
+}
+
+/// The threaded uniform IOM kernel is bit-identical to the
+/// single-threaded one for any thread count (each output channel is
+/// written by exactly one thread in the same order).
+#[test]
+fn prop_threaded_iom_bit_identical_any_thread_count() {
+    check(Config { cases: 25, ..Default::default() }, |g| {
+        let (c_in, c_out) = (g.int(1, 3), g.int(1, 6));
+        let (d, h, w) = (g.int(1, 3), g.int(1, 4), g.int(1, 4));
+        let s = *g.choose(&[1usize, 2]);
+        let k = s + g.int(0, 2);
+        let mut input = Volume::zeros(c_in, d, h, w);
+        for v in input.data_mut() {
+            *v = g.f32(-2.0, 2.0);
+        }
+        let mut wt = WeightsOIDHW::zeros(c_out, c_in, k, k, k);
+        for v in wt.data_mut() {
+            *v = g.f32(-1.0, 1.0);
+        }
+        let single = uniform::deconv_iom(&input, &wt, s);
+        let t = g.int(2, 9);
+        let multi = uniform::deconv_iom_threaded(&input, &wt, s, t);
+        if single.data() != multi.data() {
+            return Err(format!("threaded IOM diverged at t={t}"));
+        }
+        let qi = Volume::from_vec(
+            c_in,
+            d,
+            h,
+            w,
+            input.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+        );
+        let qw = WeightsOIDHW::from_vec(
+            c_out,
+            c_in,
+            k,
+            k,
+            k,
+            wt.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+        );
+        let qs = uniform::deconv_iom_q(&qi, &qw, s);
+        let qm = uniform::deconv_iom_q_threaded(&qi, &qw, s, t);
+        if qs.data() != qm.data() {
+            return Err(format!("threaded Q8.8 IOM diverged at t={t}"));
+        }
+        Ok(())
+    });
+}
+
+/// The supporting kernels fold the same way: zero-insert and VALID
+/// correlation on a depth-1 volume are bit-exactly their 2D versions.
+#[test]
+fn prop_insert_and_corr_fold_bitexact() {
+    check(Config { cases: 40, ..Default::default() }, |g| {
+        let f = gen_folded(g);
+        let s = f.s;
+        let ins2 = insert_2d(&f.fm, s);
+        let ins3 = insert_3d(&f.vol, s);
+        if ins3.d != 1 || ins2.data() != ins3.data() {
+            return Err("zero-insert fold mismatch".into());
+        }
+        // correlation needs input >= kernel; grow the map if needed
+        let k = f.w2.kh;
+        let (h, w) = (f.fm.h.max(k), f.fm.w.max(k));
+        let mut fm = FeatureMap::zeros(f.fm.c, h, w);
+        for v in fm.data_mut() {
+            *v = g.f32(-1.0, 1.0);
+        }
+        let vol = Volume::from_vec(fm.c, 1, h, w, fm.data().to_vec());
+        let a = corr2d(&fm, &f.w2);
+        let b = corr3d(&vol, &f.w3);
+        if a.data() != b.data() {
+            return Err("corr fold mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// §IV-C on the accelerator model: folding a 2D layer onto any mesh
+/// repurposes the `T_z` depth arrays as channel parallelism
+/// (`chan_par == T_n · T_z`) with FIFO-D disabled and no depth
+/// parallelism or stalls.
+#[test]
+fn prop_mapping_2d_folds_tz_into_channels() {
+    check(Config { cases: 60, ..Default::default() }, |g| {
+        let layer = LayerSpec::new_2d(
+            "prop2d",
+            g.int(1, 64),
+            g.int(1, 32),
+            g.int(1, 32),
+            g.int(1, 64),
+            *g.choose(&[2usize, 3, 4]),
+            *g.choose(&[1usize, 2]),
+        );
+        let cfg = AccelConfig::tiny(
+            g.int(1, 4),
+            g.int(1, 8),
+            g.int(1, 4),
+            g.int(1, 4),
+            g.int(1, 4),
+        );
+        let m = Mapping::for_layer(&cfg, &layer);
+        if m.chan_par != cfg.tn * cfg.tz {
+            return Err(format!(
+                "chan_par {} != tn*tz {} (tn={}, tz={})",
+                m.chan_par,
+                cfg.tn * cfg.tz,
+                cfg.tn,
+                cfg.tz
+            ));
+        }
+        if m.depth_par != 1 {
+            return Err(format!("2D fold must not use depth parallelism (got {})", m.depth_par));
+        }
+        if m.fifo_d_enabled {
+            return Err("FIFO-D must stay disabled for 2D layers".into());
+        }
+        if m.stall_per_activation != 0 {
+            return Err("2D fold has no depth-overlap stalls".into());
+        }
+        if m.macs_per_activation != layer.k * layer.k {
+            return Err("2D MACs per activation must be K^2".into());
+        }
+        Ok(())
+    });
+}
