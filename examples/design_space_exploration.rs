@@ -11,7 +11,7 @@ fn main() {
     let budget = dse::DseBudget::default();
     println!(
         "sweeping {} legal configurations (≤{} PEs, power-of-two Tn)…\n",
-        dse::candidates(&budget).len(),
+        dse::candidates(&budget).expect("legal space").len(),
         budget.max_pes
     );
 
@@ -19,7 +19,7 @@ fn main() {
         ("2D benchmarks (DCGAN + GP-GAN)", vec![zoo::dcgan(), zoo::gp_gan()]),
         ("3D benchmarks (3D-GAN + V-Net)", vec![zoo::gan3d(), zoo::vnet()]),
     ] {
-        let points = dse::sweep(&nets, &budget);
+        let points = dse::sweep(&nets, &budget).expect("legal space");
         let mut t = Table::new(
             &format!("frontier for {label}"),
             &["rank", "Tm", "Tn", "Tz", "Tr", "Tc", "PEs", "Mcycles", "util %", "DSP", "fits"],

@@ -1,0 +1,89 @@
+//! DSE-autotuner bench: default vs tuned simulated throughput per zoo
+//! network, plus the cost of the search itself.
+//!
+//! For each benchmark network the autotuner picks a configuration
+//! under the VC709 budget; this bench compares the compiled-plan
+//! simulation of that pick against `AccelConfig::default()` at the
+//! same batch size, times the tuner, and records the search's audit
+//! counters (candidates evaluated exactly vs pruned by the roofline
+//! bound). Alongside the text report it emits
+//! `reports/BENCH_dse.json` so the tuning-win trajectory is tracked
+//! across PRs, like `BENCH_serving.json` does for fleet scaling.
+
+use udcnn::accel::dse::tune::{tune_network, TuneOptions};
+use udcnn::benchkit::{fmt_duration, header, write_report_file, Bench};
+use udcnn::dcnn::zoo;
+use udcnn::report::json::{array, JsonObj};
+use udcnn::report::Table;
+
+const REPORT_PATH: &str = "reports/BENCH_dse.json";
+
+fn main() {
+    header(
+        "dse_autotune",
+        "per-network autotuning of the Table-II mapping parameters (roofline-pruned DSE)",
+    );
+
+    let bench = Bench::from_env();
+    let opts = TuneOptions::default();
+
+    let mut t = Table::new(
+        &format!("default vs tuned compiled-plan TOPS (batch {})", opts.batch),
+        &["network", "default", "tuned", "speedup", "config", "bound", "evald", "pruned", "time"],
+    );
+    let mut rows = Vec::new();
+    let mut wins = 0usize;
+    let nets = zoo::all_benchmarks();
+    let total = nets.len();
+    for net in nets {
+        let r = tune_network(&net, &opts).expect("zoo networks tune");
+        let cost = bench.run(&format!("tune {}", net.name), || {
+            let r = tune_network(&net, &opts).unwrap();
+            std::hint::black_box(r.best().total_cycles);
+        });
+        let best = r.best();
+        let d = &r.default_point;
+        if best.total_cycles < d.total_cycles {
+            wins += 1;
+        }
+        t.row(&[
+            net.name.to_string(),
+            format!("{:.2}", d.effective_tops),
+            format!("{:.2}", best.effective_tops),
+            format!("{:.2}x", r.speedup_vs_default()),
+            best.cfg.describe(),
+            best.bound_by.to_string(),
+            r.evaluated.to_string(),
+            r.pruned.to_string(),
+            fmt_duration(cost.median_s()),
+        ]);
+        rows.push(
+            JsonObj::new()
+                .str("network", &r.network)
+                .num("default_tops", d.effective_tops)
+                .num("tuned_tops", best.effective_tops)
+                .num("default_time_ms", d.time_s * 1e3)
+                .num("tuned_time_ms", best.time_s * 1e3)
+                .num("speedup_vs_default", r.speedup_vs_default())
+                .num("tune_median_s", cost.median_s())
+                .raw("result", &r.to_json())
+                .render(),
+        );
+    }
+    t.print();
+    println!(
+        "tuned beats AccelConfig::default() on {wins}/{total} zoo networks (ties count as losses)"
+    );
+
+    let doc = JsonObj::new()
+        .str("bench", "dse_autotune")
+        .int("batch", opts.batch as u64)
+        .int("networks_improved", wins as u64)
+        .int("networks_total", total as u64)
+        .raw("networks", &array(&rows))
+        .render();
+    match write_report_file(REPORT_PATH, &doc) {
+        Ok(()) => println!("wrote {REPORT_PATH}"),
+        Err(e) => eprintln!("could not write {REPORT_PATH}: {e}"),
+    }
+}

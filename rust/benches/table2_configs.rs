@@ -28,10 +28,10 @@ fn main() {
     // 2D point vs 2D benchmarks
     let nets2 = if fast { vec![zoo::dcgan()] } else { vec![zoo::dcgan(), zoo::gp_gan()] };
     let r = bench.run("dse_sweep_2d", || {
-        std::hint::black_box(dse::sweep(&nets2, &budget).len());
+        std::hint::black_box(dse::sweep(&nets2, &budget).expect("legal space").len());
     });
     println!("{}", r.summary());
-    let points = dse::sweep(&nets2, &budget);
+    let points = dse::sweep(&nets2, &budget).expect("legal space");
     let paper2 = dse::evaluate(&AccelConfig::paper_2d(), &nets2, &budget);
     let rank2 = points.iter().filter(|p| p.total_cycles < paper2.total_cycles).count();
     println!(
@@ -41,7 +41,7 @@ fn main() {
     );
 
     let nets3 = if fast { vec![zoo::gan3d()] } else { vec![zoo::gan3d(), zoo::vnet()] };
-    let points3 = dse::sweep(&nets3, &budget);
+    let points3 = dse::sweep(&nets3, &budget).expect("legal space");
     let paper3 = dse::evaluate(&AccelConfig::paper_3d(), &nets3, &budget);
     let rank3 = points3.iter().filter(|p| p.total_cycles < paper3.total_cycles).count();
     println!(

@@ -47,6 +47,15 @@ pub struct AccelConfig {
     pub depth_overlap_stall: bool,
 }
 
+impl Default for AccelConfig {
+    /// The untuned operating point — [`AccelConfig::platform_defaults`].
+    /// The autotuner ([`crate::accel::dse::tune`]) measures its wins
+    /// against this, and guarantees it never selects anything slower.
+    fn default() -> Self {
+        AccelConfig::platform_defaults()
+    }
+}
+
 impl AccelConfig {
     /// Table II, row "2D DCNNs": T_m=2, T_n=64, T_z=1, T_r=4, T_c=4.
     pub fn paper_2d() -> AccelConfig {
@@ -168,6 +177,15 @@ impl AccelConfig {
         )
     }
 
+    /// Compact human-readable identity — tiling plus buffer split,
+    /// e.g. `Tm2 Tn64 Tz1 Tr4 Tc4 b512/1536/1024`. The display the
+    /// `udcnn tune` table and `benches/dse_autotune.rs` share;
+    /// [`AccelConfig::fingerprint`] remains the cache identity.
+    pub fn describe(&self) -> String {
+        let b = format!("b{}/{}/{}", self.input_buf_kib, self.weight_buf_kib, self.output_buf_kib);
+        format!("Tm{} Tn{} Tz{} Tr{} Tc{} {b}", self.tm, self.tn, self.tz, self.tr, self.tc)
+    }
+
     /// Validate structural invariants.
     pub fn validate(&self) -> Result<(), String> {
         if self.tm == 0 || self.tn == 0 || self.tz == 0 || self.tr == 0 || self.tc == 0 {
@@ -219,6 +237,12 @@ mod tests {
         let mut bad = AccelConfig::paper_2d();
         bad.tr = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn default_is_the_platform_operating_point() {
+        assert_eq!(AccelConfig::default(), AccelConfig::platform_defaults());
+        assert_eq!(AccelConfig::default(), AccelConfig::paper_2d());
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Analytical roofline bounds used to prune the autotuner's search.
+//!
+//! For a candidate [`AccelConfig`] and a target network the exact cost
+//! is the compiled-plan simulation ([`crate::graph::simulate_plan`]).
+//! That is cheap, but the candidate space (tilings × buffer splits) is
+//! large, so the tuner first computes a *provable lower bound* on the
+//! plan's cycle count from two rooflines:
+//!
+//! * **compute** — the mesh cannot finish a layer in fewer cycles than
+//!   `⌈batch · useful_MACs / total_PEs⌉`: every blocking schedule
+//!   rounds its loop bounds *up*, so `passes · K^d · PEs ≥ batch ·
+//!   useful_MACs` holds for any legal [`crate::accel::Schedule`];
+//! * **bandwidth** — DDR must move at least the weights once plus the
+//!   network input and final output once per batch item. Interior
+//!   layer boundaries may be kept entirely on-chip by the reuse pass,
+//!   so they contribute `0` to the bound (which keeps it sound for any
+//!   buffer split).
+//!
+//! The plan's total is a per-step `max(compute, memory)` sum, which is
+//! `≥ max(Σ compute lower bounds, network bandwidth bound)` — the
+//! value [`network_lower_bound`] reports. Candidates whose bound
+//! already exceeds the best exact cycle count found so far can be
+//! discarded without ever compiling them (see [`super::tune`]).
+
+use crate::accel::memory::DdrModel;
+use crate::accel::metrics::BoundBy;
+use crate::accel::AccelConfig;
+use crate::dcnn::Network;
+
+/// A provable lower bound on a network's compiled-plan cycle count
+/// under one configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RooflineEstimate {
+    /// Compute roofline: Σ over layers of
+    /// `⌈batch · useful_MACs / total_PEs⌉`.
+    pub compute_cycles: u64,
+    /// Bandwidth roofline: minimal DDR traffic (weights once + network
+    /// input/output once per batch item) at full effective bandwidth.
+    pub memory_cycles: u64,
+    /// Minimal DDR bytes behind [`RooflineEstimate::memory_cycles`].
+    pub min_dram_bytes: u64,
+    /// Which roofline dominates the bound.
+    pub bound_by: BoundBy,
+}
+
+impl RooflineEstimate {
+    /// The lower bound itself: the binding roofline.
+    pub fn lower_bound_cycles(&self) -> u64 {
+        self.compute_cycles.max(self.memory_cycles)
+    }
+
+    /// Upper bound on achievable PE utilization implied by the
+    /// rooflines: compute cycles over the binding roofline (1.0 when
+    /// compute-bound, `< 1.0` when bandwidth limits the mesh).
+    pub fn utilization_bound(&self) -> f64 {
+        if self.lower_bound_cycles() == 0 {
+            return 0.0;
+        }
+        self.compute_cycles as f64 / self.lower_bound_cycles() as f64
+    }
+}
+
+/// Compute the roofline lower bound of `net` on `cfg` (at `cfg.batch`).
+pub fn network_lower_bound(cfg: &AccelConfig, net: &Network) -> RooflineEstimate {
+    let pes = cfg.total_pes() as u64;
+    let batch = cfg.batch as u64;
+    let eb = cfg.elem_bytes() as u64;
+
+    let mut compute = 0u64;
+    let mut weight_bytes = 0u64;
+    for layer in &net.layers {
+        let work = batch * layer.op_counts().useful_macs;
+        compute += work.div_ceil(pes);
+        weight_bytes += layer.weight_elems() as u64 * eb;
+    }
+    let edge_bytes = match (net.layers.first(), net.layers.last()) {
+        (Some(first), Some(last)) => {
+            batch * (first.input_elems() as u64 + last.output_elems() as u64) * eb
+        }
+        _ => 0,
+    };
+    let min_bytes = weight_bytes + edge_bytes;
+    let ddr = DdrModel::from_config(cfg);
+    let memory = ddr.transfer_cycles(min_bytes, cfg.freq_mhz);
+
+    RooflineEstimate {
+        compute_cycles: compute,
+        memory_cycles: memory,
+        min_dram_bytes: min_bytes,
+        bound_by: if memory > compute {
+            BoundBy::Memory
+        } else {
+            BoundBy::Compute
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+    use crate::graph;
+
+    #[test]
+    fn bound_never_exceeds_exact_plan_cycles() {
+        // The whole point: the bound must be sound for every network
+        // and for configurations with very different tilings/buffers.
+        let mut cfgs = vec![
+            AccelConfig::paper_2d(),
+            AccelConfig::paper_3d(),
+            AccelConfig::tiny(1, 4, 1, 2, 2),
+        ];
+        let mut big_buf = AccelConfig::paper_2d();
+        big_buf.input_buf_kib = 2048;
+        big_buf.output_buf_kib = 2048;
+        cfgs.push(big_buf);
+        for net in zoo::all_benchmarks() {
+            for cfg in &cfgs {
+                let lb = network_lower_bound(cfg, &net).lower_bound_cycles();
+                let exact = graph::compile_network(cfg, &net)
+                    .map(|p| graph::simulate_plan(&p).total_cycles)
+                    .unwrap();
+                assert!(
+                    lb <= exact,
+                    "{} on {}: bound {lb} > exact {exact}",
+                    net.name,
+                    cfg.fingerprint()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compute_bound_matches_saturated_layer() {
+        // DCGAN layer 1 divides the paper mesh exactly: the compute
+        // roofline equals useful work / PEs with no rounding slack.
+        let cfg = AccelConfig::paper_2d();
+        let net = zoo::dcgan();
+        let est = network_lower_bound(&cfg, &net);
+        let by_hand: u64 = net
+            .layers
+            .iter()
+            .map(|l| {
+                (cfg.batch as u64 * l.op_counts().useful_macs)
+                    .div_ceil(cfg.total_pes() as u64)
+            })
+            .sum();
+        assert_eq!(est.compute_cycles, by_hand);
+        assert!(est.min_dram_bytes > 0);
+    }
+
+    #[test]
+    fn halving_bandwidth_raises_the_memory_roofline() {
+        let net = zoo::dcgan();
+        let cfg = AccelConfig::paper_2d();
+        let mut slow = cfg.clone();
+        slow.ddr_gbps /= 2.0;
+        let a = network_lower_bound(&cfg, &net);
+        let b = network_lower_bound(&slow, &net);
+        assert!(b.memory_cycles > a.memory_cycles);
+        assert_eq!(a.min_dram_bytes, b.min_dram_bytes, "bytes are bw-independent");
+        assert!(a.utilization_bound() <= 1.0 + 1e-12);
+    }
+}

@@ -32,7 +32,7 @@ use anyhow::{bail, Result};
 use crate::accel::{AccelConfig, Schedule};
 use crate::dcnn::{LayerData, Network};
 use crate::func::uniform;
-use crate::serve::{Arrival, Fleet, FleetOptions, FleetReport};
+use crate::serve::{Arrival, ConfigPolicy, Fleet, FleetOptions, FleetReport};
 use crate::tensor::{Volume, WeightsOIDHW};
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -117,23 +117,55 @@ impl InferenceService {
     /// request is shed when every instance queue of its model already
     /// holds that many outstanding requests. Replica weights are
     /// seeded per model (not per replica), so every instance of a
-    /// model computes identical outputs.
+    /// model computes identical outputs. Workers serve on the paper
+    /// operating points; see [`InferenceService::start_with_policy`]
+    /// for the tuned/heterogeneous mode.
     pub fn start_sharded(
         networks: Vec<Network>,
         policy: BatchPolicy,
         replicas: usize,
         admission_cap: Option<usize>,
     ) -> InferenceService {
+        InferenceService::start_with_policy(
+            networks,
+            policy,
+            replicas,
+            admission_cap,
+            ConfigPolicy::Paper,
+        )
+        .expect("the paper config policy is infallible")
+    }
+
+    /// [`InferenceService::start_sharded`] with an explicit
+    /// [`ConfigPolicy`]: each model's workers report simulated
+    /// latencies from plans compiled under the policy-resolved config
+    /// — the paper point, the autotuner's pick
+    /// ([`ConfigPolicy::Tuned`], tuned at the batch policy's full
+    /// batch), or explicit per-model configs. Numerics are identical
+    /// under every policy (the config changes schedules and plan
+    /// fingerprints, never output bits). Errors when the policy cannot
+    /// resolve a config (tuner failure, missing explicit entry).
+    pub fn start_with_policy(
+        networks: Vec<Network>,
+        policy: BatchPolicy,
+        replicas: usize,
+        admission_cap: Option<usize>,
+        config_policy: ConfigPolicy,
+    ) -> Result<InferenceService> {
         assert!(replicas >= 1, "need at least one replica per model");
         let stats = Arc::new(Mutex::new(ServiceStats::default()));
         let mut router = ShardRouter::new();
         let mut workers = Vec::new();
         for net in networks {
+            let cfg_base = config_policy
+                .resolve(&net, policy.max_batch)
+                .map_err(anyhow::Error::msg)?;
             for instance in 0..replicas {
                 let (tx, rx) = channel::<Request>();
                 let depth = router.add_shard(net.name, instance, tx);
                 let stats = Arc::clone(&stats);
                 let net = net.clone();
+                let cfg_base = cfg_base.clone();
                 workers.push(std::thread::spawn(move || {
                     let mut batcher = Batcher::new(rx, policy);
                     // synth once per worker, folded to the uniform
@@ -146,18 +178,18 @@ impl InferenceService {
                         .collect();
                     while let Some(batch) = batcher.next_batch() {
                         let n = batch.len();
-                        serve_batch(&net, &weights, batch, instance, &stats);
+                        serve_batch(&net, &cfg_base, &weights, batch, instance, &stats);
                         depth.done(n);
                     }
                 }));
             }
         }
-        InferenceService {
+        Ok(InferenceService {
             router,
             workers,
             stats,
             admission_cap,
-        }
+        })
     }
 
     /// Submit a request; the response arrives on the returned channel.
@@ -222,9 +254,11 @@ pub fn serve_fleet(
 }
 
 /// Run one batch through the network: golden numerics + simulated
-/// accelerator latency at the real batch size.
+/// accelerator latency at the real batch size, under the worker's
+/// policy-resolved configuration.
 fn serve_batch(
     net: &Network,
+    cfg_base: &AccelConfig,
     weights: &[WeightsOIDHW<f32>],
     batch: Vec<Request>,
     instance: usize,
@@ -236,7 +270,7 @@ fn serve_batch(
     // graph compiler rejects (e.g. a registered chain whose declared
     // geometries don't compose) fall back to the isolated-layer sum
     // rather than killing this model's worker.
-    let mut cfg = AccelConfig::paper_for(net.dims);
+    let mut cfg = cfg_base.clone();
     cfg.batch = bsize;
     let accel_s = match crate::graph::compile_network(&cfg, net) {
         Ok(plan) => crate::graph::simulate_plan(&plan).time_s(),
@@ -435,6 +469,35 @@ mod tests {
         let r = rx1.recv_timeout(Duration::from_secs(10)).unwrap();
         assert_eq!(r.model, "tiny-3d");
         svc.shutdown();
+    }
+
+    #[test]
+    fn tuned_policy_serves_identical_bits() {
+        // The config policy changes plan schedules and latencies,
+        // never numerics: a tuned service answers with exactly the
+        // bits the paper-config service produces.
+        let net = zoo::tiny_2d();
+        let l0 = net.layers[0].clone();
+        let input = vec![0.37f32; l0.input_elems()];
+        let mut paper = InferenceService::start(vec![net.clone()], BatchPolicy::default());
+        let mut tuned = InferenceService::start_with_policy(
+            vec![net],
+            BatchPolicy::default(),
+            1,
+            None,
+            ConfigPolicy::Tuned,
+        )
+        .unwrap();
+        let a = paper
+            .infer("tiny-2d", input.clone(), Duration::from_secs(10))
+            .unwrap();
+        let b = tuned
+            .infer("tiny-2d", input, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(a.output, b.output, "tuning must never change output bits");
+        assert!(b.accel_latency_s > 0.0);
+        paper.shutdown();
+        tuned.shutdown();
     }
 
     #[test]

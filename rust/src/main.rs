@@ -7,6 +7,7 @@
 //! udcnn sparsity                                        Fig. 1 numbers
 //! udcnn resources                                       Table III
 //! udcnn dse        [--max-pes N]                        Table II rationale
+//! udcnn tune       <net>... [--json]                    per-network autotuner
 //! udcnn compare    [--net NAME]                         Fig. 7 numbers
 //! udcnn zoo        --dump                               layer shapes (JSON-ish)
 //! udcnn verify     [--artifacts DIR]                    PJRT artifacts vs golden
@@ -24,10 +25,10 @@ use udcnn::cli::{first_positional, network_by_name, opt_parse, parse_opts, posit
 use udcnn::coordinator::{serve_fleet, BatchPolicy};
 use udcnn::dcnn::{sparsity, zoo, Network};
 use udcnn::energy;
-use udcnn::report::json::JsonObj;
+use udcnn::report::json::{array, JsonObj};
 use udcnn::report::{bar_chart, ratio, Table};
 use udcnn::resource;
-use udcnn::serve::{poisson_arrivals, Fleet, FleetOptions};
+use udcnn::serve::{poisson_arrivals, ConfigPolicy, Fleet, FleetOptions};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -54,6 +55,7 @@ fn run(args: &[String]) -> Result<()> {
         "sparsity" => cmd_sparsity(),
         "resources" => cmd_resources(),
         "dse" => cmd_dse(&opts),
+        "tune" => cmd_tune(&args[1..]),
         "compare" => cmd_compare(&opts),
         "zoo" => cmd_zoo(),
         "verify" => cmd_verify(&opts),
@@ -70,7 +72,7 @@ fn print_usage() {
     println!(
         "udcnn — uniform 2D/3D DCNN accelerator (Wang et al. 2019 reproduction)\n\
          \n\
-         usage: udcnn <simulate|compile|plan|sparsity|resources|dse|compare|zoo|verify|serve> [options]\n\
+         usage: udcnn <simulate|compile|plan|sparsity|resources|dse|tune|compare|zoo|verify|serve> [options]\n\
          \n\
          simulate   --net NAME | --all   [--batch N]   per-layer util + TOPS (Fig. 6)\n\
          compile    NAME [--batch N] [--json] [--oom]  whole-network plan (graph compiler)\n\
@@ -78,13 +80,16 @@ fn print_usage() {
          sparsity                                      inserted-map sparsity (Fig. 1)\n\
          resources                                     VC709 utilization (Table III)\n\
          dse        [--max-pes N]                      design-space sweep (Table II)\n\
+         tune       <net>... [--batch N] [--top K]     per-network DSE autotuner\n\
+           tune options: --max-pes N (default 2048)  --json\n\
          compare    [--net NAME]                       CPU/GPU/FPGA (Fig. 7)\n\
          zoo                                           dump benchmark layer shapes\n\
          verify     [--artifacts DIR]                  run PJRT artifacts vs golden\n\
          serve      <net>... [--instances N] [--rps R] fleet serving harness\n\
            serve options: --requests N (default 2048)  --seed S\n\
                           --budget-ms B (default 250)  --max-batch M  --max-wait-ms W\n\
-                          --shard (shard models across instances)  --json"
+                          --shard (shard models across instances)\n\
+                          --tuned (serve autotuned per-model plans)  --json"
     );
 }
 
@@ -229,12 +234,9 @@ fn cmd_dse(opts: &BTreeMap<String, String>) -> Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(2048);
-    let budget = dse::DseBudget {
-        max_pes,
-        pow2_tn: true,
-    };
+    let budget = dse::DseBudget { max_pes };
     let nets = zoo::all_benchmarks();
-    let points = dse::sweep(&nets, &budget);
+    let points = dse::sweep(&nets, &budget).map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut t = Table::new(
         "Table II rationale — design-space sweep (best 10 of the space)",
         &["Tm", "Tn", "Tz", "Tr", "Tc", "PEs", "Mcycles", "util %"],
@@ -252,6 +254,86 @@ fn cmd_dse(opts: &BTreeMap<String, String>) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// `udcnn tune <net>... [--batch N] [--top K] [--max-pes N] [--json]`:
+/// run the roofline-pruned autotuner per network and print the ranked
+/// designs with their justification (binding roofline, utilization,
+/// resource footprint) next to the `AccelConfig::default()` baseline.
+fn cmd_tune(rest: &[String]) -> Result<()> {
+    use udcnn::accel::dse::tune::{tune_network, TuneOptions};
+    use udcnn::accel::dse::DseBudget;
+    let opts = parse_opts(rest);
+    let value_keys = &["batch", "max-pes", "top"];
+    let names = positionals(rest, value_keys);
+    let nets: Vec<Network> = if names.is_empty() {
+        zoo::all_benchmarks()
+    } else {
+        names
+            .iter()
+            .map(|n| network_by_name(n.as_str()))
+            .collect::<Result<_>>()?
+    };
+    let max_pes: usize = opt_parse(&opts, "max-pes", DseBudget::default().max_pes)?;
+    let topts = TuneOptions {
+        budget: DseBudget { max_pes },
+        batch: opt_parse(&opts, "batch", TuneOptions::default().batch)?,
+        keep: opt_parse(&opts, "top", TuneOptions::default().keep)?,
+    };
+    let mut results = Vec::new();
+    for net in &nets {
+        let r = tune_network(net, &topts).map_err(anyhow::Error::msg)?;
+        results.push(r);
+    }
+
+    if opts.contains_key("json") {
+        let docs: Vec<String> = results.iter().map(|r| r.to_json()).collect();
+        println!("{}", array(&docs));
+        return Ok(());
+    }
+
+    for r in &results {
+        let mut t = Table::new(
+            &format!(
+                "tuned configs for {} (batch {}, {} evaluated / {} pruned by roofline)",
+                r.network, topts.batch, r.evaluated, r.pruned
+            ),
+            &["rank", "config", "PEs", "DSP", "BRAM", "Mcycles", "ms", "TOPS", "bound", "util%"],
+        );
+        for (i, p) in r.ranked.iter().enumerate() {
+            let c = &p.cfg;
+            t.row(&[
+                (i + 1).to_string(),
+                c.describe(),
+                c.total_pes().to_string(),
+                p.resources.dsp.to_string(),
+                p.resources.bram36.to_string(),
+                format!("{:.2}", p.total_cycles as f64 / 1e6),
+                format!("{:.3}", p.time_s * 1e3),
+                format!("{:.2}", p.effective_tops),
+                p.bound_by.to_string(),
+                format!("{:.1}", 100.0 * p.utilization),
+            ]);
+        }
+        t.print();
+        let d = &r.default_point;
+        println!(
+            "default ({}): {:.2} Mcycles, {:.2} TOPS  =>  tuned speedup {}",
+            d.cfg.fingerprint(),
+            d.total_cycles as f64 / 1e6,
+            d.effective_tops,
+            ratio(r.speedup_vs_default())
+        );
+        println!(
+            "winner: {} ({} bound, roofline floor {:.2} Mcycles, FIFO depth {})",
+            r.best().cfg.fingerprint(),
+            r.best().bound_by,
+            r.best().roofline.lower_bound_cycles() as f64 / 1e6,
+            r.fifo_depth
+        );
+        println!();
+    }
     Ok(())
 }
 
@@ -381,11 +463,31 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             (opt_parse(&opts, "max-wait-ms", 2.0f64)? * 1e3) as u64,
         ),
     };
+    // --tuned: run the autotuner once per model here and hand every
+    // fleet (probe, main, baseline) the resolved configs explicitly,
+    // so bring-up does not repeat the identical search three times.
+    // The fleet reports therefore label the policy "explicit"; the
+    // top-level `config_mode` field (JSON) and the banner line (text)
+    // record that the configs came from the autotuner.
+    let tuned_mode = opts.contains_key("tuned");
+    let config_policy = if tuned_mode {
+        let mut tuned = std::collections::BTreeMap::new();
+        for net in &nets {
+            let cfg = ConfigPolicy::Tuned
+                .resolve(net, policy.max_batch)
+                .map_err(anyhow::Error::msg)?;
+            tuned.insert(net.name.to_string(), cfg);
+        }
+        ConfigPolicy::Explicit(tuned)
+    } else {
+        ConfigPolicy::Paper
+    };
     let fleet_opts = FleetOptions {
         instances,
         policy,
         latency_budget_s: budget_ms / 1e3,
         shard_models: opts.contains_key("shard"),
+        config_policy: config_policy.clone(),
     };
 
     // offered load: explicit --rps, else saturate the fleet (2.5x the
@@ -407,6 +509,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                 FleetOptions {
                     instances: 1,
                     policy,
+                    config_policy: config_policy.clone(),
                     ..FleetOptions::default()
                 },
             )
@@ -450,6 +553,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     if opts.contains_key("json") {
         let doc = JsonObj::new()
             .str("workload", &format!("poisson seed={seed} rps={rps:.1} n={requests}"))
+            .str("config_mode", if tuned_mode { "tuned" } else { "paper" })
             .num("offered_rps", rps)
             .num("speedup_vs_single", speedup)
             .raw("fleet", &fleet.to_json())
@@ -463,6 +567,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         "workload: {} requests, poisson @ {:.1} req/s (seed {seed}), models {:?}",
         requests, rps, model_names
     );
+    if tuned_mode {
+        println!("configs autotuned once per model (served as explicit per-model configs)");
+    }
     print!("{}", fleet.render());
     println!(
         "single instance: {:.1} req/s | p99 {:.3} ms  =>  aggregate speedup {:.2}x with {} instances",

@@ -12,9 +12,13 @@
 //! [`PlanHandle`]s, so every instance hosting a model executes the
 //! *same* compiled artifact.
 //!
-//! The cache never evicts: the key space is tiny (models × distinct
-//! batch sizes) and eviction-free behaviour keeps repeated runs
-//! byte-for-byte deterministic, which the serving harness relies on.
+//! An unbounded cache ([`PlanCache::new`]) suits the classic key space
+//! (models × distinct batch sizes). Tuned fleets multiply fingerprints
+//! — every per-model [`crate::serve::ConfigPolicy`] choice is its own
+//! key — so [`PlanCache::with_capacity`] bounds the cache with
+//! deterministic least-recently-used eviction: the same lookup
+//! sequence always holds the same plans, which keeps repeated serving
+//! runs byte-for-byte reproducible.
 
 use std::collections::BTreeMap;
 
@@ -22,13 +26,15 @@ use crate::accel::AccelConfig;
 use crate::dcnn::Network;
 use crate::graph::{compile_network, PlanHandle};
 
-/// Hit/miss counters of a [`PlanCache`].
+/// Hit/miss/eviction counters of a [`PlanCache`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Lookups answered from the cache.
     pub hits: u64,
     /// Lookups that had to run the graph compiler.
     pub misses: u64,
+    /// Plans evicted to stay inside a bounded cache's capacity.
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -43,17 +49,43 @@ impl CacheStats {
     }
 }
 
+/// One cached plan plus its recency stamp.
+#[derive(Debug)]
+struct Entry {
+    plan: PlanHandle,
+    last_used: u64,
+}
+
 /// Compiled-plan cache keyed by `(network, accelerator config)`.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    plans: BTreeMap<String, PlanHandle>,
+    plans: BTreeMap<String, Entry>,
     stats: CacheStats,
+    /// `None` = unbounded; `Some(n)` = hold at most `n` plans.
+    capacity: Option<usize>,
+    /// Monotonic lookup clock driving LRU recency (deterministic: it
+    /// advances once per lookup, never from wall time).
+    tick: u64,
 }
 
 impl PlanCache {
-    /// An empty cache.
+    /// An empty, unbounded cache.
     pub fn new() -> PlanCache {
         PlanCache::default()
+    }
+
+    /// An empty cache holding at most `capacity` plans (minimum 1);
+    /// beyond that, the least-recently-used plan is evicted.
+    pub fn with_capacity(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity: Some(capacity.max(1)),
+            ..PlanCache::default()
+        }
+    }
+
+    /// The configured capacity (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
     }
 
     /// The cache key for a network under a configuration (delegates
@@ -71,13 +103,29 @@ impl PlanCache {
         net: &Network,
     ) -> Result<PlanHandle, String> {
         let key = PlanCache::key(net.name, cfg);
-        if let Some(plan) = self.plans.get(&key) {
+        self.tick += 1;
+        if let Some(e) = self.plans.get_mut(&key) {
+            e.last_used = self.tick;
             self.stats.hits += 1;
-            return Ok(PlanHandle::clone(plan));
+            return Ok(PlanHandle::clone(&e.plan));
         }
         let plan = PlanHandle::new(compile_network(cfg, net)?);
         self.stats.misses += 1;
-        self.plans.insert(key, PlanHandle::clone(&plan));
+        self.plans.insert(
+            key,
+            Entry {
+                plan: PlanHandle::clone(&plan),
+                last_used: self.tick,
+            },
+        );
+        if let Some(cap) = self.capacity {
+            while self.plans.len() > cap {
+                let lru = self.plans.iter().min_by_key(|(_, e)| e.last_used);
+                let key = lru.map(|(k, _)| k.clone()).expect("entry exists");
+                self.plans.remove(&key);
+                self.stats.evictions += 1;
+            }
+        }
         Ok(plan)
     }
 
@@ -91,7 +139,7 @@ impl PlanCache {
         self.plans.is_empty()
     }
 
-    /// Hit/miss counters so far.
+    /// Hit/miss/eviction counters so far.
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
@@ -108,9 +156,23 @@ mod tests {
         let net = zoo::tiny_2d();
         let cfg = AccelConfig::paper_for(net.dims);
         let a = c.get_or_compile(&cfg, &net).unwrap();
-        assert_eq!(c.stats(), CacheStats { hits: 0, misses: 1 });
+        assert_eq!(
+            c.stats(),
+            CacheStats {
+                hits: 0,
+                misses: 1,
+                ..CacheStats::default()
+            }
+        );
         let b = c.get_or_compile(&cfg, &net).unwrap();
-        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(
+            c.stats(),
+            CacheStats {
+                hits: 1,
+                misses: 1,
+                ..CacheStats::default()
+            }
+        );
         assert!(PlanHandle::ptr_eq(&a, &b), "hit returns the same plan");
         assert_eq!(c.len(), 1);
     }
@@ -136,6 +198,59 @@ mod tests {
         c.get_or_compile(&AccelConfig::paper_for(n3.dims), &n3).unwrap();
         assert_eq!(c.len(), 2);
         assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts() {
+        let mut c = PlanCache::new();
+        let net = zoo::tiny_2d();
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        for b in 1..=24 {
+            cfg.batch = b;
+            c.get_or_compile(&cfg, &net).unwrap();
+        }
+        assert_eq!(c.len(), 24);
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.capacity(), None);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_lru_deterministically() {
+        let mut c = PlanCache::with_capacity(4);
+        let net = zoo::tiny_2d();
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        for b in 1..=10 {
+            cfg.batch = b;
+            c.get_or_compile(&cfg, &net).unwrap();
+            assert!(c.len() <= 4, "capacity must bound residency");
+        }
+        assert_eq!(c.stats().evictions, 6);
+        // most-recent entries survive: batches 7..=10 hit, batch 1 misses
+        cfg.batch = 10;
+        c.get_or_compile(&cfg, &net).unwrap();
+        assert_eq!(c.stats().hits, 1);
+        cfg.batch = 1;
+        c.get_or_compile(&cfg, &net).unwrap();
+        assert_eq!(c.stats().misses, 11, "evicted entry recompiles");
+    }
+
+    #[test]
+    fn lru_respects_recency_not_insertion_order() {
+        let mut c = PlanCache::with_capacity(2);
+        let net = zoo::tiny_2d();
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        cfg.batch = 1;
+        c.get_or_compile(&cfg, &net).unwrap(); // {1}
+        cfg.batch = 2;
+        c.get_or_compile(&cfg, &net).unwrap(); // {1, 2}
+        cfg.batch = 1;
+        c.get_or_compile(&cfg, &net).unwrap(); // touch 1: LRU is now 2
+        cfg.batch = 3;
+        c.get_or_compile(&cfg, &net).unwrap(); // evicts 2, keeps {1, 3}
+        cfg.batch = 1;
+        c.get_or_compile(&cfg, &net).unwrap();
+        assert_eq!(c.stats().hits, 2, "batch-1 plan survived both rounds");
+        assert_eq!(c.stats().evictions, 1);
     }
 
     #[test]

@@ -29,6 +29,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
+use crate::accel::dse::tune::{tune_network, TuneOptions};
 use crate::accel::AccelConfig;
 use crate::coordinator::BatchPolicy;
 use crate::dcnn::Network;
@@ -38,6 +39,68 @@ use crate::report::json::{array, JsonObj};
 use super::cache::{CacheStats, PlanCache};
 use super::instance::{Instance, InstanceStats};
 use super::loadgen::{Arrival, LatencySummary};
+
+/// Plan-cache capacity of a fleet. Generous against the classic key
+/// space (models × distinct batch sizes), but a hard bound once tuned
+/// or heterogeneous fleets start multiplying config fingerprints.
+const FLEET_PLAN_CACHE_CAP: usize = 256;
+
+/// How a fleet picks the accelerator configuration each model's plans
+/// compile under — the knob behind `udcnn serve --tuned`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum ConfigPolicy {
+    /// The paper's Table-II operating point for the model's
+    /// dimensionality ([`AccelConfig::paper_for`]) — the historical
+    /// behaviour.
+    #[default]
+    Paper,
+    /// Run the autotuner ([`crate::accel::dse::tune`]) once per model
+    /// at bring-up, at the batch policy's full batch size, and serve
+    /// every batch from plans compiled under the winning config.
+    Tuned,
+    /// Explicit per-model configurations — heterogeneous fleets where
+    /// each model shard runs its own operating point. Every registered
+    /// model must have an entry.
+    Explicit(BTreeMap<String, AccelConfig>),
+}
+
+impl ConfigPolicy {
+    /// Short label for reports (`"paper"` / `"tuned"` / `"explicit"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ConfigPolicy::Paper => "paper",
+            ConfigPolicy::Tuned => "tuned",
+            ConfigPolicy::Explicit(_) => "explicit",
+        }
+    }
+
+    /// Resolve the accelerator configuration one model serves under.
+    /// The tuned policy runs the autotuner on `net` at `batch` (a
+    /// fleet passes its `BatchPolicy::max_batch`, since full batches
+    /// dominate a saturated fleet); the result is validated before use.
+    pub fn resolve(&self, net: &Network, batch: usize) -> Result<AccelConfig, String> {
+        let cfg = match self {
+            ConfigPolicy::Paper => AccelConfig::paper_for(net.dims),
+            ConfigPolicy::Tuned => {
+                let topts = TuneOptions {
+                    batch,
+                    ..TuneOptions::default()
+                };
+                tune_network(net, &topts)
+                    .map_err(|e| format!("tuning '{}': {e}", net.name))?
+                    .best()
+                    .cfg
+                    .clone()
+            }
+            ConfigPolicy::Explicit(cfgs) => cfgs
+                .get(net.name)
+                .cloned()
+                .ok_or_else(|| format!("no explicit config for model '{}'", net.name))?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
 
 /// Configuration of a [`Fleet`].
 #[derive(Clone, Debug)]
@@ -55,6 +118,9 @@ pub struct FleetOptions {
     /// replicating every model. Sharding keeps each board's weight
     /// working set smaller at the cost of routing freedom.
     pub shard_models: bool,
+    /// Per-model accelerator-config selection (paper point, autotuned,
+    /// or explicit heterogeneous configs).
+    pub config_policy: ConfigPolicy,
 }
 
 impl Default for FleetOptions {
@@ -64,6 +130,7 @@ impl Default for FleetOptions {
             policy: BatchPolicy::default(),
             latency_budget_s: f64::INFINITY,
             shard_models: false,
+            config_policy: ConfigPolicy::Paper,
         }
     }
 }
@@ -91,8 +158,15 @@ pub struct FleetReport {
     pub per_model: BTreeMap<String, u64>,
     /// Lifetime counters of each instance, by instance id.
     pub per_instance: Vec<InstanceStats>,
-    /// Plan-cache hit/miss counters accumulated by the run.
+    /// Plan-cache hit/miss/eviction counters accumulated by the run.
     pub cache: CacheStats,
+    /// Config-policy label the fleet ran under (`"paper"`, `"tuned"`,
+    /// `"explicit"`).
+    pub config_policy: String,
+    /// Per-model accelerator-config fingerprints — the identity of the
+    /// plans every batch was served from ([`crate::serve::PlanCache`]
+    /// keys are `<model>@<fingerprint>` with the batch size folded in).
+    pub model_configs: BTreeMap<String, String>,
 }
 
 impl FleetReport {
@@ -127,11 +201,16 @@ impl FleetReport {
             self.latency.max_ms
         ));
         out.push_str(&format!(
-            "plan cache: {} hits / {} misses ({:.1}% hit rate)\n",
+            "plan cache: {} hits / {} misses / {} evictions ({:.1}% hit rate)\n",
             self.cache.hits,
             self.cache.misses,
+            self.cache.evictions,
             100.0 * self.cache.hit_rate()
         ));
+        out.push_str(&format!("configs: {} policy\n", self.config_policy));
+        for (model, fp) in &self.model_configs {
+            out.push_str(&format!("  config {model}: {fp}\n"));
+        }
         for (model, n) in &self.per_model {
             out.push_str(&format!("  model {model}: {n} served\n"));
         }
@@ -156,6 +235,11 @@ impl FleetReport {
             .per_model
             .iter()
             .map(|(m, n)| JsonObj::new().str("model", m).int("served", *n).render())
+            .collect();
+        let model_configs: Vec<String> = self
+            .model_configs
+            .iter()
+            .map(|(m, fp)| JsonObj::new().str("model", m).str("config", fp).render())
             .collect();
         let per_instance: Vec<String> = self
             .per_instance
@@ -186,6 +270,9 @@ impl FleetReport {
             .num("max_ms", self.latency.max_ms)
             .int("cache_hits", self.cache.hits)
             .int("cache_misses", self.cache.misses)
+            .int("cache_evictions", self.cache.evictions)
+            .str("config_policy", &self.config_policy)
+            .raw("model_configs", &array(&model_configs))
             .raw("per_model", &array(&per_model))
             .raw("per_instance", &array(&per_instance))
             .render()
@@ -208,6 +295,10 @@ pub struct Fleet {
     networks: BTreeMap<String, Network>,
     instances: Vec<Instance>,
     cache: PlanCache,
+    /// The accelerator configuration each model's plans compile under,
+    /// resolved once at bring-up from the [`ConfigPolicy`] (batch is
+    /// overridden per dispatched batch size).
+    model_cfgs: BTreeMap<String, AccelConfig>,
     /// Memoized `simulate_plan(..).time_s()` per plan-cache key, so
     /// the event loop's hot path never re-simulates a plan it has
     /// already timed (the result is deterministic per key).
@@ -216,12 +307,15 @@ pub struct Fleet {
 }
 
 impl Fleet {
-    /// Bring a fleet online: register `networks`, create the
+    /// Bring a fleet online: register `networks`, resolve each model's
+    /// accelerator configuration from the [`ConfigPolicy`] (the tuned
+    /// policy runs the autotuner here, once per model), create the
     /// instances, and warm the plan cache at the policy's full batch
     /// size so per-model compilation cost is paid once, up front.
     ///
     /// Errors on an empty model list, zero instances, a duplicate
-    /// model name, or a network the graph compiler rejects.
+    /// model name, a network the graph compiler rejects, a tuner
+    /// failure, or an explicit config map missing a registered model.
     pub fn new(networks: Vec<Network>, opts: FleetOptions) -> Result<Fleet, String> {
         if networks.is_empty() {
             return Err("fleet needs at least one network".into());
@@ -258,10 +352,16 @@ impl Fleet {
             })
             .collect();
         let max_batch = opts.policy.max_batch;
+        let mut model_cfgs = BTreeMap::new();
+        for (name, net) in &map {
+            let cfg = opts.config_policy.resolve(net, max_batch)?;
+            model_cfgs.insert(name.clone(), cfg);
+        }
         let mut fleet = Fleet {
             networks: map,
             instances,
-            cache: PlanCache::new(),
+            cache: PlanCache::with_capacity(FLEET_PLAN_CACHE_CAP),
+            model_cfgs,
             sim_memo_s: BTreeMap::new(),
             opts,
         };
@@ -291,6 +391,12 @@ impl Fleet {
         self.cache.stats()
     }
 
+    /// The accelerator configuration `model`'s plans compile under
+    /// (resolved from the [`ConfigPolicy`] at bring-up).
+    pub fn model_config(&self, model: &str) -> Option<&AccelConfig> {
+        self.model_cfgs.get(model)
+    }
+
     /// Simulated accelerator seconds for one batch of `bsize` requests
     /// against `model`: the cached compiled plan at that batch size,
     /// executed by [`simulate_plan`]. Compiles on first use.
@@ -299,7 +405,11 @@ impl Fleet {
             .networks
             .get(model)
             .ok_or_else(|| format!("unknown model '{model}'"))?;
-        let mut cfg = AccelConfig::paper_for(net.dims);
+        let mut cfg = self
+            .model_cfgs
+            .get(model)
+            .cloned()
+            .ok_or_else(|| format!("no resolved config for model '{model}'"))?;
         cfg.batch = bsize.max(1);
         let plan = self.cache.get_or_compile(&cfg, net)?;
         let key = plan.cache_key();
@@ -307,6 +417,12 @@ impl Fleet {
             return Ok(lat);
         }
         let lat = simulate_plan(&plan).time_s();
+        // Bound the memo alongside the bounded plan cache: a reset is
+        // deterministic (simulate_plan is pure) and only costs a
+        // re-simulation on the next lookup of each key.
+        if self.sim_memo_s.len() >= 4 * FLEET_PLAN_CACHE_CAP {
+            self.sim_memo_s.clear();
+        }
         self.sim_memo_s.insert(key, lat);
         Ok(lat)
     }
@@ -428,6 +544,10 @@ impl Fleet {
         let first_arrival = arrivals.first().map(|a| a.t_s).unwrap_or(0.0);
         let makespan = (acc.last_done_s - first_arrival).max(0.0);
         let served = acc.latencies.len() as u64;
+        let mut model_configs = BTreeMap::new();
+        for (m, c) in &self.model_cfgs {
+            model_configs.insert(m.clone(), c.fingerprint());
+        }
         Ok(FleetReport {
             instances: self.instances.len(),
             offered: arrivals.len() as u64,
@@ -444,6 +564,8 @@ impl Fleet {
             per_model: acc.per_model,
             per_instance: self.instances.iter().map(|i| i.stats()).collect(),
             cache: self.cache.stats(),
+            config_policy: self.opts.config_policy.label().to_string(),
+            model_configs,
         })
     }
 }
@@ -550,6 +672,60 @@ mod tests {
         // few distinct batch sizes, so misses stay tiny while hits grow
         assert!(r.cache.misses <= 2 * 8, "misses: {}", r.cache.misses);
         assert!(r.cache.hits > r.cache.misses, "{:?}", r.cache);
+    }
+
+    #[test]
+    fn tuned_policy_resolves_per_model_configs() {
+        let mut f = Fleet::new(
+            vec![zoo::tiny_2d(), zoo::tiny_3d()],
+            FleetOptions {
+                instances: 2,
+                config_policy: ConfigPolicy::Tuned,
+                ..FleetOptions::default()
+            },
+        )
+        .unwrap();
+        for m in ["tiny-2d", "tiny-3d"] {
+            let cfg = f.model_config(m).expect("tuned config resolved");
+            assert!(cfg.validate().is_ok());
+        }
+        let r = f.run(&burst_workload(64)).unwrap();
+        assert_eq!(r.config_policy, "tuned");
+        assert_eq!(r.model_configs.len(), 2);
+        let js = r.to_json();
+        assert!(js.contains("\"config_policy\": \"tuned\""));
+        assert!(js.contains("\"model_configs\""));
+    }
+
+    #[test]
+    fn explicit_policy_builds_heterogeneous_fleets() {
+        let mut cfgs = BTreeMap::new();
+        cfgs.insert("tiny-2d".to_string(), AccelConfig::paper_2d());
+        cfgs.insert("tiny-3d".to_string(), AccelConfig::paper_3d());
+        let f = Fleet::new(
+            vec![zoo::tiny_2d(), zoo::tiny_3d()],
+            FleetOptions {
+                config_policy: ConfigPolicy::Explicit(cfgs),
+                ..FleetOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            f.model_config("tiny-2d").unwrap().fingerprint(),
+            AccelConfig::paper_2d().fingerprint()
+        );
+        // a registered model missing from the map is an error
+        let mut partial = BTreeMap::new();
+        partial.insert("tiny-2d".to_string(), AccelConfig::paper_2d());
+        let err = Fleet::new(
+            vec![zoo::tiny_2d(), zoo::tiny_3d()],
+            FleetOptions {
+                config_policy: ConfigPolicy::Explicit(partial),
+                ..FleetOptions::default()
+            },
+        )
+        .unwrap_err();
+        assert!(err.contains("tiny-3d"), "{err}");
     }
 
     #[test]

@@ -16,7 +16,11 @@
 //!   model under the coordinator's [`crate::coordinator::BatchPolicy`]
 //!   contract, routes each batch to the least-loaded instance hosting
 //!   the model, and sheds requests whose best-case queueing delay
-//!   exceeds the latency budget;
+//!   exceeds the latency budget. Each model's plans compile under a
+//!   [`ConfigPolicy`]-selected accelerator config: the paper operating
+//!   point, the autotuner's per-network pick
+//!   ([`crate::accel::dse::tune`], `udcnn serve --tuned`), or explicit
+//!   heterogeneous configs per model shard;
 //! * [`loadgen`] — seeded open-loop Poisson arrivals
 //!   ([`poisson_arrivals`]) and the p50/p95/p99 [`LatencySummary`].
 //!
@@ -42,6 +46,6 @@ pub mod instance;
 pub mod loadgen;
 
 pub use cache::{CacheStats, PlanCache};
-pub use fleet::{Fleet, FleetOptions, FleetReport};
+pub use fleet::{ConfigPolicy, Fleet, FleetOptions, FleetReport};
 pub use instance::{Instance, InstanceStats};
 pub use loadgen::{poisson_arrivals, Arrival, LatencySummary};

@@ -1,0 +1,123 @@
+//! Differential battery: the compiled-graph execution path
+//! (`graph::execute_f32`) against the coordinator's golden serving
+//! forward (`coordinator::service::forward_uniform`), **bit-exact**,
+//! on the zoo networks, under both `AccelConfig::default()` and the
+//! autotuner's pick for each network.
+//!
+//! This extends the `prop_uniform.rs` 2D==3D parity to the
+//! compiled-plan path: a request served from a *tuned* plan must
+//! produce exactly the bits the untuned golden loop produces — the
+//! accelerator configuration may change the schedule, the buffers and
+//! the plan fingerprint, but never a single output bit. Each config is
+//! also pushed through a `serve::PlanCache` to pin the fingerprint
+//! path the fleet uses.
+//!
+//! The four full-size networks are billions of MACs per forward, so
+//! they run behind `#[ignore]` and CI executes them in release mode
+//! (`cargo test --release --test diff_graph_forward -- --include-ignored`);
+//! the tiny networks run everywhere.
+
+use udcnn::accel::dse::tune::{tune_network, TuneOptions};
+use udcnn::accel::AccelConfig;
+use udcnn::coordinator::service::forward_uniform;
+use udcnn::dcnn::{zoo, LayerData, Network};
+use udcnn::graph::{self, NetworkGraph};
+use udcnn::serve::PlanCache;
+use udcnn::tensor::{Volume, WeightsOIDHW};
+
+/// The coordinator's per-model weight synthesis (same seeds as
+/// `InferenceService` workers), folded to the uniform layout.
+fn service_weights(net: &Network) -> Vec<WeightsOIDHW<f32>> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)).uniform_weights())
+        .collect()
+}
+
+fn service_input(net: &Network) -> Volume<f32> {
+    LayerData::synth(&net.layers[0], 99).uniform_input()
+}
+
+/// Run one network through both paths under one config and assert
+/// bit-exact equality. `threads` varies per call so the battery also
+/// re-checks thread-count independence on the graph path.
+fn assert_paths_agree(net: &Network, cfg: &AccelConfig, threads: usize) {
+    // the config drives the compiled-plan path: it must compile, and
+    // its plan must key the cache by the config fingerprint
+    let mut cache = PlanCache::new();
+    let plan = cache.get_or_compile(cfg, net).unwrap();
+    assert_eq!(plan.steps.len(), net.layers.len(), "{}", net.name);
+    assert_eq!(
+        plan.cache_key(),
+        format!("{}@{}", net.name, cfg.fingerprint()),
+        "{}: plan key must carry the config fingerprint",
+        net.name
+    );
+
+    let weights = service_weights(net);
+    let input = service_input(net);
+    let lowered = graph::passes::lower(&NetworkGraph::from_network(net)).unwrap();
+    let graph_out = graph::execute_f32(&lowered, &weights, &input, threads).unwrap();
+    let golden = forward_uniform(net, &weights, input.data());
+    assert_eq!(
+        graph_out.data(),
+        &golden[..],
+        "{}: graph execution != golden forward (threads={threads})",
+        net.name
+    );
+}
+
+/// Default config + the tuner's pick for this network.
+fn configs_for(net: &Network, batch: usize) -> Vec<AccelConfig> {
+    let tuned = tune_network(
+        net,
+        &TuneOptions {
+            batch,
+            ..TuneOptions::default()
+        },
+    )
+    .unwrap()
+    .best()
+    .cfg
+    .clone();
+    vec![AccelConfig::default(), tuned]
+}
+
+#[test]
+fn tiny_networks_bit_exact_under_default_and_tuned_configs() {
+    for net in [zoo::tiny_2d(), zoo::tiny_3d()] {
+        for (i, cfg) in configs_for(&net, 4).iter().enumerate() {
+            assert_paths_agree(&net, cfg, 1 + 2 * i);
+        }
+    }
+}
+
+#[test]
+fn tuned_and_default_fingerprints_key_distinct_plans() {
+    // When the tuner picks a non-default config, the PlanCache must
+    // treat it as a distinct entry — the mechanism `serve --tuned`
+    // relies on to route batches to tuned plans.
+    let net = zoo::tiny_3d();
+    let cfgs = configs_for(&net, 8);
+    let mut cache = PlanCache::new();
+    for cfg in &cfgs {
+        cache.get_or_compile(cfg, &net).unwrap();
+    }
+    let distinct: std::collections::BTreeSet<String> =
+        cfgs.iter().map(|c| c.fingerprint()).collect();
+    assert_eq!(cache.len(), distinct.len());
+}
+
+#[test]
+#[ignore = "billions of MACs per network: run in release (CI does)"]
+fn full_zoo_bit_exact_under_default_and_tuned_configs() {
+    // Every zoo::NAMES network — the four paper benchmarks plus the
+    // tiny test nets — through both paths under both configs.
+    for name in zoo::NAMES {
+        let net = zoo::by_name(name).unwrap();
+        for (i, cfg) in configs_for(&net, 8).iter().enumerate() {
+            assert_paths_agree(&net, cfg, 2 + 3 * i);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Property tests of the DSE autotuner (`accel::dse::tune`).
+//!
+//! The three contracts the serving tier relies on:
+//!
+//! 1. **Budget** — every candidate the tuner enumerates fits the VC709
+//!    resource model (DSP, BRAM, FF, LUT) and never assumes more DDR
+//!    bandwidth than the platform provides.
+//! 2. **Determinism** — the search is pure arithmetic over a canonical
+//!    candidate order: same inputs, byte-identical result, every time.
+//! 3. **Safety** — the selected `TunedConfig` never simulates slower
+//!    than `AccelConfig::default()` on its target network (the tuner
+//!    may win big, but it can never lose).
+
+use udcnn::accel::dse::tune::{tune_network, tuner_candidates, TuneOptions};
+use udcnn::accel::dse::{DseBudget, DseError};
+use udcnn::accel::AccelConfig;
+use udcnn::dcnn::zoo;
+use udcnn::propcheck::{check, Config};
+use udcnn::resource;
+
+/// Candidate budgets drawn across the interesting range: from "barely
+/// legal" to "whole device".
+fn budget_for(case: usize) -> DseBudget {
+    let caps = [64usize, 128, 256, 512, 1024, 2048, 3072];
+    DseBudget {
+        max_pes: caps[case % caps.len()],
+    }
+}
+
+#[test]
+fn prop_every_tuner_candidate_fits_the_vc709_budget() {
+    let platform_bw = AccelConfig::platform_defaults().ddr_gbps;
+    check(Config { cases: 7, ..Default::default() }, |g| {
+        let budget = budget_for(g.int(0, 1000));
+        let opts = TuneOptions {
+            budget,
+            batch: 1 + g.int(0, 15),
+            keep: 3,
+        };
+        for cfg in tuner_candidates(&opts).map_err(|e| e.to_string())? {
+            if cfg.total_pes() > budget.max_pes {
+                return Err(format!(
+                    "{}: {} PEs over the {}-PE cap",
+                    cfg.fingerprint(),
+                    cfg.total_pes(),
+                    budget.max_pes
+                ));
+            }
+            let est = resource::estimate(&cfg);
+            if !est.fits_vc709() {
+                return Err(format!("{}: {est:?} does not fit the device", cfg.fingerprint()));
+            }
+            // the roofline's memory bound assumes platform bandwidth;
+            // any candidate axis over ddr_gbps must never exceed it
+            if (cfg.ddr_gbps - platform_bw).abs() > 1e-12 {
+                return Err(format!(
+                    "{}: assumes {} GB/s, platform provides {platform_bw}",
+                    cfg.fingerprint(),
+                    cfg.ddr_gbps
+                ));
+            }
+            cfg.validate().map_err(|e| format!("{}: {e}", cfg.fingerprint()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_search_is_deterministic() {
+    // Same options, same network: the ranked result (configs, cycles,
+    // audit counters) is byte-identical across independent runs.
+    check(Config { cases: 6, ..Default::default() }, |g| {
+        let net = if g.int(0, 1) == 0 {
+            zoo::tiny_2d()
+        } else {
+            zoo::tiny_3d()
+        };
+        let opts = TuneOptions {
+            budget: budget_for(g.int(0, 1000)),
+            batch: 1 + g.int(0, 7),
+            keep: 1 + g.int(0, 4),
+        };
+        let a = tune_network(&net, &opts).map_err(|e| e.to_string())?;
+        let b = tune_network(&net, &opts).map_err(|e| e.to_string())?;
+        if a.to_json() != b.to_json() {
+            return Err(format!("tuner diverged on {}", net.name));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tuned_never_slower_than_default() {
+    // On every zoo network (the big four and the tiny test nets) the
+    // winner is at least as fast as AccelConfig::default(), at several
+    // batch sizes.
+    for batch in [1usize, 4, 8] {
+        for name in zoo::NAMES {
+            let net = zoo::by_name(name).unwrap();
+            let opts = TuneOptions {
+                batch,
+                ..TuneOptions::default()
+            };
+            let r = tune_network(&net, &opts).unwrap();
+            assert!(
+                r.best().total_cycles <= r.default_point.total_cycles,
+                "{name} @ batch {batch}: tuned {} > default {}",
+                r.best().total_cycles,
+                r.default_point.total_cycles
+            );
+            assert!(r.speedup_vs_default() >= 1.0);
+        }
+    }
+}
+
+#[test]
+fn prop_ranked_configs_fit_and_are_ordered() {
+    for name in zoo::NAMES {
+        let net = zoo::by_name(name).unwrap();
+        let r = tune_network(&net, &TuneOptions::default()).unwrap();
+        for pair in r.ranked.windows(2) {
+            assert!(
+                pair[0].total_cycles <= pair[1].total_cycles,
+                "{name}: ranking out of order"
+            );
+        }
+        for p in &r.ranked {
+            assert!(p.resources.fits_vc709(), "{name}: ranked config busts the device");
+            assert!(
+                p.roofline.lower_bound_cycles() <= p.total_cycles,
+                "{name}: roofline bound above exact cycles — pruning would be unsound"
+            );
+            assert!((0.0..=1.0 + 1e-9).contains(&p.utilization), "{name}");
+        }
+    }
+}
+
+#[test]
+fn impossible_budget_yields_typed_error_not_empty_vec() {
+    let opts = TuneOptions {
+        // below the smallest enumerable mesh (16 PEs)
+        budget: DseBudget { max_pes: 4 },
+        ..TuneOptions::default()
+    };
+    match tuner_candidates(&opts) {
+        Err(DseError::NoFeasibleConfig { max_pes: 4 }) => {}
+        other => panic!("expected NoFeasibleConfig, got {other:?}"),
+    }
+    let err = tune_network(&zoo::tiny_2d(), &opts).unwrap_err();
+    assert!(err.to_string().contains("4-PE"), "{err}");
+}
