@@ -1,0 +1,109 @@
+//! Streaming bench: temporal-tiled 3D inference vs whole-volume.
+//!
+//! For each benchmark network, stream a frame sequence through a
+//! [`udcnn::stream::StreamSession`] at several chunk sizes and track:
+//!
+//! * frames/s from the per-chunk accelerator cycle estimates,
+//! * wall-clock of the golden-numerics streaming run,
+//! * the session's peak working set against whole-volume execution —
+//!   the headline: chunked 3D streaming must run in strictly less
+//!   memory than `forward_uniform` (asserted below for the largest 3D
+//!   net, so a regression fails the bench).
+//!
+//! 2D networks appear as the degenerate chunk=1 per-frame passthrough.
+//! Emits `reports/BENCH_stream.json`.
+
+use std::time::Instant;
+
+use udcnn::accel::AccelConfig;
+use udcnn::dcnn::{synth_frames, synth_uniform_weights, zoo, Dims, Network};
+use udcnn::report::json::{array, JsonObj};
+use udcnn::report::Table;
+use udcnn::stream::stream_forward;
+
+const REPORT_PATH: &str = "reports/BENCH_stream.json";
+const SEED: u64 = 0x57A3;
+
+fn main() {
+    udcnn::benchkit::header(
+        "streaming",
+        "temporal-tiled 3D inference (depth halos, overlap-exact tiling) vs whole-volume",
+    );
+    let fast = std::env::var_os("UDCNN_BENCH_FAST").is_some();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    // (network, frames, chunk sizes); v-net is the largest 3D net.
+    let vnet_frames = if fast { 4 } else { 8 };
+    let cases: Vec<(Network, usize, Vec<usize>)> = vec![
+        (zoo::dcgan(), 4, vec![1]),
+        (zoo::gan3d(), 4, vec![1, 2, 4]),
+        (zoo::vnet(), vnet_frames, vec![1, 2, vnet_frames]),
+    ];
+
+    let mut t = Table::new(
+        "streaming vs whole-volume (frames/s from per-chunk cycle estimates)",
+        &[
+            "network", "frames", "chunk", "frames/s", "wall s", "peak MiB", "whole MiB", "ratio",
+        ],
+    );
+    let mut rows = Vec::new();
+    let mut largest_3d_ok = true;
+    for (base, frames, chunks) in &cases {
+        let net = if base.dims == Dims::D3 {
+            base.with_depth(*frames)
+        } else {
+            base.clone()
+        };
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        cfg.batch = 1;
+        let weights = synth_uniform_weights(&net, 0x5EED);
+        let input = synth_frames(&net.layers[0], SEED, 0, *frames);
+        for &chunk in chunks {
+            let t0 = Instant::now();
+            let (out, sum) = stream_forward(&net, &weights, &input, chunk, &cfg, threads)
+                .expect("streaming run");
+            let wall_s = t0.elapsed().as_secs_f64();
+            std::hint::black_box(out.len());
+            let mib = |e: usize| e as f64 * 4.0 / (1024.0 * 1024.0);
+            let below = sum.peak_live_elems < sum.whole_peak_elems;
+            if base.name == "v-net" && chunk < *frames && !below {
+                largest_3d_ok = false;
+            }
+            t.row(&[
+                sum.network.clone(),
+                frames.to_string(),
+                chunk.to_string(),
+                format!("{:.1}", sum.frames_per_s()),
+                format!("{wall_s:.3}"),
+                format!("{:.2}", mib(sum.peak_live_elems)),
+                format!("{:.2}", mib(sum.whole_peak_elems)),
+                format!("{:.2}", sum.peak_ratio()),
+            ]);
+            rows.push(
+                JsonObj::new()
+                    .str("base_network", base.name)
+                    .int("chunk", chunk as u64)
+                    .num("wall_s", wall_s)
+                    .str("peak_below_whole", if below { "yes" } else { "no" })
+                    .raw("session", &sum.to_json())
+                    .render(),
+            );
+        }
+    }
+    t.print();
+
+    let doc = JsonObj::new()
+        .str("bench", "streaming")
+        .str("workload", &format!("seed={SEED:#x} threads={threads} fast={fast}"))
+        .str("largest_3d_chunked_below_whole", if largest_3d_ok { "yes" } else { "no" })
+        .raw("runs", &array(&rows))
+        .render();
+    match udcnn::benchkit::write_report_file(REPORT_PATH, &doc) {
+        Ok(()) => println!("wrote {REPORT_PATH}"),
+        Err(e) => eprintln!("could not write {REPORT_PATH}: {e}"),
+    }
+    assert!(
+        largest_3d_ok,
+        "chunked streaming must peak strictly below whole-volume on the largest 3D net"
+    );
+}

@@ -11,7 +11,7 @@
 //! `rust/tests/integration_func_vs_sim.rs` pins the two tiers to each
 //! other and `benches/fig6_*` consume this tier for the paper figures.
 
-use crate::dcnn::LayerSpec;
+use crate::dcnn::{Dims, LayerSpec};
 
 use super::buffers::Residency;
 use super::config::AccelConfig;
@@ -24,6 +24,24 @@ pub fn simulate(cfg: &AccelConfig, layer: &LayerSpec) -> LayerMetrics {
     cfg.validate().expect("invalid accelerator config");
     let sched = Schedule::new(cfg, layer);
     simulate_with_schedule(cfg, layer, &sched)
+}
+
+/// Simulate one temporal tile of a layer: the depth slab of
+/// `slab_frames` input frames (arriving chunk plus retained halo) a
+/// streamed chunk runs this layer over (see [`crate::stream`]). The
+/// slab is a sub-layer with `in_d = slab_frames` and otherwise
+/// identical geometry, so blocking, residency and the DDR model all
+/// apply unchanged; the streaming session sums these per-layer tile
+/// metrics into its per-chunk cycle estimate. 2D layers are depth-1
+/// already (one tile *is* the layer), and a slab covering the whole
+/// depth is whole-volume execution.
+pub fn simulate_chunk(cfg: &AccelConfig, layer: &LayerSpec, slab_frames: usize) -> LayerMetrics {
+    if layer.dims == Dims::D2 || slab_frames >= layer.in_d {
+        return simulate(cfg, layer);
+    }
+    let mut slab = layer.clone();
+    slab.in_d = slab_frames.max(1);
+    simulate(cfg, &slab)
 }
 
 /// Simulate with an explicit schedule (the DSE calls this directly).
@@ -182,6 +200,27 @@ mod tests {
         let m = simulate(&cfg, &zoo::dcgan().layers[0]);
         assert_eq!(m.bound_by, BoundBy::Memory);
         assert!(m.pe_utilization() < 0.5);
+    }
+
+    #[test]
+    fn chunk_cycles_scale_with_slab_and_cap_at_whole() {
+        let cfg = AccelConfig::paper_3d();
+        let layer = &zoo::vnet().layers[0]; // in_d = 8
+        let whole = simulate(&cfg, layer);
+        let half = simulate_chunk(&cfg, layer, 4);
+        let tiny = simulate_chunk(&cfg, layer, 1);
+        assert!(tiny.total_cycles < half.total_cycles);
+        assert!(half.total_cycles < whole.total_cycles);
+        // a slab covering (or exceeding) the declared depth is the
+        // whole layer; 2D layers are always one tile
+        assert_eq!(simulate_chunk(&cfg, layer, 8).total_cycles, whole.total_cycles);
+        assert_eq!(simulate_chunk(&cfg, layer, 99).total_cycles, whole.total_cycles);
+        let cfg2 = AccelConfig::paper_2d();
+        let l2 = &zoo::dcgan().layers[0];
+        assert_eq!(
+            simulate_chunk(&cfg2, l2, 1).total_cycles,
+            simulate(&cfg2, l2).total_cycles
+        );
     }
 
     #[test]

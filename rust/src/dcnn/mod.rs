@@ -12,5 +12,5 @@ pub mod workload;
 pub mod zoo;
 
 pub use layer::{Dims, LayerSpec, OpCounts};
-pub use workload::{LayerData, LayerDataQ};
+pub use workload::{synth_frames, synth_uniform_weights, LayerData, LayerDataQ};
 pub use zoo::Network;

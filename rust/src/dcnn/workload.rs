@@ -111,6 +111,45 @@ impl LayerData {
     }
 }
 
+/// Seeded synthetic weights for every layer of `net`, directly in the
+/// uniform `O × I × Kd × Kh × Kw` layout, *without* materializing the
+/// activation tensors [`LayerData::synth`] also builds. A streaming
+/// session must never allocate whole-volume activations during
+/// bring-up — on a re-depthed network (`Network::with_depth`) those
+/// can dwarf the weights — so this is the synthesis the streaming
+/// front ends use. Deterministic in `(seed, layer index)`.
+pub fn synth_uniform_weights(net: &crate::dcnn::Network, seed: u64) -> Vec<WeightsOIDHW<f32>> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let mut rng = Prng::new(seed ^ (i as u64) ^ 0xDEC0_0002);
+            let mut w = WeightsOIDHW::zeros(l.out_c, l.in_c, l.k_d(), l.k, l.k);
+            rng.fill_f32(w.data_mut(), -0.5, 0.5);
+            w
+        })
+        .collect()
+}
+
+/// Seeded synthetic input frames `[start, start + frames)` for a
+/// network whose first layer is `l0`, in the uniform `(c, d, h, w)`
+/// layout. Each frame's values depend only on `(seed, frame index)`,
+/// never on the chunking, so a stream sliced into any chunk sizes
+/// carries identical bits — the property the tiled-vs-whole
+/// differential battery relies on when it generates inputs per chunk.
+pub fn synth_frames(l0: &LayerSpec, seed: u64, start: usize, frames: usize) -> Volume<f32> {
+    let plane = l0.in_h * l0.in_w;
+    let mut out = Volume::zeros(l0.in_c, frames, l0.in_h, l0.in_w);
+    for f in 0..frames {
+        let mut rng = Prng::new(seed ^ ((start + f) as u64).wrapping_mul(0x9E37_79B9));
+        for c in 0..l0.in_c {
+            let base = (c * frames + f) * plane;
+            rng.fill_f32(&mut out.data_mut()[base..base + plane], -1.0, 1.0);
+        }
+    }
+    out
+}
+
 /// Q8.8 variant of [`LayerData`].
 #[derive(Clone, Debug)]
 pub enum LayerDataQ {
@@ -197,6 +236,34 @@ mod tests {
             }
             _ => panic!("expected 3D"),
         }
+    }
+
+    #[test]
+    fn synth_uniform_weights_match_specs() {
+        let net = zoo::tiny_3d();
+        let ws = synth_uniform_weights(&net, 0x5EED);
+        assert_eq!(ws.len(), net.layers.len());
+        for (w, l) in ws.iter().zip(&net.layers) {
+            assert_eq!((w.o, w.i, w.kd, w.kh, w.kw), (l.out_c, l.in_c, l.k_d(), l.k, l.k));
+        }
+        // deterministic, and depth re-anchoring keeps weights identical
+        let again = synth_uniform_weights(&net.with_depth(7), 0x5EED);
+        for (a, b) in ws.iter().zip(&again) {
+            assert_eq!(a.data(), b.data());
+        }
+        // 2D nets get the depth-1 kernel fold
+        let w2 = synth_uniform_weights(&zoo::tiny_2d(), 1);
+        assert_eq!(w2[0].kd, 1);
+    }
+
+    #[test]
+    fn synth_frames_are_chunking_independent() {
+        let l0 = &zoo::tiny_3d().layers[0];
+        let whole = synth_frames(l0, 9, 0, 5);
+        let a = synth_frames(l0, 9, 0, 2);
+        let b = synth_frames(l0, 9, 2, 3);
+        assert_eq!(a.concat_depth(&b).data(), whole.data());
+        assert_eq!((whole.c, whole.d, whole.h, whole.w), (l0.in_c, 5, l0.in_h, l0.in_w));
     }
 
     #[test]

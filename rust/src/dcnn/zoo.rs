@@ -36,6 +36,42 @@ impl Network {
     pub fn layer(&self, name: &str) -> Option<&LayerSpec> {
         self.layers.iter().find(|l| l.name == name)
     }
+
+    /// This network re-anchored to a new input depth (temporal
+    /// length): layer 0 consumes `frames` depth frames and every later
+    /// layer follows the stride chain rule (`in_d(l+1) = out_d(l)`).
+    /// Channels, kernels and strides — and therefore the weights — are
+    /// unchanged, which is what makes a fixed-weight 3D DCNN depth-
+    /// parametric (deconvolution is translation-covariant along depth
+    /// away from the edges). 2D networks are returned unchanged: their
+    /// "streams" are independent frames (see [`crate::stream`]).
+    ///
+    /// A re-depthed network carries a distinct name (`"<name>@d<N>"`)
+    /// so plan caches keyed by network name never conflate depth
+    /// variants of one architecture. The name string is leaked to
+    /// satisfy the `&'static str` field; callers that re-depth
+    /// repeatedly (e.g. per streamed chunk) should memoize per
+    /// distinct `frames` — [`crate::stream::StreamSession`] does.
+    pub fn with_depth(&self, frames: usize) -> Network {
+        assert!(frames >= 1, "need at least one frame");
+        if self.dims == Dims::D2 || frames == self.layers[0].in_d {
+            return self.clone();
+        }
+        let mut d = frames;
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            let mut nl = l.clone();
+            nl.in_d = d;
+            d = nl.out_d();
+            layers.push(nl);
+        }
+        let name: &'static str = Box::leak(format!("{}@d{frames}", self.name).into_boxed_str());
+        Network {
+            name,
+            dims: self.dims,
+            layers,
+        }
+    }
 }
 
 /// DCGAN generator (Radford et al., 2016): z → 4×4×1024, then four
@@ -234,6 +270,25 @@ mod tests {
         assert_eq!(by_name("vnet").unwrap().name, "v-net");
         assert_eq!(by_name("gan3d").unwrap().name, "3d-gan");
         assert_eq!(by_name("gpgan").unwrap().name, "gp-gan");
+    }
+
+    #[test]
+    fn with_depth_follows_the_stride_chain() {
+        let net = gan3d().with_depth(16);
+        assert_eq!(net.name, "3d-gan@d16");
+        assert_eq!(net.layers[0].in_d, 16);
+        for pair in net.layers.windows(2) {
+            assert_eq!(pair[0].out_d(), pair[1].in_d);
+        }
+        assert_eq!(net.layers.last().unwrap().out_d(), 16 * 16);
+        // h/w and channels are untouched (weights stay valid)
+        for (a, b) in net.layers.iter().zip(gan3d().layers.iter()) {
+            assert_eq!((a.in_c, a.out_c, a.in_h, a.in_w), (b.in_c, b.out_c, b.in_h, b.in_w));
+            assert_eq!((a.k, a.s), (b.k, b.s));
+        }
+        // the native depth and 2D nets keep their names (cache keys)
+        assert_eq!(gan3d().with_depth(4).name, "3d-gan");
+        assert_eq!(dcgan().with_depth(7).name, "dcgan");
     }
 
     #[test]

@@ -450,12 +450,26 @@ pub fn deconv_oom_threaded(
 
 /// Keep `vol[:, :d, :h, :w]` (works for any element type — f32, Q8.8).
 pub fn crop<T: Copy + Default>(vol: &Volume<T>, d: usize, h: usize, w: usize) -> Volume<T> {
-    assert!(d <= vol.d && h <= vol.h && w <= vol.w);
+    crop_window(vol, 0, d, h, w)
+}
+
+/// Keep `vol[:, d_lo..d_lo+d, :h, :w]` — [`crop`] with a depth offset.
+/// This is the write-back of one temporal tile: a streamed chunk owns
+/// a *window* of output frames of the full Eq.-(1) accumulation
+/// extent, not its low corner (see [`crate::stream`]).
+pub fn crop_window<T: Copy + Default>(
+    vol: &Volume<T>,
+    d_lo: usize,
+    d: usize,
+    h: usize,
+    w: usize,
+) -> Volume<T> {
+    assert!(d_lo + d <= vol.d && h <= vol.h && w <= vol.w);
     let mut out = Volume::zeros(vol.c, d, h, w);
     for c in 0..vol.c {
         for z in 0..d {
             for y in 0..h {
-                let src = &vol.row(c, z, y)[..w];
+                let src = &vol.row(c, d_lo + z, y)[..w];
                 let base = ((c * d + z) * h + y) * w;
                 out.data_mut()[base..base + w].copy_from_slice(src);
             }
@@ -589,6 +603,19 @@ mod tests {
         let c = crop(&v, 1, 2, 1);
         assert_eq!((c.d, c.h, c.w), (1, 2, 1));
         assert_eq!(c.data(), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn crop_window_selects_depth_offset() {
+        let v = Volume::from_vec(1, 3, 2, 2, (0..12).map(|x| x as f32).collect());
+        let c = crop_window(&v, 1, 2, 2, 1);
+        assert_eq!((c.d, c.h, c.w), (2, 2, 1));
+        // frames 1 and 2, column 0 of each row
+        assert_eq!(c.data(), &[4.0, 6.0, 8.0, 10.0]);
+        // zero offset is exactly `crop`
+        let a = crop_window(&v, 0, 2, 2, 2);
+        let b = crop(&v, 2, 2, 2);
+        assert_eq!(a.data(), b.data());
     }
 
     #[test]

@@ -24,6 +24,10 @@
 //!   ([`crate::func::uniform`]), proving the lowering pipeline
 //!   preserves semantics; its tests cross-check it against the same
 //!   per-layer loop the coordinator's golden forward runs.
+//! * [`stream_shape`] — [`stream_shapes`] derives each layer's
+//!   temporal-tiling geometry (depth halo, contributor windows,
+//!   emission rate) from `K_d`/stride; [`crate::stream`] builds its
+//!   per-layer halo state from this pass.
 //!
 //! **IOM vs OOM.** A deconvolution can be computed *output-oriented*
 //! (OOM): insert `S−1` zeros between input activations, pad, and run a
@@ -44,11 +48,13 @@ pub mod ir;
 pub mod passes;
 pub mod plan;
 pub mod simulate;
+pub mod stream_shape;
 
 pub use execute::execute_f32;
 pub use ir::{Act, NetworkGraph, NodeId, NodeSpec, OpKind, TensorShape};
 pub use plan::{compile, EdgePlace, NetworkPlan, StepPlan};
 pub use simulate::{simulate_plan, NetworkRunMetrics};
+pub use stream_shape::{stream_shapes, LayerStreamShape};
 
 use crate::accel::AccelConfig;
 use crate::dcnn::Network;

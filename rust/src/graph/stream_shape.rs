@@ -1,0 +1,209 @@
+//! The streaming (temporal-tiling) shape pass.
+//!
+//! Deconvolution *scatters*: input frame `id` writes output frames
+//! `[id·S, id·S + K_d)`, so output frame `z` reads exactly the input
+//! frames `[⌈(z − K_d + 1)/S⌉, ⌊z/S⌋]` — a bounded, causal window.
+//! Two consequences drive the whole streaming tier
+//! ([`crate::stream`]):
+//!
+//! 1. **Emission is prompt.** The cropped output keeps frames
+//!    `[0, S·I)`, and after `n` input frames every output frame
+//!    `z < S·n` has its full contributor set (`⌊z/S⌋ ≤ n − 1`), so a
+//!    layer emits `S` output frames per input frame with *zero*
+//!    lookahead and needs no end-of-stream drain.
+//! 2. **State is a fixed halo.** Once outputs `[0, S·n)` are emitted,
+//!    the only input frames future outputs still read are the last
+//!    `⌊(K_d − 1)/S⌋` — the per-layer halo this pass computes from
+//!    [`LayerSpec::k_d`] and the stride.
+//!
+//! [`stream_shapes`] runs over a *lowered* (IOM-form) graph and
+//! returns one [`LayerStreamShape`] per deconvolution node in
+//! topological order; [`crate::stream::StreamSession`] derives its
+//! per-layer halo state from exactly this pass, and the property suite
+//! (`tests/prop_stream.rs`) pins reassembled streaming outputs to
+//! these shapes.
+
+use crate::dcnn::{Dims, LayerSpec};
+
+use super::ir::{NetworkGraph, OpKind};
+
+/// Streaming-relevant geometry of one deconvolution layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerStreamShape {
+    /// Layer name (from the [`LayerSpec`]).
+    pub name: String,
+    /// Kernel extent along depth (`K` for 3D, 1 for 2D).
+    pub k_d: usize,
+    /// Stride `S`.
+    pub s: usize,
+    /// Input frames the layer must retain across chunks:
+    /// `⌊(K_d − 1)/S⌋`. Zero for 2D layers (depth-1 kernels), so a 2D
+    /// network streams as stateless per-frame passthrough.
+    pub halo_in: usize,
+    /// Total input frames of the layer's declared geometry (1 for 2D).
+    pub in_frames: usize,
+    /// Total cropped output frames, `S · in_frames` (1 for 2D).
+    pub out_frames: usize,
+}
+
+impl LayerStreamShape {
+    /// Input slab a steady-state chunk of `chunk` new frames runs
+    /// over: the retained halo plus the arrivals, capped at the
+    /// layer's total depth (the first chunk has no halo yet; a chunk
+    /// covering the whole depth is whole-volume execution).
+    pub fn slab_frames(&self, chunk: usize) -> usize {
+        (chunk + self.halo_in).min(self.in_frames)
+    }
+
+    /// First input frame output frame `z` reads:
+    /// `max(0, ⌈(z − K_d + 1)/S⌉)`.
+    pub fn first_contributor(&self, z: usize) -> usize {
+        if z + 1 <= self.k_d {
+            0
+        } else {
+            (z + 1 - self.k_d).div_ceil(self.s)
+        }
+    }
+
+    /// Last input frame output frame `z` reads: `min(I − 1, ⌊z/S⌋)`.
+    pub fn last_contributor(&self, z: usize) -> usize {
+        (z / self.s).min(self.in_frames - 1)
+    }
+}
+
+/// Compute the [`LayerStreamShape`] of every deconvolution node of a
+/// lowered graph, in topological order.
+///
+/// Errors on OOM-form graphs (run [`super::passes::lower`] first), on
+/// a graph with no deconvolution nodes, on a layer with `K < S`
+/// (whose cropped extent is undefined — the paper's benchmarks all
+/// have `K ≥ S`), and on a 3D chain whose depths do not compose.
+pub fn stream_shapes(g: &NetworkGraph) -> Result<Vec<LayerStreamShape>, String> {
+    for n in &g.nodes {
+        if matches!(n.op, OpKind::ZeroInsert { .. } | OpKind::Conv { .. }) {
+            return Err(format!(
+                "node '{}' is OOM-form; run passes::lower before stream_shapes",
+                n.name
+            ));
+        }
+    }
+    let specs = g.deconv_specs();
+    if specs.is_empty() {
+        return Err(format!("graph '{}' has no deconvolution nodes", g.name));
+    }
+    let mut shapes = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        shapes.push(shape_of(spec)?);
+    }
+    for pair in shapes.windows(2) {
+        if pair[0].out_frames != pair[1].in_frames {
+            return Err(format!(
+                "layer '{}' emits {} frames but '{}' consumes {} (depth chain broken)",
+                pair[0].name, pair[0].out_frames, pair[1].name, pair[1].in_frames
+            ));
+        }
+    }
+    Ok(shapes)
+}
+
+/// The [`LayerStreamShape`] of one layer.
+fn shape_of(spec: &LayerSpec) -> Result<LayerStreamShape, String> {
+    if spec.k < spec.s {
+        return Err(format!(
+            "layer '{}' has K={} < S={}; streaming (and cropping) need K >= S",
+            spec.name, spec.k, spec.s
+        ));
+    }
+    let (in_frames, out_frames) = match spec.dims {
+        Dims::D2 => (1, 1),
+        Dims::D3 => (spec.in_d, spec.out_d()),
+    };
+    Ok(LayerStreamShape {
+        name: spec.name.clone(),
+        k_d: spec.k_d(),
+        s: spec.s,
+        halo_in: (spec.k_d() - 1) / spec.s,
+        in_frames,
+        out_frames,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+    use crate::graph::passes;
+
+    fn shapes_for(net: &crate::dcnn::Network) -> Vec<LayerStreamShape> {
+        let g = passes::lower(&NetworkGraph::from_network(net)).unwrap();
+        stream_shapes(&g).unwrap()
+    }
+
+    #[test]
+    fn zoo_3d_halo_is_one_frame() {
+        // K=3, S=2 everywhere: halo = (3-1)/2 = 1 retained frame.
+        for net in [zoo::gan3d(), zoo::vnet()] {
+            for (sh, l) in shapes_for(&net).iter().zip(&net.layers) {
+                assert_eq!(sh.halo_in, 1, "{}", sh.name);
+                assert_eq!(sh.k_d, 3);
+                assert_eq!(sh.in_frames, l.in_d);
+                assert_eq!(sh.out_frames, 2 * l.in_d);
+            }
+        }
+    }
+
+    #[test]
+    fn zoo_2d_is_stateless_passthrough() {
+        for sh in shapes_for(&zoo::dcgan()) {
+            assert_eq!(sh.halo_in, 0, "{}", sh.name);
+            assert_eq!(sh.k_d, 1);
+            assert_eq!((sh.in_frames, sh.out_frames), (1, 1));
+        }
+    }
+
+    #[test]
+    fn contributor_window_matches_scatter() {
+        let sh = LayerStreamShape {
+            name: "t".into(),
+            k_d: 3,
+            s: 2,
+            halo_in: 1,
+            in_frames: 4,
+            out_frames: 8,
+        };
+        // input id writes [2id, 2id+3): invert per output frame
+        assert_eq!((sh.first_contributor(0), sh.last_contributor(0)), (0, 0));
+        assert_eq!((sh.first_contributor(2), sh.last_contributor(2)), (0, 1));
+        assert_eq!((sh.first_contributor(4), sh.last_contributor(4)), (1, 2));
+        assert_eq!((sh.first_contributor(7), sh.last_contributor(7)), (3, 3));
+        // emission boundary z = S·n is served once frame n arrives
+        assert_eq!(sh.first_contributor(6), 2);
+        // slab of a 2-frame chunk carries the 1-frame halo
+        assert_eq!(sh.slab_frames(2), 3);
+        assert_eq!(sh.slab_frames(4), 4, "whole depth caps the slab");
+    }
+
+    #[test]
+    fn rejects_oom_form_and_bad_geometry() {
+        let net = zoo::tiny_3d();
+        let err = stream_shapes(&NetworkGraph::from_network_oom(&net)).unwrap_err();
+        assert!(err.contains("OOM-form"), "{err}");
+
+        let mut bad = zoo::tiny_3d();
+        bad.layers[0].s = 5; // K=3 < S=5
+        let g = NetworkGraph::from_network(&bad);
+        let err = stream_shapes(&g).unwrap_err();
+        assert!(err.contains("K >= S"), "{err}");
+    }
+
+    #[test]
+    fn re_depthed_chain_composes() {
+        let net = zoo::gan3d().with_depth(10);
+        let shapes = shapes_for(&net);
+        assert_eq!(shapes[0].in_frames, 10);
+        assert_eq!(shapes.last().unwrap().out_frames, 160);
+        for pair in shapes.windows(2) {
+            assert_eq!(pair[0].out_frames, pair[1].in_frames);
+        }
+    }
+}

@@ -41,6 +41,10 @@
 //!   behind one front door, with a shared compiled-plan cache,
 //!   least-loaded shard scheduling, latency-budget admission control,
 //!   and a deterministic open-loop load generator / latency harness.
+//! * [`stream`] — streaming temporal-tiled 3D inference: depth-chunked
+//!   sessions with per-layer halo state, bit-exact against the
+//!   whole-volume forward for every chunking, in bounded memory;
+//!   streaming jobs ride the fleet via chunk-shaped compiled plans.
 //! * [`report`] — paper-style table/figure text rendering.
 //! * [`benchkit`] — a minimal statistics-aware benchmark harness (the
 //!   build environment is fully offline and has no criterion crate; see
@@ -78,6 +82,7 @@ pub mod baseline;
 pub mod runtime;
 pub mod coordinator;
 pub mod serve;
+pub mod stream;
 pub mod report;
 pub mod benchkit;
 pub mod propcheck;

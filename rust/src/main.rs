@@ -60,6 +60,7 @@ fn run(args: &[String]) -> Result<()> {
         "zoo" => cmd_zoo(),
         "verify" => cmd_verify(&opts),
         "serve" => cmd_serve(&args[1..]),
+        "stream" => cmd_stream(&args[1..]),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -72,7 +73,7 @@ fn print_usage() {
     println!(
         "udcnn — uniform 2D/3D DCNN accelerator (Wang et al. 2019 reproduction)\n\
          \n\
-         usage: udcnn <simulate|compile|plan|sparsity|resources|dse|tune|compare|zoo|verify|serve> [options]\n\
+         usage: udcnn <simulate|compile|plan|sparsity|resources|dse|tune|compare|zoo|verify|serve|stream> [options]\n\
          \n\
          simulate   --net NAME | --all   [--batch N]   per-layer util + TOPS (Fig. 6)\n\
          compile    NAME [--batch N] [--json] [--oom]  whole-network plan (graph compiler)\n\
@@ -89,7 +90,10 @@ fn print_usage() {
            serve options: --requests N (default 2048)  --seed S\n\
                           --budget-ms B (default 250)  --max-batch M  --max-wait-ms W\n\
                           --shard (shard models across instances)\n\
-                          --tuned (serve autotuned per-model plans)  --json"
+                          --tuned (serve autotuned per-model plans)  --json\n\
+         stream     <net> [--frames N] [--chunk D]     streaming temporal-tiled inference\n\
+           stream options: --threads T  --seed S  --verify (check bits vs whole volume)\n\
+                           --json"
     );
 }
 
@@ -578,5 +582,136 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         speedup,
         fleet.instances
     );
+    Ok(())
+}
+
+/// `udcnn stream <net> [--frames N] [--chunk D]`: run a streaming
+/// temporal-tiled inference session — a 3D network re-anchored to an
+/// `N`-frame sequence, fed in `D`-frame chunks with per-layer halo
+/// carry (2D networks stream frame by frame). Reports frames/s from
+/// the per-chunk cycle estimates and the compiled-plan path, and the
+/// session's peak working set against whole-volume execution.
+/// `--verify` reassembles the streamed output and checks it bit-exact
+/// against the whole-volume golden forward.
+fn cmd_stream(rest: &[String]) -> Result<()> {
+    use udcnn::coordinator::service::forward_uniform;
+    use udcnn::dcnn::{synth_frames, synth_uniform_weights, Dims};
+    use udcnn::stream::{DepthTiler, StreamSession};
+    let opts = parse_opts(rest);
+    let value_keys = &["frames", "chunk", "threads", "seed"];
+    let name = first_positional(rest, value_keys).cloned().ok_or_else(|| {
+        anyhow::anyhow!("usage: udcnn stream <network> [--frames N] [--chunk D] [--json]")
+    })?;
+    let base = network_by_name(&name)?;
+    let frames: usize = opt_parse(&opts, "frames", 16)?;
+    let chunk: usize = opt_parse(&opts, "chunk", 4)?;
+    if frames == 0 || chunk == 0 {
+        bail!("--frames and --chunk must be positive");
+    }
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads: usize = opt_parse(&opts, "threads", default_threads)?;
+    let seed: u64 = opt_parse(&opts, "seed", 0xF00D)?;
+    let verify = opts.contains_key("verify");
+
+    let net = if base.dims == Dims::D3 {
+        base.with_depth(frames)
+    } else {
+        base
+    };
+    let mut cfg = AccelConfig::paper_for(net.dims);
+    cfg.batch = 1; // one stream, one volume in flight per chunk
+    let weights = synth_uniform_weights(&net, 0x5EED);
+    let mut sess = StreamSession::new(&net, weights.clone(), cfg, threads)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // Frames are synthesized per chunk (seeded per frame index), so
+    // nothing whole-volume is ever allocated unless --verify asks for
+    // the golden comparison.
+    let tiler = DepthTiler::new(frames, chunk).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut outs = Vec::new();
+    for ch in tiler.chunks() {
+        let arriving = synth_frames(&net.layers[0], seed, ch.start, ch.frames);
+        let out = sess.push_chunk(arriving).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if verify {
+            outs.push(out.frames);
+        }
+    }
+    let sum = sess.summary();
+
+    let bit_exact = if verify {
+        let streamed = udcnn::stream::concat_frames(&outs);
+        let ok = if net.dims == Dims::D3 {
+            let input = synth_frames(&net.layers[0], seed, 0, frames);
+            let golden = forward_uniform(&net, &weights, input.data());
+            streamed.data() == &golden[..]
+        } else {
+            (0..frames).all(|f| {
+                let frame = synth_frames(&net.layers[0], seed, f, 1);
+                let golden = forward_uniform(&net, &weights, frame.data());
+                streamed.slice_depth(f, 1).data() == &golden[..]
+            })
+        };
+        if !ok {
+            bail!("streamed output diverged from the whole-volume forward");
+        }
+        Some(true)
+    } else {
+        None
+    };
+
+    let plan_fps = if sum.plan_s > 0.0 {
+        frames as f64 / sum.plan_s
+    } else {
+        0.0
+    };
+    if opts.contains_key("json") {
+        let mut doc = JsonObj::new()
+            .str("workload", &format!("seed={seed} frames={frames} chunk={chunk}"))
+            .int("threads", threads as u64)
+            .num("plan_frames_per_s", plan_fps)
+            .raw("session", &sum.to_json());
+        if let Some(ok) = bit_exact {
+            doc = doc.str("bit_exact_vs_whole", if ok { "yes" } else { "no" });
+        }
+        println!("{}", doc.render());
+        return Ok(());
+    }
+
+    println!(
+        "streaming {}: {} frames in {} chunk(s) of <= {} ({} threads)",
+        sum.network,
+        sum.frames_in,
+        sum.chunks,
+        tiler.chunk_frames(),
+        threads
+    );
+    for sh in sess.shapes() {
+        println!(
+            "  {}: halo {} frame(s), {} -> {} frames (K_d={}, S={})",
+            sh.name, sh.halo_in, sh.in_frames, sh.out_frames, sh.k_d, sh.s
+        );
+    }
+    println!(
+        "cycles: {:.2} M ({:.3} ms) => {:.1} frames/s | plan path: {:.3} ms => {:.1} frames/s",
+        sum.total_cycles as f64 / 1e6,
+        sum.accel_s * 1e3,
+        sum.frames_per_s(),
+        sum.plan_s * 1e3,
+        plan_fps,
+    );
+    let mib = |elems: usize| elems as f64 * 4.0 / (1024.0 * 1024.0);
+    println!(
+        "peak working set: {:.2} MiB streamed vs {:.2} MiB whole-volume ({})",
+        mib(sum.peak_live_elems),
+        mib(sum.whole_peak_elems),
+        ratio(sum.peak_ratio()),
+    );
+    println!(
+        "plan cache: {} compiled chunk shapes, {} hits / {} misses",
+        sum.cache.misses, sum.cache.hits, sum.cache.misses
+    );
+    if bit_exact == Some(true) {
+        println!("bit-exact vs whole volume: yes ({} output frames)", sum.frames_out);
+    }
     Ok(())
 }

@@ -134,6 +134,22 @@ impl PlanCache {
         self.plans.len()
     }
 
+    /// Keys of the currently resident plans, in sorted order.
+    /// Read-only: inspecting residency never advances the LRU clock or
+    /// the hit/miss counters (the adversarial LRU battery relies on
+    /// probing without perturbing).
+    pub fn resident_keys(&self) -> Vec<String> {
+        self.plans.keys().cloned().collect()
+    }
+
+    /// The LRU recency clock: total lookups served so far. Advances by
+    /// exactly one per [`PlanCache::get_or_compile`] call and never
+    /// from wall time — eviction order is a pure function of the
+    /// lookup sequence.
+    pub fn lookups(&self) -> u64 {
+        self.tick
+    }
+
     /// Whether the cache holds no plans yet.
     pub fn is_empty(&self) -> bool {
         self.plans.is_empty()
@@ -251,6 +267,30 @@ mod tests {
         c.get_or_compile(&cfg, &net).unwrap();
         assert_eq!(c.stats().hits, 2, "batch-1 plan survived both rounds");
         assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn residency_probe_is_side_effect_free() {
+        let mut c = PlanCache::with_capacity(2);
+        let net = zoo::tiny_2d();
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        for b in [1usize, 2] {
+            cfg.batch = b;
+            c.get_or_compile(&cfg, &net).unwrap();
+        }
+        assert_eq!(c.lookups(), 2);
+        let before = c.resident_keys();
+        assert_eq!(before.len(), 2);
+        // probing neither ticks the clock nor touches the stats
+        let _ = c.resident_keys();
+        assert_eq!(c.lookups(), 2);
+        assert_eq!(c.stats().hits + c.stats().misses, 2);
+        cfg.batch = 3;
+        c.get_or_compile(&cfg, &net).unwrap(); // evicts batch-1 (LRU)
+        let after = c.resident_keys();
+        assert_eq!(after.len(), 2);
+        assert!(!after.contains(&before[0]) || !after.contains(&before[1]));
+        assert_eq!(c.lookups(), 3);
     }
 
     #[test]

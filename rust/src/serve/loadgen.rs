@@ -45,6 +45,36 @@ pub fn poisson_arrivals(seed: u64, rps: f64, n: usize, models: &[&str]) -> Vec<A
     out
 }
 
+/// Draw `n` periodic arrivals for one model: request `i` (1-based)
+/// lands at `i·period_s` plus a seeded uniform jitter in
+/// `[0, jitter_frac·period_s)` — the arrival shape of a streaming
+/// source that captures a fixed-size temporal chunk per period and
+/// ships it when complete (the first chunk arrives only after it has
+/// been captured). With `jitter_frac ≤ 1` the sequence stays sorted,
+/// so it feeds [`crate::serve::Fleet::run`] directly; interleave
+/// several sources by merging on `t_s`.
+///
+/// # Panics
+/// Panics unless `period_s` is positive and finite and
+/// `jitter_frac ∈ [0, 1]`.
+pub fn periodic_arrivals(
+    seed: u64,
+    model: &str,
+    period_s: f64,
+    n: usize,
+    jitter_frac: f64,
+) -> Vec<Arrival> {
+    assert!(period_s > 0.0 && period_s.is_finite(), "period must be positive");
+    assert!((0.0..=1.0).contains(&jitter_frac), "jitter_frac must be in [0, 1]");
+    let mut rng = Prng::new(seed);
+    (1..=n)
+        .map(|i| Arrival {
+            t_s: i as f64 * period_s + rng.f64() * jitter_frac * period_s,
+            model: model.to_string(),
+        })
+        .collect()
+}
+
 /// Latency percentiles of one serving run (milliseconds).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LatencySummary {
@@ -115,6 +145,23 @@ mod tests {
         let a = poisson_arrivals(3, 100.0, 300, &["x", "y", "z"]);
         for m in ["x", "y", "z"] {
             assert!(a.iter().any(|r| r.model == m), "{m} never drawn");
+        }
+    }
+
+    #[test]
+    fn periodic_arrivals_stay_sorted_under_full_jitter() {
+        for jitter in [0.0, 0.5, 1.0] {
+            let a = periodic_arrivals(11, "cam0", 0.04, 50, jitter);
+            assert_eq!(a.len(), 50);
+            assert!(a.windows(2).all(|w| w[0].t_s <= w[1].t_s), "jitter={jitter}");
+            assert!(a[0].t_s >= 0.04, "first chunk arrives after capture");
+            assert!(a.iter().all(|x| x.model == "cam0"));
+        }
+        // deterministic in the seed; zero jitter is exactly periodic
+        assert_eq!(periodic_arrivals(3, "m", 0.1, 9, 0.7), periodic_arrivals(3, "m", 0.1, 9, 0.7));
+        let exact = periodic_arrivals(3, "m", 0.5, 4, 0.0);
+        for (i, a) in exact.iter().enumerate() {
+            assert!((a.t_s - 0.5 * (i + 1) as f64).abs() < 1e-12);
         }
     }
 

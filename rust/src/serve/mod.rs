@@ -22,7 +22,10 @@
 //!   ([`crate::accel::dse::tune`], `udcnn serve --tuned`), or explicit
 //!   heterogeneous configs per model shard;
 //! * [`loadgen`] — seeded open-loop Poisson arrivals
-//!   ([`poisson_arrivals`]) and the p50/p95/p99 [`LatencySummary`].
+//!   ([`poisson_arrivals`]), periodic per-source chunk cadences for
+//!   streaming jobs ([`periodic_arrivals`], consumed by
+//!   [`crate::stream::serve_streams`]), and the p50/p95/p99
+//!   [`LatencySummary`].
 //!
 //! **IOM vs OOM.** Every latency this tier reports is an
 //! *input-oriented-mapping* (IOM) number: the cached plans schedule
@@ -48,4 +51,4 @@ pub mod loadgen;
 pub use cache::{CacheStats, PlanCache};
 pub use fleet::{ConfigPolicy, Fleet, FleetOptions, FleetReport};
 pub use instance::{Instance, InstanceStats};
-pub use loadgen::{poisson_arrivals, Arrival, LatencySummary};
+pub use loadgen::{periodic_arrivals, poisson_arrivals, Arrival, LatencySummary};

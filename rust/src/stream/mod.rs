@@ -1,0 +1,54 @@
+//! Streaming temporal-tiled inference: unbounded frame sequences
+//! through 3D DCNNs in bounded memory.
+//!
+//! The paper's 3D benchmarks (3D-GAN volumes, V-Net-style decoders,
+//! video super-resolution workloads) consume *temporal* volumes —
+//! depth is time. Whole-volume [`forward_uniform`] bounds a "video"
+//! by host memory and makes latency all-or-nothing; this subsystem
+//! instead tiles the depth axis and streams:
+//!
+//! * [`tiler`] — [`DepthTiler`] splits a frame sequence into
+//!   fixed-size chunks; pure index arithmetic, plus the
+//!   [`tiler::halo_frames`] kernel-geometry helper;
+//! * [`session`] — [`StreamSession`]: per-layer halo state (derived
+//!   from the [`crate::graph::stream_shape`] pass), chunk execution
+//!   through the dimension-uniform IOM kernels, per-chunk cycle
+//!   estimates ([`crate::accel::timing::simulate_chunk`]) and
+//!   compiled-plan latencies (chunk-shaped [`Network::with_depth`]
+//!   plans through a [`crate::serve::PlanCache`]), and live-memory
+//!   high-water tracking;
+//! * [`serve`] — [`serve_streams`]: streaming jobs on the fleet —
+//!   chunk arrivals generated at each source's cadence and replayed
+//!   through the existing batcher/scheduler/admission machinery.
+//!
+//! **The determinism contract.** Deconvolution *scatters* along
+//! depth, so consecutive output tiles overlap by `K_d − S` frames.
+//! Combining overlapping tiles by adding partial sums would reorder
+//! f32 accumulation and drift from the whole-volume result; instead
+//! every output frame is produced exactly once, from one kernel call
+//! whose input slab contains the frame's complete contributor window
+//! — the same terms in the same order as whole-volume execution.
+//! Tiled output is therefore **bit-exact** against
+//! [`forward_uniform`] for every chunk size, thread count, precision
+//! (f32 and Q8.8) and accelerator config; `tests/diff_stream.rs` and
+//! `tests/prop_stream.rs` enforce it across the zoo and randomized
+//! geometries. 2D networks degenerate to stateless per-frame
+//! passthrough (chunk = 1).
+//!
+//! Front ends: `udcnn stream <net> --frames N --chunk D [--json]`,
+//! and `benches/streaming.rs` → `reports/BENCH_stream.json`
+//! (frames/s and peak working set vs whole-volume).
+//!
+//! [`forward_uniform`]: crate::coordinator::service::forward_uniform
+//! [`Network::with_depth`]: crate::dcnn::Network::with_depth
+
+pub mod serve;
+pub mod session;
+pub mod tiler;
+
+pub use serve::{serve_streams, StreamJob};
+pub use session::{
+    concat_frames, stream_forward, stream_forward_q, whole_forward_q, whole_volume_peak_elems,
+    StreamChunkOutput, StreamSession, StreamSummary,
+};
+pub use tiler::{DepthChunk, DepthTiler};

@@ -1,0 +1,203 @@
+//! Streaming jobs on the serving fleet.
+//!
+//! A streaming job is a frame source (a camera, a video decode, a
+//! volumetric sensor) that captures `chunk` frames per period and
+//! ships each completed chunk to the fleet. This adapter lowers jobs
+//! onto the *existing* serving machinery rather than growing a second
+//! scheduler:
+//!
+//! * each job's chunks become ordinary requests against a
+//!   **chunk-shaped model** — the stream's architecture re-anchored to
+//!   its steady-state slab depth via [`Network::with_depth`] (chunk
+//!   plus halo; 2D streams are per-frame, chunk 1). Distinct chunk
+//!   shapes get distinct model names, so [`crate::serve::PlanCache`]
+//!   compiles each slab geometry exactly once and every fleet instance
+//!   serves the stream from the same compiled plan;
+//! * arrivals come from [`crate::serve::periodic_arrivals`] at the
+//!   job's chunk cadence (seeded jitter, one source per job), merged
+//!   into one sorted workload;
+//! * [`crate::serve::Fleet::run`] then batches, routes least-loaded,
+//!   sheds past the latency budget and reports percentiles exactly as
+//!   it does for request traffic.
+
+use std::collections::BTreeMap;
+
+use crate::dcnn::{Dims, Network};
+use crate::serve::{periodic_arrivals, Arrival, Fleet, FleetOptions, FleetReport};
+
+use super::tiler::halo_frames;
+
+/// One streaming inference job: a frame source against a registered
+/// model.
+#[derive(Clone, Debug)]
+pub struct StreamJob {
+    /// Base model (network) name the stream runs on.
+    pub model: String,
+    /// Total frames the source will deliver.
+    pub frames: usize,
+    /// Frames captured per chunk (forced to 1 on 2D models).
+    pub chunk: usize,
+    /// Source frame rate (frames per second of simulated time).
+    pub fps: f64,
+}
+
+/// Replay streaming `jobs` against a fleet of `opts.instances`
+/// simulated accelerator instances. Returns the fleet report plus the
+/// chunk-model name each job was served under (job order preserved).
+///
+/// Errors on an empty job list, a job naming an unknown model, zero
+/// frames/chunk, a non-positive frame rate, or any fleet bring-up
+/// failure.
+pub fn serve_streams(
+    nets: &[Network],
+    opts: FleetOptions,
+    jobs: &[StreamJob],
+    seed: u64,
+) -> Result<(FleetReport, Vec<String>), String> {
+    if jobs.is_empty() {
+        return Err("need at least one streaming job".into());
+    }
+    let mut chunk_models: BTreeMap<String, Network> = BTreeMap::new();
+    let mut job_models = Vec::with_capacity(jobs.len());
+    let mut arrivals: Vec<Arrival> = Vec::new();
+    for (ji, job) in jobs.iter().enumerate() {
+        let base = nets
+            .iter()
+            .find(|n| n.name == job.model)
+            .ok_or_else(|| format!("streaming job {ji}: unknown model '{}'", job.model))?;
+        if job.frames == 0 || job.chunk == 0 {
+            return Err(format!("streaming job {ji}: frames and chunk must be positive"));
+        }
+        if !(job.fps > 0.0) || !job.fps.is_finite() {
+            return Err(format!("streaming job {ji}: fps must be positive and finite"));
+        }
+        let (chunk_net, chunk_eff) = match base.dims {
+            Dims::D2 => (base.clone(), 1),
+            Dims::D3 => {
+                let l0 = &base.layers[0];
+                let chunk_eff = job.chunk.min(job.frames);
+                let slab = (chunk_eff + halo_frames(l0.k_d(), l0.s)).min(job.frames);
+                (base.with_depth(slab), chunk_eff)
+            }
+        };
+        let name = chunk_net.name.to_string();
+        chunk_models.entry(name.clone()).or_insert(chunk_net);
+        job_models.push(name.clone());
+        let n = job.frames.div_ceil(chunk_eff);
+        let period = chunk_eff as f64 / job.fps;
+        arrivals.extend(periodic_arrivals(
+            seed ^ (ji as u64).wrapping_mul(0x9E37_79B9),
+            &name,
+            period,
+            n,
+            0.1,
+        ));
+    }
+    arrivals.sort_by(|a, b| {
+        a.t_s
+            .partial_cmp(&b.t_s)
+            .expect("arrival times are never NaN")
+            .then_with(|| a.model.cmp(&b.model))
+    });
+    let models: Vec<Network> = chunk_models.into_values().collect();
+    let report = Fleet::new(models, opts)?.run(&arrivals)?;
+    Ok((report, job_models))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    fn jobs() -> Vec<StreamJob> {
+        vec![
+            StreamJob {
+                model: "tiny-3d".into(),
+                frames: 8,
+                chunk: 2,
+                fps: 120.0,
+            },
+            StreamJob {
+                model: "tiny-2d".into(),
+                frames: 6,
+                chunk: 4, // forced to per-frame on 2D
+                fps: 60.0,
+            },
+        ]
+    }
+
+    fn nets() -> Vec<Network> {
+        vec![zoo::tiny_2d(), zoo::tiny_3d()]
+    }
+
+    #[test]
+    fn jobs_ride_the_existing_fleet_machinery() {
+        let (r, served_as) = serve_streams(
+            &nets(),
+            FleetOptions {
+                instances: 2,
+                ..FleetOptions::default()
+            },
+            &jobs(),
+            0xCAFE,
+        )
+        .unwrap();
+        // 3D: 8 frames in 2-frame chunks = 4 requests against the
+        // chunk-shaped model (slab 2+1); 2D: 6 per-frame requests.
+        assert_eq!(r.offered, 4 + 6);
+        assert_eq!(r.served, 10);
+        assert_eq!(served_as, vec!["tiny-3d@d3".to_string(), "tiny-2d".to_string()]);
+        assert_eq!(r.per_model["tiny-3d@d3"], 4);
+        assert_eq!(r.per_model["tiny-2d"], 6);
+        // chunk-shaped plans are first-class cache citizens
+        assert!(r.model_configs.contains_key("tiny-3d@d3"));
+    }
+
+    #[test]
+    fn deterministic_and_chunk_models_deduplicate() {
+        let mut two = jobs();
+        two.push(StreamJob {
+            model: "tiny-3d".into(),
+            frames: 4,
+            chunk: 2,
+            fps: 30.0,
+        });
+        let opts = FleetOptions::default();
+        let (a, ma) = serve_streams(&nets(), opts.clone(), &two, 7).unwrap();
+        let (b, mb) = serve_streams(&nets(), opts, &two, 7).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+        assert_eq!(ma, mb);
+        // both 3D jobs share one chunk model: it is registered once
+        assert_eq!(ma[0], ma[2]);
+        assert_eq!(a.per_model.len(), 2);
+        assert_eq!(a.per_model["tiny-3d@d3"], 4 + 2);
+    }
+
+    #[test]
+    fn bad_jobs_are_rejected() {
+        let opts = FleetOptions::default();
+        assert!(serve_streams(&nets(), opts.clone(), &[], 1).is_err());
+        let bad = |j: StreamJob| serve_streams(&nets(), FleetOptions::default(), &[j], 1);
+        assert!(bad(StreamJob {
+            model: "nope".into(),
+            frames: 4,
+            chunk: 2,
+            fps: 30.0
+        })
+        .is_err());
+        assert!(bad(StreamJob {
+            model: "tiny-3d".into(),
+            frames: 0,
+            chunk: 2,
+            fps: 30.0
+        })
+        .is_err());
+        assert!(bad(StreamJob {
+            model: "tiny-3d".into(),
+            frames: 4,
+            chunk: 2,
+            fps: 0.0
+        })
+        .is_err());
+    }
+}

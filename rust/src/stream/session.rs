@@ -1,0 +1,713 @@
+//! Streaming sessions: halo-carrying chunk execution of a network.
+//!
+//! A [`StreamSession`] owns one inference stream. Each
+//! [`StreamSession::push_chunk`] call feeds the next temporal tile of
+//! input frames through every layer: the layer prepends its retained
+//! depth halo (computed by the [`crate::graph::stream_shape`] pass),
+//! runs the dimension-uniform IOM kernel over the slab, crops the
+//! window of output frames whose contributor sets just completed, and
+//! retains the new halo. Emission is prompt — `S` output frames per
+//! input frame, no drain step — and per-layer state is `⌊(K_d−1)/S⌋`
+//! frames, so session memory is bounded by the chunk size, not the
+//! stream length.
+//!
+//! **Why tiled equals whole, bit-exactly.** An output frame `z` reads
+//! exactly the input frames `[⌈(z−K_d+1)/S⌉, ⌊z/S⌋]`. The session
+//! computes `z` only once all of them have arrived, inside one
+//! [`crate::func::uniform::deconv_iom`] call whose slab contains that
+//! whole window — so every output element accumulates the *same terms
+//! in the same order* (input channels major, depth ascending) as the
+//! whole-volume kernel. No partial sums ever cross a chunk boundary;
+//! the overlap between consecutive tiles is resolved by re-scattering
+//! the halo frames, not by adding partial outputs in a different
+//! order. f32 addition is non-associative, so this is the *only*
+//! tiling discipline that reproduces `forward_uniform` bit-for-bit —
+//! `tests/diff_stream.rs` pins it across the zoo, chunk sizes,
+//! precisions and configs.
+//!
+//! 2D networks degenerate to stateless chunk=1 passthrough: every
+//! frame is an independent inference through the same golden
+//! [`forward_uniform`] path (an *unbounded* stream — useful for
+//! frame-by-frame video workloads on 2D nets).
+
+use std::collections::BTreeMap;
+
+use crate::accel::{timing, AccelConfig};
+use crate::coordinator::service::forward_uniform;
+use crate::dcnn::{Dims, LayerSpec, Network};
+use crate::fixed::Q88;
+use crate::func::uniform;
+use crate::graph::{passes, stream_shapes, LayerStreamShape, NetworkGraph};
+use crate::report::json::JsonObj;
+use crate::serve::{CacheStats, PlanCache};
+use crate::tensor::{Volume, WeightsOIDHW};
+
+use super::tiler::DepthTiler;
+
+// ---------------------------------------------------------------------
+// Per-layer halo state (generic over the element type).
+// ---------------------------------------------------------------------
+
+/// One layer's streaming state: the retained input halo plus the
+/// arrival/emission cursors.
+struct LayerStream<T> {
+    spec: LayerSpec,
+    shape: LayerStreamShape,
+    /// Retained input frames `[first_contributor(emitted), seen)`.
+    held: Volume<T>,
+    /// Input frames consumed so far.
+    seen: usize,
+    /// Output frames emitted so far (always a multiple of `S`).
+    emitted: usize,
+}
+
+impl<T: Copy + Default> LayerStream<T> {
+    fn new(spec: &LayerSpec, shape: &LayerStreamShape) -> LayerStream<T> {
+        LayerStream {
+            held: Volume::zeros(spec.in_c, 0, spec.in_h, spec.in_w),
+            spec: spec.clone(),
+            shape: shape.clone(),
+            seen: 0,
+            emitted: 0,
+        }
+    }
+
+    fn held_elems(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Consume `incoming` frames: run the kernel over halo + arrivals
+    /// and emit every output frame whose contributor window just
+    /// completed. `kernel` is the full-extent IOM deconvolution of a
+    /// slab; `other_held_elems` (the halos of the *other* layers) and
+    /// `peak` let the session track its live-memory high-water mark.
+    /// Returns the emitted frames and the slab depth processed.
+    fn step<K>(
+        &mut self,
+        incoming: &Volume<T>,
+        kernel: K,
+        other_held_elems: usize,
+        peak: &mut usize,
+    ) -> Result<(Volume<T>, usize), String>
+    where
+        K: Fn(&Volume<T>) -> Volume<T>,
+    {
+        let spec = &self.spec;
+        if (incoming.c, incoming.h, incoming.w) != (spec.in_c, spec.in_h, spec.in_w) {
+            return Err(format!(
+                "layer '{}': chunk frames are {}x{}x{} (c×h×w), expected {}x{}x{}",
+                spec.name, incoming.c, incoming.h, incoming.w, spec.in_c, spec.in_h, spec.in_w
+            ));
+        }
+        if incoming.d == 0 {
+            return Err(format!("layer '{}': empty chunk", spec.name));
+        }
+        if self.seen + incoming.d > self.shape.in_frames {
+            return Err(format!(
+                "layer '{}': {} arriving frames overflow the declared depth {} ({} seen)",
+                spec.name, incoming.d, self.shape.in_frames, self.seen
+            ));
+        }
+        // Invariant: held covers input ids [first_contributor(emitted), seen).
+        let start = self.seen - self.held.d;
+        let slab = self.held.concat_depth(incoming);
+        *peak = (*peak).max(other_held_elems + self.held.len() + incoming.len() + slab.len());
+
+        let new_seen = self.seen + incoming.d;
+        let ready = self.shape.s * new_seen;
+        let full = kernel(&slab);
+        let out = uniform::crop_window(
+            &full,
+            self.emitted - start * self.shape.s,
+            ready - self.emitted,
+            spec.out_h(),
+            spec.out_w(),
+        );
+        *peak = (*peak).max(other_held_elems + slab.len() + full.len() + out.len());
+
+        let keep_lo = self.shape.first_contributor(ready).min(new_seen);
+        self.held = slab.slice_depth(keep_lo - start, new_seen - keep_lo);
+        let slab_frames = slab.d;
+        self.seen = new_seen;
+        self.emitted = ready;
+        Ok((out, slab_frames))
+    }
+}
+
+/// Check one uniform weight set per layer, with matching shapes.
+fn validate_weights<T: Copy + Default>(
+    net: &Network,
+    weights: &[WeightsOIDHW<T>],
+) -> Result<(), String> {
+    if weights.len() != net.layers.len() {
+        return Err(format!(
+            "network '{}' has {} layers but {} weight sets were given",
+            net.name,
+            net.layers.len(),
+            weights.len()
+        ));
+    }
+    for (w, l) in weights.iter().zip(&net.layers) {
+        if (w.o, w.i, w.kd, w.kh, w.kw) != (l.out_c, l.in_c, l.k_d(), l.k, l.k) {
+            return Err(format!("weights for '{}' do not match its layer spec", l.name));
+        }
+    }
+    Ok(())
+}
+
+/// Lower `net` to IOM form and run the streaming shape pass.
+fn shapes_of(net: &Network) -> Result<Vec<LayerStreamShape>, String> {
+    stream_shapes(&passes::lower(&NetworkGraph::from_network(net))?)
+}
+
+/// Live elements the whole-volume golden forward
+/// ([`forward_uniform`]) holds at its worst layer: the input, the
+/// full Eq.-(1) accumulation extent, and the cropped output coexist
+/// during write-back. The streaming session's
+/// [`StreamSummary::peak_live_elems`] is the like-for-like number.
+pub fn whole_volume_peak_elems(net: &Network) -> usize {
+    net.layers
+        .iter()
+        .map(|l| l.input_elems() + l.out_c * l.out_full_spatial() + l.output_elems())
+        .max()
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------
+// The f32 session (serving hot path, with timing + plan integration).
+// ---------------------------------------------------------------------
+
+/// Output of one [`StreamSession::push_chunk`] call.
+#[derive(Clone, Debug)]
+pub struct StreamChunkOutput {
+    /// Output frames emitted for this chunk (depth `S^L ×` chunk
+    /// frames for a 3D chain; one frame per input frame for 2D).
+    pub frames: Volume<f32>,
+    /// Per-chunk accelerator cycle estimate: the sum of
+    /// [`crate::accel::timing::simulate_chunk`] over the per-layer
+    /// slabs this chunk actually ran.
+    pub cycles: u64,
+    /// Simulated seconds of the compiled-plan path for this chunk
+    /// (the chunk-shaped network's [`crate::graph::NetworkPlan`],
+    /// cached in the session's [`PlanCache`]).
+    pub plan_s: f64,
+}
+
+/// End-of-stream accounting of a session (available at any point —
+/// sessions need no drain).
+#[derive(Clone, Debug)]
+pub struct StreamSummary {
+    /// Network the session streamed (re-depthed name for 3D).
+    pub network: String,
+    /// Dimensionality.
+    pub dims: Dims,
+    /// Input frames consumed.
+    pub frames_in: usize,
+    /// Output frames emitted.
+    pub frames_out: usize,
+    /// Chunks pushed.
+    pub chunks: usize,
+    /// Total per-chunk accelerator cycles (isolated-layer tier).
+    pub total_cycles: u64,
+    /// Total simulated seconds of the per-chunk cycle estimates.
+    pub accel_s: f64,
+    /// Total simulated seconds of the compiled-plan path.
+    pub plan_s: f64,
+    /// High-water mark of live session memory, in elements: halos plus
+    /// the in-flight slab/full/output volumes of the busiest moment.
+    pub peak_live_elems: usize,
+    /// Whole-volume peak ([`whole_volume_peak_elems`]) of the same
+    /// network — the bound a chunked 3D session stays strictly under.
+    pub whole_peak_elems: usize,
+    /// Plan-cache counters (chunk-shaped plans compile once per
+    /// distinct slab size).
+    pub cache: CacheStats,
+}
+
+impl StreamSummary {
+    /// Streamed input frames per simulated second (cycle-estimate
+    /// tier); 0.0 before any chunk.
+    pub fn frames_per_s(&self) -> f64 {
+        if self.accel_s > 0.0 {
+            self.frames_in as f64 / self.accel_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Streaming peak over whole-volume peak (< 1.0 means the session
+    /// runs in strictly less memory than whole-volume execution).
+    pub fn peak_ratio(&self) -> f64 {
+        if self.whole_peak_elems > 0 {
+            self.peak_live_elems as f64 / self.whole_peak_elems as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Machine-readable form (the shape `BENCH_stream.json` embeds).
+    pub fn to_json(&self) -> String {
+        JsonObj::new()
+            .str("network", &self.network)
+            .str("dims", &self.dims.to_string())
+            .int("frames_in", self.frames_in as u64)
+            .int("frames_out", self.frames_out as u64)
+            .int("chunks", self.chunks as u64)
+            .int("total_cycles", self.total_cycles)
+            .num("accel_s", self.accel_s)
+            .num("plan_s", self.plan_s)
+            .num("frames_per_s", self.frames_per_s())
+            .int("peak_live_elems", self.peak_live_elems as u64)
+            .int("whole_peak_elems", self.whole_peak_elems as u64)
+            .num("peak_ratio", self.peak_ratio())
+            .int("plan_cache_misses", self.cache.misses)
+            .int("plan_cache_hits", self.cache.hits)
+            .render()
+    }
+}
+
+/// One streaming inference session over a network.
+pub struct StreamSession {
+    net: Network,
+    weights: Vec<WeightsOIDHW<f32>>,
+    shapes: Vec<LayerStreamShape>,
+    /// Per-layer halo state (empty for 2D passthrough sessions).
+    layers: Vec<LayerStream<f32>>,
+    cfg: AccelConfig,
+    threads: usize,
+    frames_in: usize,
+    frames_out: usize,
+    chunks: usize,
+    total_cycles: u64,
+    plan_s: f64,
+    peak_live_elems: usize,
+    /// Chunk-shaped compiled plans, keyed by the re-depthed network
+    /// name — at most a handful of distinct slab sizes per stream.
+    cache: PlanCache,
+    /// Memoized plan latency per layer-0 slab size (avoids re-leaking
+    /// `with_depth` names and re-simulating per chunk).
+    plan_memo: BTreeMap<usize, f64>,
+}
+
+impl StreamSession {
+    /// Open a session: validate the weights against the network, run
+    /// the graph streaming shape pass (per-layer halos), and size the
+    /// plan cache for the few distinct chunk shapes a stream produces.
+    /// `threads` bounds each kernel's scoped workers (results are
+    /// bit-identical for every thread count).
+    pub fn new(
+        net: &Network,
+        weights: Vec<WeightsOIDHW<f32>>,
+        cfg: AccelConfig,
+        threads: usize,
+    ) -> Result<StreamSession, String> {
+        cfg.validate()?;
+        validate_weights(net, &weights)?;
+        let shapes = shapes_of(net)?;
+        let layers = match net.dims {
+            Dims::D2 => Vec::new(),
+            Dims::D3 => net
+                .layers
+                .iter()
+                .zip(&shapes)
+                .map(|(l, sh)| LayerStream::new(l, sh))
+                .collect(),
+        };
+        Ok(StreamSession {
+            net: net.clone(),
+            weights,
+            shapes,
+            layers,
+            cfg,
+            threads: threads.max(1),
+            frames_in: 0,
+            frames_out: 0,
+            chunks: 0,
+            total_cycles: 0,
+            plan_s: 0.0,
+            peak_live_elems: 0,
+            cache: PlanCache::with_capacity(8),
+            plan_memo: BTreeMap::new(),
+        })
+    }
+
+    /// The network this session streams.
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// Per-layer streaming shapes (halo math) the session derives its
+    /// state from.
+    pub fn shapes(&self) -> &[LayerStreamShape] {
+        &self.shapes
+    }
+
+    /// Input frames a 3D session still accepts (2D sessions are
+    /// unbounded and report `usize::MAX`).
+    pub fn frames_remaining(&self) -> usize {
+        match self.net.dims {
+            Dims::D2 => usize::MAX,
+            Dims::D3 => self.shapes[0].in_frames - self.frames_in,
+        }
+    }
+
+    /// Feed the next chunk of input frames (depth axis = time) and
+    /// receive every output frame whose contributor window completed.
+    /// 3D chunks stream through the halo-carrying layer chain; for 2D
+    /// networks each depth slice is an independent frame inference
+    /// (chunk=1 passthrough semantics regardless of the pushed depth).
+    pub fn push_chunk(&mut self, chunk: Volume<f32>) -> Result<StreamChunkOutput, String> {
+        let (frames, slabs) = match self.net.dims {
+            Dims::D3 => self.push_chunk_3d(&chunk)?,
+            Dims::D2 => self.push_chunk_2d(&chunk)?,
+        };
+        // per-chunk cycle estimate over the slabs actually processed
+        let mut cycles = 0u64;
+        for (layer, &slab) in self.net.layers.iter().zip(&slabs) {
+            cycles += timing::simulate_chunk(&self.cfg, layer, slab).total_cycles;
+        }
+        if self.net.dims == Dims::D2 {
+            cycles *= chunk.d as u64; // one full pass per frame
+        }
+        // compiled-plan path for the chunk-shaped network
+        let per_pass = self.chunk_plan_s(slabs[0])?;
+        let plan_s = match self.net.dims {
+            Dims::D2 => per_pass * chunk.d as f64, // one plan pass per frame
+            Dims::D3 => per_pass,
+        };
+        self.frames_in += chunk.d;
+        self.frames_out += frames.d;
+        self.chunks += 1;
+        self.total_cycles += cycles;
+        self.plan_s += plan_s;
+        Ok(StreamChunkOutput {
+            frames,
+            cycles,
+            plan_s,
+        })
+    }
+
+    /// 3D: stream the chunk through the halo-carrying layer chain.
+    fn push_chunk_3d(&mut self, chunk: &Volume<f32>) -> Result<(Volume<f32>, Vec<usize>), String> {
+        let mut peak = self.peak_live_elems;
+        let mut slabs = Vec::with_capacity(self.layers.len());
+        let mut cur = chunk.clone();
+        for i in 0..self.layers.len() {
+            let other: usize = self
+                .layers
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != i)
+                .map(|(_, l)| l.held_elems())
+                .sum();
+            let w = &self.weights[i];
+            let s = self.net.layers[i].s;
+            let threads = self.threads;
+            let (out, slab) = self.layers[i].step(
+                &cur,
+                |v| uniform::deconv_iom_threaded(v, w, s, threads),
+                other,
+                &mut peak,
+            )?;
+            slabs.push(slab);
+            cur = out;
+        }
+        self.peak_live_elems = peak;
+        Ok((cur, slabs))
+    }
+
+    /// 2D: every depth slice is an independent frame through the
+    /// golden serving forward (identical bits to `forward_uniform` by
+    /// construction — it *is* that code path).
+    fn push_chunk_2d(&mut self, chunk: &Volume<f32>) -> Result<(Volume<f32>, Vec<usize>), String> {
+        let l0 = &self.net.layers[0];
+        if (chunk.c, chunk.h, chunk.w) != (l0.in_c, l0.in_h, l0.in_w) {
+            return Err(format!(
+                "network '{}': chunk frames are {}x{}x{} (c×h×w), expected {}x{}x{}",
+                self.net.name, chunk.c, chunk.h, chunk.w, l0.in_c, l0.in_h, l0.in_w
+            ));
+        }
+        if chunk.d == 0 {
+            return Err(format!("network '{}': empty chunk", self.net.name));
+        }
+        let last = self.net.layers.last().expect("non-empty network");
+        let (oc, oh, ow) = (last.out_c, last.out_h(), last.out_w());
+        let frame_peak = whole_volume_peak_elems(&self.net);
+        let mut outs = Vec::with_capacity(chunk.d);
+        let mut out_elems = 0usize;
+        for f in 0..chunk.d {
+            let frame = chunk.slice_depth(f, 1);
+            let y = forward_uniform(&self.net, &self.weights, frame.data());
+            out_elems += y.len();
+            outs.push(Volume::from_vec(oc, 1, oh, ow, y));
+            self.peak_live_elems = self
+                .peak_live_elems
+                .max(chunk.len() + out_elems + frame_peak);
+        }
+        Ok((concat_frames(&outs), vec![1; self.net.layers.len()]))
+    }
+
+    /// Simulated plan seconds for a chunk whose layer-0 slab holds
+    /// `slab0` frames, memoized per distinct slab size. The chunk
+    /// network is the stream's architecture re-anchored to the slab
+    /// depth ([`Network::with_depth`]), compiled through the session
+    /// [`PlanCache`] — a full-depth slab is the whole-volume plan.
+    fn chunk_plan_s(&mut self, slab0: usize) -> Result<f64, String> {
+        if let Some(&lat) = self.plan_memo.get(&slab0) {
+            return Ok(lat);
+        }
+        let chunk_net = self.net.with_depth(slab0);
+        let plan = self.cache.get_or_compile(&self.cfg, &chunk_net)?;
+        let lat = crate::graph::simulate_plan(&plan).time_s();
+        self.plan_memo.insert(slab0, lat);
+        Ok(lat)
+    }
+
+    /// Session accounting so far (no drain needed — emission is
+    /// prompt, so after the last chunk this is the final summary).
+    pub fn summary(&self) -> StreamSummary {
+        StreamSummary {
+            network: self.net.name.to_string(),
+            dims: self.net.dims,
+            frames_in: self.frames_in,
+            frames_out: self.frames_out,
+            chunks: self.chunks,
+            total_cycles: self.total_cycles,
+            accel_s: self.total_cycles as f64 * self.cfg.cycle_s(),
+            plan_s: self.plan_s,
+            peak_live_elems: self.peak_live_elems,
+            whole_peak_elems: whole_volume_peak_elems(&self.net),
+            cache: self.cache.stats(),
+        }
+    }
+}
+
+/// Concatenate volumes along the depth (time) axis with a single
+/// allocation — the frame reassembly of a streamed output (a repeated
+/// [`Volume::concat_depth`] fold would re-copy the accumulated output
+/// once per chunk). Panics on an empty slice or mismatched c/h/w.
+pub fn concat_frames<T: Copy + Default>(parts: &[Volume<T>]) -> Volume<T> {
+    let first = &parts[0];
+    let d: usize = parts.iter().map(|p| p.d).sum();
+    let plane = first.h * first.w;
+    let mut out = Volume::zeros(first.c, d, first.h, first.w);
+    let mut off = 0;
+    for p in parts {
+        debug_assert_eq!((p.c, p.h, p.w), (first.c, first.h, first.w));
+        for c in 0..p.c {
+            let src = c * p.d * plane;
+            let dst = (c * d + off) * plane;
+            out.data_mut()[dst..dst + p.d * plane]
+                .copy_from_slice(&p.data()[src..src + p.d * plane]);
+        }
+        off += p.d;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// One-call drivers (tests, CLI, benches).
+// ---------------------------------------------------------------------
+
+/// Drive a full [`StreamSession`] over `input`, tiled into
+/// `chunk`-frame temporal tiles, and return the reassembled output
+/// with the session summary. The reassembled bits equal whole-volume
+/// [`forward_uniform`] exactly (`tests/diff_stream.rs` pins it).
+pub fn stream_forward(
+    net: &Network,
+    weights: &[WeightsOIDHW<f32>],
+    input: &Volume<f32>,
+    chunk: usize,
+    cfg: &AccelConfig,
+    threads: usize,
+) -> Result<(Volume<f32>, StreamSummary), String> {
+    let mut sess = StreamSession::new(net, weights.to_vec(), cfg.clone(), threads)?;
+    let tiler = DepthTiler::new(input.d, chunk)?;
+    let mut outs = Vec::with_capacity(tiler.len());
+    for ch in tiler.chunks() {
+        let part = sess.push_chunk(input.slice_depth(ch.start, ch.frames))?;
+        outs.push(part.frames);
+    }
+    Ok((concat_frames(&outs), sess.summary()))
+}
+
+/// Q8.8 whole-volume golden forward: per-layer
+/// [`uniform::deconv_iom_q`] accumulation (48-bit, one rounding at
+/// write-back) plus the `K−S` crop — the fixed-point counterpart of
+/// [`forward_uniform`], used as the streaming battery's reference.
+pub fn whole_forward_q(
+    net: &Network,
+    weights: &[WeightsOIDHW<Q88>],
+    input: &Volume<Q88>,
+) -> Result<Volume<Q88>, String> {
+    validate_weights(net, weights)?;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut cur = input.clone();
+    for (layer, w) in net.layers.iter().zip(weights) {
+        // threaded kernel: bit-identical to single-threaded (integer
+        // accumulation; prop_uniform pins it), full zoo nets are big
+        let full = uniform::deconv_iom_q_threaded(&cur, w, layer.s, threads);
+        cur = uniform::crop(&full, layer.out_d(), layer.out_h(), layer.out_w());
+    }
+    Ok(cur)
+}
+
+/// Q8.8 streaming forward over `chunk`-frame tiles. Integer
+/// accumulation makes bit-exactness unconditional here, but the slab
+/// discipline is identical to the f32 session — each output frame
+/// rounds exactly once, from its complete contributor set. 2D
+/// networks run per-frame [`whole_forward_q`] passthrough.
+pub fn stream_forward_q(
+    net: &Network,
+    weights: &[WeightsOIDHW<Q88>],
+    input: &Volume<Q88>,
+    chunk: usize,
+    threads: usize,
+) -> Result<Volume<Q88>, String> {
+    validate_weights(net, weights)?;
+    let tiler = DepthTiler::new(input.d, chunk)?;
+    let mut outs = Vec::with_capacity(tiler.len());
+    if net.dims == Dims::D2 {
+        for f in 0..input.d {
+            outs.push(whole_forward_q(net, weights, &input.slice_depth(f, 1))?);
+        }
+        return Ok(concat_frames(&outs));
+    }
+    let shapes = shapes_of(net)?;
+    let mut layers: Vec<LayerStream<Q88>> = net
+        .layers
+        .iter()
+        .zip(&shapes)
+        .map(|(l, sh)| LayerStream::new(l, sh))
+        .collect();
+    let mut peak = 0usize; // tracked but unused in the Q driver
+    for ch in tiler.chunks() {
+        let mut cur = input.slice_depth(ch.start, ch.frames);
+        for (i, ls) in layers.iter_mut().enumerate() {
+            let w = &weights[i];
+            let s = net.layers[i].s;
+            let kernel = |v: &Volume<Q88>| uniform::deconv_iom_q_threaded(v, w, s, threads);
+            let (out, _) = ls.step(&cur, kernel, 0, &mut peak)?;
+            cur = out;
+        }
+        outs.push(cur);
+    }
+    Ok(concat_frames(&outs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::{synth_frames, synth_uniform_weights, zoo};
+
+    fn cfg_for(net: &Network) -> AccelConfig {
+        let mut c = AccelConfig::paper_for(net.dims);
+        c.batch = 1;
+        c
+    }
+
+    #[test]
+    fn tiny_3d_stream_is_bit_exact_for_every_chunking() {
+        let net = zoo::tiny_3d().with_depth(6);
+        let weights = synth_uniform_weights(&net, 0x5EED);
+        let input = synth_frames(&net.layers[0], 7, 0, 6);
+        let golden = forward_uniform(&net, &weights, input.data());
+        for chunk in 1..=6 {
+            let (out, sum) =
+                stream_forward(&net, &weights, &input, chunk, &cfg_for(&net), 2).unwrap();
+            assert_eq!(out.data(), &golden[..], "chunk={chunk}");
+            assert_eq!(sum.frames_in, 6);
+            assert_eq!(sum.frames_out, out.d);
+            assert_eq!(out.d, net.layers.last().unwrap().out_d());
+            assert!(sum.total_cycles > 0 && sum.plan_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn chunked_session_peaks_below_whole_volume() {
+        let net = zoo::tiny_3d().with_depth(8);
+        let weights = synth_uniform_weights(&net, 1);
+        let input = synth_frames(&net.layers[0], 2, 0, 8);
+        let (_, sum) = stream_forward(&net, &weights, &input, 2, &cfg_for(&net), 1).unwrap();
+        assert!(
+            sum.peak_live_elems < sum.whole_peak_elems,
+            "stream {} !< whole {}",
+            sum.peak_live_elems,
+            sum.whole_peak_elems
+        );
+        assert!(sum.peak_ratio() < 1.0);
+        // a single whole-depth chunk cannot beat whole-volume memory
+        let (_, whole) = stream_forward(&net, &weights, &input, 8, &cfg_for(&net), 1).unwrap();
+        assert!(whole.peak_live_elems >= whole.whole_peak_elems);
+    }
+
+    #[test]
+    fn d2_session_is_per_frame_passthrough() {
+        let net = zoo::tiny_2d();
+        let weights = synth_uniform_weights(&net, 3);
+        let frames = synth_frames(&net.layers[0], 4, 0, 3);
+        // any chunking gives the same bits: frame-by-frame golden
+        let (a, sum) = stream_forward(&net, &weights, &frames, 1, &cfg_for(&net), 1).unwrap();
+        let (b, _) = stream_forward(&net, &weights, &frames, 3, &cfg_for(&net), 1).unwrap();
+        assert_eq!(a.data(), b.data());
+        assert_eq!(sum.frames_out, 3);
+        for f in 0..3 {
+            let golden = forward_uniform(&net, &weights, frames.slice_depth(f, 1).data());
+            assert_eq!(a.slice_depth(f, 1).data(), &golden[..], "frame {f}");
+        }
+        // 2D sessions accept an unbounded stream
+        let mut sess = StreamSession::new(&net, weights.clone(), cfg_for(&net), 1).unwrap();
+        assert_eq!(sess.frames_remaining(), usize::MAX);
+        for start in 0..4 {
+            sess.push_chunk(synth_frames(&net.layers[0], 4, start, 1)).unwrap();
+        }
+        assert_eq!(sess.summary().frames_in, 4);
+    }
+
+    #[test]
+    fn q88_stream_matches_whole_volume() {
+        let net = zoo::tiny_3d();
+        let data: Vec<crate::dcnn::LayerData> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| crate::dcnn::LayerData::synth(l, i as u64))
+            .collect();
+        let qw: Vec<WeightsOIDHW<Q88>> =
+            data.iter().map(|d| d.quantize().uniform_weights()).collect();
+        let qi = crate::dcnn::LayerData::synth(&net.layers[0], 42)
+            .quantize()
+            .uniform_input();
+        let whole = whole_forward_q(&net, &qw, &qi).unwrap();
+        for chunk in [1, 2] {
+            let tiled = stream_forward_q(&net, &qw, &qi, chunk, 2).unwrap();
+            assert_eq!(tiled.data(), whole.data(), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn plan_cache_sees_few_distinct_chunk_shapes() {
+        let net = zoo::tiny_3d().with_depth(9);
+        let weights = synth_uniform_weights(&net, 5);
+        let input = synth_frames(&net.layers[0], 6, 0, 9);
+        // chunk=2 over 9 frames: slabs 2 (first), 3 (steady), 2 (last)
+        let (_, sum) = stream_forward(&net, &weights, &input, 2, &cfg_for(&net), 1).unwrap();
+        assert_eq!(sum.chunks, 5);
+        assert!(sum.cache.misses <= 2, "{:?}", sum.cache);
+        assert!(sum.cache.hits + sum.cache.misses <= sum.chunks as u64);
+    }
+
+    #[test]
+    fn overflow_and_bad_shapes_are_rejected() {
+        let net = zoo::tiny_3d(); // depth 2
+        let weights = synth_uniform_weights(&net, 0);
+        let mut sess = StreamSession::new(&net, weights.clone(), cfg_for(&net), 1).unwrap();
+        assert_eq!(sess.frames_remaining(), 2);
+        let too_deep = synth_frames(&net.layers[0], 0, 0, 3);
+        assert!(sess.push_chunk(too_deep).unwrap_err().contains("overflow"));
+        let bad_frame: Volume<f32> = Volume::zeros(1, 1, 2, 2);
+        assert!(sess.push_chunk(bad_frame).is_err());
+        // wrong weight count
+        assert!(StreamSession::new(&net, weights[..1].to_vec(), cfg_for(&net), 1).is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Depth-axis tiling: split a frame sequence into fixed-size chunks.
+//!
+//! [`DepthTiler`] is pure index arithmetic — it never touches tensor
+//! data. The session ([`super::session`]) consumes its chunks in
+//! order; the differential battery re-tiles the same stream several
+//! ways and demands identical output bits, which holds because chunk
+//! boundaries only decide *when* frames arrive, never *what* any
+//! output frame reads (see [`crate::graph::stream_shape`]).
+
+/// One depth chunk of a tiled frame sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DepthChunk {
+    /// Chunk ordinal, 0-based.
+    pub index: usize,
+    /// First frame of the chunk in the whole sequence.
+    pub start: usize,
+    /// Frames in this chunk (the last chunk may be short).
+    pub frames: usize,
+}
+
+/// Splits `total` depth frames into chunks of (at most) `chunk`
+/// frames.
+#[derive(Clone, Copy, Debug)]
+pub struct DepthTiler {
+    total: usize,
+    chunk: usize,
+}
+
+impl DepthTiler {
+    /// A tiler over `total` frames in chunks of `chunk`. A chunk size
+    /// at or above `total` yields a single whole-sequence chunk.
+    /// Errors when either count is zero.
+    pub fn new(total: usize, chunk: usize) -> Result<DepthTiler, String> {
+        if total == 0 {
+            return Err("cannot tile an empty frame sequence".into());
+        }
+        if chunk == 0 {
+            return Err("chunk size must be at least one frame".into());
+        }
+        Ok(DepthTiler {
+            total,
+            chunk: chunk.min(total),
+        })
+    }
+
+    /// Number of chunks (`⌈total/chunk⌉`, at least 1).
+    pub fn len(&self) -> usize {
+        self.total.div_ceil(self.chunk)
+    }
+
+    /// Always `false` — a tiler covers at least one frame.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Effective chunk size (the requested size capped at `total`).
+    pub fn chunk_frames(&self) -> usize {
+        self.chunk
+    }
+
+    /// Total frames tiled.
+    pub fn total_frames(&self) -> usize {
+        self.total
+    }
+
+    /// The chunks, in arrival order.
+    pub fn chunks(&self) -> Vec<DepthChunk> {
+        (0..self.len())
+            .map(|index| {
+                let start = index * self.chunk;
+                DepthChunk {
+                    index,
+                    start,
+                    frames: self.chunk.min(self.total - start),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Input frames a layer retains across chunks: `⌊(k_d − 1)/s⌋` (the
+/// depth halo; see [`crate::graph::stream_shape`] for the derivation).
+pub fn halo_frames(k_d: usize, s: usize) -> usize {
+    debug_assert!(k_d >= 1 && s >= 1);
+    (k_d - 1) / s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_frame_exactly_once() {
+        for total in 1..=12usize {
+            for chunk in 1..=13usize {
+                let t = DepthTiler::new(total, chunk).unwrap();
+                let chunks = t.chunks();
+                assert_eq!(chunks.len(), t.len());
+                assert!(!t.is_empty());
+                let mut next = 0;
+                for (i, c) in chunks.iter().enumerate() {
+                    assert_eq!(c.index, i);
+                    assert_eq!(c.start, next);
+                    assert!(c.frames >= 1);
+                    assert!(c.frames <= t.chunk_frames());
+                    next += c.frames;
+                }
+                assert_eq!(next, total, "total={total} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_chunk_degenerates_to_whole() {
+        let t = DepthTiler::new(4, 99).unwrap();
+        assert_eq!(t.len(), 1);
+        let c = t.chunks()[0];
+        assert_eq!((c.index, c.start, c.frames), (0, 0, 4));
+        assert_eq!(t.total_frames(), 4);
+    }
+
+    #[test]
+    fn zero_inputs_are_rejected() {
+        assert!(DepthTiler::new(0, 2).is_err());
+        assert!(DepthTiler::new(2, 0).is_err());
+    }
+
+    #[test]
+    fn halo_matches_kernel_geometry() {
+        assert_eq!(halo_frames(3, 2), 1, "the paper's K=3, S=2");
+        assert_eq!(halo_frames(1, 1), 0, "2D depth-1 fold is stateless");
+        assert_eq!(halo_frames(1, 2), 0);
+        assert_eq!(halo_frames(3, 1), 2);
+        assert_eq!(halo_frames(5, 2), 2);
+    }
+}

@@ -151,6 +151,45 @@ impl<T: Copy + Default> Volume<T> {
         &self.data[base..base + self.w]
     }
 
+    /// A new volume holding `self`'s depth frames followed by
+    /// `other`'s — the temporal-tile concatenation the streaming tier
+    /// uses to prepend retained halo frames to an arriving chunk.
+    /// Panics unless channels, height and width match. Either operand
+    /// may be depth-0 (an empty halo).
+    pub fn concat_depth(&self, other: &Volume<T>) -> Volume<T> {
+        assert_eq!(
+            (self.c, self.h, self.w),
+            (other.c, other.h, other.w),
+            "concat_depth shape mismatch"
+        );
+        let plane = self.h * self.w;
+        let d = self.d + other.d;
+        let mut out = Volume::zeros(self.c, d, self.h, self.w);
+        for c in 0..self.c {
+            let dst = c * d * plane;
+            out.data[dst..dst + self.d * plane]
+                .copy_from_slice(&self.data[c * self.d * plane..(c + 1) * self.d * plane]);
+            out.data[dst + self.d * plane..dst + d * plane]
+                .copy_from_slice(&other.data[c * other.d * plane..(c + 1) * other.d * plane]);
+        }
+        out
+    }
+
+    /// Copy depth frames `[lo, lo + len)` of every channel into a new
+    /// volume — the halo-retention slice of the streaming tier (and
+    /// the per-chunk input slice of its drivers). `len` may be 0.
+    pub fn slice_depth(&self, lo: usize, len: usize) -> Volume<T> {
+        assert!(lo + len <= self.d, "slice_depth out of range");
+        let plane = self.h * self.w;
+        let mut out = Volume::zeros(self.c, len, self.h, self.w);
+        for c in 0..self.c {
+            let src = (c * self.d + lo) * plane;
+            let dst = c * len * plane;
+            out.data[dst..dst + len * plane].copy_from_slice(&self.data[src..src + len * plane]);
+        }
+        out
+    }
+
     /// Consume a depth-1 volume into its 2D [`FeatureMap`] view
     /// (zero-copy). Panics unless `d == 1`.
     pub fn into_feature_map(self) -> FeatureMap<T> {
@@ -425,6 +464,31 @@ mod tests {
         assert_eq!(w3.at(1, 0, 0, 2, 2), w.at(1, 0, 2, 2));
         assert_eq!(w3.kernel(1, 1), w.kernel(1, 1));
         assert_eq!(w3.into_oihw(), w);
+    }
+
+    #[test]
+    fn concat_and_slice_depth_round_trip() {
+        let v = Volume::from_vec(2, 3, 2, 2, (0..24).map(|x| x as f32).collect());
+        let a = v.slice_depth(0, 1);
+        let b = v.slice_depth(1, 2);
+        assert_eq!((a.c, a.d, a.h, a.w), (2, 1, 2, 2));
+        assert_eq!((b.c, b.d, b.h, b.w), (2, 2, 2, 2));
+        assert_eq!(a.at(1, 0, 1, 1), v.at(1, 0, 1, 1));
+        assert_eq!(b.at(1, 1, 0, 1), v.at(1, 2, 0, 1));
+        let back = a.concat_depth(&b);
+        assert_eq!(back.data(), v.data());
+        // empty halos on either side are identities
+        let empty: Volume<f32> = Volume::zeros(2, 0, 2, 2);
+        assert_eq!(empty.concat_depth(&v).data(), v.data());
+        assert_eq!(v.concat_depth(&empty).data(), v.data());
+        assert_eq!(v.slice_depth(3, 0).len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn slice_depth_rejects_overrun() {
+        let v: Volume<f32> = Volume::zeros(1, 2, 2, 2);
+        let _ = v.slice_depth(1, 2);
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! Seeded adversarial battery for `PlanCache::with_capacity` LRU
+//! behaviour under interleaved lookup/insert traffic.
+//!
+//! Streaming multiplies plan-cache pressure: every distinct chunk
+//! shape of every stream is its own `<network>@<fingerprint>` key, so
+//! the bounded fleet cache continuously interleaves hits, compiles
+//! and evictions. This battery drives the real cache with a seeded
+//! op sequence over a key space ~3× its capacity and locksteps it
+//! against an in-test reference LRU, checking after *every* op:
+//!
+//! * residency — exactly the reference's resident key set
+//!   (`resident_keys` probes without perturbing recency);
+//! * counter exactness — `hits`/`misses`/`evictions` match the
+//!   reference at every step, never just at the end;
+//! * eviction-clock monotonicity — `lookups()` advances by exactly
+//!   one per `get_or_compile`, never from wall time, so eviction
+//!   order is a pure function of the lookup sequence.
+
+use udcnn::accel::AccelConfig;
+use udcnn::dcnn::zoo;
+use udcnn::serve::PlanCache;
+use udcnn::util::Prng;
+
+/// Reference LRU: recency-ordered keys (most recent last), with the
+/// same hit/miss/evict semantics `PlanCache::get_or_compile` claims.
+struct RefLru {
+    cap: usize,
+    keys: Vec<String>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl RefLru {
+    fn new(cap: usize) -> RefLru {
+        RefLru {
+            cap,
+            keys: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    fn lookup(&mut self, key: &str) {
+        if let Some(pos) = self.keys.iter().position(|k| k == key) {
+            self.keys.remove(pos);
+            self.keys.push(key.to_string());
+            self.hits += 1;
+        } else {
+            self.keys.push(key.to_string());
+            self.misses += 1;
+            while self.keys.len() > self.cap {
+                self.keys.remove(0);
+                self.evictions += 1;
+            }
+        }
+    }
+
+    fn resident_sorted(&self) -> Vec<String> {
+        let mut ks = self.keys.clone();
+        ks.sort();
+        ks
+    }
+}
+
+#[test]
+fn lru_locksteps_with_the_reference_under_seeded_interleaving() {
+    let nets = [zoo::tiny_2d(), zoo::tiny_3d()];
+    let mut cache = PlanCache::with_capacity(4);
+    let mut reference = RefLru::new(4);
+    let mut rng = Prng::new(0xAD5E_CACE);
+    assert_eq!(cache.lookups(), 0);
+    let mut clock = 0u64;
+    for op in 0..400 {
+        let net = &nets[rng.below(nets.len())];
+        let mut cfg = AccelConfig::paper_for(net.dims);
+        cfg.batch = 1 + rng.below(6); // 2 nets x 6 batches = 12 keys
+        let key = PlanCache::key(net.name, &cfg);
+        cache.get_or_compile(&cfg, net).unwrap();
+        reference.lookup(&key);
+
+        clock += 1;
+        assert_eq!(cache.lookups(), clock, "clock must tick once per lookup (op {op})");
+        assert_eq!(cache.len(), reference.keys.len(), "op {op}");
+        assert_eq!(cache.resident_keys(), reference.resident_sorted(), "op {op}");
+        let s = cache.stats();
+        assert_eq!(
+            (s.hits, s.misses, s.evictions),
+            (reference.hits, reference.misses, reference.evictions),
+            "op {op}: counters drifted"
+        );
+    }
+    // the battery must actually exercise all three behaviours
+    let s = cache.stats();
+    assert!(s.hits > 0 && s.misses > 0 && s.evictions > 0, "{s:?}");
+    assert_eq!(s.hits + s.misses, 400);
+}
+
+#[test]
+fn capacity_floor_and_alternating_thrash() {
+    // with_capacity(0) clamps to one resident plan
+    let mut cache = PlanCache::with_capacity(0);
+    assert_eq!(cache.capacity(), Some(1));
+    let nets = [zoo::tiny_2d(), zoo::tiny_3d()];
+    for round in 0..3 {
+        for net in &nets {
+            let cfg = AccelConfig::paper_for(net.dims);
+            cache.get_or_compile(&cfg, net).unwrap();
+            assert_eq!(cache.len(), 1, "round {round}");
+        }
+    }
+    // alternating over capacity 1: every lookup misses, each insert
+    // past the first evicts
+    let s = cache.stats();
+    assert_eq!(s.hits, 0);
+    assert_eq!(s.misses, 6);
+    assert_eq!(s.evictions, 5);
+    assert_eq!(cache.lookups(), 6);
+}

@@ -1,0 +1,204 @@
+//! Differential battery: streaming temporal-tiled forward
+//! (`stream::stream_forward`) against the whole-volume golden forward
+//! (`coordinator::service::forward_uniform`), **bit-exact**, on every
+//! network in `zoo::NAMES`, across chunk sizes {1, 2, 7, full}, in
+//! f32 and Q8.8, under the default and autotuned accelerator configs.
+//!
+//! What each axis pins:
+//! * **chunk sizes** — tile boundaries fall on every alignment against
+//!   the K=3/S=2 halo (1 = maximal re-tiling, 7 = odd/non-dividing,
+//!   full = whole-volume degenerate);
+//! * **f32** — the session's slab discipline preserves the exact
+//!   accumulation *order* (f32 addition is non-associative, so any
+//!   overlap-add reordering would show up as bit drift);
+//! * **Q8.8** — each output element rounds exactly once, from its
+//!   complete 48-bit contributor sum;
+//! * **configs** — the accelerator config drives the chunk-plan/cycle
+//!   path only; it must never leak into output bits (same contract the
+//!   autotuner battery pins for whole-volume serving);
+//! * **2D nets** — streaming degenerates to chunk=1 per-frame
+//!   passthrough of the same golden path.
+//!
+//! The four full-size networks are billions of MACs per forward, so
+//! they run behind `#[ignore]` and CI executes them in release mode
+//! (`cargo test --release --test diff_stream -- --include-ignored`);
+//! the tiny networks run everywhere.
+
+use std::collections::BTreeSet;
+
+use udcnn::accel::dse::tune::{tune_network, TuneOptions};
+use udcnn::accel::AccelConfig;
+use udcnn::coordinator::service::forward_uniform;
+use udcnn::dcnn::{synth_frames, synth_uniform_weights, zoo, Dims, Network};
+use udcnn::fixed::Q88;
+use udcnn::stream::{stream_forward, stream_forward_q, whole_forward_q};
+use udcnn::tensor::{Volume, WeightsOIDHW};
+
+/// Chunk sizes the battery sweeps, clamped and deduped per depth.
+fn chunk_sweep(depth: usize) -> Vec<usize> {
+    let set: BTreeSet<usize> = [1, 2, 7, depth].into_iter().map(|c| c.min(depth)).collect();
+    set.into_iter().collect()
+}
+
+fn quantize_weights(ws: &[WeightsOIDHW<f32>]) -> Vec<WeightsOIDHW<Q88>> {
+    ws.iter()
+        .map(|w| {
+            WeightsOIDHW::from_vec(
+                w.o,
+                w.i,
+                w.kd,
+                w.kh,
+                w.kw,
+                w.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+            )
+        })
+        .collect()
+}
+
+fn quantize_input(v: &Volume<f32>) -> Volume<Q88> {
+    Volume::from_vec(
+        v.c,
+        v.d,
+        v.h,
+        v.w,
+        v.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+    )
+}
+
+/// Default config + the tuner's pick for this network (the exact pair
+/// `diff_graph_forward` uses, so the two batteries pin the same
+/// configs to the same bits).
+fn configs_for(net: &Network, batch: usize) -> Vec<AccelConfig> {
+    let tuned = tune_network(
+        net,
+        &TuneOptions {
+            batch,
+            ..TuneOptions::default()
+        },
+    )
+    .unwrap()
+    .best()
+    .cfg
+    .clone();
+    vec![AccelConfig::default(), tuned]
+}
+
+/// Stream one network at every chunk size under one config, in both
+/// precisions, asserting bit-exact equality against the whole-volume
+/// references. `threads` varies per call to re-pin thread-count
+/// independence on the streaming path.
+fn assert_stream_matches(net: &Network, cfg: &AccelConfig, threads: usize) {
+    let weights = synth_uniform_weights(net, 0x5EED);
+    let depth = match net.dims {
+        Dims::D2 => 3, // three independent frames
+        Dims::D3 => net.layers[0].in_d,
+    };
+    let input = synth_frames(&net.layers[0], 99, 0, depth);
+
+    // f32 golden: whole-volume forward (2D nets: per-frame)
+    let golden: Vec<Vec<f32>> = match net.dims {
+        Dims::D3 => vec![forward_uniform(net, &weights, input.data())],
+        Dims::D2 => (0..depth)
+            .map(|f| forward_uniform(net, &weights, input.slice_depth(f, 1).data()))
+            .collect(),
+    };
+
+    // Q8.8 golden
+    let qw = quantize_weights(&weights);
+    let qi = quantize_input(&input);
+    let q_golden: Vec<Volume<Q88>> = match net.dims {
+        Dims::D3 => vec![whole_forward_q(net, &qw, &qi).unwrap()],
+        Dims::D2 => (0..depth)
+            .map(|f| whole_forward_q(net, &qw, &qi.slice_depth(f, 1)).unwrap())
+            .collect(),
+    };
+
+    for chunk in chunk_sweep(depth) {
+        let (out, sum) = stream_forward(net, &weights, &input, chunk, cfg, threads).unwrap();
+        match net.dims {
+            Dims::D3 => {
+                assert_eq!(
+                    out.data(),
+                    &golden[0][..],
+                    "{}: tiled f32 != whole (chunk={chunk})",
+                    net.name
+                );
+                let last = net.layers.last().unwrap();
+                assert_eq!(out.d, last.out_d(), "{}", net.name);
+                if chunk < depth {
+                    assert!(
+                        sum.peak_live_elems < sum.whole_peak_elems,
+                        "{}: chunked peak {} !< whole {} (chunk={chunk})",
+                        net.name,
+                        sum.peak_live_elems,
+                        sum.whole_peak_elems
+                    );
+                }
+            }
+            Dims::D2 => {
+                for (f, g) in golden.iter().enumerate() {
+                    assert_eq!(
+                        out.slice_depth(f, 1).data(),
+                        &g[..],
+                        "{}: frame {f} != golden (chunk={chunk})",
+                        net.name
+                    );
+                }
+            }
+        }
+        assert_eq!(sum.frames_in, depth);
+
+        let q_out = stream_forward_q(net, &qw, &qi, chunk, threads).unwrap();
+        match net.dims {
+            Dims::D3 => {
+                assert_eq!(
+                    q_out.data(),
+                    q_golden[0].data(),
+                    "{}: tiled Q8.8 != whole (chunk={chunk})",
+                    net.name
+                );
+            }
+            Dims::D2 => {
+                for (f, g) in q_golden.iter().enumerate() {
+                    assert_eq!(
+                        q_out.slice_depth(f, 1).data(),
+                        g.data(),
+                        "{}: Q8.8 frame {f} != golden (chunk={chunk})",
+                        net.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiny_networks_bit_exact_under_default_and_tuned_configs() {
+    for net in [zoo::tiny_2d(), zoo::tiny_3d()] {
+        for (i, cfg) in configs_for(&net, 4).iter().enumerate() {
+            assert_stream_matches(&net, cfg, 1 + 2 * i);
+        }
+    }
+}
+
+#[test]
+fn re_depthed_tiny_3d_streams_bit_exact() {
+    // Longer temporal sequences than the zoo geometry ships: the
+    // re-depthed chain (the `udcnn stream --frames N` path) must hold
+    // the same contract.
+    let net = zoo::tiny_3d().with_depth(11);
+    for (i, cfg) in configs_for(&net, 2).iter().enumerate() {
+        assert_stream_matches(&net, cfg, 2 + i);
+    }
+}
+
+#[test]
+#[ignore = "billions of MACs per network: run in release (CI does)"]
+fn full_zoo_bit_exact_under_default_and_tuned_configs() {
+    for name in zoo::NAMES {
+        let net = zoo::by_name(name).unwrap();
+        for (i, cfg) in configs_for(&net, 8).iter().enumerate() {
+            assert_stream_matches(&net, cfg, 2 + 3 * i);
+        }
+    }
+}

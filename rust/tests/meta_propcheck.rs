@@ -1,0 +1,124 @@
+//! Meta-tests for the `propcheck` framework itself.
+//!
+//! Every property suite in this repo (uniform kernels, graph passes,
+//! DSE, streaming) stands on `propcheck`; these tests pin the three
+//! behaviours those suites implicitly rely on:
+//!
+//! 1. **Seed determinism** — the generated case sequence is a pure
+//!    function of the `Config`, so a reported failure is replayable.
+//! 2. **`Gen::int` bounds and low-bias** — values never escape
+//!    `[lo, hi]`, and at tiny size budgets (0 and 1) the generator
+//!    stays pinned to the low end of the range — the mechanism that
+//!    makes early cases small.
+//! 3. **Near-minimal first failure** — the size sweep ramps small to
+//!    large, so the first failing case of a size-monotone property is
+//!    bounded by the size budget, not by the raw generator range, and
+//!    the panic message carries a replayable (seed, size, case).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use udcnn::propcheck::{check, quickcheck, Config, Gen};
+
+#[test]
+fn gen_int_respects_bounds_at_every_size() {
+    for size in [0usize, 1, 2, 16, 1000] {
+        for seed in 0..20u64 {
+            let mut g = Gen::new(seed, size);
+            for _ in 0..50 {
+                let v = g.int(5, 9);
+                assert!((5..=9).contains(&v), "size={size} seed={seed} v={v}");
+                assert_eq!(g.int(3, 3), 3, "degenerate range");
+            }
+        }
+    }
+}
+
+#[test]
+fn gen_int_is_low_biased_at_tiny_sizes() {
+    // size 0 and 1 clamp the span to one: values in {lo, lo+1}
+    for size in [0usize, 1] {
+        let mut g = Gen::new(7, size);
+        for _ in 0..200 {
+            let v = g.int(10, 100);
+            assert!(v <= 11, "size={size} leaked v={v}");
+            assert!(v >= 10);
+        }
+    }
+    // the span tracks the budget: size 4 caps a huge range at lo + 4
+    let mut g = Gen::new(8, 4);
+    for _ in 0..200 {
+        assert!(g.int(0, 1000) <= 4);
+    }
+    // ... but never widens a range narrower than the budget
+    let mut g = Gen::new(9, 1000);
+    for _ in 0..200 {
+        assert!(g.int(2, 5) <= 5);
+    }
+}
+
+#[test]
+fn check_is_deterministic_in_the_seed() {
+    let run = |seed: u64| {
+        let mut drawn = Vec::new();
+        check(Config { cases: 32, seed, ..Default::default() }, |g| {
+            drawn.push((g.size, g.int(0, 500), g.f32(-1.0, 1.0).to_bits()));
+            Ok(())
+        });
+        drawn
+    };
+    assert_eq!(run(42), run(42), "same seed, same cases");
+    assert_ne!(run(42), run(43), "different seed, different cases");
+    // quickcheck is check with the default config
+    let mut a = Vec::new();
+    quickcheck(|g| {
+        a.push(g.int(0, 99));
+        Ok(())
+    });
+    let mut b = Vec::new();
+    check(Config::default(), |g| {
+        b.push(g.int(0, 99));
+        Ok(())
+    });
+    assert_eq!(a, b);
+}
+
+#[test]
+fn size_sweep_reports_a_near_minimal_first_failure() {
+    // The property fails for any v >= 8, with v drawn from [0, 1000].
+    // The runner ramps the size budget from min_size to max_size and
+    // `Gen::int` caps its span at the budget, so the first failure
+    // must carry v <= max_size = 16 — near-minimal against the
+    // 1000-wide raw range — and the panic must name the case.
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        check(
+            Config {
+                cases: 256,
+                seed: 5,
+                min_size: 1,
+                max_size: 16,
+            },
+            |g| {
+                let v = g.int(0, 1000);
+                if v < 8 {
+                    Ok(())
+                } else {
+                    Err(format!("v={v}"))
+                }
+            },
+        );
+    }));
+    let msg = match result {
+        Ok(()) => panic!("the property should have failed"),
+        Err(p) => p.downcast::<String>().map(|b| *b).unwrap_or_default(),
+    };
+    assert!(msg.contains("property failed"), "{msg}");
+    assert!(msg.contains("seed="), "replayable: {msg}");
+    assert!(msg.contains("size="), "replayable: {msg}");
+    let v: usize = msg
+        .rsplit("v=")
+        .next()
+        .and_then(|tail| tail.trim().parse().ok())
+        .expect("failure message carries the counterexample");
+    assert!(v >= 8, "reported case must actually fail: v={v}");
+    assert!(v <= 16, "first failure v={v} is not near-minimal");
+}

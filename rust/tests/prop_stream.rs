@@ -1,0 +1,147 @@
+//! Property tests of the streaming tier (`stream::*`) on the
+//! `propcheck` framework: random 3D layer chains — depth, chunk size,
+//! stride and `k_d` all drawn per case (halo follows from `k_d`/S) —
+//! checked for:
+//!
+//! 1. **Shape** — the reassembled streaming output matches the graph
+//!    streaming shape pass (`graph::stream_shapes`) and the layer
+//!    chain's declared output geometry.
+//! 2. **Chunk-boundary independence** — the per-layer halo state is a
+//!    function of the frames seen, never of where chunk boundaries
+//!    fell: any two chunkings produce bit-identical output, equal to
+//!    the whole-volume golden forward.
+//! 3. **Bounded memory** — for chunk < depth the session's live
+//!    high-water mark stays strictly below the whole-volume working
+//!    set (generation keeps `depth ≥ chunk + 2 + 2·Σhalo`, the margin
+//!    under which strictness is guaranteed; at chunk = depth the
+//!    session *is* whole-volume execution).
+
+use udcnn::accel::AccelConfig;
+use udcnn::coordinator::service::forward_uniform;
+use udcnn::dcnn::{synth_frames, synth_uniform_weights, Dims, LayerSpec, Network};
+use udcnn::graph::{passes, stream_shapes, NetworkGraph};
+use udcnn::propcheck::{check, Config, Gen};
+use udcnn::stream::stream_forward;
+
+/// Draw a random composing 3D chain plus a chunk size with the
+/// strict-memory margin `depth >= chunk + 2 + 2·Σhalo`.
+fn gen_chain(g: &mut Gen) -> (Network, usize) {
+    let n_layers = 1 + g.int(0, 1);
+    let ks: Vec<(usize, usize)> = (0..n_layers)
+        .map(|_| {
+            let k = 1 + g.int(0, 2);
+            let s = 1 + g.int(0, (k - 1).min(1));
+            (k, s)
+        })
+        .collect();
+    let halo_sum: usize = ks.iter().map(|&(k, s)| (k - 1) / s).sum();
+    let chunk = 1 + g.int(0, 2);
+    let d0 = chunk + 2 + 2 * halo_sum + g.int(0, 3);
+    let mut c = 1 + g.int(0, 2);
+    let mut d = d0;
+    let mut h = 1 + g.int(0, 2);
+    let mut w = 1 + g.int(0, 2);
+    let mut layers = Vec::with_capacity(n_layers);
+    for (i, &(k, s)) in ks.iter().enumerate() {
+        let out_c = 1 + g.int(0, 2);
+        let l = LayerSpec::new_3d(format!("prop.l{i}"), c, d, h, w, out_c, k, s);
+        c = out_c;
+        d = l.out_d();
+        h = l.out_h();
+        w = l.out_w();
+        layers.push(l);
+    }
+    let net = Network {
+        name: "prop-stream",
+        dims: Dims::D3,
+        layers,
+    };
+    (net, chunk)
+}
+
+fn cfg() -> AccelConfig {
+    let mut c = AccelConfig::paper_3d();
+    c.batch = 1;
+    c
+}
+
+#[test]
+fn prop_tiled_output_matches_shape_pass_and_whole_volume() {
+    check(Config { cases: 48, ..Default::default() }, |g| {
+        let (net, chunk) = gen_chain(g);
+        let seed = g.int(0, 10_000) as u64;
+        let weights = synth_uniform_weights(&net, seed);
+        let depth = net.layers[0].in_d;
+        let input = synth_frames(&net.layers[0], seed ^ 0xF00D, 0, depth);
+        let golden = forward_uniform(&net, &weights, input.data());
+
+        let threads = 1 + g.int(0, 3);
+        let (out, sum) = stream_forward(&net, &weights, &input, chunk, &cfg(), threads)?;
+        if out.data() != &golden[..] {
+            return Err(format!("tiled != whole (chunk={chunk}, depth={depth})"));
+        }
+
+        // reassembled shape must match the graph streaming shape pass
+        let shapes = stream_shapes(&passes::lower(&NetworkGraph::from_network(&net))?)?;
+        let last_shape = shapes.last().expect("non-empty chain");
+        let last = net.layers.last().unwrap();
+        if out.d != last_shape.out_frames || sum.frames_out != last_shape.out_frames {
+            return Err(format!(
+                "emitted {} frames, shape pass says {}",
+                out.d, last_shape.out_frames
+            ));
+        }
+        if (out.c, out.h, out.w) != (last.out_c, last.out_h(), last.out_w()) {
+            return Err("output c/h/w diverge from the layer chain".into());
+        }
+        if shapes[0].in_frames != depth || sum.frames_in != depth {
+            return Err("consumed frames diverge from the shape pass".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_halo_state_is_independent_of_chunk_boundaries() {
+    check(Config { cases: 48, ..Default::default() }, |g| {
+        let (net, chunk_a) = gen_chain(g);
+        let seed = g.int(0, 10_000) as u64;
+        let weights = synth_uniform_weights(&net, seed);
+        let depth = net.layers[0].in_d;
+        let input = synth_frames(&net.layers[0], seed ^ 0xCAFE, 0, depth);
+        // two unrelated chunkings, including possibly whole-volume
+        let chunk_b = 1 + g.int(0, depth - 1);
+        let (a, _) = stream_forward(&net, &weights, &input, chunk_a, &cfg(), 1)?;
+        let (b, _) = stream_forward(&net, &weights, &input, chunk_b, &cfg(), 2)?;
+        if a.data() != b.data() {
+            return Err(format!(
+                "chunk {chunk_a} and chunk {chunk_b} disagree (depth={depth})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_session_memory_stays_below_whole_volume() {
+    check(Config { cases: 48, ..Default::default() }, |g| {
+        let (net, chunk) = gen_chain(g);
+        let seed = g.int(0, 10_000) as u64;
+        let weights = synth_uniform_weights(&net, seed);
+        let depth = net.layers[0].in_d;
+        let input = synth_frames(&net.layers[0], seed ^ 0xBEEF, 0, depth);
+        let (_, sum) = stream_forward(&net, &weights, &input, chunk, &cfg(), 1)?;
+        if chunk >= depth {
+            return Err("generator must keep chunk < depth".into());
+        }
+        if sum.peak_live_elems >= sum.whole_peak_elems {
+            return Err(format!(
+                "peak {} !< whole {} (chunk={chunk}, depth={depth}, layers={})",
+                sum.peak_live_elems,
+                sum.whole_peak_elems,
+                net.layers.len()
+            ));
+        }
+        Ok(())
+    });
+}
