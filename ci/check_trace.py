@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Validate `udcnn --trace` / `--metrics` artifacts in CI.
+
+The CLI hand-renders its JSON (the offline build has no serde), so CI
+re-parses every artifact with an independent parser and checks the
+trace actually covers the subsystems the smoke run exercised.
+
+Usage:
+    check_trace.py trace   FILE CAT[,CAT...]    Chrome trace: valid JSON,
+                                                >= 1 event per required cat
+    check_trace.py metrics FILE NAME[,NAME...]  metrics snapshot: valid JSON,
+                                                required counters present
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}")
+    sys.exit(1)
+
+
+def check_trace(path, cats):
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: no traceEvents array")
+    seen = {}
+    for e in events:
+        cat = e.get("cat")
+        if cat:
+            seen[cat] = seen.get(cat, 0) + 1
+    for cat in cats:
+        if not seen.get(cat):
+            fail(f"{path}: no events with cat '{cat}' (saw {sorted(seen)})")
+    print(f"check_trace: OK: {path}: {len(events)} events, cats {sorted(seen)}")
+
+
+def check_metrics(path, names):
+    with open(path) as f:
+        doc = json.load(f)
+    counters = doc.get("counters")
+    if not isinstance(counters, dict):
+        fail(f"{path}: no counters object")
+    for name in names:
+        if name not in counters:
+            fail(f"{path}: counter '{name}' missing (have {sorted(counters)})")
+    print(f"check_trace: OK: {path}: {len(counters)} counters")
+
+
+def main(argv):
+    if len(argv) != 4 or argv[1] not in ("trace", "metrics"):
+        print(__doc__)
+        return 2
+    required = [s for s in argv[3].split(",") if s]
+    if argv[1] == "trace":
+        check_trace(argv[2], required)
+    else:
+        check_metrics(argv[2], required)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,69 @@
+//! `cargo bench --bench trajectory` — measure the fixed operating
+//! points and update `BENCH_trajectory.json` at the repo root.
+//!
+//! Unlike the wall-clock benches this one records *simulated* numbers
+//! only, so it ignores `UDCNN_BENCH_FAST`: the committed record must
+//! be canonical and identical on every host. The record label comes
+//! from `UDCNN_TRAJ_LABEL` (default `HEAD`); a record with the same
+//! label is replaced in place, anything else is appended — one record
+//! per PR.
+
+use udcnn::benchkit::trajectory::{
+    measure_all, parse_file, render_file, trajectory_path, TrajectoryRecord,
+};
+use udcnn::benchkit::write_report_file;
+use udcnn::report::Table;
+
+fn main() {
+    let points = match measure_all() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("trajectory measurement failed: {e}");
+            std::process::exit(1);
+        }
+    };
+
+    let mut t = Table::new(
+        "Performance trajectory — fixed operating points (simulated)",
+        &["point", "Mcycles", "throughput"],
+    );
+    for p in &points {
+        t.row(&[
+            p.point.id(),
+            format!("{:.2}", p.total_cycles as f64 / 1e6),
+            format!("{:.1}", p.throughput),
+        ]);
+    }
+    t.print();
+
+    let path = trajectory_path();
+    let mut records = match std::fs::read_to_string(&path) {
+        Ok(text) => match parse_file(&text) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("refusing to overwrite unparseable {path}: {e}");
+                std::process::exit(1);
+            }
+        },
+        Err(_) => Vec::new(),
+    };
+
+    let label = std::env::var("UDCNN_TRAJ_LABEL").unwrap_or_else(|_| "HEAD".to_string());
+    let record = TrajectoryRecord {
+        label: label.clone(),
+        points: points
+            .iter()
+            .map(|p| (p.point.id(), p.total_cycles, p.throughput))
+            .collect(),
+    };
+    match records.iter_mut().find(|r| r.label == label) {
+        Some(existing) => *existing = record,
+        None => records.push(record),
+    }
+
+    if let Err(e) = write_report_file(&path, &render_file(&records)) {
+        eprintln!("failed to write {path}: {e}");
+        std::process::exit(1);
+    }
+    println!("updated {path} (record '{label}', {} points)", points.len());
+}

@@ -5,6 +5,8 @@
 //! this instead: warmup, repeated timed runs, median/σ reporting, and
 //! paper-style table printing via [`crate::report`].
 
+pub mod trajectory;
+
 use std::time::Instant;
 
 use crate::util::stats;

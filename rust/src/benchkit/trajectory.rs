@@ -1,0 +1,398 @@
+//! The committed performance trajectory and its regression gate.
+//!
+//! `BENCH_trajectory.json` at the repo root records, per PR, the
+//! *simulated* performance of a fixed set of operating points: every
+//! zoo benchmark under the paper and autotuned configurations, run
+//! whole-volume and streamed. The numbers are simulated cycles (and
+//! the throughput they imply), so they are deterministic — identical
+//! on every host — which is what lets the repo commit them and gate
+//! on them: `tests/perf_gate.rs` recomputes the points and fails if
+//! any throughput regressed more than [`GATE_TOLERANCE`] against the
+//! latest committed record. `benches/trajectory.rs` appends (or
+//! replaces) the current record.
+//!
+//! Whole-volume throughput is batch requests per simulated second;
+//! streaming throughput is input frames per simulated second. The two
+//! are never compared against each other — the gate compares each
+//! point id only with the *same* id in the baseline record.
+
+use crate::accel::AccelConfig;
+use crate::dcnn::{synth_frames, synth_uniform_weights, zoo, Dims};
+use crate::graph::{compile_network, simulate_plan};
+use crate::report::json::{array, JsonObj};
+use crate::report::parse::{parse, JsonValue};
+use crate::serve::ConfigPolicy;
+use crate::stream::stream_forward;
+
+/// Allowed fractional throughput regression per point (5 %).
+pub const GATE_TOLERANCE: f64 = 0.05;
+
+/// File name of the committed trajectory, at the repo root.
+pub const TRAJECTORY_FILE: &str = "BENCH_trajectory.json";
+
+/// Batch size every whole-volume point runs (and the batch the tuned
+/// policy tunes at).
+pub const WHOLE_BATCH: usize = 8;
+
+/// Depth a 3D network is re-anchored to for its streaming point.
+const STREAM_FRAMES_3D: usize = 8;
+/// Chunk size of the 3D streaming point.
+const STREAM_CHUNK_3D: usize = 2;
+/// Frames a 2D network streams (frame-by-frame passthrough).
+const STREAM_FRAMES_2D: usize = 2;
+
+/// Which configuration policy an operating point runs under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PointPolicy {
+    /// The paper's Table-II configuration for the dimensionality.
+    Paper,
+    /// The per-network autotuner winner ([`ConfigPolicy::Tuned`]).
+    Tuned,
+}
+
+/// Execution mode of an operating point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PointMode {
+    /// One whole-volume compiled plan at [`WHOLE_BATCH`].
+    Whole,
+    /// Temporal-tiled streaming at batch 1.
+    Stream,
+}
+
+/// One fixed operating point of the trajectory.
+#[derive(Clone, Debug)]
+pub struct OperatingPoint {
+    /// Zoo network name.
+    pub network: &'static str,
+    /// Configuration policy.
+    pub policy: PointPolicy,
+    /// Execution mode.
+    pub mode: PointMode,
+}
+
+impl OperatingPoint {
+    /// Stable identifier, e.g. `"dcgan/tuned/stream"` — the key the
+    /// gate joins baseline and current records on.
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}/{}",
+            self.network,
+            match self.policy {
+                PointPolicy::Paper => "paper",
+                PointPolicy::Tuned => "tuned",
+            },
+            match self.mode {
+                PointMode::Whole => "whole",
+                PointMode::Stream => "stream",
+            }
+        )
+    }
+}
+
+/// The fixed point set: every zoo benchmark × {paper, tuned} ×
+/// {whole, stream}. The set only ever grows — removing or renaming a
+/// point would silently drop it from the gate.
+pub fn fixed_point_set() -> Vec<OperatingPoint> {
+    let mut pts = Vec::new();
+    for net in zoo::all_benchmarks() {
+        for policy in [PointPolicy::Paper, PointPolicy::Tuned] {
+            for mode in [PointMode::Whole, PointMode::Stream] {
+                pts.push(OperatingPoint {
+                    network: net.name,
+                    policy,
+                    mode,
+                });
+            }
+        }
+    }
+    pts
+}
+
+/// Measured result of one operating point.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    /// The point measured.
+    pub point: OperatingPoint,
+    /// Simulated end-to-end cycles of the run.
+    pub total_cycles: u64,
+    /// Simulated throughput: batch requests/s (whole) or input
+    /// frames/s (stream).
+    pub throughput: f64,
+}
+
+/// Measure one operating point. Deterministic: the numbers come from
+/// the cycle simulators, never from host wall time.
+pub fn measure(pt: &OperatingPoint) -> Result<PointResult, String> {
+    let base = zoo::by_name(pt.network)?;
+    let mut cfg = match pt.policy {
+        PointPolicy::Paper => AccelConfig::paper_for(base.dims),
+        PointPolicy::Tuned => ConfigPolicy::Tuned.resolve(&base, WHOLE_BATCH)?,
+    };
+    match pt.mode {
+        PointMode::Whole => {
+            cfg.batch = WHOLE_BATCH;
+            cfg.validate()?;
+            let plan = compile_network(&cfg, &base)?;
+            let m = simulate_plan(&plan);
+            Ok(PointResult {
+                point: pt.clone(),
+                total_cycles: m.total_cycles,
+                throughput: WHOLE_BATCH as f64 / m.time_s(),
+            })
+        }
+        PointMode::Stream => {
+            let (net, frames, chunk) = match base.dims {
+                Dims::D3 => (
+                    base.with_depth(STREAM_FRAMES_3D),
+                    STREAM_FRAMES_3D,
+                    STREAM_CHUNK_3D,
+                ),
+                Dims::D2 => (base, STREAM_FRAMES_2D, 1),
+            };
+            cfg.batch = 1;
+            cfg.validate()?;
+            let weights = synth_uniform_weights(&net, 0x5EED);
+            let input = synth_frames(&net.layers[0], 0x57A3, 0, frames);
+            let (_, sum) = stream_forward(&net, &weights, &input, chunk, &cfg, 2)?;
+            Ok(PointResult {
+                point: pt.clone(),
+                total_cycles: sum.total_cycles,
+                throughput: sum.frames_per_s(),
+            })
+        }
+    }
+}
+
+/// Measure the whole fixed point set, in set order.
+pub fn measure_all() -> Result<Vec<PointResult>, String> {
+    fixed_point_set().iter().map(measure).collect()
+}
+
+/// One PR's record in the trajectory file.
+#[derive(Clone, Debug)]
+pub struct TrajectoryRecord {
+    /// Record label (one per PR; the bench replaces a same-label
+    /// record instead of appending a duplicate).
+    pub label: String,
+    /// Measured points; empty marks a bootstrap placeholder the gate
+    /// treats as "no baseline yet".
+    pub points: Vec<(String, u64, f64)>,
+}
+
+impl TrajectoryRecord {
+    /// Throughput of a point id, if the record has it.
+    pub fn throughput_of(&self, id: &str) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|(pid, _, _)| pid == id)
+            .map(|&(_, _, t)| t)
+    }
+}
+
+/// Absolute path of the committed trajectory file (repo root).
+pub fn trajectory_path() -> String {
+    format!("{}/{}", env!("CARGO_MANIFEST_DIR"), TRAJECTORY_FILE)
+}
+
+/// Render the full trajectory file from its records.
+pub fn render_file(records: &[TrajectoryRecord]) -> String {
+    let recs: Vec<String> = records
+        .iter()
+        .map(|r| {
+            let pts: Vec<String> = r
+                .points
+                .iter()
+                .map(|(id, cycles, thr)| {
+                    JsonObj::new()
+                        .str("id", id)
+                        .int("total_cycles", *cycles)
+                        .num("throughput", *thr)
+                        .render()
+                })
+                .collect();
+            JsonObj::new()
+                .str("label", &r.label)
+                .raw("points", &array(&pts))
+                .render()
+        })
+        .collect();
+    let doc = JsonObj::new()
+        .str("schema", "udcnn-trajectory-v1")
+        .str(
+            "unit",
+            "simulated cycles; throughput is batch req/s (whole) or frames/s (stream)",
+        )
+        .raw("records", &array(&recs))
+        .render();
+    format!("{doc}\n")
+}
+
+/// Parse the trajectory file back into records.
+pub fn parse_file(text: &str) -> Result<Vec<TrajectoryRecord>, String> {
+    let doc = parse(text)?;
+    match doc.get("schema").and_then(JsonValue::as_str) {
+        Some("udcnn-trajectory-v1") => {}
+        other => return Err(format!("unexpected trajectory schema: {other:?}")),
+    }
+    let recs = doc
+        .get("records")
+        .and_then(JsonValue::as_arr)
+        .ok_or("trajectory file has no records array")?;
+    let mut out = Vec::with_capacity(recs.len());
+    for r in recs {
+        let label = r
+            .get("label")
+            .and_then(JsonValue::as_str)
+            .ok_or("record without label")?
+            .to_string();
+        let pts = r
+            .get("points")
+            .and_then(JsonValue::as_arr)
+            .ok_or("record without points array")?;
+        let mut points = Vec::with_capacity(pts.len());
+        for p in pts {
+            let id = p
+                .get("id")
+                .and_then(JsonValue::as_str)
+                .ok_or("point without id")?
+                .to_string();
+            let cycles = p
+                .get("total_cycles")
+                .and_then(JsonValue::as_u64)
+                .ok_or("point without total_cycles")?;
+            let thr = p
+                .get("throughput")
+                .and_then(JsonValue::as_f64)
+                .ok_or("point without throughput")?;
+            points.push((id, cycles, thr));
+        }
+        out.push(TrajectoryRecord { label, points });
+    }
+    Ok(out)
+}
+
+/// The latest record that actually carries measurements — the gate's
+/// baseline. Bootstrap placeholders (empty `points`) are skipped, so
+/// a freshly-added trajectory arms itself the first time the bench
+/// runs on a toolchain-equipped host.
+pub fn latest_armed(records: &[TrajectoryRecord]) -> Option<&TrajectoryRecord> {
+    records.iter().rev().find(|r| !r.points.is_empty())
+}
+
+/// Gate check: every current point whose id the baseline also carries
+/// must be within [`GATE_TOLERANCE`] of the baseline throughput.
+/// Returns the violations (empty = pass).
+pub fn gate_violations(baseline: &TrajectoryRecord, current: &[PointResult]) -> Vec<String> {
+    let mut violations = Vec::new();
+    for cur in current {
+        let id = cur.point.id();
+        if let Some(base) = baseline.throughput_of(&id) {
+            let floor = base * (1.0 - GATE_TOLERANCE);
+            if cur.throughput < floor {
+                violations.push(format!(
+                    "{id}: throughput {:.3} fell below {:.3} (baseline {:.3} − {:.0} %)",
+                    cur.throughput,
+                    floor,
+                    base,
+                    GATE_TOLERANCE * 100.0
+                ));
+            }
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_ids_are_unique_and_cover_the_grid() {
+        let pts = fixed_point_set();
+        assert_eq!(pts.len(), zoo::all_benchmarks().len() * 4);
+        let mut ids: Vec<String> = pts.iter().map(OperatingPoint::id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), pts.len(), "duplicate point ids");
+        assert!(ids.contains(&"dcgan/paper/whole".to_string()));
+        assert!(ids.contains(&"3d-gan/tuned/stream".to_string()));
+    }
+
+    #[test]
+    fn file_round_trips() {
+        let records = vec![
+            TrajectoryRecord {
+                label: "bootstrap".into(),
+                points: Vec::new(),
+            },
+            TrajectoryRecord {
+                label: "pr7".into(),
+                points: vec![("dcgan/paper/whole".into(), 123, 456.5)],
+            },
+        ];
+        let text = render_file(&records);
+        let back = parse_file(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].label, "bootstrap");
+        assert!(back[0].points.is_empty());
+        assert_eq!(back[1].points, records[1].points);
+    }
+
+    #[test]
+    fn latest_armed_skips_bootstrap_placeholders() {
+        let records = vec![
+            TrajectoryRecord {
+                label: "real".into(),
+                points: vec![("a".into(), 1, 1.0)],
+            },
+            TrajectoryRecord {
+                label: "bootstrap".into(),
+                points: Vec::new(),
+            },
+        ];
+        assert_eq!(latest_armed(&records).unwrap().label, "real");
+        assert!(latest_armed(&records[1..]).is_none());
+    }
+
+    #[test]
+    fn gate_flags_only_regressions_past_tolerance() {
+        let baseline = TrajectoryRecord {
+            label: "base".into(),
+            points: vec![("p/paper/whole".into(), 100, 100.0)],
+        };
+        let pt = OperatingPoint {
+            network: "p",
+            policy: PointPolicy::Paper,
+            mode: PointMode::Whole,
+        };
+        let ok = PointResult {
+            point: pt.clone(),
+            total_cycles: 104,
+            throughput: 96.0,
+        };
+        assert!(gate_violations(&baseline, &[ok]).is_empty());
+        let bad = PointResult {
+            point: pt,
+            total_cycles: 120,
+            throughput: 94.0,
+        };
+        let v = gate_violations(&baseline, &[bad]);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("p/paper/whole"));
+    }
+
+    #[test]
+    fn measure_whole_point_is_deterministic() {
+        let pt = OperatingPoint {
+            network: "dcgan",
+            policy: PointPolicy::Paper,
+            mode: PointMode::Whole,
+        };
+        let a = measure(&pt).unwrap();
+        let b = measure(&pt).unwrap();
+        assert!(a.total_cycles > 0);
+        assert!(a.throughput > 0.0);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.throughput, b.throughput);
+    }
+}

@@ -30,4 +30,7 @@ pub mod service;
 
 pub use batcher::{Batcher, BatchPolicy};
 pub use router::{QueueDepth, Router, ShardRouter};
-pub use service::{serve_fleet, InferenceService, Request, Response, ServiceStats};
+pub use service::{
+    forward_uniform, forward_uniform_obs, serve_fleet, serve_fleet_obs, InferenceService, Request,
+    Response, ServiceStats,
+};

@@ -250,7 +250,21 @@ pub fn serve_fleet(
     opts: FleetOptions,
     workload: &[Arrival],
 ) -> Result<FleetReport, String> {
-    Fleet::new(networks, opts)?.run(workload)
+    serve_fleet_obs(networks, opts, workload, crate::obs::Obs::off())
+}
+
+/// [`serve_fleet`] with an observability handle threaded into the
+/// fleet: bring-up compiles, batches, per-layer cycles, requests,
+/// sheds and queue depth all land on the recorder, and the returned
+/// report carries the metrics snapshot (the `udcnn serve --trace`
+/// path).
+pub fn serve_fleet_obs(
+    networks: Vec<Network>,
+    opts: FleetOptions,
+    workload: &[Arrival],
+    obs: crate::obs::Obs,
+) -> Result<FleetReport, String> {
+    Fleet::new_obs(networks, opts, obs)?.run(workload)
 }
 
 /// Run one batch through the network: golden numerics + simulated
@@ -315,18 +329,52 @@ const FORWARD_MACS_PER_THREAD: u64 = 2_000_000;
 /// workers do not oversubscribe the host. Threading is deterministic:
 /// results are bit-identical for any thread count.
 pub fn forward_uniform(net: &Network, weights: &[WeightsOIDHW<f32>], input: &[f32]) -> Vec<f32> {
+    forward_uniform_obs(net, weights, input, &crate::obs::Obs::off())
+}
+
+/// [`forward_uniform`] with observability: each layer's kernel
+/// invocation runs under a scoped span (track `kernel`) carrying its
+/// useful MACs and the structural-zero ratio of the equivalent
+/// zero-inserted map ([`crate::dcnn::LayerSpec::inserted_sparsity`],
+/// the analytic form the `dcnn::sparsity` battery pins down). The
+/// thread count is host-dependent, so it is only recorded under the
+/// wall clock — deterministic traces stay thread-count invariant. A
+/// disabled handle costs one discriminant load per layer and
+/// allocates nothing (pinned by the zero-overhead battery).
+pub fn forward_uniform_obs(
+    net: &Network,
+    weights: &[WeightsOIDHW<f32>],
+    input: &[f32],
+    obs: &crate::obs::Obs,
+) -> Vec<f32> {
+    use crate::obs::Clock;
+    use crate::report::json::JsonObj;
     let l0 = &net.layers[0];
     assert_eq!(input.len(), l0.input_elems(), "bad input size");
     assert_eq!(weights.len(), net.layers.len(), "one weight set per layer");
     let max_threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4);
+    let ktrack = obs.track("kernel");
     let mut cur = Volume::from_vec(l0.in_c, l0.in_d, l0.in_h, l0.in_w, input.to_vec());
     for (layer, w) in net.layers.iter().zip(weights) {
         let work = layer.op_counts().useful_macs;
         let threads = ((work / FORWARD_MACS_PER_THREAD) as usize).clamp(1, max_threads);
+        let mut span = obs.scope(ktrack, "kernel", &layer.name);
+        if obs.is_enabled() {
+            let mut args = JsonObj::new()
+                .int("useful_macs", work)
+                .num("structural_zero_ratio", layer.inserted_sparsity());
+            if obs.clock() == Some(Clock::Wall) {
+                args = args.int("threads", threads as u64);
+            }
+            span.set_args(args);
+            obs.count("kernel.invocations", 1);
+            obs.count("kernel.useful_macs", work);
+        }
         let full = uniform::deconv_iom_threaded(&cur, w, layer.s, threads);
         cur = uniform::crop(&full, layer.out_d(), layer.out_h(), layer.out_w());
+        drop(span);
     }
     cur.into_vec()
 }

@@ -70,8 +70,38 @@ pub type PlanHandle = std::sync::Arc<NetworkPlan>;
 /// One-call front end: build the IOM graph of `net`, run the default
 /// pass pipeline, and compile it onto `cfg`.
 pub fn compile_network(cfg: &AccelConfig, net: &Network) -> Result<NetworkPlan, String> {
-    let g = passes::lower(&NetworkGraph::from_network(net))?;
-    compile(cfg, &g)
+    compile_network_obs(cfg, net, &crate::obs::Obs::off())
+}
+
+/// [`compile_network`] with observability: the whole compile runs
+/// under a scoped span (track `compile`) whose arguments carry the
+/// plan's buffer-reuse stats (reused edges, DRAM bytes saved), each
+/// pass gets its own span via [`passes::lower_obs`], and the
+/// `compile.plans` counter ticks once per compiled plan.
+pub fn compile_network_obs(
+    cfg: &AccelConfig,
+    net: &Network,
+    obs: &crate::obs::Obs,
+) -> Result<NetworkPlan, String> {
+    use crate::report::json::JsonObj;
+    let track = obs.track("compile");
+    let mut whole = obs.scope(track, "compile", &format!("compile {}", net.name));
+    let g = passes::lower_obs(&NetworkGraph::from_network(net), obs)?;
+    let plan = {
+        let _s = obs.scope(track, "pass", "schedule_and_reuse");
+        compile(cfg, &g)?
+    };
+    whole.set_args(
+        JsonObj::new()
+            .str("network", &plan.network)
+            .int("steps", plan.steps.len() as u64)
+            .int("batch", cfg.batch as u64)
+            .int("reused_edges", plan.reused_edges() as u64)
+            .int("dram_bytes", plan.total_dram_bytes())
+            .int("dram_bytes_saved", plan.bytes_saved()),
+    );
+    obs.count("compile.plans", 1);
+    Ok(plan)
 }
 
 #[cfg(test)]

@@ -203,10 +203,38 @@ pub fn fuse_activations(g: &NetworkGraph) -> NetworkGraph {
 /// activations, re-infer. Returns the lowered graph ready for
 /// [`super::plan::compile`].
 pub fn lower(g: &NetworkGraph) -> Result<NetworkGraph, String> {
+    lower_obs(g, &crate::obs::Obs::off())
+}
+
+/// [`lower`] with per-pass observability: each pass runs under a
+/// scoped span (track `compile`, category `pass`) carrying the node
+/// count it produced, so a trace shows where compile time goes.
+pub fn lower_obs(g: &NetworkGraph, obs: &crate::obs::Obs) -> Result<NetworkGraph, String> {
+    use crate::report::json::JsonObj;
+    let track = obs.track("compile");
     let mut g = g.clone();
-    infer_shapes(&mut g)?;
-    let mut g = fuse_activations(&lower_oom_to_iom(&g));
-    infer_shapes(&mut g)?;
+    {
+        let mut s = obs.scope(track, "pass", "infer_shapes");
+        infer_shapes(&mut g)?;
+        s.set_args(JsonObj::new().int("nodes", g.nodes.len() as u64));
+    }
+    let lowered = {
+        let mut s = obs.scope(track, "pass", "lower_oom_to_iom");
+        let lowered = lower_oom_to_iom(&g);
+        s.set_args(JsonObj::new().int("nodes", lowered.nodes.len() as u64));
+        lowered
+    };
+    let mut g = {
+        let mut s = obs.scope(track, "pass", "fuse_activations");
+        let fused = fuse_activations(&lowered);
+        s.set_args(JsonObj::new().int("nodes", fused.nodes.len() as u64));
+        fused
+    };
+    {
+        let mut s = obs.scope(track, "pass", "reinfer_shapes");
+        infer_shapes(&mut g)?;
+        s.set_args(JsonObj::new().int("nodes", g.nodes.len() as u64));
+    }
     Ok(g)
 }
 

@@ -45,6 +45,10 @@
 //!   sessions with per-layer halo state, bit-exact against the
 //!   whole-volume forward for every chunking, in bounded memory;
 //!   streaming jobs ride the fleet via chunk-shaped compiled plans.
+//! * [`obs`] — the deterministic tracing + metrics spine: one
+//!   [`obs::Recorder`] threaded through compile/serve/stream, emitting
+//!   Perfetto-loadable Chrome trace-event JSON and flat metrics
+//!   snapshots; same seed + config ⇒ byte-identical traces.
 //! * [`report`] — paper-style table/figure text rendering.
 //! * [`benchkit`] — a minimal statistics-aware benchmark harness (the
 //!   build environment is fully offline and has no criterion crate; see
@@ -83,6 +87,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod serve;
 pub mod stream;
+pub mod obs;
 pub mod report;
 pub mod benchkit;
 pub mod propcheck;

@@ -22,9 +22,10 @@ use anyhow::{bail, Result};
 use udcnn::accel::{simulate_layer, simulate_network, AccelConfig};
 use udcnn::baseline::{CpuBaseline, GpuModel};
 use udcnn::cli::{first_positional, network_by_name, opt_parse, parse_opts, positionals};
-use udcnn::coordinator::{serve_fleet, BatchPolicy};
+use udcnn::coordinator::{serve_fleet, serve_fleet_obs, BatchPolicy};
 use udcnn::dcnn::{sparsity, zoo, Network};
 use udcnn::energy;
+use udcnn::obs::Obs;
 use udcnn::report::json::{array, JsonObj};
 use udcnn::report::{bar_chart, ratio, Table};
 use udcnn::resource;
@@ -77,6 +78,7 @@ fn print_usage() {
          \n\
          simulate   --net NAME | --all   [--batch N]   per-layer util + TOPS (Fig. 6)\n\
          compile    NAME [--batch N] [--json] [--oom]  whole-network plan (graph compiler)\n\
+           compile options: --trace FILE  --metrics FILE (per-pass spans)\n\
          plan       --net NAME [--layer NAME]          explain the execution schedule\n\
          sparsity                                      inserted-map sparsity (Fig. 1)\n\
          resources                                     VC709 utilization (Table III)\n\
@@ -89,12 +91,44 @@ fn print_usage() {
          serve      <net>... [--instances N] [--rps R] fleet serving harness\n\
            serve options: --requests N (default 2048)  --seed S\n\
                           --budget-ms B (default 250)  --max-batch M  --max-wait-ms W\n\
+                          --queue-cap Q (shed arrivals past Q queued; default unbounded)\n\
                           --shard (shard models across instances)\n\
                           --tuned (serve autotuned per-model plans)  --json\n\
+                          --trace FILE (Chrome trace JSON)  --metrics FILE\n\
          stream     <net> [--frames N] [--chunk D]     streaming temporal-tiled inference\n\
            stream options: --threads T  --seed S  --verify (check bits vs whole volume)\n\
-                           --json"
+                           --trace FILE  --metrics FILE  --json"
     );
+}
+
+/// Build the observability handle the `--trace FILE` / `--metrics
+/// FILE` flags ask for. CLI recording always uses the deterministic
+/// clock, so a traced run is byte-identical across repeats and host
+/// thread counts (`tests/obs_trace.rs` pins this).
+fn obs_from_opts(opts: &BTreeMap<String, String>) -> Obs {
+    if opts.contains_key("trace") || opts.contains_key("metrics") {
+        Obs::deterministic()
+    } else {
+        Obs::off()
+    }
+}
+
+/// Write the recorder's artifacts: Chrome trace-event JSON for
+/// `--trace` (loadable at ui.perfetto.dev) and the flat metrics
+/// snapshot for `--metrics`. No-op when recording is off.
+fn write_obs_artifacts(obs: &Obs, opts: &BTreeMap<String, String>) -> Result<()> {
+    let Some(rec) = obs.recorder() else {
+        return Ok(());
+    };
+    if let Some(path) = opts.get("trace") {
+        std::fs::write(path, rec.trace_json())?;
+        eprintln!("wrote trace: {path} ({} events)", rec.event_count());
+    }
+    if let Some(path) = opts.get("metrics") {
+        std::fs::write(path, rec.metrics_json())?;
+        eprintln!("wrote metrics: {path}");
+    }
+    Ok(())
 }
 
 fn cmd_simulate(opts: &BTreeMap<String, String>) -> Result<()> {
@@ -134,7 +168,7 @@ fn cmd_simulate(opts: &BTreeMap<String, String>) -> Result<()> {
 fn cmd_compile(rest: &[String]) -> Result<()> {
     use udcnn::graph::{self, NetworkGraph};
     let opts = parse_opts(rest);
-    let name = first_positional(rest, &["batch", "net"])
+    let name = first_positional(rest, &["batch", "net", "trace", "metrics"])
         .cloned()
         .or_else(|| opts.get("net").cloned())
         .ok_or_else(|| {
@@ -151,8 +185,16 @@ fn cmd_compile(rest: &[String]) -> Result<()> {
     } else {
         NetworkGraph::from_network(&net)
     };
-    let lowered = graph::passes::lower(&g).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let plan = graph::compile(&cfg, &lowered).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let obs = obs_from_opts(&opts);
+    let track = obs.track("compile");
+    let whole = obs.scope(track, "compile", &format!("compile {}", net.name));
+    let lowered = graph::passes::lower_obs(&g, &obs).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let plan = {
+        let _s = obs.scope(track, "pass", "schedule_and_reuse");
+        graph::compile(&cfg, &lowered).map_err(|e| anyhow::anyhow!("{e}"))?
+    };
+    drop(whole);
+    write_obs_artifacts(&obs, &opts)?;
 
     if opts.contains_key("json") {
         println!("{}", plan.to_json());
@@ -447,6 +489,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         "budget-ms",
         "max-batch",
         "max-wait-ms",
+        "queue-cap",
+        "trace",
+        "metrics",
     ];
     let names = positionals(rest, value_keys);
     let nets: Vec<Network> = if names.is_empty() {
@@ -492,6 +537,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         latency_budget_s: budget_ms / 1e3,
         shard_models: opts.contains_key("shard"),
         config_policy: config_policy.clone(),
+        queue_cap: opt_parse(&opts, "queue-cap", usize::MAX)?,
     };
 
     // offered load: explicit --rps, else saturate the fleet (2.5x the
@@ -530,7 +576,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     };
 
     let workload = poisson_arrivals(seed, rps, requests, &model_names);
-    let fleet = serve_fleet(nets.clone(), fleet_opts.clone(), &workload)
+    // Only the main fleet is observed: the probe and scaling-baseline
+    // runs would interleave their events with the run being traced.
+    let obs = obs_from_opts(&opts);
+    let fleet = serve_fleet_obs(nets.clone(), fleet_opts.clone(), &workload, obs.clone())
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     let single = if instances == 1 {
         fleet.clone()
@@ -553,6 +602,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     } else {
         0.0
     };
+    write_obs_artifacts(&obs, &opts)?;
 
     if opts.contains_key("json") {
         let doc = JsonObj::new()
@@ -598,7 +648,7 @@ fn cmd_stream(rest: &[String]) -> Result<()> {
     use udcnn::dcnn::{synth_frames, synth_uniform_weights, Dims};
     use udcnn::stream::{DepthTiler, StreamSession};
     let opts = parse_opts(rest);
-    let value_keys = &["frames", "chunk", "threads", "seed"];
+    let value_keys = &["frames", "chunk", "threads", "seed", "trace", "metrics"];
     let name = first_positional(rest, value_keys).cloned().ok_or_else(|| {
         anyhow::anyhow!("usage: udcnn stream <network> [--frames N] [--chunk D] [--json]")
     })?;
@@ -623,6 +673,8 @@ fn cmd_stream(rest: &[String]) -> Result<()> {
     let weights = synth_uniform_weights(&net, 0x5EED);
     let mut sess = StreamSession::new(&net, weights.clone(), cfg, threads)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let obs = obs_from_opts(&opts);
+    sess.set_obs(obs.clone());
 
     // Frames are synthesized per chunk (seeded per frame index), so
     // nothing whole-volume is ever allocated unless --verify asks for
@@ -637,6 +689,7 @@ fn cmd_stream(rest: &[String]) -> Result<()> {
         }
     }
     let sum = sess.summary();
+    write_obs_artifacts(&obs, &opts)?;
 
     let bit_exact = if verify {
         let streamed = udcnn::stream::concat_frames(&outs);

@@ -1,0 +1,192 @@
+//! Flat metrics store: counters, gauges and histogram summaries with
+//! a deterministic JSON snapshot.
+//!
+//! Every metric is keyed by name in a sorted map, so the snapshot
+//! emitted by [`MetricsStore::to_json`] is a pure function of the
+//! sequence of updates — two identical runs produce byte-identical
+//! snapshots, which is what lets the trace-determinism battery compare
+//! metrics files with `assert_eq!` on the raw strings.
+
+use std::collections::BTreeMap;
+
+use crate::report::json::JsonObj;
+
+/// Aggregate of every value observed under one histogram name.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistSummary {
+    /// Samples observed.
+    pub count: u64,
+    /// Sum of all samples.
+    pub sum: f64,
+    /// Smallest sample (0.0 while empty).
+    pub min: f64,
+    /// Largest sample (0.0 while empty).
+    pub max: f64,
+}
+
+impl HistSummary {
+    /// Mean sample (0.0 while empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+}
+
+/// Last-set and high-water values of one gauge.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GaugeState {
+    /// Most recently set value.
+    pub last: f64,
+    /// Largest value ever set.
+    pub max: f64,
+}
+
+/// The counter/gauge/histogram store behind a
+/// [`crate::obs::Recorder`].
+#[derive(Clone, Debug, Default)]
+pub struct MetricsStore {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, GaugeState>,
+    hists: BTreeMap<String, HistSummary>,
+}
+
+impl MetricsStore {
+    /// An empty store.
+    pub fn new() -> MetricsStore {
+        MetricsStore::default()
+    }
+
+    /// Add `delta` to the counter `name` (creating it at zero).
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set the gauge `name` to `v`, tracking its high-water mark.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        let g = self
+            .gauges
+            .entry(name.to_string())
+            .or_insert(GaugeState { last: v, max: v });
+        g.last = v;
+        g.max = g.max.max(v);
+    }
+
+    /// Record one sample of the histogram `name`.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Current value of the counter `name` (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// State of the gauge `name`, if it was ever set.
+    pub fn gauge(&self, name: &str) -> Option<GaugeState> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Summary of the histogram `name`, if it has samples.
+    pub fn histogram(&self, name: &str) -> Option<HistSummary> {
+        self.hists.get(name).copied()
+    }
+
+    /// Deterministic flat snapshot: `counters` (name → total),
+    /// `gauges` (name → {last, max}) and `histograms` (name →
+    /// {count, sum, min, max, mean}), all name-sorted.
+    pub fn to_json(&self) -> String {
+        let mut counters = JsonObj::new();
+        for (k, v) in &self.counters {
+            counters = counters.int(k, *v);
+        }
+        let mut gauges = JsonObj::new();
+        for (k, g) in &self.gauges {
+            gauges = gauges.raw(k, &JsonObj::new().num("last", g.last).num("max", g.max).render());
+        }
+        let mut hists = JsonObj::new();
+        for (k, h) in &self.hists {
+            hists = hists.raw(
+                k,
+                &JsonObj::new()
+                    .int("count", h.count)
+                    .num("sum", h.sum)
+                    .num("min", h.min)
+                    .num("max", h.max)
+                    .num("mean", h.mean())
+                    .render(),
+            );
+        }
+        JsonObj::new()
+            .raw("counters", &counters.render())
+            .raw("gauges", &gauges.render())
+            .raw("histograms", &hists.render())
+            .render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = MetricsStore::new();
+        m.add("a", 2);
+        m.add("a", 3);
+        assert_eq!(m.counter("a"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_track_last_and_max() {
+        let mut m = MetricsStore::new();
+        m.set_gauge("g", -4.0);
+        assert_eq!(m.gauge("g"), Some(GaugeState { last: -4.0, max: -4.0 }));
+        m.set_gauge("g", 9.0);
+        m.set_gauge("g", 1.0);
+        assert_eq!(m.gauge("g"), Some(GaugeState { last: 1.0, max: 9.0 }));
+    }
+
+    #[test]
+    fn histograms_summarize() {
+        let mut m = MetricsStore::new();
+        for v in [4.0, 1.0, 7.0] {
+            m.observe("h", v);
+        }
+        let h = m.histogram("h").unwrap();
+        assert_eq!(h.count, 3);
+        assert_eq!(h.min, 1.0);
+        assert_eq!(h.max, 7.0);
+        assert_eq!(h.mean(), 4.0);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_stable() {
+        let mut a = MetricsStore::new();
+        a.add("z", 1);
+        a.add("a", 1);
+        a.set_gauge("g", 2.0);
+        let mut b = MetricsStore::new();
+        b.add("a", 1);
+        b.set_gauge("g", 2.0);
+        b.add("z", 1);
+        assert_eq!(a.to_json(), b.to_json(), "snapshot is order-insensitive");
+        let za = a.to_json();
+        assert!(za.find("\"a\"").unwrap() < za.find("\"z\"").unwrap());
+    }
+}

@@ -1,0 +1,258 @@
+//! The event/metrics sink behind an [`crate::obs::Obs`] handle:
+//! track registry, clock domains and Chrome trace-event emission.
+//!
+//! # Clock domains
+//!
+//! Trace timestamps come from one of three places:
+//!
+//! * **Simulated time** — the discrete-event subsystems (fleet
+//!   scheduler, instances, stream sessions) know their own timeline
+//!   explicitly and stamp events with it
+//!   ([`crate::obs::Obs::span`] and friends take `ts_us` directly).
+//! * **Logical ticks** ([`Clock::Deterministic`]) — host-side scoped
+//!   work (graph compile passes, kernel invocations) has no simulated
+//!   timeline, so each recorded event advances a logical clock by one
+//!   "microsecond". Span durations then count *events enclosed*, not
+//!   nanoseconds, and the whole trace is a pure function of the run's
+//!   event sequence: same seed + config ⇒ byte-identical bytes,
+//!   regardless of machine speed or thread count.
+//! * **Wall time** ([`Clock::Wall`]) — scoped spans use a monotonic
+//!   clock relative to the recorder's creation. For profiling a live
+//!   host; traces are *not* reproducible in this mode, and
+//!   host-dependent values (thread counts) are only included in span
+//!   arguments under this clock.
+//!
+//! The CLI `--trace` paths always use [`Clock::Deterministic`].
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::report::json::{array, escape};
+
+use super::metrics::MetricsStore;
+
+/// Which clock stamps host-side scoped spans (see the module docs;
+/// explicitly simulated timestamps are unaffected by this choice).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Clock {
+    /// Logical event ticks: deterministic, byte-identical traces.
+    Deterministic,
+    /// Monotonic wall time since the recorder was created.
+    Wall,
+}
+
+/// One recorded trace event (Chrome trace-event "phases": `X` =
+/// complete span, `i` = instant, `C` = counter sample).
+#[derive(Clone, Debug)]
+struct TraceEvent {
+    track: u32,
+    ph: char,
+    cat: String,
+    name: String,
+    ts_us: f64,
+    dur_us: f64,
+    args: Option<String>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    events: Vec<TraceEvent>,
+    tracks: Vec<String>,
+    metrics: MetricsStore,
+    ticks: u64,
+}
+
+/// The shared trace + metrics sink. Construct one per run (via
+/// [`crate::obs::Obs::deterministic`] / [`crate::obs::Obs::wall`]),
+/// thread the handle through the subsystems, then serialize with
+/// [`Recorder::trace_json`] / [`Recorder::metrics_json`].
+#[derive(Debug)]
+pub struct Recorder {
+    clock: Clock,
+    epoch: Instant,
+    inner: Mutex<Inner>,
+}
+
+fn fmt_us(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+impl Recorder {
+    /// An empty recorder using `clock` for scoped spans.
+    pub fn new(clock: Clock) -> Recorder {
+        Recorder {
+            clock,
+            epoch: Instant::now(),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// The scoped-span clock domain this recorder runs under.
+    pub fn clock(&self) -> Clock {
+        self.clock
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("obs recorder poisoned")
+    }
+
+    /// Id of the track `name`, registering it on first use. Track ids
+    /// are assigned in first-use order, so a deterministic
+    /// instrumentation order yields deterministic ids.
+    pub(super) fn track_id(&self, name: &str) -> u32 {
+        let mut inner = self.lock();
+        if let Some(i) = inner.tracks.iter().position(|t| t == name) {
+            return i as u32;
+        }
+        inner.tracks.push(name.to_string());
+        (inner.tracks.len() - 1) as u32
+    }
+
+    pub(super) fn record(
+        &self,
+        track: u32,
+        ph: char,
+        cat: &str,
+        name: &str,
+        ts_us: f64,
+        dur_us: f64,
+        args: Option<String>,
+    ) {
+        let mut inner = self.lock();
+        inner.ticks += 1;
+        inner.events.push(TraceEvent {
+            track,
+            ph,
+            cat: cat.to_string(),
+            name: name.to_string(),
+            ts_us,
+            dur_us,
+            args,
+        });
+    }
+
+    /// Current timestamp for opening/closing a scoped span: the
+    /// logical tick count under [`Clock::Deterministic`], wall
+    /// microseconds since the epoch under [`Clock::Wall`].
+    pub(super) fn scope_now_us(&self) -> f64 {
+        match self.clock {
+            Clock::Deterministic => self.lock().ticks as f64,
+            Clock::Wall => self.epoch.elapsed().as_secs_f64() * 1e6,
+        }
+    }
+
+    pub(super) fn with_metrics<R>(&self, f: impl FnOnce(&mut MetricsStore) -> R) -> R {
+        f(&mut self.lock().metrics)
+    }
+
+    /// A point-in-time copy of the metrics store.
+    pub fn metrics(&self) -> MetricsStore {
+        self.lock().metrics.clone()
+    }
+
+    /// Deterministic flat metrics snapshot
+    /// (see [`MetricsStore::to_json`]).
+    pub fn metrics_json(&self) -> String {
+        self.lock().metrics.to_json()
+    }
+
+    /// Serialize every recorded event as Chrome trace-event JSON:
+    /// `{"displayTimeUnit": "ms", "traceEvents": [...]}`. Each track
+    /// becomes its own process (a `process_name` metadata record plus
+    /// `pid` = track id + 1), which Perfetto renders as one named
+    /// lane per subsystem. Events appear in recording order.
+    pub fn trace_json(&self) -> String {
+        let inner = self.lock();
+        let mut evs: Vec<String> = Vec::with_capacity(inner.tracks.len() + inner.events.len());
+        for (i, name) in inner.tracks.iter().enumerate() {
+            evs.push(format!(
+                "{{\"ph\": \"M\", \"pid\": {}, \"tid\": 0, \"name\": \"process_name\", \
+                 \"args\": {{\"name\": \"{}\"}}}}",
+                i + 1,
+                escape(name)
+            ));
+        }
+        for e in &inner.events {
+            let mut s = format!(
+                "{{\"ph\": \"{}\", \"pid\": {}, \"tid\": 0, \"cat\": \"{}\", \"name\": \"{}\", \
+                 \"ts\": {}",
+                e.ph,
+                e.track + 1,
+                escape(&e.cat),
+                escape(&e.name),
+                fmt_us(e.ts_us)
+            );
+            match e.ph {
+                'X' => s.push_str(&format!(", \"dur\": {}", fmt_us(e.dur_us))),
+                'i' => s.push_str(", \"s\": \"t\""),
+                _ => {}
+            }
+            if let Some(a) = &e.args {
+                s.push_str(&format!(", \"args\": {a}"));
+            }
+            s.push('}');
+            evs.push(s);
+        }
+        format!(
+            "{{\"displayTimeUnit\": \"ms\", \"traceEvents\": {}}}",
+            array(&evs)
+        )
+    }
+
+    /// Number of events recorded so far (metadata records excluded).
+    pub fn event_count(&self) -> usize {
+        self.lock().events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_register_once_in_first_use_order() {
+        let r = Recorder::new(Clock::Deterministic);
+        assert_eq!(r.track_id("fleet"), 0);
+        assert_eq!(r.track_id("stream"), 1);
+        assert_eq!(r.track_id("fleet"), 0);
+    }
+
+    #[test]
+    fn deterministic_clock_counts_events() {
+        let r = Recorder::new(Clock::Deterministic);
+        assert_eq!(r.scope_now_us(), 0.0);
+        r.record(0, 'i', "c", "e", 0.0, 0.0, None);
+        assert_eq!(r.scope_now_us(), 1.0);
+        r.record(0, 'i', "c", "e", 0.0, 0.0, None);
+        assert_eq!(r.scope_now_us(), 2.0);
+    }
+
+    #[test]
+    fn trace_json_shape() {
+        let r = Recorder::new(Clock::Deterministic);
+        let t = r.track_id("fleet");
+        r.record(t, 'X', "batch", "dcgan x4", 10.0, 5.0, Some("{\"batch\": 4}".into()));
+        r.record(t, 'i', "shed", "late", 11.0, 0.0, None);
+        r.record(t, 'C', "", "queue_depth", 12.0, 0.0, Some("{\"value\": 3}".into()));
+        let j = r.trace_json();
+        assert!(j.starts_with("{\"displayTimeUnit\": \"ms\", \"traceEvents\": ["));
+        assert!(j.contains("\"process_name\""));
+        assert!(j.contains("\"ph\": \"X\""));
+        assert!(j.contains("\"dur\": 5"));
+        assert!(j.contains("\"s\": \"t\""), "instants carry a scope");
+        assert!(j.contains("\"args\": {\"value\": 3}"));
+        assert_eq!(r.event_count(), 3);
+    }
+
+    #[test]
+    fn wall_clock_advances() {
+        let r = Recorder::new(Clock::Wall);
+        let a = r.scope_now_us();
+        let b = r.scope_now_us();
+        assert!(b >= a);
+    }
+}

@@ -2,6 +2,8 @@
 //! bar charts that `cargo bench` prints and `make reproduce` captures
 //! into `reports/` for EXPERIMENTS.md.
 
+pub mod parse;
+
 /// A simple column-aligned text table.
 #[derive(Clone, Debug, Default)]
 pub struct Table {

@@ -24,7 +24,8 @@ use std::collections::BTreeMap;
 
 use crate::accel::AccelConfig;
 use crate::dcnn::Network;
-use crate::graph::{compile_network, PlanHandle};
+use crate::graph::{compile_network_obs, PlanHandle};
+use crate::obs::Obs;
 
 /// Hit/miss/eviction counters of a [`PlanCache`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -102,15 +103,33 @@ impl PlanCache {
         cfg: &AccelConfig,
         net: &Network,
     ) -> Result<PlanHandle, String> {
+        self.get_or_compile_obs(cfg, net, &Obs::off())
+    }
+
+    /// [`PlanCache::get_or_compile`] with observability: hits, misses
+    /// and evictions tick the `plan_cache.*` counters, misses run the
+    /// compiler under trace spans
+    /// ([`crate::graph::compile_network_obs`]), and the residency /
+    /// lookup gauges mirror the side-effect-free
+    /// [`PlanCache::resident_keys`] / [`PlanCache::lookups`] probes.
+    pub fn get_or_compile_obs(
+        &mut self,
+        cfg: &AccelConfig,
+        net: &Network,
+        obs: &Obs,
+    ) -> Result<PlanHandle, String> {
         let key = PlanCache::key(net.name, cfg);
         self.tick += 1;
+        obs.gauge("plan_cache.lookups", self.tick as f64);
         if let Some(e) = self.plans.get_mut(&key) {
             e.last_used = self.tick;
             self.stats.hits += 1;
+            obs.count("plan_cache.hits", 1);
             return Ok(PlanHandle::clone(&e.plan));
         }
-        let plan = PlanHandle::new(compile_network(cfg, net)?);
+        let plan = PlanHandle::new(compile_network_obs(cfg, net, obs)?);
         self.stats.misses += 1;
+        obs.count("plan_cache.misses", 1);
         self.plans.insert(
             key,
             Entry {
@@ -124,7 +143,11 @@ impl PlanCache {
                 let key = lru.map(|(k, _)| k.clone()).expect("entry exists");
                 self.plans.remove(&key);
                 self.stats.evictions += 1;
+                obs.count("plan_cache.evictions", 1);
             }
+        }
+        if obs.is_enabled() {
+            obs.gauge("plan_cache.resident", self.resident_keys().len() as f64);
         }
         Ok(plan)
     }

@@ -26,6 +26,16 @@
 //! running the paper's architecture would produce. Everything —
 //! arrivals, routing, batching — is deterministic: the same workload
 //! against the same options yields a byte-identical report.
+//!
+//! With an observability handle attached ([`Fleet::new_obs`]), the
+//! event loop narrates itself onto the simulated timeline: every
+//! dispatched batch becomes a span on its instance's track with
+//! nested per-layer cycle spans (from [`simulate_plan`]'s step
+//! metrics), every admitted request gets an arrival→completion span
+//! carrying its trace id, sheds appear as instant events tagged with
+//! their reason, and the fleet track samples total queue depth at
+//! each admission. Because every timestamp is simulated, the trace is
+//! byte-identical across runs.
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -34,6 +44,7 @@ use crate::accel::AccelConfig;
 use crate::coordinator::BatchPolicy;
 use crate::dcnn::Network;
 use crate::graph::simulate_plan;
+use crate::obs::Obs;
 use crate::report::json::{array, JsonObj};
 
 use super::cache::{CacheStats, PlanCache};
@@ -121,6 +132,11 @@ pub struct FleetOptions {
     /// Per-model accelerator-config selection (paper point, autotuned,
     /// or explicit heterogeneous configs).
     pub config_policy: ConfigPolicy,
+    /// Admission control: shed an arrival whose model already has this
+    /// many requests pending (unbatched). `usize::MAX` disables the
+    /// bound. Sheds for this reason are reported separately from
+    /// budget sheds ([`FleetReport::shed_queue_full`]).
+    pub queue_cap: usize,
 }
 
 impl Default for FleetOptions {
@@ -131,6 +147,7 @@ impl Default for FleetOptions {
             latency_budget_s: f64::INFINITY,
             shard_models: false,
             config_policy: ConfigPolicy::Paper,
+            queue_cap: usize::MAX,
         }
     }
 }
@@ -144,8 +161,15 @@ pub struct FleetReport {
     pub offered: u64,
     /// Requests served to completion.
     pub served: u64,
-    /// Requests shed by admission control.
+    /// Requests shed by admission control (all reasons;
+    /// `shed == shed_budget + shed_queue_full`).
     pub shed: u64,
+    /// Requests shed because the best-case queueing delay already
+    /// exceeded the latency budget.
+    pub shed_budget: u64,
+    /// Requests shed because the model's pending queue was at
+    /// [`FleetOptions::queue_cap`].
+    pub shed_queue_full: u64,
     /// Batches executed across all instances.
     pub batches: u64,
     /// Latency percentiles over served requests (arrival → completion).
@@ -167,6 +191,10 @@ pub struct FleetReport {
     /// plans every batch was served from ([`crate::serve::PlanCache`]
     /// keys are `<model>@<fingerprint>` with the batch size folded in).
     pub model_configs: BTreeMap<String, String>,
+    /// Flat metrics snapshot of the run's recorder
+    /// ([`crate::obs::Recorder::metrics_json`]); `None` when the fleet
+    /// ran without observability (the historical report is unchanged).
+    pub metrics: Option<String>,
 }
 
 impl FleetReport {
@@ -182,8 +210,10 @@ impl FleetReport {
     /// Human-readable summary (the `udcnn serve` text output).
     pub fn render(&self) -> String {
         let mut out = format!(
-            "=== fleet: {} instance(s) | offered {} | served {} | shed {} ===\n",
-            self.instances, self.offered, self.served, self.shed
+            "=== fleet: {} instance(s) | offered {} | served {} | shed {} (budget {}, \
+             queue-full {}) ===\n",
+            self.instances, self.offered, self.served, self.shed, self.shed_budget,
+            self.shed_queue_full
         );
         out.push_str(&format!(
             "throughput: {:.1} req/s over {:.3} s makespan | {} batches (avg {:.2})\n",
@@ -254,11 +284,13 @@ impl FleetReport {
                     .render()
             })
             .collect();
-        JsonObj::new()
+        let mut obj = JsonObj::new()
             .int("instances", self.instances as u64)
             .int("offered", self.offered)
             .int("served", self.served)
             .int("shed", self.shed)
+            .int("shed_budget", self.shed_budget)
+            .int("shed_queue_full", self.shed_queue_full)
             .int("batches", self.batches)
             .num("avg_batch", self.avg_batch())
             .num("throughput_rps", self.throughput_rps)
@@ -274,8 +306,11 @@ impl FleetReport {
             .str("config_policy", &self.config_policy)
             .raw("model_configs", &array(&model_configs))
             .raw("per_model", &array(&per_model))
-            .raw("per_instance", &array(&per_instance))
-            .render()
+            .raw("per_instance", &array(&per_instance));
+        if let Some(m) = &self.metrics {
+            obj = obj.raw("metrics", m);
+        }
+        obj.render()
     }
 }
 
@@ -283,10 +318,23 @@ impl FleetReport {
 #[derive(Default)]
 struct RunAccum {
     latencies: Vec<f64>,
-    shed: u64,
+    shed_budget: u64,
+    shed_queue: u64,
     batches: u64,
     per_model: BTreeMap<String, u64>,
     last_done_s: f64,
+}
+
+/// Per-layer slice of a simulated batch, memoized per plan-cache key
+/// so dispatch can emit nested layer spans without re-simulating.
+#[derive(Clone, Debug)]
+struct StepTrace {
+    name: String,
+    dur_s: f64,
+    cycles: u64,
+    util: f64,
+    bound: String,
+    macs: u64,
 }
 
 /// A fleet of simulated accelerator instances behind one front door.
@@ -303,7 +351,12 @@ pub struct Fleet {
     /// the event loop's hot path never re-simulates a plan it has
     /// already timed (the result is deterministic per key).
     sim_memo_s: BTreeMap<String, f64>,
+    /// Per-layer step metrics per plan-cache key, kept only when
+    /// observability is on (feeds the nested layer spans of each
+    /// dispatched batch).
+    step_memo: BTreeMap<String, Vec<StepTrace>>,
     opts: FleetOptions,
+    obs: Obs,
 }
 
 impl Fleet {
@@ -317,6 +370,14 @@ impl Fleet {
     /// model name, a network the graph compiler rejects, a tuner
     /// failure, or an explicit config map missing a registered model.
     pub fn new(networks: Vec<Network>, opts: FleetOptions) -> Result<Fleet, String> {
+        Fleet::new_obs(networks, opts, Obs::off())
+    }
+
+    /// [`Fleet::new`] with an observability handle: bring-up compiles
+    /// run under trace spans, and every subsequent [`Fleet::run`]
+    /// narrates batches, requests, sheds and queue depth onto the
+    /// recorder (see the module docs for the track scheme).
+    pub fn new_obs(networks: Vec<Network>, opts: FleetOptions, obs: Obs) -> Result<Fleet, String> {
         if networks.is_empty() {
             return Err("fleet needs at least one network".into());
         }
@@ -363,7 +424,9 @@ impl Fleet {
             cache: PlanCache::with_capacity(FLEET_PLAN_CACHE_CAP),
             model_cfgs,
             sim_memo_s: BTreeMap::new(),
+            step_memo: BTreeMap::new(),
             opts,
+            obs,
         };
         for name in &names {
             fleet.batch_latency_s(name, max_batch)?;
@@ -411,12 +474,31 @@ impl Fleet {
             .cloned()
             .ok_or_else(|| format!("no resolved config for model '{model}'"))?;
         cfg.batch = bsize.max(1);
-        let plan = self.cache.get_or_compile(&cfg, net)?;
+        let plan = self.cache.get_or_compile_obs(&cfg, net, &self.obs)?;
         let key = plan.cache_key();
         if let Some(&lat) = self.sim_memo_s.get(&key) {
             return Ok(lat);
         }
-        let lat = simulate_plan(&plan).time_s();
+        let metrics = simulate_plan(&plan);
+        let lat = metrics.time_s();
+        if self.obs.is_enabled() {
+            let steps: Vec<StepTrace> = metrics
+                .steps
+                .iter()
+                .map(|s| StepTrace {
+                    name: s.layer_name.clone(),
+                    dur_s: s.time_s(),
+                    cycles: s.total_cycles,
+                    util: s.pe_utilization(),
+                    bound: s.bound_by.to_string(),
+                    macs: s.useful_macs,
+                })
+                .collect();
+            if self.step_memo.len() >= 4 * FLEET_PLAN_CACHE_CAP {
+                self.step_memo.clear();
+            }
+            self.step_memo.insert(key.clone(), steps);
+        }
         // Bound the memo alongside the bounded plan cache: a reset is
         // deterministic (simulate_plan is pure) and only costs a
         // re-simulation on the next lookup of each key.
@@ -459,26 +541,126 @@ impl Fleet {
         &mut self,
         model: &str,
         now_s: f64,
-        pending: &mut BTreeMap<String, VecDeque<f64>>,
+        pending: &mut BTreeMap<String, VecDeque<(f64, u64)>>,
         acc: &mut RunAccum,
     ) -> Result<(), String> {
         let max_batch = self.opts.policy.max_batch;
         let q = pending.get_mut(model).expect("dispatch without a queue");
         let bsize = q.len().min(max_batch);
         debug_assert!(bsize > 0, "dispatch of an empty batch");
-        let submitted: Vec<f64> = q.drain(..bsize).collect();
+        let submitted: Vec<(f64, u64)> = q.drain(..bsize).collect();
         let latency = self.batch_latency_s(model, bsize)?;
         let idx = self
             .least_loaded(model)
             .ok_or_else(|| format!("no instance hosts '{model}'"))?;
         let done = self.instances[idx].run_batch(now_s, bsize, latency);
-        for t0 in submitted {
+        for &(t0, _) in &submitted {
             acc.latencies.push(done - t0);
         }
         acc.batches += 1;
         *acc.per_model.entry(model.to_string()).or_insert(0) += bsize as u64;
         acc.last_done_s = acc.last_done_s.max(done);
+        if self.obs.is_enabled() {
+            self.trace_batch(model, idx, bsize, done, latency, &submitted);
+        }
         Ok(())
+    }
+
+    /// Narrate one dispatched batch onto the simulated timeline: a
+    /// batch span on the instance's track, nested per-layer cycle
+    /// spans (cycles, binding resource, PE utilization — the per-batch
+    /// Fig. 6 answer), and one arrival→completion span per request on
+    /// the `requests` track, keyed by trace id.
+    fn trace_batch(
+        &self,
+        model: &str,
+        idx: usize,
+        bsize: usize,
+        done_s: f64,
+        latency_s: f64,
+        submitted: &[(f64, u64)],
+    ) {
+        let start_s = done_s - latency_s;
+        let itrack = self.obs.track(&format!("instance {idx}"));
+        self.obs.span(
+            itrack,
+            "batch",
+            &format!("{model} x{bsize}"),
+            start_s * 1e6,
+            latency_s * 1e6,
+            Some(
+                JsonObj::new()
+                    .str("model", model)
+                    .int("batch", bsize as u64)
+                    .int("instance", idx as u64),
+            ),
+        );
+        let mut cfg = self.model_cfgs.get(model).cloned().expect("resolved config");
+        cfg.batch = bsize.max(1);
+        if let Some(steps) = self.step_memo.get(&PlanCache::key(model, &cfg)) {
+            let mut t = start_s;
+            for st in steps {
+                self.obs.span(
+                    itrack,
+                    "layer",
+                    &st.name,
+                    t * 1e6,
+                    st.dur_s * 1e6,
+                    Some(
+                        JsonObj::new()
+                            .int("cycles", st.cycles)
+                            .num("pe_utilization", st.util)
+                            .str("bound_by", &st.bound)
+                            .int("useful_macs", st.macs),
+                    ),
+                );
+                t += st.dur_s;
+            }
+        }
+        let rtrack = self.obs.track("requests");
+        for &(t0, tid) in submitted {
+            self.obs.span(
+                rtrack,
+                "request",
+                &format!("{model} #{tid}"),
+                t0 * 1e6,
+                (done_s - t0) * 1e6,
+                Some(
+                    JsonObj::new()
+                        .int("trace_id", tid)
+                        .str("model", model)
+                        .int("batch", bsize as u64)
+                        .int("instance", idx as u64)
+                        .num("queue_ms", (start_s - t0) * 1e3),
+                ),
+            );
+        }
+        self.obs.count("fleet.batches", 1);
+        self.obs.count("fleet.served", bsize as u64);
+        self.obs.observe("fleet.batch_size", bsize as f64);
+    }
+
+    /// Record one shed arrival: an instant event on the fleet track
+    /// tagged with the shed *reason*, plus the matching
+    /// `fleet.shed.<reason>` counter.
+    fn trace_shed(&self, model: &str, trace_id: u64, t_s: f64, reason: &str) {
+        if !self.obs.is_enabled() {
+            return;
+        }
+        let ftrack = self.obs.track("fleet");
+        self.obs.instant(
+            ftrack,
+            "shed",
+            &format!("shed {model} #{trace_id}"),
+            t_s * 1e6,
+            Some(
+                JsonObj::new()
+                    .int("trace_id", trace_id)
+                    .str("model", model)
+                    .str("reason", reason),
+            ),
+        );
+        self.obs.count(&format!("fleet.shed.{reason}"), 1);
     }
 
     /// Dispatch every pending batch whose `max_wait` deadline falls at
@@ -486,14 +668,14 @@ impl Fleet {
     fn flush_due(
         &mut self,
         until_s: f64,
-        pending: &mut BTreeMap<String, VecDeque<f64>>,
+        pending: &mut BTreeMap<String, VecDeque<(f64, u64)>>,
         acc: &mut RunAccum,
     ) -> Result<(), String> {
         let max_wait = self.opts.policy.max_wait.as_secs_f64();
         loop {
             let next = pending
                 .iter()
-                .filter_map(|(m, q)| q.front().map(|&t0| (t0 + max_wait, m.clone())))
+                .filter_map(|(m, q)| q.front().map(|&(t0, _)| (t0 + max_wait, m.clone())))
                 .min_by(|a, b| {
                     a.0.partial_cmp(&b.0)
                         .expect("deadlines are never NaN")
@@ -517,10 +699,12 @@ impl Fleet {
     pub fn run(&mut self, arrivals: &[Arrival]) -> Result<FleetReport, String> {
         let budget = self.opts.latency_budget_s;
         let max_batch = self.opts.policy.max_batch;
-        let mut pending: BTreeMap<String, VecDeque<f64>> = BTreeMap::new();
+        let queue_cap = self.opts.queue_cap;
+        let mut pending: BTreeMap<String, VecDeque<(f64, u64)>> = BTreeMap::new();
         let mut acc = RunAccum::default();
 
-        for a in arrivals {
+        for (tid, a) in arrivals.iter().enumerate() {
+            let tid = tid as u64;
             if !self.networks.contains_key(&a.model) {
                 return Err(format!("unknown model '{}' in workload", a.model));
             }
@@ -529,12 +713,25 @@ impl Fleet {
             // admission control: shed if even the best instance cannot
             // start this request inside the latency budget
             if self.min_backlog_s(&a.model, a.t_s) > budget {
-                acc.shed += 1;
+                acc.shed_budget += 1;
+                self.trace_shed(&a.model, tid, a.t_s, "budget-exceeded");
                 continue;
             }
             let q = pending.entry(a.model.clone()).or_default();
-            q.push_back(a.t_s);
-            if q.len() >= max_batch {
+            // admission control: bounded per-model pending queue
+            if q.len() >= queue_cap {
+                acc.shed_queue += 1;
+                self.trace_shed(&a.model, tid, a.t_s, "queue-full");
+                continue;
+            }
+            q.push_back((a.t_s, tid));
+            let q_len = q.len();
+            if self.obs.is_enabled() {
+                let depth: usize = pending.values().map(|p| p.len()).sum();
+                let ftrack = self.obs.track("fleet");
+                self.obs.sample(ftrack, "queue_depth", a.t_s * 1e6, depth as f64);
+            }
+            if q_len >= max_batch {
                 self.dispatch(&a.model, a.t_s, &mut pending, &mut acc)?;
             }
         }
@@ -548,11 +745,15 @@ impl Fleet {
         for (m, c) in &self.model_cfgs {
             model_configs.insert(m.clone(), c.fingerprint());
         }
+        self.obs.count("fleet.offered", arrivals.len() as u64);
+        let metrics = self.obs.recorder().map(|r| r.metrics_json());
         Ok(FleetReport {
             instances: self.instances.len(),
             offered: arrivals.len() as u64,
             served,
-            shed: acc.shed,
+            shed: acc.shed_budget + acc.shed_queue,
+            shed_budget: acc.shed_budget,
+            shed_queue_full: acc.shed_queue,
             batches: acc.batches,
             latency: LatencySummary::from_latencies_s(&acc.latencies),
             throughput_rps: if makespan > 0.0 {
@@ -566,6 +767,7 @@ impl Fleet {
             cache: self.cache.stats(),
             config_policy: self.opts.config_policy.label().to_string(),
             model_configs,
+            metrics,
         })
     }
 }
@@ -751,5 +953,81 @@ mod tests {
                 model: "nope".into()
             }])
             .is_err());
+    }
+
+    #[test]
+    fn shed_reasons_are_separated() {
+        let work = burst_workload(256);
+        // budget sheds only
+        let mut f = Fleet::new(
+            vec![zoo::tiny_2d(), zoo::tiny_3d()],
+            FleetOptions {
+                instances: 1,
+                latency_budget_s: 0.0,
+                ..FleetOptions::default()
+            },
+        )
+        .unwrap();
+        let r = f.run(&work).unwrap();
+        assert!(r.shed_budget > 0);
+        assert_eq!(r.shed_queue_full, 0);
+        assert_eq!(r.shed, r.shed_budget + r.shed_queue_full);
+        assert_eq!(r.served + r.shed, r.offered);
+        // queue sheds only: infinite budget, queue capped at 1
+        let mut f = Fleet::new(
+            vec![zoo::tiny_2d(), zoo::tiny_3d()],
+            FleetOptions {
+                instances: 1,
+                queue_cap: 1,
+                ..FleetOptions::default()
+            },
+        )
+        .unwrap();
+        let r = f.run(&work).unwrap();
+        assert!(r.shed_queue_full > 0, "cap of 1 under a burst must shed");
+        assert_eq!(r.shed_budget, 0, "infinite budget never budget-sheds");
+        assert_eq!(r.shed, r.shed_budget + r.shed_queue_full);
+        assert_eq!(r.served + r.shed, r.offered);
+        let js = r.to_json();
+        assert!(js.contains("\"shed_budget\": 0"));
+        assert!(js.contains("\"shed_queue_full\""));
+        assert!(r.render().contains("queue-full"));
+    }
+
+    #[test]
+    fn observed_run_reports_metrics_and_shed_reasons() {
+        let work = burst_workload(128);
+        let obs = Obs::deterministic();
+        let mut f = Fleet::new_obs(
+            vec![zoo::tiny_2d(), zoo::tiny_3d()],
+            FleetOptions {
+                instances: 2,
+                queue_cap: 4,
+                ..FleetOptions::default()
+            },
+            obs.clone(),
+        )
+        .unwrap();
+        let r = f.run(&work).unwrap();
+        let metrics = r.metrics.as_deref().expect("observed run exports metrics");
+        assert!(metrics.contains("fleet.served"));
+        assert!(metrics.contains("plan_cache.misses"));
+        let m = obs.recorder().unwrap().metrics();
+        assert_eq!(m.counter("fleet.served"), r.served);
+        assert_eq!(m.counter("fleet.batches"), r.batches);
+        assert_eq!(m.counter("fleet.shed.queue-full"), r.shed_queue_full);
+        assert_eq!(m.counter("fleet.shed.budget-exceeded"), r.shed_budget);
+        let trace = obs.recorder().unwrap().trace_json();
+        for needle in ["\"cat\": \"batch\"", "\"cat\": \"layer\"", "\"cat\": \"request\""] {
+            assert!(trace.contains(needle), "trace missing {needle}");
+        }
+        assert!(trace.contains("queue_depth"));
+    }
+
+    #[test]
+    fn unobserved_report_omits_metrics() {
+        let r = fleet(1).run(&burst_workload(16)).unwrap();
+        assert!(r.metrics.is_none());
+        assert!(!r.to_json().contains("\"metrics\""));
     }
 }

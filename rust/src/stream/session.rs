@@ -27,17 +27,18 @@
 //!
 //! 2D networks degenerate to stateless chunk=1 passthrough: every
 //! frame is an independent inference through the same golden
-//! [`forward_uniform`] path (an *unbounded* stream — useful for
+//! [`forward_uniform`](crate::coordinator::service::forward_uniform) path (an *unbounded* stream — useful for
 //! frame-by-frame video workloads on 2D nets).
 
 use std::collections::BTreeMap;
 
 use crate::accel::{timing, AccelConfig};
-use crate::coordinator::service::forward_uniform;
+use crate::coordinator::service::forward_uniform_obs;
 use crate::dcnn::{Dims, LayerSpec, Network};
 use crate::fixed::Q88;
 use crate::func::uniform;
 use crate::graph::{passes, stream_shapes, LayerStreamShape, NetworkGraph};
+use crate::obs::Obs;
 use crate::report::json::JsonObj;
 use crate::serve::{CacheStats, PlanCache};
 use crate::tensor::{Volume, WeightsOIDHW};
@@ -161,7 +162,7 @@ fn shapes_of(net: &Network) -> Result<Vec<LayerStreamShape>, String> {
 }
 
 /// Live elements the whole-volume golden forward
-/// ([`forward_uniform`]) holds at its worst layer: the input, the
+/// ([`forward_uniform`](crate::coordinator::service::forward_uniform)) holds at its worst layer: the input, the
 /// full Eq.-(1) accumulation extent, and the cropped output coexist
 /// during write-back. The streaming session's
 /// [`StreamSummary::peak_live_elems`] is the like-for-like number.
@@ -287,6 +288,10 @@ pub struct StreamSession {
     /// Memoized plan latency per layer-0 slab size (avoids re-leaking
     /// `with_depth` names and re-simulating per chunk).
     plan_memo: BTreeMap<usize, f64>,
+    /// Observability handle: per-chunk and per-layer spans on the
+    /// `stream` track, kernel spans, and the live-memory gauge. Off by
+    /// default; see [`StreamSession::set_obs`].
+    obs: Obs,
 }
 
 impl StreamSession {
@@ -328,7 +333,17 @@ impl StreamSession {
             peak_live_elems: 0,
             cache: PlanCache::with_capacity(8),
             plan_memo: BTreeMap::new(),
+            obs: Obs::off(),
         })
+    }
+
+    /// Attach an observability handle. Chunk/layer spans land on the
+    /// `stream` track at *simulated* timestamps (the accumulated cycle
+    /// estimate times [`AccelConfig::cycle_s`]), kernel invocations on
+    /// the `kernel` track, and the session's live-memory high-water
+    /// mark drives the `stream.peak_live_elems` gauge.
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.obs = obs;
     }
 
     /// The network this session streams.
@@ -362,19 +377,24 @@ impl StreamSession {
             Dims::D2 => self.push_chunk_2d(&chunk)?,
         };
         // per-chunk cycle estimate over the slabs actually processed
-        let mut cycles = 0u64;
+        let mut layer_cycles = Vec::with_capacity(self.net.layers.len());
         for (layer, &slab) in self.net.layers.iter().zip(&slabs) {
-            cycles += timing::simulate_chunk(&self.cfg, layer, slab).total_cycles;
+            let mut c = timing::simulate_chunk(&self.cfg, layer, slab).total_cycles;
+            if self.net.dims == Dims::D2 {
+                c *= chunk.d as u64; // one full pass per frame
+            }
+            layer_cycles.push(c);
         }
-        if self.net.dims == Dims::D2 {
-            cycles *= chunk.d as u64; // one full pass per frame
-        }
+        let cycles: u64 = layer_cycles.iter().sum();
         // compiled-plan path for the chunk-shaped network
         let per_pass = self.chunk_plan_s(slabs[0])?;
         let plan_s = match self.net.dims {
             Dims::D2 => per_pass * chunk.d as f64, // one plan pass per frame
             Dims::D3 => per_pass,
         };
+        if self.obs.is_enabled() {
+            self.trace_chunk(chunk.d, frames.d, &slabs, &layer_cycles, plan_s);
+        }
         self.frames_in += chunk.d;
         self.frames_out += frames.d;
         self.chunks += 1;
@@ -387,11 +407,73 @@ impl StreamSession {
         })
     }
 
+    /// Emit the chunk's trace: one `chunk` span on the `stream` track
+    /// over the simulated interval the cycle estimate occupies, nested
+    /// per-layer spans carrying slab/halo geometry, a `live_elems`
+    /// counter sample, and the session gauges. Called *before* the
+    /// accumulators advance, so `self.total_cycles` is the chunk's
+    /// simulated start and `self.chunks` its index.
+    fn trace_chunk(
+        &self,
+        frames_in: usize,
+        frames_out: usize,
+        slabs: &[usize],
+        layer_cycles: &[u64],
+        plan_s: f64,
+    ) {
+        let track = self.obs.track("stream");
+        let cycle_s = self.cfg.cycle_s();
+        let t0 = self.total_cycles as f64 * cycle_s * 1e6;
+        let cycles: u64 = layer_cycles.iter().sum();
+        let dur = cycles as f64 * cycle_s * 1e6;
+        self.obs.span(
+            track,
+            "chunk",
+            &format!("chunk {}", self.chunks),
+            t0,
+            dur,
+            Some(
+                JsonObj::new()
+                    .int("frames_in", frames_in as u64)
+                    .int("frames_out", frames_out as u64)
+                    .int("slab0", slabs[0] as u64)
+                    .int("cycles", cycles)
+                    .num("plan_ms", plan_s * 1e3),
+            ),
+        );
+        let mut cursor = t0;
+        for (i, (&c, &slab)) in layer_cycles.iter().zip(slabs).enumerate() {
+            let d = c as f64 * cycle_s * 1e6;
+            self.obs.span(
+                track,
+                "layer",
+                &self.net.layers[i].name,
+                cursor,
+                d,
+                Some(
+                    JsonObj::new()
+                        .int("cycles", c)
+                        .int("slab_frames", slab as u64)
+                        .int("halo_frames", self.shapes[i].halo_in as u64),
+                ),
+            );
+            cursor += d;
+        }
+        self.obs
+            .sample(track, "live_elems", t0 + dur, self.peak_live_elems as f64);
+        self.obs
+            .gauge("stream.peak_live_elems", self.peak_live_elems as f64);
+        self.obs.count("stream.chunks", 1);
+        self.obs.count("stream.frames_in", frames_in as u64);
+        self.obs.count("stream.frames_out", frames_out as u64);
+    }
+
     /// 3D: stream the chunk through the halo-carrying layer chain.
     fn push_chunk_3d(&mut self, chunk: &Volume<f32>) -> Result<(Volume<f32>, Vec<usize>), String> {
         let mut peak = self.peak_live_elems;
         let mut slabs = Vec::with_capacity(self.layers.len());
         let mut cur = chunk.clone();
+        let ktrack = self.obs.track("kernel");
         for i in 0..self.layers.len() {
             let other: usize = self
                 .layers
@@ -403,12 +485,23 @@ impl StreamSession {
             let w = &self.weights[i];
             let s = self.net.layers[i].s;
             let threads = self.threads;
+            let mut span = self.obs.scope(ktrack, "kernel", &self.net.layers[i].name);
+            if self.obs.is_enabled() {
+                let l = &self.net.layers[i];
+                span.set_args(
+                    JsonObj::new()
+                        .int("useful_macs", l.op_counts().useful_macs)
+                        .num("structural_zero_ratio", l.inserted_sparsity()),
+                );
+                self.obs.count("kernel.invocations", 1);
+            }
             let (out, slab) = self.layers[i].step(
                 &cur,
                 |v| uniform::deconv_iom_threaded(v, w, s, threads),
                 other,
                 &mut peak,
             )?;
+            drop(span);
             slabs.push(slab);
             cur = out;
         }
@@ -437,7 +530,7 @@ impl StreamSession {
         let mut out_elems = 0usize;
         for f in 0..chunk.d {
             let frame = chunk.slice_depth(f, 1);
-            let y = forward_uniform(&self.net, &self.weights, frame.data());
+            let y = forward_uniform_obs(&self.net, &self.weights, frame.data(), &self.obs);
             out_elems += y.len();
             outs.push(Volume::from_vec(oc, 1, oh, ow, y));
             self.peak_live_elems = self
@@ -457,7 +550,9 @@ impl StreamSession {
             return Ok(lat);
         }
         let chunk_net = self.net.with_depth(slab0);
-        let plan = self.cache.get_or_compile(&self.cfg, &chunk_net)?;
+        let plan = self
+            .cache
+            .get_or_compile_obs(&self.cfg, &chunk_net, &self.obs)?;
         let lat = crate::graph::simulate_plan(&plan).time_s();
         self.plan_memo.insert(slab0, lat);
         Ok(lat)
@@ -512,7 +607,7 @@ pub fn concat_frames<T: Copy + Default>(parts: &[Volume<T>]) -> Volume<T> {
 /// Drive a full [`StreamSession`] over `input`, tiled into
 /// `chunk`-frame temporal tiles, and return the reassembled output
 /// with the session summary. The reassembled bits equal whole-volume
-/// [`forward_uniform`] exactly (`tests/diff_stream.rs` pins it).
+/// [`forward_uniform`](crate::coordinator::service::forward_uniform) exactly (`tests/diff_stream.rs` pins it).
 pub fn stream_forward(
     net: &Network,
     weights: &[WeightsOIDHW<f32>],
@@ -534,7 +629,7 @@ pub fn stream_forward(
 /// Q8.8 whole-volume golden forward: per-layer
 /// [`uniform::deconv_iom_q`] accumulation (48-bit, one rounding at
 /// write-back) plus the `K−S` crop — the fixed-point counterpart of
-/// [`forward_uniform`], used as the streaming battery's reference.
+/// [`forward_uniform`](crate::coordinator::service::forward_uniform), used as the streaming battery's reference.
 pub fn whole_forward_q(
     net: &Network,
     weights: &[WeightsOIDHW<Q88>],
@@ -598,6 +693,7 @@ pub fn stream_forward_q(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::service::forward_uniform;
     use crate::dcnn::{synth_frames, synth_uniform_weights, zoo};
 
     fn cfg_for(net: &Network) -> AccelConfig {

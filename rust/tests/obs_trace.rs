@@ -1,0 +1,200 @@
+//! Trace determinism and zero-overhead batteries for the obs spine.
+//!
+//! Pins the three contracts `rust/src/obs` sells:
+//!
+//! 1. a traced run is *byte-identical* across repeats with the same
+//!    seed and config — and across host thread counts, since the
+//!    deterministic clock never reads wall time and thread counts are
+//!    excluded from deterministic-mode span args;
+//! 2. the trace artifact is valid JSON (our own `report::parse`
+//!    round-trips it) carrying spans from every instrumented
+//!    subsystem;
+//! 3. a disabled recorder costs the forward hot path nothing: no
+//!    allocation, bit-identical outputs.
+//!
+//! A counting global allocator backs (3); every test serializes on
+//! one mutex so concurrent tests cannot pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use udcnn::accel::AccelConfig;
+use udcnn::coordinator::{forward_uniform, forward_uniform_obs};
+use udcnn::dcnn::{synth_frames, synth_uniform_weights, zoo};
+use udcnn::graph::compile_network_obs;
+use udcnn::obs::Obs;
+use udcnn::report::parse::{parse, JsonValue};
+use udcnn::serve::{poisson_arrivals, Fleet, FleetOptions};
+use udcnn::stream::StreamSession;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn alloc_count<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let start = ALLOCS.load(Ordering::SeqCst);
+    let r = f();
+    (ALLOCS.load(Ordering::SeqCst) - start, r)
+}
+
+/// One observed fleet run over the tiny nets; returns (trace, metrics).
+fn run_fleet_traced() -> (String, String) {
+    let nets = vec![
+        zoo::by_name("tiny-2d").unwrap(),
+        zoo::by_name("tiny-3d").unwrap(),
+    ];
+    let opts = FleetOptions {
+        instances: 2,
+        queue_cap: 4,
+        ..FleetOptions::default()
+    };
+    let workload = poisson_arrivals(0xBEEF, 400.0, 96, &["tiny-2d", "tiny-3d"]);
+    let obs = Obs::deterministic();
+    let rec = obs.recorder().unwrap().clone();
+    let mut fleet = Fleet::new_obs(nets, opts, obs).unwrap();
+    fleet.run(&workload).unwrap();
+    (rec.trace_json(), rec.metrics_json())
+}
+
+/// One observed streaming session (tiny 3D net, 8 frames in 2 chunks).
+fn run_stream_traced(threads: usize) -> String {
+    let net = zoo::by_name("tiny-3d").unwrap().with_depth(8);
+    let mut cfg = AccelConfig::paper_for(net.dims);
+    cfg.batch = 1;
+    let weights = synth_uniform_weights(&net, 0x5EED);
+    let obs = Obs::deterministic();
+    let rec = obs.recorder().unwrap().clone();
+    let mut sess = StreamSession::new(&net, weights, cfg, threads).unwrap();
+    sess.set_obs(obs);
+    for start in [0usize, 4] {
+        let chunk = synth_frames(&net.layers[0], 0xAB, start, 4);
+        sess.push_chunk(chunk).unwrap();
+    }
+    rec.trace_json()
+}
+
+fn cats_of(trace: &str) -> BTreeSet<String> {
+    let doc = parse(trace).expect("trace must be valid JSON");
+    let evs = doc
+        .get("traceEvents")
+        .and_then(JsonValue::as_arr)
+        .expect("trace must carry a traceEvents array");
+    evs.iter()
+        .filter_map(|e| e.get("cat").and_then(JsonValue::as_str).map(str::to_string))
+        .collect()
+}
+
+fn names_of(trace: &str) -> BTreeSet<String> {
+    let doc = parse(trace).unwrap();
+    let evs = doc.get("traceEvents").and_then(JsonValue::as_arr).unwrap();
+    evs.iter()
+        .filter_map(|e| e.get("name").and_then(JsonValue::as_str).map(str::to_string))
+        .collect()
+}
+
+#[test]
+fn serve_trace_is_byte_identical_across_runs() {
+    let _g = LOCK.lock().unwrap();
+    let (trace_a, metrics_a) = run_fleet_traced();
+    let (trace_b, metrics_b) = run_fleet_traced();
+    assert_eq!(trace_a, trace_b, "same seed + config must re-trace identically");
+    assert_eq!(metrics_a, metrics_b);
+    assert!(!trace_a.is_empty());
+}
+
+#[test]
+fn serve_trace_covers_every_subsystem() {
+    let _g = LOCK.lock().unwrap();
+    let (trace, metrics) = run_fleet_traced();
+    let cats = cats_of(&trace);
+    for cat in ["pass", "compile", "batch", "layer", "request"] {
+        assert!(cats.contains(cat), "serve trace missing cat '{cat}': {cats:?}");
+    }
+    assert!(
+        names_of(&trace).contains("queue_depth"),
+        "serve trace missing the queue_depth counter"
+    );
+    let m = parse(&metrics).expect("metrics must be valid JSON");
+    let served = m
+        .get("counters")
+        .and_then(|c| c.get("fleet.served"))
+        .and_then(JsonValue::as_u64)
+        .expect("metrics must carry fleet.served");
+    assert!(served > 0);
+}
+
+#[test]
+fn stream_trace_is_byte_identical_across_runs_and_thread_counts() {
+    let _g = LOCK.lock().unwrap();
+    let one_a = run_stream_traced(1);
+    let one_b = run_stream_traced(1);
+    let four = run_stream_traced(4);
+    assert_eq!(one_a, one_b, "same stream must re-trace identically");
+    assert_eq!(
+        one_a, four,
+        "deterministic traces must not depend on the host thread count"
+    );
+    let cats = cats_of(&one_a);
+    for cat in ["chunk", "layer", "kernel", "pass"] {
+        assert!(cats.contains(cat), "stream trace missing cat '{cat}': {cats:?}");
+    }
+    assert!(names_of(&one_a).contains("live_elems"));
+}
+
+#[test]
+fn compile_trace_carries_per_pass_spans() {
+    let _g = LOCK.lock().unwrap();
+    let net = zoo::by_name("tiny-2d").unwrap();
+    let cfg = AccelConfig::paper_for(net.dims);
+    let obs = Obs::deterministic();
+    let rec = obs.recorder().unwrap().clone();
+    compile_network_obs(&cfg, &net, &obs).unwrap();
+    let names = names_of(&rec.trace_json());
+    for pass in [
+        "infer_shapes",
+        "lower_oom_to_iom",
+        "fuse_activations",
+        "schedule_and_reuse",
+    ] {
+        assert!(names.contains(pass), "compile trace missing pass '{pass}'");
+    }
+    assert!(cats_of(&rec.trace_json()).contains("pass"));
+}
+
+#[test]
+fn disabled_recorder_is_free_on_the_forward_hot_path() {
+    let _g = LOCK.lock().unwrap();
+    let net = zoo::by_name("tiny-2d").unwrap();
+    let weights = synth_uniform_weights(&net, 1);
+    let input = synth_frames(&net.layers[0], 2, 0, 1);
+    let off = Obs::off();
+    // Warm up lazy one-time allocations (thread-count probe, etc.).
+    let _ = forward_uniform(&net, &weights, input.data());
+    let _ = forward_uniform_obs(&net, &weights, input.data(), &off);
+    let (base_allocs, base) = alloc_count(|| forward_uniform(&net, &weights, input.data()));
+    let (obs_allocs, observed) =
+        alloc_count(|| forward_uniform_obs(&net, &weights, input.data(), &off));
+    assert_eq!(base, observed, "outputs must be bit-identical");
+    assert_eq!(
+        base_allocs, obs_allocs,
+        "a disabled recorder must not allocate on the forward path"
+    );
+}

@@ -1,0 +1,47 @@
+//! Perf regression gate against the committed trajectory.
+//!
+//! `#[ignore]`d locally (the full point set runs the autotuner and
+//! numeric streaming, which wants a release build); CI runs it with
+//! `cargo test --release --test perf_gate -- --include-ignored`
+//! *after* `cargo bench --bench trajectory` has armed the baseline.
+//! A point may only regress its simulated throughput by
+//! `GATE_TOLERANCE` (5 %) against the latest armed record.
+
+use udcnn::benchkit::trajectory::{
+    gate_violations, latest_armed, measure_all, parse_file, trajectory_path,
+};
+
+#[test]
+#[ignore = "release-battery: run with --include-ignored (see CI perf job)"]
+fn throughput_does_not_regress_past_tolerance() {
+    let points = measure_all().expect("trajectory points must measure");
+    for p in &points {
+        assert!(p.total_cycles > 0, "{}: zero cycles", p.point.id());
+        assert!(
+            p.throughput > 0.0 && p.throughput.is_finite(),
+            "{}: bad throughput {}",
+            p.point.id(),
+            p.throughput
+        );
+    }
+
+    let path = trajectory_path();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("committed trajectory {path} must exist: {e}"));
+    let records = parse_file(&text).expect("committed trajectory must parse");
+    let Some(baseline) = latest_armed(&records) else {
+        eprintln!(
+            "perf gate: no armed baseline in {path} yet (bootstrap placeholder only); \
+             run `cargo bench --bench trajectory` to arm it"
+        );
+        return;
+    };
+
+    let violations = gate_violations(baseline, &points);
+    assert!(
+        violations.is_empty(),
+        "throughput regressed vs record '{}':\n  {}",
+        baseline.label,
+        violations.join("\n  ")
+    );
+}
