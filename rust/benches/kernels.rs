@@ -7,14 +7,22 @@
 //! The 2D layer runs through the *same* kernel as the 3D layer — as
 //! the depth-1 fold — so this table is also the perf story of §IV-C.
 //!
-//! Alongside the text report it writes `reports/BENCH_kernels.json`
-//! so the kernel-level perf trajectory is tracked across PRs. The
-//! `threaded_speedup_f32` / `threaded_beats_single` fields *record*
-//! whether the threaded uniform kernel beats the single-threaded path
-//! (what the old `deconv2d_iom` / `deconv3d_iom` golden models
-//! execute) on both layers; the bar is read from the report, not
-//! enforced as an exit code — on 2-core CI runners the ratio can
-//! legitimately hover near 1.0.
+//! It also races the two kernel formulations head to head on each
+//! layer plus the GAN head layers (the thin-output stride-2 shapes
+//! where the difference is a *multiple*, not a percentage):
+//! * **scatter** — the replaced serving path: `deconv_iom_threaded`
+//!   over the full Eq.-(1) extent, then the `K−S` crop; parallelism
+//!   shards output channels, so a 1-channel head clamps to one
+//!   thread;
+//! * **gather** — `deconv_gather_window_threaded`: each cropped
+//!   output element pulls its contributor window directly (border
+//!   taps never computed, nothing materialized outside the crop),
+//!   sharded over output *rows*, so thin heads still fill every core.
+//!
+//! `gather_speedup_f32` in `reports/BENCH_kernels.json` is the
+//! multi-threaded scatter-path/gather-path time ratio per layer; the
+//! differential battery (`tests/diff_kernels.rs`) pins that the two
+//! paths produce identical bits, so the ratio is a free lunch.
 //!
 //! Honours `UDCNN_BENCH_FAST=1` for CI-speed runs.
 
@@ -35,6 +43,17 @@ fn largest_layer(dims: Dims) -> LayerSpec {
         .expect("zoo has layers of both dimensionalities")
 }
 
+/// The final (head) layer of a full-size zoo network — the thin
+/// output-channel shapes where scatter's channel sharding starves.
+fn head_layer(net: &str) -> LayerSpec {
+    zoo::by_name(net)
+        .expect("zoo network")
+        .layers
+        .last()
+        .expect("network has layers")
+        .clone()
+}
+
 fn kernel_doc(name: &str, threads: usize, r: &BenchResult, flops: f64) -> String {
     JsonObj::new()
         .str("kernel", name)
@@ -47,7 +66,7 @@ fn kernel_doc(name: &str, threads: usize, r: &BenchResult, flops: f64) -> String
 fn main() {
     header(
         "kernels",
-        "uniform kernel core GFLOP/s (2D = depth-1 fold of the one 3D kernel)",
+        "uniform kernel core GFLOP/s + scatter-vs-gather head-to-head",
     );
     let b = Bench::from_env();
     let threads = std::thread::available_parallelism()
@@ -56,10 +75,20 @@ fn main() {
 
     let mut layer_docs = Vec::new();
     let mut all_threaded_faster = true;
-    for spec in [largest_layer(Dims::D2), largest_layer(Dims::D3)] {
+    let mut best_gather_speedup = 0.0f64;
+    for spec in [
+        largest_layer(Dims::D2),
+        largest_layer(Dims::D3),
+        head_layer("dcgan"),
+        head_layer("3d-gan"),
+    ] {
         let macs = spec.op_counts().useful_macs;
         let flops = 2.0 * macs as f64;
-        println!("{spec}  ({:.1} M useful MACs)", macs as f64 / 1e6);
+        println!(
+            "{spec}  ({:.1} M structural MACs, {:.1} M gather-executed)",
+            macs as f64 / 1e6,
+            spec.gather_macs() as f64 / 1e6
+        );
 
         let data = LayerData::synth(&spec, 0xBE7C4);
         let input = data.uniform_input();
@@ -92,10 +121,48 @@ fn main() {
         let speedup = single.median_s() / multi.median_s();
         all_threaded_faster &= speedup > 1.0;
         println!(
-            "  f32: {:.2} -> {:.2} GFLOP/s  ({speedup:.2}x threaded speedup, {})\n",
+            "  f32: {:.2} -> {:.2} GFLOP/s  ({speedup:.2}x threaded speedup, {})",
             flops / single.median_s() / 1e9,
             flops / multi.median_s() / 1e9,
             if speedup > 1.0 { "OK" } else { "REGRESSION" },
+        );
+
+        // Head-to-head: the serving path each kernel actually runs —
+        // scatter materializes the full extent then crops, gather
+        // emits the cropped window directly.
+        let (od, oh, ow) = (spec.out_d(), spec.out_h(), spec.out_w());
+        let scatter1 = b.run(&format!("{} scatter_f32 t=1", spec.name), || {
+            let full = uniform::deconv_iom(&input, &weights, spec.s);
+            std::hint::black_box(uniform::crop(&full, od, oh, ow).len());
+        });
+        println!("{}", scatter1.summary());
+        let scatter_n = b.run(&format!("{} scatter_f32 t={threads}", spec.name), || {
+            let full = uniform::deconv_iom_threaded(&input, &weights, spec.s, threads);
+            std::hint::black_box(uniform::crop(&full, od, oh, ow).len());
+        });
+        println!("{}", scatter_n.summary());
+        let gather1 = b.run(&format!("{} gather_f32 t=1", spec.name), || {
+            std::hint::black_box(
+                uniform::deconv_gather_window(&input, &weights, spec.s, 0, od, oh, ow).len(),
+            );
+        });
+        println!("{}", gather1.summary());
+        let gather_n = b.run(&format!("{} gather_f32 t={threads}", spec.name), || {
+            std::hint::black_box(
+                uniform::deconv_gather_window_threaded(
+                    &input, &weights, spec.s, 0, od, oh, ow, threads,
+                )
+                .len(),
+            );
+        });
+        println!("{}", gather_n.summary());
+
+        let gather_speedup = scatter_n.median_s() / gather_n.median_s();
+        best_gather_speedup = best_gather_speedup.max(gather_speedup);
+        println!(
+            "  gather vs scatter (t={threads}): {gather_speedup:.2}x  (out_c={}, {} output rows)\n",
+            spec.out_c,
+            spec.out_c * od * oh,
         );
 
         let kernels = array(&[
@@ -103,13 +170,19 @@ fn main() {
             kernel_doc("iom_f32", threads, &multi, flops),
             kernel_doc("iom_q88", 1, &qsingle, flops),
             kernel_doc("iom_q88", threads, &qmulti, flops),
+            kernel_doc("scatter_f32", 1, &scatter1, flops),
+            kernel_doc("scatter_f32", threads, &scatter_n, flops),
+            kernel_doc("gather_f32", 1, &gather1, flops),
+            kernel_doc("gather_f32", threads, &gather_n, flops),
         ]);
         layer_docs.push(
             JsonObj::new()
                 .str("layer", &spec.name)
                 .str("dims", &spec.dims.to_string())
                 .int("useful_macs", macs)
+                .int("gather_macs", spec.gather_macs())
                 .num("threaded_speedup_f32", speedup)
+                .num("gather_speedup_f32", gather_speedup)
                 .raw("kernels", &kernels)
                 .render(),
         );
@@ -119,6 +192,7 @@ fn main() {
         .str("bench", "kernels")
         .int("threads", threads as u64)
         .raw("threaded_beats_single", if all_threaded_faster { "true" } else { "false" })
+        .num("gather_speedup_max", best_gather_speedup)
         .raw("layers", &array(&layer_docs))
         .render();
     match write_report_file(REPORT_PATH, &doc) {

@@ -114,6 +114,47 @@ impl Residency {
             output_bytes: output_traffic,
         }
     }
+
+    /// Kernel-aware residency: [`Residency::plan`] for the scatter
+    /// kernel, or the gather variant for
+    /// [`super::kernel::KernelChoice::Gather`].
+    ///
+    /// Gather is output-stationary: each *cropped* output element is
+    /// produced by walking its contributor window and is written to
+    /// DDR exactly once — there is no Eq.-(1) full-extent slice held
+    /// during accumulation and no read-modify-write spill when the
+    /// slice exceeds the output buffer. Weight and input traffic are
+    /// unchanged (the same blocks stream through the same buffers).
+    pub fn plan_kernel(
+        cfg: &AccelConfig,
+        layer: &LayerSpec,
+        sched: &Schedule,
+        kernel: super::kernel::KernelChoice,
+    ) -> Residency {
+        let scatter = Residency::plan(cfg, layer, sched);
+        match kernel {
+            super::kernel::KernelChoice::Scatter => scatter,
+            super::kernel::KernelChoice::Gather => {
+                let eb = cfg.elem_bytes() as u64;
+                let out_once = cfg.batch as u64 * layer.output_elems() as u64 * eb;
+                // The cropped per-oc-block slice a gather pass holds
+                // on chip: out_par channels × cropped spatial extent.
+                let out_slice =
+                    (sched.mapping.out_par * layer.out_spatial()) as u64 * eb;
+                let out_fits = out_slice <= cfg.output_buf_kib as u64 * 1024;
+                Residency {
+                    outputs: if out_fits {
+                        OperandPlace::Resident
+                    } else {
+                        OperandPlace::Streamed
+                    },
+                    dram_bytes: scatter.weight_bytes + scatter.input_bytes + out_once,
+                    output_bytes: out_once,
+                    ..scatter
+                }
+            }
+        }
+    }
 }
 
 /// Check that the *working set* of one schedule step fits in the
@@ -194,6 +235,30 @@ mod tests {
                     "{} working set must fit Table-II buffers",
                     layer.name
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn gather_residency_never_spills_outputs() {
+        use super::super::kernel::KernelChoice;
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            for layer in &net.layers {
+                let sched = Schedule::new(&cfg, layer);
+                let s = Residency::plan_kernel(&cfg, layer, &sched, KernelChoice::Scatter);
+                assert_eq!(s, Residency::plan(&cfg, layer, &sched), "{}", layer.name);
+                let g = Residency::plan_kernel(&cfg, layer, &sched, KernelChoice::Gather);
+                // outputs move exactly once, whatever the buffers hold
+                assert_eq!(
+                    g.output_bytes,
+                    cfg.batch as u64 * layer.output_elems() as u64 * cfg.elem_bytes() as u64,
+                    "{}",
+                    layer.name
+                );
+                assert!(g.dram_bytes <= s.dram_bytes, "{}", layer.name);
+                assert_eq!(g.weight_bytes, s.weight_bytes, "{}", layer.name);
+                assert_eq!(g.input_bytes, s.input_bytes, "{}", layer.name);
             }
         }
     }

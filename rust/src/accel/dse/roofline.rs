@@ -7,9 +7,15 @@
 //! plan's cycle count from two rooflines:
 //!
 //! * **compute** — the mesh cannot finish a layer in fewer cycles than
-//!   `⌈batch · useful_MACs / total_PEs⌉`: every blocking schedule
-//!   rounds its loop bounds *up*, so `passes · K^d · PEs ≥ batch ·
-//!   useful_MACs` holds for any legal [`crate::accel::Schedule`];
+//!   `⌈batch · min(useful_MACs, gather_MACs) / total_PEs⌉`: every
+//!   blocking schedule rounds its loop bounds *up*, so
+//!   `passes · K^d · PEs ≥ batch · useful_MACs` holds for any legal
+//!   [`crate::accel::Schedule`], and the gather kernel's cycle model
+//!   scales those stall-free passes by `gather_MACs / useful_MACs`
+//!   rounding up, so its cycles dominate
+//!   `⌈batch · gather_MACs / PEs⌉`. Taking the per-layer *min* keeps
+//!   the bound sound whichever kernel the compiler picks
+//!   ([`crate::accel::kernel`]);
 //! * **bandwidth** — DDR must move at least the weights once plus the
 //!   network input and final output once per batch item. Interior
 //!   layer boundaries may be kept entirely on-chip by the reuse pass,
@@ -32,7 +38,8 @@ use crate::dcnn::Network;
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RooflineEstimate {
     /// Compute roofline: Σ over layers of
-    /// `⌈batch · useful_MACs / total_PEs⌉`.
+    /// `⌈batch · min(useful_MACs, gather_MACs) / total_PEs⌉` — sound
+    /// for either per-layer kernel choice.
     pub compute_cycles: u64,
     /// Bandwidth roofline: minimal DDR traffic (weights once + network
     /// input/output once per batch item) at full effective bandwidth.
@@ -69,8 +76,9 @@ pub fn network_lower_bound(cfg: &AccelConfig, net: &Network) -> RooflineEstimate
     let mut compute = 0u64;
     let mut weight_bytes = 0u64;
     for layer in &net.layers {
-        let work = batch * layer.op_counts().useful_macs;
-        compute += work.div_ceil(pes);
+        // min over the two kernels the compiler may pick per layer
+        let macs = layer.op_counts().useful_macs.min(layer.gather_macs());
+        compute += (batch * macs).div_ceil(pes);
         weight_bytes += layer.weight_elems() as u64 * eb;
     }
     let edge_bytes = match (net.layers.first(), net.layers.last()) {
@@ -141,8 +149,8 @@ mod tests {
             .layers
             .iter()
             .map(|l| {
-                (cfg.batch as u64 * l.op_counts().useful_macs)
-                    .div_ceil(cfg.total_pes() as u64)
+                let macs = l.op_counts().useful_macs.min(l.gather_macs());
+                (cfg.batch as u64 * macs).div_ceil(cfg.total_pes() as u64)
             })
             .sum();
         assert_eq!(est.compute_cycles, by_hand);

@@ -18,7 +18,12 @@
 //!    everything after is provably no better).
 //! 3. **Evaluate** — survivors run the *exact* cost model: the graph
 //!    compiler plus [`crate::graph::simulate_plan`], i.e. the same
-//!    compiled-plan path the serving tier executes.
+//!    compiled-plan path the serving tier executes. That path scores
+//!    both deconvolution kernels per layer shape
+//!    ([`crate::accel::kernel::choose`]: the zero-skip gather changes
+//!    the useful-MAC and DDR-bandwidth terms) and the winning
+//!    per-layer `KernelChoice` is recorded on the [`TunedConfig`]
+//!    with both kernels' cycles as justification.
 //!
 //! The search is fully deterministic (pure arithmetic over a canonical
 //! candidate order), and the selected [`TunedConfig`] is guaranteed to
@@ -95,6 +100,11 @@ pub struct TunedConfig {
     /// The roofline bound that ranked this candidate before exact
     /// evaluation.
     pub roofline: RooflineEstimate,
+    /// Per-layer kernel decisions `(layer name, selection)` recorded
+    /// by the compiled plan the exact evaluation scored: the choice
+    /// plus both kernels' modeled cycles (the machine-readable
+    /// justification).
+    pub kernels: Vec<(String, crate::accel::KernelSelection)>,
 }
 
 impl TunedConfig {
@@ -102,6 +112,19 @@ impl TunedConfig {
     /// `reports/BENCH_dse.json`).
     pub fn to_json(&self) -> String {
         let c = &self.cfg;
+        let kernels: Vec<String> = self
+            .kernels
+            .iter()
+            .map(|(layer, sel)| {
+                JsonObj::new()
+                    .str("layer", layer)
+                    .str("kernel", &sel.choice.to_string())
+                    .int("scatter_cycles", sel.scatter_cycles)
+                    .int("gather_cycles", sel.gather_cycles)
+                    .str("reason", &sel.reason())
+                    .render()
+            })
+            .collect();
         JsonObj::new()
             .str("fingerprint", &c.fingerprint())
             .int("tm", c.tm as u64)
@@ -124,6 +147,7 @@ impl TunedConfig {
             .int("roofline_cycles", self.roofline.lower_bound_cycles())
             .str("roofline_bound", &self.roofline.bound_by.to_string())
             .num("roofline_utilization_bound", self.roofline.utilization_bound())
+            .raw("kernels", &array(&kernels))
             .render()
     }
 }
@@ -205,6 +229,11 @@ fn evaluate_exact(cfg: &AccelConfig, net: &Network) -> Option<TunedConfig> {
     let m = graph::simulate_plan(&plan);
     let compute: u64 = m.steps.iter().map(|s| s.compute_cycles).sum();
     let memory: u64 = m.steps.iter().map(|s| s.memory_cycles).sum();
+    let kernels = plan
+        .steps
+        .iter()
+        .map(|s| (s.name.clone(), s.kernel.clone()))
+        .collect();
     Some(TunedConfig {
         cfg: cfg.clone(),
         total_cycles: m.total_cycles,
@@ -218,6 +247,7 @@ fn evaluate_exact(cfg: &AccelConfig, net: &Network) -> Option<TunedConfig> {
         utilization: m.avg_pe_utilization(),
         resources: resource::estimate(cfg),
         roofline: network_lower_bound(cfg, net),
+        kernels,
     })
 }
 
@@ -417,5 +447,23 @@ mod tests {
         assert!(js.contains("\"ranked\""));
         assert!(js.contains("\"fingerprint\""));
         assert!(js.contains("\"roofline_cycles\""));
+        assert!(js.contains("\"kernels\""));
+        assert!(js.contains("\"reason\""));
+    }
+
+    #[test]
+    fn tuned_configs_record_a_kernel_choice_per_layer() {
+        for net in [zoo::tiny_2d(), zoo::gan3d()] {
+            let r = tune_network(&net, &TuneOptions::default()).unwrap();
+            for point in r.ranked.iter().chain([&r.default_point]) {
+                assert_eq!(point.kernels.len(), net.layers.len(), "{}", net.name);
+                for ((name, sel), layer) in point.kernels.iter().zip(&net.layers) {
+                    assert_eq!(name, &layer.name);
+                    // the recorded choice is the argmin of its own scores
+                    assert!(sel.chosen_cycles() <= sel.scatter_cycles);
+                    assert!(sel.chosen_cycles() <= sel.gather_cycles);
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,257 @@
+//! Per-layer kernel choice: the paper's **scatter** pass pipeline vs
+//! the zero-skip **gather** (output-stationary) evaluation of the same
+//! IOM sum.
+//!
+//! Both kernels compute identical bits (the accumulation-order
+//! contract in [`crate::func::uniform`]), so the choice is purely a
+//! performance decision and the compiler makes it per layer shape:
+//!
+//! * **Scatter** (Fig. 5): each input activation is scattered against
+//!   the whole kernel. Overlaps between neighbouring depth passes ride
+//!   the FIFO-D and cost the `K²·(K−S)` stall
+//!   ([`crate::accel::mapping`]), the full Eq.-(1) extent is
+//!   accumulated before cropping, and when the output slice exceeds
+//!   the output buffer the partial sums spill to DDR with a
+//!   read-modify-write per extra input-channel block.
+//! * **Gather** (the TDC formulation of arXiv:1705.02583): each
+//!   *cropped* output element reads its contributor window
+//!   `[⌈(z−K+1)/S⌉, ⌊z/S⌋]` per axis. Output-stationary accumulation
+//!   has no depth-overlap hazard (no stall term), executes only
+//!   [`LayerSpec::gather_macs`] MACs (the cropped border's taps are
+//!   never computed — strictly fewer than `useful_macs` when
+//!   `K > S`), and writes each output element exactly once (no
+//!   read-modify-write spill, ever).
+//!
+//! [`choose`] scores both kernels under the full per-layer step model
+//! (compute vs DDR transfer, the same terms
+//! [`crate::graph::simulate_plan`] charges) and picks the cheaper,
+//! ties going to scatter — deterministic by construction, which is
+//! what lets the autotuner record the choice as machine-readable
+//! justification and `tests/prop_dse.rs` pin that forcing the
+//! non-chosen kernel never simulates faster.
+
+use std::fmt;
+
+use crate::dcnn::LayerSpec;
+
+use super::buffers::Residency;
+use super::config::AccelConfig;
+use super::memory::DdrModel;
+use super::schedule::Schedule;
+
+/// Which kernel formulation a layer runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelChoice {
+    /// The paper's input-oriented scatter pass pipeline (Fig. 5).
+    #[default]
+    Scatter,
+    /// Zero-skip output-stationary gather over contributor windows.
+    Gather,
+}
+
+impl KernelChoice {
+    /// Both choices, in scoring order.
+    pub const ALL: [KernelChoice; 2] = [KernelChoice::Scatter, KernelChoice::Gather];
+}
+
+impl fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KernelChoice::Scatter => write!(f, "scatter"),
+            KernelChoice::Gather => write!(f, "gather"),
+        }
+    }
+}
+
+/// Compute cycles of `layer` under `kernel` on `cfg`'s mesh.
+///
+/// Scatter is [`Schedule::compute_cycles`] unchanged (pass pipeline
+/// incl. the depth-overlap stall + fill + drain). Gather reuses the
+/// same blocking walk but (a) drops the stall — output-stationary
+/// accumulation has no FIFO-D hazard — and (b) scales the stall-free
+/// pass cycles by `gather_macs / useful_macs`, rounding up, because
+/// the cropped border's taps are never issued. The rounding keeps
+/// `cycles · PEs ≥ batch · gather_macs`, so the roofline compute
+/// bound over `min(useful, gather)` MACs stays a true lower bound for
+/// both kernels ([`crate::accel::dse::roofline`]'s pruning-soundness
+/// requirement).
+pub fn compute_cycles(
+    cfg: &AccelConfig,
+    layer: &LayerSpec,
+    sched: &Schedule,
+    kernel: KernelChoice,
+) -> u64 {
+    match kernel {
+        KernelChoice::Scatter => sched.compute_cycles(cfg),
+        KernelChoice::Gather => {
+            let no_stall =
+                sched.total_passes() * sched.mapping.macs_per_activation as u64;
+            let useful = layer.op_counts().useful_macs;
+            let pass = (no_stall * layer.gather_macs()).div_ceil(useful);
+            pass + sched.fill_cycles(cfg) + sched.drain_cycles(cfg)
+        }
+    }
+}
+
+/// Isolated step cycles of `layer` under `kernel`: compute overlapped
+/// against the kernel-aware DDR traffic (gather never spills partial
+/// sums), the same `max(compute, memory)` the plan simulator charges
+/// per step. This is the score [`choose`] minimizes.
+pub fn step_cycles(
+    cfg: &AccelConfig,
+    layer: &LayerSpec,
+    sched: &Schedule,
+    kernel: KernelChoice,
+) -> u64 {
+    let r = Residency::plan_kernel(cfg, layer, sched, kernel);
+    let ddr = DdrModel::from_config(cfg);
+    compute_cycles(cfg, layer, sched, kernel).max(ddr.transfer_cycles(r.dram_bytes, cfg.freq_mhz))
+}
+
+/// The scored per-layer kernel decision: the chosen kernel plus both
+/// kernels' modeled step cycles — the machine-readable justification
+/// the autotuner and the compiled plan carry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelSelection {
+    /// The winning kernel (ties go to [`KernelChoice::Scatter`]).
+    pub choice: KernelChoice,
+    /// Modeled isolated step cycles under scatter.
+    pub scatter_cycles: u64,
+    /// Modeled isolated step cycles under gather.
+    pub gather_cycles: u64,
+}
+
+impl KernelSelection {
+    /// Modeled step cycles of one kernel.
+    pub fn cycles(&self, kernel: KernelChoice) -> u64 {
+        match kernel {
+            KernelChoice::Scatter => self.scatter_cycles,
+            KernelChoice::Gather => self.gather_cycles,
+        }
+    }
+
+    /// Modeled step cycles of the chosen kernel.
+    pub fn chosen_cycles(&self) -> u64 {
+        self.cycles(self.choice)
+    }
+
+    /// Human-readable justification of the decision (the structured
+    /// form is the two cycle fields themselves).
+    pub fn reason(&self) -> String {
+        match self.choice {
+            KernelChoice::Gather => format!(
+                "gather {} < scatter {} cycles: no depth-overlap stall, \
+                 cropped-border taps skipped, outputs written once (no spill)",
+                self.gather_cycles, self.scatter_cycles
+            ),
+            KernelChoice::Scatter => format!(
+                "scatter {} <= gather {} cycles (ties keep the paper's pass pipeline)",
+                self.scatter_cycles, self.gather_cycles
+            ),
+        }
+    }
+}
+
+/// Score both kernels for `layer` on `cfg` and pick the cheaper one.
+/// Pure arithmetic over the schedule — same inputs, same choice,
+/// every time.
+pub fn choose(cfg: &AccelConfig, layer: &LayerSpec, sched: &Schedule) -> KernelSelection {
+    let scatter_cycles = step_cycles(cfg, layer, sched, KernelChoice::Scatter);
+    let gather_cycles = step_cycles(cfg, layer, sched, KernelChoice::Gather);
+    KernelSelection {
+        choice: if gather_cycles < scatter_cycles {
+            KernelChoice::Gather
+        } else {
+            KernelChoice::Scatter
+        },
+        scatter_cycles,
+        gather_cycles,
+    }
+}
+
+/// [`choose`] from the layer alone, deriving the schedule — the entry
+/// point for host paths (the coordinator's golden forward, stream
+/// sessions) that have a config but no compiled plan.
+pub fn choose_for_layer(cfg: &AccelConfig, layer: &LayerSpec) -> KernelSelection {
+    choose(cfg, layer, &Schedule::new(cfg, layer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    #[test]
+    fn gather_compute_never_exceeds_scatter_compute() {
+        // same blocking walk, minus the stall, minus border taps
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            for layer in &net.layers {
+                let sched = Schedule::new(&cfg, layer);
+                let g = compute_cycles(&cfg, layer, &sched, KernelChoice::Gather);
+                let s = compute_cycles(&cfg, layer, &sched, KernelChoice::Scatter);
+                assert!(g <= s, "{}: gather {g} > scatter {s}", layer.name);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_compute_dominates_its_mac_floor() {
+        // the invariant roofline pruning rests on:
+        // cycles * PEs >= batch * gather_macs
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            for layer in &net.layers {
+                let sched = Schedule::new(&cfg, layer);
+                let g = compute_cycles(&cfg, layer, &sched, KernelChoice::Gather);
+                let floor = (cfg.batch as u64 * layer.gather_macs())
+                    .div_ceil(cfg.total_pes() as u64);
+                assert!(g >= floor, "{}: {g} < floor {floor}", layer.name);
+            }
+        }
+    }
+
+    #[test]
+    fn choice_is_deterministic_and_chosen_is_min() {
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            for layer in &net.layers {
+                let sched = Schedule::new(&cfg, layer);
+                let a = choose(&cfg, layer, &sched);
+                let b = choose(&cfg, layer, &sched);
+                assert_eq!(a, b, "{}", layer.name);
+                for k in KernelChoice::ALL {
+                    assert!(
+                        a.chosen_cycles() <= a.cycles(k),
+                        "{}: chose {} but {} is cheaper",
+                        layer.name,
+                        a.choice,
+                        k
+                    );
+                }
+                assert!(!a.reason().is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn stride2_3d_layers_prefer_gather() {
+        // K=3 > S=2 in 3D: scatter pays the K^2(K-S)=9-cycle overlap
+        // stall per activation; gather pays none. The model must see
+        // it on every 3D zoo layer.
+        let net = zoo::gan3d();
+        let cfg = AccelConfig::paper_for(net.dims);
+        for layer in &net.layers {
+            let sel = choose_for_layer(&cfg, layer);
+            assert_eq!(sel.choice, KernelChoice::Gather, "{}", layer.name);
+            assert!(sel.gather_cycles < sel.scatter_cycles, "{}", layer.name);
+        }
+    }
+
+    #[test]
+    fn display_and_default() {
+        assert_eq!(KernelChoice::Scatter.to_string(), "scatter");
+        assert_eq!(KernelChoice::Gather.to_string(), "gather");
+        assert_eq!(KernelChoice::default(), KernelChoice::Scatter);
+    }
+}

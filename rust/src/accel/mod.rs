@@ -24,6 +24,7 @@ pub mod config;
 pub mod dse;
 pub mod fifo;
 pub mod functional;
+pub mod kernel;
 pub mod mapping;
 pub mod memory;
 pub mod mesh;
@@ -36,6 +37,7 @@ pub mod schedule;
 pub mod timing;
 
 pub use config::AccelConfig;
+pub use kernel::{KernelChoice, KernelSelection};
 pub use mapping::Mapping;
 pub use metrics::{BoundBy, LayerMetrics, NetworkMetrics};
 pub use schedule::Schedule;

@@ -322,19 +322,27 @@ const FORWARD_MACS_PER_THREAD: u64 = 2_000_000;
 
 /// Golden f32 forward pass through every deconv layer of the network —
 /// the serving hot path. One dimension-uniform code path (a 2D network
-/// runs as the depth-1 fold, §IV-C), with each layer's IOM scatter
-/// sharded over output channels across scoped threads. The thread
-/// count scales with the layer's useful work (capped at the machine
-/// parallelism) so tiny layers pay no spawn overhead and concurrent
-/// workers do not oversubscribe the host. Threading is deterministic:
-/// results are bit-identical for any thread count.
+/// runs as the depth-1 fold, §IV-C). Each layer runs the kernel the
+/// per-layer model picks ([`crate::accel::kernel::choose_for_layer`]):
+/// the IOM scatter sharded over output channels, or the zero-skip
+/// gather sharded over output rows (which keeps 1- and 3-channel GAN
+/// heads parallel). The thread count scales with the layer's useful
+/// work (capped at the machine parallelism) so tiny layers pay no
+/// spawn overhead and concurrent workers do not oversubscribe the
+/// host. Both kernels and all thread counts are bit-identical by the
+/// accumulation-order contract in [`crate::func::uniform`].
 pub fn forward_uniform(net: &Network, weights: &[WeightsOIDHW<f32>], input: &[f32]) -> Vec<f32> {
     forward_uniform_obs(net, weights, input, &crate::obs::Obs::off())
 }
 
 /// [`forward_uniform`] with observability: each layer's kernel
-/// invocation runs under a scoped span (track `kernel`) carrying its
-/// useful MACs and the structural-zero ratio of the equivalent
+/// invocation runs under a scoped span (track `kernel`) carrying the
+/// kernel chosen for the layer shape
+/// ([`crate::accel::kernel::choose_for_layer`] under the dims-matched
+/// paper configuration — scatter, or the zero-skip gather), the MACs
+/// that kernel *actually executes* (`actual_macs`: gather skips the
+/// cropped border's taps, so this is below `useful_macs` when gather
+/// wins), and the structural-zero ratio of the equivalent
 /// zero-inserted map ([`crate::dcnn::LayerSpec::inserted_sparsity`],
 /// the analytic form the `dcnn::sparsity` battery pins down). The
 /// thread count is host-dependent, so it is only recorded under the
@@ -356,14 +364,22 @@ pub fn forward_uniform_obs(
         .map(|n| n.get())
         .unwrap_or(4);
     let ktrack = obs.track("kernel");
+    let kcfg = AccelConfig::paper_for(net.dims);
     let mut cur = Volume::from_vec(l0.in_c, l0.in_d, l0.in_h, l0.in_w, input.to_vec());
     for (layer, w) in net.layers.iter().zip(weights) {
         let work = layer.op_counts().useful_macs;
+        let choice = crate::accel::kernel::choose_for_layer(&kcfg, layer).choice;
+        let actual = match choice {
+            crate::accel::KernelChoice::Scatter => work,
+            crate::accel::KernelChoice::Gather => layer.gather_macs(),
+        };
         let threads = ((work / FORWARD_MACS_PER_THREAD) as usize).clamp(1, max_threads);
         let mut span = obs.scope(ktrack, "kernel", &layer.name);
         if obs.is_enabled() {
             let mut args = JsonObj::new()
+                .str("kernel", &choice.to_string())
                 .int("useful_macs", work)
+                .int("actual_macs", actual)
                 .num("structural_zero_ratio", layer.inserted_sparsity());
             if obs.clock() == Some(Clock::Wall) {
                 args = args.int("threads", threads as u64);
@@ -371,9 +387,24 @@ pub fn forward_uniform_obs(
             span.set_args(args);
             obs.count("kernel.invocations", 1);
             obs.count("kernel.useful_macs", work);
+            obs.count("kernel.actual_macs", actual);
         }
-        let full = uniform::deconv_iom_threaded(&cur, w, layer.s, threads);
-        cur = uniform::crop(&full, layer.out_d(), layer.out_h(), layer.out_w());
+        cur = match choice {
+            crate::accel::KernelChoice::Scatter => {
+                let full = uniform::deconv_iom_threaded(&cur, w, layer.s, threads);
+                uniform::crop(&full, layer.out_d(), layer.out_h(), layer.out_w())
+            }
+            crate::accel::KernelChoice::Gather => uniform::deconv_gather_window_threaded(
+                &cur,
+                w,
+                layer.s,
+                0,
+                layer.out_d(),
+                layer.out_h(),
+                layer.out_w(),
+                threads,
+            ),
+        };
         drop(span);
     }
     cur.into_vec()

@@ -246,6 +246,22 @@ impl LayerSpec {
         }
     }
 
+    /// MACs the zero-skip **gather** kernel performs producing the
+    /// *cropped* output: per axis, the taps of each kept output
+    /// coordinate's contributor window `[⌈(z−K+1)/S⌉, ⌊z/S⌋]` are
+    /// summed, and the per-axis sums multiply (windows are
+    /// independent). Always `≤ useful_macs` — summed over the *full*
+    /// Eq.-(1) extent each input contributes exactly `K` taps per
+    /// axis, so dropping the `K − S` cropped border drops real taps
+    /// whenever `K > S`. This is the "actual MACs" number the obs
+    /// kernel spans and the DSE kernel-choice model report.
+    pub fn gather_macs(&self) -> u64 {
+        let d_taps = axis_gather_taps(self.in_d, self.k_d(), self.s, self.out_d());
+        let h_taps = axis_gather_taps(self.in_h, self.k, self.s, self.out_h());
+        let w_taps = axis_gather_taps(self.in_w, self.k, self.s, self.out_w());
+        self.in_c as u64 * self.out_c as u64 * d_taps * h_taps * w_taps
+    }
+
     /// Sparsity of the zero-inserted input map: fraction of zeros after
     /// inserting `S − 1` zeros between activations along every spatial
     /// axis (the quantity plotted in Fig. 1).
@@ -293,6 +309,19 @@ impl LayerSpec {
     pub fn arithmetic_intensity(&self, bytes_per_elem: usize) -> f64 {
         self.op_counts().useful_macs as f64 / self.dram_traffic_bytes(bytes_per_elem) as f64
     }
+}
+
+/// Contributor-window taps summed over output coordinates
+/// `[0, out_extent)` along one axis of input extent `i`:
+/// `Σ_z (⌊z/s⌋ − ⌈(z−k+1)/s⌉ + 1)` clamped to `[0, i)` per term.
+fn axis_gather_taps(i: usize, k: usize, s: usize, out_extent: usize) -> u64 {
+    (0..out_extent)
+        .map(|z| {
+            let lo = (z + 1).saturating_sub(k).div_ceil(s);
+            let hi = (z / s + 1).min(i);
+            hi.saturating_sub(lo) as u64
+        })
+        .sum()
 }
 
 impl fmt::Display for LayerSpec {
@@ -383,6 +412,33 @@ mod tests {
         let oc = l.op_counts();
         let ratio = oc.dense_macs as f64 / oc.useful_macs as f64;
         assert!((ratio - 8.0).abs() < 0.4, "ratio={ratio}");
+    }
+
+    #[test]
+    fn gather_macs_hand_count_2d() {
+        let l = l2d(); // 4ch 4x4 -> 8, K=3 S=2, out 8x8
+        // per axis over the cropped extent: taps(z) for z=0..8 are
+        // 1,1,2,1,2,1,2,1 = 11 (the full extent would add z=8 -> 12 = I*K)
+        assert_eq!(l.gather_macs(), 4 * 8 * 11 * 11);
+        assert!(l.gather_macs() < l.op_counts().useful_macs);
+    }
+
+    #[test]
+    fn gather_macs_bounded_by_useful_and_tight_when_k_equals_s() {
+        for l in [
+            l2d(),
+            l3d(),
+            LayerSpec::new_2d("big", 8, 32, 32, 3, 3, 2),
+            LayerSpec::new_3d("big3", 4, 8, 8, 8, 2, 3, 2),
+        ] {
+            assert!(l.gather_macs() <= l.op_counts().useful_macs, "{}", l.name);
+            assert!(l.gather_macs() > 0, "{}", l.name);
+        }
+        // K == S: nothing is cropped, so every useful tap survives
+        let l = LayerSpec::new_2d("ks", 2, 6, 6, 4, 2, 2);
+        assert_eq!(l.gather_macs(), l.op_counts().useful_macs);
+        let l = LayerSpec::new_3d("ks3", 2, 4, 4, 4, 4, 2, 2);
+        assert_eq!(l.gather_macs(), l.op_counts().useful_macs);
     }
 
     #[test]

@@ -12,6 +12,14 @@
 //!   useful products — exactly what each PE of the accelerator
 //!   computes (Fig. 5).
 //!
+//! The IOM sum can also be evaluated **output-stationary** — the
+//! zero-skip *gather* family in [`uniform`] (`deconv_gather*`), which
+//! reads each output element's contributor window directly (the TDC
+//! formulation of arXiv:1705.02583), writes every output exactly
+//! once, and is bit-exact against the scatter kernels by a documented
+//! accumulation-order contract. The compiler picks scatter vs gather
+//! per layer (see `accel::kernel`).
+//!
 //! `iom == oom` on every shape is the correctness spine of the repo:
 //! it is asserted here in unit tests, by the property suite, by the
 //! Python kernel tests (Pallas IOM kernel vs `ref.py` OOM oracle), and
@@ -42,6 +50,8 @@ pub use deconv::{
 };
 pub use deconv_q::{deconv2d_iom_q, deconv3d_iom_q};
 pub use uniform::{
-    deconv_iom, deconv_iom_q, deconv_iom_q_threaded, deconv_iom_threaded, deconv_oom,
-    deconv_oom_threaded,
+    deconv_gather, deconv_gather_q, deconv_gather_q_threaded, deconv_gather_threaded,
+    deconv_gather_window, deconv_gather_window_q, deconv_gather_window_q_threaded,
+    deconv_gather_window_threaded, deconv_iom, deconv_iom_q, deconv_iom_q_threaded,
+    deconv_iom_threaded, deconv_oom, deconv_oom_threaded,
 };

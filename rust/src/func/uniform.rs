@@ -27,6 +27,16 @@
 //!   is written by exactly one thread in the same order as the
 //!   single-threaded kernel, so threaded results are deterministic and
 //!   bit-identical to the single-threaded ones;
+//! * the **gather** family ([`deconv_gather_window`] and friends)
+//!   computes each output element directly from its contributor window
+//!   `[⌈(z−K+1)/S⌉, ⌊z/S⌋]` per axis — never materializing the
+//!   zero-inserted map *or* the full Eq.-(1) extent. It writes each
+//!   output element exactly once, crops for free (it simply never
+//!   computes the discarded border), and its threaded variants shard
+//!   *output rows* instead of output channels, so layers with few
+//!   output channels (the last layer of every GAN generator) still
+//!   parallelize. Bit-exact against the scatter path by the
+//!   accumulation-order contract documented at the gather section;
 //! * the OOM path materializes the zero-inserted, padded map **once**
 //!   and threads the dense correlation over output channels (the old
 //!   per-dimensionality baselines re-inserted zeros in every thread).
@@ -276,6 +286,359 @@ pub fn deconv_iom_q_threaded(
         }
     });
     out
+}
+
+// ---------------------------------------------------------------------
+// Gather (zero-skip, output-stationary) deconvolution.
+//
+// out[o][z][y][x] = Σ_i Σ_{id∈W(z)} Σ_{ih∈W(y)} Σ_{iw∈W(x)}
+//                     in[i][id][ih][iw] · w[o][i][z−id·S][y−ih·S][x−iw·S]
+//
+// with the per-axis contributor window over the full Eq.-(1)
+// coordinates
+//
+//     W(z) = [⌈(z − K + 1)/S⌉, ⌊z/S⌋] ∩ [0, I)
+//
+// (empty for coordinates no input reaches, e.g. inter-stride gaps
+// when K < S). Neither the zero-inserted map nor the full Eq.-(1)
+// extent is ever built: the kernel computes exactly the requested
+// output window, so cropping is free and each output element is
+// written exactly once.
+//
+// Accumulation-order contract (the bit-exactness argument
+// `tests/diff_kernels.rs` pins): for every output element the terms
+// are added ONE AT A TIME into a 0.0-initialized accumulator, in
+// exactly the order the scatter kernel above visits them — input
+// channel `i` ascending, then `id`, `ih`, `iw` ascending — with the
+// identical `a == 0.0` zero-skip. No local partial sums are formed
+// (f32 addition is non-associative; reassociating would drift), so
+// gather bits equal `crop_window(deconv_iom(..), ..)` bits, f32 and
+// Q8.8, threaded and single.
+// ---------------------------------------------------------------------
+
+/// Contributor window `[lo, hi)` of output coordinate `z` along one
+/// axis: the input indices `i` with `0 ≤ z − i·S ≤ K − 1`, clamped to
+/// `[0, in_extent)`. Empty (`lo ≥ hi`) when nothing reaches `z`.
+#[inline(always)]
+fn contrib_window(z: usize, k: usize, s: usize, in_extent: usize) -> (usize, usize) {
+    let lo = (z + 1).saturating_sub(k).div_ceil(s);
+    let hi = (z / s + 1).min(in_extent);
+    (lo, hi)
+}
+
+// The K-wide row gather: out_row[x] += Σ_{iw∈W(x)} in_row[iw]·k[x−iw·S],
+// terms added in iw-ascending order. The window bounds advance
+// monotonically with x, so they are maintained incrementally instead
+// of re-derived by division per element.
+
+#[inline(always)]
+fn gather_row_k<const K: usize>(out_row: &mut [f32], in_row: &[f32], krow: &[f32], s: usize) {
+    let kern: &[f32; K] = krow.try_into().expect("kernel row width");
+    let (mut lo, mut hi) = (0usize, 0usize);
+    for (x, dst) in out_row.iter_mut().enumerate() {
+        while lo * s + K <= x {
+            lo += 1; // iw left the window: iw·S + K − 1 < x
+        }
+        while hi < in_row.len() && hi * s <= x {
+            hi += 1; // iw entered the window: iw·S ≤ x
+        }
+        for (j, &a) in in_row[lo..hi].iter().enumerate() {
+            if a == 0.0 {
+                continue; // the scatter path's zero-skip, mirrored
+            }
+            *dst += a * kern[x - (lo + j) * s];
+        }
+    }
+}
+
+#[inline]
+fn gather_row(out_row: &mut [f32], in_row: &[f32], krow: &[f32], s: usize) {
+    match krow.len() {
+        1 => gather_row_k::<1>(out_row, in_row, krow, s),
+        2 => gather_row_k::<2>(out_row, in_row, krow, s),
+        3 => gather_row_k::<3>(out_row, in_row, krow, s),
+        4 => gather_row_k::<4>(out_row, in_row, krow, s),
+        5 => gather_row_k::<5>(out_row, in_row, krow, s),
+        k => {
+            let (mut lo, mut hi) = (0usize, 0usize);
+            for (x, dst) in out_row.iter_mut().enumerate() {
+                while lo * s + k <= x {
+                    lo += 1;
+                }
+                while hi < in_row.len() && hi * s <= x {
+                    hi += 1;
+                }
+                for (j, &a) in in_row[lo..hi].iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    *dst += a * krow[x - (lo + j) * s];
+                }
+            }
+        }
+    }
+}
+
+/// Compute flattened output rows `[r_lo, r_hi)` of the gather window
+/// into `out`, a buffer holding exactly those rows. A row index `r`
+/// decodes as `(o, z_w, y) = (r / (od·oh), r % (od·oh) / oh, r % oh)`
+/// with `z = d_lo + z_w` on the full Eq.-(1) depth axis.
+#[allow(clippy::too_many_arguments)]
+fn deconv_gather_rows(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+    r_lo: usize,
+    r_hi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r_hi - r_lo) * ow);
+    for r in r_lo..r_hi {
+        let o = r / (od * oh);
+        let z = d_lo + r / oh % od;
+        let y = r % oh;
+        let (id_lo, id_hi) = contrib_window(z, w.kd, s, input.d);
+        let (ih_lo, ih_hi) = contrib_window(y, w.kh, s, input.h);
+        let base = (r - r_lo) * ow;
+        let out_row = &mut out[base..base + ow];
+        for i in 0..input.c {
+            let kern = w.kernel(o, i);
+            for id in id_lo..id_hi {
+                let dz = z - id * s;
+                for ih in ih_lo..ih_hi {
+                    let dy = y - ih * s;
+                    let kbase = (dz * w.kh + dy) * w.kw;
+                    let krow = &kern[kbase..kbase + w.kw];
+                    gather_row(out_row, input.row(i, id, ih), krow, s);
+                }
+            }
+        }
+    }
+}
+
+/// Zero-skip gather deconvolution of an output *window*: depth frames
+/// `[d_lo, d_lo + od)` of the full Eq.-(1) extent, heights `[0, oh)`
+/// and widths `[0, ow)` (crops are low-anchored, §IV-B). Bit-exact
+/// against `crop_window(&deconv_iom(input, w, s), d_lo, od, oh, ow)`
+/// by the accumulation-order contract above — without ever building
+/// the full extent.
+pub fn deconv_gather_window(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+) -> Volume<f32> {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    assert!(d_lo + od <= fd && oh <= fh && ow <= fw, "window exceeds Eq.-(1) extent");
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    deconv_gather_rows(input, w, s, d_lo, od, oh, ow, 0, w.o * od * oh, out.data_mut());
+    out
+}
+
+/// Gather deconvolution over the full Eq. (1) extent — the drop-in
+/// equal of [`deconv_iom`], computed output-stationary.
+pub fn deconv_gather(input: &Volume<f32>, w: &WeightsOIDHW<f32>, s: usize) -> Volume<f32> {
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    deconv_gather_window(input, w, s, 0, fd, fh, fw)
+}
+
+/// [`deconv_gather_window`] with *output rows* `(o, z, y)` sharded
+/// across `threads` scoped workers. Rows shard far finer than the
+/// scatter kernels' output channels (a 3-channel or 1-channel GAN
+/// head still fills every core), and each row is produced by exactly
+/// one thread in the single-threaded accumulation order, so results
+/// stay bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn deconv_gather_window_threaded(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+    threads: usize,
+) -> Volume<f32> {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    assert!(d_lo + od <= fd && oh <= fh && ow <= fw, "window exceeds Eq.-(1) extent");
+    let rows = w.o * od * oh;
+    let t = threads.clamp(1, rows.max(1));
+    if t <= 1 {
+        return deconv_gather_window(input, w, s, d_lo, od, oh, ow);
+    }
+    let chunk_rows = rows.div_ceil(t);
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    std::thread::scope(|scope| {
+        for (ti, buf) in out.data_mut().chunks_mut(chunk_rows * ow).enumerate() {
+            let r_lo = ti * chunk_rows;
+            let r_hi = (r_lo + chunk_rows).min(rows);
+            scope.spawn(move || {
+                deconv_gather_rows(input, w, s, d_lo, od, oh, ow, r_lo, r_hi, buf)
+            });
+        }
+    });
+    out
+}
+
+/// [`deconv_gather`] threaded over output rows (bit-identical to the
+/// single-threaded kernel).
+pub fn deconv_gather_threaded(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    threads: usize,
+) -> Volume<f32> {
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    deconv_gather_window_threaded(input, w, s, 0, fd, fh, fw, threads)
+}
+
+// Q8.8 gather: one Acc48 per output element, every contribution
+// accumulated wide, a single rounding at write-back — identical to
+// the scatter Q8.8 discipline (integer accumulation is
+// order-insensitive, but the loop order matches anyway).
+
+fn gather_row_q(acc_row: &mut [Acc48], in_row: &[Q88], krow: &[Q88], s: usize) {
+    let k = krow.len();
+    let (mut lo, mut hi) = (0usize, 0usize);
+    for (x, d) in acc_row.iter_mut().enumerate() {
+        while lo * s + k <= x {
+            lo += 1;
+        }
+        while hi < in_row.len() && hi * s <= x {
+            hi += 1;
+        }
+        for (j, &a) in in_row[lo..hi].iter().enumerate() {
+            if a.is_zero() {
+                continue;
+            }
+            d.mac(a, krow[x - (lo + j) * s]);
+        }
+    }
+}
+
+/// Q8.8 twin of [`deconv_gather_rows`], accumulating into `acc`.
+#[allow(clippy::too_many_arguments)]
+fn deconv_gather_rows_q(
+    input: &Volume<Q88>,
+    w: &WeightsOIDHW<Q88>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+    r_lo: usize,
+    r_hi: usize,
+    acc: &mut [Acc48],
+) {
+    debug_assert_eq!(acc.len(), (r_hi - r_lo) * ow);
+    for r in r_lo..r_hi {
+        let o = r / (od * oh);
+        let z = d_lo + r / oh % od;
+        let y = r % oh;
+        let (id_lo, id_hi) = contrib_window(z, w.kd, s, input.d);
+        let (ih_lo, ih_hi) = contrib_window(y, w.kh, s, input.h);
+        let base = (r - r_lo) * ow;
+        let acc_row = &mut acc[base..base + ow];
+        for i in 0..input.c {
+            let kern = w.kernel(o, i);
+            for id in id_lo..id_hi {
+                let dz = z - id * s;
+                for ih in ih_lo..ih_hi {
+                    let dy = y - ih * s;
+                    let kbase = (dz * w.kh + dy) * w.kw;
+                    let krow = &kern[kbase..kbase + w.kw];
+                    gather_row_q(acc_row, input.row(i, id, ih), krow, s);
+                }
+            }
+        }
+    }
+}
+
+/// Q8.8 zero-skip gather deconvolution of an output window — the
+/// fixed-point twin of [`deconv_gather_window`], bit-exact against
+/// `crop_window(&deconv_iom_q(..), ..)`.
+pub fn deconv_gather_window_q(
+    input: &Volume<Q88>,
+    w: &WeightsOIDHW<Q88>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+) -> Volume<Q88> {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    assert!(d_lo + od <= fd && oh <= fh && ow <= fw, "window exceeds Eq.-(1) extent");
+    let mut acc = vec![Acc48::ZERO; w.o * od * oh * ow];
+    deconv_gather_rows_q(input, w, s, d_lo, od, oh, ow, 0, w.o * od * oh, &mut acc);
+    Volume::from_vec(w.o, od, oh, ow, acc.into_iter().map(|a| a.to_q88()).collect())
+}
+
+/// Q8.8 gather over the full Eq. (1) extent — the drop-in equal of
+/// [`deconv_iom_q`].
+pub fn deconv_gather_q(input: &Volume<Q88>, w: &WeightsOIDHW<Q88>, s: usize) -> Volume<Q88> {
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    deconv_gather_window_q(input, w, s, 0, fd, fh, fw)
+}
+
+/// [`deconv_gather_window_q`] with output rows sharded across
+/// `threads` scoped workers (bit-identical: one thread per row, one
+/// rounding per element).
+#[allow(clippy::too_many_arguments)]
+pub fn deconv_gather_window_q_threaded(
+    input: &Volume<Q88>,
+    w: &WeightsOIDHW<Q88>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+    threads: usize,
+) -> Volume<Q88> {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    assert!(d_lo + od <= fd && oh <= fh && ow <= fw, "window exceeds Eq.-(1) extent");
+    let rows = w.o * od * oh;
+    let t = threads.clamp(1, rows.max(1));
+    if t <= 1 {
+        return deconv_gather_window_q(input, w, s, d_lo, od, oh, ow);
+    }
+    let chunk_rows = rows.div_ceil(t);
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    std::thread::scope(|scope| {
+        for (ti, buf) in out.data_mut().chunks_mut(chunk_rows * ow).enumerate() {
+            let r_lo = ti * chunk_rows;
+            let r_hi = (r_lo + chunk_rows).min(rows);
+            scope.spawn(move || {
+                let mut acc = vec![Acc48::ZERO; buf.len()];
+                deconv_gather_rows_q(input, w, s, d_lo, od, oh, ow, r_lo, r_hi, &mut acc);
+                for (dst, a) in buf.iter_mut().zip(acc) {
+                    *dst = a.to_q88();
+                }
+            });
+        }
+    });
+    out
+}
+
+/// [`deconv_gather_q`] threaded over output rows.
+pub fn deconv_gather_q_threaded(
+    input: &Volume<Q88>,
+    w: &WeightsOIDHW<Q88>,
+    s: usize,
+    threads: usize,
+) -> Volume<Q88> {
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    deconv_gather_window_q_threaded(input, w, s, 0, fd, fh, fw, threads)
 }
 
 // ---------------------------------------------------------------------
@@ -623,5 +986,108 @@ mod tests {
         let (input, wt) = rand_case(3, (1, 1), (2, 3, 4), (3, 3, 3));
         let out = deconv_iom(&input, &wt, 2);
         assert_eq!((out.d, out.h, out.w), (5, 7, 9));
+    }
+
+    #[test]
+    fn gather_is_bit_exact_vs_scatter_across_kernel_widths() {
+        // every monomorphized width plus the fallback, including
+        // K < S shapes where contributor windows go empty
+        for k in 1..=7usize {
+            for s in 1..=3usize {
+                let (input, wt) = rand_case(100 + k as u64, (2, 3), (1, 3, 4), (1, k, k));
+                let a = deconv_iom(&input, &wt, s);
+                let b = deconv_gather(&input, &wt, s);
+                assert_eq!((a.d, a.h, a.w), (b.d, b.h, b.w));
+                assert_eq!(a.data(), b.data(), "k={k} s={s}: gather bits != scatter bits");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_is_bit_exact_vs_scatter_3d() {
+        let (input, wt) = rand_case(17, (2, 2), (3, 3, 2), (3, 3, 3));
+        for s in [1, 2] {
+            let a = deconv_iom(&input, &wt, s);
+            let b = deconv_gather(&input, &wt, s);
+            assert_eq!(a.data(), b.data(), "s={s}");
+        }
+    }
+
+    #[test]
+    fn gather_window_equals_cropped_scatter() {
+        let (input, wt) = rand_case(23, (2, 3), (4, 3, 3), (3, 3, 3));
+        let s = 2;
+        let full = deconv_iom(&input, &wt, s);
+        // every depth offset and a strict h/w crop
+        for d_lo in 0..full.d {
+            for od in 1..=(full.d - d_lo) {
+                let (oh, ow) = (full.h - 2, full.w - 1);
+                let want = crop_window(&full, d_lo, od, oh, ow);
+                let got = deconv_gather_window(&input, &wt, s, d_lo, od, oh, ow);
+                assert_eq!(want.data(), got.data(), "d_lo={d_lo} od={od}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_threaded_is_bit_identical() {
+        let (input, wt) = rand_case(29, (3, 5), (2, 4, 3), (3, 3, 3));
+        let single = deconv_gather(&input, &wt, 2);
+        for t in [1, 2, 3, 8, 64] {
+            let multi = deconv_gather_threaded(&input, &wt, 2, t);
+            assert_eq!(single.data(), multi.data(), "t={t}");
+        }
+        // a 1-output-channel head still shards across rows
+        let (input, wt) = rand_case(31, (4, 1), (2, 4, 4), (3, 3, 3));
+        let single = deconv_gather_window(&input, &wt, 2, 0, 4, 8, 8);
+        for t in [2, 5] {
+            let multi = deconv_gather_window_threaded(&input, &wt, 2, 0, 4, 8, 8, t);
+            assert_eq!(single.data(), multi.data(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn gather_q_matches_scatter_q_and_threads() {
+        let (input, wt) = rand_case(37, (2, 5), (2, 3, 3), (3, 3, 3));
+        let qi = Volume::from_vec(
+            input.c,
+            input.d,
+            input.h,
+            input.w,
+            input.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+        );
+        let qw = WeightsOIDHW::from_vec(
+            wt.o,
+            wt.i,
+            wt.kd,
+            wt.kh,
+            wt.kw,
+            wt.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+        );
+        let scatter = deconv_iom_q(&qi, &qw, 2);
+        let gather = deconv_gather_q(&qi, &qw, 2);
+        assert_eq!(scatter.data(), gather.data());
+        let win = deconv_gather_window_q(&qi, &qw, 2, 1, 2, 5, 5);
+        let want = crop_window(&scatter, 1, 2, 5, 5);
+        assert_eq!(win.data(), want.data());
+        for t in [2, 3, 16] {
+            let multi = deconv_gather_q_threaded(&qi, &qw, 2, t);
+            assert_eq!(scatter.data(), multi.data(), "t={t}");
+            let multi_w = deconv_gather_window_q_threaded(&qi, &qw, 2, 1, 2, 5, 5, t);
+            assert_eq!(win.data(), multi_w.data(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn contrib_window_matches_the_paper_formula() {
+        // K=3, S=2, I=4: full extent 9. Hand-enumerated windows.
+        let want: [(usize, usize); 9] =
+            [(0, 1), (0, 1), (0, 2), (1, 2), (1, 3), (2, 3), (2, 4), (3, 4), (3, 4)];
+        for (z, &w) in want.iter().enumerate() {
+            assert_eq!(contrib_window(z, 3, 2, 4), w, "z={z}");
+        }
+        // K < S leaves gaps: S=3, K=1 reaches only multiples of 3
+        assert_eq!(contrib_window(1, 1, 3, 4), (1, 1), "empty window");
+        assert_eq!(contrib_window(3, 1, 3, 4), (1, 2));
     }
 }

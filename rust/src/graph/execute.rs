@@ -15,6 +15,7 @@
 //! the coordinator's golden forward produces the same values as an
 //! executed graph.
 
+use crate::accel::KernelChoice;
 use crate::func::uniform;
 use crate::tensor::{Volume, WeightsOIDHW};
 
@@ -54,6 +55,23 @@ pub fn execute_f32(
     input: &Volume<f32>,
     threads: usize,
 ) -> Result<Volume<f32>, String> {
+    execute_f32_kernels(g, weights, input, threads, &[])
+}
+
+/// [`execute_f32`] with an explicit per-deconv kernel choice, in node
+/// order (as recorded by a compiled plan's steps). Missing entries
+/// default to scatter, so `&[]` is exactly [`execute_f32`]. Both
+/// kernels are bit-exact by the accumulation-order contract
+/// ([`crate::func::uniform`]), so this only changes *how* the same
+/// bits are produced — which is precisely what the kernel differential
+/// batteries assert.
+pub fn execute_f32_kernels(
+    g: &NetworkGraph,
+    weights: &[WeightsOIDHW<f32>],
+    input: &Volume<f32>,
+    threads: usize,
+    kernels: &[KernelChoice],
+) -> Result<Volume<f32>, String> {
     let mut values: Vec<Option<Volume<f32>>> = vec![None; g.nodes.len()];
     let mut wi = 0usize;
     let mut last = None;
@@ -77,14 +95,29 @@ pub fn execute_f32(
                         weights.len()
                     )
                 })?;
+                let kernel = kernels.get(wi).copied().unwrap_or_default();
                 wi += 1;
                 if (w.o, w.i, w.kd, w.kh, w.kw)
                     != (spec.out_c, spec.in_c, spec.k_d(), spec.k, spec.k)
                 {
                     return Err(format!("weights for '{}' do not match its layer spec", n.name));
                 }
-                let full = uniform::deconv_iom_threaded(&src, w, spec.s, threads);
-                uniform::crop(&full, spec.out_d(), spec.out_h(), spec.out_w())
+                match kernel {
+                    KernelChoice::Scatter => {
+                        let full = uniform::deconv_iom_threaded(&src, w, spec.s, threads);
+                        uniform::crop(&full, spec.out_d(), spec.out_h(), spec.out_w())
+                    }
+                    KernelChoice::Gather => uniform::deconv_gather_window_threaded(
+                        &src,
+                        w,
+                        spec.s,
+                        0,
+                        spec.out_d(),
+                        spec.out_h(),
+                        spec.out_w(),
+                        threads,
+                    ),
+                }
             }
             OpKind::Activation { act } => {
                 let mut v = take_value(&mut values, n.inputs[0], &n.name)?;
@@ -173,6 +206,24 @@ mod tests {
         let b = execute_f32(&fused, &weights, &input, 2).unwrap();
         assert_eq!(a.data(), b.data());
         assert!(a.data().iter().all(|&x| x >= 0.0), "relu clamps negatives");
+    }
+
+    #[test]
+    fn gather_kernels_execute_bit_identically() {
+        for net in [zoo::tiny_2d(), zoo::tiny_3d()] {
+            let weights = synth_weights(&net);
+            let input = synth_input(&net);
+            let g = passes::lower(&NetworkGraph::from_network(&net)).unwrap();
+            let scatter = execute_f32(&g, &weights, &input, 2).unwrap();
+            let all_gather = vec![KernelChoice::Gather; net.layers.len()];
+            let gather = execute_f32_kernels(&g, &weights, &input, 2, &all_gather).unwrap();
+            assert_eq!(scatter.data(), gather.data(), "{}", net.name);
+            // mixed per-layer choices are equally exact
+            let mut mixed = all_gather;
+            mixed[0] = KernelChoice::Scatter;
+            let m = execute_f32_kernels(&g, &weights, &input, 3, &mixed).unwrap();
+            assert_eq!(scatter.data(), m.data(), "{}", net.name);
+        }
     }
 
     #[test]

@@ -50,9 +50,9 @@ pub mod plan;
 pub mod simulate;
 pub mod stream_shape;
 
-pub use execute::execute_f32;
+pub use execute::{execute_f32, execute_f32_kernels};
 pub use ir::{Act, NetworkGraph, NodeId, NodeSpec, OpKind, TensorShape};
-pub use plan::{compile, EdgePlace, NetworkPlan, StepPlan};
+pub use plan::{compile, compile_forced, EdgePlace, NetworkPlan, StepPlan};
 pub use simulate::{simulate_plan, NetworkRunMetrics};
 pub use stream_shape::{stream_shapes, LayerStreamShape};
 
@@ -71,6 +71,18 @@ pub type PlanHandle = std::sync::Arc<NetworkPlan>;
 /// pass pipeline, and compile it onto `cfg`.
 pub fn compile_network(cfg: &AccelConfig, net: &Network) -> Result<NetworkPlan, String> {
     compile_network_obs(cfg, net, &crate::obs::Obs::off())
+}
+
+/// [`compile_network`] with every step pinned to `forced` instead of
+/// the per-layer kernel decision — the comparison baseline used by the
+/// differential batteries and the kernel benches.
+pub fn compile_network_forced(
+    cfg: &AccelConfig,
+    net: &Network,
+    forced: crate::accel::KernelChoice,
+) -> Result<NetworkPlan, String> {
+    let g = passes::lower(&NetworkGraph::from_network(net))?;
+    compile_forced(cfg, &g, forced)
 }
 
 /// [`compile_network`] with observability: the whole compile runs

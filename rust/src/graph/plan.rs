@@ -15,7 +15,7 @@
 //! `udcnn compile` dump) and exports as JSON via [`crate::report`].
 
 use crate::accel::buffers::Residency;
-use crate::accel::{AccelConfig, Schedule};
+use crate::accel::{kernel, AccelConfig, KernelChoice, KernelSelection, Schedule};
 use crate::dcnn::LayerSpec;
 use crate::report::json::JsonObj;
 
@@ -50,6 +50,9 @@ pub struct StepPlan {
     pub layer: LayerSpec,
     /// Blocking schedule on the bound configuration.
     pub schedule: Schedule,
+    /// Per-layer kernel decision (scatter vs gather) with both
+    /// kernels' modeled cycles as machine-readable justification.
+    pub kernel: KernelSelection,
     /// Activations fused into this step's write-back.
     pub fused: Vec<Act>,
     /// Where the step reads its input tensor.
@@ -71,6 +74,11 @@ impl StepPlan {
     pub fn dram_bytes(&self) -> u64 {
         self.weight_bytes + self.input_bytes + self.output_bytes
     }
+
+    /// Compute cycles of this step under its chosen kernel.
+    pub fn compute_cycles(&self, cfg: &AccelConfig) -> u64 {
+        kernel::compute_cycles(cfg, &self.layer, &self.schedule, self.kernel.choice)
+    }
 }
 
 /// A compiled whole-network execution plan.
@@ -90,7 +98,31 @@ pub struct NetworkPlan {
 /// `Input` and `Deconv` nodes may remain, forming a linear chain (the
 /// shape every benchmark decoder has; branching DAGs are rejected with
 /// a clear error rather than silently mis-planned).
+///
+/// Each step also gets a per-layer kernel decision
+/// ([`kernel::choose`]): scatter vs zero-skip gather, scored under the
+/// step's own compute and DDR terms, with both scores recorded on the
+/// step as justification.
 pub fn compile(cfg: &AccelConfig, g: &NetworkGraph) -> Result<NetworkPlan, String> {
+    compile_with(cfg, g, None)
+}
+
+/// [`compile`] with every step pinned to one kernel instead of the
+/// per-layer [`kernel::choose`] decision — the baseline the
+/// scatter-vs-gather differential tests and benches compare against.
+pub fn compile_forced(
+    cfg: &AccelConfig,
+    g: &NetworkGraph,
+    forced: KernelChoice,
+) -> Result<NetworkPlan, String> {
+    compile_with(cfg, g, Some(forced))
+}
+
+fn compile_with(
+    cfg: &AccelConfig,
+    g: &NetworkGraph,
+    forced: Option<KernelChoice>,
+) -> Result<NetworkPlan, String> {
     cfg.validate()?;
     let mut steps: Vec<StepPlan> = Vec::new();
     for n in &g.nodes {
@@ -118,12 +150,17 @@ pub fn compile(cfg: &AccelConfig, g: &NetworkGraph) -> Result<NetworkPlan, Strin
                     ));
                 }
                 let schedule = Schedule::new(cfg, spec);
-                let res = Residency::plan(cfg, spec, &schedule);
+                let mut sel = kernel::choose(cfg, spec, &schedule);
+                if let Some(k) = forced {
+                    sel.choice = k;
+                }
+                let res = Residency::plan_kernel(cfg, spec, &schedule, sel.choice);
                 steps.push(StepPlan {
                     node: n.id,
                     name: n.name.clone(),
                     layer: spec.clone(),
                     schedule,
+                    kernel: sel,
                     fused: n.fused.clone(),
                     input_src: EdgePlace::Ddr,
                     output_dst: EdgePlace::Ddr,
@@ -244,8 +281,9 @@ impl NetworkPlan {
                 s.schedule.h_tiles,
                 s.schedule.w_tiles,
                 s.schedule.total_passes(),
-                s.schedule.compute_cycles(c),
+                s.compute_cycles(c),
             ));
+            out.push_str(&format!("  kernel: {} ({})\n", s.kernel.choice, s.kernel.reason()));
             out.push_str(&format!(
                 "  input: {} ({:.1} KiB) | weights: DDR ({:.1} KiB) | output: {} ({:.1} KiB)\n",
                 s.input_src,
@@ -279,7 +317,11 @@ impl NetworkPlan {
                     .int("d_blocks", s.schedule.d_blocks as u64)
                     .int("h_tiles", s.schedule.h_tiles as u64)
                     .int("w_tiles", s.schedule.w_tiles as u64)
-                    .int("compute_cycles", s.schedule.compute_cycles(&self.cfg))
+                    .int("compute_cycles", s.compute_cycles(&self.cfg))
+                    .str("kernel", &s.kernel.choice.to_string())
+                    .int("kernel_scatter_cycles", s.kernel.scatter_cycles)
+                    .int("kernel_gather_cycles", s.kernel.gather_cycles)
+                    .str("kernel_reason", &s.kernel.reason())
                     .str("input_src", &s.input_src.to_string())
                     .str("output_dst", &s.output_dst.to_string())
                     .int("weight_bytes", s.weight_bytes)
@@ -383,6 +425,41 @@ mod tests {
         let js = p.to_json();
         assert!(js.contains("\"network\": \"3d-gan\""));
         assert!(js.contains("\"steps\""));
+    }
+
+    #[test]
+    fn auto_kernel_choice_never_loses_to_forced_scatter() {
+        for net in zoo::all_benchmarks() {
+            let cfg = AccelConfig::paper_for(net.dims);
+            let g = lower(&NetworkGraph::from_network(&net)).unwrap();
+            let auto = compile(&cfg, &g).unwrap();
+            let scatter = compile_forced(&cfg, &g, KernelChoice::Scatter).unwrap();
+            let auto_cycles = crate::graph::simulate_plan(&auto).total_cycles;
+            let scatter_cycles = crate::graph::simulate_plan(&scatter).total_cycles;
+            assert!(
+                auto_cycles <= scatter_cycles,
+                "{}: auto {auto_cycles} > forced-scatter {scatter_cycles}",
+                net.name
+            );
+            for s in &scatter.steps {
+                assert_eq!(s.kernel.choice, KernelChoice::Scatter);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_choice_is_recorded_in_render_and_json() {
+        let p = plan_for(&zoo::gan3d());
+        assert!(
+            p.steps.iter().any(|s| s.kernel.choice == KernelChoice::Gather),
+            "stride-2 K=3 3D layers should pick gather somewhere"
+        );
+        let text = p.render();
+        assert!(text.contains("kernel: "), "{text}");
+        let js = p.to_json();
+        assert!(js.contains("\"kernel\""), "{js}");
+        assert!(js.contains("kernel_scatter_cycles"), "{js}");
+        assert!(js.contains("kernel_gather_cycles"), "{js}");
     }
 
     #[test]

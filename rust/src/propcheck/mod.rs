@@ -100,6 +100,73 @@ where
     check(Config::default(), prop);
 }
 
+/// ULP distance between two f32 values: how many representable floats
+/// sit between them, inclusive of one endpoint. `+0.0` and `-0.0` are
+/// 0 apart; opposite-sign values count the floats through zero; any
+/// comparison involving exactly one NaN is `u64::MAX`, two NaNs are 0
+/// apart (a reassociated sum that NaNs must NaN in both orders).
+pub fn ulp_distance(a: f32, b: f32) -> u64 {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => return 0,
+        (false, false) => {}
+        _ => return u64::MAX,
+    }
+    // Map the float line onto a monotone integer line: negative
+    // floats mirror below zero, so ordinary subtraction counts the
+    // representable values between any two points.
+    fn key(x: f32) -> i64 {
+        let b = x.to_bits();
+        if b & 0x8000_0000 != 0 {
+            -((b & 0x7fff_ffff) as i64)
+        } else {
+            b as i64
+        }
+    }
+    key(a).abs_diff(key(b))
+}
+
+/// Assert two f32 slices match element-wise within `max_ulps` units in
+/// the last place, with worst-offender reporting: the panic names the
+/// index, both values and the ULP distance of the worst mismatch plus
+/// how many elements exceeded the bound. `max_ulps = 0` is exact
+/// bit-sameness up to `±0.0` and NaN-vs-NaN equivalence — strictly
+/// looser than `assert_eq!` on bits, strictly tighter than any
+/// epsilon. The comparator the (order-insensitive) fast-path kernels
+/// will be judged by; the gather kernels need none of this slack —
+/// they are bit-exact — but the battery uses it to *prove* that claim
+/// with `max_ulps = 0`.
+pub fn assert_ulps_within(got: &[f32], want: &[f32], max_ulps: u64) {
+    assert_eq!(
+        got.len(),
+        want.len(),
+        "length mismatch: got {} vs want {}",
+        got.len(),
+        want.len()
+    );
+    let mut worst: Option<(usize, u64)> = None;
+    let mut offenders = 0usize;
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let d = ulp_distance(g, w);
+        if d > max_ulps {
+            offenders += 1;
+            if worst.map(|(_, wd)| d > wd).unwrap_or(true) {
+                worst = Some((i, d));
+            }
+        }
+    }
+    if let Some((i, d)) = worst {
+        panic!(
+            "{offenders} of {} elements exceed {max_ulps} ULPs; worst at [{i}]: \
+             got {:?} (bits {:#010x}) vs want {:?} (bits {:#010x}), {d} ULPs apart",
+            got.len(),
+            got[i],
+            got[i].to_bits(),
+            want[i],
+            want[i].to_bits(),
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

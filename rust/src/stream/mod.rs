@@ -48,7 +48,7 @@ pub mod tiler;
 
 pub use serve::{serve_streams, StreamJob};
 pub use session::{
-    concat_frames, stream_forward, stream_forward_q, whole_forward_q, whole_volume_peak_elems,
-    StreamChunkOutput, StreamSession, StreamSummary,
+    concat_frames, stream_forward, stream_forward_kernel, stream_forward_q, whole_forward_q,
+    whole_volume_peak_elems, StreamChunkOutput, StreamSession, StreamSummary,
 };
 pub use tiler::{DepthChunk, DepthTiler};

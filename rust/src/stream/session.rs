@@ -32,7 +32,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::accel::{timing, AccelConfig};
+use crate::accel::{kernel as kern, timing, AccelConfig, KernelChoice};
 use crate::coordinator::service::forward_uniform_obs;
 use crate::dcnn::{Dims, LayerSpec, Network};
 use crate::fixed::Q88;
@@ -79,10 +79,14 @@ impl<T: Copy + Default> LayerStream<T> {
 
     /// Consume `incoming` frames: run the kernel over halo + arrivals
     /// and emit every output frame whose contributor window just
-    /// completed. `kernel` is the full-extent IOM deconvolution of a
-    /// slab; `other_held_elems` (the halos of the *other* layers) and
-    /// `peak` let the session track its live-memory high-water mark.
-    /// Returns the emitted frames and the slab depth processed.
+    /// completed. `kernel` maps `(slab, d_lo, od, oh, ow)` to the
+    /// cropped output *window* of the slab plus the transient elements
+    /// it materialized beyond that window (the full Eq.-(1) extent for
+    /// the scatter kernels; zero for the gather kernels, which write
+    /// the window directly); `other_held_elems` (the halos of the
+    /// *other* layers) and `peak` let the session track its
+    /// live-memory high-water mark. Returns the emitted frames and the
+    /// slab depth processed.
     fn step<K>(
         &mut self,
         incoming: &Volume<T>,
@@ -91,7 +95,7 @@ impl<T: Copy + Default> LayerStream<T> {
         peak: &mut usize,
     ) -> Result<(Volume<T>, usize), String>
     where
-        K: Fn(&Volume<T>) -> Volume<T>,
+        K: Fn(&Volume<T>, usize, usize, usize, usize) -> (Volume<T>, usize),
     {
         let spec = &self.spec;
         if (incoming.c, incoming.h, incoming.w) != (spec.in_c, spec.in_h, spec.in_w) {
@@ -116,15 +120,14 @@ impl<T: Copy + Default> LayerStream<T> {
 
         let new_seen = self.seen + incoming.d;
         let ready = self.shape.s * new_seen;
-        let full = kernel(&slab);
-        let out = uniform::crop_window(
-            &full,
+        let (out, transient) = kernel(
+            &slab,
             self.emitted - start * self.shape.s,
             ready - self.emitted,
             spec.out_h(),
             spec.out_w(),
         );
-        *peak = (*peak).max(other_held_elems + slab.len() + full.len() + out.len());
+        *peak = (*peak).max(other_held_elems + slab.len() + transient + out.len());
 
         let keep_lo = self.shape.first_contributor(ready).min(new_seen);
         self.held = slab.slice_depth(keep_lo - start, new_seen - keep_lo);
@@ -276,6 +279,10 @@ pub struct StreamSession {
     layers: Vec<LayerStream<f32>>,
     cfg: AccelConfig,
     threads: usize,
+    /// Per-layer kernel choice for the 3D chunk path (scatter or
+    /// zero-skip gather; bit-identical either way). Defaults to the
+    /// per-layer model's pick on the session config.
+    kernels: Vec<KernelChoice>,
     frames_in: usize,
     frames_out: usize,
     chunks: usize,
@@ -318,6 +325,11 @@ impl StreamSession {
                 .map(|(l, sh)| LayerStream::new(l, sh))
                 .collect(),
         };
+        let kernels = net
+            .layers
+            .iter()
+            .map(|l| kern::choose_for_layer(&cfg, l).choice)
+            .collect();
         Ok(StreamSession {
             net: net.clone(),
             weights,
@@ -325,6 +337,7 @@ impl StreamSession {
             layers,
             cfg,
             threads: threads.max(1),
+            kernels,
             frames_in: 0,
             frames_out: 0,
             chunks: 0,
@@ -349,6 +362,27 @@ impl StreamSession {
     /// The network this session streams.
     pub fn network(&self) -> &Network {
         &self.net
+    }
+
+    /// The per-layer kernel choices the 3D chunk path runs.
+    pub fn kernels(&self) -> &[KernelChoice] {
+        &self.kernels
+    }
+
+    /// Override the per-layer kernel choices (one per layer) — the
+    /// differential batteries use this to pin a session to scatter or
+    /// gather; output bits are identical for any assignment.
+    pub fn set_kernels(&mut self, kernels: Vec<KernelChoice>) -> Result<(), String> {
+        if kernels.len() != self.net.layers.len() {
+            return Err(format!(
+                "network '{}' has {} layers but {} kernel choices were given",
+                self.net.name,
+                self.net.layers.len(),
+                kernels.len()
+            ));
+        }
+        self.kernels = kernels;
+        Ok(())
     }
 
     /// Per-layer streaming shapes (halo math) the session derives its
@@ -485,19 +519,36 @@ impl StreamSession {
             let w = &self.weights[i];
             let s = self.net.layers[i].s;
             let threads = self.threads;
+            let choice = self.kernels[i];
             let mut span = self.obs.scope(ktrack, "kernel", &self.net.layers[i].name);
             if self.obs.is_enabled() {
                 let l = &self.net.layers[i];
+                let actual = match choice {
+                    KernelChoice::Scatter => l.op_counts().useful_macs,
+                    KernelChoice::Gather => l.gather_macs(),
+                };
                 span.set_args(
                     JsonObj::new()
+                        .str("kernel", &choice.to_string())
                         .int("useful_macs", l.op_counts().useful_macs)
+                        .int("actual_macs", actual)
                         .num("structural_zero_ratio", l.inserted_sparsity()),
                 );
                 self.obs.count("kernel.invocations", 1);
             }
             let (out, slab) = self.layers[i].step(
                 &cur,
-                |v| uniform::deconv_iom_threaded(v, w, s, threads),
+                |v: &Volume<f32>, d_lo, od, oh, ow| match choice {
+                    KernelChoice::Scatter => {
+                        let full = uniform::deconv_iom_threaded(v, w, s, threads);
+                        let transient = full.len();
+                        (uniform::crop_window(&full, d_lo, od, oh, ow), transient)
+                    }
+                    KernelChoice::Gather => (
+                        uniform::deconv_gather_window_threaded(v, w, s, d_lo, od, oh, ow, threads),
+                        0,
+                    ),
+                },
                 other,
                 &mut peak,
             )?;
@@ -626,6 +677,30 @@ pub fn stream_forward(
     Ok((concat_frames(&outs), sess.summary()))
 }
 
+/// [`stream_forward`] with every layer pinned to one kernel (scatter
+/// or zero-skip gather) instead of the session's per-layer choice —
+/// what `tests/diff_stream.rs` uses to prove the halo bit-exactness
+/// argument is kernel-independent.
+pub fn stream_forward_kernel(
+    net: &Network,
+    weights: &[WeightsOIDHW<f32>],
+    input: &Volume<f32>,
+    chunk: usize,
+    cfg: &AccelConfig,
+    threads: usize,
+    kernel: KernelChoice,
+) -> Result<(Volume<f32>, StreamSummary), String> {
+    let mut sess = StreamSession::new(net, weights.to_vec(), cfg.clone(), threads)?;
+    sess.set_kernels(vec![kernel; net.layers.len()])?;
+    let tiler = DepthTiler::new(input.d, chunk)?;
+    let mut outs = Vec::with_capacity(tiler.len());
+    for ch in tiler.chunks() {
+        let part = sess.push_chunk(input.slice_depth(ch.start, ch.frames))?;
+        outs.push(part.frames);
+    }
+    Ok((concat_frames(&outs), sess.summary()))
+}
+
 /// Q8.8 whole-volume golden forward: per-layer
 /// [`uniform::deconv_iom_q`] accumulation (48-bit, one rounding at
 /// write-back) plus the `K−S` crop — the fixed-point counterpart of
@@ -681,7 +756,11 @@ pub fn stream_forward_q(
         for (i, ls) in layers.iter_mut().enumerate() {
             let w = &weights[i];
             let s = net.layers[i].s;
-            let kernel = |v: &Volume<Q88>| uniform::deconv_iom_q_threaded(v, w, s, threads);
+            let kernel = |v: &Volume<Q88>, d_lo: usize, od: usize, oh: usize, ow: usize| {
+                let full = uniform::deconv_iom_q_threaded(v, w, s, threads);
+                let transient = full.len();
+                (uniform::crop_window(&full, d_lo, od, oh, ow), transient)
+            };
             let (out, _) = ls.step(&cur, kernel, 0, &mut peak)?;
             cur = out;
         }
@@ -732,9 +811,58 @@ mod tests {
             sum.whole_peak_elems
         );
         assert!(sum.peak_ratio() < 1.0);
-        // a single whole-depth chunk cannot beat whole-volume memory
-        let (_, whole) = stream_forward(&net, &weights, &input, 8, &cfg_for(&net), 1).unwrap();
+        // a single whole-depth chunk cannot beat whole-volume memory —
+        // a *scatter* statement: only the scatter path materializes
+        // the full Eq.-(1) extent `whole_volume_peak_elems` counts
+        let (_, whole) = stream_forward_kernel(
+            &net,
+            &weights,
+            &input,
+            8,
+            &cfg_for(&net),
+            1,
+            KernelChoice::Scatter,
+        )
+        .unwrap();
         assert!(whole.peak_live_elems >= whole.whole_peak_elems);
+    }
+
+    #[test]
+    fn gather_and_scatter_sessions_stream_identical_bits() {
+        let net = zoo::tiny_3d().with_depth(6);
+        let weights = synth_uniform_weights(&net, 0xABCD);
+        let input = synth_frames(&net.layers[0], 11, 0, 6);
+        for chunk in [1, 2, 3] {
+            let (sc, sc_sum) = stream_forward_kernel(
+                &net,
+                &weights,
+                &input,
+                chunk,
+                &cfg_for(&net),
+                2,
+                KernelChoice::Scatter,
+            )
+            .unwrap();
+            let (ga, ga_sum) = stream_forward_kernel(
+                &net,
+                &weights,
+                &input,
+                chunk,
+                &cfg_for(&net),
+                2,
+                KernelChoice::Gather,
+            )
+            .unwrap();
+            assert_eq!(sc.data(), ga.data(), "chunk={chunk}");
+            // gather never materializes the full extent, so its
+            // live-memory peak can only be lower
+            assert!(
+                ga_sum.peak_live_elems <= sc_sum.peak_live_elems,
+                "chunk={chunk}: gather {} > scatter {}",
+                ga_sum.peak_live_elems,
+                sc_sum.peak_live_elems
+            );
+        }
     }
 
     #[test]

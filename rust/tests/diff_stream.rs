@@ -27,11 +27,11 @@
 use std::collections::BTreeSet;
 
 use udcnn::accel::dse::tune::{tune_network, TuneOptions};
-use udcnn::accel::AccelConfig;
+use udcnn::accel::{AccelConfig, KernelChoice};
 use udcnn::coordinator::service::forward_uniform;
 use udcnn::dcnn::{synth_frames, synth_uniform_weights, zoo, Dims, Network};
 use udcnn::fixed::Q88;
-use udcnn::stream::{stream_forward, stream_forward_q, whole_forward_q};
+use udcnn::stream::{stream_forward, stream_forward_kernel, stream_forward_q, whole_forward_q};
 use udcnn::tensor::{Volume, WeightsOIDHW};
 
 /// Chunk sizes the battery sweeps, clamped and deduped per depth.
@@ -190,6 +190,58 @@ fn re_depthed_tiny_3d_streams_bit_exact() {
     for (i, cfg) in configs_for(&net, 2).iter().enumerate() {
         assert_stream_matches(&net, cfg, 2 + i);
     }
+}
+
+/// Stream `net` with every layer pinned to the gather kernel and
+/// assert the same bits as the forced-scatter session and the
+/// whole-volume golden, at every chunk size — the halo bit-exactness
+/// argument is kernel-independent, and gather's direct-window
+/// emission never holds more live elements than scatter's full-extent
+/// transient.
+fn assert_gather_session_matches(net: &Network, threads: usize) {
+    let weights = synth_uniform_weights(net, 0x5EED);
+    let depth = net.layers[0].in_d;
+    let input = synth_frames(&net.layers[0], 99, 0, depth);
+    let cfg = AccelConfig::paper_for(net.dims);
+    let golden = forward_uniform(net, &weights, input.data());
+    for chunk in chunk_sweep(depth) {
+        let (g_out, g_sum) =
+            stream_forward_kernel(net, &weights, &input, chunk, &cfg, threads, KernelChoice::Gather)
+                .unwrap();
+        assert_eq!(
+            g_out.data(),
+            &golden[..],
+            "{}: gather session != whole-volume golden (chunk={chunk})",
+            net.name
+        );
+        let (s_out, s_sum) =
+            stream_forward_kernel(net, &weights, &input, chunk, &cfg, threads, KernelChoice::Scatter)
+                .unwrap();
+        assert_eq!(
+            g_out.data(),
+            s_out.data(),
+            "{}: gather session != scatter session (chunk={chunk})",
+            net.name
+        );
+        assert!(
+            g_sum.peak_live_elems <= s_sum.peak_live_elems,
+            "{}: gather peak {} > scatter peak {} (chunk={chunk})",
+            net.name,
+            g_sum.peak_live_elems,
+            s_sum.peak_live_elems
+        );
+    }
+}
+
+#[test]
+fn gather_kernel_session_streams_bit_exact() {
+    assert_gather_session_matches(&zoo::tiny_3d().with_depth(9), 2);
+}
+
+#[test]
+#[ignore = "billions of MACs: run in release (CI does)"]
+fn gather_kernel_session_streams_bit_exact_full_3d_gan() {
+    assert_gather_session_matches(&zoo::by_name("3d-gan").unwrap(), 4);
 }
 
 #[test]

@@ -17,7 +17,7 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
-use udcnn::propcheck::{check, quickcheck, Config, Gen};
+use udcnn::propcheck::{assert_ulps_within, check, quickcheck, ulp_distance, Config, Gen};
 
 #[test]
 fn gen_int_respects_bounds_at_every_size() {
@@ -121,4 +121,69 @@ fn size_sweep_reports_a_near_minimal_first_failure() {
         .expect("failure message carries the counterexample");
     assert!(v >= 8, "reported case must actually fail: v={v}");
     assert!(v <= 16, "first failure v={v} is not near-minimal");
+}
+
+#[test]
+fn ulp_distance_pins_the_float_line_boundaries() {
+    // The two zeros are the same point on the monotone key line.
+    assert_eq!(ulp_distance(0.0, -0.0), 0);
+    // Adjacent representables are exactly one apart, in either order.
+    let next_up = f32::from_bits(1.0f32.to_bits() + 1);
+    assert_eq!(ulp_distance(1.0, next_up), 1);
+    assert_eq!(ulp_distance(next_up, 1.0), 1);
+    // Crossing zero counts the floats through it: the smallest
+    // positive and smallest negative subnormal straddle ±0.0.
+    let tiny = f32::from_bits(1);
+    assert_eq!(ulp_distance(tiny, -tiny), 2);
+    assert_eq!(ulp_distance(tiny, 0.0), 1);
+    // NaN against anything finite is maximally distant; two NaNs are
+    // equivalent (a computation that NaNs must NaN under both orders).
+    assert_eq!(ulp_distance(f32::NAN, 1.0), u64::MAX);
+    assert_eq!(ulp_distance(f32::NAN, f32::NAN), 0);
+}
+
+#[test]
+fn assert_ulps_within_vs_a_reassociated_sum() {
+    // A deliberately reassociated reference: 1.0 followed by sixteen
+    // grains of 1e-8. Summed left-to-right every grain is individually
+    // absorbed (1e-8 is far below ULP(1.0) ≈ 1.19e-7) and the total
+    // stays exactly 1.0; summed with the grains first they accumulate
+    // to ~1.6e-7 and the final add lands above 1.0. Same multiset of
+    // terms, different association, provably different bits — the
+    // precise situation the comparator exists to bound.
+    let mut xs = vec![1.0f32];
+    xs.extend(std::iter::repeat_n(1e-8f32, 16));
+    let forward: f32 = xs.iter().copied().fold(0.0, |a, b| a + b);
+    let reassoc: f32 = xs.iter().rev().copied().fold(0.0, |a, b| a + b);
+    let d = ulp_distance(forward, reassoc);
+    assert!(d >= 1, "the two orders must actually disagree");
+    assert!(d <= 4, "disagreement should be a handful of ULPs, got {d}");
+    // At exactly the observed distance the assertion passes...
+    assert_ulps_within(&[forward], &[reassoc], d);
+    // ...and one ULP tighter it panics, naming the worst offender.
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        assert_ulps_within(&[0.5, forward, 0.25], &[0.5, reassoc, 0.25], d - 1);
+    }));
+    let msg = match result {
+        Ok(()) => panic!("tightening the bound by one ULP must fail"),
+        Err(p) => p.downcast::<String>().map(|b| *b).unwrap_or_default(),
+    };
+    assert!(msg.contains("1 of 3"), "offender count: {msg}");
+    assert!(msg.contains("[1]"), "worst offender index: {msg}");
+    assert!(msg.contains("ULPs apart"), "distance reported: {msg}");
+}
+
+#[test]
+fn assert_ulps_within_rejects_length_mismatch_and_lone_nans() {
+    assert!(catch_unwind(AssertUnwindSafe(|| {
+        assert_ulps_within(&[1.0, 2.0], &[1.0], 1_000_000);
+    }))
+    .is_err());
+    // A lone NaN is u64::MAX ULPs away — no finite bound admits it.
+    assert!(catch_unwind(AssertUnwindSafe(|| {
+        assert_ulps_within(&[f32::NAN], &[1.0], u64::MAX - 1);
+    }))
+    .is_err());
+    // But NaN-vs-NaN and +0.0-vs--0.0 pass even at a zero bound.
+    assert_ulps_within(&[f32::NAN, 0.0], &[f32::NAN, -0.0], 0);
 }

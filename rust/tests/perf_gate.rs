@@ -3,9 +3,14 @@
 //! `#[ignore]`d locally (the full point set runs the autotuner and
 //! numeric streaming, which wants a release build); CI runs it with
 //! `cargo test --release --test perf_gate -- --include-ignored`
-//! *after* `cargo bench --bench trajectory` has armed the baseline.
-//! A point may only regress its simulated throughput by
-//! `GATE_TOLERANCE` (5 %) against the latest armed record.
+//! *before* `cargo bench --bench trajectory` appends that run's
+//! point — gating fresh measurements against the **committed**
+//! history. (Running the bench first would arm a same-run record and
+//! the gate would compare the measurement against itself.) A point
+//! may only regress its simulated throughput by `GATE_TOLERANCE`
+//! (5 %) against the latest armed record; until a release-built
+//! machine arms the committed baseline, the gate reports the
+//! bootstrap placeholder and passes.
 
 use udcnn::benchkit::trajectory::{
     gate_violations, latest_armed, measure_all, parse_file, trajectory_path,

@@ -13,9 +13,9 @@
 
 use udcnn::accel::dse::tune::{tune_network, tuner_candidates, TuneOptions};
 use udcnn::accel::dse::{DseBudget, DseError};
-use udcnn::accel::AccelConfig;
-use udcnn::dcnn::zoo;
-use udcnn::propcheck::{check, Config};
+use udcnn::accel::{kernel, AccelConfig, KernelChoice, Schedule};
+use udcnn::dcnn::{zoo, LayerSpec};
+use udcnn::propcheck::{check, Config, Gen};
 use udcnn::resource;
 
 /// Candidate budgets drawn across the interesting range: from "barely
@@ -131,6 +131,94 @@ fn prop_ranked_configs_fit_and_are_ordered() {
                 "{name}: roofline bound above exact cycles — pruning would be unsound"
             );
             assert!((0.0..=1.0 + 1e-9).contains(&p.utilization), "{name}");
+        }
+    }
+}
+
+/// A random deconv layer under the architecture's K ≥ S constraint
+/// (§IV-B: the K−S crop requires it), spanning both dimensionalities
+/// and channel counts from GAN-head-thin to decoder-entry-fat.
+fn gen_kernel_layer(g: &mut Gen) -> LayerSpec {
+    let s = *g.choose(&[1usize, 2]);
+    let k = s + g.int(0, 3);
+    if g.int(0, 1) == 0 {
+        LayerSpec::new_2d(
+            "prop.kc2d",
+            1 + g.int(0, 127),
+            1 + g.int(0, 31),
+            1 + g.int(0, 31),
+            1 + g.int(0, 127),
+            k,
+            s,
+        )
+    } else {
+        LayerSpec::new_3d(
+            "prop.kc3d",
+            1 + g.int(0, 63),
+            1 + g.int(0, 7),
+            1 + g.int(0, 15),
+            1 + g.int(0, 15),
+            1 + g.int(0, 63),
+            k,
+            s,
+        )
+    }
+}
+
+#[test]
+fn prop_kernel_choice_is_deterministic_and_never_loses() {
+    check(Config { cases: 96, ..Default::default() }, |g| {
+        let layer = gen_kernel_layer(g);
+        let cfg = AccelConfig::paper_for(layer.dims);
+        let sched = Schedule::new(&cfg, &layer);
+        let a = kernel::choose(&cfg, &layer, &sched);
+        let b = kernel::choose(&cfg, &layer, &sched);
+        if a != b {
+            return Err(format!("{layer}: choice diverged across identical calls"));
+        }
+        let c = kernel::choose_for_layer(&cfg, &layer);
+        if a != c {
+            return Err(format!(
+                "{layer}: choose_for_layer disagrees with choose on the same schedule"
+            ));
+        }
+        // Forcing the non-chosen kernel must never simulate faster
+        // under the VC709 step model — otherwise the argmin is wrong.
+        let chosen = kernel::step_cycles(&cfg, &layer, &sched, a.choice);
+        for k in KernelChoice::ALL {
+            let forced = kernel::step_cycles(&cfg, &layer, &sched, k);
+            if forced < chosen {
+                return Err(format!(
+                    "{layer}: forced {k} runs {forced} cycles, beats chosen {} at {chosen}",
+                    a.choice
+                ));
+            }
+        }
+        // The recorded per-kernel scores are the step model's own
+        // numbers, so the machine-readable justification is honest.
+        for k in KernelChoice::ALL {
+            if a.cycles(k) != kernel::step_cycles(&cfg, &layer, &sched, k) {
+                return Err(format!("{layer}: recorded {k} score diverges from the model"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tuned_kernel_choices_match_the_selector_on_the_winning_config() {
+    // The kernels the tuner records in `TunedConfig` are exactly what
+    // `kernel::choose` picks per layer under the winning AccelConfig —
+    // the serve fleet can trust the recorded plan without re-deriving.
+    for name in ["tiny-2d", "tiny-3d"] {
+        let net = zoo::by_name(name).unwrap();
+        let r = tune_network(&net, &TuneOptions::default()).unwrap();
+        let best = &r.best().cfg;
+        assert_eq!(r.best().kernels.len(), net.layers.len(), "{name}");
+        for ((lname, sel), layer) in r.best().kernels.iter().zip(&net.layers) {
+            assert_eq!(lname, &layer.name, "{name}: kernel record order");
+            let fresh = kernel::choose_for_layer(best, layer);
+            assert_eq!(sel.choice, fresh.choice, "{name}/{lname}: recorded choice drifted");
         }
     }
 }
