@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Fail CI loudly while the committed perf trajectory is a placeholder.
+
+`tests/perf_gate.rs` gates simulated throughput against the latest
+record of the committed `BENCH_trajectory.json`. A record with no
+points (the bootstrap placeholder) makes that gate vacuous: every run
+passes because there is nothing to compare against.
+
+This check runs AFTER `cargo bench --bench trajectory`, which appends
+a freshly measured record to the working-tree copy. It fails when:
+
+  1. the working-tree file still has no measured points (the bench did
+     not run or wrote nothing), or
+  2. the committed copy (`git show HEAD:BENCH_trajectory.json`) has no
+     record with points — i.e. the repository is still shipping the
+     placeholder while CI demonstrably measured real numbers.
+
+On failure (2) it prints the freshly measured record so arming the
+gate is one copy-paste: commit the working-tree file.
+
+Usage:
+    check_trajectory_armed.py [FILE]    default: BENCH_trajectory.json
+"""
+
+import json
+import subprocess
+import sys
+
+TRAJECTORY = "BENCH_trajectory.json"
+
+
+def fail(msg):
+    print(f"check_trajectory_armed: FAIL: {msg}")
+    sys.exit(1)
+
+
+def records_of(doc, origin):
+    records = doc.get("records")
+    if not isinstance(records, list) or not records:
+        fail(f"{origin}: no records array")
+    return records
+
+
+def armed_records(records):
+    return [r for r in records if r.get("points")]
+
+
+def main(argv):
+    path = argv[1] if len(argv) > 1 else TRAJECTORY
+
+    with open(path) as f:
+        working = json.load(f)
+    measured = armed_records(records_of(working, path))
+    if not measured:
+        fail(
+            f"{path}: the trajectory bench left no measured points — "
+            "run `cargo bench --bench trajectory` before this check"
+        )
+    fresh = measured[-1]
+    n = len(fresh.get("points", []))
+    print(
+        f"check_trajectory_armed: working tree has record "
+        f"'{fresh.get('label')}' with {n} points"
+    )
+
+    try:
+        committed_text = subprocess.check_output(
+            ["git", "show", f"HEAD:{path}"], text=True
+        )
+    except (subprocess.CalledProcessError, OSError) as e:
+        fail(f"cannot read committed {path} via git show: {e}")
+    committed = json.loads(committed_text)
+    if not armed_records(records_of(committed, f"HEAD:{path}")):
+        print(
+            f"check_trajectory_armed: the committed {path} is still the "
+            "empty bootstrap placeholder — the perf gate "
+            "(tests/perf_gate.rs) is NOT armed and passes vacuously."
+        )
+        print(
+            "The numbers are simulated (deterministic on every host), so "
+            "this run's freshly measured record is the baseline to ship. "
+            f"Commit the updated {path}; its latest record is:"
+        )
+        print(json.dumps(fresh, indent=2))
+        fail(f"committed {path} has no record with measured points")
+    print(f"check_trajectory_armed: OK: committed {path} carries measured points")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -159,7 +159,19 @@ impl AccelConfig {
     /// key (see [`crate::serve::PlanCache`]): two configs with equal
     /// fingerprints compile byte-identical plans.
     pub fn fingerprint(&self) -> String {
-        format!(
+        let mut s = String::new();
+        self.write_fingerprint(&mut s);
+        s
+    }
+
+    /// Append [`AccelConfig::fingerprint`] to `buf` without allocating
+    /// a fresh `String` — the serving hot path renders plan-cache keys
+    /// into a reused buffer (`serve::Fleet`), which the zero-allocation
+    /// battery in `tests/obs_trace.rs` pins.
+    pub fn write_fingerprint(&self, buf: &mut String) {
+        use std::fmt::Write;
+        write!(
+            buf,
             "tm{}.tn{}.tz{}.tr{}.tc{}.f{}.dw{}.bw{}.ib{}.wb{}.ob{}.b{}.st{}",
             self.tm,
             self.tn,
@@ -175,6 +187,7 @@ impl AccelConfig {
             self.batch,
             u8::from(self.depth_overlap_stall),
         )
+        .expect("String write is infallible");
     }
 
     /// Compact human-readable identity — tiling plus buffer split,

@@ -31,9 +31,9 @@ use anyhow::{bail, Result};
 
 use crate::accel::{AccelConfig, Schedule};
 use crate::dcnn::{LayerData, Network};
-use crate::func::uniform;
+use crate::func::{uniform, workspace};
 use crate::serve::{Arrival, ConfigPolicy, Fleet, FleetOptions, FleetReport};
-use crate::tensor::{Volume, WeightsOIDHW};
+use crate::tensor::WeightsOIDHW;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::router::ShardRouter;
@@ -365,7 +365,11 @@ pub fn forward_uniform_obs(
         .unwrap_or(4);
     let ktrack = obs.track("kernel");
     let kcfg = AccelConfig::paper_for(net.dims);
-    let mut cur = Volume::from_vec(l0.in_c, l0.in_d, l0.in_h, l0.in_w, input.to_vec());
+    // pooled staging copy of the input (the final layer's volume
+    // escapes via `into_vec`; everything in between round-trips
+    // through the pool)
+    let mut cur = workspace::take_volume_f32(l0.in_c, l0.in_d, l0.in_h, l0.in_w);
+    cur.data_mut().copy_from_slice(input);
     for (layer, w) in net.layers.iter().zip(weights) {
         let work = layer.op_counts().useful_macs;
         let choice = crate::accel::kernel::choose_for_layer(&kcfg, layer).choice;
@@ -389,10 +393,18 @@ pub fn forward_uniform_obs(
             obs.count("kernel.useful_macs", work);
             obs.count("kernel.actual_macs", actual);
         }
-        cur = match choice {
+        let next = match choice {
             crate::accel::KernelChoice::Scatter => {
                 let full = uniform::deconv_iom_threaded(&cur, w, layer.s, threads);
-                uniform::crop(&full, layer.out_d(), layer.out_h(), layer.out_w())
+                let cropped = uniform::crop_window_pooled(
+                    &full,
+                    0,
+                    layer.out_d(),
+                    layer.out_h(),
+                    layer.out_w(),
+                );
+                workspace::give_volume_f32(full);
+                cropped
             }
             crate::accel::KernelChoice::Gather => uniform::deconv_gather_window_threaded(
                 &cur,
@@ -405,6 +417,8 @@ pub fn forward_uniform_obs(
                 threads,
             ),
         };
+        // the consumed activation volume goes back to the scratch pool
+        workspace::give_volume_f32(std::mem::replace(&mut cur, next));
         drop(span);
     }
     cur.into_vec()

@@ -33,6 +33,14 @@
 //! signatures that tests and benches pin; `tests/prop_uniform.rs`
 //! proves the folds are bit-exact.
 //!
+//! The host hot path under those loop nests lives in two support
+//! modules: [`simd`] (portable explicit-width lanes + the per-layer
+//! cache-blocking tile; scalar fallback forced via
+//! `UDCNN_FORCE_SCALAR=1`) and [`workspace`] (thread-local scratch
+//! pools that make steady-state serving allocation-free). Both keep
+//! the bit-exactness contract: SIMD == scalar == threaded, pinned by
+//! `tests/prop_uniform.rs`.
+//!
 //! Output conventions: `*_full` returns the Eq. (1) extent
 //! `(I − 1)·S + K`; [`crop_2d`]/[`crop_3d`] remove the `K − S` edge
 //! padding from the high side of each axis (matching
@@ -42,7 +50,9 @@
 pub mod conv;
 pub mod deconv;
 pub mod deconv_q;
+pub mod simd;
 pub mod uniform;
+pub mod workspace;
 pub mod zero_insert;
 
 pub use deconv::{

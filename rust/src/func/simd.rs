@@ -1,0 +1,255 @@
+//! Portable explicit-width SIMD primitives for the uniform kernel
+//! core, plus the per-layer cache-blocking heuristic.
+//!
+//! No nightly features and no intrinsics: each primitive processes
+//! `LANES_*` elements per iteration through fixed-size arrays
+//! (`chunks_exact` + `try_into`), which LLVM reliably turns into
+//! vector loads, fused multiply-adds and blends on every target the
+//! repo builds for, with an explicit scalar tail for the remainder.
+//! The lane bodies are written so that **no floating-point
+//! reassociation occurs**: vectorization runs *across* output
+//! elements (one element per lane), never within one element's
+//! reduction, so SIMD results are bit-identical to the scalar
+//! kernels — the contract `tests/prop_uniform.rs` enforces.
+//!
+//! The scalar fallback is selectable at runtime: `UDCNN_FORCE_SCALAR=1`
+//! in the environment (read once, on first use) or
+//! [`set_force_scalar`] (benches, tests) routes every dispatching
+//! kernel entry point in [`super::uniform`] to the reference scalar
+//! loop nests. CI runs the whole property suite in that mode so the
+//! fallback cannot rot.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::dcnn::LayerSpec;
+use crate::fixed::{Acc48, Q88};
+
+/// f32 lane width: 8 × 32-bit = one AVX2 register (two NEON
+/// registers); wide enough to saturate the FMA ports, narrow enough
+/// that tail loops stay cheap on the zoo's smallest rows.
+pub const LANES_F32: usize = 8;
+
+/// Q8.8 lane width. The MAC widens `i16 × i16 → i32 → i64`
+/// (the DSP48 P-register model in [`Acc48`]), so 8 lanes of `i64`
+/// accumulator mirror the f32 width and keep one tail policy.
+pub const LANES_Q: usize = 8;
+
+// 0 = uninitialized (read UDCNN_FORCE_SCALAR on first use),
+// 1 = SIMD lanes, 2 = scalar fallback forced.
+static KERNEL_MODE: AtomicU8 = AtomicU8::new(0);
+
+#[cold]
+fn init_mode() -> u8 {
+    let forced = std::env::var("UDCNN_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let mode = if forced { 2 } else { 1 };
+    KERNEL_MODE.store(mode, Ordering::Relaxed);
+    mode
+}
+
+/// Whether the vectorized kernel paths are active (the default).
+/// `UDCNN_FORCE_SCALAR=1` or [`set_force_scalar`]`(true)` turns them
+/// off. After the first call this is a single atomic load — the
+/// dispatching entry points stay allocation-free.
+#[inline]
+pub fn simd_enabled() -> bool {
+    let m = KERNEL_MODE.load(Ordering::Relaxed);
+    let m = if m == 0 { init_mode() } else { m };
+    m == 1
+}
+
+/// Force the scalar reference path (`true`) or the SIMD path
+/// (`false`), overriding the environment. Benches use this to race
+/// the two implementations in one process. Both paths are bit-exact,
+/// so flipping this concurrently with running kernels is benign.
+pub fn set_force_scalar(scalar: bool) {
+    KERNEL_MODE.store(if scalar { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// `dst[j] += src[j] · kv` for every lane where `src[j] != 0.0`,
+/// leaving lanes with a zero input **untouched** — the select form of
+/// the IOM zero-skip. Skipping (rather than adding `src[j] · kv =
+/// ±0.0`) matters for bit-exactness: adding a zero product can flip a
+/// `-0.0` accumulator to `+0.0`, which the scalar kernels' `continue`
+/// never does. `kv == 0.0` is *not* skipped (the scalar loops multiply
+/// through zero weights too). One output element per lane — no
+/// reassociation of any element's sum.
+#[inline]
+pub fn saxpy_skip_f32(dst: &mut [f32], src: &[f32], kv: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut dc = dst.chunks_exact_mut(LANES_F32);
+    let mut sc = src.chunks_exact(LANES_F32);
+    for (d, s) in (&mut dc).zip(&mut sc) {
+        let a: [f32; LANES_F32] = s.try_into().expect("lane width");
+        let mut v: [f32; LANES_F32] = (&*d).try_into().expect("lane width");
+        for l in 0..LANES_F32 {
+            // cmp + blend under vectorization; exact scalar-skip semantics
+            v[l] = if a[l] != 0.0 { v[l] + a[l] * kv } else { v[l] };
+        }
+        d.copy_from_slice(&v);
+    }
+    for (d, &a) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        if a != 0.0 {
+            *d += a * kv;
+        }
+    }
+}
+
+/// `dst[j] = clamp48(dst[j] + wide(src[j] · kv))` per lane over raw
+/// [`Acc48`] bits (`i64`). Unlike the f32 form this needs no
+/// zero-skip to stay bit-exact: accumulating a zero product adds the
+/// integer 0 and the 48-bit clamp is idempotent on in-range values,
+/// so the result matches the scalar kernels' skip exactly. One output
+/// element per lane; each lane applies the DSP48-style MAC + clamp in
+/// scalar order.
+#[inline]
+pub fn mac_q88(dst: &mut [i64], src: &[Q88], kv: Q88) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut dc = dst.chunks_exact_mut(LANES_Q);
+    let mut sc = src.chunks_exact(LANES_Q);
+    for (d, s) in (&mut dc).zip(&mut sc) {
+        let a: [Q88; LANES_Q] = s.try_into().expect("lane width");
+        let mut v: [i64; LANES_Q] = (&*d).try_into().expect("lane width");
+        for l in 0..LANES_Q {
+            let mut acc = Acc48(v[l]);
+            acc.mac(a[l], kv);
+            v[l] = acc.0;
+        }
+        d.copy_from_slice(&v);
+    }
+    for (d, &a) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        let mut acc = Acc48(*d);
+        acc.mac(a, kv);
+        *d = acc.0;
+    }
+}
+
+/// Cache-blocking tile for the blocked gather/scatter row core:
+/// `rows` output rows are accumulated in an L1-resident scratch strip
+/// while `in_ch` input channels are streamed per pass, so each scratch
+/// row is touched `⌈I / in_ch⌉` times from L1 instead of `I` times
+/// from DRAM. Chosen once per layer ([`tile_for_layer`]) and reported
+/// by `benches/kernels.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    /// Output rows per scratch strip (L1 budget / row bytes).
+    pub rows: usize,
+    /// Input channels per streaming pass (L2 budget / plane bytes).
+    pub in_ch: usize,
+}
+
+// Per-core cache budgets the tile targets: half a typical 32 KiB L1d
+// for the output scratch strip (the other half holds the streaming
+// input rows), and a conservative 256 KiB slice of L2 for the input
+// planes revisited across the strip.
+const L1_SCRATCH_BYTES: usize = 16 * 1024;
+const L2_INPUT_BYTES: usize = 256 * 1024;
+
+/// Pick a [`Tile`] for output rows of `ow` elements of `elem_bytes`
+/// bytes each, with input planes of `in_plane_elems` elements across
+/// `in_c` input channels.
+pub fn tile_for(ow: usize, elem_bytes: usize, in_plane_elems: usize, in_c: usize) -> Tile {
+    let row_bytes = (ow * elem_bytes).max(1);
+    let plane_bytes = (in_plane_elems * elem_bytes).max(1);
+    Tile {
+        rows: (L1_SCRATCH_BYTES / row_bytes).clamp(4, 64),
+        in_ch: (L2_INPUT_BYTES / plane_bytes).clamp(1, in_c.max(1)),
+    }
+}
+
+/// The [`Tile`] the f32 kernels use for `spec` (Q8.8 uses the same
+/// shape with 8-byte accumulator rows). Benches record these so the
+/// committed reports show the blocking each layer ran under.
+pub fn tile_for_layer(spec: &LayerSpec) -> Tile {
+    tile_for(spec.out_w(), 4, spec.in_h * spec.in_w, spec.in_c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saxpy_skip_matches_scalar_reference_with_tails() {
+        let mut rng = crate::util::Prng::new(9);
+        for n in [0, 1, LANES_F32 - 1, LANES_F32, LANES_F32 + 1, 3 * LANES_F32 + 5] {
+            let mut src = vec![0.0f32; n];
+            rng.fill_f32(&mut src, -2.0, 2.0);
+            // exact zeros (and a negative-zero accumulator test below)
+            for (i, v) in src.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let mut dst = vec![0.0f32; n];
+            rng.fill_f32(&mut dst, -1.0, 1.0);
+            let mut want = dst.clone();
+            let kv = 0.75f32;
+            for (d, &a) in want.iter_mut().zip(&src) {
+                if a != 0.0 {
+                    *d += a * kv;
+                }
+            }
+            saxpy_skip_f32(&mut dst, &src, kv);
+            assert_eq!(
+                dst.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn saxpy_skip_preserves_negative_zero_accumulators() {
+        // a skipped lane must not flip -0.0 to +0.0
+        let mut dst = vec![-0.0f32; LANES_F32 + 1];
+        let src = vec![0.0f32; LANES_F32 + 1];
+        saxpy_skip_f32(&mut dst, &src, 1.0);
+        for v in &dst {
+            assert_eq!(v.to_bits(), (-0.0f32).to_bits());
+        }
+    }
+
+    #[test]
+    fn mac_q88_matches_acc48_with_tails() {
+        let mut rng = crate::util::Prng::new(11);
+        for n in [0, 1, LANES_Q - 1, LANES_Q, LANES_Q + 1, 2 * LANES_Q + 3] {
+            let src: Vec<Q88> = (0..n).map(|_| Q88::from_f32(rng.f32_range(-3.0, 3.0))).collect();
+            let mut dst: Vec<i64> = (0..n).map(|i| (i as i64 - 2) << 12).collect();
+            let kv = Q88::from_f32(1.25);
+            let mut want = dst.clone();
+            for (d, &a) in want.iter_mut().zip(&src) {
+                let mut acc = Acc48(*d);
+                if !a.is_zero() {
+                    acc.mac(a, kv);
+                }
+                *d = acc.0;
+            }
+            // the unconditional MAC equals the skip form: +0 is exact
+            mac_q88(&mut dst, &src, kv);
+            assert_eq!(dst, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn force_scalar_round_trips() {
+        // explicit sets override whatever the environment selected
+        set_force_scalar(true);
+        assert!(!simd_enabled());
+        set_force_scalar(false);
+        assert!(simd_enabled());
+    }
+
+    #[test]
+    fn tiles_are_clamped_and_sane() {
+        let t = tile_for(8, 4, 16, 1);
+        assert_eq!(t.in_ch, 1);
+        assert_eq!(t.rows, 64, "tiny rows clamp to the max strip");
+        let t = tile_for(100_000, 4, 1_000_000, 512);
+        assert_eq!(t.rows, 4, "huge rows clamp to the min strip");
+        assert_eq!(t.in_ch, 1);
+        let t = tile_for(64, 4, 64 * 64, 256);
+        assert!(t.rows >= 4 && t.rows <= 64);
+        assert!(t.in_ch >= 1 && t.in_ch <= 256);
+    }
+}

@@ -39,8 +39,23 @@
 //!   accumulation-order contract documented at the gather section;
 //! * the OOM path materializes the zero-inserted, padded map **once**
 //!   and threads the dense correlation over output channels (the old
-//!   per-dimensionality baselines re-inserted zeros in every thread).
+//!   per-dimensionality baselines re-inserted zeros in every thread);
+//! * under the default SIMD mode ([`super::simd`]), the deconvolution
+//!   entry points route both kernel families through one **blocked
+//!   row core** (`gather_rows_blocked`): output rows are tiled into an
+//!   L1-resident scratch strip, input channels stream in L2-sized
+//!   groups, and the inner loop is a contiguous lane-wide
+//!   multiply-accumulate across *output elements* (one element per
+//!   lane, no reassociation — see the residue-class layout at the
+//!   core). `UDCNN_FORCE_SCALAR=1` (or
+//!   [`super::simd::set_force_scalar`]) selects the scalar reference
+//!   nests instead; the `*_scalar` twins expose them directly for the
+//!   bit-exactness properties in `tests/prop_uniform.rs`;
+//! * per-call outputs and scratch come from the thread-local pools in
+//!   [`super::workspace`], so steady-state serving and streaming
+//!   allocate nothing on this path (`tests/obs_trace.rs` counts).
 
+use super::{simd, workspace};
 use crate::fixed::{Acc48, Q88};
 use crate::tensor::{Volume, WeightsOIDHW};
 
@@ -117,8 +132,28 @@ fn scatter_row(out_row: &mut [f32], in_row: &[f32], krow: &[f32], s: usize) {
 // ---------------------------------------------------------------------
 
 /// Compute output channels `[o_lo, o_hi)` of the IOM deconvolution
-/// into `out`, a buffer holding exactly those channels.
+/// into `out`, a **zero-filled** buffer holding exactly those
+/// channels. Dispatches to the blocked SIMD row core (which computes
+/// the identical sum output-stationary, by the accumulation-order
+/// contract at the gather section) or the scalar scatter nest.
 fn deconv_iom_into(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    o_lo: usize,
+    o_hi: usize,
+    out: &mut [f32],
+) {
+    if simd::simd_enabled() {
+        assert_eq!(input.c, w.i, "channel mismatch");
+        let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+        gather_rows_blocked(input, w, s, 0, fd, fh, fw, o_lo * fd * fh, o_hi * fd * fh, out);
+    } else {
+        deconv_iom_into_scalar(input, w, s, o_lo, o_hi, out);
+    }
+}
+
+fn deconv_iom_into_scalar(
     input: &Volume<f32>,
     w: &WeightsOIDHW<f32>,
     s: usize,
@@ -153,10 +188,23 @@ fn deconv_iom_into(
 
 /// Dimension-uniform IOM deconvolution over the full Eq. (1) extent
 /// (Fig. 5). A depth-1 input with a depth-1 kernel *is* the 2D case.
+/// The output volume is drawn from the [`workspace`] pool — return it
+/// with [`workspace::give_volume_f32`] when done to keep the serving
+/// path allocation-free.
 pub fn deconv_iom(input: &Volume<f32>, w: &WeightsOIDHW<f32>, s: usize) -> Volume<f32> {
     let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
-    let mut out = Volume::zeros(w.o, od, oh, ow);
+    let mut out = workspace::take_volume_f32(w.o, od, oh, ow);
     deconv_iom_into(input, w, s, 0, w.o, out.data_mut());
+    out
+}
+
+/// [`deconv_iom`] pinned to the scalar reference nest regardless of
+/// the SIMD mode — the oracle side of the SIMD bit-exactness
+/// properties (`tests/prop_uniform.rs`).
+pub fn deconv_iom_scalar(input: &Volume<f32>, w: &WeightsOIDHW<f32>, s: usize) -> Volume<f32> {
+    let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    deconv_iom_into_scalar(input, w, s, 0, w.o, out.data_mut());
     out
 }
 
@@ -177,7 +225,7 @@ pub fn deconv_iom_threaded(
     let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
     let per_o = od * oh * ow;
     let chunk_os = w.o.div_ceil(t);
-    let mut out = Volume::zeros(w.o, od, oh, ow);
+    let mut out = workspace::take_volume_f32(w.o, od, oh, ow);
     std::thread::scope(|scope| {
         for (ti, buf) in out.data_mut().chunks_mut(chunk_os * per_o).enumerate() {
             let o_lo = ti * chunk_os;
@@ -241,8 +289,24 @@ fn deconv_iom_q_into(
 /// extent. Accumulation happens in the 48-bit accumulator across *all*
 /// input channels before a single rounding at write-back (the adder
 /// tree + output buffer behaviour), so results are bit-exact against
-/// the functional mesh tier.
+/// the functional mesh tier. Under SIMD the blocked row core
+/// accumulates the identical 48-bit sums in a pooled `i64` strip and
+/// rounds straight into the output — the whole-extent `Acc48` buffer
+/// of the scalar path is never allocated.
 pub fn deconv_iom_q(input: &Volume<Q88>, w: &WeightsOIDHW<Q88>, s: usize) -> Volume<Q88> {
+    if !simd::simd_enabled() {
+        return deconv_iom_q_scalar(input, w, s);
+    }
+    assert_eq!(input.c, w.i, "channel mismatch");
+    let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    gather_rows_blocked_q(input, w, s, 0, od, oh, ow, 0, w.o * od * oh, out.data_mut());
+    out
+}
+
+/// [`deconv_iom_q`] pinned to the scalar reference nest regardless of
+/// the SIMD mode — the Q8.8 oracle of `tests/prop_uniform.rs`.
+pub fn deconv_iom_q_scalar(input: &Volume<Q88>, w: &WeightsOIDHW<Q88>, s: usize) -> Volume<Q88> {
     let (od, oh, ow) = full_extents(input, w.kd, w.kh, w.kw, s);
     let mut acc = vec![Acc48::ZERO; w.o * od * oh * ow];
     deconv_iom_q_into(input, w, s, 0, w.o, &mut acc);
@@ -277,10 +341,25 @@ pub fn deconv_iom_q_threaded(
             let o_lo = ti * chunk_os;
             let o_hi = (o_lo + chunk_os).min(w.o);
             scope.spawn(move || {
-                let mut acc = vec![Acc48::ZERO; buf.len()];
-                deconv_iom_q_into(input, w, s, o_lo, o_hi, &mut acc);
-                for (dst, a) in buf.iter_mut().zip(acc) {
-                    *dst = a.to_q88();
+                if simd::simd_enabled() {
+                    gather_rows_blocked_q(
+                        input,
+                        w,
+                        s,
+                        0,
+                        od,
+                        oh,
+                        ow,
+                        o_lo * od * oh,
+                        o_hi * od * oh,
+                        buf,
+                    );
+                } else {
+                    let mut acc = vec![Acc48::ZERO; buf.len()];
+                    deconv_iom_q_into(input, w, s, o_lo, o_hi, &mut acc);
+                    for (dst, a) in buf.iter_mut().zip(acc) {
+                        *dst = a.to_q88();
+                    }
                 }
             });
         }
@@ -380,11 +459,33 @@ fn gather_row(out_row: &mut [f32], in_row: &[f32], krow: &[f32], s: usize) {
 }
 
 /// Compute flattened output rows `[r_lo, r_hi)` of the gather window
-/// into `out`, a buffer holding exactly those rows. A row index `r`
-/// decodes as `(o, z_w, y) = (r / (od·oh), r % (od·oh) / oh, r % oh)`
-/// with `z = d_lo + z_w` on the full Eq.-(1) depth axis.
+/// into `out`, a **zero-filled** buffer holding exactly those rows. A
+/// row index `r` decodes as
+/// `(o, z_w, y) = (r / (od·oh), r % (od·oh) / oh, r % oh)`
+/// with `z = d_lo + z_w` on the full Eq.-(1) depth axis. Dispatches to
+/// the blocked SIMD row core or the scalar reference nest.
 #[allow(clippy::too_many_arguments)]
 fn deconv_gather_rows(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+    r_lo: usize,
+    r_hi: usize,
+    out: &mut [f32],
+) {
+    if simd::simd_enabled() {
+        gather_rows_blocked(input, w, s, d_lo, od, oh, ow, r_lo, r_hi, out);
+    } else {
+        deconv_gather_rows_scalar(input, w, s, d_lo, od, oh, ow, r_lo, r_hi, out);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn deconv_gather_rows_scalar(
     input: &Volume<f32>,
     w: &WeightsOIDHW<f32>,
     s: usize,
@@ -425,7 +526,8 @@ fn deconv_gather_rows(
 /// and widths `[0, ow)` (crops are low-anchored, §IV-B). Bit-exact
 /// against `crop_window(&deconv_iom(input, w, s), d_lo, od, oh, ow)`
 /// by the accumulation-order contract above — without ever building
-/// the full extent.
+/// the full extent. The output volume is drawn from the [`workspace`]
+/// pool — return it with [`workspace::give_volume_f32`] when done.
 pub fn deconv_gather_window(
     input: &Volume<f32>,
     w: &WeightsOIDHW<f32>,
@@ -438,8 +540,28 @@ pub fn deconv_gather_window(
     assert_eq!(input.c, w.i, "channel mismatch");
     let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
     assert!(d_lo + od <= fd && oh <= fh && ow <= fw, "window exceeds Eq.-(1) extent");
-    let mut out = Volume::zeros(w.o, od, oh, ow);
+    let mut out = workspace::take_volume_f32(w.o, od, oh, ow);
     deconv_gather_rows(input, w, s, d_lo, od, oh, ow, 0, w.o * od * oh, out.data_mut());
+    out
+}
+
+/// [`deconv_gather_window`] pinned to the scalar reference nest
+/// regardless of the SIMD mode — the gather-side oracle of
+/// `tests/prop_uniform.rs`.
+pub fn deconv_gather_window_scalar(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+) -> Volume<f32> {
+    assert_eq!(input.c, w.i, "channel mismatch");
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    assert!(d_lo + od <= fd && oh <= fh && ow <= fw, "window exceeds Eq.-(1) extent");
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    deconv_gather_rows_scalar(input, w, s, d_lo, od, oh, ow, 0, w.o * od * oh, out.data_mut());
     out
 }
 
@@ -448,6 +570,12 @@ pub fn deconv_gather_window(
 pub fn deconv_gather(input: &Volume<f32>, w: &WeightsOIDHW<f32>, s: usize) -> Volume<f32> {
     let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
     deconv_gather_window(input, w, s, 0, fd, fh, fw)
+}
+
+/// [`deconv_gather`] pinned to the scalar reference nest.
+pub fn deconv_gather_scalar(input: &Volume<f32>, w: &WeightsOIDHW<f32>, s: usize) -> Volume<f32> {
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    deconv_gather_window_scalar(input, w, s, 0, fd, fh, fw)
 }
 
 /// [`deconv_gather_window`] with *output rows* `(o, z, y)` sharded
@@ -476,7 +604,7 @@ pub fn deconv_gather_window_threaded(
         return deconv_gather_window(input, w, s, d_lo, od, oh, ow);
     }
     let chunk_rows = rows.div_ceil(t);
-    let mut out = Volume::zeros(w.o, od, oh, ow);
+    let mut out = workspace::take_volume_f32(w.o, od, oh, ow);
     std::thread::scope(|scope| {
         for (ti, buf) in out.data_mut().chunks_mut(chunk_rows * ow).enumerate() {
             let r_lo = ti * chunk_rows;
@@ -565,8 +693,31 @@ fn deconv_gather_rows_q(
 
 /// Q8.8 zero-skip gather deconvolution of an output window — the
 /// fixed-point twin of [`deconv_gather_window`], bit-exact against
-/// `crop_window(&deconv_iom_q(..), ..)`.
+/// `crop_window(&deconv_iom_q(..), ..)`. Under SIMD the blocked row
+/// core accumulates in a pooled `i64` strip instead of a whole-window
+/// [`Acc48`] buffer.
 pub fn deconv_gather_window_q(
+    input: &Volume<Q88>,
+    w: &WeightsOIDHW<Q88>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+) -> Volume<Q88> {
+    if !simd::simd_enabled() {
+        return deconv_gather_window_q_scalar(input, w, s, d_lo, od, oh, ow);
+    }
+    assert_eq!(input.c, w.i, "channel mismatch");
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    assert!(d_lo + od <= fd && oh <= fh && ow <= fw, "window exceeds Eq.-(1) extent");
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    gather_rows_blocked_q(input, w, s, d_lo, od, oh, ow, 0, w.o * od * oh, out.data_mut());
+    out
+}
+
+/// [`deconv_gather_window_q`] pinned to the scalar reference nest.
+pub fn deconv_gather_window_q_scalar(
     input: &Volume<Q88>,
     w: &WeightsOIDHW<Q88>,
     s: usize,
@@ -588,6 +739,12 @@ pub fn deconv_gather_window_q(
 pub fn deconv_gather_q(input: &Volume<Q88>, w: &WeightsOIDHW<Q88>, s: usize) -> Volume<Q88> {
     let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
     deconv_gather_window_q(input, w, s, 0, fd, fh, fw)
+}
+
+/// [`deconv_gather_q`] pinned to the scalar reference nest.
+pub fn deconv_gather_q_scalar(input: &Volume<Q88>, w: &WeightsOIDHW<Q88>, s: usize) -> Volume<Q88> {
+    let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
+    deconv_gather_window_q_scalar(input, w, s, 0, fd, fh, fw)
 }
 
 /// [`deconv_gather_window_q`] with output rows sharded across
@@ -619,10 +776,14 @@ pub fn deconv_gather_window_q_threaded(
             let r_lo = ti * chunk_rows;
             let r_hi = (r_lo + chunk_rows).min(rows);
             scope.spawn(move || {
-                let mut acc = vec![Acc48::ZERO; buf.len()];
-                deconv_gather_rows_q(input, w, s, d_lo, od, oh, ow, r_lo, r_hi, &mut acc);
-                for (dst, a) in buf.iter_mut().zip(acc) {
-                    *dst = a.to_q88();
+                if simd::simd_enabled() {
+                    gather_rows_blocked_q(input, w, s, d_lo, od, oh, ow, r_lo, r_hi, buf);
+                } else {
+                    let mut acc = vec![Acc48::ZERO; buf.len()];
+                    deconv_gather_rows_q(input, w, s, d_lo, od, oh, ow, r_lo, r_hi, &mut acc);
+                    for (dst, a) in buf.iter_mut().zip(acc) {
+                        *dst = a.to_q88();
+                    }
                 }
             });
         }
@@ -639,6 +800,267 @@ pub fn deconv_gather_q_threaded(
 ) -> Volume<Q88> {
     let (fd, fh, fw) = full_extents(input, w.kd, w.kh, w.kw, s);
     deconv_gather_window_q_threaded(input, w, s, 0, fd, fh, fw, threads)
+}
+
+// ---------------------------------------------------------------------
+// The blocked SIMD row core (the tentpole of the host hot path).
+//
+// One core serves BOTH kernel families: scatter and gather produce the
+// identical per-element term multiset in the identical order (the
+// accumulation-order contract above), so under SIMD every
+// deconvolution entry point routes here — scatter as the full-extent
+// window, gather as its cropped window.
+//
+// Residue-class layout. A strided output row interleaves `S` residue
+// classes: output x = q·S + ρ with ρ ∈ [0, S). Along w the contributor
+// relation `x = iw·S + t` fixes `t ≡ ρ (mod S)`, so each kernel tap
+// `t = m·S + ρ` touches *one* class, and within that class the map
+// `q = iw + m` is a pure shift. The scratch row therefore stores the
+// classes contiguously (class-major, running offset), turning the
+// strided inner loop into a contiguous lane-wide multiply-accumulate:
+//
+//     class[ρ][q] += in_row[q − m] · krow[m·S + ρ]   for q ∈ [m, min(n_ρ, n+m))
+//
+// with `n_ρ = ⌈(ow − ρ)/S⌉` elements in class ρ and `n = in_row.len()`.
+// The lower bound `q ≥ m` is exactly the scalar window bound
+// `iw ≥ ⌈(x + 1 − K)/S⌉`; the upper bound is the in-extent clamp.
+// Taps are applied in m-DESCENDING order, which is iw-ASCENDING per
+// output element — the scalar kernels' term order, preserved exactly
+// (f32 addition is non-associative). Vectorization is across output
+// elements (one per lane), never within one element's sum.
+//
+// Blocking: `tile.rows` output rows accumulate in an L1-resident
+// scratch strip while input channels stream in `tile.in_ch`-sized
+// groups, so each scratch row is revisited from cache instead of DRAM.
+// The unpack de-interleaves classes back to the natural row with plain
+// ASSIGNMENT (the scratch starts at 0.0 and received the full sum), so
+// no `-0.0 + 0.0` drift is possible. Scratch comes from the
+// [`workspace`] pools — steady state allocates nothing.
+// ---------------------------------------------------------------------
+
+// Accumulate one kernel row into the class-major scratch row.
+fn gather_krow_classes(scr_row: &mut [f32], in_row: &[f32], krow: &[f32], s: usize, ow: usize) {
+    let k = krow.len();
+    let n = in_row.len();
+    let mut off = 0usize;
+    for rho in 0..s {
+        if rho >= ow {
+            break;
+        }
+        let n_rho = (ow - rho).div_ceil(s);
+        let cls = &mut scr_row[off..off + n_rho];
+        off += n_rho;
+        if rho >= k {
+            continue; // no kernel tap lands in this residue class
+        }
+        let t_max = (k - 1 - rho) / s;
+        for m in (0..=t_max).rev() {
+            // m descending == iw ascending per output element
+            let kv = krow[m * s + rho];
+            let q_lo = m;
+            let q_hi = n_rho.min(n + m);
+            if q_lo < q_hi {
+                simd::saxpy_skip_f32(&mut cls[q_lo..q_hi], &in_row[q_lo - m..q_hi - m], kv);
+            }
+        }
+    }
+}
+
+// Q8.8 twin over raw Acc48 bits: same classes, same order,
+// unconditional integer MAC (bit-equal to the skip — see simd::mac_q88).
+fn gather_krow_classes_q(scr_row: &mut [i64], in_row: &[Q88], krow: &[Q88], s: usize, ow: usize) {
+    let k = krow.len();
+    let n = in_row.len();
+    let mut off = 0usize;
+    for rho in 0..s {
+        if rho >= ow {
+            break;
+        }
+        let n_rho = (ow - rho).div_ceil(s);
+        let cls = &mut scr_row[off..off + n_rho];
+        off += n_rho;
+        if rho >= k {
+            continue;
+        }
+        let t_max = (k - 1 - rho) / s;
+        for m in (0..=t_max).rev() {
+            let kv = krow[m * s + rho];
+            let q_lo = m;
+            let q_hi = n_rho.min(n + m);
+            if q_lo < q_hi {
+                simd::mac_q88(&mut cls[q_lo..q_hi], &in_row[q_lo - m..q_hi - m], kv);
+            }
+        }
+    }
+}
+
+// De-interleave the class-major scratch row back to the natural output
+// row. Plain assignment: the scratch started at zero and holds each
+// element's complete sum in scalar term order.
+fn unpack_classes(out_row: &mut [f32], scr_row: &[f32], s: usize) {
+    let ow = out_row.len();
+    if s == 1 {
+        out_row.copy_from_slice(scr_row);
+        return;
+    }
+    let mut off = 0usize;
+    for rho in 0..s {
+        if rho >= ow {
+            break;
+        }
+        let n_rho = (ow - rho).div_ceil(s);
+        for (q, &v) in scr_row[off..off + n_rho].iter().enumerate() {
+            out_row[q * s + rho] = v;
+        }
+        off += n_rho;
+    }
+}
+
+// Q8.8 unpack: the single write-back rounding of the wide accumulator.
+fn unpack_classes_q(out_row: &mut [Q88], scr_row: &[i64], s: usize) {
+    let ow = out_row.len();
+    if s == 1 {
+        for (d, &v) in out_row.iter_mut().zip(scr_row) {
+            *d = Acc48(v).to_q88();
+        }
+        return;
+    }
+    let mut off = 0usize;
+    for rho in 0..s {
+        if rho >= ow {
+            break;
+        }
+        let n_rho = (ow - rho).div_ceil(s);
+        for (q, &v) in scr_row[off..off + n_rho].iter().enumerate() {
+            out_row[q * s + rho] = Acc48(v).to_q88();
+        }
+        off += n_rho;
+    }
+}
+
+/// The blocked SIMD row core: compute flattened gather-window rows
+/// `[r_lo, r_hi)` (same row decode as [`deconv_gather_rows`]) into
+/// `out` through an L1-tiled, channel-blocked, lane-vectorized sweep.
+/// Bit-exact against the scalar kernels by the residue-class argument
+/// above.
+#[allow(clippy::too_many_arguments)]
+fn gather_rows_blocked(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+    r_lo: usize,
+    r_hi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r_hi - r_lo) * ow);
+    if r_hi <= r_lo || ow == 0 {
+        return;
+    }
+    let tile = simd::tile_for(ow, 4, input.h * input.w, input.c);
+    let mut scr = workspace::take_f32(tile.rows * ow);
+    let mut t_lo = r_lo;
+    while t_lo < r_hi {
+        let t_hi = (t_lo + tile.rows).min(r_hi);
+        let strip = &mut scr[..(t_hi - t_lo) * ow];
+        strip.fill(0.0);
+        let mut i_lo = 0;
+        while i_lo < input.c {
+            let i_hi = (i_lo + tile.in_ch).min(input.c);
+            for r in t_lo..t_hi {
+                let o = r / (od * oh);
+                let z = d_lo + r / oh % od;
+                let y = r % oh;
+                let (id_lo, id_hi) = contrib_window(z, w.kd, s, input.d);
+                let (ih_lo, ih_hi) = contrib_window(y, w.kh, s, input.h);
+                let base = (r - t_lo) * ow;
+                let scr_row = &mut strip[base..base + ow];
+                for i in i_lo..i_hi {
+                    let kern = w.kernel(o, i);
+                    for id in id_lo..id_hi {
+                        let dz = z - id * s;
+                        for ih in ih_lo..ih_hi {
+                            let dy = y - ih * s;
+                            let kbase = (dz * w.kh + dy) * w.kw;
+                            let krow = &kern[kbase..kbase + w.kw];
+                            gather_krow_classes(scr_row, input.row(i, id, ih), krow, s, ow);
+                        }
+                    }
+                }
+            }
+            i_lo = i_hi;
+        }
+        for r in t_lo..t_hi {
+            let src = &strip[(r - t_lo) * ow..(r - t_lo + 1) * ow];
+            unpack_classes(&mut out[(r - r_lo) * ow..(r - r_lo + 1) * ow], src, s);
+        }
+        t_lo = t_hi;
+    }
+    workspace::give_f32(scr);
+}
+
+/// Q8.8 blocked row core: the scratch strip holds raw [`Acc48`] bits
+/// (8-byte rows in the L1 budget), rounded once at unpack.
+#[allow(clippy::too_many_arguments)]
+fn gather_rows_blocked_q(
+    input: &Volume<Q88>,
+    w: &WeightsOIDHW<Q88>,
+    s: usize,
+    d_lo: usize,
+    od: usize,
+    oh: usize,
+    ow: usize,
+    r_lo: usize,
+    r_hi: usize,
+    out: &mut [Q88],
+) {
+    debug_assert_eq!(out.len(), (r_hi - r_lo) * ow);
+    if r_hi <= r_lo || ow == 0 {
+        return;
+    }
+    let tile = simd::tile_for(ow, 8, input.h * input.w, input.c);
+    let mut scr = workspace::take_i64(tile.rows * ow);
+    let mut t_lo = r_lo;
+    while t_lo < r_hi {
+        let t_hi = (t_lo + tile.rows).min(r_hi);
+        let strip = &mut scr[..(t_hi - t_lo) * ow];
+        strip.fill(0);
+        let mut i_lo = 0;
+        while i_lo < input.c {
+            let i_hi = (i_lo + tile.in_ch).min(input.c);
+            for r in t_lo..t_hi {
+                let o = r / (od * oh);
+                let z = d_lo + r / oh % od;
+                let y = r % oh;
+                let (id_lo, id_hi) = contrib_window(z, w.kd, s, input.d);
+                let (ih_lo, ih_hi) = contrib_window(y, w.kh, s, input.h);
+                let base = (r - t_lo) * ow;
+                let scr_row = &mut strip[base..base + ow];
+                for i in i_lo..i_hi {
+                    let kern = w.kernel(o, i);
+                    for id in id_lo..id_hi {
+                        let dz = z - id * s;
+                        for ih in ih_lo..ih_hi {
+                            let dy = y - ih * s;
+                            let kbase = (dz * w.kh + dy) * w.kw;
+                            let krow = &kern[kbase..kbase + w.kw];
+                            gather_krow_classes_q(scr_row, input.row(i, id, ih), krow, s, ow);
+                        }
+                    }
+                }
+            }
+            i_lo = i_hi;
+        }
+        for r in t_lo..t_hi {
+            let src = &strip[(r - t_lo) * ow..(r - t_lo + 1) * ow];
+            unpack_classes_q(&mut out[(r - r_lo) * ow..(r - r_lo + 1) * ow], src, s);
+        }
+        t_lo = t_hi;
+    }
+    workspace::give_i64(scr);
 }
 
 // ---------------------------------------------------------------------
@@ -704,7 +1126,22 @@ pub fn flip(w: &WeightsOIDHW<f32>) -> WeightsOIDHW<f32> {
 
 /// Compute output channels `[o_lo, o_hi)` of the VALID stride-1
 /// correlation into `out`, a buffer holding exactly those channels.
+/// Dispatches to the lane-blocked SIMD sweep or the scalar reference.
 fn corr_into(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    o_lo: usize,
+    o_hi: usize,
+    out: &mut [f32],
+) {
+    if simd::simd_enabled() {
+        corr_into_simd(input, w, o_lo, o_hi, out);
+    } else {
+        corr_into_scalar(input, w, o_lo, o_hi, out);
+    }
+}
+
+fn corr_into_scalar(
     input: &Volume<f32>,
     w: &WeightsOIDHW<f32>,
     o_lo: usize,
@@ -746,6 +1183,80 @@ fn corr_into(
     }
 }
 
+// Lane-blocked correlation: LANES_F32 output elements per iteration,
+// each lane keeping its own local accumulator over the identical
+// (kd, kh, kw) term order before the single add into the output row —
+// the scalar per-element semantics, unchanged. Dense correlation has
+// no zero-skip (the zero-inserted OOM map multiplies through zeros by
+// design), so the inner body is a plain shifted-window FMA.
+fn corr_into_simd(
+    input: &Volume<f32>,
+    w: &WeightsOIDHW<f32>,
+    o_lo: usize,
+    o_hi: usize,
+    out: &mut [f32],
+) {
+    const L: usize = simd::LANES_F32;
+    assert_eq!(input.c, w.i, "channel mismatch");
+    assert!(
+        input.d >= w.kd && input.h >= w.kh && input.w >= w.kw,
+        "kernel larger than input"
+    );
+    let od = input.d - w.kd + 1;
+    let oh = input.h - w.kh + 1;
+    let ow = input.w - w.kw + 1;
+    debug_assert_eq!(out.len(), (o_hi - o_lo) * od * oh * ow);
+    for o in o_lo..o_hi {
+        let o_base = (o - o_lo) * od * oh * ow;
+        for i in 0..input.c {
+            let kern = w.kernel(o, i);
+            for z in 0..od {
+                for y in 0..oh {
+                    let row_base = o_base + (z * oh + y) * ow;
+                    let out_row = &mut out[row_base..row_base + ow];
+                    let mut blocks = out_row.chunks_exact_mut(L);
+                    let mut x0 = 0usize;
+                    for ob in &mut blocks {
+                        let mut acc = [0.0f32; L];
+                        for kd in 0..w.kd {
+                            for kh in 0..w.kh {
+                                let in_row = input.row(i, z + kd, y + kh);
+                                let kbase = (kd * w.kh + kh) * w.kw;
+                                for (kw, &kv) in kern[kbase..kbase + w.kw].iter().enumerate() {
+                                    let src: &[f32; L] = in_row[x0 + kw..x0 + kw + L]
+                                        .try_into()
+                                        .expect("lane width");
+                                    for l in 0..L {
+                                        acc[l] += src[l] * kv;
+                                    }
+                                }
+                            }
+                        }
+                        for (d, a) in ob.iter_mut().zip(acc) {
+                            *d += a;
+                        }
+                        x0 += L;
+                    }
+                    for (j, d) in blocks.into_remainder().iter_mut().enumerate() {
+                        let x = x0 + j;
+                        let mut acc = 0.0f32;
+                        for kd in 0..w.kd {
+                            for kh in 0..w.kh {
+                                let in_row = input.row(i, z + kd, y + kh);
+                                let kbase = (kd * w.kh + kh) * w.kw;
+                                for (kw, &kv) in kern[kbase..kbase + w.kw].iter().enumerate() {
+                                    acc += in_row[x + kw] * kv;
+                                }
+                            }
+                        }
+                        *d += acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Dimension-uniform VALID correlation (CNN convention), stride 1.
 /// `kd = 1` on a depth-1 input is exactly the 2D case.
 pub fn corr(input: &Volume<f32>, w: &WeightsOIDHW<f32>) -> Volume<f32> {
@@ -754,6 +1265,17 @@ pub fn corr(input: &Volume<f32>, w: &WeightsOIDHW<f32>) -> Volume<f32> {
     let ow = input.w - w.kw + 1;
     let mut out = Volume::zeros(w.o, od, oh, ow);
     corr_into(input, w, 0, w.o, out.data_mut());
+    out
+}
+
+/// [`corr`] pinned to the scalar reference nest regardless of the SIMD
+/// mode.
+pub fn corr_scalar(input: &Volume<f32>, w: &WeightsOIDHW<f32>) -> Volume<f32> {
+    let od = input.d - w.kd + 1;
+    let oh = input.h - w.kh + 1;
+    let ow = input.w - w.kw + 1;
+    let mut out = Volume::zeros(w.o, od, oh, ow);
+    corr_into_scalar(input, w, 0, w.o, out.data_mut());
     out
 }
 
@@ -829,6 +1351,33 @@ pub fn crop_window<T: Copy + Default>(
 ) -> Volume<T> {
     assert!(d_lo + d <= vol.d && h <= vol.h && w <= vol.w);
     let mut out = Volume::zeros(vol.c, d, h, w);
+    for c in 0..vol.c {
+        for z in 0..d {
+            for y in 0..h {
+                let src = &vol.row(c, d_lo + z, y)[..w];
+                let base = ((c * d + z) * h + y) * w;
+                out.data_mut()[base..base + w].copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+/// [`crop_window`] with the output drawn from the [`workspace`] pool
+/// (every element is overwritten, so the pre-zeroed buffer costs one
+/// redundant memset, not an allocation). The serving and streaming
+/// paths use this to keep the scatter-then-crop kernel choice
+/// allocation-free in steady state; return the crop — and the full
+/// volume it came from — with [`workspace::give_volume_f32`].
+pub fn crop_window_pooled(
+    vol: &Volume<f32>,
+    d_lo: usize,
+    d: usize,
+    h: usize,
+    w: usize,
+) -> Volume<f32> {
+    assert!(d_lo + d <= vol.d && h <= vol.h && w <= vol.w);
+    let mut out = workspace::take_volume_f32(vol.c, d, h, w);
     for c in 0..vol.c {
         for z in 0..d {
             for y in 0..h {
@@ -1089,5 +1638,76 @@ mod tests {
         // K < S leaves gaps: S=3, K=1 reaches only multiples of 3
         assert_eq!(contrib_window(1, 1, 3, 4), (1, 1), "empty window");
         assert_eq!(contrib_window(3, 1, 3, 4), (1, 2));
+    }
+
+    #[test]
+    fn simd_dispatch_matches_scalar_twins_bitexact() {
+        // whatever path the dispatchers pick, bits must equal the
+        // pinned scalar twins — incl. K < S gap shapes and the
+        // residue-class tails of odd output widths
+        for (case, &(k, s)) in [(1usize, 1usize), (3, 1), (3, 2), (1, 3), (2, 3), (5, 2), (4, 4)]
+            .iter()
+            .enumerate()
+        {
+            let (mut input, wt) =
+                rand_case(900 + case as u64, (3, 2), (2, 4, 5), (k.min(2), k, k));
+            // exact zeros exercise the select-form zero-skip lanes
+            for (i, v) in input.data_mut().iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let a = deconv_iom(&input, &wt, s);
+            let b = deconv_iom_scalar(&input, &wt, s);
+            assert_eq!(a.data(), b.data(), "iom k={k} s={s}");
+            let mt = deconv_iom_threaded(&input, &wt, s, 3);
+            assert_eq!(mt.data(), b.data(), "iom threaded k={k} s={s}");
+            // a strict interior window: offset depth, cropped h and w
+            let (od, oh, ow) = (a.d.min(2), a.h - 1, a.w - 1);
+            let d_lo = a.d - od;
+            let gw = deconv_gather_window(&input, &wt, s, d_lo, od, oh, ow);
+            let gs = deconv_gather_window_scalar(&input, &wt, s, d_lo, od, oh, ow);
+            assert_eq!(gw.data(), gs.data(), "gather k={k} s={s}");
+            // cross-family: dispatch gather == scalar scatter, cropped
+            let want = crop_window(&b, d_lo, od, oh, ow);
+            assert_eq!(gw.data(), want.data(), "gather vs scatter k={k} s={s}");
+            let pooled = crop_window_pooled(&b, d_lo, od, oh, ow);
+            assert_eq!(pooled.data(), want.data(), "pooled crop k={k} s={s}");
+
+            // Q8.8 twins through the same shapes
+            let qi = Volume::from_vec(
+                input.c,
+                input.d,
+                input.h,
+                input.w,
+                input.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+            );
+            let qw = WeightsOIDHW::from_vec(
+                wt.o,
+                wt.i,
+                wt.kd,
+                wt.kh,
+                wt.kw,
+                wt.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+            );
+            let qa = deconv_iom_q(&qi, &qw, s);
+            let qb = deconv_iom_q_scalar(&qi, &qw, s);
+            assert_eq!(qa.data(), qb.data(), "iom_q k={k} s={s}");
+            let qmt = deconv_iom_q_threaded(&qi, &qw, s, 3);
+            assert_eq!(qmt.data(), qb.data(), "iom_q threaded k={k} s={s}");
+            let qgw = deconv_gather_window_q(&qi, &qw, s, d_lo, od, oh, ow);
+            let qgs = deconv_gather_window_q_scalar(&qi, &qw, s, d_lo, od, oh, ow);
+            assert_eq!(qgw.data(), qgs.data(), "gather_q k={k} s={s}");
+            assert_eq!(
+                qgw.data(),
+                crop_window(&qb, d_lo, od, oh, ow).data(),
+                "gather_q vs scatter_q k={k} s={s}"
+            );
+        }
+        // the dense correlation (OOM hot loop), incl. a lane-tail width
+        let (input, wt) = rand_case(990, (2, 3), (2, 6, 3 + crate::func::simd::LANES_F32), (2, 3, 3));
+        let c = corr(&input, &wt);
+        let cs = corr_scalar(&input, &wt);
+        assert_eq!(c.data(), cs.data(), "corr dispatch vs scalar");
     }
 }

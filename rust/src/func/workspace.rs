@@ -1,0 +1,204 @@
+//! Thread-local scratch-buffer pools for the allocation-free host
+//! hot path.
+//!
+//! The kernel entry points in [`super::uniform`], the coordinator's
+//! golden forward, and the streaming session all need per-call output
+//! and scratch buffers whose sizes repeat request after request. This
+//! module lends them out of a thread-local free list instead of the
+//! global allocator: [`take_f32`] hands back a zero-filled buffer of
+//! the requested length, reusing any pooled allocation whose
+//! *capacity* fits (so steady-state serving performs **zero** heap
+//! allocation per request — the contract the counting-allocator
+//! battery in `tests/obs_trace.rs` pins); [`give_f32`] returns a
+//! buffer to the pool when its holder is done.
+//!
+//! Lifecycle: buffer sizes grow monotonically toward each workload's
+//! fixpoint during warm-up, after which every `take` is a capacity
+//! hit. Buffers that escape to callers (a forward pass's final
+//! output) simply leave the pool; the next `take` of that size
+//! allocates a replacement. The pool holds at most [`MAX_POOLED`]
+//! buffers per element type — give-backs beyond that are dropped, so
+//! an unusual burst cannot pin memory forever. Pools are
+//! thread-local: scoped kernel worker threads see fresh (empty)
+//! pools and fall back to plain allocation, which is fine — spawning
+//! those workers allocates stacks anyway, and the allocation-free
+//! batteries pin the single-threaded serving path.
+
+use std::cell::RefCell;
+
+use crate::tensor::Volume;
+
+/// Maximum buffers retained per element-type pool; give-backs beyond
+/// this are dropped.
+pub const MAX_POOLED: usize = 32;
+
+/// Running pool counters (monotonic), for tests and diagnostics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take` calls served from a pooled buffer (no allocation).
+    pub hits: u64,
+    /// `take` calls that had to allocate (empty pool or no capacity fit).
+    pub misses: u64,
+    /// Buffers accepted back by `give`.
+    pub returned: u64,
+}
+
+struct Pool<T> {
+    bufs: Vec<Vec<T>>,
+    stats: PoolStats,
+}
+
+impl<T> Pool<T> {
+    fn new() -> Pool<T> {
+        Pool {
+            // full capacity up front: pushing a give-back never reallocates
+            bufs: Vec::with_capacity(MAX_POOLED),
+            stats: PoolStats::default(),
+        }
+    }
+}
+
+impl<T: Copy + Default> Pool<T> {
+    fn take(&mut self, len: usize) -> Vec<T> {
+        let mut buf = match self.bufs.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                self.stats.hits += 1;
+                self.bufs.swap_remove(i)
+            }
+            None => {
+                self.stats.misses += 1;
+                Vec::with_capacity(len)
+            }
+        };
+        buf.clear();
+        buf.resize(len, T::default());
+        buf
+    }
+
+    fn give(&mut self, buf: Vec<T>) {
+        if buf.capacity() == 0 || self.bufs.len() >= MAX_POOLED {
+            return;
+        }
+        self.stats.returned += 1;
+        self.bufs.push(buf);
+    }
+}
+
+thread_local! {
+    static POOL_F32: RefCell<Pool<f32>> = RefCell::new(Pool::new());
+    static POOL_I64: RefCell<Pool<i64>> = RefCell::new(Pool::new());
+}
+
+/// Check out a zero-filled `f32` buffer of exactly `len` elements.
+/// Reuses a pooled allocation when one with sufficient capacity
+/// exists (zero-filling is a memset, not an allocation).
+pub fn take_f32(len: usize) -> Vec<f32> {
+    POOL_F32.with(|p| p.borrow_mut().take(len))
+}
+
+/// Return an `f32` buffer to the pool for reuse.
+pub fn give_f32(buf: Vec<f32>) {
+    POOL_F32.with(|p| p.borrow_mut().give(buf))
+}
+
+/// Check out a zero-filled `i64` buffer (raw [`crate::fixed::Acc48`]
+/// bits for the Q8.8 kernels' wide accumulation scratch).
+pub fn take_i64(len: usize) -> Vec<i64> {
+    POOL_I64.with(|p| p.borrow_mut().take(len))
+}
+
+/// Return an `i64` buffer to the pool for reuse.
+pub fn give_i64(buf: Vec<i64>) {
+    POOL_I64.with(|p| p.borrow_mut().give(buf))
+}
+
+/// Check out a zero-filled `c × d × h × w` [`Volume`] backed by a
+/// pooled buffer — the pooled equivalent of [`Volume::zeros`].
+pub fn take_volume_f32(c: usize, d: usize, h: usize, w: usize) -> Volume<f32> {
+    Volume::from_vec(c, d, h, w, take_f32(c * d * h * w))
+}
+
+/// Return a volume's backing buffer to the pool.
+pub fn give_volume_f32(vol: Volume<f32>) {
+    give_f32(vol.into_vec());
+}
+
+/// Snapshot of the calling thread's `f32` pool counters.
+pub fn stats_f32() -> PoolStats {
+    POOL_F32.with(|p| p.borrow().stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_capacity_and_zero_fills() {
+        let before = stats_f32();
+        let mut a = take_f32(128);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        let cap = a.capacity();
+        give_f32(a);
+        // a smaller request must reuse the same allocation, zeroed
+        let b = take_f32(64);
+        assert!(b.capacity() >= 64);
+        assert_eq!(b.capacity(), cap, "capacity-fit reuse");
+        assert!(b.iter().all(|&v| v == 0.0), "pooled buffers come back zeroed");
+        let after = stats_f32();
+        assert_eq!(after.hits - before.hits, 1);
+        assert_eq!(after.returned - before.returned, 1);
+        give_f32(b);
+    }
+
+    #[test]
+    fn growth_reaches_a_fixpoint() {
+        // after the largest size is pooled, every take is a hit
+        for len in [16usize, 64, 256] {
+            give_f32(take_f32(len));
+        }
+        let before = stats_f32();
+        for _ in 0..10 {
+            for len in [16usize, 64, 256] {
+                give_f32(take_f32(len));
+            }
+        }
+        let after = stats_f32();
+        assert_eq!(after.misses, before.misses, "steady state never allocates");
+        assert_eq!(after.hits - before.hits, 30);
+    }
+
+    #[test]
+    fn volume_round_trip_is_zeroed() {
+        let mut v = take_volume_f32(2, 1, 3, 4);
+        *v.at_mut(1, 0, 2, 3) = 5.0;
+        give_volume_f32(v);
+        let v2 = take_volume_f32(2, 1, 3, 4);
+        assert_eq!((v2.c, v2.d, v2.h, v2.w), (2, 1, 3, 4));
+        assert!(v2.data().iter().all(|&x| x == 0.0));
+        give_volume_f32(v2);
+    }
+
+    #[test]
+    fn empty_and_overflow_givebacks_are_dropped() {
+        give_f32(Vec::new()); // capacity 0: dropped silently
+        let before = stats_f32();
+        give_f32(Vec::new());
+        assert_eq!(stats_f32().returned, before.returned);
+        let bufs: Vec<Vec<f32>> = (0..MAX_POOLED + 4).map(|_| Vec::with_capacity(8)).collect();
+        for b in bufs {
+            give_f32(b);
+        }
+        // no panic, pool capped — a take still works
+        give_f32(take_f32(8));
+    }
+
+    #[test]
+    fn i64_pool_round_trips() {
+        let a = take_i64(32);
+        assert!(a.iter().all(|&x| x == 0));
+        give_i64(a);
+        let b = take_i64(16);
+        assert!(b.capacity() >= 32, "reused the larger pooled buffer");
+        give_i64(b);
+    }
+}

@@ -217,7 +217,19 @@ fn compile_with(
 /// [`crate::serve::PlanCache`] compile once per (model, config) pair
 /// and share the handle across accelerator instances.
 pub fn cache_key_for(network: &str, cfg: &AccelConfig) -> String {
-    format!("{}@{}", network, cfg.fingerprint())
+    let mut s = String::new();
+    cache_key_into(&mut s, network, cfg);
+    s
+}
+
+/// Render [`cache_key_for`] into a reused buffer (cleared first) —
+/// the allocation-free form the serving hot path uses once the buffer
+/// has grown to its fixpoint capacity.
+pub fn cache_key_into(buf: &mut String, network: &str, cfg: &AccelConfig) {
+    buf.clear();
+    buf.push_str(network);
+    buf.push('@');
+    cfg.write_fingerprint(buf);
 }
 
 impl NetworkPlan {

@@ -119,9 +119,25 @@ impl PlanCache {
         obs: &Obs,
     ) -> Result<PlanHandle, String> {
         let key = PlanCache::key(net.name, cfg);
+        self.get_or_compile_keyed_obs(&key, cfg, net, obs)
+    }
+
+    /// [`PlanCache::get_or_compile_obs`] with the cache key rendered by
+    /// the caller (it must equal `PlanCache::key(net.name, cfg)`). The
+    /// serving hot path renders keys into a reused buffer
+    /// ([`crate::graph::plan::cache_key_into`]), so a cache *hit*
+    /// performs zero heap allocation — the contract the steady-state
+    /// battery in `tests/obs_trace.rs` pins.
+    pub fn get_or_compile_keyed_obs(
+        &mut self,
+        key: &str,
+        cfg: &AccelConfig,
+        net: &Network,
+        obs: &Obs,
+    ) -> Result<PlanHandle, String> {
         self.tick += 1;
         obs.gauge("plan_cache.lookups", self.tick as f64);
-        if let Some(e) = self.plans.get_mut(&key) {
+        if let Some(e) = self.plans.get_mut(key) {
             e.last_used = self.tick;
             self.stats.hits += 1;
             obs.count("plan_cache.hits", 1);
@@ -131,7 +147,7 @@ impl PlanCache {
         self.stats.misses += 1;
         obs.count("plan_cache.misses", 1);
         self.plans.insert(
-            key,
+            key.to_string(),
             Entry {
                 plan: PlanHandle::clone(&plan),
                 last_used: self.tick,

@@ -355,6 +355,10 @@ pub struct Fleet {
     /// observability is on (feeds the nested layer spans of each
     /// dispatched batch).
     step_memo: BTreeMap<String, Vec<StepTrace>>,
+    /// Reused plan-cache key buffer: [`Fleet::batch_latency_s`] renders
+    /// `<model>@<fingerprint>` in place, so the steady-state request
+    /// path (warm caches) allocates nothing.
+    key_buf: String,
     opts: FleetOptions,
     obs: Obs,
 }
@@ -425,6 +429,7 @@ impl Fleet {
             model_cfgs,
             sim_memo_s: BTreeMap::new(),
             step_memo: BTreeMap::new(),
+            key_buf: String::new(),
             opts,
             obs,
         };
@@ -462,7 +467,10 @@ impl Fleet {
 
     /// Simulated accelerator seconds for one batch of `bsize` requests
     /// against `model`: the cached compiled plan at that batch size,
-    /// executed by [`simulate_plan`]. Compiles on first use.
+    /// executed by [`simulate_plan`]. Compiles on first use. The
+    /// steady state (plan cache and simulation memo warm) renders the
+    /// cache key into the reused [`Fleet::key_buf`] and performs zero
+    /// heap allocation per call — pinned by `tests/obs_trace.rs`.
     pub fn batch_latency_s(&mut self, model: &str, bsize: usize) -> Result<f64, String> {
         let net = self
             .networks
@@ -474,9 +482,20 @@ impl Fleet {
             .cloned()
             .ok_or_else(|| format!("no resolved config for model '{model}'"))?;
         cfg.batch = bsize.max(1);
-        let plan = self.cache.get_or_compile_obs(&cfg, net, &self.obs)?;
-        let key = plan.cache_key();
-        if let Some(&lat) = self.sim_memo_s.get(&key) {
+        let mut key_buf = std::mem::take(&mut self.key_buf);
+        crate::graph::plan::cache_key_into(&mut key_buf, net.name, &cfg);
+        let plan = match self
+            .cache
+            .get_or_compile_keyed_obs(&key_buf, &cfg, net, &self.obs)
+        {
+            Ok(p) => p,
+            Err(e) => {
+                self.key_buf = key_buf;
+                return Err(e);
+            }
+        };
+        if let Some(&lat) = self.sim_memo_s.get(key_buf.as_str()) {
+            self.key_buf = key_buf;
             return Ok(lat);
         }
         let metrics = simulate_plan(&plan);
@@ -497,7 +516,7 @@ impl Fleet {
             if self.step_memo.len() >= 4 * FLEET_PLAN_CACHE_CAP {
                 self.step_memo.clear();
             }
-            self.step_memo.insert(key.clone(), steps);
+            self.step_memo.insert(key_buf.clone(), steps);
         }
         // Bound the memo alongside the bounded plan cache: a reset is
         // deterministic (simulate_plan is pure) and only costs a
@@ -505,7 +524,8 @@ impl Fleet {
         if self.sim_memo_s.len() >= 4 * FLEET_PLAN_CACHE_CAP {
             self.sim_memo_s.clear();
         }
-        self.sim_memo_s.insert(key, lat);
+        self.sim_memo_s.insert(key_buf.clone(), lat);
+        self.key_buf = key_buf;
         Ok(lat)
     }
 

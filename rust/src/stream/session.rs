@@ -36,7 +36,7 @@ use crate::accel::{kernel as kern, timing, AccelConfig, KernelChoice};
 use crate::coordinator::service::forward_uniform_obs;
 use crate::dcnn::{Dims, LayerSpec, Network};
 use crate::fixed::Q88;
-use crate::func::uniform;
+use crate::func::{uniform, workspace};
 use crate::graph::{passes, stream_shapes, LayerStreamShape, NetworkGraph};
 use crate::obs::Obs;
 use crate::report::json::JsonObj;
@@ -97,22 +97,8 @@ impl<T: Copy + Default> LayerStream<T> {
     where
         K: Fn(&Volume<T>, usize, usize, usize, usize) -> (Volume<T>, usize),
     {
+        self.check_incoming(incoming)?;
         let spec = &self.spec;
-        if (incoming.c, incoming.h, incoming.w) != (spec.in_c, spec.in_h, spec.in_w) {
-            return Err(format!(
-                "layer '{}': chunk frames are {}x{}x{} (c×h×w), expected {}x{}x{}",
-                spec.name, incoming.c, incoming.h, incoming.w, spec.in_c, spec.in_h, spec.in_w
-            ));
-        }
-        if incoming.d == 0 {
-            return Err(format!("layer '{}': empty chunk", spec.name));
-        }
-        if self.seen + incoming.d > self.shape.in_frames {
-            return Err(format!(
-                "layer '{}': {} arriving frames overflow the declared depth {} ({} seen)",
-                spec.name, incoming.d, self.shape.in_frames, self.seen
-            ));
-        }
         // Invariant: held covers input ids [first_contributor(emitted), seen).
         let start = self.seen - self.held.d;
         let slab = self.held.concat_depth(incoming);
@@ -136,6 +122,100 @@ impl<T: Copy + Default> LayerStream<T> {
         self.emitted = ready;
         Ok((out, slab_frames))
     }
+
+    fn check_incoming(&self, incoming: &Volume<T>) -> Result<(), String> {
+        let spec = &self.spec;
+        if (incoming.c, incoming.h, incoming.w) != (spec.in_c, spec.in_h, spec.in_w) {
+            return Err(format!(
+                "layer '{}': chunk frames are {}x{}x{} (c×h×w), expected {}x{}x{}",
+                spec.name, incoming.c, incoming.h, incoming.w, spec.in_c, spec.in_h, spec.in_w
+            ));
+        }
+        if incoming.d == 0 {
+            return Err(format!("layer '{}': empty chunk", spec.name));
+        }
+        if self.seen + incoming.d > self.shape.in_frames {
+            return Err(format!(
+                "layer '{}': {} arriving frames overflow the declared depth {} ({} seen)",
+                spec.name, incoming.d, self.shape.in_frames, self.seen
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl LayerStream<f32> {
+    /// [`LayerStream::step`] with every intermediate buffer — the
+    /// halo+chunk slab and the retained halo — drawn from and returned
+    /// to the [`workspace`] pool, so an f32 session's steady state
+    /// performs zero heap allocation per chunk (`tests/obs_trace.rs`
+    /// counts). Identical math and identical peak accounting.
+    fn step_pooled<K>(
+        &mut self,
+        incoming: &Volume<f32>,
+        kernel: K,
+        other_held_elems: usize,
+        peak: &mut usize,
+    ) -> Result<(Volume<f32>, usize), String>
+    where
+        K: Fn(&Volume<f32>, usize, usize, usize, usize) -> (Volume<f32>, usize),
+    {
+        self.check_incoming(incoming)?;
+        // Invariant: held covers input ids [first_contributor(emitted), seen).
+        let start = self.seen - self.held.d;
+        let slab = concat_depth_pooled(&self.held, incoming);
+        *peak = (*peak).max(other_held_elems + self.held.len() + incoming.len() + slab.len());
+
+        let new_seen = self.seen + incoming.d;
+        let ready = self.shape.s * new_seen;
+        let (out, transient) = kernel(
+            &slab,
+            self.emitted - start * self.shape.s,
+            ready - self.emitted,
+            self.spec.out_h(),
+            self.spec.out_w(),
+        );
+        *peak = (*peak).max(other_held_elems + slab.len() + transient + out.len());
+
+        let keep_lo = self.shape.first_contributor(ready).min(new_seen);
+        let new_held = slice_depth_pooled(&slab, keep_lo - start, new_seen - keep_lo);
+        workspace::give_volume_f32(std::mem::replace(&mut self.held, new_held));
+        let slab_frames = slab.d;
+        workspace::give_volume_f32(slab);
+        self.seen = new_seen;
+        self.emitted = ready;
+        Ok((out, slab_frames))
+    }
+}
+
+/// Pool-backed twin of [`Volume::concat_depth`] (per-channel copy into
+/// a [`workspace`] buffer).
+fn concat_depth_pooled(a: &Volume<f32>, b: &Volume<f32>) -> Volume<f32> {
+    debug_assert_eq!((a.c, a.h, a.w), (b.c, b.h, b.w));
+    let plane = a.h * a.w;
+    let d = a.d + b.d;
+    let mut out = workspace::take_volume_f32(a.c, d, a.h, a.w);
+    for c in 0..a.c {
+        let dst = c * d * plane;
+        out.data_mut()[dst..dst + a.d * plane]
+            .copy_from_slice(&a.data()[c * a.d * plane..(c + 1) * a.d * plane]);
+        out.data_mut()[dst + a.d * plane..dst + d * plane]
+            .copy_from_slice(&b.data()[c * b.d * plane..(c + 1) * b.d * plane]);
+    }
+    out
+}
+
+/// Pool-backed twin of [`Volume::slice_depth`].
+fn slice_depth_pooled(v: &Volume<f32>, d_lo: usize, d: usize) -> Volume<f32> {
+    debug_assert!(d_lo + d <= v.d);
+    let plane = v.h * v.w;
+    let mut out = workspace::take_volume_f32(v.c, d, v.h, v.w);
+    for c in 0..v.c {
+        let src = (c * v.d + d_lo) * plane;
+        let dst = c * d * plane;
+        out.data_mut()[dst..dst + d * plane].copy_from_slice(&v.data()[src..src + d * plane]);
+    }
+    out
 }
 
 /// Check one uniform weight set per layer, with matching shapes.
@@ -295,6 +375,15 @@ pub struct StreamSession {
     /// Memoized plan latency per layer-0 slab size (avoids re-leaking
     /// `with_depth` names and re-simulating per chunk).
     plan_memo: BTreeMap<usize, f64>,
+    /// Memoized per-layer chunk cycle estimate keyed by
+    /// `(layer index, slab frames)` — `timing::simulate_chunk` clones
+    /// the layer spec (a `String` name), which would break the
+    /// zero-allocation steady state.
+    sim_cycles_memo: BTreeMap<(usize, usize), u64>,
+    /// Reused per-chunk scratch: the slab depths of the last chunk.
+    slabs_scratch: Vec<usize>,
+    /// Reused per-chunk scratch: the per-layer cycle estimates.
+    cycles_scratch: Vec<u64>,
     /// Observability handle: per-chunk and per-layer spans on the
     /// `stream` track, kernel spans, and the live-memory gauge. Off by
     /// default; see [`StreamSession::set_obs`].
@@ -346,6 +435,9 @@ impl StreamSession {
             peak_live_elems: 0,
             cache: PlanCache::with_capacity(8),
             plan_memo: BTreeMap::new(),
+            sim_cycles_memo: BTreeMap::new(),
+            slabs_scratch: Vec::new(),
+            cycles_scratch: Vec::new(),
             obs: Obs::off(),
         })
     }
@@ -405,17 +497,33 @@ impl StreamSession {
     /// 3D chunks stream through the halo-carrying layer chain; for 2D
     /// networks each depth slice is an independent frame inference
     /// (chunk=1 passthrough semantics regardless of the pushed depth).
+    /// The emitted [`StreamChunkOutput::frames`] volume is drawn from
+    /// the [`workspace`] pool on the 3D path; callers that are done
+    /// with it can return it via [`workspace::give_volume_f32`] to
+    /// keep long streams allocation-free.
     pub fn push_chunk(&mut self, chunk: Volume<f32>) -> Result<StreamChunkOutput, String> {
+        let chunk_d = chunk.d;
         let (frames, slabs) = match self.net.dims {
-            Dims::D3 => self.push_chunk_3d(&chunk)?,
+            Dims::D3 => self.push_chunk_3d(chunk)?,
             Dims::D2 => self.push_chunk_2d(&chunk)?,
         };
-        // per-chunk cycle estimate over the slabs actually processed
-        let mut layer_cycles = Vec::with_capacity(self.net.layers.len());
-        for (layer, &slab) in self.net.layers.iter().zip(&slabs) {
-            let mut c = timing::simulate_chunk(&self.cfg, layer, slab).total_cycles;
+        // per-chunk cycle estimate over the slabs actually processed,
+        // memoized per (layer, slab depth) — a stream revisits only a
+        // handful of slab shapes
+        let mut layer_cycles = std::mem::take(&mut self.cycles_scratch);
+        layer_cycles.clear();
+        for (idx, &slab) in slabs.iter().enumerate() {
+            let mut c = match self.sim_cycles_memo.get(&(idx, slab)) {
+                Some(&c) => c,
+                None => {
+                    let c = timing::simulate_chunk(&self.cfg, &self.net.layers[idx], slab)
+                        .total_cycles;
+                    self.sim_cycles_memo.insert((idx, slab), c);
+                    c
+                }
+            };
             if self.net.dims == Dims::D2 {
-                c *= chunk.d as u64; // one full pass per frame
+                c *= chunk_d as u64; // one full pass per frame
             }
             layer_cycles.push(c);
         }
@@ -423,17 +531,19 @@ impl StreamSession {
         // compiled-plan path for the chunk-shaped network
         let per_pass = self.chunk_plan_s(slabs[0])?;
         let plan_s = match self.net.dims {
-            Dims::D2 => per_pass * chunk.d as f64, // one plan pass per frame
+            Dims::D2 => per_pass * chunk_d as f64, // one plan pass per frame
             Dims::D3 => per_pass,
         };
         if self.obs.is_enabled() {
-            self.trace_chunk(chunk.d, frames.d, &slabs, &layer_cycles, plan_s);
+            self.trace_chunk(chunk_d, frames.d, &slabs, &layer_cycles, plan_s);
         }
-        self.frames_in += chunk.d;
+        self.frames_in += chunk_d;
         self.frames_out += frames.d;
         self.chunks += 1;
         self.total_cycles += cycles;
         self.plan_s += plan_s;
+        self.slabs_scratch = slabs;
+        self.cycles_scratch = layer_cycles;
         Ok(StreamChunkOutput {
             frames,
             cycles,
@@ -502,11 +612,16 @@ impl StreamSession {
         self.obs.count("stream.frames_out", frames_out as u64);
     }
 
-    /// 3D: stream the chunk through the halo-carrying layer chain.
-    fn push_chunk_3d(&mut self, chunk: &Volume<f32>) -> Result<(Volume<f32>, Vec<usize>), String> {
+    /// 3D: stream the chunk through the halo-carrying layer chain. The
+    /// chunk is consumed: its buffer becomes the first layer's input
+    /// and then returns to the [`workspace`] pool, and every
+    /// inter-layer volume round-trips through the pool too — the
+    /// steady state allocates nothing.
+    fn push_chunk_3d(&mut self, chunk: Volume<f32>) -> Result<(Volume<f32>, Vec<usize>), String> {
         let mut peak = self.peak_live_elems;
-        let mut slabs = Vec::with_capacity(self.layers.len());
-        let mut cur = chunk.clone();
+        let mut slabs = std::mem::take(&mut self.slabs_scratch);
+        slabs.clear();
+        let mut cur = chunk;
         let ktrack = self.obs.track("kernel");
         for i in 0..self.layers.len() {
             let other: usize = self
@@ -536,13 +651,15 @@ impl StreamSession {
                 );
                 self.obs.count("kernel.invocations", 1);
             }
-            let (out, slab) = self.layers[i].step(
+            let (out, slab) = self.layers[i].step_pooled(
                 &cur,
                 |v: &Volume<f32>, d_lo, od, oh, ow| match choice {
                     KernelChoice::Scatter => {
                         let full = uniform::deconv_iom_threaded(v, w, s, threads);
                         let transient = full.len();
-                        (uniform::crop_window(&full, d_lo, od, oh, ow), transient)
+                        let cropped = uniform::crop_window_pooled(&full, d_lo, od, oh, ow);
+                        workspace::give_volume_f32(full);
+                        (cropped, transient)
                     }
                     KernelChoice::Gather => (
                         uniform::deconv_gather_window_threaded(v, w, s, d_lo, od, oh, ow, threads),
@@ -554,7 +671,8 @@ impl StreamSession {
             )?;
             drop(span);
             slabs.push(slab);
-            cur = out;
+            // the consumed layer input goes back to the scratch pool
+            workspace::give_volume_f32(std::mem::replace(&mut cur, out));
         }
         self.peak_live_elems = peak;
         Ok((cur, slabs))

@@ -214,6 +214,13 @@ impl<T: Copy + Default> Volume<T> {
         Tensor::from_vec(&[self.c, self.d, self.h, self.w], self.data)
     }
 
+    /// Consume into the raw `C × D × H × W` row-major buffer
+    /// (zero-copy) — how volumes return to the scratch pool in
+    /// `func::workspace`.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
     /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()

@@ -10,10 +10,15 @@
 //!    round-trips it) carrying spans from every instrumented
 //!    subsystem;
 //! 3. a disabled recorder costs the forward hot path nothing: no
-//!    allocation, bit-identical outputs.
+//!    allocation, bit-identical outputs;
+//! 4. the serving steady state is allocation-free: once caches, memos
+//!    and the [`udcnn::func::workspace`] pools are warm, a fleet
+//!    request costs zero heap allocations and so does a streaming
+//!    chunk (input provided, output buffer returned to the pool).
 //!
-//! A counting global allocator backs (3); every test serializes on
-//! one mutex so concurrent tests cannot pollute the counter.
+//! A counting global allocator backs (3) and (4); every test
+//! serializes on one mutex so concurrent tests cannot pollute the
+//! counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeSet;
@@ -177,6 +182,81 @@ fn compile_trace_carries_per_pass_spans() {
         assert!(names.contains(pass), "compile trace missing pass '{pass}'");
     }
     assert!(cats_of(&rec.trace_json()).contains("pass"));
+}
+
+#[test]
+fn fleet_steady_state_requests_allocate_nothing() {
+    let _g = LOCK.lock().unwrap();
+    let mut fleet = Fleet::new_obs(
+        vec![zoo::tiny_2d(), zoo::tiny_3d()],
+        FleetOptions {
+            instances: 2,
+            ..FleetOptions::default()
+        },
+        Obs::off(),
+    )
+    .unwrap();
+    // Warm-up: compile the plans and fill the simulation memo for every
+    // (model, batch) pair the counted loop will request. Bring-up
+    // already warmed the policy's max batch; bsize=2 is new here.
+    for model in ["tiny-2d", "tiny-3d"] {
+        for _ in 0..3 {
+            fleet.batch_latency_s(model, 2).unwrap();
+            fleet.batch_latency_s(model, 8).unwrap();
+        }
+    }
+    let (allocs, total) = alloc_count(|| {
+        let mut acc = 0.0f64;
+        for i in 0..32 {
+            let model = if i % 2 == 0 { "tiny-2d" } else { "tiny-3d" };
+            let bsize = if i % 4 < 2 { 2 } else { 8 };
+            acc += fleet.batch_latency_s(model, bsize).unwrap();
+        }
+        acc
+    });
+    assert!(total > 0.0, "latencies must be positive");
+    assert_eq!(
+        allocs, 0,
+        "warm-cache batch_latency_s must not allocate (32 requests, 2 models)"
+    );
+}
+
+#[test]
+fn stream_steady_state_chunks_allocate_nothing() {
+    let _g = LOCK.lock().unwrap();
+    let net = zoo::by_name("tiny-3d").unwrap().with_depth(24);
+    let mut cfg = AccelConfig::paper_for(net.dims);
+    cfg.batch = 1;
+    let weights = synth_uniform_weights(&net, 0x5EED);
+    // threads=1 keeps every kernel on this thread (and its pool); the
+    // session runs without observability, like a production stream.
+    let mut sess = StreamSession::new(&net, weights, cfg, 1).unwrap();
+    // Build every chunk up front so the counted region performs no
+    // input allocation of its own.
+    let mut chunks: Vec<_> = (0..6)
+        .map(|i| synth_frames(&net.layers[0], 0xAB, i * 4, 4))
+        .collect();
+    // Warm-up: 4 chunks drive the workspace pool, the plan cache and
+    // the cycle memo to their fixpoints (slab depths repeat from the
+    // second chunk on). Returning the emitted frames closes the loop.
+    for chunk in chunks.drain(..4) {
+        let out = sess.push_chunk(chunk).unwrap();
+        udcnn::func::workspace::give_volume_f32(out.frames);
+    }
+    let (allocs, frames_out) = alloc_count(|| {
+        let mut emitted = 0usize;
+        for chunk in chunks.drain(..) {
+            let out = sess.push_chunk(chunk).unwrap();
+            emitted += out.frames.d;
+            udcnn::func::workspace::give_volume_f32(out.frames);
+        }
+        emitted
+    });
+    assert!(frames_out > 0, "counted chunks must emit frames");
+    assert_eq!(
+        allocs, 0,
+        "steady-state push_chunk must not allocate (2 chunks after warm-up)"
+    );
 }
 
 #[test]

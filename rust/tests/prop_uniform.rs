@@ -217,6 +217,114 @@ fn prop_insert_and_corr_fold_bitexact() {
     });
 }
 
+/// SIMD dispatch vs scalar reference at adversarial output widths.
+///
+/// The vectorized core (`func::simd`) processes output elements in
+/// lanes of `LANES_F32`; the widths that break lane code are the ones
+/// straddling the lane boundary. This property sweeps output widths
+/// `W ∈ {lane−1, lane, lane+1, 2·lane+3}` over strides 1..3, kernel
+/// sizes K ∈ [S, S+2], f32 and Q8.8, scatter and gather families —
+/// and demands *bit-exact* equality against the scalar reference
+/// nests (`*_scalar` twins bypass the runtime SIMD toggle), plus the
+/// cross-family crop identity and thread-count invariance.
+#[test]
+fn prop_simd_tail_widths_bitexact_vs_scalar() {
+    let lane = udcnn::func::simd::LANES_F32;
+    check(Config { cases: 40, ..Default::default() }, |g| {
+        let (c_in, c_out) = (g.int(1, 3), g.int(1, 3));
+        let s = *g.choose(&[1usize, 2, 3]);
+        let k = s + g.int(0, 2);
+        let wout = *g.choose(&[lane - 1, lane, lane + 1, 2 * lane + 3]);
+        // in_w = wout keeps the full extent (in_w−1)·S + K ≥ wout, so
+        // wout is a legal gather-window width.
+        let (d, h, w) = (g.int(1, 2), g.int(1, 3), wout);
+        let mut input = Volume::zeros(c_in, d, h, w);
+        for v in input.data_mut() {
+            *v = g.f32(-2.0, 2.0);
+        }
+        // exact zeros exercise the zero-skip select form
+        if g.int(0, 1) == 1 {
+            for (i, v) in input.data_mut().iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        let mut wt = WeightsOIDHW::zeros(c_out, c_in, k, k, k);
+        for v in wt.data_mut() {
+            *v = g.f32(-1.0, 1.0);
+        }
+        let fd = (d - 1) * s + k;
+        let fh = (h - 1) * s + k;
+
+        // scatter family: dispatch == scalar == threaded
+        let scalar = uniform::deconv_iom_scalar(&input, &wt, s);
+        let fast = uniform::deconv_iom(&input, &wt, s);
+        if scalar.data() != fast.data() {
+            return Err(format!("IOM dispatch != scalar (W={wout}, s={s}, k={k})"));
+        }
+        let t = g.int(2, 6);
+        let multi = uniform::deconv_iom_threaded(&input, &wt, s, t);
+        if scalar.data() != multi.data() {
+            return Err(format!("threaded IOM != scalar (W={wout}, t={t})"));
+        }
+
+        // gather family on a sub-window, plus the cross-family crop
+        // identity against the scalar scatter full extent
+        let od = fd.min(2);
+        let d_lo = g.int(0, fd - od);
+        let gs = uniform::deconv_gather_window_scalar(&input, &wt, s, d_lo, od, fh, wout);
+        let gf = uniform::deconv_gather_window(&input, &wt, s, d_lo, od, fh, wout);
+        if gs.data() != gf.data() {
+            return Err(format!("gather dispatch != scalar (W={wout}, s={s}, k={k})"));
+        }
+        let cropped = uniform::crop_window(&scalar, d_lo, od, fh, wout);
+        if cropped.data() != gf.data() {
+            return Err(format!("gather window != cropped scatter (W={wout}, d_lo={d_lo})"));
+        }
+
+        // Q8.8 twins: same shapes, integer accumulation
+        let qi = Volume::from_vec(
+            c_in,
+            d,
+            h,
+            w,
+            input.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+        );
+        let qw = WeightsOIDHW::from_vec(
+            c_out,
+            c_in,
+            k,
+            k,
+            k,
+            wt.data().iter().map(|&x| Q88::from_f32(x)).collect(),
+        );
+        let qs = uniform::deconv_iom_q_scalar(&qi, &qw, s);
+        let qf = uniform::deconv_iom_q(&qi, &qw, s);
+        if qs.data() != qf.data() {
+            return Err(format!("Q8.8 IOM dispatch != scalar (W={wout})"));
+        }
+        let qgs = uniform::deconv_gather_window_q_scalar(&qi, &qw, s, d_lo, od, fh, wout);
+        let qgf = uniform::deconv_gather_window_q(&qi, &qw, s, d_lo, od, fh, wout);
+        if qgs.data() != qgf.data() {
+            return Err(format!("Q8.8 gather dispatch != scalar (W={wout})"));
+        }
+
+        // dense correlation sized so the output row is exactly wout
+        let (cd, ch, cw) = (k + g.int(0, 1), k + g.int(0, 1), wout + k - 1);
+        let mut cin = Volume::zeros(c_in, cd, ch, cw);
+        for v in cin.data_mut() {
+            *v = g.f32(-1.0, 1.0);
+        }
+        let cs = uniform::corr_scalar(&cin, &wt);
+        let cf = uniform::corr(&cin, &wt);
+        if cs.data() != cf.data() {
+            return Err(format!("corr dispatch != scalar (out W={wout})"));
+        }
+        Ok(())
+    });
+}
+
 /// §IV-C on the accelerator model: folding a 2D layer onto any mesh
 /// repurposes the `T_z` depth arrays as channel parallelism
 /// (`chan_par == T_n · T_z`) with FIFO-D disabled and no depth
