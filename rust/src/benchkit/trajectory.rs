@@ -90,8 +90,11 @@ impl OperatingPoint {
 }
 
 /// The fixed point set: every zoo benchmark × {paper, tuned} ×
-/// {whole, stream}. The set only ever grows — removing or renaming a
-/// point would silently drop it from the gate.
+/// {whole, stream}, plus the skip-DAG entries (`unet3d`,
+/// `unetr-dec`) × {paper, tuned} whole-volume only — temporal tiling
+/// is undefined on non-linear graphs (`stream_shapes` rejects them
+/// with `StreamShapeError::NonLinear`). The set only ever grows —
+/// removing or renaming a point would silently drop it from the gate.
 pub fn fixed_point_set() -> Vec<OperatingPoint> {
     let mut pts = Vec::new();
     for net in zoo::all_benchmarks() {
@@ -103,6 +106,15 @@ pub fn fixed_point_set() -> Vec<OperatingPoint> {
                     mode,
                 });
             }
+        }
+    }
+    for net in [zoo::unet3d(), zoo::unetr_dec()] {
+        for policy in [PointPolicy::Paper, PointPolicy::Tuned] {
+            pts.push(OperatingPoint {
+                network: net.name,
+                policy,
+                mode: PointMode::Whole,
+            });
         }
     }
     pts
@@ -309,13 +321,18 @@ mod tests {
     #[test]
     fn point_ids_are_unique_and_cover_the_grid() {
         let pts = fixed_point_set();
-        assert_eq!(pts.len(), zoo::all_benchmarks().len() * 4);
+        // chain grid + 2 skip-DAG entries × 2 policies, whole-only
+        assert_eq!(pts.len(), zoo::all_benchmarks().len() * 4 + 4);
         let mut ids: Vec<String> = pts.iter().map(OperatingPoint::id).collect();
         ids.sort();
         ids.dedup();
         assert_eq!(ids.len(), pts.len(), "duplicate point ids");
         assert!(ids.contains(&"dcgan/paper/whole".to_string()));
         assert!(ids.contains(&"3d-gan/tuned/stream".to_string()));
+        assert!(ids.contains(&"unet3d/paper/whole".to_string()));
+        assert!(ids.contains(&"unetr-dec/tuned/whole".to_string()));
+        // no skip-DAG entry may ever grow a stream point silently
+        assert!(!ids.iter().any(|i| i.starts_with("unet") && i.ends_with("/stream")));
     }
 
     #[test]

@@ -365,6 +365,30 @@ pub fn forward_uniform_obs(
         .unwrap_or(4);
     let ktrack = obs.track("kernel");
     let kcfg = AccelConfig::paper_for(net.dims);
+    // Skip topologies run through the lowered-graph executor: the same
+    // uniform kernels per weighted node, plus the weight-free
+    // merge/resample nodes the chain walk below cannot express.
+    if net.topology != crate::dcnn::Topology::Chain {
+        let work = net.total_useful_macs();
+        let threads = ((work / FORWARD_MACS_PER_THREAD) as usize).clamp(1, max_threads);
+        let mut span = obs.scope(ktrack, "kernel", net.name);
+        if obs.is_enabled() {
+            span.set_args(
+                JsonObj::new()
+                    .str("kernel", "graph")
+                    .int("useful_macs", work),
+            );
+            obs.count("kernel.invocations", net.layers.len() as u64);
+            obs.count("kernel.useful_macs", work);
+        }
+        let g = crate::graph::passes::lower(&net.graph()).expect("zoo skip graphs lower");
+        let mut vin = crate::tensor::Volume::zeros(l0.in_c, l0.in_d, l0.in_h, l0.in_w);
+        vin.data_mut().copy_from_slice(input);
+        let out = crate::graph::execute_f32(&g, weights, &vin, threads)
+            .expect("zoo skip graphs execute");
+        drop(span);
+        return out.into_vec();
+    }
     // pooled staging copy of the input (the final layer's volume
     // escapes via `into_vec`; everything in between round-trips
     // through the pool)

@@ -13,4 +13,4 @@ pub mod zoo;
 
 pub use layer::{Dims, LayerSpec, OpCounts};
 pub use workload::{synth_frames, synth_uniform_weights, LayerData, LayerDataQ};
-pub use zoo::Network;
+pub use zoo::{Network, Topology};

@@ -1,23 +1,54 @@
-//! The four benchmark networks of §V.
+//! The four benchmark networks of §V, plus skip-topology entries.
 //!
-//! All deconvolutional layers use the uniform `K = 3` / `3×3×3`,
-//! `S = 2` filters the paper states ("All the deconvolutional layers of
-//! the selected DCNNs have uniform 3×3 and 3×3×3 filters"). Channel
-//! progressions follow the source papers (DCGAN \[2\], GP-GAN \[10\],
-//! 3D-GAN \[5\], V-Net \[4\] in the paper's reference list); only the
-//! deconvolution layers are modelled, since those are what the
-//! accelerator runs.
+//! All deconvolutional layers of the paper benchmarks use the uniform
+//! `K = 3` / `3×3×3`, `S = 2` filters the paper states ("All the
+//! deconvolutional layers of the selected DCNNs have uniform 3×3 and
+//! 3×3×3 filters"). Channel progressions follow the source papers
+//! (DCGAN \[2\], GP-GAN \[10\], 3D-GAN \[5\], V-Net \[4\] in the
+//! paper's reference list); only the deconvolution layers are
+//! modelled, since those are what the accelerator runs.
+//!
+//! Beyond the linear chains, [`unet3d`] and [`unetr_dec`] exercise the
+//! DAG form of [`crate::graph`]: encoder–decoder skip topologies whose
+//! merge nodes (channel concat / elementwise add) and weight-free
+//! resampling nodes (max-pool / nearest-neighbour upsample) surround
+//! the same uniform deconvolution core. Stride-1 deconvolutions double
+//! as the convolution blocks (an `S = 1` deconvolution inserts no
+//! zeros, so the lowered IOM form *is* a convolution), keeping the
+//! datapath uniform as the paper argues.
 
 use super::layer::{Dims, LayerSpec};
+use crate::graph::{NetworkGraph, OpKind, TensorShape};
 
-/// A benchmark network: an ordered list of deconvolution layers.
+/// The dataflow topology a [`Network`]'s graph form follows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// A linear deconvolution chain (the paper's four benchmarks).
+    Chain,
+    /// Two-level 3D U-Net: conv encoder with max-pool downsampling,
+    /// deconv decoder, channel-concat skip edges at each level.
+    UNet3d,
+    /// UNETR-style decoder: a deconvolution trunk joined at each
+    /// resolution by projected, nearest-neighbour-upsampled skips
+    /// merged with elementwise add.
+    UnetrDecoder,
+}
+
+/// A benchmark network: an ordered list of weighted layers plus the
+/// topology that arranges them into a dataflow graph.
 #[derive(Clone, Debug)]
 pub struct Network {
     /// Benchmark name (e.g. `"dcgan"`).
     pub name: &'static str,
     /// Dimensionality of every layer.
     pub dims: Dims,
-    /// Deconvolution layers in execution order.
+    /// How the layers (and any weight-free merge/resample nodes) are
+    /// wired together. [`Topology::Chain`] for the paper benchmarks.
+    pub topology: Topology,
+    /// Weighted (deconvolution) layers in graph topological order —
+    /// the order weight sets are supplied in, and the order
+    /// [`NetworkGraph::deconv_specs`] reports after lowering
+    /// [`Network::graph`].
     pub layers: Vec<LayerSpec>,
 }
 
@@ -35,6 +66,19 @@ impl Network {
     /// Look a layer up by name.
     pub fn layer(&self, name: &str) -> Option<&LayerSpec> {
         self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// The dataflow graph of this network: a plain producer→consumer
+    /// chain for [`Topology::Chain`], the fixed skip layouts for the
+    /// DAG topologies. Weighted nodes are inserted in `layers` order,
+    /// so per-layer weight sets line up with the lowered graph's
+    /// [`NetworkGraph::deconv_specs`] positionally.
+    pub fn graph(&self) -> NetworkGraph {
+        match self.topology {
+            Topology::Chain => NetworkGraph::from_network(self),
+            Topology::UNet3d => unet3d_graph(self),
+            Topology::UnetrDecoder => unetr_dec_graph(self),
+        }
     }
 
     /// This network re-anchored to a new input depth (temporal
@@ -57,6 +101,12 @@ impl Network {
         if self.dims == Dims::D2 || frames == self.layers[0].in_d {
             return self.clone();
         }
+        // Skip topologies pin their level depths to the pool/upsample
+        // factors; re-depthing is a chain-only operation (streaming
+        // rejects DAGs anyway — see `graph::stream_shape`).
+        if self.topology != Topology::Chain {
+            return self.clone();
+        }
         let mut d = frames;
         let mut layers = Vec::with_capacity(self.layers.len());
         for l in &self.layers {
@@ -69,6 +119,7 @@ impl Network {
         Network {
             name,
             dims: self.dims,
+            topology: self.topology,
             layers,
         }
     }
@@ -80,6 +131,7 @@ pub fn dcgan() -> Network {
     Network {
         name: "dcgan",
         dims: Dims::D2,
+        topology: Topology::Chain,
         layers: vec![
             LayerSpec::new_2d("dcgan.deconv1", 1024, 4, 4, 512, 3, 2),
             LayerSpec::new_2d("dcgan.deconv2", 512, 8, 8, 256, 3, 2),
@@ -95,6 +147,7 @@ pub fn gp_gan() -> Network {
     Network {
         name: "gp-gan",
         dims: Dims::D2,
+        topology: Topology::Chain,
         layers: vec![
             LayerSpec::new_2d("gp-gan.deconv1", 1024, 4, 4, 512, 3, 2),
             LayerSpec::new_2d("gp-gan.deconv2", 512, 8, 8, 256, 3, 2),
@@ -110,6 +163,7 @@ pub fn gan3d() -> Network {
     Network {
         name: "3d-gan",
         dims: Dims::D3,
+        topology: Topology::Chain,
         layers: vec![
             LayerSpec::new_3d("3d-gan.deconv1", 512, 4, 4, 4, 256, 3, 2),
             LayerSpec::new_3d("3d-gan.deconv2", 256, 8, 8, 8, 128, 3, 2),
@@ -125,6 +179,7 @@ pub fn vnet() -> Network {
     Network {
         name: "v-net",
         dims: Dims::D3,
+        topology: Topology::Chain,
         layers: vec![
             LayerSpec::new_3d("v-net.upconv1", 256, 8, 8, 8, 128, 3, 2),
             LayerSpec::new_3d("v-net.upconv2", 128, 16, 16, 16, 64, 3, 2),
@@ -134,13 +189,171 @@ pub fn vnet() -> Network {
     }
 }
 
-/// All four benchmarks in the paper's presentation order.
+/// All four benchmarks in the paper's presentation order. The DAG
+/// entries ([`unet3d`], [`unetr_dec`]) are deliberately not included:
+/// this set is the paper's uniform-`K3/S2`-chain workload and feeds
+/// batteries that assume linear topology.
 pub fn all_benchmarks() -> Vec<Network> {
     vec![dcgan(), gp_gan(), gan3d(), vnet()]
 }
 
+/// A two-level 3D U-Net (Çiçek et al., 2016 scaled to the modelled
+/// workload): conv encoder (`S = 1` deconvolutions) with 2× max-pool
+/// downsampling, a deconvolution decoder, and channel-concat skips at
+/// both levels. `c0` is the stem channel count; the input volume is
+/// `1 × d × hw × hw` and the output `2 × d × hw × hw`.
+pub fn unet3d_sized(name: &'static str, c0: usize, d: usize, hw: usize) -> Network {
+    assert!(
+        c0 >= 1 && d % 4 == 0 && hw % 4 == 0,
+        "two pooling stages need depth and extent divisible by 4"
+    );
+    let conv = |suffix: &str, in_c: usize, out_c: usize, dd: usize, ss: usize| {
+        LayerSpec::new_3d(format!("{name}.{suffix}"), in_c, dd, ss, ss, out_c, 3, 1)
+    };
+    let up = |suffix: &str, in_c: usize, out_c: usize, dd: usize, ss: usize| {
+        LayerSpec::new_3d(format!("{name}.{suffix}"), in_c, dd, ss, ss, out_c, 3, 2)
+    };
+    let (d2, s2) = (d / 2, hw / 2);
+    let (d4, s4) = (d / 4, hw / 4);
+    Network {
+        name,
+        dims: Dims::D3,
+        topology: Topology::UNet3d,
+        layers: vec![
+            conv("enc1a", 1, c0, d, hw),
+            conv("enc1b", c0, c0, d, hw),
+            conv("enc2a", c0, 2 * c0, d2, s2),
+            conv("enc2b", 2 * c0, 2 * c0, d2, s2),
+            conv("bot1", 2 * c0, 4 * c0, d4, s4),
+            conv("bot2", 4 * c0, 4 * c0, d4, s4),
+            up("up2", 4 * c0, 2 * c0, d4, s4),
+            conv("dec2a", 4 * c0, 2 * c0, d2, s2),
+            conv("dec2b", 2 * c0, 2 * c0, d2, s2),
+            up("up1", 2 * c0, c0, d2, s2),
+            conv("dec1a", 2 * c0, c0, d, hw),
+            conv("dec1b", c0, c0, d, hw),
+            conv("head", c0, 2, d, hw),
+        ],
+    }
+}
+
+/// The default-size 3D U-Net entry (`1×16×32×32` in, `2×16×32×32` out).
+pub fn unet3d() -> Network {
+    unet3d_sized("unet3d", 16, 16, 32)
+}
+
+/// A miniature U-Net for exact differential tests (same topology).
+pub fn unet3d_tiny() -> Network {
+    unet3d_sized("unet3d-tiny", 2, 4, 8)
+}
+
+/// A UNETR-style decoder (Hatamizadeh et al., 2022 scaled down): a
+/// two-stage deconvolution trunk from a `c_in × d × hw × hw` embedded
+/// volume, each stage joined by a projected (1-conv), nearest-
+/// neighbour-upsampled skip of the embedding merged with elementwise
+/// add. `c1` is the first trunk width (halved at the second stage).
+pub fn unetr_dec_sized(name: &'static str, c_in: usize, c1: usize, d: usize, hw: usize) -> Network {
+    assert!(c1 % 2 == 0, "second trunk stage halves the channels");
+    let c2 = c1 / 2;
+    let conv = |suffix: &str, in_c: usize, out_c: usize, dd: usize, ss: usize| {
+        LayerSpec::new_3d(format!("{name}.{suffix}"), in_c, dd, ss, ss, out_c, 3, 1)
+    };
+    let up = |suffix: &str, in_c: usize, out_c: usize, dd: usize, ss: usize| {
+        LayerSpec::new_3d(format!("{name}.{suffix}"), in_c, dd, ss, ss, out_c, 3, 2)
+    };
+    Network {
+        name,
+        dims: Dims::D3,
+        topology: Topology::UnetrDecoder,
+        layers: vec![
+            up("up1", c_in, c1, d, hw),
+            conv("proj1", c_in, c1, d, hw),
+            conv("ref1", c1, c1, 2 * d, 2 * hw),
+            up("up2", c1, c2, 2 * d, 2 * hw),
+            conv("proj2", c_in, c2, d, hw),
+            conv("ref2", c2, c2, 4 * d, 4 * hw),
+            conv("head", c2, 2, 4 * d, 4 * hw),
+        ],
+    }
+}
+
+/// The default-size UNETR decoder entry (`32×4×8×8` in, `2×16×32×32`
+/// out).
+pub fn unetr_dec() -> Network {
+    unetr_dec_sized("unetr-dec", 32, 16, 4, 8)
+}
+
+/// A miniature UNETR decoder for exact differential tests.
+pub fn unetr_dec_tiny() -> Network {
+    unetr_dec_sized("unetr-dec-tiny", 8, 4, 2, 4)
+}
+
+/// The fixed U-Net skip layout over `net.layers` (see [`unet3d_sized`]
+/// for the positional contract).
+fn unet3d_graph(net: &Network) -> NetworkGraph {
+    assert_eq!(net.layers.len(), 13, "u-net layout has 13 weighted layers");
+    let l = &net.layers;
+    let dc = |spec: &LayerSpec| OpKind::Deconv { spec: spec.clone() };
+    let mut g = NetworkGraph::new(net.name, net.dims);
+    let input = g.add_node(
+        "input",
+        OpKind::Input {
+            shape: TensorShape::of_layer_input(&l[0]),
+        },
+        &[],
+    );
+    let e1a = g.add_node(l[0].name.as_str(), dc(&l[0]), &[input]);
+    let e1b = g.add_node(l[1].name.as_str(), dc(&l[1]), &[e1a]); // skip 1
+    let p1 = g.add_node("pool1", OpKind::MaxPool { k: 2 }, &[e1b]);
+    let e2a = g.add_node(l[2].name.as_str(), dc(&l[2]), &[p1]);
+    let e2b = g.add_node(l[3].name.as_str(), dc(&l[3]), &[e2a]); // skip 2
+    let p2 = g.add_node("pool2", OpKind::MaxPool { k: 2 }, &[e2b]);
+    let b1 = g.add_node(l[4].name.as_str(), dc(&l[4]), &[p2]);
+    let b2 = g.add_node(l[5].name.as_str(), dc(&l[5]), &[b1]);
+    let u2 = g.add_node(l[6].name.as_str(), dc(&l[6]), &[b2]);
+    let c2 = g.add_node("cat2", OpKind::Concat, &[u2, e2b]);
+    let d2a = g.add_node(l[7].name.as_str(), dc(&l[7]), &[c2]);
+    let d2b = g.add_node(l[8].name.as_str(), dc(&l[8]), &[d2a]);
+    let u1 = g.add_node(l[9].name.as_str(), dc(&l[9]), &[d2b]);
+    let c1 = g.add_node("cat1", OpKind::Concat, &[u1, e1b]);
+    let d1a = g.add_node(l[10].name.as_str(), dc(&l[10]), &[c1]);
+    let d1b = g.add_node(l[11].name.as_str(), dc(&l[11]), &[d1a]);
+    g.add_node(l[12].name.as_str(), dc(&l[12]), &[d1b]);
+    g
+}
+
+/// The fixed UNETR-decoder skip layout over `net.layers` (see
+/// [`unetr_dec_sized`] for the positional contract).
+fn unetr_dec_graph(net: &Network) -> NetworkGraph {
+    assert_eq!(net.layers.len(), 7, "unetr layout has 7 weighted layers");
+    let l = &net.layers;
+    let dc = |spec: &LayerSpec| OpKind::Deconv { spec: spec.clone() };
+    let mut g = NetworkGraph::new(net.name, net.dims);
+    let input = g.add_node(
+        "input",
+        OpKind::Input {
+            shape: TensorShape::of_layer_input(&l[0]),
+        },
+        &[],
+    );
+    let u1 = g.add_node(l[0].name.as_str(), dc(&l[0]), &[input]);
+    let p1 = g.add_node(l[1].name.as_str(), dc(&l[1]), &[input]);
+    let s1 = g.add_node("skip1", OpKind::Upsample { f: 2 }, &[p1]);
+    let a1 = g.add_node("add1", OpKind::Add, &[u1, s1]);
+    let r1 = g.add_node(l[2].name.as_str(), dc(&l[2]), &[a1]);
+    let u2 = g.add_node(l[3].name.as_str(), dc(&l[3]), &[r1]);
+    let p2 = g.add_node(l[4].name.as_str(), dc(&l[4]), &[input]);
+    let s2 = g.add_node("skip2", OpKind::Upsample { f: 4 }, &[p2]);
+    let a2 = g.add_node("add2", OpKind::Add, &[u2, s2]);
+    let r2 = g.add_node(l[5].name.as_str(), dc(&l[5]), &[a2]);
+    g.add_node(l[6].name.as_str(), dc(&l[6]), &[r2]);
+    g
+}
+
 /// Canonical names accepted by [`by_name`] (aliases not listed).
-pub const NAMES: [&str; 6] = ["dcgan", "gp-gan", "3d-gan", "v-net", "tiny-2d", "tiny-3d"];
+pub const NAMES: [&str; 8] = [
+    "dcgan", "gp-gan", "3d-gan", "v-net", "tiny-2d", "tiny-3d", "unet3d", "unetr-dec",
+];
 
 /// Look a network up by (aliased) name — the single lookup shared by
 /// every CLI subcommand (`compile`, `serve`, `simulate`, ...). The
@@ -153,6 +366,8 @@ pub fn by_name(name: &str) -> Result<Network, String> {
         "v-net" | "vnet" => Ok(vnet()),
         "tiny-2d" | "tiny2d" => Ok(tiny_2d()),
         "tiny-3d" | "tiny3d" => Ok(tiny_3d()),
+        "unet3d" | "unet-3d" => Ok(unet3d()),
+        "unetr-dec" | "unetr" => Ok(unetr_dec()),
         _ => Err(format!(
             "unknown network '{name}' (valid names: {})",
             NAMES.join(", ")
@@ -165,6 +380,7 @@ pub fn tiny_2d() -> Network {
     Network {
         name: "tiny-2d",
         dims: Dims::D2,
+        topology: Topology::Chain,
         layers: vec![
             LayerSpec::new_2d("tiny-2d.deconv1", 4, 4, 4, 4, 3, 2),
             LayerSpec::new_2d("tiny-2d.deconv2", 4, 8, 8, 2, 3, 2),
@@ -177,6 +393,7 @@ pub fn tiny_3d() -> Network {
     Network {
         name: "tiny-3d",
         dims: Dims::D3,
+        topology: Topology::Chain,
         layers: vec![
             LayerSpec::new_3d("tiny-3d.deconv1", 4, 2, 2, 2, 4, 3, 2),
             LayerSpec::new_3d("tiny-3d.deconv2", 4, 4, 4, 4, 2, 3, 2),
@@ -298,5 +515,61 @@ mod tests {
         for name in NAMES {
             assert!(err.contains(name), "error should list '{name}': {err}");
         }
+    }
+
+    #[test]
+    fn dag_entries_lower_and_keep_the_weight_order_contract() {
+        for net in [unet3d(), unet3d_tiny(), unetr_dec(), unetr_dec_tiny()] {
+            assert_ne!(net.topology, Topology::Chain, "{}", net.name);
+            let lowered = crate::graph::passes::lower(&net.graph())
+                .unwrap_or_else(|e| panic!("{}: {e}", net.name));
+            let specs = lowered.deconv_specs();
+            assert_eq!(specs.len(), net.layers.len(), "{}", net.name);
+            for (s, l) in specs.iter().zip(net.layers.iter()) {
+                assert_eq!(s.name, l.name, "{}: weight order drifted", net.name);
+            }
+            // every node got a shape and the graph really branches
+            assert!(lowered.nodes.iter().all(|n| n.out_shape.is_some()));
+            assert!(
+                lowered
+                    .nodes
+                    .iter()
+                    .any(|n| n.inputs.len() > 1 || n.op.is_move()),
+                "{}: expected merge/resample nodes",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn unet3d_output_volume() {
+        let lowered = crate::graph::passes::lower(&unet3d().graph()).unwrap();
+        let out = lowered.nodes.last().unwrap().out_shape.unwrap();
+        assert_eq!((out.c, out.d, out.h, out.w), (2, 16, 32, 32));
+        // skip concats double the decoder channels
+        let cat1 = lowered
+            .nodes
+            .iter()
+            .find(|n| n.name == "cat1")
+            .expect("concat survives lowering");
+        assert_eq!(cat1.out_shape.unwrap().c, 32);
+    }
+
+    #[test]
+    fn unetr_dec_output_volume() {
+        let lowered = crate::graph::passes::lower(&unetr_dec().graph()).unwrap();
+        let out = lowered.nodes.last().unwrap().out_shape.unwrap();
+        assert_eq!((out.c, out.d, out.h, out.w), (2, 16, 32, 32));
+        // the upsampled projections land on the trunk shapes exactly
+        let a1 = lowered.nodes.iter().find(|n| n.name == "add1").unwrap();
+        assert_eq!(a1.out_shape.unwrap(), TensorShape::new(16, 8, 16, 16));
+    }
+
+    #[test]
+    fn with_depth_leaves_skip_topologies_alone() {
+        let net = unet3d_tiny();
+        let redepthed = net.with_depth(8);
+        assert_eq!(redepthed.name, net.name);
+        assert_eq!(redepthed.layers[0].in_d, net.layers[0].in_d);
     }
 }

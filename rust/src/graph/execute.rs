@@ -1,21 +1,40 @@
 //! Numeric execution of a lowered graph through the uniform kernel
 //! core.
 //!
-//! [`execute_f32`] walks a lowered (IOM-form) [`NetworkGraph`] and
-//! computes its output with [`crate::func::uniform`]: every `Deconv`
-//! node runs the dimension-uniform threaded IOM kernel (2D graphs run
-//! as the depth-1 fold), the `K − S` edge is cropped at write-back,
-//! and fused activations are applied in the write-back path — exactly
-//! the semantics [`super::passes::fuse_activations`] claims are free
-//! in hardware.
+//! [`execute_f32`] walks a lowered (IOM-form) [`NetworkGraph`] in
+//! topological order and computes its output with
+//! [`crate::func::uniform`]: every `Deconv` node runs the
+//! dimension-uniform threaded IOM kernel (2D graphs run as the depth-1
+//! fold), the `K − S` edge is cropped at write-back, and fused
+//! activations are applied in the write-back path — exactly the
+//! semantics [`super::passes::fuse_activations`] claims are free in
+//! hardware. Skip DAGs execute too: each node's value is kept alive
+//! until its **last** consumer, and the merge/resample ops compute
+//! with fixed, documented element orders so the results stay
+//! bit-exact against a naively composed forward:
+//!
+//! * `Concat` — channel-axis concatenation in input order (the
+//!   c-major layout makes this a flat data concatenation);
+//! * `Add` — elementwise sum accumulated in input order (f32 addition
+//!   is order-sensitive; the order is part of the contract);
+//! * `MaxPool` — non-overlapping window max, scanned in `(d, h, w)`
+//!   order;
+//! * `Upsample` — nearest-neighbour replication.
+//!
+//! [`execute_q88`] is the Q8.8 mirror: saturating adds, `Ord`-exact
+//! max-pooling, `Relu`-only activations (the transcendental
+//! activations have no fixed-point datapath and error out).
 //!
 //! This is the numerical proof of the lowering pipeline: an OOM-form
 //! graph, once [`super::passes::lower`]ed, computes bit-identical
-//! outputs to the native IOM graph (asserted in the tests below), and
-//! the coordinator's golden forward produces the same values as an
-//! executed graph.
+//! outputs to the native IOM graph (asserted in the tests below), the
+//! coordinator's golden forward produces the same values as an
+//! executed graph, and `tests/diff_unet.rs` pins the DAG zoo entries
+//! against an explicitly composed forward.
 
 use crate::accel::KernelChoice;
+use crate::dcnn::Dims;
+use crate::fixed::Q88;
 use crate::func::uniform;
 use crate::tensor::{Volume, WeightsOIDHW};
 
@@ -32,14 +51,152 @@ pub fn apply_act(v: &mut Volume<f32>, act: Act) {
     }
 }
 
-fn take_value(
-    values: &mut [Option<Volume<f32>>],
+/// [`apply_act`] on Q8.8. Only `Relu` has a fixed-point datapath
+/// (`max` against zero is exact); the transcendental activations
+/// error rather than silently de-quantizing.
+pub fn apply_act_q(v: &mut Volume<Q88>, act: Act) -> Result<(), String> {
+    match act {
+        Act::Relu => {
+            for x in v.data_mut() {
+                *x = (*x).max(Q88::ZERO);
+            }
+            Ok(())
+        }
+        other => Err(format!("activation {other} has no Q8.8 datapath")),
+    }
+}
+
+/// Consume one use of node `src`'s value: the value is handed out by
+/// move on its last remaining use and by clone before that, so a skip
+/// tensor read by both the chain and a later `Concat` stays alive
+/// exactly as long as it has readers.
+fn use_value<T: Clone>(
+    values: &mut [Option<Volume<T>>],
+    remaining: &mut [usize],
     src: usize,
     name: &str,
-) -> Result<Volume<f32>, String> {
-    values[src].take().ok_or_else(|| {
-        format!("node '{name}': input already consumed (single-consumer chains only)")
-    })
+) -> Result<Volume<T>, String> {
+    if values[src].is_none() || remaining[src] == 0 {
+        return Err(format!(
+            "node '{name}': input value of node {src} is gone (graph not topologically ordered?)"
+        ));
+    }
+    remaining[src] -= 1;
+    if remaining[src] == 0 {
+        Ok(values[src].take().expect("value present"))
+    } else {
+        Ok(values[src].clone().expect("value present"))
+    }
+}
+
+/// Channel-axis concatenation in input order. The uniform `(c, d, h,
+/// w)` layout is c-major, so this is a flat data concatenation.
+fn concat_channels<T: Copy + Default>(
+    parts: Vec<Volume<T>>,
+    name: &str,
+) -> Result<Volume<T>, String> {
+    let (d, h, w) = (parts[0].d, parts[0].h, parts[0].w);
+    let mut c = 0;
+    for p in &parts {
+        if (p.d, p.h, p.w) != (d, h, w) {
+            return Err(format!(
+                "node '{name}': concat operand is {}x{}x{}x{}, spatial extents differ",
+                p.c, p.d, p.h, p.w
+            ));
+        }
+        c += p.c;
+    }
+    let mut data = Vec::with_capacity(c * d * h * w);
+    for p in &parts {
+        data.extend_from_slice(p.data());
+    }
+    Ok(Volume::from_vec(c, d, h, w, data))
+}
+
+/// Elementwise sum accumulated in input order (the order is part of
+/// the bit-exactness contract for f32; Q8.8 saturating adds commute
+/// per pair but saturation makes the fold order observable too).
+fn add_elementwise<T>(mut parts: Vec<Volume<T>>, name: &str) -> Result<Volume<T>, String>
+where
+    T: Copy + Default + std::ops::Add<Output = T>,
+{
+    let mut acc = parts.remove(0);
+    for p in parts {
+        if (p.c, p.d, p.h, p.w) != (acc.c, acc.d, acc.h, acc.w) {
+            return Err(format!(
+                "node '{name}': add operand is {}x{}x{}x{}, shape differs",
+                p.c, p.d, p.h, p.w
+            ));
+        }
+        for (a, b) in acc.data_mut().iter_mut().zip(p.data()) {
+            *a = *a + *b;
+        }
+    }
+    Ok(acc)
+}
+
+/// Non-overlapping max-pooling: window = stride = `k` per spatial
+/// axis (`kd` on depth — 1 for 2D graphs).
+fn max_pool<T: Copy + Default + PartialOrd>(
+    v: &Volume<T>,
+    k: usize,
+    kd: usize,
+    name: &str,
+) -> Result<Volume<T>, String> {
+    if k == 0 || kd == 0 || v.d % kd != 0 || v.h % k != 0 || v.w % k != 0 {
+        return Err(format!(
+            "node '{name}': max_pool window {k} does not divide input {}x{}x{}x{}",
+            v.c, v.d, v.h, v.w
+        ));
+    }
+    let (od, oh, ow) = (v.d / kd, v.h / k, v.w / k);
+    let mut out = Volume::zeros(v.c, od, oh, ow);
+    for c in 0..v.c {
+        for z in 0..od {
+            for y in 0..oh {
+                for x in 0..ow {
+                    let mut m = v.at(c, z * kd, y * k, x * k);
+                    for dz in 0..kd {
+                        for dy in 0..k {
+                            for dx in 0..k {
+                                let cand = v.at(c, z * kd + dz, y * k + dy, x * k + dx);
+                                if cand > m {
+                                    m = cand;
+                                }
+                            }
+                        }
+                    }
+                    *out.at_mut(c, z, y, x) = m;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Nearest-neighbour upsample by integer factor `f` per spatial axis
+/// (`fd` on depth — 1 for 2D graphs).
+fn upsample_nearest<T: Copy + Default>(
+    v: &Volume<T>,
+    f: usize,
+    fd: usize,
+    name: &str,
+) -> Result<Volume<T>, String> {
+    if f == 0 || fd == 0 {
+        return Err(format!("node '{name}': upsample factor must be >= 1"));
+    }
+    let (od, oh, ow) = (v.d * fd, v.h * f, v.w * f);
+    let mut out = Volume::zeros(v.c, od, oh, ow);
+    for c in 0..v.c {
+        for z in 0..od {
+            for y in 0..oh {
+                for x in 0..ow {
+                    *out.at_mut(c, z, y, x) = v.at(c, z / fd, y / f, x / f);
+                }
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// Execute a lowered (IOM-form) graph on `input`, with one weight set
@@ -47,8 +204,9 @@ fn take_value(
 /// worker threads each deconvolution shards its output channels
 /// across; results are bit-identical for every thread count.
 ///
-/// Errors on OOM-form nodes (run [`super::passes::lower`] first),
-/// weight/shape mismatches, and non-chain graphs.
+/// Errors on OOM-form nodes (run [`super::passes::lower`] first) and
+/// weight/shape mismatches. Skip DAGs (multi-consumer tensors,
+/// `Concat`/`Add`/`MaxPool`/`Upsample` merges) execute natively.
 pub fn execute_f32(
     g: &NetworkGraph,
     weights: &[WeightsOIDHW<f32>],
@@ -73,6 +231,13 @@ pub fn execute_f32_kernels(
     kernels: &[KernelChoice],
 ) -> Result<Volume<f32>, String> {
     let mut values: Vec<Option<Volume<f32>>> = vec![None; g.nodes.len()];
+    let mut remaining: Vec<usize> = vec![0; g.nodes.len()];
+    for n in &g.nodes {
+        for &s in &n.inputs {
+            remaining[s] += 1;
+        }
+    }
+    let kd_of = |k: usize| if g.dims == Dims::D3 { k } else { 1 };
     let mut wi = 0usize;
     let mut last = None;
     for n in &g.nodes {
@@ -87,7 +252,7 @@ pub fn execute_f32_kernels(
                 input.clone()
             }
             OpKind::Deconv { spec } => {
-                let src = take_value(&mut values, n.inputs[0], &n.name)?;
+                let src = use_value(&mut values, &mut remaining, n.inputs[0], &n.name)?;
                 let w = weights.get(wi).ok_or_else(|| {
                     format!(
                         "no weights for deconv node '{}' (got {} sets)",
@@ -120,9 +285,31 @@ pub fn execute_f32_kernels(
                 }
             }
             OpKind::Activation { act } => {
-                let mut v = take_value(&mut values, n.inputs[0], &n.name)?;
+                let mut v = use_value(&mut values, &mut remaining, n.inputs[0], &n.name)?;
                 apply_act(&mut v, *act);
                 v
+            }
+            OpKind::Concat => {
+                let mut parts = Vec::with_capacity(n.inputs.len());
+                for &s in &n.inputs {
+                    parts.push(use_value(&mut values, &mut remaining, s, &n.name)?);
+                }
+                concat_channels(parts, &n.name)?
+            }
+            OpKind::Add => {
+                let mut parts = Vec::with_capacity(n.inputs.len());
+                for &s in &n.inputs {
+                    parts.push(use_value(&mut values, &mut remaining, s, &n.name)?);
+                }
+                add_elementwise(parts, &n.name)?
+            }
+            OpKind::MaxPool { k } => {
+                let v = use_value(&mut values, &mut remaining, n.inputs[0], &n.name)?;
+                max_pool(&v, *k, kd_of(*k), &n.name)?
+            }
+            OpKind::Upsample { f } => {
+                let v = use_value(&mut values, &mut remaining, n.inputs[0], &n.name)?;
+                upsample_nearest(&v, *f, kd_of(*f), &n.name)?
             }
             OpKind::ZeroInsert { .. } | OpKind::Conv { .. } => {
                 return Err(format!(
@@ -133,6 +320,130 @@ pub fn execute_f32_kernels(
         };
         for a in &n.fused {
             apply_act(&mut out, *a);
+        }
+        values[n.id] = Some(out);
+        last = Some(n.id);
+    }
+    match last {
+        Some(id) => Ok(values[id].take().expect("final node value present")),
+        None => Err("cannot execute an empty graph".to_string()),
+    }
+}
+
+/// Q8.8 mirror of [`execute_f32`]: the fixed-point kernels accumulate
+/// wide (one `Acc48` per output element, one convergent rounding at
+/// write-back) and the merge ops use saturating adds and `Ord`-exact
+/// max — the datapath the accelerator actually ships.
+pub fn execute_q88(
+    g: &NetworkGraph,
+    weights: &[WeightsOIDHW<Q88>],
+    input: &Volume<Q88>,
+    threads: usize,
+) -> Result<Volume<Q88>, String> {
+    execute_q88_kernels(g, weights, input, threads, &[])
+}
+
+/// [`execute_q88`] with an explicit per-deconv kernel choice, in node
+/// order; missing entries default to scatter. Bit-exact across
+/// choices and thread counts by the same accumulation-order contract
+/// as the f32 path.
+pub fn execute_q88_kernels(
+    g: &NetworkGraph,
+    weights: &[WeightsOIDHW<Q88>],
+    input: &Volume<Q88>,
+    threads: usize,
+    kernels: &[KernelChoice],
+) -> Result<Volume<Q88>, String> {
+    let mut values: Vec<Option<Volume<Q88>>> = vec![None; g.nodes.len()];
+    let mut remaining: Vec<usize> = vec![0; g.nodes.len()];
+    for n in &g.nodes {
+        for &s in &n.inputs {
+            remaining[s] += 1;
+        }
+    }
+    let kd_of = |k: usize| if g.dims == Dims::D3 { k } else { 1 };
+    let mut wi = 0usize;
+    let mut last = None;
+    for n in &g.nodes {
+        let mut out = match &n.op {
+            OpKind::Input { shape } => {
+                if (input.c, input.d, input.h, input.w) != (shape.c, shape.d, shape.h, shape.w) {
+                    return Err(format!(
+                        "input is {}x{}x{}x{} but graph '{}' expects {shape} (c×d×h×w)",
+                        input.c, input.d, input.h, input.w, g.name
+                    ));
+                }
+                input.clone()
+            }
+            OpKind::Deconv { spec } => {
+                let src = use_value(&mut values, &mut remaining, n.inputs[0], &n.name)?;
+                let w = weights.get(wi).ok_or_else(|| {
+                    format!(
+                        "no weights for deconv node '{}' (got {} sets)",
+                        n.name,
+                        weights.len()
+                    )
+                })?;
+                let kernel = kernels.get(wi).copied().unwrap_or_default();
+                wi += 1;
+                if (w.o, w.i, w.kd, w.kh, w.kw)
+                    != (spec.out_c, spec.in_c, spec.k_d(), spec.k, spec.k)
+                {
+                    return Err(format!("weights for '{}' do not match its layer spec", n.name));
+                }
+                match kernel {
+                    KernelChoice::Scatter => {
+                        let full = uniform::deconv_iom_q_threaded(&src, w, spec.s, threads);
+                        uniform::crop(&full, spec.out_d(), spec.out_h(), spec.out_w())
+                    }
+                    KernelChoice::Gather => uniform::deconv_gather_window_q_threaded(
+                        &src,
+                        w,
+                        spec.s,
+                        0,
+                        spec.out_d(),
+                        spec.out_h(),
+                        spec.out_w(),
+                        threads,
+                    ),
+                }
+            }
+            OpKind::Activation { act } => {
+                let mut v = use_value(&mut values, &mut remaining, n.inputs[0], &n.name)?;
+                apply_act_q(&mut v, *act)?;
+                v
+            }
+            OpKind::Concat => {
+                let mut parts = Vec::with_capacity(n.inputs.len());
+                for &s in &n.inputs {
+                    parts.push(use_value(&mut values, &mut remaining, s, &n.name)?);
+                }
+                concat_channels(parts, &n.name)?
+            }
+            OpKind::Add => {
+                let mut parts = Vec::with_capacity(n.inputs.len());
+                for &s in &n.inputs {
+                    parts.push(use_value(&mut values, &mut remaining, s, &n.name)?);
+                }
+                add_elementwise(parts, &n.name)?
+            }
+            OpKind::MaxPool { k } => {
+                let v = use_value(&mut values, &mut remaining, n.inputs[0], &n.name)?;
+                max_pool(&v, *k, kd_of(*k), &n.name)?
+            }
+            OpKind::Upsample { f } => {
+                let v = use_value(&mut values, &mut remaining, n.inputs[0], &n.name)?;
+                upsample_nearest(&v, *f, kd_of(*f), &n.name)?
+            }
+            OpKind::ZeroInsert { .. } | OpKind::Conv { .. } => {
+                return Err(format!(
+                    "node '{}' is OOM-form; run passes::lower before execute_q88",
+                    n.name
+                ));
+            }
+        };
+        for a in &n.fused {
+            apply_act_q(&mut out, *a)?;
         }
         values[n.id] = Some(out);
         last = Some(n.id);
@@ -227,6 +538,33 @@ mod tests {
     }
 
     #[test]
+    fn q88_execution_matches_per_layer_golden_loop() {
+        for net in [zoo::tiny_2d(), zoo::tiny_3d()] {
+            let weights: Vec<WeightsOIDHW<Q88>> = net
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| {
+                    LayerData::synth(l, 0x5EED ^ (i as u64))
+                        .quantize()
+                        .uniform_weights()
+                })
+                .collect();
+            let input_q = LayerData::synth(&net.layers[0], 99).quantize();
+            let input = input_q.uniform_input();
+            let g = passes::lower(&NetworkGraph::from_network(&net)).unwrap();
+            let got = execute_q88(&g, &weights, &input, 3).unwrap();
+
+            let mut cur = input;
+            for (layer, w) in net.layers.iter().zip(&weights) {
+                let full = uniform::deconv_iom_q(&cur, w, layer.s);
+                cur = uniform::crop(&full, layer.out_d(), layer.out_h(), layer.out_w());
+            }
+            assert_eq!(got.data(), cur.data(), "{}", net.name);
+        }
+    }
+
+    #[test]
     fn oom_form_graph_is_rejected_before_lowering() {
         let net = zoo::tiny_2d();
         let g = NetworkGraph::from_network_oom(&net);
@@ -241,5 +579,80 @@ mod tests {
         let bad = Volume::zeros(1, 1, 2, 2);
         let err = execute_f32(&g, &synth_weights(&net), &bad, 1).unwrap_err();
         assert!(err.contains("expects"), "{err}");
+    }
+
+    #[test]
+    fn move_op_numerics() {
+        // concat = flat data concat in input order (c-major layout)
+        let a = Volume::from_vec(1, 1, 1, 2, vec![1.0f32, 2.0]);
+        let b = Volume::from_vec(2, 1, 1, 2, vec![3.0, 4.0, 5.0, 6.0]);
+        let cat = concat_channels(vec![a.clone(), b], "cat").unwrap();
+        assert_eq!((cat.c, cat.d, cat.h, cat.w), (3, 1, 1, 2));
+        assert_eq!(cat.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // add accumulates in input order
+        let c = Volume::from_vec(1, 1, 1, 2, vec![10.0f32, 20.0]);
+        let sum = add_elementwise(vec![a, c], "add").unwrap();
+        assert_eq!(sum.data(), &[11.0, 22.0]);
+        // 2x2 max-pool picks the window max
+        let v = Volume::from_vec(1, 1, 2, 2, vec![1.0f32, 4.0, 3.0, 2.0]);
+        let p = max_pool(&v, 2, 1, "pool").unwrap();
+        assert_eq!(p.data(), &[4.0]);
+        // nearest upsample replicates
+        let u = upsample_nearest(&p, 2, 1, "up").unwrap();
+        assert_eq!(u.data(), &[4.0; 4]);
+        // Q8.8 max-pool is Ord-exact
+        let vq = Volume::from_vec(
+            1,
+            1,
+            2,
+            2,
+            vec![
+                Q88::from_f32(-1.0),
+                Q88::from_f32(0.5),
+                Q88::from_f32(0.25),
+                Q88::from_f32(-2.0),
+            ],
+        );
+        let pq = max_pool(&vq, 2, 1, "poolq").unwrap();
+        assert_eq!(pq.data(), &[Q88::from_f32(0.5)]);
+    }
+
+    #[test]
+    fn skip_dag_keeps_the_shared_tensor_alive() {
+        use crate::dcnn::LayerSpec;
+        use crate::graph::ir::TensorShape;
+        // input -> a -> b -> concat(b, a): `a` is read twice.
+        let sp = |name: &str, in_c: usize, out_c: usize| {
+            LayerSpec::new_2d(name, in_c, 4, 4, out_c, 3, 1)
+        };
+        let mut g = NetworkGraph::new("skip", crate::dcnn::Dims::D2);
+        let inp = g.add_node(
+            "input",
+            OpKind::Input {
+                shape: TensorShape::new(2, 1, 4, 4),
+            },
+            &[],
+        );
+        let a = g.add_node("a", OpKind::Deconv { spec: sp("a", 2, 2) }, &[inp]);
+        let b = g.add_node("b", OpKind::Deconv { spec: sp("b", 2, 2) }, &[a]);
+        g.add_node("cat", OpKind::Concat, &[b, a]);
+        let g = passes::lower(&g).unwrap();
+
+        let specs: Vec<LayerSpec> = vec![sp("a", 2, 2), sp("b", 2, 2)];
+        let weights: Vec<WeightsOIDHW<f32>> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)).uniform_weights())
+            .collect();
+        let input = LayerData::synth(&specs[0], 99).uniform_input();
+        let got = execute_f32(&g, &weights, &input, 2).unwrap();
+
+        // composed by hand
+        let full_a = uniform::deconv_iom(&input, &weights[0], 1);
+        let va = uniform::crop(&full_a, 1, 4, 4);
+        let full_b = uniform::deconv_iom(&va, &weights[1], 1);
+        let vb = uniform::crop(&full_b, 1, 4, 4);
+        let want = concat_channels(vec![vb, va], "cat").unwrap();
+        assert_eq!(got.data(), want.data());
     }
 }

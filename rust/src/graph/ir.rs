@@ -13,7 +13,13 @@
 //! * [`OpKind::Activation`] — pointwise nonlinearity, fused into its
 //!   producer by [`super::passes::fuse_activations`] (the PE writes
 //!   back through the activation unit for free);
-//! * [`OpKind::Input`] — the network input placeholder.
+//! * [`OpKind::Input`] — the network input placeholder;
+//! * [`OpKind::Concat`] / [`OpKind::Add`] — multi-input skip merges
+//!   (channel concatenation and elementwise addition), plus
+//!   [`OpKind::MaxPool`] and [`OpKind::Upsample`] resampling — the
+//!   nodes that turn the linear chain into the U-Net / UNETR skip
+//!   DAGs. Convolution needs no extra op: a stride-1 `Deconv` inserts
+//!   no zeros and *is* the convolution (unified conv+deconv datapath).
 //!
 //! Builders construct graphs from the [`crate::dcnn::zoo`] networks
 //! (or any [`LayerSpec`] chain, e.g. the ones
@@ -104,7 +110,11 @@ impl fmt::Display for Act {
 pub enum OpKind {
     /// Network input placeholder.
     Input { shape: TensorShape },
-    /// IOM deconvolution — the accelerator's native op.
+    /// IOM deconvolution — the accelerator's native op. A `spec` with
+    /// `S = 1` inserts no zeros, so the same node *is* an ordinary
+    /// spatial convolution: U-Net conv blocks lower to stride-1
+    /// deconvolutions and run on the identical datapath (the unified
+    /// conv+deconv architecture the DAG workloads need).
     Deconv { spec: LayerSpec },
     /// OOM artifact: insert `S−1` zeros + pad `K−1` (geometry of the
     /// eventual layer carried along for shape inference).
@@ -114,6 +124,18 @@ pub enum OpKind {
     Conv { spec: LayerSpec },
     /// Pointwise activation.
     Activation { act: Act },
+    /// Channel-axis concatenation of two or more tensors with equal
+    /// spatial extents — the U-Net skip merge.
+    Concat,
+    /// Elementwise addition of two or more identically-shaped tensors
+    /// — the residual / UNETR-style skip merge.
+    Add,
+    /// Non-overlapping max-pooling downsample: window = stride = `k`
+    /// per spatial axis (depth included on 3D graphs).
+    MaxPool { k: usize },
+    /// Nearest-neighbour upsample by integer factor `f` per spatial
+    /// axis (depth included on 3D graphs).
+    Upsample { f: usize },
 }
 
 impl OpKind {
@@ -125,7 +147,21 @@ impl OpKind {
             OpKind::ZeroInsert { .. } => "zero_insert",
             OpKind::Conv { .. } => "conv",
             OpKind::Activation { .. } => "activation",
+            OpKind::Concat => "concat",
+            OpKind::Add => "add",
+            OpKind::MaxPool { .. } => "max_pool",
+            OpKind::Upsample { .. } => "upsample",
         }
+    }
+
+    /// Whether this op merges or resamples tensors without weights —
+    /// the nodes a compiled plan carries as data-movement steps
+    /// ([`super::plan::MovePlan`]) rather than compute steps.
+    pub fn is_move(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Concat | OpKind::Add | OpKind::MaxPool { .. } | OpKind::Upsample { .. }
+        )
     }
 }
 

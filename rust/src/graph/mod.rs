@@ -5,22 +5,27 @@
 //! architecture. This subsystem models that at network granularity
 //! instead of summing isolated layers:
 //!
-//! * [`ir`] — [`NetworkGraph`]: ops (deconv in IOM or OOM form,
-//!   activations) over explicit tensor edges, built from
-//!   [`crate::dcnn::zoo`] networks or any [`crate::dcnn::LayerSpec`]
-//!   chain;
+//! * [`ir`] — [`NetworkGraph`]: a DAG of ops (deconv in IOM or OOM
+//!   form, activations, channel-concat / elementwise-add skip merges,
+//!   max-pool and nearest-neighbour-upsample resampling) over explicit
+//!   tensor edges, built from [`crate::dcnn::zoo`] networks (including
+//!   the U-Net/UNETR skip topologies via
+//!   [`crate::dcnn::Network::graph`]) or any
+//!   [`crate::dcnn::LayerSpec`] chain;
 //! * [`passes`] — validation, shape inference, OOM→IOM lowering,
-//!   activation fusion ([`passes::lower`] is the default pipeline);
+//!   activation fusion ([`passes::lower`] is the default pipeline),
+//!   all over topologically ordered multi-input nodes;
 //! * [`plan`] — [`compile`] binds a lowered graph to an
-//!   [`crate::accel::AccelConfig`]: per-node blocking schedules plus
-//!   the inter-layer buffer-reuse pass (the output buffer of layer *i*
-//!   becomes the input buffer of layer *i+1* when the tensor fits
-//!   on-chip, else it spills to DDR);
+//!   [`crate::accel::AccelConfig`]: per-node blocking schedules plus a
+//!   linear-scan register allocation of on-chip buffers over DAG live
+//!   ranges (a tensor stays resident from its producer to its *last*
+//!   consumer — skip tensors survive the whole decoder — and spills to
+//!   DDR when the arena is full);
 //! * [`simulate`] — [`simulate_plan`] executes a [`NetworkPlan`] with
 //!   cross-layer double-buffered prefetch overlap and reports
-//!   end-to-end latency / TOPS / DDR traffic;
-//! * [`execute`] — [`execute_f32`] runs a lowered graph *numerically*
-//!   through the dimension-uniform kernel core
+//!   end-to-end latency / TOPS / DDR traffic, move steps included;
+//! * [`execute`] — [`execute_f32`] / [`execute_q88`] run a lowered
+//!   graph *numerically* through the dimension-uniform kernel core
 //!   ([`crate::func::uniform`]), proving the lowering pipeline
 //!   preserves semantics; its tests cross-check it against the same
 //!   per-layer loop the coordinator's golden forward runs.
@@ -50,11 +55,11 @@ pub mod plan;
 pub mod simulate;
 pub mod stream_shape;
 
-pub use execute::{execute_f32, execute_f32_kernels};
+pub use execute::{execute_f32, execute_f32_kernels, execute_q88, execute_q88_kernels};
 pub use ir::{Act, NetworkGraph, NodeId, NodeSpec, OpKind, TensorShape};
-pub use plan::{compile, compile_forced, EdgePlace, NetworkPlan, StepPlan};
+pub use plan::{compile, compile_forced, BufferAlloc, EdgePlace, MovePlan, NetworkPlan, StepPlan};
 pub use simulate::{simulate_plan, NetworkRunMetrics};
-pub use stream_shape::{stream_shapes, LayerStreamShape};
+pub use stream_shape::{stream_shapes, LayerStreamShape, StreamShapeError};
 
 use crate::accel::AccelConfig;
 use crate::dcnn::Network;
@@ -81,7 +86,7 @@ pub fn compile_network_forced(
     net: &Network,
     forced: crate::accel::KernelChoice,
 ) -> Result<NetworkPlan, String> {
-    let g = passes::lower(&NetworkGraph::from_network(net))?;
+    let g = passes::lower(&net.graph())?;
     compile_forced(cfg, &g, forced)
 }
 
@@ -98,7 +103,7 @@ pub fn compile_network_obs(
     use crate::report::json::JsonObj;
     let track = obs.track("compile");
     let mut whole = obs.scope(track, "compile", &format!("compile {}", net.name));
-    let g = passes::lower_obs(&NetworkGraph::from_network(net), obs)?;
+    let g = passes::lower_obs(&net.graph(), obs)?;
     let plan = {
         let _s = obs.scope(track, "pass", "schedule_and_reuse");
         compile(cfg, &g)?
@@ -128,6 +133,22 @@ mod tests {
             let plan = compile_network(&cfg, &net).unwrap();
             assert_eq!(plan.steps.len(), net.layers.len(), "{}", net.name);
             assert_eq!(plan.network, net.name);
+        }
+    }
+
+    #[test]
+    fn compile_network_routes_skip_topologies_through_the_dag() {
+        for net in [zoo::unet3d(), zoo::unetr_dec()] {
+            let cfg = AccelConfig::paper_for(net.dims);
+            let plan = compile_network(&cfg, &net).unwrap();
+            assert_eq!(plan.steps.len(), net.layers.len(), "{}", net.name);
+            assert!(
+                !plan.moves.is_empty(),
+                "{}: skip topology should plan merge/resample moves",
+                net.name
+            );
+            let m = simulate_plan(&plan);
+            assert!(m.total_cycles > 0, "{}", net.name);
         }
     }
 }

@@ -4,8 +4,9 @@
 //!
 //! 1. [`validate`] — structural checks (arity, edge references,
 //!    dimensionality consistency);
-//! 2. [`infer_shapes`] — propagate tensor shapes along every edge and
-//!    reject chains whose layer geometries do not compose;
+//! 2. [`infer_shapes`] — propagate tensor shapes along every edge in
+//!    topological order (multi-input merge nodes see all producer
+//!    shapes) and reject graphs whose geometries do not compose;
 //! 3. [`lower_oom_to_iom`] — rewrite every `ZeroInsert → Conv` pair
 //!    into the accelerator's native `Deconv` node (§III of the paper:
 //!    the two formulations compute the same function; IOM never
@@ -18,11 +19,13 @@
 //! testable in isolation; [`lower`] is the pipeline the CLI and the
 //! coordinator use before [`super::plan::compile`].
 
+use crate::dcnn::Dims;
+
 use super::ir::{NetworkGraph, NodeId, NodeSpec, OpKind, TensorShape};
 
 /// Structural validation: every edge references an earlier node, every
-/// op has the right arity, and every layer matches the graph's
-/// dimensionality.
+/// op has the right arity (merge nodes take two or more inputs), and
+/// every layer matches the graph's dimensionality.
 pub fn validate(g: &NetworkGraph) -> Result<(), String> {
     for (i, n) in g.nodes.iter().enumerate() {
         if n.id != i {
@@ -36,16 +39,22 @@ pub fn validate(g: &NetworkGraph) -> Result<(), String> {
                 ));
             }
         }
-        let arity = match &n.op {
-            OpKind::Input { .. } => 0,
-            _ => 1,
+        let arity_ok = match &n.op {
+            OpKind::Input { .. } => n.inputs.is_empty(),
+            OpKind::Concat | OpKind::Add => n.inputs.len() >= 2,
+            _ => n.inputs.len() == 1,
         };
-        if n.inputs.len() != arity {
+        if !arity_ok {
             return Err(format!(
-                "node '{}' ({}) has {} inputs, expected {arity}",
+                "node '{}' ({}) has {} inputs, expected {}",
                 n.name,
                 n.op.mnemonic(),
-                n.inputs.len()
+                n.inputs.len(),
+                match &n.op {
+                    OpKind::Input { .. } => "0",
+                    OpKind::Concat | OpKind::Add => ">= 2",
+                    _ => "1",
+                }
             ));
         }
         let spec_dims = match &n.op {
@@ -67,16 +76,28 @@ pub fn validate(g: &NetworkGraph) -> Result<(), String> {
 }
 
 /// Expected output shape of one node given its (already inferred)
-/// input shape.
-fn node_out_shape(n: &NodeSpec, input: Option<TensorShape>) -> Result<TensorShape, String> {
+/// input shapes, in argument order. `dims` is the graph
+/// dimensionality: resampling nodes touch depth only on 3D graphs.
+fn node_out_shape(
+    n: &NodeSpec,
+    inputs: &[TensorShape],
+    dims: Dims,
+) -> Result<TensorShape, String> {
+    let first = || -> Result<TensorShape, String> {
+        inputs
+            .first()
+            .copied()
+            .ok_or_else(|| format!("node '{}' input shape not inferred", n.name))
+    };
     let expect_input = |want: TensorShape| -> Result<(), String> {
-        match input {
-            Some(got) if got == want => Ok(()),
-            Some(got) => Err(format!(
+        let got = first()?;
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!(
                 "node '{}' expects input {want}, got {got} (layer chain does not compose)",
                 n.name
-            )),
-            None => Err(format!("node '{}' input shape not inferred", n.name)),
+            ))
         }
     };
     match &n.op {
@@ -105,29 +126,83 @@ fn node_out_shape(n: &NodeSpec, input: Option<TensorShape>) -> Result<TensorShap
                 op: OpKind::ZeroInsert { spec: spec.clone() },
                 ..n.clone()
             };
-            let want = node_out_shape(&zi, Some(TensorShape::of_layer_input(spec)))?;
+            let want = node_out_shape(&zi, &[TensorShape::of_layer_input(spec)], dims)?;
             expect_input(want)?;
             // VALID conv gives the full Eq.-(1) extent; the K−S edge is
             // cropped at write-back, so the edge tensor is I·S.
             Ok(TensorShape::of_layer_output(spec))
         }
-        OpKind::Activation { .. } => match input {
-            Some(s) => Ok(s),
-            None => Err(format!("node '{}' input shape not inferred", n.name)),
-        },
+        OpKind::Activation { .. } => first(),
+        OpKind::Concat => {
+            let f = first()?;
+            let mut c = 0;
+            for (i, s) in inputs.iter().enumerate() {
+                if (s.d, s.h, s.w) != (f.d, f.h, f.w) {
+                    return Err(format!(
+                        "node '{}' concat input {i} is {s}, spatial extents differ from {f}",
+                        n.name
+                    ));
+                }
+                c += s.c;
+            }
+            Ok(TensorShape::new(c, f.d, f.h, f.w))
+        }
+        OpKind::Add => {
+            let f = first()?;
+            for (i, s) in inputs.iter().enumerate() {
+                if *s != f {
+                    return Err(format!(
+                        "node '{}' add input {i} is {s}, shape differs from {f}",
+                        n.name
+                    ));
+                }
+            }
+            Ok(f)
+        }
+        OpKind::MaxPool { k } => {
+            let f = first()?;
+            if *k == 0 {
+                return Err(format!("node '{}' max_pool window is 0", n.name));
+            }
+            let kd = if dims == Dims::D3 { *k } else { 1 };
+            if f.d % kd != 0 || f.h % k != 0 || f.w % k != 0 {
+                return Err(format!(
+                    "node '{}' max_pool window {k} does not divide input {f}",
+                    n.name
+                ));
+            }
+            Ok(TensorShape::new(f.c, f.d / kd, f.h / k, f.w / k))
+        }
+        OpKind::Upsample { f: factor } => {
+            let f = first()?;
+            if *factor == 0 {
+                return Err(format!("node '{}' upsample factor is 0", n.name));
+            }
+            let fd = if dims == Dims::D3 { *factor } else { 1 };
+            Ok(TensorShape::new(f.c, f.d * fd, f.h * factor, f.w * factor))
+        }
     }
 }
 
-/// Shape inference: fills `out_shape` on every node, rejecting graphs
-/// whose layer geometries do not compose.
+/// Shape inference: fills `out_shape` on every node in topological
+/// order (multi-input merge nodes see every producer's shape),
+/// rejecting graphs whose geometries do not compose.
 pub fn infer_shapes(g: &mut NetworkGraph) -> Result<(), String> {
     validate(g)?;
     for i in 0..g.nodes.len() {
-        let input = match g.nodes[i].inputs.first() {
-            Some(&src) => g.nodes[src].out_shape,
-            None => None,
-        };
-        let shape = node_out_shape(&g.nodes[i], input)?;
+        let mut inputs = Vec::with_capacity(g.nodes[i].inputs.len());
+        for &src in &g.nodes[i].inputs {
+            match g.nodes[src].out_shape {
+                Some(s) => inputs.push(s),
+                None => {
+                    return Err(format!(
+                        "node '{}' reads node {src} whose shape is not inferred",
+                        g.nodes[i].name
+                    ))
+                }
+            }
+        }
+        let shape = node_out_shape(&g.nodes[i], &inputs, g.dims)?;
         g.nodes[i].out_shape = Some(shape);
     }
     Ok(())

@@ -1,18 +1,34 @@
 //! The [`NetworkPlan`] artifact: a lowered graph bound to one
 //! accelerator configuration.
 //!
-//! [`compile`] sequences the deconvolution chain, derives each node's
-//! blocking [`Schedule`] and operand [`Residency`], and then runs the
-//! **inter-layer buffer-reuse pass**: when the tensor between layer
-//! *i* and layer *i+1* fits on-chip (both the producer's output buffer
-//! and the consumer's input buffer), the output of layer *i* is never
-//! written to DDR and layer *i+1* never reads it back — the output
-//! buffer simply becomes the next layer's input buffer. Tensors that
-//! do not fit spill to DDR exactly as in the isolated-layer model.
+//! [`compile`] sequences the deconvolution nodes of a lowered DAG in
+//! topological order, derives each node's blocking [`Schedule`] and
+//! operand [`Residency`], carries the weight-free merge/resampling
+//! nodes (`Concat`/`Add`/`MaxPool`/`Upsample`) as [`MovePlan`] data
+//! movements, and then runs the **inter-layer buffer-reuse pass** as
+//! linear-scan register allocation over DAG live ranges:
 //!
-//! The plan records both the adjusted and the isolated traffic so the
-//! savings are auditable, renders as human-readable text (the
-//! `udcnn compile` dump) and exports as JSON via [`crate::report`].
+//! * every intermediate tensor gets a live range `[def, last_use]` in
+//!   topological positions — a U-Net skip tensor's range spans the
+//!   whole decoder between its producer and the `Concat` that finally
+//!   consumes it;
+//! * tensors small enough for the on-chip buffers are placed into one
+//!   byte arena of capacity `input_buf + output_buf` by deterministic
+//!   first-fit, and a buffer is released only after the tensor's
+//!   **last** consumer has run (a node's output is allocated *before*
+//!   its dying inputs are freed, so an output can never alias a tensor
+//!   the node is still reading — the classic free-after-first-consume
+//!   aliasing bug, pinned by `tests/prop_graph.rs`);
+//! * placed tensors move zero DDR bytes on both sides of the edge;
+//!   everything else spills to DDR exactly as in the isolated-layer
+//!   model. On a linear chain this reproduces the historical
+//!   edge-by-edge rule bit-for-bit (at most two tensors are ever live,
+//!   each bounded by the smaller buffer).
+//!
+//! The plan records both the adjusted and the isolated traffic plus
+//! the arena's peak footprint so the savings are auditable, renders as
+//! human-readable text (the `udcnn compile` dump) and exports as JSON
+//! via [`crate::report`].
 
 use crate::accel::buffers::Residency;
 use crate::accel::{kernel, AccelConfig, KernelChoice, KernelSelection, Schedule};
@@ -81,6 +97,55 @@ impl StepPlan {
     }
 }
 
+/// One weight-free data-movement step of a network plan: a `Concat`,
+/// `Add`, `MaxPool` or `Upsample` node carried between the compute
+/// steps. Moves burn no MACs; their cost is pure DDR traffic for
+/// whichever operands the reuse pass could not keep on-chip.
+#[derive(Clone, Debug)]
+pub struct MovePlan {
+    /// Node id in the lowered graph.
+    pub node: NodeId,
+    /// Node name (from the graph node).
+    pub name: String,
+    /// The merge/resample operation.
+    pub op: OpKind,
+    /// Where the result tensor is written.
+    pub output_dst: EdgePlace,
+    /// DDR bytes read for operands not already resident on-chip.
+    pub input_bytes: u64,
+    /// DDR bytes written when the result spills.
+    pub output_bytes: u64,
+    /// What an all-DDR execution of this node would have moved.
+    pub isolated_dram_bytes: u64,
+}
+
+impl MovePlan {
+    /// Total adjusted DDR traffic of this move.
+    pub fn dram_bytes(&self) -> u64 {
+        self.input_bytes + self.output_bytes
+    }
+}
+
+/// One on-chip placement made by the linear-scan reuse pass: the
+/// tensor produced by `node` occupies `[offset, offset + bytes)` of
+/// the unified buffer arena from its definition until its **last**
+/// consumer (`last_use`) has run. Exposed on the plan so tests can
+/// prove no two overlapping live ranges ever share bytes — the
+/// skip-tensor aliasing regression of `tests/prop_graph.rs`.
+#[derive(Clone, Debug)]
+pub struct BufferAlloc {
+    /// Producer node id (the tensor's definition position).
+    pub node: NodeId,
+    /// Producer node name.
+    pub name: String,
+    /// Byte offset inside the arena.
+    pub offset: u64,
+    /// Tensor size in bytes (whole batch).
+    pub bytes: u64,
+    /// Topological position (node id) of the last consumer.
+    pub last_use: NodeId,
+}
+
 /// A compiled whole-network execution plan.
 #[derive(Clone, Debug)]
 pub struct NetworkPlan {
@@ -88,16 +153,24 @@ pub struct NetworkPlan {
     pub network: String,
     /// The configuration the plan is bound to.
     pub cfg: AccelConfig,
-    /// Executable steps in chain order.
+    /// Executable steps in topological order.
     pub steps: Vec<StepPlan>,
+    /// Weight-free merge/resample steps in topological order (empty
+    /// on linear chains).
+    pub moves: Vec<MovePlan>,
+    /// On-chip placements made by the linear-scan reuse pass.
+    pub onchip: Vec<BufferAlloc>,
+    /// High-water mark of the arena: the most bytes ever live at once.
+    pub peak_onchip_bytes: u64,
 }
 
 /// Compile a lowered graph onto one configuration.
 ///
 /// The graph must already be through [`super::passes::lower`]: only
-/// `Input` and `Deconv` nodes may remain, forming a linear chain (the
-/// shape every benchmark decoder has; branching DAGs are rejected with
-/// a clear error rather than silently mis-planned).
+/// `Input`, `Deconv` and the weight-free merge/resample ops may
+/// remain. Linear chains and skip DAGs (U-Net, UNETR decoder) both
+/// compile; unlowered `Conv`/`ZeroInsert`/`Activation` nodes are
+/// rejected with a clear error rather than silently mis-planned.
 ///
 /// Each step also gets a per-layer kernel decision
 /// ([`kernel::choose`]): scatter vs zero-skip gather, scored under the
@@ -124,31 +197,36 @@ fn compile_with(
     forced: Option<KernelChoice>,
 ) -> Result<NetworkPlan, String> {
     cfg.validate()?;
+    let eb = cfg.elem_bytes() as u64;
+    let batch = cfg.batch as u64;
+
+    // Whole-batch bytes of the tensor each node produces. Derivable
+    // without shape inference for Input/Deconv (so hand-built chains
+    // still compile un-inferred); merge/resample nodes need the shape
+    // the lowering pipeline attached.
+    let tensor_bytes = |id: NodeId| -> Result<u64, String> {
+        let n = &g.nodes[id];
+        match &n.op {
+            OpKind::Input { shape } => Ok(batch * shape.elems() as u64 * eb),
+            OpKind::Deconv { spec } => Ok(batch * spec.output_elems() as u64 * eb),
+            _ => n
+                .out_shape
+                .map(|s| batch * s.elems() as u64 * eb)
+                .ok_or_else(|| {
+                    format!(
+                        "node '{}' has no inferred shape; run graph::passes::lower before compile",
+                        n.name
+                    )
+                }),
+        }
+    };
+
     let mut steps: Vec<StepPlan> = Vec::new();
+    let mut moves: Vec<MovePlan> = Vec::new();
     for n in &g.nodes {
         match &n.op {
             OpKind::Input { .. } => {}
             OpKind::Deconv { spec } => {
-                let consumers = g.consumers(n.id);
-                if consumers.len() > 1 {
-                    return Err(format!(
-                        "node '{}' has {} consumers; only linear chains are supported",
-                        n.name,
-                        consumers.len()
-                    ));
-                }
-                // each step must consume the previous step's tensor
-                let chained = match steps.last() {
-                    Some(prev) => n.inputs[0] == prev.node,
-                    None => matches!(g.nodes[n.inputs[0]].op, OpKind::Input { .. }),
-                };
-                if !chained {
-                    return Err(format!(
-                        "node '{}' does not consume the previous step's output; \
-                         only linear chains are supported",
-                        n.name
-                    ));
-                }
                 let schedule = Schedule::new(cfg, spec);
                 let mut sel = kernel::choose(cfg, spec, &schedule);
                 if let Some(k) = forced {
@@ -170,6 +248,22 @@ fn compile_with(
                     isolated_dram_bytes: res.dram_bytes,
                 });
             }
+            op if op.is_move() => {
+                let mut input_bytes = 0u64;
+                for &src in &n.inputs {
+                    input_bytes += tensor_bytes(src)?;
+                }
+                let output_bytes = tensor_bytes(n.id)?;
+                moves.push(MovePlan {
+                    node: n.id,
+                    name: n.name.clone(),
+                    op: n.op.clone(),
+                    output_dst: EdgePlace::Ddr,
+                    input_bytes,
+                    output_bytes,
+                    isolated_dram_bytes: input_bytes + output_bytes,
+                });
+            }
             other => {
                 return Err(format!(
                     "node '{}' is {}; run graph::passes::lower before compile",
@@ -183,24 +277,140 @@ fn compile_with(
         return Err(format!("graph '{}' has no deconvolution nodes", g.name));
     }
 
-    // Inter-layer buffer-reuse pass. The edge tensor (whole batch) must
-    // fit both buffers, and both sides' residency must already move the
-    // tensor exactly once (no RMW spill, no per-block re-streaming), so
-    // zeroing their traffic is exact.
-    let eb = cfg.elem_bytes() as u64;
+    // ---- inter-layer buffer reuse: linear-scan register allocation
+    // over DAG live ranges ----
+    //
+    // Each intermediate tensor is live from its producer's position to
+    // its LAST consumer's position (a U-Net skip tensor stays live
+    // across the whole decoder). Eligible tensors are placed into one
+    // byte arena of capacity input_buf + output_buf by deterministic
+    // first-fit; a placed tensor moves zero DDR bytes on both sides.
+    // Eligibility mirrors the historical chain rule exactly: the
+    // tensor must fit the smaller of the two buffers, and every deconv
+    // endpoint's residency must already move it exactly once (no RMW
+    // spill, no per-block re-streaming), so zeroing its traffic is
+    // exact. Network inputs and consumer-less outputs always cross DDR.
     let in_cap = cfg.input_buf_kib as u64 * 1024;
     let out_cap = cfg.output_buf_kib as u64 * 1024;
-    for i in 0..steps.len().saturating_sub(1) {
-        let edge_bytes = cfg.batch as u64 * steps[i].layer.output_elems() as u64 * eb;
-        let producer_once =
-            steps[i].output_bytes == cfg.batch as u64 * steps[i].layer.output_elems() as u64 * eb;
-        let consumer_once = steps[i + 1].input_bytes
-            == cfg.batch as u64 * steps[i + 1].layer.input_elems() as u64 * eb;
-        if edge_bytes <= in_cap && edge_bytes <= out_cap && producer_once && consumer_once {
-            steps[i].output_dst = EdgePlace::OnChip;
-            steps[i].output_bytes = 0;
-            steps[i + 1].input_src = EdgePlace::OnChip;
-            steps[i + 1].input_bytes = 0;
+    let arena_cap = in_cap + out_cap;
+    let elig_cap = in_cap.min(out_cap);
+
+    let n_nodes = g.nodes.len();
+    let mut last_use: Vec<NodeId> = (0..n_nodes).collect();
+    let mut consumers_of: Vec<Vec<NodeId>> = vec![Vec::new(); n_nodes];
+    for n in &g.nodes {
+        for &src in &n.inputs {
+            last_use[src] = last_use[src].max(n.id);
+            consumers_of[src].push(n.id);
+        }
+    }
+    let mut frees_at: Vec<Vec<NodeId>> = vec![Vec::new(); n_nodes];
+    for (id, &lu) in last_use.iter().enumerate() {
+        frees_at[lu].push(id);
+    }
+
+    let mut step_of: Vec<Option<usize>> = vec![None; n_nodes];
+    for (i, s) in steps.iter().enumerate() {
+        step_of[s.node] = Some(i);
+    }
+    // "moved exactly once" per residency plan; merge/resample moves
+    // materialize their operands and result exactly once by definition.
+    let producer_once = |id: NodeId| -> bool {
+        match step_of[id] {
+            Some(i) => {
+                steps[i].output_bytes == batch * steps[i].layer.output_elems() as u64 * eb
+            }
+            None => true,
+        }
+    };
+    let consumer_once = |id: NodeId| -> bool {
+        match step_of[id] {
+            Some(i) => steps[i].input_bytes == batch * steps[i].layer.input_elems() as u64 * eb,
+            None => true,
+        }
+    };
+
+    let mut free: Vec<(u64, u64)> = vec![(0, arena_cap)]; // (offset, len), offset-sorted
+    let mut placed: Vec<Option<(u64, u64)>> = vec![None; n_nodes];
+    let mut onchip: Vec<BufferAlloc> = Vec::new();
+    let mut live_bytes = 0u64;
+    let mut peak_onchip_bytes = 0u64;
+    for u in 0..n_nodes {
+        let n = &g.nodes[u];
+        let is_input = matches!(n.op, OpKind::Input { .. });
+        let has_consumers = last_use[u] > u;
+        if !is_input && has_consumers {
+            let bytes = tensor_bytes(u)?;
+            let eligible = bytes <= elig_cap
+                && producer_once(u)
+                && consumers_of[u].iter().all(|&c| consumer_once(c));
+            if eligible {
+                // First-fit. The output is placed BEFORE the node's
+                // dying inputs are released: freeing them first would
+                // let the output alias a tensor the node is still
+                // reading — the free-after-first-consume aliasing bug.
+                if let Some(slot) = free.iter().position(|&(_, len)| len >= bytes) {
+                    let (off, len) = free[slot];
+                    if len == bytes {
+                        free.remove(slot);
+                    } else {
+                        free[slot] = (off + bytes, len - bytes);
+                    }
+                    placed[u] = Some((off, bytes));
+                    live_bytes += bytes;
+                    peak_onchip_bytes = peak_onchip_bytes.max(live_bytes);
+                    onchip.push(BufferAlloc {
+                        node: u,
+                        name: n.name.clone(),
+                        offset: off,
+                        bytes,
+                        last_use: last_use[u],
+                    });
+                }
+            }
+        }
+        // Release every tensor whose last read happened at this node,
+        // coalescing the free list so it stays offset-sorted.
+        for &t in &frees_at[u] {
+            if let Some((off, len)) = placed[t] {
+                live_bytes -= len;
+                let pos = free.iter().position(|&(o, _)| o > off).unwrap_or(free.len());
+                free.insert(pos, (off, len));
+                if pos + 1 < free.len() && free[pos].0 + free[pos].1 == free[pos + 1].0 {
+                    free[pos].1 += free[pos + 1].1;
+                    free.remove(pos + 1);
+                }
+                if pos > 0 && free[pos - 1].0 + free[pos - 1].1 == free[pos].0 {
+                    free[pos - 1].1 += free[pos].1;
+                    free.remove(pos);
+                }
+            }
+        }
+    }
+
+    // Zero the DDR traffic on both sides of every placed tensor.
+    for s in steps.iter_mut() {
+        let src = g.nodes[s.node].inputs[0];
+        if placed[src].is_some() {
+            s.input_src = EdgePlace::OnChip;
+            s.input_bytes = 0;
+        }
+        if placed[s.node].is_some() {
+            s.output_dst = EdgePlace::OnChip;
+            s.output_bytes = 0;
+        }
+    }
+    for m in moves.iter_mut() {
+        let mut in_ddr = 0u64;
+        for &src in &g.nodes[m.node].inputs {
+            if placed[src].is_none() {
+                in_ddr += tensor_bytes(src)?;
+            }
+        }
+        m.input_bytes = in_ddr;
+        if placed[m.node].is_some() {
+            m.output_dst = EdgePlace::OnChip;
+            m.output_bytes = 0;
         }
     }
 
@@ -208,6 +418,9 @@ fn compile_with(
         network: g.name.clone(),
         cfg: cfg.clone(),
         steps,
+        moves,
+        onchip,
+        peak_onchip_bytes,
     })
 }
 
@@ -239,14 +452,16 @@ impl NetworkPlan {
         cache_key_for(&self.network, &self.cfg)
     }
 
-    /// Total DDR traffic after inter-layer reuse.
+    /// Total DDR traffic after inter-layer reuse (compute + move steps).
     pub fn total_dram_bytes(&self) -> u64 {
-        self.steps.iter().map(|s| s.dram_bytes()).sum()
+        self.steps.iter().map(|s| s.dram_bytes()).sum::<u64>()
+            + self.moves.iter().map(|m| m.dram_bytes()).sum::<u64>()
     }
 
     /// What the isolated-layer model would have moved.
     pub fn isolated_dram_bytes(&self) -> u64 {
-        self.steps.iter().map(|s| s.isolated_dram_bytes).sum()
+        self.steps.iter().map(|s| s.isolated_dram_bytes).sum::<u64>()
+            + self.moves.iter().map(|m| m.isolated_dram_bytes).sum::<u64>()
     }
 
     /// DDR bytes saved by the reuse pass.
@@ -254,12 +469,11 @@ impl NetworkPlan {
         self.isolated_dram_bytes() - self.total_dram_bytes()
     }
 
-    /// Number of layer boundaries kept on-chip.
+    /// Number of tensors the reuse pass kept on-chip (one per placed
+    /// buffer; on a linear chain this is the number of layer
+    /// boundaries kept on-chip).
     pub fn reused_edges(&self) -> usize {
-        self.steps
-            .iter()
-            .filter(|s| s.output_dst == EdgePlace::OnChip)
-            .count()
+        self.onchip.len()
     }
 
     /// Dense-equivalent MACs per batch item, all steps.
@@ -305,10 +519,21 @@ impl NetworkPlan {
                 s.output_bytes as f64 / 1024.0,
             ));
         }
+        for (i, m) in self.moves.iter().enumerate() {
+            out.push_str(&format!(
+                "move {i}: {} ({}) | input: DDR {:.1} KiB | output: {} ({:.1} KiB)\n",
+                m.name,
+                m.op.mnemonic(),
+                m.input_bytes as f64 / 1024.0,
+                m.output_dst,
+                m.output_bytes as f64 / 1024.0,
+            ));
+        }
         out.push_str(&format!(
-            "summary: {} steps | {} boundary(ies) kept on-chip | DDR {:.2} MiB (isolated {:.2} MiB, saved {:.2} MiB)\n",
+            "summary: {} steps | {} boundary(ies) kept on-chip | peak on-chip {:.1} KiB | DDR {:.2} MiB (isolated {:.2} MiB, saved {:.2} MiB)\n",
             self.steps.len(),
             self.reused_edges(),
+            self.peak_onchip_bytes as f64 / 1024.0,
             self.total_dram_bytes() as f64 / (1024.0 * 1024.0),
             self.isolated_dram_bytes() as f64 / (1024.0 * 1024.0),
             self.bytes_saved() as f64 / (1024.0 * 1024.0),
@@ -343,14 +568,30 @@ impl NetworkPlan {
                     .render()
             })
             .collect();
+        let moves: Vec<String> = self
+            .moves
+            .iter()
+            .map(|m| {
+                JsonObj::new()
+                    .str("name", &m.name)
+                    .str("op", m.op.mnemonic())
+                    .str("output_dst", &m.output_dst.to_string())
+                    .int("input_bytes", m.input_bytes)
+                    .int("output_bytes", m.output_bytes)
+                    .int("isolated_dram_bytes", m.isolated_dram_bytes)
+                    .render()
+            })
+            .collect();
         JsonObj::new()
             .str("network", &self.network)
             .int("batch", self.cfg.batch as u64)
             .int("total_pes", self.cfg.total_pes() as u64)
             .int("reused_edges", self.reused_edges() as u64)
+            .int("peak_onchip_bytes", self.peak_onchip_bytes)
             .int("dram_bytes", self.total_dram_bytes())
             .int("isolated_dram_bytes", self.isolated_dram_bytes())
             .raw("steps", &crate::report::json::array(&steps))
+            .raw("moves", &crate::report::json::array(&moves))
             .render()
     }
 }
@@ -487,5 +728,85 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// A small skip DAG: `a` feeds both the chain `b -> c` and the
+    /// `Concat` three positions later, so its live range spans the
+    /// whole "decoder". A free-after-first-consume allocator would
+    /// hand `a`'s bytes to `c` while `cat` still needs them.
+    fn skip_dag() -> NetworkGraph {
+        use crate::dcnn::Dims;
+        use crate::graph::ir::TensorShape;
+        let sp = |name: &str, in_c: usize, out_c: usize| {
+            crate::dcnn::LayerSpec::new_2d(name, in_c, 16, 16, out_c, 3, 1)
+        };
+        let mut g = NetworkGraph::new("skip-dag", Dims::D2);
+        let inp = g.add_node(
+            "input",
+            OpKind::Input {
+                shape: TensorShape::new(8, 1, 16, 16),
+            },
+            &[],
+        );
+        let a = g.add_node("a", OpKind::Deconv { spec: sp("a", 8, 8) }, &[inp]);
+        let b = g.add_node("b", OpKind::Deconv { spec: sp("b", 8, 8) }, &[a]);
+        let c = g.add_node("c", OpKind::Deconv { spec: sp("c", 8, 8) }, &[b]);
+        let cat = g.add_node("cat", OpKind::Concat, &[c, a]);
+        g.add_node("head", OpKind::Deconv { spec: sp("head", 16, 4) }, &[cat]);
+        g
+    }
+
+    #[test]
+    fn dag_allocator_never_aliases_a_live_skip_tensor() {
+        let g = lower(&skip_dag()).unwrap();
+        let cfg = AccelConfig::paper_2d();
+        let p = compile(&cfg, &g).unwrap();
+        // the skip tensor `a` is placed and stays live until the concat
+        let a = p.onchip.iter().find(|al| al.name == "a").expect("skip placed");
+        let cat = p.moves.iter().find(|m| m.name == "cat").expect("concat planned");
+        assert_eq!(a.last_use, cat.node, "skip lives until its Concat");
+        // no two allocations with overlapping live ranges share bytes
+        for (i, x) in p.onchip.iter().enumerate() {
+            for y in p.onchip.iter().skip(i + 1) {
+                let live_overlap = x.node <= y.last_use && y.node <= x.last_use;
+                let byte_overlap = x.offset < y.offset + y.bytes && y.offset < x.offset + x.bytes;
+                assert!(
+                    !(live_overlap && byte_overlap),
+                    "'{}' [{}..{}) aliases live '{}' [{}..{})",
+                    x.name,
+                    x.offset,
+                    x.offset + x.bytes,
+                    y.name,
+                    y.offset,
+                    y.offset + y.bytes
+                );
+            }
+        }
+        // peak footprint beats materializing every tensor at once
+        let all_bytes: u64 = p.onchip.iter().map(|al| al.bytes).sum();
+        assert!(p.peak_onchip_bytes > 0);
+        assert!(
+            p.peak_onchip_bytes < all_bytes,
+            "peak {} should be strictly below the {} B sum of all placed tensors",
+            p.peak_onchip_bytes,
+            all_bytes
+        );
+        // both concat operands were resident: the merge moves no DDR bytes
+        assert_eq!(cat.dram_bytes(), 0, "fully on-chip concat");
+        assert!(p.total_dram_bytes() < p.isolated_dram_bytes());
+    }
+
+    #[test]
+    fn dag_moves_are_planned_and_rendered() {
+        let g = lower(&skip_dag()).unwrap();
+        let cfg = AccelConfig::paper_2d();
+        let p = compile(&cfg, &g).unwrap();
+        assert_eq!(p.moves.len(), 1);
+        let text = p.render();
+        assert!(text.contains("move 0: cat (concat)"), "{text}");
+        assert!(text.contains("peak on-chip"), "{text}");
+        let js = p.to_json();
+        assert!(js.contains("\"moves\""), "{js}");
+        assert!(js.contains("peak_onchip_bytes"), "{js}");
     }
 }

@@ -13,10 +13,15 @@
 //!   layer's ramp-up;
 //! * boundaries the reuse pass kept on-chip move no DDR traffic at
 //!   all, shrinking the step's memory cycles;
-//! * only the network's first load and final store remain exposed.
+//! * only the network's first load and final store remain exposed;
+//! * weight-free merge/resample steps ([`super::plan::MovePlan`]) burn
+//!   no MACs — they add pure DDR transfer cycles for whichever
+//!   operands spilled, and nothing at all when the reuse pass kept the
+//!   skip tensors on-chip.
 //!
-//! The per-step [`LayerMetrics`] sum exactly to the network total, so
-//! existing per-layer reporting keeps working on plan output.
+//! The per-step [`LayerMetrics`] plus the move cycles sum exactly to
+//! the network total, so existing per-layer reporting keeps working on
+//! plan output.
 
 use crate::accel::memory::DdrModel;
 use crate::accel::metrics::{dense_equivalent_macs, BoundBy, LayerMetrics};
@@ -36,8 +41,14 @@ pub struct NetworkRunMetrics {
     pub batch: usize,
     /// Clock for time conversion.
     pub freq_mhz: f64,
-    /// Total DDR traffic (batch totals, after reuse).
+    /// Total DDR traffic (batch totals, after reuse, moves included).
     pub dram_bytes: u64,
+    /// Cycles spent streaming the weight-free merge/resample (move)
+    /// steps' spilled operands through DDR — zero on linear chains and
+    /// whenever the reuse pass kept every skip tensor on-chip.
+    pub move_cycles: u64,
+    /// DDR bytes moved by the merge/resample steps alone.
+    pub move_dram_bytes: u64,
     /// Dense-equivalent MACs per batch item, all layers.
     pub dense_macs: u64,
     /// Useful MACs per batch item, all layers.
@@ -157,6 +168,16 @@ pub fn simulate_plan(plan: &NetworkPlan) -> NetworkRunMetrics {
         });
     }
 
+    // Merge/resample steps burn no MACs; their only cost is streaming
+    // whichever operands the reuse pass could not keep on-chip.
+    let mut move_cycles = 0u64;
+    let mut move_dram_bytes = 0u64;
+    for m in &plan.moves {
+        move_cycles += ddr.transfer_cycles(m.dram_bytes(), cfg.freq_mhz);
+        move_dram_bytes += m.dram_bytes();
+    }
+    total_cycles += move_cycles;
+
     NetworkRunMetrics {
         network: plan.network.clone(),
         total_cycles,
@@ -166,6 +187,8 @@ pub fn simulate_plan(plan: &NetworkPlan) -> NetworkRunMetrics {
         dense_macs: plan.dense_macs(),
         useful_macs: steps.iter().map(|m| m.useful_macs).sum(),
         total_pes: cfg.total_pes(),
+        move_cycles,
+        move_dram_bytes,
         steps,
     }
 }
@@ -239,9 +262,11 @@ mod tests {
         for net in zoo::all_benchmarks() {
             let m = run(&net);
             let sum: u64 = m.steps.iter().map(|s| s.total_cycles).sum();
-            assert_eq!(sum, m.total_cycles, "{}", net.name);
+            assert_eq!(sum + m.move_cycles, m.total_cycles, "{}", net.name);
             let traffic: u64 = m.steps.iter().map(|s| s.dram_bytes).sum();
-            assert_eq!(traffic, m.dram_bytes, "{}", net.name);
+            assert_eq!(traffic + m.move_dram_bytes, m.dram_bytes, "{}", net.name);
+            // benchmark decoders are linear chains: no move steps
+            assert_eq!(m.move_cycles, 0, "{}", net.name);
         }
     }
 

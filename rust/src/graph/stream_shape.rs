@@ -23,9 +23,111 @@
 //! (`tests/prop_stream.rs`) pins reassembled streaming outputs to
 //! these shapes.
 
+use std::fmt;
+
 use crate::dcnn::{Dims, LayerSpec};
 
 use super::ir::{NetworkGraph, OpKind};
+
+/// Typed failure of the streaming shape pass.
+///
+/// The variant that motivated the type is [`NonLinear`]: the pass used
+/// to silently assume chain order, which a skip DAG (U-Net / UNETR)
+/// violates — merge nodes need whole skip tensors resident, so
+/// frame-by-frame streaming does not apply and callers must be able to
+/// tell that apart from a mis-built graph.
+///
+/// [`NonLinear`]: StreamShapeError::NonLinear
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamShapeError {
+    /// The graph still contains OOM-form nodes
+    /// (run [`super::passes::lower`] first).
+    OomForm {
+        /// Name of the offending node.
+        node: String,
+    },
+    /// The graph has no deconvolution nodes.
+    NoDeconvs {
+        /// Graph name.
+        graph: String,
+    },
+    /// The graph is not a linear chain, naming the offending node — a
+    /// merge/resample node, a multi-input node, or the producer of a
+    /// multi-consumer tensor.
+    NonLinear {
+        /// Name of the offending node.
+        node: String,
+        /// Why that node breaks chain order.
+        reason: String,
+    },
+    /// A layer has `K < S`, so its cropped streaming extent is
+    /// undefined (the paper's benchmarks all have `K ≥ S`).
+    BadGeometry {
+        /// Layer name.
+        layer: String,
+        /// Kernel extent.
+        k: usize,
+        /// Stride.
+        s: usize,
+    },
+    /// Adjacent layers' depths do not compose.
+    DepthChainBroken {
+        /// Producer layer name.
+        producer: String,
+        /// Frames the producer emits.
+        emits: usize,
+        /// Consumer layer name.
+        consumer: String,
+        /// Frames the consumer expects.
+        consumes: usize,
+    },
+}
+
+impl fmt::Display for StreamShapeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StreamShapeError::OomForm { node } => {
+                write!(f, "node '{node}' is OOM-form; run passes::lower before stream_shapes")
+            }
+            StreamShapeError::NoDeconvs { graph } => {
+                write!(f, "graph '{graph}' has no deconvolution nodes")
+            }
+            StreamShapeError::NonLinear { node, reason } => {
+                write!(
+                    f,
+                    "node '{node}' breaks chain order ({reason}); streaming supports only linear graphs"
+                )
+            }
+            StreamShapeError::BadGeometry { layer, k, s } => {
+                write!(
+                    f,
+                    "layer '{layer}' has K={k} < S={s}; streaming (and cropping) need K >= S"
+                )
+            }
+            StreamShapeError::DepthChainBroken {
+                producer,
+                emits,
+                consumer,
+                consumes,
+            } => {
+                write!(
+                    f,
+                    "layer '{producer}' emits {emits} frames but '{consumer}' consumes {consumes} (depth chain broken)"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for StreamShapeError {}
+
+// The pre-existing callers thread stream-shape failures through
+// `Result<_, String>` pipelines; keep `?` working for them.
+impl From<StreamShapeError> for String {
+    fn from(e: StreamShapeError) -> String {
+        e.to_string()
+    }
+}
 
 /// Streaming-relevant geometry of one deconvolution layer.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -74,22 +176,47 @@ impl LayerStreamShape {
 /// Compute the [`LayerStreamShape`] of every deconvolution node of a
 /// lowered graph, in topological order.
 ///
-/// Errors on OOM-form graphs (run [`super::passes::lower`] first), on
-/// a graph with no deconvolution nodes, on a layer with `K < S`
+/// Errors with a typed [`StreamShapeError`]: OOM-form graphs (run
+/// [`super::passes::lower`] first), graphs with no deconvolution
+/// nodes, **non-linear graphs** (skip DAGs cannot stream
+/// frame-by-frame; the offending node is named), layers with `K < S`
 /// (whose cropped extent is undefined — the paper's benchmarks all
-/// have `K ≥ S`), and on a 3D chain whose depths do not compose.
-pub fn stream_shapes(g: &NetworkGraph) -> Result<Vec<LayerStreamShape>, String> {
+/// have `K ≥ S`), and 3D chains whose depths do not compose.
+pub fn stream_shapes(g: &NetworkGraph) -> Result<Vec<LayerStreamShape>, StreamShapeError> {
     for n in &g.nodes {
         if matches!(n.op, OpKind::ZeroInsert { .. } | OpKind::Conv { .. }) {
-            return Err(format!(
-                "node '{}' is OOM-form; run passes::lower before stream_shapes",
-                n.name
-            ));
+            return Err(StreamShapeError::OomForm {
+                node: n.name.clone(),
+            });
+        }
+    }
+    // Chain-order check: streaming assumes node order IS dataflow
+    // order with exactly one tensor in flight. Any merge/resample
+    // node, multi-input node, or multi-consumer tensor breaks that.
+    for n in &g.nodes {
+        if n.op.is_move() || n.inputs.len() > 1 {
+            return Err(StreamShapeError::NonLinear {
+                node: n.name.clone(),
+                reason: if n.inputs.len() > 1 {
+                    format!("{} merges {} input tensors", n.op.mnemonic(), n.inputs.len())
+                } else {
+                    format!("{} is a resampling node", n.op.mnemonic())
+                },
+            });
+        }
+        let consumers = g.consumers(n.id);
+        if consumers.len() > 1 {
+            return Err(StreamShapeError::NonLinear {
+                node: n.name.clone(),
+                reason: format!("its tensor has {} consumers (skip edge)", consumers.len()),
+            });
         }
     }
     let specs = g.deconv_specs();
     if specs.is_empty() {
-        return Err(format!("graph '{}' has no deconvolution nodes", g.name));
+        return Err(StreamShapeError::NoDeconvs {
+            graph: g.name.clone(),
+        });
     }
     let mut shapes = Vec::with_capacity(specs.len());
     for spec in &specs {
@@ -97,22 +224,25 @@ pub fn stream_shapes(g: &NetworkGraph) -> Result<Vec<LayerStreamShape>, String> 
     }
     for pair in shapes.windows(2) {
         if pair[0].out_frames != pair[1].in_frames {
-            return Err(format!(
-                "layer '{}' emits {} frames but '{}' consumes {} (depth chain broken)",
-                pair[0].name, pair[0].out_frames, pair[1].name, pair[1].in_frames
-            ));
+            return Err(StreamShapeError::DepthChainBroken {
+                producer: pair[0].name.clone(),
+                emits: pair[0].out_frames,
+                consumer: pair[1].name.clone(),
+                consumes: pair[1].in_frames,
+            });
         }
     }
     Ok(shapes)
 }
 
 /// The [`LayerStreamShape`] of one layer.
-fn shape_of(spec: &LayerSpec) -> Result<LayerStreamShape, String> {
+fn shape_of(spec: &LayerSpec) -> Result<LayerStreamShape, StreamShapeError> {
     if spec.k < spec.s {
-        return Err(format!(
-            "layer '{}' has K={} < S={}; streaming (and cropping) need K >= S",
-            spec.name, spec.k, spec.s
-        ));
+        return Err(StreamShapeError::BadGeometry {
+            layer: spec.name.clone(),
+            k: spec.k,
+            s: spec.s,
+        });
     }
     let (in_frames, out_frames) = match spec.dims {
         Dims::D2 => (1, 1),
@@ -187,13 +317,53 @@ mod tests {
     fn rejects_oom_form_and_bad_geometry() {
         let net = zoo::tiny_3d();
         let err = stream_shapes(&NetworkGraph::from_network_oom(&net)).unwrap_err();
-        assert!(err.contains("OOM-form"), "{err}");
+        assert!(matches!(err, StreamShapeError::OomForm { .. }), "{err:?}");
+        assert!(err.to_string().contains("OOM-form"), "{err}");
 
         let mut bad = zoo::tiny_3d();
         bad.layers[0].s = 5; // K=3 < S=5
         let g = NetworkGraph::from_network(&bad);
         let err = stream_shapes(&g).unwrap_err();
-        assert!(err.contains("K >= S"), "{err}");
+        assert!(
+            matches!(err, StreamShapeError::BadGeometry { k: 3, s: 5, .. }),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("K >= S"), "{err}");
+    }
+
+    #[test]
+    fn non_linear_graph_gets_a_typed_error_naming_the_node() {
+        use crate::dcnn::LayerSpec;
+        use crate::graph::ir::TensorShape;
+        // input -> a -> b, then concat(b, a): `a` has two consumers.
+        let sp = |name: &str| LayerSpec::new_2d(name, 2, 4, 4, 2, 3, 1);
+        let mut g = NetworkGraph::new("skippy", crate::dcnn::Dims::D2);
+        let inp = g.add_node(
+            "input",
+            OpKind::Input {
+                shape: TensorShape::new(2, 1, 4, 4),
+            },
+            &[],
+        );
+        let a = g.add_node("a", OpKind::Deconv { spec: sp("a") }, &[inp]);
+        let b = g.add_node("b", OpKind::Deconv { spec: sp("b") }, &[a]);
+        g.add_node("cat", OpKind::Concat, &[b, a]);
+        let g = passes::lower(&g).unwrap();
+
+        let err = stream_shapes(&g).unwrap_err();
+        match &err {
+            StreamShapeError::NonLinear { node, reason } => {
+                // the first offender in topological order is the skip
+                // tensor's producer `a` (two consumers: b and cat)
+                assert_eq!(node, "a", "{err}");
+                assert!(reason.contains("2 consumers"), "{reason}");
+            }
+            other => panic!("expected NonLinear, got {other:?}"),
+        }
+        assert!(err.to_string().contains("streaming supports only linear"), "{err}");
+        // the error threads through String-error pipelines via From
+        let as_string: String = err.into();
+        assert!(as_string.contains("'a'"), "{as_string}");
     }
 
     #[test]

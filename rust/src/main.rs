@@ -79,6 +79,8 @@ fn print_usage() {
          simulate   --net NAME | --all   [--batch N]   per-layer util + TOPS (Fig. 6)\n\
          compile    NAME [--batch N] [--json] [--oom]  whole-network plan (graph compiler)\n\
            compile options: --trace FILE  --metrics FILE (per-pass spans)\n\
+           skip-DAG zoo entries (e.g. `udcnn compile unet3d`, `unetr-dec`) plan\n\
+           merge/resample moves; --oom stays chain-only\n\
          plan       --net NAME [--layer NAME]          explain the execution schedule\n\
          sparsity                                      inserted-map sparsity (Fig. 1)\n\
          resources                                     VC709 utilization (Table III)\n\
@@ -178,12 +180,20 @@ fn cmd_compile(rest: &[String]) -> Result<()> {
     let mut cfg = AccelConfig::paper_for(net.dims);
     cfg.batch = opt_parse(&opts, "batch", cfg.batch)?;
 
-    // Front-end form: native IOM graph, or the OOM decomposition
-    // (`--oom`) that the lowering pass rewrites to the same plan.
+    // Front-end form: the network's native (possibly skip-topology)
+    // graph, or the OOM decomposition (`--oom`) that the lowering pass
+    // rewrites to the same plan. The OOM front end only exists for
+    // linear chains.
     let g = if opts.contains_key("oom") {
+        if net.topology != udcnn::dcnn::Topology::Chain {
+            anyhow::bail!(
+                "--oom only applies to chain networks; '{}' has a skip topology",
+                net.name
+            );
+        }
         NetworkGraph::from_network_oom(&net)
     } else {
-        NetworkGraph::from_network(&net)
+        net.graph()
     };
     let obs = obs_from_opts(&opts);
     let track = obs.track("compile");

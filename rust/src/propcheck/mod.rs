@@ -4,6 +4,8 @@
 //! draw from a size budget that the runner sweeps from small to large,
 //! so the first failing case is already near-minimal.
 
+use crate::dcnn::{Dims, LayerSpec};
+use crate::graph::{Act, NetworkGraph, NodeId, OpKind, TensorShape};
 use crate::util::Prng;
 
 /// A generation context: PRNG + size budget.
@@ -43,6 +45,242 @@ impl Gen {
     /// A vector of length `n` built by `f`.
     pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
         (0..n).map(|_| f(self)).collect()
+    }
+
+    /// A seeded random skip-topology [`NetworkGraph`] (native IOM
+    /// form) with guaranteed-valid shapes, plus the constructively
+    /// computed output shape of every node (indexed by [`NodeId`]) for
+    /// differential checks against `graph::passes::infer_shapes`.
+    ///
+    /// The generator grows a trunk by composing motifs — stride-1 and
+    /// stride-2 deconvolutions, fuse-able activations, add-diamonds
+    /// (two parallel convolutions merged elementwise), concat skips,
+    /// and pool→conv→upsample U-dips reclosed by concat — so shapes
+    /// are valid by construction rather than by rejection sampling.
+    /// The final motif is always a concat skip: every generated graph
+    /// has at least one multi-input merge node and at least one
+    /// weighted (deconvolution) node.
+    pub fn dag(&mut self, dims: Dims) -> (NetworkGraph, Vec<TensorShape>) {
+        let d3 = dims == Dims::D3;
+        let spec = |s: &TensorShape, name: String, out_c: usize, stride: usize| {
+            if d3 {
+                LayerSpec::new_3d(name, s.c, s.d, s.h, s.w, out_c, 3, stride)
+            } else {
+                LayerSpec::new_2d(name, s.c, s.h, s.w, out_c, 3, stride)
+            }
+        };
+        // cropped deconv output: `I·S` per spatial axis (depth only in 3D)
+        let out_of = |s: &TensorShape, out_c: usize, stride: usize| {
+            TensorShape::new(
+                out_c,
+                if d3 { s.d * stride } else { s.d },
+                s.h * stride,
+                s.w * stride,
+            )
+        };
+        fn push(
+            g: &mut NetworkGraph,
+            shapes: &mut Vec<TensorShape>,
+            name: String,
+            op: OpKind,
+            inputs: &[NodeId],
+            out: TensorShape,
+        ) -> NodeId {
+            let id = g.add_node(name, op, inputs);
+            shapes.push(out);
+            id
+        }
+        let mut g = NetworkGraph::new("prop-dag", dims);
+        let mut shapes = Vec::new();
+        let s_in = TensorShape::new(
+            self.int(1, 3),
+            if d3 { 2 * self.int(1, 2) } else { 1 },
+            2 * self.int(1, 3),
+            2 * self.int(1, 3),
+        );
+        let mut trunk = g.add_node("input", OpKind::Input { shape: s_in }, &[]);
+        shapes.push(s_in);
+        let mut cur = s_in;
+        let steps = 2 + self.int(0, self.size.min(8));
+        for step in 0..=steps {
+            // the last motif is always a concat skip (see docs)
+            let kind = if step == steps { 4 } else { self.int(0, 5) };
+            let grown = cur.h >= 16 || cur.w >= 16 || (d3 && cur.d >= 8);
+            match kind {
+                // stride-2 deconvolution (an upsampling trunk stage)
+                1 if !grown => {
+                    let oc = self.int(1, 4);
+                    let sp = spec(&cur, format!("dc{}", g.len()), oc, 2);
+                    let out = out_of(&cur, oc, 2);
+                    trunk = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("dc{}", g.len()),
+                        OpKind::Deconv { spec: sp },
+                        &[trunk],
+                        out,
+                    );
+                    cur = out;
+                }
+                // fuse-able activation on the trunk (never directly on
+                // the input node: that would survive lowering unfused)
+                2 if g.len() > 1 => {
+                    let act = *self.choose(&[Act::Relu, Act::Tanh]);
+                    trunk = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("act{}", g.len()),
+                        OpKind::Activation { act },
+                        &[trunk],
+                        cur,
+                    );
+                }
+                // add-diamond: two parallel convolutions, merged elementwise
+                3 => {
+                    let oc = self.int(1, 4);
+                    let out = out_of(&cur, oc, 1);
+                    let la = spec(&cur, format!("dia{}", g.len()), oc, 1);
+                    let a = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("dia{}", g.len()),
+                        OpKind::Deconv { spec: la },
+                        &[trunk],
+                        out,
+                    );
+                    let lb = spec(&cur, format!("dib{}", g.len()), oc, 1);
+                    let b = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("dib{}", g.len()),
+                        OpKind::Deconv { spec: lb },
+                        &[trunk],
+                        out,
+                    );
+                    trunk = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("add{}", g.len()),
+                        OpKind::Add,
+                        &[a, b],
+                        out,
+                    );
+                    cur = out;
+                }
+                // U-dip: pool, convolve, upsample back, reclose by concat
+                5 if cur.h % 2 == 0 && cur.w % 2 == 0 && (!d3 || cur.d % 2 == 0) => {
+                    let (skip, skip_shape) = (trunk, cur);
+                    let pooled = TensorShape::new(
+                        cur.c,
+                        if d3 { cur.d / 2 } else { cur.d },
+                        cur.h / 2,
+                        cur.w / 2,
+                    );
+                    let p = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("pool{}", g.len()),
+                        OpKind::MaxPool { k: 2 },
+                        &[trunk],
+                        pooled,
+                    );
+                    let oc = self.int(1, 3);
+                    let mid = out_of(&pooled, oc, 1);
+                    let lc = spec(&pooled, format!("dip{}", g.len()), oc, 1);
+                    let c = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("dip{}", g.len()),
+                        OpKind::Deconv { spec: lc },
+                        &[p],
+                        mid,
+                    );
+                    let up = if *self.choose(&[true, false]) {
+                        let us = TensorShape::new(
+                            mid.c,
+                            if d3 { mid.d * 2 } else { mid.d },
+                            mid.h * 2,
+                            mid.w * 2,
+                        );
+                        push(
+                            &mut g,
+                            &mut shapes,
+                            format!("up{}", g.len()),
+                            OpKind::Upsample { f: 2 },
+                            &[c],
+                            us,
+                        )
+                    } else {
+                        let lu = spec(&mid, format!("du{}", g.len()), oc, 2);
+                        let us = out_of(&mid, oc, 2);
+                        push(
+                            &mut g,
+                            &mut shapes,
+                            format!("du{}", g.len()),
+                            OpKind::Deconv { spec: lu },
+                            &[c],
+                            us,
+                        )
+                    };
+                    let cat = TensorShape::new(
+                        shapes[up].c + skip_shape.c,
+                        skip_shape.d,
+                        skip_shape.h,
+                        skip_shape.w,
+                    );
+                    trunk = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("cat{}", g.len()),
+                        OpKind::Concat,
+                        &[up, skip],
+                        cat,
+                    );
+                    cur = cat;
+                }
+                // concat skip: a convolution alongside the saved trunk
+                4 => {
+                    let (skip, skip_shape) = (trunk, cur);
+                    let oc = self.int(1, 3);
+                    let out = out_of(&cur, oc, 1);
+                    let lc = spec(&cur, format!("sc{}", g.len()), oc, 1);
+                    let c = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("sc{}", g.len()),
+                        OpKind::Deconv { spec: lc },
+                        &[trunk],
+                        out,
+                    );
+                    let cat = TensorShape::new(out.c + skip_shape.c, out.d, out.h, out.w);
+                    trunk = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("cat{}", g.len()),
+                        OpKind::Concat,
+                        &[c, skip],
+                        cat,
+                    );
+                    cur = cat;
+                }
+                // default: a stride-1 convolution trunk stage
+                _ => {
+                    let oc = self.int(1, 4);
+                    let out = out_of(&cur, oc, 1);
+                    let lc = spec(&cur, format!("cv{}", g.len()), oc, 1);
+                    trunk = push(
+                        &mut g,
+                        &mut shapes,
+                        format!("cv{}", g.len()),
+                        OpKind::Deconv { spec: lc },
+                        &[trunk],
+                        out,
+                    );
+                    cur = out;
+                }
+            }
+        }
+        (g, shapes)
     }
 }
 

@@ -241,7 +241,7 @@ fn validate_weights<T: Copy + Default>(
 
 /// Lower `net` to IOM form and run the streaming shape pass.
 fn shapes_of(net: &Network) -> Result<Vec<LayerStreamShape>, String> {
-    stream_shapes(&passes::lower(&NetworkGraph::from_network(net))?)
+    Ok(stream_shapes(&passes::lower(&NetworkGraph::from_network(net))?)?)
 }
 
 /// Live elements the whole-volume golden forward

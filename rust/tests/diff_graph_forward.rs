@@ -21,7 +21,7 @@ use udcnn::accel::dse::tune::{tune_network, TuneOptions};
 use udcnn::accel::AccelConfig;
 use udcnn::coordinator::service::forward_uniform;
 use udcnn::dcnn::{zoo, LayerData, Network};
-use udcnn::graph::{self, NetworkGraph};
+use udcnn::graph;
 use udcnn::serve::PlanCache;
 use udcnn::tensor::{Volume, WeightsOIDHW};
 
@@ -57,7 +57,7 @@ fn assert_paths_agree(net: &Network, cfg: &AccelConfig, threads: usize) {
 
     let weights = service_weights(net);
     let input = service_input(net);
-    let lowered = graph::passes::lower(&NetworkGraph::from_network(net)).unwrap();
+    let lowered = graph::passes::lower(&net.graph()).unwrap();
     let graph_out = graph::execute_f32(&lowered, &weights, &input, threads).unwrap();
     let golden = forward_uniform(net, &weights, input.data());
     assert_eq!(
@@ -112,8 +112,10 @@ fn tuned_and_default_fingerprints_key_distinct_plans() {
 #[test]
 #[ignore = "billions of MACs per network: run in release (CI does)"]
 fn full_zoo_bit_exact_under_default_and_tuned_configs() {
-    // Every zoo::NAMES network — the four paper benchmarks plus the
-    // tiny test nets — through both paths under both configs.
+    // Every zoo::NAMES network — the four paper benchmarks, the tiny
+    // test nets, and the skip-DAG entries (unet3d, unetr-dec, whose
+    // plans route merge nodes as zero-MAC moves) — through both paths
+    // under both configs.
     for name in zoo::NAMES {
         let net = zoo::by_name(name).unwrap();
         for (i, cfg) in configs_for(&net, 8).iter().enumerate() {

@@ -29,10 +29,10 @@
 
 use udcnn::accel::dse::tune::{tune_network, TuneOptions};
 use udcnn::accel::{kernel, AccelConfig, KernelChoice};
-use udcnn::dcnn::{synth_frames, synth_uniform_weights, zoo, Network};
+use udcnn::dcnn::{synth_frames, synth_uniform_weights, zoo, Network, Topology};
 use udcnn::fixed::Q88;
 use udcnn::func::uniform;
-use udcnn::graph::{execute_f32, execute_f32_kernels, passes, NetworkGraph};
+use udcnn::graph::{execute_f32, execute_f32_kernels, passes};
 use udcnn::propcheck::assert_ulps_within;
 use udcnn::tensor::{Volume, WeightsOIDHW};
 
@@ -94,7 +94,7 @@ fn configs_for(net: &Network, batch: usize) -> Vec<(&'static str, AccelConfig)> 
 fn assert_kernels_match(net: &Network, threads: usize) {
     let weights = synth_uniform_weights(net, 0x5EED);
     let input = synth_frames(&net.layers[0], 99, 0, net.layers[0].in_d);
-    let g = passes::lower(&NetworkGraph::from_network(net)).unwrap();
+    let g = passes::lower(&net.graph()).unwrap();
 
     // f32 golden: all layers through the scatter path, one thread.
     let golden = execute_f32(&g, &weights, &input, 1).unwrap();
@@ -182,6 +182,13 @@ fn auto_choices_actually_exercise_the_gather_path() {
 fn full_zoo_bit_exact_across_kernels() {
     for name in zoo::NAMES {
         let net = zoo::by_name(name).unwrap();
+        // The per-layer Q8.8 reference walk below chains layer outputs
+        // directly, which only describes linear topologies; the
+        // skip-DAG entries get their own composed-forward battery in
+        // `diff_unet.rs` (same kernel axes, naive concat/add golden).
+        if net.topology != Topology::Chain {
+            continue;
+        }
         assert_kernels_match(&net, 4);
     }
 }

@@ -1,0 +1,305 @@
+//! Differential battery for the U-Net/UNETR skip-topology zoo entries.
+//!
+//! The graph executor ([`udcnn::graph::execute_f32`] /
+//! [`udcnn::graph::execute_q88`]) is checked **bit-exactly** against a
+//! naively composed forward written out longhand in this file:
+//! per-layer uniform IOM kernels (scatter + crop) plus explicit
+//! channel-concat / elementwise-add / max-pool / nearest-upsample
+//! steps that mirror each topology's fixed layout. The composition
+//! here deliberately shares no code with `graph::execute` — a bug in
+//! either side breaks the diff.
+//!
+//! Axes covered: f32 and Q8.8 datapaths × {default-config plan, tuned
+//! plan, forced scatter, forced gather} kernel mixes × {1, N} worker
+//! threads, plus the serving front door (`forward_uniform`, which
+//! routes skip topologies through the graph executor). The miniature
+//! entries run in the default suite; the full-size entries are
+//! `#[ignore]`d and run in the CI release battery with
+//! `--include-ignored`.
+
+use udcnn::accel::dse::{tune_network, TuneOptions};
+use udcnn::accel::{AccelConfig, KernelChoice};
+use udcnn::coordinator::forward_uniform;
+use udcnn::dcnn::{zoo, LayerData, LayerSpec, Network, Topology};
+use udcnn::fixed::Q88;
+use udcnn::func::uniform;
+use udcnn::graph::{
+    compile_network, execute_f32, execute_f32_kernels, execute_q88, execute_q88_kernels, passes,
+};
+use udcnn::tensor::{Volume, WeightsOIDHW};
+
+// ---- naive composed forward (independent of graph::execute) ----
+
+fn cat2<T: Copy + Default>(a: &Volume<T>, b: &Volume<T>) -> Volume<T> {
+    assert_eq!((a.d, a.h, a.w), (b.d, b.h, b.w));
+    let mut data = Vec::with_capacity((a.c + b.c) * a.d * a.h * a.w);
+    data.extend_from_slice(a.data());
+    data.extend_from_slice(b.data());
+    Volume::from_vec(a.c + b.c, a.d, a.h, a.w, data)
+}
+
+fn add2<T: Copy + Default + std::ops::Add<Output = T>>(a: &Volume<T>, b: &Volume<T>) -> Volume<T> {
+    assert_eq!((a.c, a.d, a.h, a.w), (b.c, b.d, b.h, b.w));
+    let zipped = a.data().iter().zip(b.data());
+    let data = zipped.map(|(&x, &y)| x + y).collect();
+    Volume::from_vec(a.c, a.d, a.h, a.w, data)
+}
+
+/// Non-overlapping 2×2×2 max-pool (all entries are 3D).
+fn pool2<T: Copy + Default + PartialOrd>(v: &Volume<T>) -> Volume<T> {
+    assert!(v.d % 2 == 0 && v.h % 2 == 0 && v.w % 2 == 0);
+    let mut out = Volume::zeros(v.c, v.d / 2, v.h / 2, v.w / 2);
+    for c in 0..v.c {
+        for z in 0..v.d / 2 {
+            for y in 0..v.h / 2 {
+                for x in 0..v.w / 2 {
+                    let mut m = v.at(c, 2 * z, 2 * y, 2 * x);
+                    for dz in 0..2 {
+                        for dy in 0..2 {
+                            for dx in 0..2 {
+                                let cand = v.at(c, 2 * z + dz, 2 * y + dy, 2 * x + dx);
+                                if cand > m {
+                                    m = cand;
+                                }
+                            }
+                        }
+                    }
+                    *out.at_mut(c, z, y, x) = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Nearest-neighbour upsample by `f` on all three axes.
+fn upsample<T: Copy + Default>(v: &Volume<T>, f: usize) -> Volume<T> {
+    let mut out = Volume::zeros(v.c, v.d * f, v.h * f, v.w * f);
+    for c in 0..v.c {
+        for z in 0..v.d * f {
+            for y in 0..v.h * f {
+                for x in 0..v.w * f {
+                    *out.at_mut(c, z, y, x) = v.at(c, z / f, y / f, x / f);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The U-Net layout of [`zoo::unet3d_sized`], composed longhand. `dc`
+/// runs one weighted layer (scatter IOM + crop — the golden form).
+fn naive_unet3d<T, F>(net: &Network, w: &[WeightsOIDHW<T>], input: &Volume<T>, dc: F) -> Volume<T>
+where
+    T: Copy + Default + PartialOrd,
+    F: Fn(&Volume<T>, &WeightsOIDHW<T>, &LayerSpec) -> Volume<T>,
+{
+    let l = &net.layers;
+    let e1a = dc(input, &w[0], &l[0]);
+    let e1b = dc(&e1a, &w[1], &l[1]);
+    let p1 = pool2(&e1b);
+    let e2a = dc(&p1, &w[2], &l[2]);
+    let e2b = dc(&e2a, &w[3], &l[3]);
+    let p2 = pool2(&e2b);
+    let b1 = dc(&p2, &w[4], &l[4]);
+    let b2 = dc(&b1, &w[5], &l[5]);
+    let u2 = dc(&b2, &w[6], &l[6]);
+    let c2 = cat2(&u2, &e2b);
+    let d2a = dc(&c2, &w[7], &l[7]);
+    let d2b = dc(&d2a, &w[8], &l[8]);
+    let u1 = dc(&d2b, &w[9], &l[9]);
+    let c1 = cat2(&u1, &e1b);
+    let d1a = dc(&c1, &w[10], &l[10]);
+    let d1b = dc(&d1a, &w[11], &l[11]);
+    dc(&d1b, &w[12], &l[12])
+}
+
+/// The UNETR-decoder layout of [`zoo::unetr_dec_sized`], longhand.
+fn naive_unetr<T, F>(net: &Network, w: &[WeightsOIDHW<T>], input: &Volume<T>, dc: F) -> Volume<T>
+where
+    T: Copy + Default + std::ops::Add<Output = T>,
+    F: Fn(&Volume<T>, &WeightsOIDHW<T>, &LayerSpec) -> Volume<T>,
+{
+    let l = &net.layers;
+    let u1 = dc(input, &w[0], &l[0]);
+    let p1 = dc(input, &w[1], &l[1]);
+    let a1 = add2(&u1, &upsample(&p1, 2));
+    let r1 = dc(&a1, &w[2], &l[2]);
+    let u2 = dc(&r1, &w[3], &l[3]);
+    let p2 = dc(input, &w[4], &l[4]);
+    let a2 = add2(&u2, &upsample(&p2, 4));
+    let r2 = dc(&a2, &w[5], &l[5]);
+    dc(&r2, &w[6], &l[6])
+}
+
+fn naive_forward_f32(net: &Network, w: &[WeightsOIDHW<f32>], input: &Volume<f32>) -> Volume<f32> {
+    let dc = |v: &Volume<f32>, w: &WeightsOIDHW<f32>, l: &LayerSpec| {
+        let full = uniform::deconv_iom(v, w, l.s);
+        uniform::crop(&full, l.out_d(), l.out_h(), l.out_w())
+    };
+    match net.topology {
+        Topology::UNet3d => naive_unet3d(net, w, input, dc),
+        Topology::UnetrDecoder => naive_unetr(net, w, input, dc),
+        Topology::Chain => unreachable!("battery covers skip topologies"),
+    }
+}
+
+fn naive_forward_q88(net: &Network, w: &[WeightsOIDHW<Q88>], input: &Volume<Q88>) -> Volume<Q88> {
+    let dc = |v: &Volume<Q88>, w: &WeightsOIDHW<Q88>, l: &LayerSpec| {
+        let full = uniform::deconv_iom_q(v, w, l.s);
+        uniform::crop(&full, l.out_d(), l.out_h(), l.out_w())
+    };
+    match net.topology {
+        Topology::UNet3d => naive_unet3d(net, w, input, dc),
+        Topology::UnetrDecoder => naive_unetr(net, w, input, dc),
+        Topology::Chain => unreachable!("battery covers skip topologies"),
+    }
+}
+
+fn synth_weights_f32(net: &Network) -> Vec<WeightsOIDHW<f32>> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)).uniform_weights())
+        .collect()
+}
+
+fn synth_weights_q88(net: &Network) -> Vec<WeightsOIDHW<Q88>> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LayerData::synth(l, 0x5EED ^ (i as u64)).quantize())
+        .map(|d| d.uniform_weights())
+        .collect()
+}
+
+/// Per-step kernel choices of the plan `cfg` compiles for `net`, in
+/// weight (node) order.
+fn plan_kernels(cfg: &AccelConfig, net: &Network) -> Vec<KernelChoice> {
+    let plan = compile_network(cfg, net).unwrap();
+    plan.steps.iter().map(|s| s.kernel.choice).collect()
+}
+
+/// The full f32 axis sweep for one network: graph executor vs the
+/// longhand composition under every kernel mix and both thread counts,
+/// plus the serving front door.
+fn diff_f32(net: &Network) {
+    let weights = synth_weights_f32(net);
+    let input = LayerData::synth(&net.layers[0], 99).uniform_input();
+    let want = naive_forward_f32(net, &weights, &input);
+    let g = passes::lower(&net.graph()).unwrap();
+
+    let n = net.layers.len();
+    let default_mix = plan_kernels(&AccelConfig::paper_for(net.dims), net);
+    let mixes: Vec<(&str, Vec<KernelChoice>)> = vec![
+        ("scatter", vec![KernelChoice::Scatter; n]),
+        ("gather", vec![KernelChoice::Gather; n]),
+        ("default-plan", default_mix),
+    ];
+    for threads in [1usize, 4] {
+        let auto = execute_f32(&g, &weights, &input, threads).unwrap();
+        assert_eq!(auto.data(), want.data(), "{} auto t={threads}", net.name);
+        for (label, mix) in &mixes {
+            let got = execute_f32_kernels(&g, &weights, &input, threads, mix).unwrap();
+            assert_eq!(got.data(), want.data(), "{} {label} t={threads}", net.name);
+        }
+    }
+
+    // the serving front door routes skip topologies through the
+    // same executor
+    let served = forward_uniform(net, &weights, input.data());
+    assert_eq!(&served[..], want.data(), "{} forward_uniform", net.name);
+}
+
+/// The Q8.8 mirror of [`diff_f32`] (auto + forced kernels, both
+/// thread counts).
+fn diff_q88(net: &Network) {
+    let weights = synth_weights_q88(net);
+    let input_q = LayerData::synth(&net.layers[0], 99).quantize();
+    let input = input_q.uniform_input();
+    let want = naive_forward_q88(net, &weights, &input);
+    let g = passes::lower(&net.graph()).unwrap();
+
+    let n = net.layers.len();
+    for threads in [1usize, 4] {
+        let auto = execute_q88(&g, &weights, &input, threads).unwrap();
+        assert_eq!(auto.data(), want.data(), "{} q88 auto t={threads}", net.name);
+        for (label, mix) in [
+            ("scatter", vec![KernelChoice::Scatter; n]),
+            ("gather", vec![KernelChoice::Gather; n]),
+        ] {
+            let got = execute_q88_kernels(&g, &weights, &input, threads, &mix).unwrap();
+            assert_eq!(got.data(), want.data(), "{} q88 {label} t={threads}", net.name);
+        }
+    }
+}
+
+/// The tuned-plan kernel mix for one network (DSE winner at batch 1)
+/// still reproduces the longhand bits.
+fn diff_tuned(net: &Network) {
+    let weights = synth_weights_f32(net);
+    let input = LayerData::synth(&net.layers[0], 99).uniform_input();
+    let want = naive_forward_f32(net, &weights, &input);
+    let g = passes::lower(&net.graph()).unwrap();
+    let tuned = tune_network(net, &TuneOptions::default()).unwrap();
+    let mix = plan_kernels(&tuned.best().cfg, net);
+    let got = execute_f32_kernels(&g, &weights, &input, 2, &mix).unwrap();
+    assert_eq!(got.data(), want.data(), "{} tuned", net.name);
+}
+
+#[test]
+fn unet3d_tiny_matches_naive_composition_f32() {
+    diff_f32(&zoo::unet3d_tiny());
+}
+
+#[test]
+fn unetr_dec_tiny_matches_naive_composition_f32() {
+    diff_f32(&zoo::unetr_dec_tiny());
+}
+
+#[test]
+fn unet3d_tiny_matches_naive_composition_q88() {
+    diff_q88(&zoo::unet3d_tiny());
+}
+
+#[test]
+fn unetr_dec_tiny_matches_naive_composition_q88() {
+    diff_q88(&zoo::unetr_dec_tiny());
+}
+
+#[test]
+fn tiny_entries_match_under_tuned_plans() {
+    diff_tuned(&zoo::unet3d_tiny());
+    diff_tuned(&zoo::unetr_dec_tiny());
+}
+
+#[test]
+#[ignore = "full-size entries; run in the CI release battery"]
+fn unet3d_matches_naive_composition_f32() {
+    diff_f32(&zoo::unet3d());
+}
+
+#[test]
+#[ignore = "full-size entries; run in the CI release battery"]
+fn unetr_dec_matches_naive_composition_f32() {
+    diff_f32(&zoo::unetr_dec());
+}
+
+#[test]
+#[ignore = "full-size entries; run in the CI release battery"]
+fn unet3d_matches_naive_composition_q88() {
+    diff_q88(&zoo::unet3d());
+}
+
+#[test]
+#[ignore = "full-size entries; run in the CI release battery"]
+fn unetr_dec_matches_naive_composition_q88() {
+    diff_q88(&zoo::unetr_dec());
+}
+
+#[test]
+#[ignore = "full-size entries; run in the CI release battery"]
+fn full_entries_match_under_tuned_plans() {
+    diff_tuned(&zoo::unet3d());
+    diff_tuned(&zoo::unetr_dec());
+}

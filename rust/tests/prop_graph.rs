@@ -165,6 +165,7 @@ fn prop_oom_and_iom_forms_compile_identically() {
         let net = udcnn::dcnn::Network {
             name: "chain",
             dims,
+            topology: udcnn::dcnn::Topology::Chain,
             layers: layers.clone(),
         };
         let iom = compile(&cfg, &passes::lower(&NetworkGraph::from_network(&net))?)?;
@@ -182,6 +183,193 @@ fn prop_oom_and_iom_forms_compile_identically() {
         }
         Ok(())
     });
+}
+
+/// Shape inference on random skip DAGs reproduces the generator's
+/// constructively computed shapes at every node.
+#[test]
+fn prop_dag_shape_inference_matches_hand_computed() {
+    check(Config { cases: 60, ..Default::default() }, |g| {
+        let dims = if g.rng.coin(0.5) { Dims::D2 } else { Dims::D3 };
+        let (mut graph, want) = g.dag(dims);
+        passes::infer_shapes(&mut graph)?;
+        for (n, w) in graph.nodes.iter().zip(&want) {
+            let got = n
+                .out_shape
+                .ok_or_else(|| format!("node '{}' has no inferred shape", n.name))?;
+            if got != *w {
+                return Err(format!(
+                    "node '{}' ({}) inferred {got}, constructed {w}",
+                    n.name,
+                    n.op.mnemonic()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The generator (and therefore graph construction plus every pass
+/// over it) is deterministic: the same seed and size reproduce the
+/// same topology, node for node and edge for edge, through lowering.
+#[test]
+fn prop_dag_topo_order_deterministic() {
+    for seed in [1u64, 0x5EED, 0xDEAD_BEEF] {
+        for size in [1usize, 8, 16] {
+            let (a, _) = Gen::new(seed, size).dag(Dims::D3);
+            let (b, _) = Gen::new(seed, size).dag(Dims::D3);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.nodes.iter().zip(&b.nodes) {
+                assert_eq!(x.name, y.name);
+                assert_eq!(x.inputs, y.inputs);
+                assert_eq!(x.op.mnemonic(), y.op.mnemonic());
+            }
+            let la = passes::lower(&a).unwrap();
+            let lb = passes::lower(&b).unwrap();
+            assert_eq!(la.edges(), lb.edges());
+        }
+    }
+}
+
+/// Lowering a native-IOM DAG only fuses activations: the weighted
+/// (deconv) nodes and the merge/resample nodes all survive with their
+/// names, the node count drops by exactly the number of fused
+/// activations, and the edge count never grows.
+#[test]
+fn prop_dag_lowering_preserves_nodes_and_edges() {
+    check(Config { cases: 60, ..Default::default() }, |g| {
+        let dims = if g.rng.coin(0.5) { Dims::D2 } else { Dims::D3 };
+        let (graph, _) = g.dag(dims);
+        let lowered = passes::lower(&graph)?;
+        let acts = graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, udcnn::graph::OpKind::Activation { .. }))
+            .count();
+        let fused: usize = lowered.nodes.iter().map(|n| n.fused.len()).sum();
+        if fused != acts {
+            return Err(format!("{acts} activations, {fused} fused"));
+        }
+        if lowered.len() != graph.len() - acts {
+            return Err(format!(
+                "lowered {} nodes from {} with {acts} activations",
+                lowered.len(),
+                graph.len()
+            ));
+        }
+        let names = |g: &NetworkGraph, pred: fn(&udcnn::graph::NodeSpec) -> bool| {
+            g.nodes
+                .iter()
+                .filter(|n| pred(n))
+                .map(|n| n.name.clone())
+                .collect::<Vec<_>>()
+        };
+        let weighted =
+            |n: &udcnn::graph::NodeSpec| matches!(n.op, udcnn::graph::OpKind::Deconv { .. });
+        let moved = |n: &udcnn::graph::NodeSpec| n.op.is_move();
+        if names(&graph, weighted) != names(&lowered, weighted) {
+            return Err("weighted nodes changed across lowering".into());
+        }
+        if names(&graph, moved) != names(&lowered, moved) {
+            return Err("merge/resample nodes changed across lowering".into());
+        }
+        if lowered.edges().len() > graph.edges().len() {
+            return Err("lowering grew the edge set".into());
+        }
+        Ok(())
+    });
+}
+
+/// The allocator regression the DAG rewrite exists to prevent: on
+/// random skip topologies (under randomly shrunk on-chip buffer caps,
+/// so spills and reuse both fire) no two on-chip tensors whose live
+/// ranges overlap may share bytes — a skip tensor stays live across
+/// the whole decoder and its buffer must not be handed to anyone else
+/// — and the peak footprint obeys the arena cap.
+#[test]
+fn prop_dag_reuse_never_aliases_a_live_tensor() {
+    check(Config { cases: 60, ..Default::default() }, |g| {
+        let dims = if g.rng.coin(0.5) { Dims::D2 } else { Dims::D3 };
+        let (graph, _) = g.dag(dims);
+        let mut cfg = match dims {
+            Dims::D2 => AccelConfig::paper_2d(),
+            Dims::D3 => AccelConfig::paper_3d(),
+        };
+        // from "everything spills" to "everything fits"
+        cfg.input_buf_kib = g.int(1, 600);
+        cfg.output_buf_kib = g.int(1, 600);
+        let plan = compile(&cfg, &passes::lower(&graph)?)?;
+        let cap = 1024 * (cfg.input_buf_kib + cfg.output_buf_kib) as u64;
+        if plan.peak_onchip_bytes > cap {
+            return Err(format!(
+                "peak {} exceeds arena cap {cap}",
+                plan.peak_onchip_bytes
+            ));
+        }
+        for (i, a) in plan.onchip.iter().enumerate() {
+            for b in plan.onchip.iter().skip(i + 1) {
+                let live_overlap = a.node <= b.last_use && b.node <= a.last_use;
+                let byte_overlap = a.offset < b.offset + b.bytes && b.offset < a.offset + a.bytes;
+                if live_overlap && byte_overlap {
+                    return Err(format!(
+                        "'{}' [{}, {}] at {}+{} aliases '{}' [{}, {}] at {}+{}",
+                        a.name,
+                        a.node,
+                        a.last_use,
+                        a.offset,
+                        a.bytes,
+                        b.name,
+                        b.node,
+                        b.last_use,
+                        b.offset,
+                        b.bytes
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The zoo skip topologies under the paper configuration: the reuse
+/// pass keeps the peak on-chip footprint strictly below the sum of
+/// every intermediate tensor's bytes (i.e. allocation is genuinely
+/// time-multiplexed, not "hold everything"), while never aliasing a
+/// live skip tensor (checked pairwise as above).
+#[test]
+fn zoo_skip_topologies_allocate_below_sum_of_tensors() {
+    for net in [zoo::unet3d(), zoo::unetr_dec()] {
+        let cfg = AccelConfig::paper_for(net.dims);
+        let lowered = passes::lower(&net.graph()).unwrap();
+        let plan = compile(&cfg, &lowered).unwrap();
+        let eb = cfg.elem_bytes() as u64;
+        let all_tensors: u64 = lowered
+            .nodes
+            .iter()
+            .map(|n| cfg.batch as u64 * n.out_shape.unwrap().elems() as u64 * eb)
+            .sum();
+        assert!(plan.peak_onchip_bytes > 0, "{}: reuse never fired", net.name);
+        assert!(
+            plan.peak_onchip_bytes < all_tensors,
+            "{}: peak {} !< sum of all tensors {}",
+            net.name,
+            plan.peak_onchip_bytes,
+            all_tensors
+        );
+        for (i, a) in plan.onchip.iter().enumerate() {
+            for b in plan.onchip.iter().skip(i + 1) {
+                let live = a.node <= b.last_use && b.node <= a.last_use;
+                let bytes = a.offset < b.offset + b.bytes && b.offset < a.offset + a.bytes;
+                assert!(
+                    !(live && bytes),
+                    "{}: '{}' aliases '{}'",
+                    net.name,
+                    a.name,
+                    b.name
+                );
+            }
+        }
+    }
 }
 
 /// Acceptance: pipelined end-to-end TOPS for the four zoo networks is

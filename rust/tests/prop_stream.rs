@@ -54,6 +54,7 @@ fn gen_chain(g: &mut Gen) -> (Network, usize) {
     let net = Network {
         name: "prop-stream",
         dims: Dims::D3,
+        topology: udcnn::dcnn::Topology::Chain,
         layers,
     };
     (net, chunk)
