@@ -3,17 +3,22 @@
 //! instances and track throughput scaling, tail latency, shed rate and
 //! plan-cache effectiveness.
 //!
+//! Alongside the fixed-size scaling sweep it runs the autoscaling
+//! scenario battery's headline cases (`steady`, `flash-crowd`) so the
+//! flash-crowd-vs-fixed-fleet completion ratio and the cost-normalized
+//! steady-state figures land in the committed record too.
+//!
 //! Alongside the text report it emits `reports/BENCH_serving.json`
-//! (machine-readable per-fleet-size rows) so the serving-perf
-//! trajectory is tracked across PRs, like `BENCH_e2e.json` does for
-//! single-network latency.
+//! (machine-readable per-fleet-size rows plus per-scenario rows) so
+//! the serving-perf trajectory is tracked across PRs, like
+//! `BENCH_e2e.json` does for single-network latency.
 
 use udcnn::benchkit::{header, write_report_file, Bench};
 use udcnn::coordinator::BatchPolicy;
 use udcnn::dcnn::zoo;
 use udcnn::report::json::{array, JsonObj};
 use udcnn::report::Table;
-use udcnn::serve::{poisson_arrivals, Fleet, FleetOptions};
+use udcnn::serve::{poisson_arrivals, run_scenario, Fleet, FleetOptions, ScenarioOverrides};
 
 const REPORT_PATH: &str = "reports/BENCH_serving.json";
 const SEED: u64 = 0xF1EE7;
@@ -107,11 +112,57 @@ fn main() {
     }
     t.print();
 
+    // Autoscaling scenario rows: the adversarial battery's headline
+    // numbers (flash-crowd completions vs the fixed-size baseline,
+    // steady-state cost-normalized throughput), all on simulated time.
+    let mut st = Table::new(
+        "autoscale scenarios (dcgan + 3d-gan)",
+        &["scenario", "offered", "completed", "shed", "boards", "p99 ms", "req/s/DSP", "mJ/req"],
+    );
+    let mut srows = Vec::new();
+    let mut crowd_line = None;
+    for name in ["steady", "flash-crowd"] {
+        let run = run_scenario(name, SEED, &nets, &ScenarioOverrides::default())
+            .expect("scenario runs");
+        let r = &run.report;
+        let (tpd, mj) = r
+            .cost
+            .as_ref()
+            .map_or((0.0, 0.0), |c| (c.throughput_per_dsp, c.mj_per_request));
+        st.row(&[
+            name.to_string(),
+            r.offered.to_string(),
+            r.served.to_string(),
+            r.shed.to_string(),
+            r.instances.to_string(),
+            format!("{:.3}", r.latency.p99_ms),
+            format!("{tpd:.4}"),
+            format!("{mj:.4}"),
+        ]);
+        if let Some(b) = &run.fixed_baseline {
+            let ratio = if b.served > 0 {
+                r.served as f64 / b.served as f64
+            } else {
+                0.0
+            };
+            crowd_line = Some(format!(
+                "flash-crowd: {} completed vs {} on the fixed-size fleet ({ratio:.2}x)",
+                r.served, b.served
+            ));
+        }
+        srows.push(run.to_json());
+    }
+    st.print();
+    if let Some(line) = crowd_line {
+        println!("{line}");
+    }
+
     let doc = JsonObj::new()
         .str("bench", "serving")
         .str("workload", &format!("poisson seed={SEED} rps={rps:.1} n={REQUESTS}"))
         .num("offered_rps", rps)
         .raw("fleets", &array(&rows))
+        .raw("scenarios", &array(&srows))
         .render();
     match write_report_file(REPORT_PATH, &doc) {
         Ok(()) => println!("wrote {REPORT_PATH}"),

@@ -373,6 +373,197 @@ pub fn tune_network(net: &Network, opts: &TuneOptions) -> Result<TuneResult, Dse
     })
 }
 
+/// Result of tuning a whole model mix at once ([`tune_fleet`]): a
+/// per-model config assignment plus the heterogeneous-vs-uniform
+/// decision record, scored in cost-normalized throughput (requests per
+/// second per DSP slice, with every model given one board of its
+/// assigned configuration).
+#[derive(Clone, Debug)]
+pub struct FleetTuneResult {
+    /// The chosen configuration per model. Heterogeneous when the
+    /// per-model winners beat the best uniform config cost-normalized;
+    /// otherwise every entry carries the same uniform configuration.
+    pub assignments: std::collections::BTreeMap<String, TunedConfig>,
+    /// Whether the assignment is per-model (true) or the single best
+    /// uniform config (false).
+    pub heterogeneous: bool,
+    /// Cost-normalized throughput of the per-model-winner assignment.
+    pub hetero_throughput_per_dsp: f64,
+    /// Cost-normalized throughput of the best uniform candidate.
+    pub best_uniform_throughput_per_dsp: f64,
+    /// Fingerprint of the best uniform candidate, when one exists that
+    /// compiles for every model in the mix.
+    pub uniform_fingerprint: Option<String>,
+}
+
+impl FleetTuneResult {
+    /// Cost-normalized throughput of the assignment actually chosen.
+    pub fn chosen_throughput_per_dsp(&self) -> f64 {
+        if self.heterogeneous {
+            self.hetero_throughput_per_dsp
+        } else {
+            self.best_uniform_throughput_per_dsp
+        }
+    }
+
+    /// Machine-readable record (embedded by scenario reports).
+    pub fn to_json(&self) -> String {
+        let assignments: Vec<String> = self
+            .assignments
+            .iter()
+            .map(|(m, t)| {
+                JsonObj::new()
+                    .str("model", m)
+                    .str("fingerprint", &t.cfg.fingerprint())
+                    .num("time_ms", t.time_s * 1e3)
+                    .int("dsp", t.resources.dsp as u64)
+                    .render()
+            })
+            .collect();
+        let mut obj = JsonObj::new()
+            .raw("heterogeneous", if self.heterogeneous { "true" } else { "false" })
+            .num("hetero_throughput_per_dsp", self.hetero_throughput_per_dsp)
+            .num("best_uniform_throughput_per_dsp", self.best_uniform_throughput_per_dsp)
+            .raw("assignments", &array(&assignments));
+        if let Some(fp) = &self.uniform_fingerprint {
+            obj = obj.str("uniform_fingerprint", fp);
+        }
+        obj.render()
+    }
+}
+
+/// Tune a whole model mix: run the per-network tuner on every model,
+/// then decide whether the *heterogeneous* assignment (each model on
+/// its own winner) actually beats the best *uniform* configuration
+/// once throughput is cost-normalized by DSP footprint — the
+/// fleet-provisioning question behind `ConfigPolicy::TunedFleet`.
+///
+/// Scoring gives each model one board of its assigned config, so the
+/// heterogeneous score is `Σ_i rate_i / Σ_i dsp_i` and a uniform
+/// config `c` scores `Σ_i rate_i(c) / (M · dsp(c))`. The uniform
+/// candidate set is every distinct per-model winner, the paper points
+/// of the dimensionalities present, and the platform default; a
+/// candidate must compile for *every* model to qualify. The chosen
+/// assignment therefore never scores below the best uniform candidate
+/// (ties go to heterogeneous), and a single-model mix returns exactly
+/// the per-network [`tune_network`] winner.
+pub fn tune_fleet(nets: &[Network], opts: &TuneOptions) -> Result<FleetTuneResult, DseError> {
+    use std::collections::BTreeMap;
+    if nets.is_empty() {
+        return Err(DseError::NoCandidateFits {
+            network: "(empty fleet)".to_string(),
+        });
+    }
+    let batch = opts.batch.max(1) as f64;
+    let mut winners: BTreeMap<String, TunedConfig> = BTreeMap::new();
+    for net in nets {
+        let r = tune_network(net, opts)?;
+        winners.insert(net.name.to_string(), r.best().clone());
+    }
+    let tpd = |points: &BTreeMap<String, TunedConfig>| -> f64 {
+        let rate: f64 = points.values().map(|t| batch / t.time_s).sum();
+        let dsp: f64 = points.values().map(|t| t.resources.dsp as f64).sum();
+        rate / dsp
+    };
+    let hetero_tpd = tpd(&winners);
+
+    // single-model degeneracy: the per-network winner IS the fleet
+    // answer (the cycle-optimal point; no mix to trade against)
+    if nets.len() == 1 {
+        let fp = winners.values().next().map(|t| t.cfg.fingerprint());
+        return Ok(FleetTuneResult {
+            assignments: winners,
+            heterogeneous: false,
+            hetero_throughput_per_dsp: hetero_tpd,
+            best_uniform_throughput_per_dsp: hetero_tpd,
+            uniform_fingerprint: fp,
+        });
+    }
+
+    // uniform candidates, canonical order: distinct winner configs
+    // (model-name order), then the paper points of the present
+    // dimensionalities, then the platform default — first-found wins
+    // ties so the search is deterministic
+    let mut candidates: Vec<AccelConfig> = Vec::new();
+    let mut push = |cfg: AccelConfig, seen: &mut Vec<String>| {
+        let fp = cfg.fingerprint();
+        if !seen.contains(&fp) {
+            seen.push(fp);
+            candidates.push(cfg);
+        }
+    };
+    let mut seen: Vec<String> = Vec::new();
+    for t in winners.values() {
+        push(t.cfg.clone(), &mut seen);
+    }
+    for dims in [Dims::D2, Dims::D3] {
+        if nets.iter().any(|n| n.dims == dims) {
+            let cfg = AccelConfig {
+                batch: opts.batch.max(1),
+                ..AccelConfig::paper_for(dims)
+            };
+            push(cfg, &mut seen);
+        }
+    }
+    push(
+        AccelConfig {
+            batch: opts.batch.max(1),
+            ..AccelConfig::default()
+        },
+        &mut seen,
+    );
+
+    let mut best_uniform: Option<(f64, AccelConfig, BTreeMap<String, TunedConfig>)> = None;
+    for cfg in candidates {
+        let mut points = BTreeMap::new();
+        let mut feasible = true;
+        for net in nets {
+            match evaluate_exact(&cfg, net) {
+                Some(p) => {
+                    points.insert(net.name.to_string(), p);
+                }
+                None => {
+                    feasible = false;
+                    break;
+                }
+            }
+        }
+        if !feasible {
+            continue;
+        }
+        let score = tpd(&points);
+        if best_uniform.as_ref().is_none_or(|(s, _, _)| score > *s) {
+            best_uniform = Some((score, cfg, points));
+        }
+    }
+
+    match best_uniform {
+        Some((uniform_tpd, cfg, points)) if uniform_tpd > hetero_tpd => Ok(FleetTuneResult {
+            assignments: points,
+            heterogeneous: false,
+            hetero_throughput_per_dsp: hetero_tpd,
+            best_uniform_throughput_per_dsp: uniform_tpd,
+            uniform_fingerprint: Some(cfg.fingerprint()),
+        }),
+        Some((uniform_tpd, cfg, _)) => Ok(FleetTuneResult {
+            assignments: winners,
+            heterogeneous: true,
+            hetero_throughput_per_dsp: hetero_tpd,
+            best_uniform_throughput_per_dsp: uniform_tpd,
+            uniform_fingerprint: Some(cfg.fingerprint()),
+        }),
+        // no uniform candidate compiles for every model: the mix is
+        // heterogeneous by necessity
+        None => Ok(FleetTuneResult {
+            assignments: winners,
+            heterogeneous: true,
+            hetero_throughput_per_dsp: hetero_tpd,
+            best_uniform_throughput_per_dsp: 0.0,
+            uniform_fingerprint: None,
+        }),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -449,6 +640,47 @@ mod tests {
         assert!(js.contains("\"roofline_cycles\""));
         assert!(js.contains("\"kernels\""));
         assert!(js.contains("\"reason\""));
+    }
+
+    #[test]
+    fn fleet_tuning_covers_the_mix_and_never_loses_to_uniform() {
+        let nets = vec![zoo::tiny_2d(), zoo::tiny_3d()];
+        let r = tune_fleet(&nets, &TuneOptions::default()).unwrap();
+        assert_eq!(r.assignments.len(), 2);
+        assert!(r.assignments.contains_key("tiny-2d"));
+        assert!(r.assignments.contains_key("tiny-3d"));
+        assert!(r.chosen_throughput_per_dsp() > 0.0);
+        assert!(
+            r.chosen_throughput_per_dsp() >= r.best_uniform_throughput_per_dsp,
+            "chosen {} < uniform {}",
+            r.chosen_throughput_per_dsp(),
+            r.best_uniform_throughput_per_dsp
+        );
+        let js = r.to_json();
+        assert!(js.contains("\"heterogeneous\""));
+        assert!(js.contains("\"assignments\""));
+        // deterministic: re-running yields the identical record
+        let again = tune_fleet(&nets, &TuneOptions::default()).unwrap();
+        assert_eq!(js, again.to_json());
+    }
+
+    #[test]
+    fn single_model_fleet_degenerates_to_the_per_network_winner() {
+        let net = zoo::tiny_3d();
+        let opts = TuneOptions::default();
+        let fleet = tune_fleet(std::slice::from_ref(&net), &opts).unwrap();
+        let solo = tune_network(&net, &opts).unwrap();
+        assert_eq!(fleet.assignments.len(), 1);
+        assert_eq!(
+            fleet.assignments["tiny-3d"].cfg.fingerprint(),
+            solo.best().cfg.fingerprint()
+        );
+        assert!(!fleet.heterogeneous);
+    }
+
+    #[test]
+    fn empty_fleet_is_an_error() {
+        assert!(tune_fleet(&[], &TuneOptions::default()).is_err());
     }
 
     #[test]

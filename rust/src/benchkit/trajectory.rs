@@ -12,16 +12,20 @@
 //! replaces) the current record.
 //!
 //! Whole-volume throughput is batch requests per simulated second;
-//! streaming throughput is input frames per simulated second. The two
-//! are never compared against each other — the gate compares each
-//! point id only with the *same* id in the baseline record.
+//! streaming throughput is input frames per simulated second. Fleet
+//! scenario points (`fleet/<scenario>/<metric>`) run a named serving
+//! scenario on the autoscaling fleet ([`crate::serve::scenario`]) and
+//! track completed-request throughput, inverse p99 and DSP-normalized
+//! throughput. None of the families are ever compared against each
+//! other — the gate compares each point id only with the *same* id in
+//! the baseline record.
 
 use crate::accel::AccelConfig;
 use crate::dcnn::{synth_frames, synth_uniform_weights, zoo, Dims};
 use crate::graph::{compile_network, simulate_plan};
 use crate::report::json::{array, JsonObj};
 use crate::report::parse::{parse, JsonValue};
-use crate::serve::ConfigPolicy;
+use crate::serve::{run_scenario, ConfigPolicy, ScenarioOverrides};
 use crate::stream::stream_forward;
 
 /// Allowed fractional throughput regression per point (5 %).
@@ -33,6 +37,10 @@ pub const TRAJECTORY_FILE: &str = "BENCH_trajectory.json";
 /// Batch size every whole-volume point runs (and the batch the tuned
 /// policy tunes at).
 pub const WHOLE_BATCH: usize = 8;
+
+/// Seed every fleet scenario point runs at (public so external
+/// harnesses can reproduce the exact committed measurement).
+pub const FLEET_SEED: u64 = 0xF1EE7;
 
 /// Depth a 3D network is re-anchored to for its streaming point.
 const STREAM_FRAMES_3D: usize = 8;
@@ -59,33 +67,79 @@ pub enum PointMode {
     Stream,
 }
 
+/// The scalar a fleet scenario point records as its "throughput".
+/// Every variant is oriented so that larger is better — the direction
+/// the gate assumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetMetric {
+    /// Completed requests per simulated second of makespan.
+    CompletedPerS,
+    /// Inverse p99 latency (1/s): rises when tail latency improves.
+    InvP99,
+    /// Cost-normalized throughput: completed requests per second per
+    /// DSP slice of the mean active fleet.
+    ThroughputPerDsp,
+}
+
+impl FleetMetric {
+    /// Stable id fragment.
+    fn label(self) -> &'static str {
+        match self {
+            FleetMetric::CompletedPerS => "completed-per-s",
+            FleetMetric::InvP99 => "inv-p99",
+            FleetMetric::ThroughputPerDsp => "throughput-per-dsp",
+        }
+    }
+}
+
 /// One fixed operating point of the trajectory.
 #[derive(Clone, Debug)]
-pub struct OperatingPoint {
-    /// Zoo network name.
-    pub network: &'static str,
-    /// Configuration policy.
-    pub policy: PointPolicy,
-    /// Execution mode.
-    pub mode: PointMode,
+pub enum OperatingPoint {
+    /// A single-network point: one compiled plan (whole-volume) or a
+    /// streaming session, under a configuration policy.
+    Net {
+        /// Zoo network name.
+        network: &'static str,
+        /// Configuration policy.
+        policy: PointPolicy,
+        /// Execution mode.
+        mode: PointMode,
+    },
+    /// A fleet scenario point: one named serving scenario
+    /// ([`crate::serve::scenario`]) run on the autoscaling fleet over
+    /// the canonical 2D+3D mix (`dcgan` + `3d-gan`) at [`FLEET_SEED`].
+    /// The cycles column records completed requests — a fleet
+    /// aggregates many plans, so no single cycle count exists.
+    Fleet {
+        /// Scenario name ([`crate::serve::SCENARIO_NAMES`]).
+        scenario: &'static str,
+        /// Which scalar of the scenario report the point tracks.
+        metric: FleetMetric,
+    },
 }
 
 impl OperatingPoint {
-    /// Stable identifier, e.g. `"dcgan/tuned/stream"` — the key the
-    /// gate joins baseline and current records on.
+    /// Stable identifier, e.g. `"dcgan/tuned/stream"` or
+    /// `"fleet/flash-crowd/inv-p99"` — the key the gate joins baseline
+    /// and current records on.
     pub fn id(&self) -> String {
-        format!(
-            "{}/{}/{}",
-            self.network,
-            match self.policy {
-                PointPolicy::Paper => "paper",
-                PointPolicy::Tuned => "tuned",
-            },
-            match self.mode {
-                PointMode::Whole => "whole",
-                PointMode::Stream => "stream",
+        match self {
+            OperatingPoint::Net { network, policy, mode } => format!(
+                "{}/{}/{}",
+                network,
+                match policy {
+                    PointPolicy::Paper => "paper",
+                    PointPolicy::Tuned => "tuned",
+                },
+                match mode {
+                    PointMode::Whole => "whole",
+                    PointMode::Stream => "stream",
+                }
+            ),
+            OperatingPoint::Fleet { scenario, metric } => {
+                format!("fleet/{}/{}", scenario, metric.label())
             }
-        )
+        }
     }
 }
 
@@ -93,14 +147,16 @@ impl OperatingPoint {
 /// {whole, stream}, plus the skip-DAG entries (`unet3d`,
 /// `unetr-dec`) × {paper, tuned} whole-volume only — temporal tiling
 /// is undefined on non-linear graphs (`stream_shapes` rejects them
-/// with `StreamShapeError::NonLinear`). The set only ever grows —
-/// removing or renaming a point would silently drop it from the gate.
+/// with `StreamShapeError::NonLinear`) — plus four fleet scenario
+/// points (steady throughput and its DSP-normalized form, flash-crowd
+/// completions and tail latency). The set only ever grows — removing
+/// or renaming a point would silently drop it from the gate.
 pub fn fixed_point_set() -> Vec<OperatingPoint> {
     let mut pts = Vec::new();
     for net in zoo::all_benchmarks() {
         for policy in [PointPolicy::Paper, PointPolicy::Tuned] {
             for mode in [PointMode::Whole, PointMode::Stream] {
-                pts.push(OperatingPoint {
+                pts.push(OperatingPoint::Net {
                     network: net.name,
                     policy,
                     mode,
@@ -110,12 +166,20 @@ pub fn fixed_point_set() -> Vec<OperatingPoint> {
     }
     for net in [zoo::unet3d(), zoo::unetr_dec()] {
         for policy in [PointPolicy::Paper, PointPolicy::Tuned] {
-            pts.push(OperatingPoint {
+            pts.push(OperatingPoint::Net {
                 network: net.name,
                 policy,
                 mode: PointMode::Whole,
             });
         }
+    }
+    for (scenario, metric) in [
+        ("steady", FleetMetric::CompletedPerS),
+        ("steady", FleetMetric::ThroughputPerDsp),
+        ("flash-crowd", FleetMetric::CompletedPerS),
+        ("flash-crowd", FleetMetric::InvP99),
+    ] {
+        pts.push(OperatingPoint::Fleet { scenario, metric });
     }
     pts
 }
@@ -133,14 +197,28 @@ pub struct PointResult {
 }
 
 /// Measure one operating point. Deterministic: the numbers come from
-/// the cycle simulators, never from host wall time.
+/// the cycle simulators and the simulated-time fleet, never from host
+/// wall time.
 pub fn measure(pt: &OperatingPoint) -> Result<PointResult, String> {
-    let base = zoo::by_name(pt.network)?;
-    let mut cfg = match pt.policy {
+    match *pt {
+        OperatingPoint::Net { network, policy, mode } => measure_net(pt, network, policy, mode),
+        OperatingPoint::Fleet { scenario, metric } => measure_fleet(pt, scenario, metric),
+    }
+}
+
+/// [`measure`] for a [`OperatingPoint::Net`] point.
+fn measure_net(
+    pt: &OperatingPoint,
+    network: &str,
+    policy: PointPolicy,
+    mode: PointMode,
+) -> Result<PointResult, String> {
+    let base = zoo::by_name(network)?;
+    let mut cfg = match policy {
         PointPolicy::Paper => AccelConfig::paper_for(base.dims),
         PointPolicy::Tuned => ConfigPolicy::Tuned.resolve(&base, WHOLE_BATCH)?,
     };
-    match pt.mode {
+    match mode {
         PointMode::Whole => {
             cfg.batch = WHOLE_BATCH;
             cfg.validate()?;
@@ -173,6 +251,35 @@ pub fn measure(pt: &OperatingPoint) -> Result<PointResult, String> {
             })
         }
     }
+}
+
+/// [`measure`] for a [`OperatingPoint::Fleet`] point: run the named
+/// scenario over the canonical `dcgan` + `3d-gan` mix and extract the
+/// tracked metric from the fleet report.
+fn measure_fleet(
+    pt: &OperatingPoint,
+    scenario: &str,
+    metric: FleetMetric,
+) -> Result<PointResult, String> {
+    let nets = [zoo::dcgan(), zoo::gan3d()];
+    let run = run_scenario(scenario, FLEET_SEED, &nets, &ScenarioOverrides::default())?;
+    let r = &run.report;
+    let throughput = match metric {
+        FleetMetric::CompletedPerS => r.throughput_rps,
+        FleetMetric::InvP99 => {
+            if r.latency.p99_ms > 0.0 {
+                1e3 / r.latency.p99_ms
+            } else {
+                0.0
+            }
+        }
+        FleetMetric::ThroughputPerDsp => r.cost.as_ref().map_or(0.0, |c| c.throughput_per_dsp),
+    };
+    Ok(PointResult {
+        point: pt.clone(),
+        total_cycles: r.served,
+        throughput,
+    })
 }
 
 /// Measure the whole fixed point set, in set order.
@@ -232,7 +339,8 @@ pub fn render_file(records: &[TrajectoryRecord]) -> String {
         .str("schema", "udcnn-trajectory-v1")
         .str(
             "unit",
-            "simulated cycles; throughput is batch req/s (whole) or frames/s (stream)",
+            "simulated cycles; throughput is batch req/s (whole) or frames/s (stream); \
+             fleet points carry completed requests and the scenario metric",
         )
         .raw("records", &array(&recs))
         .render();
@@ -321,8 +429,9 @@ mod tests {
     #[test]
     fn point_ids_are_unique_and_cover_the_grid() {
         let pts = fixed_point_set();
-        // chain grid + 2 skip-DAG entries × 2 policies, whole-only
-        assert_eq!(pts.len(), zoo::all_benchmarks().len() * 4 + 4);
+        // chain grid + 2 skip-DAG entries × 2 policies (whole-only)
+        // + 4 fleet scenario points
+        assert_eq!(pts.len(), zoo::all_benchmarks().len() * 4 + 4 + 4);
         let mut ids: Vec<String> = pts.iter().map(OperatingPoint::id).collect();
         ids.sort();
         ids.dedup();
@@ -331,6 +440,8 @@ mod tests {
         assert!(ids.contains(&"3d-gan/tuned/stream".to_string()));
         assert!(ids.contains(&"unet3d/paper/whole".to_string()));
         assert!(ids.contains(&"unetr-dec/tuned/whole".to_string()));
+        assert!(ids.contains(&"fleet/steady/throughput-per-dsp".to_string()));
+        assert!(ids.contains(&"fleet/flash-crowd/inv-p99".to_string()));
         // no skip-DAG entry may ever grow a stream point silently
         assert!(!ids.iter().any(|i| i.starts_with("unet") && i.ends_with("/stream")));
     }
@@ -377,7 +488,7 @@ mod tests {
             label: "base".into(),
             points: vec![("p/paper/whole".into(), 100, 100.0)],
         };
-        let pt = OperatingPoint {
+        let pt = OperatingPoint::Net {
             network: "p",
             policy: PointPolicy::Paper,
             mode: PointMode::Whole,
@@ -400,7 +511,7 @@ mod tests {
 
     #[test]
     fn measure_whole_point_is_deterministic() {
-        let pt = OperatingPoint {
+        let pt = OperatingPoint::Net {
             network: "dcgan",
             policy: PointPolicy::Paper,
             mode: PointMode::Whole,
@@ -409,6 +520,20 @@ mod tests {
         let b = measure(&pt).unwrap();
         assert!(a.total_cycles > 0);
         assert!(a.throughput > 0.0);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.throughput, b.throughput);
+    }
+
+    #[test]
+    fn measure_fleet_point_is_deterministic() {
+        let pt = OperatingPoint::Fleet {
+            scenario: "steady",
+            metric: FleetMetric::CompletedPerS,
+        };
+        let a = measure(&pt).unwrap();
+        let b = measure(&pt).unwrap();
+        assert!(a.total_cycles > 0, "steady scenario must complete requests");
+        assert!(a.throughput > 0.0 && a.throughput.is_finite());
         assert_eq!(a.total_cycles, b.total_cycles);
         assert_eq!(a.throughput, b.throughput);
     }

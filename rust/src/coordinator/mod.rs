@@ -22,7 +22,9 @@
 //! [`router::ShardRouter`]'s queue-depth tracking), and capacity
 //! questions are delegated to the deterministic simulated-time fleet
 //! ([`service::serve_fleet`] → [`crate::serve::Fleet`]), which shares
-//! this module's [`BatchPolicy`] contract.
+//! this module's [`BatchPolicy`] contract. The autoscaling
+//! multi-tenant scenarios ride the same delegation
+//! ([`service::serve_scenario`] → [`crate::serve::AutoFleet`]).
 
 pub mod batcher;
 pub mod router;
@@ -31,6 +33,6 @@ pub mod service;
 pub use batcher::{Batcher, BatchPolicy};
 pub use router::{QueueDepth, Router, ShardRouter};
 pub use service::{
-    forward_uniform, forward_uniform_obs, serve_fleet, serve_fleet_obs, InferenceService, Request,
-    Response, ServiceStats,
+    forward_uniform, forward_uniform_obs, serve_fleet, serve_fleet_obs, serve_scenario,
+    serve_scenario_obs, InferenceService, Request, Response, ServiceStats,
 };

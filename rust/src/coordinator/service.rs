@@ -20,6 +20,11 @@
 //!   do under R req/s?") to the deterministic simulated-time
 //!   [`crate::serve::Fleet`], which shares the [`BatchPolicy`]
 //!   contract and the plan cache with this module.
+//! * [`serve_scenario`] — production-shaped capacity planning: the
+//!   named adversarial scenarios (flash crowd, one-tenant overload,
+//!   instance failure, …) run through the autoscaling multi-tenant
+//!   [`crate::serve::AutoFleet`], again on simulated time and again
+//!   sharing the [`BatchPolicy`] contract.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Sender};
@@ -32,7 +37,9 @@ use anyhow::{bail, Result};
 use crate::accel::{AccelConfig, Schedule};
 use crate::dcnn::{LayerData, Network};
 use crate::func::{uniform, workspace};
-use crate::serve::{Arrival, ConfigPolicy, Fleet, FleetOptions, FleetReport};
+use crate::serve::{
+    Arrival, ConfigPolicy, Fleet, FleetOptions, FleetReport, ScenarioOverrides, ScenarioRun,
+};
 use crate::tensor::WeightsOIDHW;
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -265,6 +272,38 @@ pub fn serve_fleet_obs(
     obs: crate::obs::Obs,
 ) -> Result<FleetReport, String> {
     Fleet::new_obs(networks, opts, obs)?.run(workload)
+}
+
+/// Run a named adversarial serving scenario (`flash-crowd`,
+/// `one-tenant-overload`, `instance-failure`, …; see
+/// [`crate::serve::SCENARIO_NAMES`]) against `networks` on the
+/// autoscaling multi-tenant fleet. Like [`serve_fleet`] this is a thin
+/// delegation so callers can stay on the coordinator API — scenario
+/// construction, autoscaling, SLO scheduling and cost normalization
+/// all live in [`crate::serve::scenario`] and
+/// [`crate::serve::AutoFleet`]. The `udcnn serve --autoscale
+/// --scenario <name>` path.
+pub fn serve_scenario(
+    name: &str,
+    seed: u64,
+    networks: &[Network],
+    overrides: &ScenarioOverrides,
+) -> Result<ScenarioRun, String> {
+    crate::serve::run_scenario(name, seed, networks, overrides)
+}
+
+/// [`serve_scenario`] with an observability handle threaded into the
+/// autoscaling fleet: batches, sheds, scaler decisions and instance
+/// failures narrate onto the recorder's simulated timeline (the
+/// `udcnn serve --autoscale --trace` path).
+pub fn serve_scenario_obs(
+    name: &str,
+    seed: u64,
+    networks: &[Network],
+    overrides: &ScenarioOverrides,
+    obs: crate::obs::Obs,
+) -> Result<ScenarioRun, String> {
+    crate::serve::run_scenario_obs(name, seed, networks, overrides, obs)
 }
 
 /// Run one batch through the network: golden numerics + simulated

@@ -12,6 +12,7 @@
 //! udcnn zoo        --dump                               layer shapes (JSON-ish)
 //! udcnn verify     [--artifacts DIR]                    PJRT artifacts vs golden
 //! udcnn serve      <net>... --instances N --rps R       fleet serving harness
+//! udcnn serve      --autoscale [--scenario NAME]        autoscaling scenario battery
 //! ```
 
 use std::collections::BTreeMap;
@@ -22,7 +23,7 @@ use anyhow::{bail, Result};
 use udcnn::accel::{simulate_layer, simulate_network, AccelConfig};
 use udcnn::baseline::{CpuBaseline, GpuModel};
 use udcnn::cli::{first_positional, network_by_name, opt_parse, parse_opts, positionals};
-use udcnn::coordinator::{serve_fleet, serve_fleet_obs, BatchPolicy};
+use udcnn::coordinator::{serve_fleet, serve_fleet_obs, serve_scenario_obs, BatchPolicy};
 use udcnn::dcnn::{sparsity, zoo, Network};
 use udcnn::energy;
 use udcnn::obs::Obs;
@@ -97,6 +98,12 @@ fn print_usage() {
                           --shard (shard models across instances)\n\
                           --tuned (serve autotuned per-model plans)  --json\n\
                           --trace FILE (Chrome trace JSON)  --metrics FILE\n\
+           autoscale mode: --autoscale [--scenario NAME]  (default scenario: steady)\n\
+                          scenarios: steady diurnal flash-crowd one-tenant-overload\n\
+                                     instance-failure scale-down closed-loop\n\
+                          --tenants name:class:slo_ms[:queue_cap],... (inf/- = unbounded)\n\
+                          --min-instances N  --max-instances N  --bring-up-ms B\n\
+                          --seed S  --trace FILE  --metrics FILE  --json\n\
          stream     <net> [--frames N] [--chunk D]     streaming temporal-tiled inference\n\
            stream options: --threads T  --seed S  --verify (check bits vs whole volume)\n\
                            --trace FILE  --metrics FILE  --json"
@@ -491,6 +498,9 @@ fn cmd_verify(opts: &BTreeMap<String, String>) -> Result<()> {
 /// and makes the reported speedup a capacity ratio.
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let opts = parse_opts(rest);
+    if opts.contains_key("autoscale") || opts.contains_key("scenario") {
+        return cmd_serve_autoscale(rest);
+    }
     let value_keys = &[
         "instances",
         "rps",
@@ -642,6 +652,64 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         speedup,
         fleet.instances
     );
+    Ok(())
+}
+
+/// `udcnn serve --autoscale [--scenario NAME]`: run one named
+/// adversarial scenario against the autoscaling multi-tenant fleet
+/// (`--autoscale` alone runs `steady`; the roster of names is
+/// [`udcnn::serve::SCENARIO_NAMES`]). The scenario self-parameterizes
+/// from a capacity probe of the chosen networks, so the same name
+/// stresses a rack of DCGANs and a rack of V-Nets proportionally.
+/// Everything runs on the simulated clock: repeated runs print
+/// byte-identical reports on any host at any thread count, which is
+/// what lets CI `cmp` two invocations.
+fn cmd_serve_autoscale(rest: &[String]) -> Result<()> {
+    use udcnn::serve::{parse_tenant_specs, ScenarioOverrides};
+    let opts = parse_opts(rest);
+    let value_keys = &[
+        "scenario",
+        "tenants",
+        "seed",
+        "min-instances",
+        "max-instances",
+        "bring-up-ms",
+        "trace",
+        "metrics",
+    ];
+    let names = positionals(rest, value_keys);
+    let nets: Vec<Network> = if names.is_empty() {
+        vec![zoo::dcgan(), zoo::gan3d()] // one 2D + one 3D by default
+    } else {
+        names
+            .iter()
+            .map(|n| network_by_name(n.as_str()))
+            .collect::<Result<_>>()?
+    };
+    let scenario = opts.get("scenario").map(|s| s.as_str()).unwrap_or("steady");
+    let seed: u64 = opt_parse(&opts, "seed", 0xF1EE7)?;
+    let ov = ScenarioOverrides {
+        min_instances: opts.get("min-instances").map(|s| s.parse()).transpose()?,
+        max_instances: opts.get("max-instances").map(|s| s.parse()).transpose()?,
+        bring_up_s: opts
+            .get("bring-up-ms")
+            .map(|s| s.parse::<f64>())
+            .transpose()?
+            .map(|ms| ms / 1e3),
+        tenants: opts
+            .get("tenants")
+            .map(|s| parse_tenant_specs(s).map_err(anyhow::Error::msg))
+            .transpose()?,
+    };
+    let obs = obs_from_opts(&opts);
+    let run = serve_scenario_obs(scenario, seed, &nets, &ov, obs.clone())
+        .map_err(anyhow::Error::msg)?;
+    write_obs_artifacts(&obs, &opts)?;
+    if opts.contains_key("json") {
+        println!("{}", run.to_json());
+    } else {
+        print!("{}", run.render());
+    }
     Ok(())
 }
 

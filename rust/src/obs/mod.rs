@@ -35,6 +35,7 @@
 //! | `instance N` | `batch`, `layer` | dispatched batches, per-layer cycle spans |
 //! | `requests` | `request` | per-request arrival→completion spans |
 //! | `stream` | `chunk`, `layer`, counter | chunk/layer spans, live-element samples |
+//! | `scaler` | `scaler`, `failure` | autoscaler decisions, injected board failures |
 
 pub mod metrics;
 pub mod recorder;

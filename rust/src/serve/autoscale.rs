@@ -1,0 +1,1410 @@
+//! The autoscaled, multi-tenant fleet engine.
+//!
+//! [`AutoFleet`] wraps the classic fixed-size [`Fleet`] (which it
+//! reuses for plan compilation, batch timing/energy memoization and
+//! trace narration) with the three behaviours production serving is
+//! actually about:
+//!
+//! * **Autoscaling** — a scaler wakes on a fixed check grid and reads
+//!   two signals: total queue depth per ready board, and the p99 of a
+//!   sliding window of recent completion latencies. It adds boards
+//!   (each paying a configurable *bring-up* latency — FPGA bitstream
+//!   reconfiguration — before accepting its first batch) and drains
+//!   idle boards gracefully: a draining board takes no new batches and
+//!   every in-flight batch runs to completion, so scale-down never
+//!   aborts work.
+//! * **Tenancy** — every request bills to a [`TenantSpec`] with a
+//!   priority class, an SLO and a queue bound. Dispatch favours lower
+//!   classes; admission sheds a request whose estimated wait already
+//!   blows its tenant's SLO; when the global queue is full, a
+//!   newcomer of a strictly higher priority class preempts the
+//!   youngest queued request of a lower class (shed with reason
+//!   `preempted`) instead of being turned away.
+//! * **Failure** — an injected [`FailureSpec`] kills a board
+//!   mid-stream. Requests aboard its unfinished batches are returned
+//!   to the front of their tenant queues (oldest first) and re-routed;
+//!   nothing is silently dropped, so per-tenant conservation
+//!   (`submitted == completed + shed`) holds through failures.
+//!
+//! The engine is a deterministic discrete-event loop in simulated
+//! time. Events (batch completions, injected failures, board
+//! ready-ups, batch deadlines, scaler checks, open-loop arrivals,
+//! closed-loop submissions) are processed in `(time, kind)` order with
+//! a fixed kind priority, every container is ordered (`BTreeMap`,
+//! `Vec`), and the only randomness is the seeded stagger of
+//! closed-loop clients — so a `(workload, options, seed)` triple
+//! yields a byte-identical [`FleetReport`] and scaler decision log on
+//! every run, on any host.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::dcnn::Network;
+use crate::energy::FPGA_STATIC_W;
+use crate::obs::Obs;
+use crate::report::json::{array, JsonObj};
+use crate::resource;
+use crate::util::prng::Prng;
+use crate::util::stats;
+
+use super::fleet::{Fleet, FleetOptions, FleetReport};
+use super::instance::{Instance, InstanceState};
+use super::loadgen::{Arrival, ClosedLoopSpec, LatencySummary};
+use super::tenant::{TenantReport, TenantSpec};
+
+/// Scaler configuration of an [`AutoFleet`].
+#[derive(Clone, Debug)]
+pub struct AutoscaleOptions {
+    /// Lower bound on board count; the fleet starts here and drain
+    /// decisions never go below it. Must be ≥ 1.
+    pub min_instances: usize,
+    /// Upper bound on board count (lifetime ids may exceed it; *live*
+    /// boards never do).
+    pub max_instances: usize,
+    /// Seconds between a scale-up decision and the new board's first
+    /// accepted batch (FPGA reconfiguration + DDR warm-up).
+    pub bring_up_s: f64,
+    /// Scaler check cadence, simulated seconds.
+    pub check_every_s: f64,
+    /// Sliding completion-latency window the p99 signal reads.
+    pub window_s: f64,
+    /// Scale up when total queued requests exceed this many per ready
+    /// board.
+    pub up_queue_depth: usize,
+    /// Scale up when the windowed p99 exceeds this (ms); drain when
+    /// the queue is empty and the windowed p99 sits below half of it.
+    pub p99_target_ms: f64,
+    /// A p99-driven decision (up or drain) requires at least this many
+    /// window samples — the guard against scaling on a stale window.
+    pub min_window_samples: usize,
+    /// Minimum seconds between consecutive scaling decisions
+    /// (`below-min` recovery bypasses this).
+    pub cooldown_s: f64,
+}
+
+impl Default for AutoscaleOptions {
+    fn default() -> Self {
+        AutoscaleOptions {
+            min_instances: 1,
+            max_instances: 8,
+            bring_up_s: 0.010,
+            check_every_s: 0.005,
+            window_s: 0.020,
+            up_queue_depth: 32,
+            p99_target_ms: 50.0,
+            min_window_samples: 16,
+            cooldown_s: 0.010,
+        }
+    }
+}
+
+impl AutoscaleOptions {
+    /// Reject unusable scaler configurations.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.min_instances == 0 {
+            return Err("autoscaler needs min_instances >= 1".into());
+        }
+        if self.max_instances < self.min_instances {
+            return Err(format!(
+                "max_instances {} below min_instances {}",
+                self.max_instances, self.min_instances
+            ));
+        }
+        let pos = |x: f64| x.is_finite() && x > 0.0;
+        if !pos(self.check_every_s) || !pos(self.window_s) {
+            return Err("check_every_s and window_s must be positive".into());
+        }
+        if !self.bring_up_s.is_finite() || self.bring_up_s < 0.0 {
+            return Err("bring_up_s must be finite and >= 0".into());
+        }
+        if !pos(self.p99_target_ms) || !self.cooldown_s.is_finite() || self.cooldown_s < 0.0 {
+            return Err("p99_target_ms must be positive, cooldown_s >= 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// One scaler decision, as logged.
+#[derive(Clone, Debug)]
+pub struct ScalerDecision {
+    /// Simulated time of the decision.
+    pub t_s: f64,
+    /// `"scale-up"` or `"drain"`.
+    pub action: String,
+    /// Signal that fired: `below-min`, `queue-depth`,
+    /// `p99-above-target`, or `idle`.
+    pub reason: String,
+    /// Board the decision created or drained.
+    pub instance: usize,
+    /// Total queued requests at decision time.
+    pub queue_depth: usize,
+    /// Windowed p99 (ms) at decision time (0 when the window is empty).
+    pub window_p99_ms: f64,
+    /// Completion samples in the window at decision time.
+    pub window_samples: usize,
+    /// Active board count after the decision.
+    pub active_after: usize,
+}
+
+impl ScalerDecision {
+    /// JSON object for the decision log.
+    pub fn to_json(&self) -> JsonObj {
+        JsonObj::new()
+            .num("t_s", self.t_s)
+            .str("action", &self.action)
+            .str("reason", &self.reason)
+            .int("instance", self.instance as u64)
+            .int("queue_depth", self.queue_depth as u64)
+            .num("window_p99_ms", self.window_p99_ms)
+            .int("window_samples", self.window_samples as u64)
+            .int("active_after", self.active_after as u64)
+    }
+}
+
+/// Lifecycle record of one board over a run.
+#[derive(Clone, Debug)]
+pub struct InstanceLife {
+    /// Board id.
+    pub id: usize,
+    /// Simulated provisioning time.
+    pub created_s: f64,
+    /// When bring-up completed (`created_s + bring_up_s`).
+    pub ready_s: f64,
+    /// When the first batch started, if any (always ≥ `ready_s`).
+    pub first_start_s: Option<f64>,
+    /// When the board left service, if it did.
+    pub retired_s: Option<f64>,
+    /// Final state label (`active` / `drained` / `failed`).
+    pub retirement: String,
+}
+
+impl InstanceLife {
+    /// JSON object for the lifecycle log.
+    pub fn to_json(&self) -> JsonObj {
+        JsonObj::new()
+            .int("id", self.id as u64)
+            .num("created_s", self.created_s)
+            .num("ready_s", self.ready_s)
+            .num("first_start_s", self.first_start_s.unwrap_or(f64::NAN))
+            .num("retired_s", self.retired_s.unwrap_or(f64::NAN))
+            .str("state", &self.retirement)
+    }
+}
+
+/// Scaler outcome of one run: bounds, decision log, board lifecycles.
+#[derive(Clone, Debug)]
+pub struct ScalerReport {
+    /// Configured lower bound.
+    pub min_instances: usize,
+    /// Configured upper bound.
+    pub max_instances: usize,
+    /// Configured bring-up latency.
+    pub bring_up_s: f64,
+    /// Peak simultaneous non-retired boards.
+    pub peak_active: usize,
+    /// Every decision, in time order.
+    pub decisions: Vec<ScalerDecision>,
+    /// Every board the run ever provisioned.
+    pub lives: Vec<InstanceLife>,
+}
+
+impl ScalerReport {
+    /// The decision log alone, rendered as a JSON array — the byte
+    /// string the determinism property pins.
+    pub fn decisions_json(&self) -> String {
+        let items: Vec<String> = self.decisions.iter().map(|d| d.to_json().render()).collect();
+        array(&items)
+    }
+
+    /// JSON object for [`FleetReport::to_json`].
+    pub fn to_json(&self) -> JsonObj {
+        let lives: Vec<String> = self.lives.iter().map(|l| l.to_json().render()).collect();
+        JsonObj::new()
+            .int("min_instances", self.min_instances as u64)
+            .int("max_instances", self.max_instances as u64)
+            .num("bring_up_s", self.bring_up_s)
+            .int("peak_active", self.peak_active as u64)
+            .raw("decisions", &self.decisions_json())
+            .raw("instances", &array(&lives))
+    }
+
+    /// Text lines for [`FleetReport::render`].
+    pub fn render(&self) -> String {
+        let ups = self.decisions.iter().filter(|d| d.action == "scale-up").count();
+        let drains = self.decisions.len() - ups;
+        let mut out = format!(
+            "scaler: [{}, {}] boards | bring-up {:.1} ms | peak {} | {} scale-ups | {} drains\n",
+            self.min_instances,
+            self.max_instances,
+            self.bring_up_s * 1e3,
+            self.peak_active,
+            ups,
+            drains
+        );
+        for d in &self.decisions {
+            out.push_str(&format!(
+                "  t={:.4}s {} board {} ({}; depth {}, p99 {:.3} ms, {} active after)\n",
+                d.t_s, d.action, d.instance, d.reason, d.queue_depth, d.window_p99_ms,
+                d.active_after
+            ));
+        }
+        out
+    }
+}
+
+/// Cost-normalized figures of one run (the arXiv:2102.00294 axis:
+/// throughput per DSP and energy per request, not raw req/s).
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    /// DSP slices of the widest per-model configuration — the
+    /// provisioning cost of one board.
+    pub board_dsp: u64,
+    /// Board-seconds provisioned (creation to retirement or end of
+    /// run, summed over boards — bring-up time included; boards cost
+    /// money while reconfiguring).
+    pub active_board_s: f64,
+    /// `active_board_s / makespan`: mean boards provisioned.
+    pub mean_active_boards: f64,
+    /// Served req/s per provisioned DSP slice
+    /// (`throughput_rps / (board_dsp · mean_active_boards)`).
+    pub throughput_per_dsp: f64,
+    /// Total energy: per-batch activity-scaled energy plus static
+    /// power over provisioned-but-idle board time.
+    pub energy_j: f64,
+    /// `energy_j / served`, in millijoules.
+    pub mj_per_request: f64,
+}
+
+impl CostReport {
+    /// JSON object for [`FleetReport::to_json`].
+    pub fn to_json(&self) -> JsonObj {
+        JsonObj::new()
+            .int("board_dsp", self.board_dsp)
+            .num("active_board_s", self.active_board_s)
+            .num("mean_active_boards", self.mean_active_boards)
+            .num("throughput_per_dsp", self.throughput_per_dsp)
+            .num("energy_j", self.energy_j)
+            .num("mj_per_request", self.mj_per_request)
+    }
+
+    /// Text lines for [`FleetReport::render`].
+    pub fn render(&self) -> String {
+        format!(
+            "cost: {:.4} req/s/DSP ({} DSP/board, mean {:.2} boards) | {:.3} J | {:.3} mJ/req\n",
+            self.throughput_per_dsp,
+            self.board_dsp,
+            self.mean_active_boards,
+            self.energy_j,
+            self.mj_per_request
+        )
+    }
+}
+
+/// An injected board failure: `instance` dies at `t_s`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureSpec {
+    /// Simulated failure time.
+    pub t_s: f64,
+    /// Board id to kill.
+    pub instance: usize,
+}
+
+/// One queued request.
+#[derive(Clone, Copy, Debug)]
+struct Req {
+    t0: f64,
+    tid: u64,
+    client: Option<usize>,
+}
+
+/// One dispatched, not-yet-completed batch.
+#[derive(Clone, Debug)]
+struct FlightBatch {
+    done_s: f64,
+    instance: usize,
+    model: String,
+    reqs: Vec<(usize, Req)>,
+}
+
+/// One closed-loop client.
+#[derive(Clone, Debug)]
+struct Client {
+    model: String,
+    tenant_ix: usize,
+    think_s: f64,
+    /// Submissions still to make (decremented at submission time).
+    remaining: usize,
+    /// Next submission time; `None` while awaiting a response.
+    next_t: Option<f64>,
+}
+
+/// Per-tenant running tallies.
+#[derive(Clone, Debug, Default)]
+struct TenantAcc {
+    submitted: u64,
+    completed: u64,
+    shed: u64,
+    reasons: BTreeMap<String, u64>,
+    lats: Vec<f64>,
+    violations: u64,
+}
+
+/// Mutable state of one [`AutoFleet::run`] replay, kept apart from the
+/// fleet so engine methods can borrow both without aliasing.
+struct EngineState {
+    /// model → per-tenant-index FIFO queues.
+    pend: BTreeMap<String, Vec<VecDeque<Req>>>,
+    /// In-flight batches by dispatch sequence number.
+    flight: BTreeMap<u64, FlightBatch>,
+    next_seq: u64,
+    next_tid: u64,
+    /// Sliding `(completion time, latency)` window for the p99 signal.
+    window: VecDeque<(f64, f64)>,
+    clients: Vec<Client>,
+    tacc: Vec<TenantAcc>,
+    lats: Vec<f64>,
+    per_model: BTreeMap<String, u64>,
+    offered: u64,
+    batches: u64,
+    energy_j: f64,
+    last_done_s: f64,
+    decisions: Vec<ScalerDecision>,
+    last_scale_s: f64,
+    peak_active: usize,
+    /// `(ready time, board id)` of boards still in bring-up.
+    pending_ready: Vec<(f64, usize)>,
+}
+
+impl EngineState {
+    fn total_queued(&self) -> usize {
+        self.pend.values().flatten().map(|q| q.len()).sum()
+    }
+
+    fn tenant_queued(&self, ix: usize) -> usize {
+        self.pend.values().map(|tqs| tqs[ix].len()).sum()
+    }
+}
+
+/// An autoscaling, multi-tenant fleet over a composed classic
+/// [`Fleet`] (one shared plan cache, latency/energy memo and trace
+/// scheme). See the module docs for the model.
+pub struct AutoFleet {
+    core: Fleet,
+    auto: AutoscaleOptions,
+    /// Sorted by `(class, name)`: index order IS priority order.
+    tenants: Vec<TenantSpec>,
+    boards: Vec<Instance>,
+}
+
+impl AutoFleet {
+    /// Bring an autoscaled fleet online with `auto.min_instances`
+    /// boards ready at t = 0. `tenants` may be empty (a sole implicit
+    /// [`TenantSpec::default_tenant`] is used); names must be unique.
+    /// `opts.shard_models` is rejected — every board hosts every model
+    /// so the scaler's boards are interchangeable.
+    pub fn new(
+        networks: Vec<Network>,
+        opts: FleetOptions,
+        auto: AutoscaleOptions,
+        tenants: Vec<TenantSpec>,
+    ) -> Result<AutoFleet, String> {
+        AutoFleet::new_obs(networks, opts, auto, tenants, Obs::off())
+    }
+
+    /// [`AutoFleet::new`] with an observability handle: batches,
+    /// requests and sheds narrate like the classic fleet, and every
+    /// scaler decision lands on a dedicated `scaler` track.
+    pub fn new_obs(
+        networks: Vec<Network>,
+        opts: FleetOptions,
+        auto: AutoscaleOptions,
+        tenants: Vec<TenantSpec>,
+        obs: Obs,
+    ) -> Result<AutoFleet, String> {
+        auto.validate()?;
+        if opts.shard_models {
+            return Err("autoscaled fleets replicate every model; sharding unsupported".into());
+        }
+        let mut tenants = if tenants.is_empty() {
+            vec![TenantSpec::default_tenant()]
+        } else {
+            tenants
+        };
+        for t in &tenants {
+            t.validate()?;
+        }
+        tenants.sort_by(|a, b| a.class.cmp(&b.class).then_with(|| a.name.cmp(&b.name)));
+        for pair in tenants.windows(2) {
+            if pair[0].name == pair[1].name {
+                return Err(format!("tenant '{}' registered twice", pair[0].name));
+            }
+        }
+        let core_opts = FleetOptions {
+            instances: 1, // the core's own boards are unused
+            ..opts
+        };
+        let core = Fleet::new_obs(networks, core_opts, obs)?;
+        let boards = (0..auto.min_instances).map(|id| Instance::new(id, vec![])).collect();
+        Ok(AutoFleet {
+            core,
+            auto,
+            tenants,
+            boards,
+        })
+    }
+
+    /// The tenant roster, in priority order.
+    pub fn tenants(&self) -> &[TenantSpec] {
+        &self.tenants
+    }
+
+    /// The scaler configuration.
+    pub fn autoscale_options(&self) -> &AutoscaleOptions {
+        &self.auto
+    }
+
+    /// Resolve an arrival's tenant tag to a roster index. An empty tag
+    /// maps to the sole tenant, or to one literally named `default`.
+    fn tenant_ix(&self, tag: &str) -> Result<usize, String> {
+        if tag.is_empty() {
+            if self.tenants.len() == 1 {
+                return Ok(0);
+            }
+            return self
+                .tenants
+                .iter()
+                .position(|t| t.name == "default")
+                .ok_or_else(|| "untagged arrival in a multi-tenant fleet".to_string());
+        }
+        self.tenants
+            .iter()
+            .position(|t| t.name == tag)
+            .ok_or_else(|| format!("unknown tenant '{tag}'"))
+    }
+
+    /// Replay a workload: open-loop `arrivals` (sorted by time, as
+    /// [`crate::serve::merge_arrivals`] produces), closed-loop client
+    /// pools, and injected board failures. `seed` staggers the
+    /// closed-loop clients' first submissions. Deterministic: equal
+    /// inputs yield a byte-identical report and decision log.
+    pub fn run(
+        &mut self,
+        arrivals: &[Arrival],
+        closed: &[ClosedLoopSpec],
+        failures: &[FailureSpec],
+        seed: u64,
+    ) -> Result<FleetReport, String> {
+        if arrivals.windows(2).any(|w| w[0].t_s > w[1].t_s) {
+            return Err("arrivals must be sorted by time".into());
+        }
+        for a in arrivals {
+            if self.core.model_config(&a.model).is_none() {
+                return Err(format!("unknown model '{}' in workload", a.model));
+            }
+            self.tenant_ix(&a.tenant)?;
+        }
+        let mut st = self.init_state(closed, seed)?;
+        let mut failures: Vec<FailureSpec> = failures.to_vec();
+        failures.sort_by(|a, b| a.t_s.total_cmp(&b.t_s).then(a.instance.cmp(&b.instance)));
+        for f in &failures {
+            if f.instance >= self.boards.len() {
+                return Err(format!("failure targets unknown board {}", f.instance));
+            }
+        }
+
+        let first_event_s = arrivals
+            .first()
+            .map(|a| a.t_s)
+            .into_iter()
+            .chain(st.clients.iter().filter_map(|c| c.next_t))
+            .fold(f64::INFINITY, f64::min);
+        let mut arr_ix = 0usize;
+        let mut fail_ix = 0usize;
+        let mut next_check = self.auto.check_every_s;
+        let mut last_now = 0.0f64;
+        let max_wait = self.core.options().policy.max_wait.as_secs_f64();
+
+        loop {
+            let work_remains = arr_ix < arrivals.len()
+                || st.clients.iter().any(|c| c.next_t.is_some())
+                || st.total_queued() > 0
+                || !st.flight.is_empty();
+            if !work_remains {
+                break;
+            }
+            // candidate events as (time, kind); kind breaks time ties:
+            // 0 completion, 1 failure, 2 ready, 3 deadline, 4 check,
+            // 5 arrival, 6 closed-loop submission
+            let mut best: Option<(f64, u8)> = None;
+            let offer = |t: f64, kind: u8, best: &mut Option<(f64, u8)>| {
+                let better = match *best {
+                    None => true,
+                    Some((bt, bk)) => t < bt || (t == bt && kind < bk),
+                };
+                if better {
+                    *best = Some((t, kind));
+                }
+            };
+            let done_t = st.flight.values().map(|f| f.done_s).fold(f64::INFINITY, f64::min);
+            if done_t.is_finite() {
+                offer(done_t, 0, &mut best);
+            }
+            if fail_ix < failures.len() {
+                offer(failures[fail_ix].t_s, 1, &mut best);
+            }
+            let ready_t = st.pending_ready.iter().map(|&(t, _)| t).fold(f64::INFINITY, f64::min);
+            if ready_t.is_finite() {
+                offer(ready_t, 2, &mut best);
+            }
+            let deadline = st
+                .pend
+                .values()
+                .flatten()
+                .filter_map(|q| q.front())
+                .map(|r| r.t0 + max_wait)
+                .fold(f64::INFINITY, f64::min);
+            if deadline.is_finite() && deadline > last_now {
+                offer(deadline, 3, &mut best);
+            }
+            offer(next_check, 4, &mut best);
+            if arr_ix < arrivals.len() {
+                offer(arrivals[arr_ix].t_s, 5, &mut best);
+            }
+            let client_t = st
+                .clients
+                .iter()
+                .filter_map(|c| c.next_t)
+                .fold(f64::INFINITY, f64::min);
+            if client_t.is_finite() {
+                offer(client_t, 6, &mut best);
+            }
+            let Some((now, kind)) = best else { break };
+            last_now = last_now.max(now);
+            match kind {
+                0 => self.handle_completion(&mut st, now)?,
+                1 => {
+                    let f = failures[fail_ix];
+                    fail_ix += 1;
+                    self.handle_failure(&mut st, now, f.instance)?;
+                }
+                2 => {
+                    st.pending_ready.retain(|&(t, _)| t > now);
+                    self.pump(&mut st, now)?;
+                }
+                3 => self.pump(&mut st, now)?,
+                4 => {
+                    next_check += self.auto.check_every_s;
+                    self.check_scaler(&mut st, now);
+                    self.pump(&mut st, now)?;
+                }
+                5 => {
+                    let a = arrivals[arr_ix].clone();
+                    arr_ix += 1;
+                    let tix = self.tenant_ix(&a.tenant)?;
+                    self.admit(&mut st, now, &a.model, tix, None)?;
+                }
+                _ => {
+                    let cix = self
+                        .next_client(&st)
+                        .expect("client event offered without a due client");
+                    let (model, tix) = {
+                        let c = &mut st.clients[cix];
+                        c.next_t = None;
+                        c.remaining -= 1;
+                        (c.model.clone(), c.tenant_ix)
+                    };
+                    self.admit(&mut st, now, &model, tix, Some(cix))?;
+                }
+            }
+        }
+
+        self.finish_report(st, first_event_s)
+    }
+
+    /// Build the initial engine state: empty queues for every
+    /// registered model × tenant, and closed-loop clients staggered
+    /// uniformly over their think time from `seed`.
+    fn init_state(&mut self, closed: &[ClosedLoopSpec], seed: u64) -> Result<EngineState, String> {
+        let mut pend = BTreeMap::new();
+        let models: Vec<String> = self.core.models().iter().map(|m| m.to_string()).collect();
+        for m in &models {
+            pend.insert(m.clone(), vec![VecDeque::new(); self.tenants.len()]);
+        }
+        let mut rng = Prng::new(seed);
+        let mut clients = Vec::new();
+        for spec in closed {
+            spec.validate()?;
+            if !models.iter().any(|m| m == &spec.model) {
+                return Err(format!("closed-loop pool targets unknown model '{}'", spec.model));
+            }
+            let tix = self.tenant_ix(&spec.tenant)?;
+            for _ in 0..spec.clients {
+                let stagger = if spec.think_s > 0.0 {
+                    rng.f64() * spec.think_s
+                } else {
+                    0.0
+                };
+                clients.push(Client {
+                    model: spec.model.clone(),
+                    tenant_ix: tix,
+                    think_s: spec.think_s,
+                    remaining: spec.requests_per_client,
+                    next_t: Some(stagger),
+                });
+            }
+        }
+        Ok(EngineState {
+            pend,
+            flight: BTreeMap::new(),
+            next_seq: 0,
+            next_tid: 0,
+            window: VecDeque::new(),
+            clients,
+            tacc: vec![TenantAcc::default(); self.tenants.len()],
+            lats: Vec::new(),
+            per_model: BTreeMap::new(),
+            offered: 0,
+            batches: 0,
+            energy_j: 0.0,
+            last_done_s: 0.0,
+            decisions: Vec::new(),
+            last_scale_s: f64::NEG_INFINITY,
+            peak_active: self.boards.len(),
+            pending_ready: Vec::new(),
+        })
+    }
+
+    /// The due client with the earliest `next_t` (ties to the lowest
+    /// index).
+    fn next_client(&self, st: &EngineState) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (ix, c) in st.clients.iter().enumerate() {
+            if let Some(t) = c.next_t {
+                let better = best.is_none_or(|(bt, _)| t < bt);
+                if better {
+                    best = Some((t, ix));
+                }
+            }
+        }
+        best.map(|(_, ix)| ix)
+    }
+
+    /// Process the earliest batch completion.
+    fn handle_completion(&mut self, st: &mut EngineState, now: f64) -> Result<(), String> {
+        let seq = st
+            .flight
+            .iter()
+            .min_by(|a, b| a.1.done_s.total_cmp(&b.1.done_s).then(a.0.cmp(b.0)))
+            .map(|(s, _)| *s)
+            .expect("completion event without a flight");
+        let fb = st.flight.remove(&seq).expect("flight vanished");
+        st.last_done_s = st.last_done_s.max(fb.done_s);
+        for (tix, req) in &fb.reqs {
+            let lat = fb.done_s - req.t0;
+            st.lats.push(lat);
+            st.window.push_back((fb.done_s, lat));
+            let acc = &mut st.tacc[*tix];
+            acc.completed += 1;
+            acc.lats.push(lat);
+            if lat * 1e3 > self.tenants[*tix].slo_ms {
+                acc.violations += 1;
+            }
+            *st.per_model.entry(fb.model.clone()).or_insert(0) += 1;
+            if let Some(cix) = req.client {
+                let c = &mut st.clients[cix];
+                if c.remaining > 0 {
+                    c.next_t = Some(fb.done_s + c.think_s);
+                }
+            }
+        }
+        // a draining board retires the moment its last batch lands
+        let b = &mut self.boards[fb.instance];
+        if b.state() == InstanceState::Draining {
+            b.try_finish_drain(now);
+        }
+        self.pump(st, now)
+    }
+
+    /// Kill a board: requeue the requests aboard its unfinished
+    /// batches (front of their tenant queues, oldest first) and
+    /// re-route via the pump. Conservation holds — nothing is dropped.
+    fn handle_failure(&mut self, st: &mut EngineState, now: f64, id: usize) -> Result<(), String> {
+        let b = &mut self.boards[id];
+        if matches!(b.state(), InstanceState::Drained | InstanceState::Failed) {
+            return self.pump(st, now); // already gone; nothing to kill
+        }
+        b.fail(now);
+        let seqs: Vec<u64> = st
+            .flight
+            .iter()
+            .filter(|(_, fb)| fb.instance == id)
+            .map(|(s, _)| *s)
+            .collect();
+        let mut wreck: Vec<(String, usize, Req)> = Vec::new();
+        for s in seqs {
+            let fb = st.flight.remove(&s).expect("flight vanished");
+            for (tix, r) in fb.reqs {
+                wreck.push((fb.model.clone(), tix, r));
+            }
+        }
+        wreck.sort_by(|a, b| a.2.t0.total_cmp(&b.2.t0).then(a.2.tid.cmp(&b.2.tid)));
+        let requeued = wreck.len();
+        for (model, tix, r) in wreck.into_iter().rev() {
+            st.pend.get_mut(&model).expect("model queue")[tix].push_front(r);
+        }
+        let obs = self.core.obs();
+        if obs.is_enabled() {
+            let strack = obs.track("scaler");
+            obs.instant(
+                strack,
+                "failure",
+                &format!("board {id} failed"),
+                now * 1e6,
+                Some(
+                    JsonObj::new()
+                        .int("instance", id as u64)
+                        .int("requeued", requeued as u64),
+                ),
+            );
+            obs.count("fleet.instance_failures", 1);
+        }
+        self.pump(st, now)
+    }
+
+    /// Admit one request at `now`: estimated-wait shed against the
+    /// tenant SLO, per-tenant queue bound, global bound with
+    /// cross-class preemption, then enqueue and pump.
+    fn admit(
+        &mut self,
+        st: &mut EngineState,
+        now: f64,
+        model: &str,
+        tix: usize,
+        client: Option<usize>,
+    ) -> Result<(), String> {
+        let tid = st.next_tid;
+        st.next_tid += 1;
+        st.offered += 1;
+        st.tacc[tix].submitted += 1;
+        let max_batch = self.core.options().policy.max_batch;
+        let my_class = self.tenants[tix].class;
+
+        // estimated-wait shed: with R ready boards and A queued
+        // requests of my class or better ahead of me, my batch starts
+        // after roughly ceil((A+1)/B)·batch_s/R seconds
+        let ready_n = self.boards.iter().filter(|b| b.accepts(now)).count();
+        if ready_n > 0 {
+            let ahead: usize = st
+                .pend
+                .get(model)
+                .map(|tqs| {
+                    tqs.iter()
+                        .enumerate()
+                        .filter(|(ix, _)| self.tenants[*ix].class <= my_class)
+                        .map(|(_, q)| q.len())
+                        .sum()
+                })
+                .unwrap_or(0);
+            let batch_s = self.core.batch_latency_s(model, max_batch)?;
+            let est = (ahead / max_batch + 1) as f64 * batch_s / ready_n as f64;
+            let bound = (self.tenants[tix].slo_ms / 1e3).min(self.core.options().latency_budget_s);
+            if est > bound {
+                self.shed(st, tix, model, tid, now, "budget-exceeded", client);
+                return Ok(());
+            }
+        }
+        // per-tenant queue bound
+        if st.tenant_queued(tix) >= self.tenants[tix].queue_cap {
+            self.shed(st, tix, model, tid, now, "queue-full", client);
+            return Ok(());
+        }
+        // global bound: a higher-priority newcomer preempts the
+        // youngest queued request of a strictly lower class
+        if st.total_queued() >= self.core.options().queue_cap {
+            let mut victim: Option<(f64, u64, String, usize)> = None;
+            for (m, tqs) in &st.pend {
+                for (ix, q) in tqs.iter().enumerate() {
+                    if self.tenants[ix].class <= my_class {
+                        continue;
+                    }
+                    if let Some(back) = q.back() {
+                        let better = victim
+                            .as_ref()
+                            .is_none_or(|(t0, id, _, _)| (back.t0, back.tid) > (*t0, *id));
+                        if better {
+                            victim = Some((back.t0, back.tid, m.clone(), ix));
+                        }
+                    }
+                }
+            }
+            match victim {
+                Some((_, _, vm, vix)) => {
+                    let vr = st.pend.get_mut(&vm).expect("model queue")[vix]
+                        .pop_back()
+                        .expect("victim vanished");
+                    self.shed(st, vix, &vm, vr.tid, now, "preempted", vr.client);
+                }
+                None => {
+                    self.shed(st, tix, model, tid, now, "queue-full", client);
+                    return Ok(());
+                }
+            }
+        }
+        st.pend.get_mut(model).expect("model queue")[tix].push_back(Req { t0: now, tid, client });
+        let obs = self.core.obs();
+        if obs.is_enabled() {
+            let depth = st.total_queued();
+            let ftrack = obs.track("fleet");
+            obs.sample(ftrack, "queue_depth", now * 1e6, depth as f64);
+        }
+        self.pump(st, now)
+    }
+
+    /// Record one shed: tenant accounting, the tagged trace event, and
+    /// the client's next think (a shed response is still a response).
+    #[allow(clippy::too_many_arguments)]
+    fn shed(
+        &mut self,
+        st: &mut EngineState,
+        tix: usize,
+        model: &str,
+        tid: u64,
+        t_s: f64,
+        reason: &str,
+        client: Option<usize>,
+    ) {
+        let acc = &mut st.tacc[tix];
+        acc.shed += 1;
+        *acc.reasons.entry(reason.to_string()).or_insert(0) += 1;
+        let tenant = self.tenants[tix].name.clone();
+        self.core.trace_shed(model, tid, t_s, reason, &tenant);
+        if let Some(cix) = client {
+            let c = &mut st.clients[cix];
+            if c.remaining > 0 {
+                c.next_t = Some(t_s + c.think_s);
+            }
+        }
+    }
+
+    /// Late-binding dispatcher: while a batch is *due* (full, or its
+    /// oldest request has waited `max_wait`) and an eligible board
+    /// exists (ready, ≤ 1 batch in flight — one running, one queued),
+    /// form the batch by priority `(class, age)` across tenant queues
+    /// and send it.
+    fn pump(&mut self, st: &mut EngineState, now: f64) -> Result<(), String> {
+        let max_batch = self.core.options().policy.max_batch;
+        let max_wait = self.core.options().policy.max_wait.as_secs_f64();
+        loop {
+            let Some(model) = self.due_model(st, now, max_batch, max_wait) else {
+                return Ok(());
+            };
+            let Some(bix) = self.eligible_board(now) else {
+                return Ok(());
+            };
+            let reqs = Self::pop_batch(st, &self.tenants, &model, max_batch);
+            debug_assert!(!reqs.is_empty(), "due model with empty queues");
+            let bsize = reqs.len();
+            let latency = self.core.batch_latency_s(&model, bsize)?;
+            st.energy_j += self.core.batch_energy_j(&model, bsize)?;
+            let done = self.boards[bix].run_batch(now, bsize, latency);
+            if self.core.obs().is_enabled() {
+                let submitted: Vec<(f64, u64)> = reqs.iter().map(|(_, r)| (r.t0, r.tid)).collect();
+                self.core.trace_batch(&model, bix, bsize, done, latency, &submitted);
+            }
+            st.batches += 1;
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            st.flight.insert(
+                seq,
+                FlightBatch {
+                    done_s: done,
+                    instance: bix,
+                    model,
+                    reqs,
+                },
+            );
+        }
+    }
+
+    /// The due model with the best `(priority class, oldest request,
+    /// name)` key, if any batch is due at `now`.
+    fn due_model(
+        &self,
+        st: &EngineState,
+        now: f64,
+        max_batch: usize,
+        max_wait: f64,
+    ) -> Option<String> {
+        let mut best: Option<(u8, f64, &String)> = None;
+        for (model, tqs) in &st.pend {
+            let total: usize = tqs.iter().map(|q| q.len()).sum();
+            if total == 0 {
+                continue;
+            }
+            let oldest = tqs
+                .iter()
+                .filter_map(|q| q.front())
+                .map(|r| r.t0)
+                .fold(f64::INFINITY, f64::min);
+            if total < max_batch && oldest + max_wait > now {
+                continue;
+            }
+            let class = tqs
+                .iter()
+                .enumerate()
+                .find(|(_, q)| !q.is_empty())
+                .map(|(ix, _)| self.tenants[ix].class)
+                .expect("nonempty model with empty queues");
+            let better = match &best {
+                None => true,
+                Some((bc, bo, bm)) => {
+                    class < *bc
+                        || (class == *bc && oldest < *bo)
+                        || (class == *bc && oldest == *bo && model < *bm)
+                }
+            };
+            if better {
+                best = Some((class, oldest, model));
+            }
+        }
+        best.map(|(_, _, m)| m.clone())
+    }
+
+    /// The eligible board with the least backlog (ties to the lowest
+    /// id): accepting, with at most one batch already in flight.
+    /// Index loop: `inflight_batches` prunes (`&mut`), so iterator
+    /// adapters cannot hold the simultaneous borrows this scan needs.
+    #[allow(clippy::needless_range_loop)]
+    fn eligible_board(&mut self, now: f64) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.boards.len() {
+            if !self.boards[i].accepts(now) || self.boards[i].inflight_batches(now) > 1 {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(j) => self.boards[i].busy_until_s < self.boards[j].busy_until_s,
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Pop up to `max_batch` requests for `model`, best `(class, age)`
+    /// first across its tenant queues.
+    fn pop_batch(
+        st: &mut EngineState,
+        tenants: &[TenantSpec],
+        model: &str,
+        max_batch: usize,
+    ) -> Vec<(usize, Req)> {
+        let tqs = st.pend.get_mut(model).expect("model queue");
+        let mut out = Vec::new();
+        while out.len() < max_batch {
+            let mut pick: Option<usize> = None;
+            for (ix, q) in tqs.iter().enumerate() {
+                let Some(front) = q.front() else { continue };
+                let better = match pick {
+                    None => true,
+                    Some(p) => {
+                        let pf = tqs[p].front().expect("picked queue emptied");
+                        let (ca, cb) = (tenants[ix].class, tenants[p].class);
+                        ca < cb || (ca == cb && (front.t0, front.tid) < (pf.t0, pf.tid))
+                    }
+                };
+                if better {
+                    pick = Some(ix);
+                }
+            }
+            match pick {
+                Some(ix) => out.push((ix, tqs[ix].pop_front().expect("front vanished"))),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Boards in [`InstanceState::Active`] (bring-up included — a
+    /// provisioned board counts against the scaler bounds immediately).
+    fn active_count(&self) -> usize {
+        self.boards.iter().filter(|b| b.state() == InstanceState::Active).count()
+    }
+
+    /// One scaler check at `now`: prune the latency window, read the
+    /// queue-depth and windowed-p99 signals, and decide.
+    fn check_scaler(&mut self, st: &mut EngineState, now: f64) {
+        while matches!(st.window.front(), Some(&(t, _)) if t < now - self.auto.window_s) {
+            st.window.pop_front();
+        }
+        let depth = st.total_queued();
+        let samples = st.window.len();
+        let p99_ms = if samples > 0 {
+            let lats: Vec<f64> = st.window.iter().map(|&(_, l)| l).collect();
+            stats::percentile(&lats, 99.0) * 1e3
+        } else {
+            0.0
+        };
+        let mut active = self.active_count();
+        let ready_n = self.boards.iter().filter(|b| b.accepts(now)).count();
+
+        // below-min recovery (after failures) bypasses the cooldown
+        while active < self.auto.min_instances {
+            self.scale_up(st, now, "below-min", depth, p99_ms, samples);
+            active += 1;
+        }
+        if now - st.last_scale_s < self.auto.cooldown_s {
+            return;
+        }
+        let fresh = samples >= self.auto.min_window_samples;
+        if depth > self.auto.up_queue_depth * ready_n.max(1) && active < self.auto.max_instances {
+            self.scale_up(st, now, "queue-depth", depth, p99_ms, samples);
+        } else if fresh && p99_ms > self.auto.p99_target_ms && active < self.auto.max_instances {
+            self.scale_up(st, now, "p99-above-target", depth, p99_ms, samples);
+        } else if depth == 0
+            && active > self.auto.min_instances
+            && fresh
+            && p99_ms <= self.auto.p99_target_ms / 2.0
+        {
+            self.drain_one(st, now, depth, p99_ms, samples);
+        }
+    }
+
+    /// Provision a new board (ready after bring-up) and log it.
+    fn scale_up(
+        &mut self,
+        st: &mut EngineState,
+        now: f64,
+        reason: &str,
+        depth: usize,
+        p99_ms: f64,
+        samples: usize,
+    ) {
+        let id = self.boards.len();
+        let b = Instance::with_bring_up(id, vec![], now, self.auto.bring_up_s);
+        st.pending_ready.push((b.ready_at_s, id));
+        self.boards.push(b);
+        st.last_scale_s = now;
+        let active = self.active_count();
+        st.peak_active = st.peak_active.max(active);
+        self.log_decision(st, now, "scale-up", reason, id, depth, p99_ms, samples, active);
+    }
+
+    /// Begin a graceful drain of the highest-id ready board, if any.
+    fn drain_one(
+        &mut self,
+        st: &mut EngineState,
+        now: f64,
+        depth: usize,
+        p99_ms: f64,
+        samples: usize,
+    ) {
+        let Some(id) = self.boards.iter().filter(|b| b.accepts(now)).map(|b| b.id).max() else {
+            return;
+        };
+        self.boards[id].begin_drain();
+        self.boards[id].try_finish_drain(now); // idle boards retire now
+        st.last_scale_s = now;
+        let active = self.active_count();
+        self.log_decision(st, now, "drain", "idle", id, depth, p99_ms, samples, active);
+    }
+
+    /// Append to the decision log and the `scaler` trace track.
+    #[allow(clippy::too_many_arguments)]
+    fn log_decision(
+        &self,
+        st: &mut EngineState,
+        t_s: f64,
+        action: &str,
+        reason: &str,
+        instance: usize,
+        queue_depth: usize,
+        window_p99_ms: f64,
+        window_samples: usize,
+        active_after: usize,
+    ) {
+        st.decisions.push(ScalerDecision {
+            t_s,
+            action: action.to_string(),
+            reason: reason.to_string(),
+            instance,
+            queue_depth,
+            window_p99_ms,
+            window_samples,
+            active_after,
+        });
+        let obs = self.core.obs();
+        if obs.is_enabled() {
+            let strack = obs.track("scaler");
+            obs.instant(
+                strack,
+                "scaler",
+                &format!("{action} board {instance}"),
+                t_s * 1e6,
+                Some(
+                    JsonObj::new()
+                        .str("action", action)
+                        .str("reason", reason)
+                        .int("instance", instance as u64)
+                        .int("queue_depth", queue_depth as u64)
+                        .num("window_p99_ms", window_p99_ms)
+                        .int("active_after", active_after as u64),
+                ),
+            );
+            obs.count(&format!("fleet.scaler.{action}"), 1);
+        }
+    }
+
+    /// Assemble the [`FleetReport`] (per-tenant sections, scaler log,
+    /// cost normalization) from the finished engine state.
+    fn finish_report(
+        &mut self,
+        st: EngineState,
+        first_event_s: f64,
+    ) -> Result<FleetReport, String> {
+        let served = st.lats.len() as u64;
+        let makespan = if first_event_s.is_finite() {
+            (st.last_done_s - first_event_s).max(0.0)
+        } else {
+            0.0
+        };
+        let mut per_tenant = Vec::new();
+        let mut shed = 0u64;
+        let mut shed_budget = 0u64;
+        for (ix, t) in self.tenants.iter().enumerate() {
+            let acc = &st.tacc[ix];
+            shed += acc.shed;
+            shed_budget += acc.reasons.get("budget-exceeded").copied().unwrap_or(0);
+            per_tenant.push(TenantReport {
+                name: t.name.clone(),
+                class: t.class,
+                slo_ms: t.slo_ms,
+                submitted: acc.submitted,
+                completed: acc.completed,
+                shed: acc.shed,
+                shed_reasons: acc.reasons.clone(),
+                latency: LatencySummary::from_latencies_s(&acc.lats),
+                slo_violations: acc.violations,
+            });
+        }
+        let lives: Vec<InstanceLife> = self
+            .boards
+            .iter()
+            .map(|b| InstanceLife {
+                id: b.id,
+                created_s: b.created_s,
+                ready_s: b.ready_at_s,
+                first_start_s: b.first_start_s,
+                retired_s: b.retired_s,
+                retirement: b.state().label().to_string(),
+            })
+            .collect();
+        let scaler = ScalerReport {
+            min_instances: self.auto.min_instances,
+            max_instances: self.auto.max_instances,
+            bring_up_s: self.auto.bring_up_s,
+            peak_active: st.peak_active,
+            decisions: st.decisions,
+            lives,
+        };
+        let board_dsp = self
+            .core
+            .models()
+            .iter()
+            .filter_map(|m| self.core.model_config(m))
+            .map(|c| resource::estimate(c).dsp as u64)
+            .max()
+            .unwrap_or(0);
+        let active_board_s: f64 = self
+            .boards
+            .iter()
+            .map(|b| b.retired_s.unwrap_or(st.last_done_s.max(b.created_s)) - b.created_s)
+            .sum();
+        let busy_s: f64 = self.boards.iter().map(|b| b.stats().busy_s).sum();
+        let energy_j = st.energy_j + FPGA_STATIC_W * (active_board_s - busy_s).max(0.0);
+        let mean_active_boards = if makespan > 0.0 {
+            active_board_s / makespan
+        } else {
+            0.0
+        };
+        let throughput_rps = if makespan > 0.0 {
+            served as f64 / makespan
+        } else {
+            0.0
+        };
+        let cost = CostReport {
+            board_dsp,
+            active_board_s,
+            mean_active_boards,
+            throughput_per_dsp: if board_dsp > 0 && mean_active_boards > 0.0 {
+                throughput_rps / (board_dsp as f64 * mean_active_boards)
+            } else {
+                0.0
+            },
+            energy_j,
+            mj_per_request: if served > 0 {
+                energy_j / served as f64 * 1e3
+            } else {
+                0.0
+            },
+        };
+        let mut model_configs = BTreeMap::new();
+        for m in self.core.models() {
+            if let Some(c) = self.core.model_config(m) {
+                model_configs.insert(m.to_string(), c.fingerprint());
+            }
+        }
+        let obs = self.core.obs();
+        obs.count("fleet.offered", st.offered);
+        let metrics = obs.recorder().map(|r| r.metrics_json());
+        Ok(FleetReport {
+            instances: st.peak_active,
+            offered: st.offered,
+            served,
+            shed,
+            shed_budget,
+            shed_queue_full: shed - shed_budget,
+            batches: st.batches,
+            latency: LatencySummary::from_latencies_s(&st.lats),
+            throughput_rps,
+            makespan_s: makespan,
+            per_model: st.per_model,
+            per_instance: self.boards.iter().map(|b| b.stats()).collect(),
+            cache: self.core.cache_stats(),
+            config_policy: self.core.options().config_policy.label().to_string(),
+            model_configs,
+            metrics,
+            per_tenant,
+            scaler: Some(scaler),
+            cost: Some(cost),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+    use crate::serve::loadgen::{modulated_arrivals, RateProfile};
+
+    fn nets() -> Vec<Network> {
+        vec![zoo::tiny_2d(), zoo::tiny_3d()]
+    }
+
+    fn small_auto() -> AutoscaleOptions {
+        AutoscaleOptions {
+            min_instances: 1,
+            max_instances: 4,
+            bring_up_s: 0.002,
+            check_every_s: 0.001,
+            window_s: 0.004,
+            up_queue_depth: 8,
+            p99_target_ms: 5.0,
+            min_window_samples: 8,
+            cooldown_s: 0.002,
+        }
+    }
+
+    fn burst(n: usize) -> Vec<Arrival> {
+        let profile = RateProfile::Constant { rps: n as f64 * 200.0 };
+        modulated_arrivals(0xA57, &profile, 0.005, &["tiny-2d", "tiny-3d"], "")
+    }
+
+    #[test]
+    fn conservation_and_determinism_hold() {
+        let work = burst(256);
+        let mut f = AutoFleet::new(nets(), FleetOptions::default(), small_auto(), vec![]).unwrap();
+        let r = f.run(&work, &[], &[], 7).unwrap();
+        assert_eq!(r.offered, work.len() as u64);
+        assert_eq!(r.offered, r.served + r.shed);
+        for t in &r.per_tenant {
+            assert!(t.conserved(), "{t:?}");
+        }
+        let mut g = AutoFleet::new(nets(), FleetOptions::default(), small_auto(), vec![]).unwrap();
+        let r2 = g.run(&work, &[], &[], 7).unwrap();
+        assert_eq!(r.to_json(), r2.to_json(), "byte-identical reports");
+        let d1 = r.scaler.as_ref().unwrap().decisions_json();
+        let d2 = r2.scaler.as_ref().unwrap().decisions_json();
+        assert_eq!(d1, d2, "byte-identical decision logs");
+    }
+
+    #[test]
+    fn scaler_grows_under_load_and_respects_max() {
+        let work = burst(512);
+        let mut f = AutoFleet::new(nets(), FleetOptions::default(), small_auto(), vec![]).unwrap();
+        let r = f.run(&work, &[], &[], 1).unwrap();
+        let s = r.scaler.as_ref().unwrap();
+        assert!(
+            s.decisions.iter().any(|d| d.action == "scale-up"),
+            "a burst at this size must trigger scale-up"
+        );
+        for d in &s.decisions {
+            assert!(d.active_after >= 1 && d.active_after <= 4, "{d:?}");
+        }
+        assert!(s.peak_active <= 4);
+        assert!(s.peak_active > 1);
+    }
+
+    #[test]
+    fn bring_up_delays_first_batch() {
+        let work = burst(512);
+        let mut f = AutoFleet::new(nets(), FleetOptions::default(), small_auto(), vec![]).unwrap();
+        let r = f.run(&work, &[], &[], 1).unwrap();
+        for l in &r.scaler.as_ref().unwrap().lives {
+            assert!((l.ready_s - l.created_s) >= 0.0);
+            if let Some(fs) = l.first_start_s {
+                assert!(fs >= l.ready_s, "board {} served during bring-up", l.id);
+            }
+        }
+    }
+
+    #[test]
+    fn failure_requeues_and_conserves() {
+        let work = burst(256);
+        let auto = AutoscaleOptions {
+            min_instances: 2,
+            ..small_auto()
+        };
+        let mut f = AutoFleet::new(nets(), FleetOptions::default(), auto, vec![]).unwrap();
+        let r = f.run(&work, &[], &[FailureSpec { t_s: 0.0005, instance: 1 }], 3).unwrap();
+        assert_eq!(r.offered, r.served + r.shed);
+        let s = r.scaler.as_ref().unwrap();
+        let failed = s.lives.iter().find(|l| l.id == 1).unwrap();
+        assert_eq!(failed.retirement, "failed");
+        assert!(failed.retired_s.is_some());
+    }
+
+    #[test]
+    fn closed_loop_accounts_every_submission() {
+        let spec = ClosedLoopSpec {
+            clients: 6,
+            think_s: 0.001,
+            requests_per_client: 5,
+            model: "tiny-2d".into(),
+            tenant: String::new(),
+        };
+        let mut f = AutoFleet::new(nets(), FleetOptions::default(), small_auto(), vec![]).unwrap();
+        let r = f.run(&[], &[spec], &[], 11).unwrap();
+        assert_eq!(r.offered, 30, "clients x requests_per_client submissions");
+        assert_eq!(r.offered, r.served + r.shed);
+    }
+
+    #[test]
+    fn rejects_bad_configurations() {
+        let bad_auto = AutoscaleOptions {
+            min_instances: 0,
+            ..AutoscaleOptions::default()
+        };
+        assert!(AutoFleet::new(nets(), FleetOptions::default(), bad_auto, vec![]).is_err());
+        let sharded = FleetOptions {
+            shard_models: true,
+            ..FleetOptions::default()
+        };
+        assert!(AutoFleet::new(nets(), sharded, AutoscaleOptions::default(), vec![]).is_err());
+        let mut f = AutoFleet::new(nets(), FleetOptions::default(), small_auto(), vec![]).unwrap();
+        assert!(f.run(&[Arrival::new(0.0, "nope")], &[], &[], 0).is_err());
+        let mut tagged = Arrival::new(0.0, "tiny-2d");
+        tagged.tenant = "ghost".into();
+        assert!(f.run(&[tagged], &[], &[], 0).is_err(), "unknown tenant");
+    }
+}

@@ -15,10 +15,16 @@
 //! An unbounded cache ([`PlanCache::new`]) suits the classic key space
 //! (models × distinct batch sizes). Tuned fleets multiply fingerprints
 //! — every per-model [`crate::serve::ConfigPolicy`] choice is its own
-//! key — so [`PlanCache::with_capacity`] bounds the cache with
-//! deterministic least-recently-used eviction: the same lookup
-//! sequence always holds the same plans, which keeps repeated serving
-//! runs byte-for-byte reproducible.
+//! key, and the fleet-tuned policy
+//! ([`crate::serve::ConfigPolicy::TunedFleet`]) may assign a different
+//! config to every shard of a heterogeneous mix — so
+//! [`PlanCache::with_capacity`] bounds the cache with deterministic
+//! least-recently-used eviction: the same lookup sequence always holds
+//! the same plans, which keeps repeated serving runs byte-for-byte
+//! reproducible. The autoscaled fleet ([`crate::serve::AutoFleet`])
+//! shares its inner fleet's cache, so boards provisioned mid-run by
+//! the scaler serve from already-compiled plans and bring-up latency
+//! models *reconfiguration*, not recompilation.
 
 use std::collections::BTreeMap;
 

@@ -39,17 +39,20 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
-use crate::accel::dse::tune::{tune_network, TuneOptions};
+use crate::accel::dse::tune::{tune_fleet, tune_network, TuneOptions};
 use crate::accel::AccelConfig;
 use crate::coordinator::BatchPolicy;
 use crate::dcnn::Network;
+use crate::energy::fpga_watts;
 use crate::graph::simulate_plan;
 use crate::obs::Obs;
 use crate::report::json::{array, JsonObj};
 
+use super::autoscale::{CostReport, ScalerReport};
 use super::cache::{CacheStats, PlanCache};
 use super::instance::{Instance, InstanceStats};
 use super::loadgen::{Arrival, LatencySummary};
+use super::tenant::{tenants_to_json, TenantReport};
 
 /// Plan-cache capacity of a fleet. Generous against the classic key
 /// space (models × distinct batch sizes), but a hard bound once tuned
@@ -73,15 +76,25 @@ pub enum ConfigPolicy {
     /// each model shard runs its own operating point. Every registered
     /// model must have an entry.
     Explicit(BTreeMap<String, AccelConfig>),
+    /// Fleet-level autotuning ([`crate::accel::dse::tune::tune_fleet`]):
+    /// the DSE considers the *whole* registered model mix at once and
+    /// either assigns each model its own tuned config (a heterogeneous
+    /// fleet) or falls back to the best single uniform config when
+    /// uniformity wins cost-normalized throughput (req/s per DSP).
+    /// Guaranteed never worse than the best uniform config, and
+    /// identical to [`ConfigPolicy::Tuned`] for a single-model fleet.
+    TunedFleet,
 }
 
 impl ConfigPolicy {
-    /// Short label for reports (`"paper"` / `"tuned"` / `"explicit"`).
+    /// Short label for reports (`"paper"` / `"tuned"` / `"explicit"` /
+    /// `"tuned-fleet"`).
     pub fn label(&self) -> &'static str {
         match self {
             ConfigPolicy::Paper => "paper",
             ConfigPolicy::Tuned => "tuned",
             ConfigPolicy::Explicit(_) => "explicit",
+            ConfigPolicy::TunedFleet => "tuned-fleet",
         }
     }
 
@@ -107,9 +120,47 @@ impl ConfigPolicy {
                 .get(net.name)
                 .cloned()
                 .ok_or_else(|| format!("no explicit config for model '{}'", net.name))?,
+            // a single-model "fleet" — degenerates to the per-network
+            // tuner by construction (tested in tests/prop_dse.rs)
+            ConfigPolicy::TunedFleet => {
+                let mut all = self.resolve_all(std::slice::from_ref(net), batch)?;
+                all.remove(net.name)
+                    .ok_or_else(|| format!("fleet tuner returned nothing for '{}'", net.name))?
+            }
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Resolve accelerator configurations for a whole model mix at
+    /// once. For every policy except [`ConfigPolicy::TunedFleet`] this
+    /// is [`ConfigPolicy::resolve`] per model; the fleet-tuned policy
+    /// hands the full mix to [`tune_fleet`] so the DSE can trade
+    /// per-model specialization against the best uniform config on
+    /// cost-normalized throughput.
+    pub fn resolve_all(
+        &self,
+        nets: &[Network],
+        batch: usize,
+    ) -> Result<BTreeMap<String, AccelConfig>, String> {
+        if let ConfigPolicy::TunedFleet = self {
+            let topts = TuneOptions {
+                batch,
+                ..TuneOptions::default()
+            };
+            let ft = tune_fleet(nets, &topts).map_err(|e| format!("fleet tuning: {e}"))?;
+            let mut out = BTreeMap::new();
+            for (name, tuned) in &ft.assignments {
+                tuned.cfg.validate()?;
+                out.insert(name.clone(), tuned.cfg.clone());
+            }
+            return Ok(out);
+        }
+        let mut out = BTreeMap::new();
+        for net in nets {
+            out.insert(net.name.to_string(), self.resolve(net, batch)?);
+        }
+        Ok(out)
     }
 }
 
@@ -195,6 +246,17 @@ pub struct FleetReport {
     /// ([`crate::obs::Recorder::metrics_json`]); `None` when the fleet
     /// ran without observability (the historical report is unchanged).
     pub metrics: Option<String>,
+    /// Per-tenant accounting (submitted/completed/shed with tagged
+    /// reasons, latency, SLO violations). Empty for the classic
+    /// single-tenant [`Fleet::run`]; populated by the multi-tenant
+    /// [`crate::serve::AutoFleet`].
+    pub per_tenant: Vec<TenantReport>,
+    /// Autoscaler decision log and instance lifecycle records; `None`
+    /// for fixed-size fleets.
+    pub scaler: Option<ScalerReport>,
+    /// Cost-normalized figures (throughput per DSP, mJ/request);
+    /// `None` for the classic fixed fleet.
+    pub cost: Option<CostReport>,
 }
 
 impl FleetReport {
@@ -255,6 +317,25 @@ impl FleetReport {
                 s.batches, s.requests, s.busy_s
             ));
         }
+        for t in &self.per_tenant {
+            let slo = if t.slo_ms.is_finite() {
+                format!("{:.1} ms", t.slo_ms)
+            } else {
+                "best-effort".to_string()
+            };
+            out.push_str(&format!(
+                "  tenant {} (class {}, slo {slo}): {} submitted | {} completed | {} shed | \
+                 p99 {:.3} ms | {} slo violations\n",
+                t.name, t.class, t.submitted, t.completed, t.shed, t.latency.p99_ms,
+                t.slo_violations
+            ));
+        }
+        if let Some(s) = &self.scaler {
+            out.push_str(&s.render());
+        }
+        if let Some(c) = &self.cost {
+            out.push_str(&c.render());
+        }
         out
     }
 
@@ -307,6 +388,15 @@ impl FleetReport {
             .raw("model_configs", &array(&model_configs))
             .raw("per_model", &array(&per_model))
             .raw("per_instance", &array(&per_instance));
+        if !self.per_tenant.is_empty() {
+            obj = obj.raw("per_tenant", &tenants_to_json(&self.per_tenant));
+        }
+        if let Some(s) = &self.scaler {
+            obj = obj.raw("scaler", &s.to_json().render());
+        }
+        if let Some(c) = &self.cost {
+            obj = obj.raw("cost", &c.to_json().render());
+        }
         if let Some(m) = &self.metrics {
             obj = obj.raw("metrics", m);
         }
@@ -351,6 +441,10 @@ pub struct Fleet {
     /// the event loop's hot path never re-simulates a plan it has
     /// already timed (the result is deterministic per key).
     sim_memo_s: BTreeMap<String, f64>,
+    /// Memoized per-batch energy (joules) per plan-cache key, filled
+    /// lazily by [`Fleet::batch_energy_j`] for cost-normalized
+    /// reporting; deterministic per key like the latency memo.
+    energy_memo_j: BTreeMap<String, f64>,
     /// Per-layer step metrics per plan-cache key, kept only when
     /// observability is on (feeds the nested layer spans of each
     /// dispatched batch).
@@ -417,17 +511,15 @@ impl Fleet {
             })
             .collect();
         let max_batch = opts.policy.max_batch;
-        let mut model_cfgs = BTreeMap::new();
-        for (name, net) in &map {
-            let cfg = opts.config_policy.resolve(net, max_batch)?;
-            model_cfgs.insert(name.clone(), cfg);
-        }
+        let nets: Vec<Network> = map.values().cloned().collect();
+        let model_cfgs = opts.config_policy.resolve_all(&nets, max_batch)?;
         let mut fleet = Fleet {
             networks: map,
             instances,
             cache: PlanCache::with_capacity(FLEET_PLAN_CACHE_CAP),
             model_cfgs,
             sim_memo_s: BTreeMap::new(),
+            energy_memo_j: BTreeMap::new(),
             step_memo: BTreeMap::new(),
             key_buf: String::new(),
             opts,
@@ -529,6 +621,48 @@ impl Fleet {
         Ok(lat)
     }
 
+    /// Simulated accelerator energy (joules) for one batch of `bsize`
+    /// requests against `model`: per-layer activity-scaled power
+    /// ([`crate::energy::fpga_watts`]) integrated over each layer's
+    /// simulated duration. Memoized per plan-cache key; feeds the
+    /// autoscaled fleet's mJ/request cost report.
+    pub fn batch_energy_j(&mut self, model: &str, bsize: usize) -> Result<f64, String> {
+        let net = self
+            .networks
+            .get(model)
+            .ok_or_else(|| format!("unknown model '{model}'"))?;
+        let mut cfg = self
+            .model_cfgs
+            .get(model)
+            .cloned()
+            .ok_or_else(|| format!("no resolved config for model '{model}'"))?;
+        cfg.batch = bsize.max(1);
+        let key = PlanCache::key(net.name, &cfg);
+        if let Some(&e) = self.energy_memo_j.get(&key) {
+            return Ok(e);
+        }
+        let plan = self
+            .cache
+            .get_or_compile_keyed_obs(&key, &cfg, net, &self.obs)?;
+        let metrics = simulate_plan(&plan);
+        let energy: f64 = metrics
+            .steps
+            .iter()
+            .map(|s| fpga_watts(&cfg, s) * s.time_s())
+            .sum();
+        if self.energy_memo_j.len() >= 4 * FLEET_PLAN_CACHE_CAP {
+            self.energy_memo_j.clear();
+        }
+        self.energy_memo_j.insert(key, energy);
+        Ok(energy)
+    }
+
+    /// The fleet's observability handle (shared with the autoscaled
+    /// engine so both narrate onto one recorder).
+    pub(crate) fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
     /// Smallest backlog among instances hosting `model` at `now_s`
     /// (`f64::INFINITY` when no instance hosts it).
     fn min_backlog_s(&self, model: &str, now_s: f64) -> f64 {
@@ -590,8 +724,9 @@ impl Fleet {
     /// batch span on the instance's track, nested per-layer cycle
     /// spans (cycles, binding resource, PE utilization — the per-batch
     /// Fig. 6 answer), and one arrival→completion span per request on
-    /// the `requests` track, keyed by trace id.
-    fn trace_batch(
+    /// the `requests` track, keyed by trace id. `pub(crate)` so the
+    /// autoscaled engine reuses the exact span scheme.
+    pub(crate) fn trace_batch(
         &self,
         model: &str,
         idx: usize,
@@ -662,23 +797,34 @@ impl Fleet {
 
     /// Record one shed arrival: an instant event on the fleet track
     /// tagged with the shed *reason*, plus the matching
-    /// `fleet.shed.<reason>` counter.
-    fn trace_shed(&self, model: &str, trace_id: u64, t_s: f64, reason: &str) {
+    /// `fleet.shed.<reason>` counter. `tenant` is empty for the
+    /// classic single-tenant fleet (no arg emitted) and names the
+    /// billed tenant under the autoscaled engine.
+    pub(crate) fn trace_shed(
+        &self,
+        model: &str,
+        trace_id: u64,
+        t_s: f64,
+        reason: &str,
+        tenant: &str,
+    ) {
         if !self.obs.is_enabled() {
             return;
         }
         let ftrack = self.obs.track("fleet");
+        let mut args = JsonObj::new()
+            .int("trace_id", trace_id)
+            .str("model", model)
+            .str("reason", reason);
+        if !tenant.is_empty() {
+            args = args.str("tenant", tenant);
+        }
         self.obs.instant(
             ftrack,
             "shed",
             &format!("shed {model} #{trace_id}"),
             t_s * 1e6,
-            Some(
-                JsonObj::new()
-                    .int("trace_id", trace_id)
-                    .str("model", model)
-                    .str("reason", reason),
-            ),
+            Some(args),
         );
         self.obs.count(&format!("fleet.shed.{reason}"), 1);
     }
@@ -734,14 +880,14 @@ impl Fleet {
             // start this request inside the latency budget
             if self.min_backlog_s(&a.model, a.t_s) > budget {
                 acc.shed_budget += 1;
-                self.trace_shed(&a.model, tid, a.t_s, "budget-exceeded");
+                self.trace_shed(&a.model, tid, a.t_s, "budget-exceeded", "");
                 continue;
             }
             let q = pending.entry(a.model.clone()).or_default();
             // admission control: bounded per-model pending queue
             if q.len() >= queue_cap {
                 acc.shed_queue += 1;
-                self.trace_shed(&a.model, tid, a.t_s, "queue-full");
+                self.trace_shed(&a.model, tid, a.t_s, "queue-full", "");
                 continue;
             }
             q.push_back((a.t_s, tid));
@@ -788,6 +934,9 @@ impl Fleet {
             config_policy: self.opts.config_policy.label().to_string(),
             model_configs,
             metrics,
+            per_tenant: Vec::new(),
+            scaler: None,
+            cost: None,
         })
     }
 }
@@ -968,10 +1117,7 @@ mod tests {
         .is_err());
         let mut f = fleet(1);
         assert!(f
-            .run(&[Arrival {
-                t_s: 0.0,
-                model: "nope".into()
-            }])
+            .run(&[Arrival::new(0.0, "nope")])
             .is_err());
     }
 

@@ -11,8 +11,44 @@
 //! [`Instance::backlog_s`] / [`Instance::queue_depth`] to route each
 //! batch to the least-loaded board and to shed load past the latency
 //! budget.
+//!
+//! For the autoscaled fleet ([`crate::serve::AutoFleet`]) an instance
+//! additionally carries a lifecycle: it is created at some simulated
+//! time, becomes able to accept batches only after its *bring-up*
+//! window (FPGA bitstream reconfiguration plus DDR warm-up — the cost
+//! that makes scale-up policy a genuine tradeoff), can be put into a
+//! graceful *drain* (no new batches, in-flight work runs to
+//! completion), and can *fail* (in-flight work is lost to the board
+//! and must be re-routed or shed by the scheduler — never silently
+//! dropped). [`Instance::new`] keeps the legacy fixed-fleet semantics:
+//! active from t = 0 with zero bring-up.
 
 use std::collections::VecDeque;
+
+/// Lifecycle state of one instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Accepting batches (once past its bring-up window).
+    Active,
+    /// Graceful shutdown: no new batches; in-flight batches complete.
+    Draining,
+    /// Drain finished; the board is released.
+    Drained,
+    /// Failed mid-run; in-flight work was lost to the board.
+    Failed,
+}
+
+impl InstanceState {
+    /// Lower-case label used in reports and traces.
+    pub fn label(&self) -> &'static str {
+        match self {
+            InstanceState::Active => "active",
+            InstanceState::Draining => "draining",
+            InstanceState::Drained => "drained",
+            InstanceState::Failed => "failed",
+        }
+    }
+}
 
 /// Lifetime counters of one instance.
 #[derive(Clone, Copy, Debug, Default)]
@@ -35,28 +71,69 @@ pub struct Instance {
     pub models: Vec<String>,
     /// Simulated time at which every accepted batch has completed.
     pub busy_until_s: f64,
+    /// Simulated time this board was provisioned.
+    pub created_s: f64,
+    /// Simulated time the board finishes bring-up and may accept its
+    /// first batch (`created_s` + bring-up latency).
+    pub ready_at_s: f64,
+    /// When the first batch actually started executing, if any — the
+    /// bring-up accounting hook (`first_start_s >= ready_at_s` always).
+    pub first_start_s: Option<f64>,
+    /// When the board left service (drain completed or failure), if it
+    /// has.
+    pub retired_s: Option<f64>,
     /// In-flight batches as `(completion time, batch size)`, oldest
     /// first; pruned as simulated time advances.
     inflight: VecDeque<(f64, usize)>,
+    state: InstanceState,
     stats: InstanceStats,
 }
 
 impl Instance {
-    /// A fresh, idle instance. `models` lists the networks it hosts;
-    /// pass an empty vec to host every registered model.
+    /// A fresh, idle instance, active from t = 0 with no bring-up —
+    /// the legacy fixed-fleet semantics. `models` lists the networks
+    /// it hosts; pass an empty vec to host every registered model.
     pub fn new(id: usize, models: Vec<String>) -> Instance {
+        Instance::with_bring_up(id, models, 0.0, 0.0)
+    }
+
+    /// A board provisioned at simulated `created_s` that accepts its
+    /// first batch only after `bring_up_s` seconds of reconfiguration.
+    pub fn with_bring_up(
+        id: usize,
+        models: Vec<String>,
+        created_s: f64,
+        bring_up_s: f64,
+    ) -> Instance {
         Instance {
             id,
             models,
-            busy_until_s: 0.0,
+            busy_until_s: created_s + bring_up_s,
+            created_s,
+            ready_at_s: created_s + bring_up_s,
+            first_start_s: None,
+            retired_s: None,
             inflight: VecDeque::new(),
+            state: InstanceState::Active,
             stats: InstanceStats::default(),
         }
+    }
+
+    /// Current lifecycle state.
+    pub fn state(&self) -> InstanceState {
+        self.state
     }
 
     /// Whether this instance hosts `model`.
     pub fn supports(&self, model: &str) -> bool {
         self.models.is_empty() || self.models.iter().any(|m| m == model)
+    }
+
+    /// Whether the board may accept a new batch at simulated `now_s`:
+    /// it must be [`InstanceState::Active`] and past its bring-up
+    /// window.
+    pub fn accepts(&self, now_s: f64) -> bool {
+        self.state == InstanceState::Active && now_s >= self.ready_at_s
     }
 
     /// Seconds of work already queued ahead of a batch arriving at
@@ -71,12 +148,34 @@ impl Instance {
         self.inflight.iter().map(|&(_, n)| n).sum()
     }
 
+    /// Batches admitted but not yet completed at simulated `now_s` —
+    /// the late-binding dispatcher's eligibility signal (a board with
+    /// ≤ 1 in-flight batch keeps its pipeline fed without building a
+    /// head-of-line queue).
+    pub fn inflight_batches(&mut self, now_s: f64) -> usize {
+        self.prune(now_s);
+        self.inflight.len()
+    }
+
     /// Execute a batch of `bsize` requests taking `latency_s` of
     /// accelerator time, submitted at simulated `now_s`. The batch
     /// starts when the instance frees up; returns its completion time.
     pub fn run_batch(&mut self, now_s: f64, bsize: usize, latency_s: f64) -> f64 {
+        debug_assert!(
+            self.state == InstanceState::Active,
+            "batch sent to a {} board",
+            self.state.label()
+        );
         self.prune(now_s);
         let start = self.busy_until_s.max(now_s);
+        debug_assert!(
+            start >= self.ready_at_s,
+            "batch started during bring-up ({start} < {})",
+            self.ready_at_s
+        );
+        if self.first_start_s.is_none() {
+            self.first_start_s = Some(start);
+        }
         let done = start + latency_s;
         self.busy_until_s = done;
         self.inflight.push_back((done, bsize));
@@ -84,6 +183,36 @@ impl Instance {
         self.stats.requests += bsize as u64;
         self.stats.busy_s += latency_s;
         done
+    }
+
+    /// Begin a graceful drain: the board accepts no further batches
+    /// but every in-flight batch runs to completion. No-op unless the
+    /// board is [`InstanceState::Active`].
+    pub fn begin_drain(&mut self) {
+        if self.state == InstanceState::Active {
+            self.state = InstanceState::Draining;
+        }
+    }
+
+    /// Complete a drain if all in-flight work has finished by `now_s`.
+    /// Returns true when the board transitioned to
+    /// [`InstanceState::Drained`] (now or earlier).
+    pub fn try_finish_drain(&mut self, now_s: f64) -> bool {
+        if self.state == InstanceState::Draining && self.inflight_batches(now_s) == 0 {
+            self.state = InstanceState::Drained;
+            self.retired_s = Some(now_s);
+        }
+        self.state == InstanceState::Drained
+    }
+
+    /// Fail the board at `now_s`: in-flight batch records are cleared
+    /// (the *scheduler* owns the requests that were aboard and must
+    /// re-route or shed them) and the board leaves service permanently.
+    pub fn fail(&mut self, now_s: f64) {
+        self.inflight.clear();
+        self.busy_until_s = now_s;
+        self.state = InstanceState::Failed;
+        self.retired_s = Some(now_s);
     }
 
     /// Lifetime counters.
@@ -145,5 +274,60 @@ mod tests {
         assert_eq!(i.queue_depth(0.005), 6);
         assert_eq!(i.queue_depth(0.015), 2, "first batch completed");
         assert_eq!(i.queue_depth(0.025), 0, "all drained");
+        assert_eq!(i.inflight_batches(0.005), 2);
+        assert_eq!(i.inflight_batches(0.015), 1);
+    }
+
+    #[test]
+    fn bring_up_gates_acceptance_and_first_start() {
+        let mut i = Instance::with_bring_up(3, vec![], 1.0, 0.5);
+        assert!(!i.accepts(1.0), "still reconfiguring");
+        assert!(!i.accepts(1.499));
+        assert!(i.accepts(1.5));
+        // a batch "submitted" at 1.2 cannot start before ready_at_s:
+        // busy_until_s is initialized to the bring-up deadline
+        let done = i.run_batch(1.2, 2, 0.1);
+        assert!((done - 1.6).abs() < 1e-12);
+        assert_eq!(i.first_start_s, Some(1.5));
+        assert_eq!(i.ready_at_s, 1.5);
+        // legacy constructor: ready immediately
+        let legacy = Instance::new(0, vec![]);
+        assert!(legacy.accepts(0.0));
+        assert_eq!(legacy.ready_at_s, 0.0);
+    }
+
+    #[test]
+    fn drain_waits_for_inflight_then_retires() {
+        let mut i = Instance::new(0, vec![]);
+        i.run_batch(0.0, 4, 0.010);
+        i.begin_drain();
+        assert_eq!(i.state(), InstanceState::Draining);
+        assert!(!i.accepts(0.005), "draining boards accept nothing");
+        assert!(!i.try_finish_drain(0.005), "batch still aboard");
+        assert!(i.try_finish_drain(0.010), "batch completed — drained");
+        assert_eq!(i.state(), InstanceState::Drained);
+        assert_eq!(i.retired_s, Some(0.010));
+        // idempotent once drained
+        assert!(i.try_finish_drain(0.020));
+        // drain of an already-failed board is a no-op
+        let mut f = Instance::new(1, vec![]);
+        f.fail(0.0);
+        f.begin_drain();
+        assert_eq!(f.state(), InstanceState::Failed);
+    }
+
+    #[test]
+    fn failure_clears_inflight_and_retires() {
+        let mut i = Instance::new(0, vec![]);
+        i.run_batch(0.0, 4, 0.010);
+        i.run_batch(0.0, 2, 0.010);
+        i.fail(0.005);
+        assert_eq!(i.state(), InstanceState::Failed);
+        assert!(!i.accepts(0.005));
+        assert_eq!(i.inflight_batches(0.005), 0, "wreckage belongs to the scheduler");
+        assert_eq!(i.retired_s, Some(0.005));
+        assert_eq!(i.backlog_s(0.005), 0.0);
+        // counters keep what it did serve before failing
+        assert_eq!(i.stats().batches, 2);
     }
 }

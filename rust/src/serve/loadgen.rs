@@ -1,4 +1,4 @@
-//! Deterministic open-loop load generation and latency summaries.
+//! Deterministic load generation and latency summaries.
 //!
 //! The serving harness drives the fleet with an *open-loop* arrival
 //! process: request timestamps are drawn up front from a seeded
@@ -9,6 +9,23 @@
 //! tail latencies the p99 column exists to expose. Everything is
 //! seeded through [`crate::util::prng::Prng`], so a (seed, rps, n,
 //! models) tuple always produces the identical workload.
+//!
+//! Beyond the constant-rate process, [`modulated_arrivals`] draws a
+//! *non-homogeneous* Poisson process against a [`RateProfile`]
+//! (diurnal swell, flash crowd) by Lewis–Shedler thinning: candidates
+//! are drawn at the profile's peak rate and accepted with probability
+//! `rate(t)/peak`, which keeps the draw exact and fully deterministic
+//! in the seed. Arrivals carry a tenant tag for the multi-tenant
+//! fleet ([`crate::serve::AutoFleet`]); the legacy generators leave it
+//! empty (the fleet maps an empty tag to its sole/default tenant).
+//!
+//! [`ClosedLoopSpec`] describes the one *closed-loop* load shape the
+//! autoscaled engine supports: a pool of clients that each submit,
+//! wait for their response (or shed notice), think for a fixed time,
+//! and submit again. Closed-loop clients model interactive sessions —
+//! their offered load backs off exactly when the fleet congests, which
+//! is why they are kept separate from (and composable with) the
+//! open-loop streams that measure capacity honestly.
 
 use crate::util::prng::Prng;
 use crate::util::stats;
@@ -20,6 +37,176 @@ pub struct Arrival {
     pub t_s: f64,
     /// Model (network) name the request targets.
     pub model: String,
+    /// Tenant the request bills to. Empty means "the default tenant":
+    /// single-tenant fleets accept it as-is, multi-tenant fleets
+    /// require a registered tenant name.
+    pub tenant: String,
+}
+
+impl Arrival {
+    /// An arrival for the default (empty) tenant.
+    pub fn new(t_s: f64, model: &str) -> Arrival {
+        Arrival {
+            t_s,
+            model: model.to_string(),
+            tenant: String::new(),
+        }
+    }
+}
+
+/// Time-varying offered-load shape for [`modulated_arrivals`]. Rates
+/// are in requests/second of simulated time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RateProfile {
+    /// Homogeneous Poisson at a fixed rate (the classic generator,
+    /// expressed as a profile).
+    Constant {
+        /// Arrival rate.
+        rps: f64,
+    },
+    /// A smooth day/night swell: rate follows a raised cosine from
+    /// `base_rps` (trough) to `peak_rps` (crest) with period
+    /// `period_s`, starting at the trough.
+    Diurnal {
+        /// Trough arrival rate.
+        base_rps: f64,
+        /// Crest arrival rate (must be ≥ `base_rps`).
+        peak_rps: f64,
+        /// Seconds per full trough→crest→trough cycle.
+        period_s: f64,
+    },
+    /// A flash crowd: `base_rps` everywhere except a step to
+    /// `base_rps · spike_mult` during `[start_s, start_s + duration_s)`.
+    FlashCrowd {
+        /// Baseline arrival rate.
+        base_rps: f64,
+        /// Rate multiplier during the spike (must be ≥ 1).
+        spike_mult: f64,
+        /// Spike onset, seconds.
+        start_s: f64,
+        /// Spike length, seconds.
+        duration_s: f64,
+    },
+}
+
+impl RateProfile {
+    /// Instantaneous arrival rate at simulated time `t_s`.
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        match *self {
+            RateProfile::Constant { rps } => rps,
+            RateProfile::Diurnal {
+                base_rps,
+                peak_rps,
+                period_s,
+            } => {
+                let phase = 2.0 * std::f64::consts::PI * t_s / period_s;
+                base_rps + (peak_rps - base_rps) * 0.5 * (1.0 - phase.cos())
+            }
+            RateProfile::FlashCrowd {
+                base_rps,
+                spike_mult,
+                start_s,
+                duration_s,
+            } => {
+                if t_s >= start_s && t_s < start_s + duration_s {
+                    base_rps * spike_mult
+                } else {
+                    base_rps
+                }
+            }
+        }
+    }
+
+    /// The profile's peak rate — the thinning envelope of
+    /// [`modulated_arrivals`].
+    pub fn peak_rps(&self) -> f64 {
+        match *self {
+            RateProfile::Constant { rps } => rps,
+            RateProfile::Diurnal { peak_rps, .. } => peak_rps,
+            RateProfile::FlashCrowd {
+                base_rps,
+                spike_mult,
+                ..
+            } => base_rps * spike_mult,
+        }
+    }
+
+    /// Reject malformed profiles (non-positive or non-finite rates,
+    /// inverted diurnal bounds, a sub-unity spike multiplier).
+    pub fn validate(&self) -> Result<(), String> {
+        let ok = |x: f64| x.is_finite() && x > 0.0;
+        match *self {
+            RateProfile::Constant { rps } => {
+                if !ok(rps) {
+                    return Err(format!("constant rate must be positive (got {rps})"));
+                }
+            }
+            RateProfile::Diurnal {
+                base_rps,
+                peak_rps,
+                period_s,
+            } => {
+                if !ok(base_rps) || !ok(peak_rps) || !ok(period_s) {
+                    return Err("diurnal rates and period must be positive".into());
+                }
+                if peak_rps < base_rps {
+                    return Err(format!("diurnal peak {peak_rps} below base {base_rps}"));
+                }
+            }
+            RateProfile::FlashCrowd {
+                base_rps,
+                spike_mult,
+                start_s,
+                duration_s,
+            } => {
+                if !ok(base_rps) || !spike_mult.is_finite() || spike_mult < 1.0 {
+                    return Err("flash crowd needs base > 0 and spike_mult >= 1".into());
+                }
+                if !start_s.is_finite() || start_s < 0.0 || !ok(duration_s) {
+                    return Err("flash crowd spike window must be non-negative/positive".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A pool of closed-loop clients: each submits one request, waits for
+/// its completion (or shed notice), thinks for `think_s` simulated
+/// seconds, and submits the next — `requests_per_client` submissions
+/// in total per client. The autoscaled fleet engine
+/// ([`crate::serve::AutoFleet::run`]) executes the dynamics; initial
+/// submission times are staggered deterministically from the run seed
+/// so the pool does not arrive as one synchronized burst.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClosedLoopSpec {
+    /// Number of concurrent clients in the pool.
+    pub clients: usize,
+    /// Think time between receiving a response and the next submission.
+    pub think_s: f64,
+    /// Submissions per client over the run (shed submissions count —
+    /// the client observed an answer, thought, and moved on).
+    pub requests_per_client: usize,
+    /// Model every client in this pool targets.
+    pub model: String,
+    /// Tenant the pool bills to (empty = default tenant).
+    pub tenant: String,
+}
+
+impl ClosedLoopSpec {
+    /// Reject empty pools and non-finite think times.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.clients == 0 || self.requests_per_client == 0 {
+            return Err("closed-loop pool needs clients and requests_per_client > 0".into());
+        }
+        if !self.think_s.is_finite() || self.think_s < 0.0 {
+            return Err(format!("think_s must be finite and >= 0 (got {})", self.think_s));
+        }
+        if self.model.is_empty() {
+            return Err("closed-loop pool needs a model".into());
+        }
+        Ok(())
+    }
 }
 
 /// Draw `n` Poisson arrivals at `rps` requests/second, each targeting
@@ -40,8 +227,69 @@ pub fn poisson_arrivals(seed: u64, rps: f64, n: usize, models: &[&str]) -> Vec<A
     for _ in 0..n {
         t += -(1.0 - rng.f64()).ln() / rps;
         let model = models[rng.below(models.len())].to_string();
-        out.push(Arrival { t_s: t, model });
+        out.push(Arrival {
+            t_s: t,
+            model,
+            tenant: String::new(),
+        });
     }
+    out
+}
+
+/// Draw a non-homogeneous Poisson process against `profile` over
+/// `[0, horizon_s)` by Lewis–Shedler thinning: candidate gaps are
+/// exponential at the profile's peak rate and each candidate at time
+/// `t` is kept with probability `rate_at(t) / peak`. Kept arrivals
+/// target a uniformly chosen model and are tagged with `tenant`.
+/// Deterministic in `seed`; the arrival *count* varies with the seed
+/// (it is the process, not a quota, that is fixed).
+///
+/// # Panics
+/// Panics if `models` is empty, the profile fails
+/// [`RateProfile::validate`], or `horizon_s` is not positive/finite.
+pub fn modulated_arrivals(
+    seed: u64,
+    profile: &RateProfile,
+    horizon_s: f64,
+    models: &[&str],
+    tenant: &str,
+) -> Vec<Arrival> {
+    assert!(!models.is_empty(), "need at least one model");
+    assert!(horizon_s > 0.0 && horizon_s.is_finite(), "horizon must be positive");
+    profile.validate().expect("valid rate profile");
+    let peak = profile.peak_rps();
+    let mut rng = Prng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::new();
+    loop {
+        t += -(1.0 - rng.f64()).ln() / peak;
+        if t >= horizon_s {
+            break;
+        }
+        if rng.f64() < profile.rate_at(t) / peak {
+            let model = models[rng.below(models.len())].to_string();
+            out.push(Arrival {
+                t_s: t,
+                model,
+                tenant: tenant.to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Merge several arrival streams (e.g. one per tenant) into the single
+/// time-sorted workload [`crate::serve::Fleet::run`] and
+/// [`crate::serve::AutoFleet::run`] expect. Ties break on
+/// (tenant, model) so the merge is a pure function of its inputs.
+pub fn merge_arrivals(streams: Vec<Vec<Arrival>>) -> Vec<Arrival> {
+    let mut out: Vec<Arrival> = streams.into_iter().flatten().collect();
+    out.sort_by(|a, b| {
+        a.t_s
+            .total_cmp(&b.t_s)
+            .then_with(|| a.tenant.cmp(&b.tenant))
+            .then_with(|| a.model.cmp(&b.model))
+    });
     out
 }
 
@@ -71,6 +319,7 @@ pub fn periodic_arrivals(
         .map(|i| Arrival {
             t_s: i as f64 * period_s + rng.f64() * jitter_frac * period_s,
             model: model.to_string(),
+            tenant: String::new(),
         })
         .collect()
 }
@@ -118,6 +367,7 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.windows(2).all(|w| w[0].t_s <= w[1].t_s));
         assert!(a.iter().all(|x| x.t_s > 0.0));
+        assert!(a.iter().all(|x| x.tenant.is_empty()), "legacy arrivals are untagged");
     }
 
     #[test]
@@ -146,6 +396,98 @@ mod tests {
         for m in ["x", "y", "z"] {
             assert!(a.iter().any(|r| r.model == m), "{m} never drawn");
         }
+    }
+
+    #[test]
+    fn modulated_constant_matches_poisson_statistics() {
+        let profile = RateProfile::Constant { rps: 200.0 };
+        let a = modulated_arrivals(9, &profile, 20.0, &["m"], "t0");
+        let b = modulated_arrivals(9, &profile, 20.0, &["m"], "t0");
+        assert_eq!(a, b, "deterministic in the seed");
+        assert!(a.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+        assert!(a.iter().all(|x| x.tenant == "t0" && x.t_s < 20.0));
+        // a constant profile never thins: the count is a plain Poisson
+        // draw at rps·horizon = 4000 expected
+        let n = a.len() as f64;
+        assert!((n - 4000.0).abs() < 400.0, "got {n} arrivals");
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_arrivals_in_the_spike() {
+        let profile = RateProfile::FlashCrowd {
+            base_rps: 50.0,
+            spike_mult: 10.0,
+            start_s: 4.0,
+            duration_s: 2.0,
+        };
+        let a = modulated_arrivals(11, &profile, 10.0, &["m"], "");
+        let in_spike = a.iter().filter(|x| x.t_s >= 4.0 && x.t_s < 6.0).count();
+        let outside = a.len() - in_spike;
+        // spike window carries 1000 expected arrivals vs 400 outside
+        assert!(
+            in_spike as f64 > 1.5 * outside as f64,
+            "spike {in_spike} vs outside {outside}"
+        );
+        // the spike is a 10x *rate step*, visible as a 10x density step
+        let spike_density = in_spike as f64 / 2.0;
+        let base_density = outside as f64 / 8.0;
+        let step = spike_density / base_density;
+        assert!((step - 10.0).abs() < 3.0, "rate step was {step:.1}x");
+    }
+
+    #[test]
+    fn diurnal_peaks_mid_period() {
+        let profile = RateProfile::Diurnal {
+            base_rps: 20.0,
+            peak_rps: 400.0,
+            period_s: 10.0,
+        };
+        assert!((profile.rate_at(0.0) - 20.0).abs() < 1e-9);
+        assert!((profile.rate_at(5.0) - 400.0).abs() < 1e-9);
+        assert!((profile.rate_at(10.0) - 20.0).abs() < 1e-6);
+        let a = modulated_arrivals(13, &profile, 10.0, &["m"], "");
+        let crest = a.iter().filter(|x| x.t_s >= 3.0 && x.t_s < 7.0).count();
+        let trough = a.len() - crest;
+        assert!(crest > trough, "crest {crest} vs trough {trough}");
+    }
+
+    #[test]
+    fn profile_validation_rejects_nonsense() {
+        assert!(RateProfile::Constant { rps: 0.0 }.validate().is_err());
+        assert!(RateProfile::Diurnal {
+            base_rps: 10.0,
+            peak_rps: 5.0,
+            period_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(RateProfile::FlashCrowd {
+            base_rps: 10.0,
+            spike_mult: 0.5,
+            start_s: 0.0,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(ClosedLoopSpec {
+            clients: 0,
+            think_s: 0.1,
+            requests_per_client: 1,
+            model: "m".into(),
+            tenant: String::new(),
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn merge_is_sorted_and_stable_across_input_order() {
+        let a = modulated_arrivals(1, &RateProfile::Constant { rps: 100.0 }, 2.0, &["x"], "a");
+        let b = modulated_arrivals(2, &RateProfile::Constant { rps: 100.0 }, 2.0, &["y"], "b");
+        let m1 = merge_arrivals(vec![a.clone(), b.clone()]);
+        let m2 = merge_arrivals(vec![b, a]);
+        assert_eq!(m1, m2, "merge is a pure function of the set of streams");
+        assert!(m1.windows(2).all(|w| w[0].t_s <= w[1].t_s));
     }
 
     #[test]

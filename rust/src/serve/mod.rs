@@ -22,10 +22,28 @@
 //!   ([`crate::accel::dse::tune`], `udcnn serve --tuned`), or explicit
 //!   heterogeneous configs per model shard;
 //! * [`loadgen`] — seeded open-loop Poisson arrivals
-//!   ([`poisson_arrivals`]), periodic per-source chunk cadences for
-//!   streaming jobs ([`periodic_arrivals`], consumed by
+//!   ([`poisson_arrivals`]), time-varying diurnal / flash-crowd
+//!   profiles ([`RateProfile`], [`modulated_arrivals`]), closed-loop
+//!   client pools with think time ([`ClosedLoopSpec`]), periodic
+//!   per-source chunk cadences for streaming jobs
+//!   ([`periodic_arrivals`], consumed by
 //!   [`crate::stream::serve_streams`]), and the p50/p95/p99
-//!   [`LatencySummary`].
+//!   [`LatencySummary`];
+//! * [`tenant`] — [`TenantSpec`]: priority classes, per-tenant SLOs
+//!   and queue bounds, with exact per-tenant conservation
+//!   (`submitted == completed + shed`, every shed tagged by reason)
+//!   reported per run in [`TenantReport`];
+//! * [`autoscale`] — [`AutoFleet`]: the production-shaped engine.
+//!   Wraps the classic fleet with an autoscaler (queue-depth and
+//!   windowed-p99 signals, configurable FPGA-reconfiguration bring-up,
+//!   graceful drain), SLO-aware multi-tenant scheduling and shedding,
+//!   injected instance failures with request re-routing, and
+//!   cost-normalized reporting (throughput per DSP, mJ/request);
+//! * [`scenario`] — the named adversarial battery behind
+//!   `udcnn serve --autoscale --scenario <name>`: flash crowds,
+//!   one-tenant overload, mid-stream instance failure,
+//!   scale-down-under-load, closed-loop pools — all capacity-probe
+//!   parameterized and byte-replayable.
 //!
 //! **IOM vs OOM.** Every latency this tier reports is an
 //! *input-oriented-mapping* (IOM) number: the cached plans schedule
@@ -43,12 +61,24 @@
 //! delegates multi-instance serving here), the `udcnn serve` CLI
 //! subcommand, and `benches/serving.rs` → `reports/BENCH_serving.json`.
 
+pub mod autoscale;
 pub mod cache;
 pub mod fleet;
 pub mod instance;
 pub mod loadgen;
+pub mod scenario;
+pub mod tenant;
 
+pub use autoscale::{
+    AutoFleet, AutoscaleOptions, CostReport, FailureSpec, InstanceLife, ScalerDecision,
+    ScalerReport,
+};
 pub use cache::{CacheStats, PlanCache};
 pub use fleet::{ConfigPolicy, Fleet, FleetOptions, FleetReport};
-pub use instance::{Instance, InstanceStats};
-pub use loadgen::{periodic_arrivals, poisson_arrivals, Arrival, LatencySummary};
+pub use instance::{Instance, InstanceState, InstanceStats};
+pub use loadgen::{
+    merge_arrivals, modulated_arrivals, periodic_arrivals, poisson_arrivals, Arrival,
+    ClosedLoopSpec, LatencySummary, RateProfile,
+};
+pub use scenario::{run_scenario, run_scenario_obs, ScenarioOverrides, ScenarioRun, SCENARIO_NAMES};
+pub use tenant::{parse_tenant_specs, tenants_to_json, TenantReport, TenantSpec};

@@ -1,0 +1,429 @@
+//! Named serving scenarios: the adversarial battery behind
+//! `udcnn serve --autoscale --scenario <name>`.
+//!
+//! A scenario is a fully specified stress test for the autoscaled
+//! multi-tenant fleet — workload shape, tenant roster, scaler bounds,
+//! and (where relevant) injected failures — parameterized by a
+//! *capacity probe* rather than absolute numbers. The probe runs one
+//! full batch of each registered model through a single paper-config
+//! board and derives two constants: `b`, the slowest full-batch
+//! latency, and `c1`, the aggregate one-board request throughput at
+//! full batches. Every time constant in a scenario is a multiple of
+//! `b` and every rate a multiple of `c1`, so the same scenario is a
+//! comparable stress whether the fleet serves `tiny-2d` in a unit
+//! test or DCGAN + 3D-GAN from the CLI.
+//!
+//! Scenarios are deterministic end to end: arrivals come from seeded
+//! generators ([`crate::serve::modulated_arrivals`]), the engine runs
+//! on the discrete-event clock, and [`ScenarioRun::to_json`] is
+//! byte-identical across repeats and hosts — the CI determinism gate
+//! `cmp`s two runs.
+
+use crate::dcnn::Network;
+use crate::obs::Obs;
+use crate::report::json::JsonObj;
+use std::time::Duration;
+
+use super::autoscale::{AutoFleet, AutoscaleOptions, FailureSpec};
+use super::fleet::{Fleet, FleetOptions, FleetReport};
+use super::loadgen::{merge_arrivals, modulated_arrivals, Arrival, ClosedLoopSpec, RateProfile};
+use super::tenant::TenantSpec;
+
+/// Every scenario name `run_scenario` accepts, in display order.
+pub const SCENARIO_NAMES: &[&str] = &[
+    "steady",
+    "diurnal",
+    "flash-crowd",
+    "one-tenant-overload",
+    "instance-failure",
+    "scale-down",
+    "closed-loop",
+];
+
+/// CLI-level overrides applied on top of a scenario's defaults.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioOverrides {
+    /// Replace the scenario's scaler lower bound.
+    pub min_instances: Option<usize>,
+    /// Replace the scenario's scaler upper bound.
+    pub max_instances: Option<usize>,
+    /// Replace the scenario's bring-up latency (seconds).
+    pub bring_up_s: Option<f64>,
+    /// Replace the scenario's tenant roster. Scenarios that tag
+    /// arrivals (`flash-crowd`, `one-tenant-overload`) need the
+    /// override to keep tenants of the same names.
+    pub tenants: Option<Vec<TenantSpec>>,
+}
+
+/// Outcome of one scenario run.
+#[derive(Clone, Debug)]
+pub struct ScenarioRun {
+    /// Scenario name.
+    pub name: String,
+    /// Seed the workload and client stagger derived from.
+    pub seed: u64,
+    /// The autoscaled fleet's report.
+    pub report: FleetReport,
+    /// For `flash-crowd`: the same workload replayed against a fleet
+    /// pinned to the scenario's minimum size — the fixed-capacity
+    /// baseline the 2x completion claim is asserted against.
+    pub fixed_baseline: Option<FleetReport>,
+}
+
+impl ScenarioRun {
+    /// Machine-readable export (`udcnn serve --scenario ... --json`).
+    pub fn to_json(&self) -> String {
+        let mut obj = JsonObj::new()
+            .str("scenario", &self.name)
+            .int("seed", self.seed)
+            .raw("report", &self.report.to_json());
+        if let Some(b) = &self.fixed_baseline {
+            obj = obj.raw("fixed_baseline", &b.to_json());
+        }
+        obj.render()
+    }
+
+    /// Human-readable summary (`udcnn serve --scenario ...`).
+    pub fn render(&self) -> String {
+        let mut out = format!("=== scenario: {} (seed {}) ===\n", self.name, self.seed);
+        out.push_str(&self.report.render());
+        if let Some(b) = &self.fixed_baseline {
+            out.push_str(&format!(
+                "--- fixed baseline ({} boards): {} served | {} shed ---\n",
+                b.instances, b.served, b.shed
+            ));
+        }
+        out
+    }
+}
+
+/// The capacity probe: `b` (slowest full-batch latency, seconds) and
+/// `c1` (one-board full-batch throughput over the uniform model mix,
+/// requests/second).
+fn probe(networks: &[Network]) -> Result<(f64, f64), String> {
+    let mut fleet = Fleet::new(networks.to_vec(), FleetOptions::default())?;
+    let max_batch = fleet.options().policy.max_batch;
+    let models: Vec<String> = fleet.models().iter().map(|m| m.to_string()).collect();
+    let mut b = 0.0f64;
+    let mut per_req_s = 0.0f64;
+    for m in &models {
+        let s = fleet.batch_latency_s(m, max_batch)?;
+        b = b.max(s);
+        per_req_s += s / max_batch as f64;
+    }
+    let c1 = models.len() as f64 / per_req_s;
+    Ok((b, c1))
+}
+
+/// Everything one scenario feeds the engine.
+struct ScenarioSpec {
+    opts: FleetOptions,
+    auto: AutoscaleOptions,
+    tenants: Vec<TenantSpec>,
+    arrivals: Vec<Arrival>,
+    closed: Vec<ClosedLoopSpec>,
+    failures: Vec<FailureSpec>,
+    /// Run the same arrivals against a fleet pinned at `min` boards.
+    wants_fixed_baseline: bool,
+}
+
+/// Scaler defaults shared by the open-loop scenarios, in probe units.
+fn base_auto(b: f64) -> AutoscaleOptions {
+    AutoscaleOptions {
+        min_instances: 1,
+        max_instances: 6,
+        bring_up_s: 8.0 * b,
+        check_every_s: 4.0 * b,
+        window_s: 20.0 * b,
+        up_queue_depth: 32,
+        p99_target_ms: 30.0 * b * 1e3,
+        min_window_samples: 16,
+        cooldown_s: 8.0 * b,
+    }
+}
+
+/// Fleet options shared by every scenario: default batching with a
+/// `2b` closing deadline, no global admission budget (tenant SLOs and
+/// queue bounds rule).
+fn base_opts(b: f64) -> FleetOptions {
+    FleetOptions {
+        policy: crate::coordinator::BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs_f64(2.0 * b),
+        },
+        latency_budget_s: f64::INFINITY,
+        ..FleetOptions::default()
+    }
+}
+
+/// Build the named scenario's full specification from the probe
+/// constants. `models` are the registered model names.
+fn build(name: &str, seed: u64, b: f64, c1: f64, models: &[&str]) -> Result<ScenarioSpec, String> {
+    let opts = base_opts(b);
+    let mut auto = base_auto(b);
+    let mut tenants = Vec::new();
+    let mut arrivals = Vec::new();
+    let mut closed = Vec::new();
+    let mut failures = Vec::new();
+    let mut wants_fixed_baseline = false;
+    match name {
+        "steady" => {
+            auto.min_instances = 2;
+            let profile = RateProfile::Constant { rps: 3.0 * c1 };
+            arrivals = modulated_arrivals(seed, &profile, 120.0 * b, models, "");
+        }
+        "diurnal" => {
+            let profile = RateProfile::Diurnal {
+                base_rps: 0.4 * c1,
+                peak_rps: 3.5 * c1,
+                period_s: 60.0 * b,
+            };
+            arrivals = modulated_arrivals(seed, &profile, 120.0 * b, models, "");
+        }
+        "flash-crowd" => {
+            // The crowd's queue bound must sit well above the
+            // queue-depth trip wire (`up_queue_depth × ready boards`)
+            // or the backlog saturates at the cap before the scaler
+            // ever sees a signal; the cooldown matches the check
+            // cadence so the ramp is one board per check — fast enough
+            // that the autoscaled fleet clears ≥ 2× the fixed fleet's
+            // completions at the same per-tenant shed bound.
+            auto.min_instances = 2;
+            auto.max_instances = 10;
+            auto.bring_up_s = 6.0 * b;
+            auto.check_every_s = 2.0 * b;
+            auto.window_s = 10.0 * b;
+            auto.cooldown_s = 2.0 * b;
+            auto.up_queue_depth = 16;
+            tenants.push(TenantSpec {
+                name: "crowd".to_string(),
+                class: 0,
+                slo_ms: f64::INFINITY,
+                queue_cap: 512,
+            });
+            let profile = RateProfile::FlashCrowd {
+                base_rps: c1,
+                spike_mult: 10.0,
+                start_s: 20.0 * b,
+                duration_s: 60.0 * b,
+            };
+            arrivals = modulated_arrivals(seed, &profile, 100.0 * b, models, "crowd");
+            wants_fixed_baseline = true;
+        }
+        "one-tenant-overload" => {
+            // fixed capacity: the assertion isolates *scheduling*, not
+            // scaling — the greedy tenant must be contained by class
+            // priority and its queue bound alone
+            auto.min_instances = 2;
+            auto.max_instances = 2;
+            tenants.push(TenantSpec {
+                name: "gold".to_string(),
+                class: 0,
+                slo_ms: 30.0 * b * 1e3,
+                queue_cap: 64,
+            });
+            tenants.push(TenantSpec {
+                name: "greedy".to_string(),
+                class: 3,
+                slo_ms: f64::INFINITY,
+                queue_cap: 32,
+            });
+            let gold = modulated_arrivals(
+                seed,
+                &RateProfile::Constant { rps: 0.6 * c1 },
+                80.0 * b,
+                models,
+                "gold",
+            );
+            let greedy = modulated_arrivals(
+                seed ^ 0x9E37_79B9_7F4A_7C15,
+                &RateProfile::Constant { rps: 8.0 * c1 },
+                80.0 * b,
+                models,
+                "greedy",
+            );
+            arrivals = merge_arrivals(vec![gold, greedy]);
+        }
+        "instance-failure" => {
+            auto.min_instances = 2;
+            auto.max_instances = 4;
+            auto.bring_up_s = 5.0 * b;
+            let profile = RateProfile::Constant { rps: 2.8 * c1 };
+            arrivals = modulated_arrivals(seed, &profile, 80.0 * b, models, "");
+            failures.push(FailureSpec { t_s: 30.0 * b, instance: 1 });
+        }
+        "scale-down" => {
+            // front-loaded spike, then a long quiet tail: the scaler
+            // must grow early and drain gracefully without aborting
+            // in-flight batches
+            let profile = RateProfile::FlashCrowd {
+                base_rps: 0.5 * c1,
+                spike_mult: 8.0,
+                start_s: 0.0,
+                duration_s: 40.0 * b,
+            };
+            arrivals = modulated_arrivals(seed, &profile, 140.0 * b, models, "");
+        }
+        "closed-loop" => {
+            auto.max_instances = 4;
+            let per_model = (24 / models.len().max(1)).max(1);
+            for m in models {
+                closed.push(ClosedLoopSpec {
+                    clients: per_model,
+                    think_s: 4.0 * b,
+                    requests_per_client: 20,
+                    model: m.to_string(),
+                    tenant: String::new(),
+                });
+            }
+        }
+        other => {
+            return Err(format!(
+                "unknown scenario '{other}' (known: {})",
+                SCENARIO_NAMES.join(", ")
+            ));
+        }
+    }
+    Ok(ScenarioSpec {
+        opts,
+        auto,
+        tenants,
+        arrivals,
+        closed,
+        failures,
+        wants_fixed_baseline,
+    })
+}
+
+/// Run a named scenario against `networks` without observability.
+pub fn run_scenario(
+    name: &str,
+    seed: u64,
+    networks: &[Network],
+    ov: &ScenarioOverrides,
+) -> Result<ScenarioRun, String> {
+    run_scenario_obs(name, seed, networks, ov, Obs::off())
+}
+
+/// [`run_scenario`] with an observability handle: batches, sheds and
+/// scaler decisions narrate onto the recorder's simulated timeline.
+pub fn run_scenario_obs(
+    name: &str,
+    seed: u64,
+    networks: &[Network],
+    ov: &ScenarioOverrides,
+    obs: Obs,
+) -> Result<ScenarioRun, String> {
+    if networks.is_empty() {
+        return Err("scenario needs at least one network".into());
+    }
+    let (b, c1) = probe(networks)?;
+    let names: Vec<&str> = networks.iter().map(|n| n.name).collect();
+    let mut spec = build(name, seed, b, c1, &names)?;
+    if let Some(m) = ov.min_instances {
+        spec.auto.min_instances = m;
+        spec.auto.max_instances = spec.auto.max_instances.max(m);
+    }
+    if let Some(m) = ov.max_instances {
+        spec.auto.max_instances = m;
+    }
+    if let Some(s) = ov.bring_up_s {
+        spec.auto.bring_up_s = s;
+    }
+    if let Some(t) = &ov.tenants {
+        spec.tenants = t.clone();
+    }
+    let mut fleet = AutoFleet::new_obs(
+        networks.to_vec(),
+        spec.opts.clone(),
+        spec.auto.clone(),
+        spec.tenants.clone(),
+        obs,
+    )?;
+    let report = fleet.run(&spec.arrivals, &spec.closed, &spec.failures, seed)?;
+    let fixed_baseline = if spec.wants_fixed_baseline {
+        let pinned = AutoscaleOptions {
+            min_instances: spec.auto.min_instances,
+            max_instances: spec.auto.min_instances,
+            ..spec.auto.clone()
+        };
+        let mut fixed = AutoFleet::new(
+            networks.to_vec(),
+            spec.opts.clone(),
+            pinned,
+            spec.tenants.clone(),
+        )?;
+        Some(fixed.run(&spec.arrivals, &spec.closed, &spec.failures, seed)?)
+    } else {
+        None
+    };
+    Ok(ScenarioRun {
+        name: name.to_string(),
+        seed,
+        report,
+        fixed_baseline,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcnn::zoo;
+
+    fn nets() -> Vec<Network> {
+        vec![zoo::tiny_2d(), zoo::tiny_3d()]
+    }
+
+    #[test]
+    fn every_named_scenario_runs_and_conserves() {
+        for name in SCENARIO_NAMES {
+            let run = run_scenario(name, 42, &nets(), &ScenarioOverrides::default())
+                .unwrap_or_else(|e| panic!("scenario {name}: {e}"));
+            let r = &run.report;
+            assert!(r.offered > 0, "{name}: empty workload");
+            assert_eq!(r.offered, r.served + r.shed, "{name}: conservation");
+            for t in &r.per_tenant {
+                assert!(t.conserved(), "{name}: tenant {} leaks requests", t.name);
+            }
+            assert!(r.scaler.is_some() && r.cost.is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_is_an_error() {
+        let e = run_scenario("nope", 1, &nets(), &ScenarioOverrides::default()).unwrap_err();
+        assert!(e.contains("unknown scenario"), "{e}");
+        assert!(e.contains("flash-crowd"), "lists the known names: {e}");
+    }
+
+    #[test]
+    fn scenario_json_is_deterministic() {
+        let ov = ScenarioOverrides::default();
+        let a = run_scenario("diurnal", 7, &nets(), &ov).unwrap();
+        let b = run_scenario("diurnal", 7, &nets(), &ov).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn overrides_replace_scaler_bounds() {
+        let ov = ScenarioOverrides {
+            min_instances: Some(3),
+            max_instances: Some(3),
+            bring_up_s: Some(0.0),
+            tenants: None,
+        };
+        let run = run_scenario("steady", 5, &nets(), &ov).unwrap();
+        let s = run.report.scaler.as_ref().unwrap();
+        assert_eq!(s.min_instances, 3);
+        assert_eq!(s.max_instances, 3);
+        assert_eq!(s.bring_up_s, 0.0);
+    }
+
+    #[test]
+    fn flash_crowd_carries_a_fixed_baseline() {
+        let run = run_scenario("flash-crowd", 9, &nets(), &ScenarioOverrides::default()).unwrap();
+        let base = run.fixed_baseline.as_ref().expect("baseline attached");
+        assert_eq!(base.offered, run.report.offered, "same workload");
+        assert!(run.to_json().contains("\"fixed_baseline\""));
+    }
+}

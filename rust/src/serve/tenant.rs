@@ -1,0 +1,241 @@
+//! Tenants: priority classes, SLOs, and per-tenant accounting.
+//!
+//! The multi-tenant fleet ([`crate::serve::AutoFleet`]) bills every
+//! request to a [`TenantSpec`]: a named principal with a *priority
+//! class* (0 is highest — dispatched first, shed last), a latency SLO
+//! in milliseconds (admission sheds a request whose estimated wait
+//! already blows the SLO, so a greedy tenant's backlog cannot smear a
+//! compliant tenant's tail), and a per-tenant queue bound. The
+//! scheduler's contract, enforced by the adversarial battery
+//! (`tests/adversarial_fleet.rs`), is exact conservation per tenant:
+//! `submitted == completed + shed`, with every shed tagged by reason —
+//! requests never vanish silently.
+//!
+//! [`parse_tenant_specs`] parses the `udcnn serve --tenants` CLI
+//! syntax: `name:class:slo_ms[:queue_cap]` entries joined by commas,
+//! e.g. `gold:0:50,batch:2:inf:128`. `inf` (or `-`) means "no SLO" /
+//! "no cap".
+
+use crate::report::json::{array, JsonObj};
+use crate::serve::loadgen::LatencySummary;
+use std::collections::BTreeMap;
+
+/// One tenant of the fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// Tenant name; keys arrivals ([`crate::serve::Arrival::tenant`])
+    /// to this spec.
+    pub name: String,
+    /// Priority class: 0 is highest. Dispatch favors lower classes;
+    /// shedding under pressure hits higher classes first.
+    pub class: u8,
+    /// Latency SLO in milliseconds; `f64::INFINITY` means best-effort.
+    pub slo_ms: f64,
+    /// Max requests this tenant may have queued (excess is shed with
+    /// reason `queue-full`); `usize::MAX` means unbounded.
+    pub queue_cap: usize,
+}
+
+impl TenantSpec {
+    /// The implicit sole tenant of single-tenant runs: class 0,
+    /// best-effort SLO, unbounded queue.
+    pub fn default_tenant() -> TenantSpec {
+        TenantSpec {
+            name: "default".to_string(),
+            class: 0,
+            slo_ms: f64::INFINITY,
+            queue_cap: usize::MAX,
+        }
+    }
+
+    /// Reject unusable specs (empty name, names with the spec
+    /// delimiters, non-positive SLO, zero queue cap).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("tenant name must be non-empty".into());
+        }
+        if self.name.contains([':', ',']) {
+            return Err(format!("tenant name '{}' may not contain ':' or ','", self.name));
+        }
+        if !(self.slo_ms > 0.0) {
+            return Err(format!("tenant '{}' SLO must be positive", self.name));
+        }
+        if self.queue_cap == 0 {
+            return Err(format!("tenant '{}' queue_cap must be > 0", self.name));
+        }
+        Ok(())
+    }
+}
+
+/// Parse a `--tenants` spec: comma-joined `name:class:slo_ms[:queue_cap]`
+/// entries. `slo_ms` and `queue_cap` accept `inf` or `-` for
+/// "unbounded"; `queue_cap` defaults to unbounded when omitted.
+///
+/// ```
+/// use udcnn::serve::parse_tenant_specs;
+/// let ts = parse_tenant_specs("gold:0:50,batch:2:inf:128").unwrap();
+/// assert_eq!(ts.len(), 2);
+/// assert_eq!(ts[0].name, "gold");
+/// assert_eq!(ts[1].queue_cap, 128);
+/// ```
+pub fn parse_tenant_specs(spec: &str) -> Result<Vec<TenantSpec>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = entry.split(':').collect();
+        if parts.len() < 3 || parts.len() > 4 {
+            return Err(format!(
+                "tenant entry '{entry}' is not name:class:slo_ms[:queue_cap]"
+            ));
+        }
+        let class: u8 = parts[1]
+            .parse()
+            .map_err(|_| format!("tenant '{}': bad class '{}'", parts[0], parts[1]))?;
+        let slo_ms = match parts[2] {
+            "inf" | "-" => f64::INFINITY,
+            s => s
+                .parse::<f64>()
+                .map_err(|_| format!("tenant '{}': bad slo_ms '{s}'", parts[0]))?,
+        };
+        let queue_cap = match parts.get(3).copied() {
+            None | Some("inf") | Some("-") => usize::MAX,
+            Some(s) => s
+                .parse::<usize>()
+                .map_err(|_| format!("tenant '{}': bad queue_cap '{s}'", parts[0]))?,
+        };
+        let t = TenantSpec {
+            name: parts[0].to_string(),
+            class,
+            slo_ms,
+            queue_cap,
+        };
+        t.validate()?;
+        out.push(t);
+    }
+    if out.is_empty() {
+        return Err("tenant spec is empty".into());
+    }
+    Ok(out)
+}
+
+/// Per-tenant outcome of one fleet run.
+#[derive(Clone, Debug, Default)]
+pub struct TenantReport {
+    /// Tenant name.
+    pub name: String,
+    /// Priority class the run used.
+    pub class: u8,
+    /// SLO the run enforced (ms; infinite = best-effort).
+    pub slo_ms: f64,
+    /// Requests this tenant submitted (admitted or shed — everything).
+    pub submitted: u64,
+    /// Requests completed.
+    pub completed: u64,
+    /// Requests shed, any reason.
+    pub shed: u64,
+    /// Shed counts by tagged reason (`budget-exceeded`, `queue-full`,
+    /// `preempted`, ...).
+    pub shed_reasons: BTreeMap<String, u64>,
+    /// Latency percentiles over this tenant's completed requests.
+    pub latency: LatencySummary,
+    /// Completed requests whose latency exceeded the SLO (0 when the
+    /// SLO is infinite).
+    pub slo_violations: u64,
+}
+
+impl TenantReport {
+    /// The conservation law every scenario asserts: each submitted
+    /// request is accounted for exactly once.
+    pub fn conserved(&self) -> bool {
+        self.submitted == self.completed + self.shed
+            && self.shed == self.shed_reasons.values().sum::<u64>()
+    }
+
+    /// JSON object for reports (infinite SLO renders as `null`).
+    pub fn to_json(&self) -> JsonObj {
+        let mut reasons = JsonObj::new();
+        for (r, n) in &self.shed_reasons {
+            reasons = reasons.int(r, *n);
+        }
+        JsonObj::new()
+            .str("tenant", &self.name)
+            .int("class", self.class as u64)
+            .num("slo_ms", self.slo_ms)
+            .int("submitted", self.submitted)
+            .int("completed", self.completed)
+            .int("shed", self.shed)
+            .raw("shed_reasons", &reasons.render())
+            .num("p50_ms", self.latency.p50_ms)
+            .num("p99_ms", self.latency.p99_ms)
+            .num("max_ms", self.latency.max_ms)
+            .int("slo_violations", self.slo_violations)
+    }
+}
+
+/// Render a list of tenant reports as a JSON array string.
+pub fn tenants_to_json(reports: &[TenantReport]) -> String {
+    let items: Vec<String> = reports.iter().map(|t| t.to_json().render()).collect();
+    array(&items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_and_short_entries() {
+        let ts = parse_tenant_specs("gold:0:50,silver:1:200:64,batch:3:inf").unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0], TenantSpec {
+            name: "gold".into(),
+            class: 0,
+            slo_ms: 50.0,
+            queue_cap: usize::MAX,
+        });
+        assert_eq!(ts[1].queue_cap, 64);
+        assert!(ts[2].slo_ms.is_infinite());
+        assert_eq!(ts[2].class, 3);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(parse_tenant_specs("").is_err());
+        assert!(parse_tenant_specs("noclass:fast").is_err());
+        assert!(parse_tenant_specs("g:x:50").is_err());
+        assert!(parse_tenant_specs("g:0:0").is_err(), "zero SLO");
+        assert!(parse_tenant_specs("g:0:50:0").is_err(), "zero cap");
+        assert!(parse_tenant_specs("g:0:-5").is_err(), "negative SLO");
+    }
+
+    #[test]
+    fn conservation_checks_reasons_too() {
+        let mut t = TenantReport {
+            name: "t".into(),
+            submitted: 10,
+            completed: 7,
+            shed: 3,
+            ..TenantReport::default()
+        };
+        assert!(!t.conserved(), "3 sheds but no tagged reasons");
+        t.shed_reasons.insert("queue-full".into(), 2);
+        t.shed_reasons.insert("budget-exceeded".into(), 1);
+        assert!(t.conserved());
+        t.completed = 8;
+        assert!(!t.conserved(), "over-accounted");
+    }
+
+    #[test]
+    fn json_renders_infinite_slo_as_null() {
+        let t = TenantReport {
+            name: "best-effort".into(),
+            slo_ms: f64::INFINITY,
+            ..TenantReport::default()
+        };
+        let j = t.to_json().render();
+        assert!(j.contains("\"slo_ms\": null"), "{j}");
+        assert!(j.contains("\"tenant\": \"best-effort\""));
+    }
+}

@@ -1,0 +1,172 @@
+//! Adversarial serving battery: hostile workloads replayed against
+//! the autoscaling multi-tenant fleet, every run held to the exact
+//! conservation law (`submitted == completed + shed` per tenant, with
+//! every shed tagged by reason — nothing silently dropped).
+//!
+//! Each scenario runs twice: a tier-1 variant on the tiny zoo
+//! networks so the battery rides `cargo test`, and an `#[ignore]`d
+//! full-size variant on DCGAN + 3D-GAN that pins the release
+//! acceptance criteria (the compliant tenant's p99 stays inside its
+//! SLO while a greedy neighbor is shed; the autoscaled fleet clears
+//! at least 2x the fixed-size fleet's completions in a flash crowd).
+//! CI runs the full battery with `--include-ignored`. Both variants
+//! assert the same invariants — the scenarios are parameterized by a
+//! capacity probe, so the stress is comparable at either scale.
+
+use udcnn::dcnn::{zoo, Network};
+use udcnn::serve::{run_scenario, FleetReport, ScenarioOverrides, TenantReport};
+
+fn tiny() -> Vec<Network> {
+    vec![zoo::tiny_2d(), zoo::tiny_3d()]
+}
+
+fn full() -> Vec<Network> {
+    vec![zoo::dcgan(), zoo::gan3d()]
+}
+
+/// The battery's common postcondition: global and per-tenant request
+/// conservation, with every shed tagged by reason and the tenant
+/// ledgers covering the whole offered workload.
+fn assert_conserved(tag: &str, r: &FleetReport) {
+    assert_eq!(r.offered, r.served + r.shed, "{tag}: global conservation");
+    let mut submitted = 0u64;
+    for t in &r.per_tenant {
+        assert!(t.conserved(), "{tag}: tenant '{}' leaks requests", t.name);
+        submitted += t.submitted;
+    }
+    assert_eq!(submitted, r.offered, "{tag}: tenant ledgers cover the workload");
+}
+
+fn tenant<'a>(r: &'a FleetReport, name: &str) -> &'a TenantReport {
+    r.per_tenant
+        .iter()
+        .find(|t| t.name == name)
+        .unwrap_or_else(|| panic!("tenant '{name}' missing from report"))
+}
+
+/// Flash crowd: a 10x step in offered load. The scaler must see the
+/// backlog and grow the fleet, and at the same per-tenant shed bound
+/// the autoscaled fleet must complete at least 2x what the
+/// size-pinned baseline manages.
+fn flash_crowd_beats_the_fixed_fleet(nets: &[Network], seed: u64) {
+    let run = run_scenario("flash-crowd", seed, nets, &ScenarioOverrides::default()).unwrap();
+    assert_conserved("flash-crowd", &run.report);
+    let base = run.fixed_baseline.as_ref().expect("flash-crowd carries a fixed baseline");
+    assert_conserved("flash-crowd baseline", base);
+    assert_eq!(base.offered, run.report.offered, "both fleets face the same crowd");
+    let s = run.report.scaler.as_ref().unwrap();
+    assert!(s.peak_active > s.min_instances, "the spike must trigger scale-ups");
+    assert!(s.decisions.iter().any(|d| d.action == "scale-up"));
+    assert!(
+        run.report.served >= 2 * base.served,
+        "autoscaled fleet served {} vs {} on the fixed fleet — under the 2x criterion",
+        run.report.served,
+        base.served
+    );
+}
+
+#[test]
+fn flash_crowd_beats_the_fixed_fleet_tiny() {
+    flash_crowd_beats_the_fixed_fleet(&tiny(), 11);
+}
+
+#[test]
+#[ignore = "release battery: full-size networks (CI runs with --include-ignored)"]
+fn flash_crowd_beats_the_fixed_fleet_full_size() {
+    flash_crowd_beats_the_fixed_fleet(&full(), 0xF1EE7);
+}
+
+/// One-tenant overload: a best-effort tenant offers 8x the fleet's
+/// capacity while a compliant gold tenant stays at 0.6x on a
+/// size-pinned fleet. Class scheduling plus the greedy tenant's queue
+/// bound must contain the damage: gold's p99 stays inside its SLO and
+/// the overloader is the tenant that gets shed.
+fn overload_is_contained(nets: &[Network], seed: u64) {
+    let run =
+        run_scenario("one-tenant-overload", seed, nets, &ScenarioOverrides::default()).unwrap();
+    let r = &run.report;
+    assert_conserved("one-tenant-overload", r);
+    let gold = tenant(r, "gold");
+    let greedy = tenant(r, "greedy");
+    assert!(gold.slo_ms.is_finite() && gold.completed > 0, "gold workload ran");
+    assert!(
+        gold.latency.p99_ms <= gold.slo_ms,
+        "greedy neighbor pushed gold's p99 to {:.1} ms (SLO {:.1} ms)",
+        gold.latency.p99_ms,
+        gold.slo_ms
+    );
+    assert!(greedy.shed > 0, "the overloader is the tenant that gets shed");
+    assert!(
+        greedy.shed_reasons.contains_key("queue-full"),
+        "greedy sheds at its queue bound; tagged reasons: {:?}",
+        greedy.shed_reasons
+    );
+}
+
+#[test]
+fn overload_is_contained_tiny() {
+    overload_is_contained(&tiny(), 5);
+}
+
+#[test]
+#[ignore = "release battery: full-size networks (CI runs with --include-ignored)"]
+fn overload_is_contained_full_size() {
+    overload_is_contained(&full(), 0xF1EE7);
+}
+
+/// Instance failure mid-stream: a board dies with batches in flight.
+/// The wreckage is requeued oldest-first and re-routed; the
+/// scenario's tenant is unbounded and best-effort, so no shed path
+/// exists and conservation forces every offered request to complete.
+fn failure_reroutes_without_loss(nets: &[Network], seed: u64) {
+    let run = run_scenario("instance-failure", seed, nets, &ScenarioOverrides::default()).unwrap();
+    let r = &run.report;
+    assert_conserved("instance-failure", r);
+    assert_eq!(r.shed, 0, "no shed path exists for the unbounded tenant");
+    assert_eq!(r.served, r.offered, "every request must re-route and complete");
+    let s = r.scaler.as_ref().unwrap();
+    let dead: Vec<_> = s.lives.iter().filter(|l| l.retirement == "failed").collect();
+    assert_eq!(dead.len(), 1, "exactly one board was killed");
+    assert!(dead[0].retired_s.is_some(), "the failed board's retirement is logged");
+}
+
+#[test]
+fn failure_reroutes_without_loss_tiny() {
+    failure_reroutes_without_loss(&tiny(), 7);
+}
+
+#[test]
+#[ignore = "release battery: full-size networks (CI runs with --include-ignored)"]
+fn failure_reroutes_without_loss_full_size() {
+    failure_reroutes_without_loss(&full(), 0xF1EE7);
+}
+
+/// Scale-down under load: a front-loaded spike, then a long quiet
+/// tail. The scaler must grow early and drain boards on the tail, and
+/// graceful drain means no in-flight batch is ever aborted — with the
+/// unbounded tenant, served equals offered exactly.
+fn scale_down_drains_gracefully(nets: &[Network], seed: u64) {
+    let run = run_scenario("scale-down", seed, nets, &ScenarioOverrides::default()).unwrap();
+    let r = &run.report;
+    assert_conserved("scale-down", r);
+    assert_eq!(r.served, r.offered, "drain aborted in-flight work");
+    let s = r.scaler.as_ref().unwrap();
+    assert!(s.decisions.iter().any(|d| d.action == "scale-up"), "the spike grows the fleet");
+    assert!(s.decisions.iter().any(|d| d.action == "drain"), "the quiet tail drains it");
+    for l in &s.lives {
+        if l.retirement == "drained" {
+            assert!(l.retired_s.is_some(), "drained board {} has no retirement time", l.id);
+        }
+    }
+}
+
+#[test]
+fn scale_down_drains_gracefully_tiny() {
+    scale_down_drains_gracefully(&tiny(), 3);
+}
+
+#[test]
+#[ignore = "release battery: full-size networks (CI runs with --include-ignored)"]
+fn scale_down_drains_gracefully_full_size() {
+    scale_down_drains_gracefully(&full(), 0xF1EE7);
+}

@@ -1,0 +1,194 @@
+//! Property battery for the autoscaled fleet: seeded determinism
+//! (byte-identical report JSON and scaler decision log across
+//! repeats), scaler bounds, the stale-window guard, load
+//! monotonicity, bring-up accounting, and closed-loop bookkeeping.
+//!
+//! Everything runs on the tiny zoo networks and the discrete-event
+//! clock, so the properties are exact — byte equality and exact
+//! conservation — rather than statistical.
+
+use std::time::Duration;
+use udcnn::coordinator::BatchPolicy;
+use udcnn::dcnn::{zoo, Network};
+use udcnn::serve::{
+    poisson_arrivals, run_scenario, AutoFleet, AutoscaleOptions, Fleet, FleetOptions,
+    ScenarioOverrides, SCENARIO_NAMES,
+};
+
+fn nets() -> Vec<Network> {
+    vec![zoo::tiny_2d(), zoo::tiny_3d()]
+}
+
+/// Probe constants like the scenario builder's: `b` is the slowest
+/// full-batch latency, `c1` one board's aggregate full-batch request
+/// throughput — so the direct-engine tests below stress the fleet the
+/// same way at any model scale.
+fn probe(nets: &[Network]) -> (f64, f64) {
+    let mut f = Fleet::new(nets.to_vec(), FleetOptions::default()).unwrap();
+    let mb = f.options().policy.max_batch;
+    let models: Vec<String> = f.models().iter().map(|m| m.to_string()).collect();
+    let mut b = 0.0f64;
+    let mut per_req = 0.0f64;
+    for m in &models {
+        let s = f.batch_latency_s(m, mb).unwrap();
+        b = b.max(s);
+        per_req += s / mb as f64;
+    }
+    (b, models.len() as f64 / per_req)
+}
+
+fn auto(min: usize, max: usize, b: f64) -> AutoscaleOptions {
+    AutoscaleOptions {
+        min_instances: min,
+        max_instances: max,
+        bring_up_s: 4.0 * b,
+        check_every_s: 2.0 * b,
+        window_s: 10.0 * b,
+        up_queue_depth: 8,
+        p99_target_ms: 20.0 * b * 1e3,
+        min_window_samples: 8,
+        cooldown_s: 2.0 * b,
+    }
+}
+
+fn opts(b: f64) -> FleetOptions {
+    FleetOptions {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs_f64(2.0 * b),
+        },
+        latency_budget_s: f64::INFINITY,
+        ..FleetOptions::default()
+    }
+}
+
+#[test]
+fn reports_and_decision_logs_are_byte_identical_across_repeats() {
+    let n = nets();
+    for name in ["flash-crowd", "one-tenant-overload"] {
+        let a = run_scenario(name, 21, &n, &ScenarioOverrides::default()).unwrap();
+        let b = run_scenario(name, 21, &n, &ScenarioOverrides::default()).unwrap();
+        assert_eq!(a.to_json(), b.to_json(), "{name}: report JSON drifted between repeats");
+        let sa = a.report.scaler.expect("scaler report present");
+        let sb = b.report.scaler.expect("scaler report present");
+        assert_eq!(sa.decisions_json(), sb.decisions_json(), "{name}: decision log drifted");
+    }
+}
+
+#[test]
+fn the_seed_shapes_the_workload() {
+    let n = nets();
+    let a = run_scenario("steady", 1, &n, &ScenarioOverrides::default()).unwrap();
+    let b = run_scenario("steady", 2, &n, &ScenarioOverrides::default()).unwrap();
+    assert_ne!(a.to_json(), b.to_json(), "different seeds must produce different runs");
+}
+
+#[test]
+fn scaler_stays_inside_its_bounds_in_every_scenario() {
+    for name in SCENARIO_NAMES {
+        let run = run_scenario(name, 13, &nets(), &ScenarioOverrides::default()).unwrap();
+        let s = run.report.scaler.expect("scaler report present");
+        assert!(
+            s.peak_active <= s.max_instances,
+            "{name}: peak {} boards over the max {}",
+            s.peak_active,
+            s.max_instances
+        );
+        for d in &s.decisions {
+            assert!(
+                d.active_after <= s.max_instances,
+                "{name}: '{}' left {} boards active, max is {}",
+                d.reason,
+                d.active_after,
+                s.max_instances
+            );
+            if d.action == "drain" {
+                assert!(d.active_after >= s.min_instances, "{name}: drained below the min");
+            }
+        }
+    }
+}
+
+#[test]
+fn p99_decisions_require_a_fresh_window() {
+    let n = nets();
+    let (b, c1) = probe(&n);
+    let names: Vec<&str> = n.iter().map(|x| x.name).collect();
+    let a = auto(1, 4, b);
+    let work = poisson_arrivals(17, 3.0 * c1, 600, &names);
+    let mut f = AutoFleet::new(n.clone(), opts(b), a.clone(), vec![]).unwrap();
+    let r = f.run(&work, &[], &[], 17).unwrap();
+    let s = r.scaler.expect("scaler report present");
+    assert!(!s.decisions.is_empty(), "3x one board's capacity must move the scaler");
+    for d in &s.decisions {
+        assert!(d.active_after <= a.max_instances, "scaled past the configured max");
+        if d.reason == "p99-above-target" || d.reason == "idle" {
+            assert!(
+                d.window_samples >= a.min_window_samples,
+                "'{}' fired on a stale window ({} of {} samples)",
+                d.reason,
+                d.window_samples,
+                a.min_window_samples
+            );
+        }
+    }
+}
+
+#[test]
+fn more_load_never_means_fewer_completions() {
+    let n = nets();
+    let (b, c1) = probe(&n);
+    let names: Vec<&str> = n.iter().map(|x| x.name).collect();
+    let mut last = 0u64;
+    // same seed and rate, growing request count: each workload is a
+    // prefix of the next, and with unbounded queues there is no shed
+    // path, so completions must track offered load exactly
+    for reqs in [100usize, 200, 400] {
+        let work = poisson_arrivals(29, 4.0 * c1, reqs, &names);
+        let mut f = AutoFleet::new(n.clone(), opts(b), auto(1, 3, b), vec![]).unwrap();
+        let r = f.run(&work, &[], &[], 29).unwrap();
+        assert_eq!(r.offered, reqs as u64, "{reqs} requests offered");
+        assert_eq!(r.shed, 0, "no shed path exists under an unbounded tenant");
+        assert_eq!(r.served, r.offered, "{reqs} requests: all must complete");
+        assert!(r.served >= last, "load went up, completions went down: {} < {last}", r.served);
+        last = r.served;
+    }
+}
+
+#[test]
+fn no_board_serves_before_its_bring_up_deadline() {
+    let n = nets();
+    let (b, c1) = probe(&n);
+    let names: Vec<&str> = n.iter().map(|x| x.name).collect();
+    let a = auto(1, 4, b);
+    // 5x one board's capacity: the backlog forces scale-ups, so the
+    // lifecycle log has boards born mid-run, behind a bring-up window
+    let work = poisson_arrivals(31, 5.0 * c1, 800, &names);
+    let mut f = AutoFleet::new(n.clone(), opts(b), a.clone(), vec![]).unwrap();
+    let r = f.run(&work, &[], &[], 31).unwrap();
+    let s = r.scaler.expect("scaler report present");
+    assert!(s.peak_active > 1, "the backlog must force scale-ups");
+    let mut scaled = 0;
+    for l in &s.lives {
+        assert!(l.ready_s >= l.created_s, "board {} was ready before it was created", l.id);
+        if l.created_s > 0.0 {
+            scaled += 1;
+            assert_eq!(l.ready_s, l.created_s + a.bring_up_s, "board {} skipped bring-up", l.id);
+        }
+        if let Some(t) = l.first_start_s {
+            assert!(t >= l.ready_s, "board {} accepted a batch during bring-up", l.id);
+        }
+    }
+    assert!(scaled > 0, "no board was born mid-run");
+}
+
+#[test]
+fn closed_loop_offered_load_is_exactly_the_client_ledger() {
+    let run = run_scenario("closed-loop", 3, &nets(), &ScenarioOverrides::default()).unwrap();
+    let r = &run.report;
+    // the scenario pools 24 clients over the registered models, each
+    // submitting exactly 20 requests
+    assert_eq!(r.offered, 24 * 20, "closed-loop clients submit a fixed ledger");
+    assert_eq!(r.shed, 0, "closed-loop requests are never shed");
+    assert_eq!(r.served, r.offered, "every client request completes");
+}

@@ -1,6 +1,6 @@
 //! Property tests of the DSE autotuner (`accel::dse::tune`).
 //!
-//! The three contracts the serving tier relies on:
+//! The four contracts the serving tier relies on:
 //!
 //! 1. **Budget** — every candidate the tuner enumerates fits the VC709
 //!    resource model (DSP, BRAM, FF, LUT) and never assumes more DDR
@@ -10,8 +10,12 @@
 //! 3. **Safety** — the selected `TunedConfig` never simulates slower
 //!    than `AccelConfig::default()` on its target network (the tuner
 //!    may win big, but it can never lose).
+//! 4. **Fleet** — tuning a model mix ([`tune_fleet`], behind
+//!    `ConfigPolicy::TunedFleet`) never scores below the best uniform
+//!    configuration once throughput is DSP-normalized, and a
+//!    single-model mix degenerates to the per-network winner exactly.
 
-use udcnn::accel::dse::tune::{tune_network, tuner_candidates, TuneOptions};
+use udcnn::accel::dse::tune::{tune_fleet, tune_network, tuner_candidates, TuneOptions};
 use udcnn::accel::dse::{DseBudget, DseError};
 use udcnn::accel::{kernel, AccelConfig, KernelChoice, Schedule};
 use udcnn::dcnn::{zoo, LayerSpec};
@@ -236,4 +240,53 @@ fn impossible_budget_yields_typed_error_not_empty_vec() {
     }
     let err = tune_network(&zoo::tiny_2d(), &opts).unwrap_err();
     assert!(err.to_string().contains("4-PE"), "{err}");
+}
+
+#[test]
+fn fleet_tuning_never_loses_to_the_best_uniform_config() {
+    // mixed 2D + 3D: the provisioning question behind
+    // ConfigPolicy::TunedFleet — per-model winners vs one shared config
+    let nets = [zoo::tiny_2d(), zoo::tiny_3d()];
+    let r = tune_fleet(&nets, &TuneOptions::default()).unwrap();
+    assert_eq!(r.assignments.len(), 2, "one assignment per model");
+    assert!(
+        r.chosen_throughput_per_dsp() >= r.best_uniform_throughput_per_dsp,
+        "fleet assignment scores {} req/s/DSP, best uniform scores {}",
+        r.chosen_throughput_per_dsp(),
+        r.best_uniform_throughput_per_dsp
+    );
+    if r.heterogeneous {
+        assert!(r.hetero_throughput_per_dsp >= r.best_uniform_throughput_per_dsp);
+    } else {
+        // uniform won: every model must carry the same configuration
+        let fp = r.uniform_fingerprint.as_deref().expect("uniform winner has a fingerprint");
+        for (m, t) in &r.assignments {
+            assert_eq!(t.cfg.fingerprint(), fp, "{m}: not on the uniform config");
+        }
+    }
+}
+
+#[test]
+fn single_model_fleet_tuning_degenerates_to_the_per_network_winner() {
+    for name in ["tiny-2d", "tiny-3d"] {
+        let net = zoo::by_name(name).unwrap();
+        let solo = tune_network(&net, &TuneOptions::default()).unwrap();
+        let fleet = tune_fleet(&[net], &TuneOptions::default()).unwrap();
+        assert!(!fleet.heterogeneous, "{name}: one model is not a mix");
+        let t = &fleet.assignments[name];
+        assert_eq!(
+            t.cfg.fingerprint(),
+            solo.best().cfg.fingerprint(),
+            "{name}: fleet answer drifted from the per-network winner"
+        );
+        assert_eq!(t.time_s, solo.best().time_s, "{name}: scored latency drifted");
+    }
+}
+
+#[test]
+fn fleet_tuning_is_deterministic() {
+    let nets = [zoo::tiny_2d(), zoo::tiny_3d()];
+    let a = tune_fleet(&nets, &TuneOptions::default()).unwrap();
+    let b = tune_fleet(&nets, &TuneOptions::default()).unwrap();
+    assert_eq!(a.to_json(), b.to_json(), "fleet tuning drifted across identical calls");
 }
